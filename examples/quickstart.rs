@@ -1,0 +1,72 @@
+//! Quickstart: train a fast feedforward network on the MNIST analog,
+//! compare soft (FORWARD_T) vs hard (FORWARD_I) accuracy, and measure the
+//! speedup over the vanilla FF of the same training width.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fastfeedforward::bench::time_fn;
+use fastfeedforward::config::{ModelKind, TrainConfig};
+use fastfeedforward::data::DatasetKind;
+use fastfeedforward::nn::accuracy;
+use fastfeedforward::rng::Rng;
+use fastfeedforward::train::{build_model, Trainer};
+
+fn main() {
+    // An FFF with training width 64 (depth 3, leaf 8) on MNIST dims.
+    let mut cfg = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Fff, 64, 8, /*seed=*/ 0);
+    cfg.train_n = 4000;
+    cfg.test_n = 1000;
+    cfg.max_epochs = 40;
+    cfg.patience = 10;
+    println!(
+        "config: dataset={} width={} leaf={} depth={} h={} lr={}",
+        cfg.dataset.name(),
+        cfg.width,
+        cfg.leaf,
+        cfg.fff_depth(),
+        cfg.hardening,
+        cfg.lr
+    );
+
+    let trainer = Trainer::from_config(&cfg);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut model = build_model(&cfg, trainer.train.dim(), trainer.train.num_classes, &mut rng);
+    println!("training ({} params)...", model.num_params());
+    let outcome = trainer.run(model.as_mut());
+    println!(
+        "M_A = {:.1}%  G_A = {:.1}%  (epochs: {}, ETT_mem {}, ETT_gen {})",
+        outcome.memorization_accuracy * 100.0,
+        outcome.generalization_accuracy * 100.0,
+        outcome.epochs_run,
+        outcome.ett_memorization,
+        outcome.ett_generalization
+    );
+
+    // Soft vs hard accuracy on the test set: the hardening story.
+    let test_x = trainer.test.images.clone();
+    let soft = {
+        let mut r = Rng::seed_from_u64(1);
+        accuracy(&model.forward_train(&test_x, &mut r), &trainer.test.labels)
+    };
+    let hard = accuracy(&model.forward_infer(&test_x), &trainer.test.labels);
+    println!("FORWARD_T (soft) test accuracy: {:.1}%", soft * 100.0);
+    println!("FORWARD_I (hard) test accuracy: {:.1}%", hard * 100.0);
+
+    // Inference speed vs the FF of the same training width.
+    let mut ff_cfg = cfg.clone();
+    ff_cfg.model = ModelKind::Ff;
+    let ff = build_model(&ff_cfg, trainer.train.dim(), trainer.train.num_classes, &mut rng);
+    let batch = trainer.test.subset(&(0..256).collect::<Vec<_>>());
+    let t_ff = time_fn(3, 20, || {
+        std::hint::black_box(ff.forward_infer(&batch.images));
+    });
+    let t_fff = time_fn(3, 20, || {
+        std::hint::black_box(model.forward_infer(&batch.images));
+    });
+    println!(
+        "inference (batch 256): FF {:.3} ms, FFF {:.3} ms -> speedup {:.2}x",
+        t_ff.mean_ms(),
+        t_fff.mean_ms(),
+        t_ff.mean.as_secs_f64() / t_fff.mean.as_secs_f64()
+    );
+}

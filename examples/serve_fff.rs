@@ -1,0 +1,71 @@
+//! Full three-layer serving path: the coordinator (router + dynamic
+//! batcher + worker) executing the AOT-compiled `fff_mnist_infer_b16`
+//! artifact through PJRT, under concurrent client load.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_fff [-- --requests 2000 --clients 4]`
+
+use fastfeedforward::cli::Args;
+use fastfeedforward::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, HloBackend};
+use fastfeedforward::rng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::from_env();
+    let total_requests: usize = args.get_or("requests", 2000);
+    let clients: usize = args.get_or("clients", 4);
+
+    if !std::path::Path::new("artifacts/manifest.kv").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(2) },
+        workers: 1,
+        queue_capacity: 4096,
+    };
+    println!("starting coordinator: 1 PJRT worker, max_batch=16, deadline=2ms");
+    let coord = Arc::new(Coordinator::start(
+        cfg,
+        HloBackend::factory("artifacts".into(), "fff_mnist_infer_b16".into()),
+    ));
+    println!("model input dim: {}", coord.dim_in());
+
+    let t0 = Instant::now();
+    let per_client = total_requests / clients;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(c as u64);
+            let mut served = 0usize;
+            for _ in 0..per_client {
+                let x: Vec<f32> = (0..784).map(|_| rng.uniform_f32() - 0.5).collect();
+                match coord.submit(x) {
+                    Ok(rx) => {
+                        let resp = rx.recv().expect("response");
+                        assert_eq!(resp.output.len(), 10);
+                        served += 1;
+                    }
+                    Err(e) => eprintln!("client {c}: {e}"),
+                }
+            }
+            served
+        }));
+    }
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed();
+
+    let snap = coord.metrics();
+    println!("served {served}/{total_requests} requests in {:.2}s", wall.as_secs_f64());
+    println!("throughput: {:.0} req/s", served as f64 / wall.as_secs_f64());
+    println!(
+        "latency: p50 {:.2} ms, p99 {:.2} ms, mean {:.2} ms; mean batch {:.1}",
+        snap.latency_p50.as_secs_f64() * 1e3,
+        snap.latency_p99.as_secs_f64() * 1e3,
+        snap.latency_mean.as_secs_f64() * 1e3,
+        snap.mean_batch
+    );
+}

@@ -1,0 +1,117 @@
+//! End-to-end driver (the repository's E2E validation run, recorded in
+//! EXPERIMENTS.md): train the ViT-with-FFF-blocks **through the AOT HLO
+//! path** — the Adam train step lowered by `python/compile/aot.py` is
+//! executed from rust via PJRT for a few hundred steps on the synthetic
+//! CIFAR10, logging the loss curve, then evaluated with the hard-routing
+//! (FORWARD_I) eval artifact. Python never runs in this binary.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example vit_cifar_e2e [-- --steps 300 --log-every 10]`
+
+use fastfeedforward::cli::Args;
+use fastfeedforward::data::{generate, Augment, DatasetKind, GenOptions};
+use fastfeedforward::rng::Rng;
+use fastfeedforward::runtime::{HostTensor, Runtime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps: usize = args.get_or("steps", 300);
+    let log_every: usize = args.get_or("log-every", 10);
+    let batch = 32usize;
+
+    let rt = Runtime::from_dir("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let train_exe = rt.load("vit_cifar_train_b32")?;
+    let eval_exe = rt.load("vit_cifar_eval_b32")?;
+    let notes = &train_exe.spec().notes;
+    println!("artifact: vit_cifar_train_b32 ({notes})");
+
+    // Initial params from the AOT dump; Adam state zeros; step counter 0.
+    let params = rt.initial_params("vit_cifar_train_b32")?;
+    let n_params = params.len();
+    let zeros: Vec<HostTensor> = params
+        .iter()
+        .map(|p| HostTensor::f32(p.dims.clone(), vec![0.0; p.len()]))
+        .collect();
+    let mut state: Vec<HostTensor> = Vec::with_capacity(3 * n_params);
+    state.extend(params.iter().cloned());
+    state.extend(zeros.iter().cloned());
+    state.extend(zeros.iter().cloned());
+    let mut t_counter = HostTensor::scalar_i32(0);
+
+    // Synthetic CIFAR10 with the paper's ViT augmentations.
+    let (train, test) = generate(
+        DatasetKind::Cifar10,
+        &GenOptions { train_n: 4000, test_n: 512, seed: 0 },
+    );
+    let augment = Augment::default();
+    let mut rng = Rng::seed_from_u64(7);
+
+    println!("training {} params for {steps} steps (batch {batch})...", {
+        let total: usize = params.iter().map(|p| p.len()).sum();
+        total
+    });
+    let t0 = Instant::now();
+    let mut loss_curve = Vec::new();
+    for step in 0..steps {
+        // Assemble an augmented batch.
+        let idx: Vec<usize> = (0..batch).map(|_| rng.below(train.len())).collect();
+        let mut xb = train.images.gather_rows(&idx);
+        augment.apply_batch(&mut xb, train.height, train.width, train.channels, &mut rng);
+        let labels: Vec<i32> = idx.iter().map(|&i| train.labels[i] as i32).collect();
+
+        let mut inputs = state.clone();
+        inputs.push(t_counter.clone());
+        inputs.push(HostTensor::f32(vec![batch, train.dim()], xb.into_vec()));
+        inputs.push(HostTensor::i32(vec![batch], labels));
+        inputs.push(HostTensor::u32(vec![2], vec![rng.next_u32(), rng.next_u32()]));
+        let out = train_exe.run(&inputs)?;
+        // Outputs: params, m, v, t, loss.
+        let loss = out[out.len() - 1].as_f32()[0];
+        t_counter = out[out.len() - 2].clone();
+        state = out[..3 * n_params].to_vec();
+        loss_curve.push(loss);
+        if step % log_every == 0 || step + 1 == steps {
+            println!(
+                "step {step:>4}  loss {loss:.4}  ({:.2} s/step)",
+                t0.elapsed().as_secs_f64() / (step + 1) as f64
+            );
+        }
+    }
+
+    // Loss-curve summary.
+    let first10: f32 = loss_curve.iter().take(10).sum::<f32>() / 10f32.min(loss_curve.len() as f32);
+    let last10: f32 =
+        loss_curve.iter().rev().take(10).sum::<f32>() / 10f32.min(loss_curve.len() as f32);
+    println!("loss: first-10 mean {first10:.4} -> last-10 mean {last10:.4}");
+
+    // Hard-inference eval through the FORWARD_I artifact.
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for chunk in (0..test.len()).collect::<Vec<_>>().chunks(batch) {
+        if chunk.len() < batch {
+            break;
+        }
+        let xb = test.images.gather_rows(chunk);
+        let mut inputs = state[..n_params].to_vec();
+        inputs.push(HostTensor::f32(vec![batch, test.dim()], xb.into_vec()));
+        let out = eval_exe.run(&inputs)?;
+        let logits = out[0].as_f32();
+        for (i, &row) in chunk.iter().enumerate() {
+            let pred = (0..10)
+                .max_by(|&a, &b| {
+                    logits[i * 10 + a].partial_cmp(&logits[i * 10 + b]).unwrap()
+                })
+                .unwrap();
+            hits += usize::from(pred == test.labels[row]);
+            total += 1;
+        }
+    }
+    println!(
+        "hard-inference (FORWARD_I) test accuracy: {:.1}% over {total} samples",
+        100.0 * hits as f64 / total as f64
+    );
+    println!("wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""Build-time Python package: L1 Pallas kernels + L2 JAX models + the AOT
+pipeline (aot.py). Never imported at serving time."""

@@ -1,0 +1,171 @@
+"""AOT pipeline: lower every registered entry point to HLO **text** and
+write a manifest the rust runtime parses.
+
+Interchange is HLO text, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the image's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (in --out-dir, default ../artifacts):
+  <name>.hlo.txt      one per entry point
+  <name>.params.bin   concatenated f32 initial parameters (entry points
+                      that carry trainable state)
+  manifest.kv         `key = value` manifest (parsed by rust KvFile):
+                      artifact.<name>.file / .inputs / .outputs / .params
+
+Run: cd python && python -m compile.aot [--out-dir DIR] [--only NAME]
+"""
+
+import argparse
+import functools
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, vit
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s) -> str:
+    """`8x16xf32`-style shape string for the manifest."""
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32", jnp.uint32.dtype: "u32"}[
+        jnp.dtype(s.dtype)
+    ]
+    dims = "x".join(str(d) for d in s.shape) if s.shape else "scalar"
+    return f"{dims}x{dt}" if s.shape else f"scalar_{dt}"
+
+
+class Registry:
+    def __init__(self):
+        self.entries = []
+
+    def add(self, name, fn, arg_specs, params_flat=None, notes=""):
+        """Register an entry point.
+
+        fn          positional function over arrays
+        arg_specs   tuple of ShapeDtypeStructs (lowering shapes)
+        params_flat optional list of concrete initial parameter arrays
+                    (dumped to <name>.params.bin in input order)
+        """
+        self.entries.append((name, fn, arg_specs, params_flat, notes))
+
+
+def flatten_result_spec(fn, arg_specs):
+    out = jax.eval_shape(fn, *arg_specs)
+    leaves = jax.tree_util.tree_leaves(out)
+    return leaves
+
+
+def build_registry() -> Registry:
+    reg = Registry()
+
+    # ---- Parity pair: tiny FFF the rust test can cross-check exactly.
+    p_depth, p_leaf, p_di, p_do, p_b = 2, 4, 16, 4, 8
+    pp = ref.init_fff_params(jax.random.PRNGKey(7), p_di, p_do, p_depth, p_leaf)
+    x_spec = jax.ShapeDtypeStruct((p_b, p_di), jnp.float32)
+    p_specs = tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pp)
+
+    def parity_train(*args):
+        params, x = args[:6], args[6]
+        return (model.fff_logits_train(params, x, depth=p_depth),)
+
+    def parity_infer(*args):
+        params, x = args[:6], args[6]
+        return (model.fff_logits_infer(params, x, depth=p_depth),)
+
+    reg.add("parity_fff_train", parity_train, (*p_specs, x_spec), list(pp),
+            notes="d=2 l=4 dim 16->4 batch 8; parity vs rust nn engine")
+    reg.add("parity_fff_infer", parity_infer, (*p_specs, x_spec), list(pp),
+            notes="hard-routing counterpart of parity_fff_train")
+
+    # ---- MNIST-analog FFF classifier: train step + inference.
+    m_depth, m_leaf, m_di, m_do = 3, 8, 784, 10
+    for batch, tag in [(256, "b256"), (16, "b16")]:
+        mp = ref.init_fff_params(jax.random.PRNGKey(11), m_di, m_do, m_depth, m_leaf)
+        mp_specs = tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in mp)
+        mx = jax.ShapeDtypeStruct((batch, m_di), jnp.float32)
+        my = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+        def mnist_step(*args, _depth=m_depth):
+            params, x, labels, lr = args[:6], args[6], args[7], args[8]
+            return model.fff_train_step(params, x, labels, lr, depth=_depth, hardening=3.0)
+
+        def mnist_infer(*args, _depth=m_depth):
+            params, x = args[:6], args[6]
+            return (model.fff_logits_infer(params, x, depth=_depth),)
+
+        if batch == 256:
+            reg.add(f"fff_mnist_train_{tag}", mnist_step, (*mp_specs, mx, my, lr), list(mp),
+                    notes="SGD step, d=3 l=8 (w=64), h=3.0, MNIST dims")
+        reg.add(f"fff_mnist_infer_{tag}", mnist_infer, (*mp_specs, mx), list(mp),
+                notes="FORWARD_I, d=3 l=8, MNIST dims")
+
+    # ---- ViT (Table 3 shape, reduced layers for artifact size): Adam
+    #      train step + hard-inference eval.
+    spec = vit.VitSpec(layers=2, depth=2, leaf=16, hardening=0.10)
+    batch = 32
+    train_fn, eval_fn, train_args, eval_args, n_params = vit.make_entry_points(spec, batch)
+    params0 = vit.init_params(jax.random.PRNGKey(3), spec)
+    reg.add("vit_cifar_train_b32", train_fn, train_args, params0,
+            notes=f"Adam step; {spec.layers}-layer dim {spec.dim} FFF d={spec.depth} l={spec.leaf}; "
+                  f"inputs: params x{n_params}, m, v, t, images, labels, key")
+    reg.add("vit_cifar_eval_b32", eval_fn, eval_args, params0,
+            notes="hard-inference logits (FORWARD_I in every block)")
+    return reg
+
+
+def emit(reg: Registry, out_dir: str, only=None):
+    os.makedirs(out_dir, exist_ok=True)
+    lines = ["# generated by python -m compile.aot — do not edit"]
+    for name, fn, arg_specs, params_flat, notes in reg.entries:
+        if only and name != only:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = flatten_result_spec(fn, arg_specs)
+        lines.append(f"[artifact.{name}]")
+        lines.append(f"file = {name}.hlo.txt")
+        lines.append(f"inputs = {';'.join(spec_str(s) for s in arg_specs)}")
+        lines.append(f"outputs = {';'.join(spec_str(s) for s in outs)}")
+        if notes:
+            lines.append(f"notes = {notes}")
+        if params_flat is not None:
+            pbin = os.path.join(out_dir, f"{name}.params.bin")
+            with open(pbin, "wb") as f:
+                for arr in params_flat:
+                    a = jnp.asarray(arr, jnp.float32)
+                    f.write(struct.pack(f"<{a.size}f", *a.reshape(-1).tolist()))
+            lines.append(f"params = {name}.params.bin")
+            lines.append(f"params_count = {len(params_flat)}")
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest = os.path.join(out_dir, "manifest.kv")
+    with open(manifest, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {manifest}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="emit a single artifact by name")
+    args = ap.parse_args()
+    emit(build_registry(), os.path.abspath(args.out_dir), args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (build-time only) + their jnp oracles."""
+
+from . import fff, moe, ref  # noqa: F401

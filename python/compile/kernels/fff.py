@@ -1,0 +1,214 @@
+"""Layer-1 Pallas kernels for the fast feedforward network.
+
+Two kernels, both blocked over the batch with `BlockSpec` and lowered with
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic custom-calls;
+see /opt/xla-example/README.md):
+
+* :func:`fff_infer` — the paper's hot spot, ``FORWARD_I``: a `d`-step
+  vectorized tree descent (gather node-boundary rows by index → dot →
+  sign → index update) followed by a gathered single-leaf forward. On a
+  real TPU the node rows for the top levels stay VMEM-resident and the
+  leaf gather is the only HBM round-trip — the Pallas analog of the
+  paper's "simple offset in the data load" CUDA observation
+  (DESIGN.md §Hardware-adaptation).
+
+* :func:`fff_train_fwd` — ``FORWARD_T``: all node sigmoids level-by-level,
+  the mixture weights by pairwise interleave, then the full-leaf einsum.
+  Wrapped in ``jax.custom_vjp`` (Pallas kernels carry no autodiff rule);
+  the backward pass is the closed-form gradient derived in
+  `rust/src/nn/fff.rs` and is checked against ``jax.grad`` of the jnp
+  oracle in `python/tests/test_kernels.py`.
+
+Hardware adaptation notes (TPU estimates; see EXPERIMENTS.md §Perf):
+the batch tile is 128 rows; at BERT dims (768 in / 768 out, ℓ=32) one tile
+needs 128·768·4 B ≈ 393 KiB for x, 2·(32·768)·4 B ≈ 197 KiB for a leaf's
+two weight blocks — comfortably inside the ~16 MiB VMEM budget, leaving
+the MXU-fed leaf matmul `[128,768]×[768,32]` as the dominant op.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Batch tile for all kernels. 128 rows keeps VMEM happy at BERT dims and
+# divides every batch size the experiments use.
+BLOCK_B = 128
+
+
+def _block_b(batch: int) -> int:
+    return min(BLOCK_B, batch)
+
+
+# --------------------------------------------------------------- FORWARD_I
+
+
+def _infer_kernel(x_ref, nw_ref, nb_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, depth: int):
+    x = x_ref[...]  # (Bb, dim_in)
+    nw = nw_ref[...]
+    nb = nb_ref[...]
+    bb = x.shape[0]
+    idx = jnp.zeros((bb,), jnp.int32)
+    base = 0
+    for m in range(depth):
+        w = nw[base + idx]  # (Bb, dim_in) gather
+        logits = jnp.sum(w * x, axis=1) + nb[base + idx]
+        idx = 2 * idx + (logits >= 0.0).astype(jnp.int32)
+        base += 1 << m
+    w1 = w1_ref[...][idx]  # (Bb, dim_in, ell)
+    b1 = b1_ref[...][idx]
+    w2 = w2_ref[...][idx]
+    b2 = b2_ref[...][idx]
+    a1 = jax.nn.relu(jnp.einsum("bi,bie->be", x, w1) + b1)
+    o_ref[...] = jnp.einsum("be,beo->bo", a1, w2) + b2
+
+
+def fff_infer(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, *, depth: int):
+    """FORWARD_I as a Pallas kernel blocked over the batch."""
+    batch, dim_in = x.shape
+    dim_out = leaf_w2.shape[2]
+    bb = _block_b(batch)
+    grid = (batch // bb,) if batch % bb == 0 else None
+    if grid is None:
+        # Fall back to a single block for ragged batches.
+        bb, grid = batch, (1,)
+    kernel = functools.partial(_infer_kernel, depth=depth)
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, dim_in), lambda i: (i, 0)),
+            full(node_w),
+            full(node_b),
+            full(leaf_w1),
+            full(leaf_b1),
+            full(leaf_w2),
+            full(leaf_b2),
+        ],
+        out_specs=pl.BlockSpec((bb, dim_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim_out), jnp.float32),
+        interpret=True,
+    )(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2)
+
+
+# --------------------------------------------------------------- FORWARD_T
+
+
+def _train_kernel(x_ref, nw_ref, nb_ref, w1_ref, b1_ref, w2_ref, b2_ref, y_ref, c_ref, *, depth: int):
+    x = x_ref[...]
+    nw = nw_ref[...]
+    nb = nb_ref[...]
+    bb = x.shape[0]
+    c = jnp.ones((bb, 1), jnp.float32)
+    for m in range(depth):
+        lo = (1 << m) - 1
+        hi = (1 << (m + 1)) - 1
+        logits = x @ nw[lo:hi].T + nb[lo:hi]
+        p = jax.nn.sigmoid(logits)
+        c = jnp.stack([c * (1.0 - p), c * p], axis=2).reshape(bb, -1)
+    a1 = jax.nn.relu(jnp.einsum("bi,lie->ble", x, w1_ref[...]) + b1_ref[...][None])
+    out = jnp.einsum("ble,leo->blo", a1, w2_ref[...]) + b2_ref[...][None]
+    y_ref[...] = jnp.einsum("bl,blo->bo", c, out)
+    c_ref[...] = c
+
+
+def _train_fwd_pallas(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, depth: int):
+    batch, dim_in = x.shape
+    n_leaves = leaf_w1.shape[0]
+    dim_out = leaf_w2.shape[2]
+    bb = _block_b(batch)
+    if batch % bb != 0:
+        bb = batch
+    grid = (batch // bb,)
+    kernel = functools.partial(_train_kernel, depth=depth)
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, dim_in), lambda i: (i, 0)),
+            full(node_w),
+            full(node_b),
+            full(leaf_w1),
+            full(leaf_b1),
+            full(leaf_w2),
+            full(leaf_b2),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, dim_out), lambda i: (i, 0)),
+            pl.BlockSpec((bb, n_leaves), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, dim_out), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n_leaves), jnp.float32),
+        ],
+        interpret=True,
+    )(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
+def fff_train_fwd(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, depth: int):
+    """FORWARD_T (Pallas forward, closed-form VJP). Returns y only."""
+    y, _ = _train_fwd_pallas(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, depth)
+    return y
+
+
+def _train_vjp_fwd(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, depth: int):
+    y, c = _train_fwd_pallas(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, depth)
+    res = (x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, c)
+    return y, res
+
+
+def _train_vjp_bwd(depth: int, res, dy):
+    """Closed-form backward of the leaf mixture + tree (see fff.rs)."""
+    x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, c = res
+    # Recompute leaf activations (cheap relative to storing them).
+    pre = jnp.einsum("bi,lie->ble", x, leaf_w1) + leaf_b1[None]
+    a1 = jax.nn.relu(pre)
+    out = jnp.einsum("ble,leo->blo", a1, leaf_w2) + leaf_b2[None]
+    # dc_j = out_j · dy ; per-leaf output grads dout_j = c_j ∘ dy.
+    dc = jnp.einsum("blo,bo->bl", out, dy)
+    dout = c[..., None] * dy[:, None, :]  # (B, L, O)
+    dw2 = jnp.einsum("ble,blo->leo", a1, dout)
+    db2 = jnp.sum(dout, axis=0)
+    da1 = jnp.einsum("blo,leo->ble", dout, leaf_w2) * (pre > 0.0)
+    dw1 = jnp.einsum("bi,ble->lie", x, da1)
+    db1 = jnp.sum(da1, axis=0)
+    dx = jnp.einsum("ble,lie->bi", da1, leaf_w1)
+
+    # Tree backward: recompute node probabilities level by level, then
+    # walk g from the leaves to the root.
+    b = x.shape[0]
+    probs = []  # per level: (B, 2^m)
+    prefixes = [jnp.ones((b, 1), jnp.float32)]
+    for m in range(depth):
+        lo = (1 << m) - 1
+        hi = (1 << (m + 1)) - 1
+        p = jax.nn.sigmoid(x @ node_w[lo:hi].T + node_b[lo:hi])
+        probs.append(p)
+        pref = prefixes[-1]
+        prefixes.append(jnp.stack([pref * (1.0 - p), pref * p], axis=2).reshape(b, -1))
+
+    dnode_w = jnp.zeros_like(node_w)
+    dnode_b = jnp.zeros_like(node_b)
+    g = dc
+    for m in reversed(range(depth)):
+        p = probs[m]  # (B, 2^m)
+        gl = g[:, 0::2]
+        gr = g[:, 1::2]
+        dp = prefixes[m] * (gr - gl)
+        dlogit = dp * p * (1.0 - p)  # (B, 2^m)
+        lo = (1 << m) - 1
+        hi = (1 << (m + 1)) - 1
+        dnode_w = dnode_w.at[lo:hi].add(jnp.einsum("bn,bi->ni", dlogit, x))
+        dnode_b = dnode_b.at[lo:hi].add(jnp.sum(dlogit, axis=0))
+        dx = dx + dlogit @ node_w[lo:hi]
+        g = (1.0 - p) * gl + p * gr
+    return dx, dnode_w, dnode_b, dw1, db1, dw2, db2
+
+
+fff_train_fwd.defvjp(_train_vjp_fwd, _train_vjp_bwd)

@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel for the MoE comparison baseline's gate.
+
+The Figure 3–4 comparison isolates the *mechanism* cost: MoE gating is a
+full `(B, E)` logit matrix + top-k — `O(E · dim_in)` per sample — versus
+the FFF's `O(d · dim_in)` descent. This kernel implements the noiseless
+top-k gate used at inference (`k = 1` in the speed experiment).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+
+
+def _gate_kernel(x_ref, gw_ref, v_ref, i_ref, *, k: int):
+    x = x_ref[...]
+    logits = x @ gw_ref[...].T  # (Bb, E)
+    vals, idx = jax.lax.top_k(logits, k)
+    v_ref[...] = jax.nn.softmax(vals, axis=1)
+    i_ref[...] = idx.astype(jnp.int32)
+
+
+def moe_gate(x, gate_w, *, k: int):
+    """Noiseless top-k gate as a Pallas kernel. Returns (gates, indices)."""
+    batch, dim_in = x.shape
+    experts = gate_w.shape[0]
+    bb = min(BLOCK_B, batch)
+    if batch % bb != 0:
+        bb = batch
+    grid = (batch // bb,)
+    kernel = functools.partial(_gate_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, dim_in), lambda i: (i, 0)),
+            pl.BlockSpec((experts, dim_in), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, k), jnp.float32),
+            jax.ShapeDtypeStruct((batch, k), jnp.int32),
+        ],
+        interpret=True,
+    )(x, gate_w)

@@ -1,0 +1,128 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis), and the reference semantics of the paper's Algorithm 1.
+
+Parameterization (paper's n = 1 nodes):
+  node_w : (2^d - 1, dim_in)   BFS order; node (m, i) at index 2^m - 1 + i
+  node_b : (2^d - 1,)
+  leaf_w1: (2^d, dim_in, ell)
+  leaf_b1: (2^d, ell)
+  leaf_w2: (2^d, ell, dim_out)
+  leaf_b2: (2^d, dim_out)
+
+The sigmoid output multiplies the RIGHT child (index 2i+1), matching
+Algorithm 1 and the rust engine (`rust/src/nn/fff.rs`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def fff_params_shapes(dim_in: int, dim_out: int, depth: int, leaf: int):
+    """Shapes of the FFF parameter tuple."""
+    n_nodes = (1 << depth) - 1
+    n_leaves = 1 << depth
+    return (
+        (max(n_nodes, 1), dim_in),
+        (max(n_nodes, 1),),
+        (n_leaves, dim_in, leaf),
+        (n_leaves, leaf),
+        (n_leaves, leaf, dim_out),
+        (n_leaves, dim_out),
+    )
+
+
+def init_fff_params(key, dim_in: int, dim_out: int, depth: int, leaf: int, scale=None):
+    """Kaiming-uniform init matching the rust engine's distributions."""
+    shapes = fff_params_shapes(dim_in, dim_out, depth, leaf)
+    keys = jax.random.split(key, len(shapes))
+    bounds = [
+        1.0 / jnp.sqrt(dim_in),
+        1.0 / jnp.sqrt(dim_in),
+        1.0 / jnp.sqrt(dim_in),
+        1.0 / jnp.sqrt(dim_in),
+        1.0 / jnp.sqrt(leaf),
+        1.0 / jnp.sqrt(leaf),
+    ]
+    if scale is not None:
+        bounds = [scale for _ in bounds]
+    return tuple(
+        jax.random.uniform(k, s, jnp.float32, -b, b) for k, s, b in zip(keys, shapes, bounds)
+    )
+
+
+def fff_mixture_weights(x, node_w, node_b, depth: int):
+    """Leaf mixture weights c (B, 2^d): products of edge probabilities."""
+    b = x.shape[0]
+    c = jnp.ones((b, 1), jnp.float32)
+    for m in range(depth):
+        lo = (1 << m) - 1
+        hi = (1 << (m + 1)) - 1
+        logits = x @ node_w[lo:hi].T + node_b[lo:hi]  # (B, 2^m)
+        p = jax.nn.sigmoid(logits)
+        left = c * (1.0 - p)
+        right = c * p
+        # Interleave: children of node i sit at 2i (left), 2i+1 (right).
+        c = jnp.stack([left, right], axis=2).reshape(b, -1)
+    return c
+
+
+def fff_train_fwd(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, *, depth: int):
+    """FORWARD_T: soft mixture over all leaves. Returns (y, c)."""
+    c = fff_mixture_weights(x, node_w, node_b, depth)
+    a1 = jax.nn.relu(jnp.einsum("bi,lie->ble", x, leaf_w1) + leaf_b1[None])
+    out = jnp.einsum("ble,leo->blo", a1, leaf_w2) + leaf_b2[None]
+    y = jnp.einsum("bl,blo->bo", c, out)
+    return y, c
+
+
+def fff_route(x, node_w, node_b, depth: int):
+    """Hard tree descent: leaf index per sample (B,) int32."""
+    b = x.shape[0]
+    idx = jnp.zeros((b,), jnp.int32)
+    base = 0
+    for m in range(depth):
+        w = node_w[base + idx]  # (B, dim_in)
+        bb = node_b[base + idx]
+        logits = jnp.sum(w * x, axis=1) + bb
+        idx = 2 * idx + (logits >= 0.0).astype(jnp.int32)
+        base += 1 << m
+    return idx
+
+
+def fff_infer(x, node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2, *, depth: int):
+    """FORWARD_I: hard routing + single-leaf forward."""
+    idx = fff_route(x, node_w, node_b, depth)
+    w1 = leaf_w1[idx]  # (B, dim_in, ell)
+    b1 = leaf_b1[idx]
+    w2 = leaf_w2[idx]
+    b2 = leaf_b2[idx]
+    a1 = jax.nn.relu(jnp.einsum("bi,bie->be", x, w1) + b1)
+    return jnp.einsum("be,beo->bo", a1, w2) + b2
+
+
+def fff_node_entropies(x, node_w, node_b, depth: int):
+    """Batch-mean Bernoulli entropy per node (hardening monitor)."""
+    logits = x @ node_w.T + node_b  # (B, n_nodes)
+    p = jnp.clip(jax.nn.sigmoid(logits), 1e-7, 1.0 - 1e-7)
+    h = -(p * jnp.log(p) + (1 - p) * jnp.log(1 - p))
+    return jnp.mean(h, axis=0)
+
+
+def hardening_loss(x, node_w, node_b, depth: int):
+    """Batch-mean of the summed node entropies (see rust loss.rs note)."""
+    return jnp.sum(fff_node_entropies(x, node_w, node_b, depth))
+
+
+def moe_gate(x, gate_w, k: int):
+    """Noiseless top-k gate: returns (values (B,k) softmaxed, indices)."""
+    logits = x @ gate_w.T
+    vals, idx = jax.lax.top_k(logits, k)
+    g = jax.nn.softmax(vals, axis=1)
+    return g, idx
+
+
+def ff_forward(x, w1, b1, w2, b2):
+    """Vanilla ⟨dim_I, w, dim_O⟩ feedforward."""
+    return jax.nn.relu(x @ w1 + b1) @ w2 + b2

@@ -1,0 +1,96 @@
+"""Layer-2 JAX models: flat-image classifiers over the L1 kernels.
+
+Pure functions over flat parameter tuples so they AOT-lower cleanly to
+single HLO modules (see aot.py). Python never runs at serving time: these
+functions exist to be lowered once and executed from rust via PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fff as kfff
+from .kernels import ref
+
+
+def cross_entropy(logits, labels):
+    """Batch-mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+# ------------------------------------------------------------------- FFF
+
+
+def fff_logits_train(params, x, *, depth: int):
+    """FORWARD_T logits (Pallas forward, custom VJP)."""
+    return kfff.fff_train_fwd(x, *params, depth)
+
+
+def fff_logits_infer(params, x, *, depth: int):
+    """FORWARD_I logits (Pallas hard-routing kernel)."""
+    return kfff.fff_infer(x, *params, depth=depth)
+
+
+def fff_loss(params, x, labels, *, depth: int, hardening: float):
+    logits = fff_logits_train(params, x, depth=depth)
+    loss = cross_entropy(logits, labels)
+    if hardening > 0.0:
+        loss = loss + hardening * ref.hardening_loss(x, params[0], params[1], depth)
+    return loss
+
+
+def fff_train_step(params, x, labels, lr, *, depth: int, hardening: float):
+    """One SGD step; returns (new_params..., loss). AOT entry point."""
+    loss, grads = jax.value_and_grad(fff_loss)(params, x, labels, depth=depth, hardening=hardening)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+def init_fff(key, dim_in, dim_out, depth, leaf):
+    return ref.init_fff_params(key, dim_in, dim_out, depth, leaf)
+
+
+# ------------------------------------------------------------------- FF
+
+
+def init_ff(key, dim_in, width, dim_out):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    b1 = 1.0 / jnp.sqrt(dim_in)
+    b2 = 1.0 / jnp.sqrt(width)
+    return (
+        jax.random.uniform(k1, (dim_in, width), jnp.float32, -b1, b1),
+        jax.random.uniform(k2, (width,), jnp.float32, -b1, b1),
+        jax.random.uniform(k3, (width, dim_out), jnp.float32, -b2, b2),
+        jax.random.uniform(k4, (dim_out,), jnp.float32, -b2, b2),
+    )
+
+
+def ff_logits(params, x):
+    return ref.ff_forward(x, *params)
+
+
+def ff_loss(params, x, labels):
+    return cross_entropy(ff_logits(params, x), labels)
+
+
+def ff_train_step(params, x, labels, lr):
+    loss, grads = jax.value_and_grad(ff_loss)(params, x, labels)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+# ------------------------------------------------------------- factories
+
+
+def make_fff_entry_points(dim_in, dim_out, depth, leaf, batch, hardening=3.0):
+    """(train_step_fn, infer_fn, example_args) for AOT lowering."""
+    train = functools.partial(fff_train_step, depth=depth, hardening=hardening)
+    infer = functools.partial(fff_logits_infer, depth=depth)
+    shapes = ref.fff_params_shapes(dim_in, dim_out, depth, leaf)
+    params_spec = tuple(jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes)
+    x_spec = jax.ShapeDtypeStruct((batch, dim_in), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    return train, infer, (params_spec, x_spec, y_spec, lr_spec)

@@ -1,0 +1,209 @@
+"""Layer-2 JAX vision transformer with fast-feedforward blocks.
+
+The Table 3 subject, written as pure functions over a flat, ordered list of
+parameter arrays so the whole Adam train step lowers to one HLO module the
+rust runtime can drive (examples/vit_cifar_e2e.rs).
+
+Parameter order (must match artifacts/manifest — aot.py records it):
+  patch_w, patch_b, pos, cls,
+  per block (×layers):
+    ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo, ln2_g, ln2_b,
+    node_w, node_b, leaf_w1, leaf_b1, leaf_w2, leaf_b2
+  ln_f_g, ln_f_b, head_w, head_b
+"""
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fff as kfff
+from .kernels import ref
+from .model import cross_entropy
+
+
+@dataclass(frozen=True)
+class VitSpec:
+    image: int = 32
+    channels: int = 3
+    patch: int = 4
+    dim: int = 128
+    layers: int = 4
+    heads: int = 4
+    classes: int = 10
+    depth: int = 2      # FFF tree depth
+    leaf: int = 32      # FFF leaf width
+    hardening: float = 0.10
+    input_dropout: float = 0.1
+
+    @property
+    def tokens(self):
+        return (self.image // self.patch) ** 2
+
+    @property
+    def seq(self):
+        return self.tokens + 1
+
+    @property
+    def patch_dim(self):
+        return self.patch * self.patch * self.channels
+
+
+PER_BLOCK = 18  # parameter arrays per transformer block
+
+
+def init_params(key, spec: VitSpec):
+    """Flat list of parameter arrays in the documented order."""
+    params = []
+    key, *ks = jax.random.split(key, 5)
+    bound = 1.0 / jnp.sqrt(spec.patch_dim)
+    params.append(jax.random.uniform(ks[0], (spec.patch_dim, spec.dim), jnp.float32, -bound, bound))
+    params.append(jnp.zeros((spec.dim,), jnp.float32))
+    params.append(0.02 * jax.random.normal(ks[1], (spec.seq, spec.dim), jnp.float32))
+    params.append(0.02 * jax.random.normal(ks[2], (spec.dim,), jnp.float32))
+    for _ in range(spec.layers):
+        key, k_attn, k_fff = jax.random.split(key, 3)
+        params.append(jnp.ones((spec.dim,), jnp.float32))   # ln1_g
+        params.append(jnp.zeros((spec.dim,), jnp.float32))  # ln1_b
+        ka = jax.random.split(k_attn, 4)
+        ab = 1.0 / jnp.sqrt(spec.dim)
+        for kk in ka:  # wq, wk, wv, wo (+ zero biases)
+            params.append(jax.random.uniform(kk, (spec.dim, spec.dim), jnp.float32, -ab, ab))
+            params.append(jnp.zeros((spec.dim,), jnp.float32))
+        params.append(jnp.ones((spec.dim,), jnp.float32))   # ln2_g
+        params.append(jnp.zeros((spec.dim,), jnp.float32))  # ln2_b
+        params.extend(ref.init_fff_params(k_fff, spec.dim, spec.dim, spec.depth, spec.leaf))
+    params.append(jnp.ones((spec.dim,), jnp.float32))       # ln_f_g
+    params.append(jnp.zeros((spec.dim,), jnp.float32))      # ln_f_b
+    key, kh = jax.random.split(key)
+    hb = 1.0 / jnp.sqrt(spec.dim)
+    params.append(jax.random.uniform(kh, (spec.dim, spec.classes), jnp.float32, -hb, hb))
+    params.append(jnp.zeros((spec.classes,), jnp.float32))
+    return params
+
+
+def _layer_norm(x, g, b):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _attention(x, wq, bq, wk, bk, wv, bv, wo, bo, heads):
+    b, t, d = x.shape
+    dh = d // heads
+    q = (x @ wq + bq).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    k = (x @ wk + bk).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    v = (x @ wv + bv).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(dh).astype(jnp.float32)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", attn, v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return ctx @ wo + bo
+
+
+def _patchify(images, spec: VitSpec):
+    """(B, H*W*C) flat images → (B, T, patch_dim)."""
+    b = images.shape[0]
+    g = spec.image // spec.patch
+    x = images.reshape(b, g, spec.patch, g, spec.patch, spec.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # b, gy, gx, py, px, c
+    return x.reshape(b, spec.tokens, spec.patch_dim)
+
+
+def forward(params, images, spec: VitSpec, *, train: bool, dropout_key=None):
+    """Logits. `train=True` uses FORWARD_T in the FFF blocks (+dropout);
+    `train=False` uses the hard FORWARD_I Pallas kernel."""
+    b = images.shape[0]
+    patches = _patchify(images, spec)
+    i = 0
+    patch_w, patch_b, pos, cls = params[i], params[i + 1], params[i + 2], params[i + 3]
+    i += 4
+    emb = patches @ patch_w + patch_b  # (B, T, D)
+    cls_tok = jnp.broadcast_to(cls, (b, 1, spec.dim))
+    h = jnp.concatenate([cls_tok, emb], axis=1) + pos[None]
+    if train and spec.input_dropout > 0.0 and dropout_key is not None:
+        keep = 1.0 - spec.input_dropout
+        mask = jax.random.bernoulli(dropout_key, keep, h.shape).astype(jnp.float32) / keep
+        h = h * mask
+    aux = 0.0
+    for _ in range(spec.layers):
+        (ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo, ln2_g, ln2_b) = params[i : i + 12]
+        fffp = tuple(params[i + 12 : i + 18])
+        i += PER_BLOCK
+        n1 = _layer_norm(h, ln1_g, ln1_b)
+        h = h + _attention(n1, wq, bq, wk, bk, wv, bv, wo, bo, spec.heads)
+        n2 = _layer_norm(h, ln2_g, ln2_b)
+        flat = n2.reshape(b * spec.seq, spec.dim)
+        if train:
+            m = kfff.fff_train_fwd(flat, *fffp, spec.depth)
+            if spec.hardening > 0.0 and math.isfinite(spec.hardening):
+                aux = aux + spec.hardening * ref.hardening_loss(flat, fffp[0], fffp[1], spec.depth)
+        else:
+            m = kfff.fff_infer(flat, *fffp, depth=spec.depth)
+        h = h + m.reshape(b, spec.seq, spec.dim)
+    ln_f_g, ln_f_b, head_w, head_b = params[i], params[i + 1], params[i + 2], params[i + 3]
+    clsh = _layer_norm(h[:, 0, :], ln_f_g, ln_f_b)
+    logits = clsh @ head_w + head_b
+    return logits, aux
+
+
+def loss_fn(params, images, labels, dropout_key, spec: VitSpec):
+    logits, aux = forward(params, images, spec, train=True, dropout_key=dropout_key)
+    return cross_entropy(logits, labels) + aux
+
+
+def adam_train_step(params, m, v, t, images, labels, key, spec: VitSpec, lr=4e-4):
+    """One Adam step (β=0.9/0.999, ε=1e-8). Flat in, flat out.
+
+    Returns (new_params..., new_m..., new_v..., new_t, loss).
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(params, images, labels, key, spec)
+    t = t + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    new_params, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        p = p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        new_params.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_params, *new_m, *new_v, t, loss)
+
+
+def eval_logits(params, images, spec: VitSpec):
+    """Hard-inference logits (FORWARD_I in every FFF block)."""
+    logits, _ = forward(params, images, spec, train=False)
+    return logits
+
+
+def make_entry_points(spec: VitSpec, batch: int):
+    """(train_step_fn, eval_fn, example_specs) for AOT lowering."""
+    n_params = 4 + PER_BLOCK * spec.layers + 4
+
+    def train_flat(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params : 2 * n_params])
+        v = list(args[2 * n_params : 3 * n_params])
+        t = args[3 * n_params]
+        images = args[3 * n_params + 1]
+        labels = args[3 * n_params + 2]
+        key = jax.random.wrap_key_data(args[3 * n_params + 3])
+        return adam_train_step(params, m, v, t, images, labels, key, spec)
+
+    def eval_flat(*args):
+        params = list(args[:n_params])
+        images = args[n_params]
+        return (eval_logits(params, images, spec),)
+
+    dummy = init_params(jax.random.PRNGKey(0), spec)
+    p_specs = tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in dummy)
+    img = jax.ShapeDtypeStruct((batch, spec.image * spec.image * spec.channels), jnp.float32)
+    lab = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    train_args = (*p_specs, *p_specs, *p_specs, t_spec, img, lab, key_spec)
+    eval_args = (*p_specs, img)
+    return train_flat, eval_flat, train_args, eval_args, n_params

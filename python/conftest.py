@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Allow `pytest python/tests` from the repo root as well as `cd python`.
+sys.path.insert(0, os.path.dirname(__file__))

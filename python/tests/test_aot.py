@@ -1,0 +1,71 @@
+"""AOT pipeline tests: HLO text emission + manifest round-trip."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile.kernels import ref
+
+
+def test_spec_str():
+    s = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    assert aot.spec_str(s) == "8x16xf32"
+    assert aot.spec_str(jax.ShapeDtypeStruct((), jnp.float32)) == "scalar_f32"
+    assert aot.spec_str(jax.ShapeDtypeStruct((4,), jnp.int32)) == "4xi32"
+
+
+def test_to_hlo_text_roundtrips_a_simple_fn():
+    fn = lambda a, b: (a @ b + 1.0,)
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "dot" in text
+
+
+def test_emit_single_artifact(tmp_path):
+    reg = aot.Registry()
+    params = ref.init_fff_params(jax.random.PRNGKey(0), 6, 2, 1, 2)
+    specs = tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params)
+    x = jax.ShapeDtypeStruct((4, 6), jnp.float32)
+
+    def fn(*args):
+        return (ref.fff_infer(args[6], *args[:6], depth=1),)
+
+    # note: fn takes params then x — match the registered spec order
+    def fn2(*args):
+        return (ref.fff_infer(args[-1], *args[:6], depth=1),)
+
+    reg.add("tiny", fn2, (*specs, x), list(params), notes="test artifact")
+    aot.emit(reg, str(tmp_path))
+    assert (tmp_path / "tiny.hlo.txt").exists()
+    assert (tmp_path / "tiny.params.bin").exists()
+    n_floats = sum(int(jnp.size(p)) for p in params)
+    assert (tmp_path / "tiny.params.bin").stat().st_size == 4 * n_floats
+    manifest = (tmp_path / "manifest.kv").read_text()
+    assert "[artifact.tiny]" in manifest
+    assert "inputs = " in manifest
+    assert "outputs = 4x2xf32" in manifest
+
+
+def test_registry_builds():
+    reg = aot.build_registry()
+    names = [e[0] for e in reg.entries]
+    assert "parity_fff_train" in names
+    assert "vit_cifar_train_b32" in names
+    assert len(names) >= 6
+
+
+def test_repo_artifacts_exist_if_built():
+    # `make artifacts` output sanity (skip silently if not yet built).
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.kv")
+    if not os.path.exists(manifest):
+        return
+    text = open(manifest).read()
+    for name in ("parity_fff_train", "parity_fff_infer", "fff_mnist_infer_b256"):
+        assert f"[artifact.{name}]" in text
+        f = os.path.join(art, f"{name}.hlo.txt")
+        assert os.path.exists(f), f
+        assert "HloModule" in open(f).read(2000)

@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes/depths/leaf widths; assert_allclose against ref.
+This is the CORE correctness signal for the AOT path: everything the rust
+runtime executes lowers through these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fff as kfff
+from compile.kernels import moe as kmoe
+from compile.kernels import ref
+
+settings.register_profile("kernels", max_examples=12, deadline=None)
+settings.load_profile("kernels")
+
+
+def make_case(seed, depth, leaf, dim_in, dim_out, batch):
+    params = ref.init_fff_params(jax.random.PRNGKey(seed), dim_in, dim_out, depth, leaf)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, dim_in), jnp.float32)
+    return params, x
+
+
+shape_strategy = st.tuples(
+    st.integers(0, 4),          # depth
+    st.integers(1, 8),          # leaf
+    st.integers(2, 24),         # dim_in
+    st.integers(1, 8),          # dim_out
+    st.sampled_from([1, 3, 8, 16]),  # batch
+    st.integers(0, 2**31 - 1),  # seed
+)
+
+
+@given(shape_strategy)
+def test_infer_matches_ref(case):
+    depth, leaf, dim_in, dim_out, batch, seed = case
+    params, x = make_case(seed % 1000, depth, leaf, dim_in, dim_out, batch)
+    got = kfff.fff_infer(x, *params, depth=depth)
+    want = ref.fff_infer(x, *params, depth=depth)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(shape_strategy)
+def test_train_fwd_matches_ref(case):
+    depth, leaf, dim_in, dim_out, batch, seed = case
+    params, x = make_case(seed % 1000, depth, leaf, dim_in, dim_out, batch)
+    got = kfff.fff_train_fwd(x, *params, depth)
+    want, _ = ref.fff_train_fwd(x, *params, depth=depth)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(st.tuples(st.integers(0, 3), st.integers(1, 4), st.integers(0, 2**31 - 1)))
+def test_custom_vjp_matches_jax_grad_of_ref(case):
+    depth, leaf, seed = case
+    params, x = make_case(seed % 1000, depth, leaf, 6, 3, 8)
+
+    def loss_pallas(*p):
+        return jnp.sum(jnp.tanh(kfff.fff_train_fwd(x, *p, depth)))
+
+    def loss_ref(*p):
+        return jnp.sum(jnp.tanh(ref.fff_train_fwd(x, *p, depth=depth)[0]))
+
+    gp = jax.grad(loss_pallas, argnums=tuple(range(6)))(*params)
+    gr = jax.grad(loss_ref, argnums=tuple(range(6)))(*params)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_vjp_dx_matches_ref():
+    depth, leaf = 2, 3
+    params, x = make_case(4, depth, leaf, 5, 2, 6)
+
+    def loss_pallas(xx):
+        return jnp.sum(kfff.fff_train_fwd(xx, *params, depth) ** 2)
+
+    def loss_ref(xx):
+        return jnp.sum(ref.fff_train_fwd(xx, *params, depth=depth)[0] ** 2)
+
+    np.testing.assert_allclose(
+        jax.grad(loss_pallas)(x), jax.grad(loss_ref)(x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_mixture_weights_sum_to_one():
+    for depth in range(5):
+        params, x = make_case(depth, depth, 2, 7, 3, 9)
+        c = ref.fff_mixture_weights(x, params[0], params[1], depth)
+        np.testing.assert_allclose(np.sum(np.asarray(c), axis=1), 1.0, rtol=1e-5)
+        assert (np.asarray(c) >= 0).all()
+
+
+def test_route_in_bounds_and_hard():
+    depth = 4
+    params, x = make_case(9, depth, 2, 10, 3, 32)
+    idx = np.asarray(ref.fff_route(x, params[0], params[1], depth))
+    assert ((idx >= 0) & (idx < 2**depth)).all()
+    # Routing must agree with the argmax leaf of the mixture as boundaries
+    # harden: scale node weights hard and compare.
+    hard_w = params[0] * 1e4
+    hard_b = params[1] * 1e4
+    c = ref.fff_mixture_weights(x, hard_w, hard_b, depth)
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(c), axis=1), np.asarray(ref.fff_route(x, hard_w, hard_b, depth))
+    )
+
+
+def test_entropy_monitor_range_and_hardening():
+    depth = 3
+    params, x = make_case(2, depth, 2, 8, 2, 64)
+    h = np.asarray(ref.fff_node_entropies(x, params[0], params[1], depth))
+    assert h.shape == (7,)
+    assert (h >= 0).all() and (h <= np.log(2) + 1e-6).all()
+    # Scaling boundaries up must reduce every entropy (hardening).
+    h_hard = np.asarray(ref.fff_node_entropies(x, params[0] * 50, params[1] * 50, depth))
+    assert (h_hard <= h + 1e-6).all()
+    assert h_hard.mean() < h.mean()
+
+
+@given(
+    st.tuples(
+        st.integers(2, 16),  # experts
+        st.integers(1, 4),   # k
+        st.sampled_from([1, 4, 16]),
+        st.integers(0, 2**31 - 1),
+    )
+)
+def test_moe_gate_matches_ref(case):
+    experts, k, batch, seed = case
+    k = min(k, experts)
+    key = jax.random.PRNGKey(seed % 1000)
+    gw = jax.random.normal(key, (experts, 6), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 1000 + 1), (batch, 6), jnp.float32)
+    g, i = kmoe.moe_gate(x, gw, k=k)
+    g2, i2 = ref.moe_gate(x, gw, k)
+    np.testing.assert_allclose(g, g2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i2))
+    np.testing.assert_allclose(np.sum(np.asarray(g), axis=1), 1.0, rtol=1e-5)
+
+
+def test_depth_zero_is_single_leaf():
+    params, x = make_case(1, 0, 5, 7, 3, 4)
+    yi = ref.fff_infer(x, *params, depth=0)
+    yt, c = ref.fff_train_fwd(x, *params, depth=0)
+    np.testing.assert_allclose(yi, yt, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c), 1.0)
+
+
+def test_infer_equals_train_when_hardened():
+    # With boundaries pushed to ±∞, FORWARD_T ≈ FORWARD_I exactly — the
+    # paper's hardening claim at its limit.
+    depth, leaf = 3, 4
+    params, x = make_case(6, depth, leaf, 9, 5, 16)
+    hard = (params[0] * 1e5, params[1] * 1e5, *params[2:])
+    yt, _ = ref.fff_train_fwd(x, *hard, depth=depth)
+    yi = ref.fff_infer(x, *hard, depth=depth)
+    np.testing.assert_allclose(yt, yi, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,88 @@
+"""L2 model tests: classifier steps reduce loss; shapes are stable."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def data(batch=32, dim=12, classes=3, seed=0):
+    kx, kl = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (batch, dim), jnp.float32)
+    labels = jax.random.randint(kl, (batch,), 0, classes)
+    # Make it learnable: shift each class's inputs.
+    x = x + labels[:, None].astype(jnp.float32) * 1.5
+    return x, labels
+
+
+def test_cross_entropy_uniform():
+    logits = jnp.zeros((4, 10))
+    labels = jnp.array([0, 1, 2, 3], jnp.int32)
+    assert abs(float(model.cross_entropy(logits, labels)) - np.log(10)) < 1e-5
+
+
+def test_fff_train_step_reduces_loss():
+    depth, leaf, dim, classes = 2, 4, 12, 3
+    params = model.init_fff(jax.random.PRNGKey(1), dim, classes, depth, leaf)
+    x, labels = data(dim=dim, classes=classes)
+    lr = jnp.float32(0.3)
+    step = jax.jit(lambda p, x, y: model.fff_train_step(p, x, y, lr, depth=depth, hardening=1.0))
+    losses = []
+    for _ in range(40):
+        out = step(params, x, labels)
+        params, loss = tuple(out[:6]), out[6]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_fff_infer_logits_shape_and_finite():
+    depth, leaf, dim, classes = 3, 2, 12, 5
+    params = model.init_fff(jax.random.PRNGKey(2), dim, classes, depth, leaf)
+    x, _ = data(dim=dim, classes=classes)
+    logits = model.fff_logits_infer(params, x, depth=depth)
+    assert logits.shape == (32, 5)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_fff_train_then_infer_accuracy():
+    # After training with hardening, hard inference should classify the
+    # (easy) shifted-cluster task well.
+    depth, leaf, dim, classes = 2, 8, 12, 3
+    params = model.init_fff(jax.random.PRNGKey(3), dim, classes, depth, leaf)
+    x, labels = data(batch=96, dim=dim, classes=classes, seed=5)
+    lr = jnp.float32(0.3)
+    step = jax.jit(lambda p, x, y: model.fff_train_step(p, x, y, lr, depth=depth, hardening=2.0))
+    for _ in range(120):
+        out = step(params, x, labels)
+        params = tuple(out[:6])
+    logits = model.fff_logits_infer(params, x, depth=depth)
+    acc = float(jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32)))
+    assert acc > 0.85, acc
+
+
+def test_ff_train_step_reduces_loss():
+    params = model.init_ff(jax.random.PRNGKey(4), 12, 16, 3)
+    x, labels = data()
+    lr = jnp.float32(0.3)
+    step = jax.jit(lambda p, x, y: model.ff_train_step(p, x, y, lr))
+    first = last = None
+    for _ in range(40):
+        out = step(params, x, labels)
+        params, loss = tuple(out[:4]), float(out[4])
+        first = first if first is not None else loss
+        last = loss
+    assert last < first * 0.5
+
+
+def test_entry_point_factory_shapes():
+    train, infer, (p_specs, x_spec, y_spec, lr_spec) = model.make_fff_entry_points(
+        784, 10, 3, 8, 256
+    )
+    assert len(p_specs) == 6
+    assert p_specs[0].shape == (7, 784)
+    assert p_specs[2].shape == (8, 784, 8)
+    assert x_spec.shape == (256, 784)
+    out = jax.eval_shape(train, p_specs, x_spec, y_spec, lr_spec)
+    assert len(out) == 7  # 6 params + loss

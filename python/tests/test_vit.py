@@ -1,0 +1,83 @@
+"""L2 ViT tests: shapes, train/eval split behavior, Adam step learning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import vit
+
+
+def tiny_spec():
+    return vit.VitSpec(
+        image=8, channels=1, patch=4, dim=16, layers=2, heads=2, classes=3, depth=1, leaf=4,
+        hardening=0.1, input_dropout=0.0,
+    )
+
+
+def test_param_count_and_order():
+    spec = tiny_spec()
+    params = vit.init_params(jax.random.PRNGKey(0), spec)
+    assert len(params) == 4 + vit.PER_BLOCK * spec.layers + 4
+    assert params[0].shape == (spec.patch_dim, spec.dim)
+    assert params[2].shape == (spec.seq, spec.dim)
+
+
+def test_forward_shapes_train_and_eval():
+    spec = tiny_spec()
+    params = vit.init_params(jax.random.PRNGKey(1), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (5, 64), jnp.float32)
+    logits, aux = vit.forward(params, x, spec, train=True, dropout_key=jax.random.PRNGKey(3))
+    assert logits.shape == (5, 3)
+    assert float(aux) > 0.0  # hardening loss is active
+    ev = vit.eval_logits(params, x, spec)
+    assert ev.shape == (5, 3)
+    assert np.isfinite(np.asarray(ev)).all()
+
+
+def test_patchify_layout():
+    spec = tiny_spec()
+    x = jnp.arange(64, dtype=jnp.float32)[None, :]
+    p = vit._patchify(x, spec)
+    assert p.shape == (1, 4, 16)
+    # Patch 0 holds rows 0..3, cols 0..3 of the 8x8 image.
+    assert float(p[0, 0, 0]) == 0.0
+    assert float(p[0, 0, 5]) == 9.0  # (row 1, col 1)
+    # Patch 3 top-left is pixel (4, 4) = 36.
+    assert float(p[0, 3, 0]) == 36.0
+
+
+def test_adam_step_learns():
+    spec = tiny_spec()
+    params = vit.init_params(jax.random.PRNGKey(4), spec)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    t = jnp.int32(0)
+    # Classes = intensity bands.
+    n = 24
+    labels = jnp.array([i % 3 for i in range(n)], jnp.int32)
+    base = labels.astype(jnp.float32)[:, None] * 0.33
+    x = base + jax.random.uniform(jax.random.PRNGKey(5), (n, 64), jnp.float32) * 0.2
+
+    step = jax.jit(lambda p, m, v, t, k: vit.adam_train_step(p, m, v, t, x, labels, k, spec, lr=3e-3))
+    npar = len(params)
+    losses = []
+    key = jax.random.PRNGKey(6)
+    for i in range(30):
+        key, sub = jax.random.split(key)
+        out = step(params, m, v, t, sub)
+        params = list(out[:npar])
+        m = list(out[npar : 2 * npar])
+        v = list(out[2 * npar : 3 * npar])
+        t = out[3 * npar]
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.7, (losses[0], losses[-1])
+    assert int(t) == 30
+
+
+def test_entry_points_lower():
+    spec = tiny_spec()
+    train_fn, eval_fn, train_args, eval_args, n_params = vit.make_entry_points(spec, batch=4)
+    out = jax.eval_shape(train_fn, *train_args)
+    assert len(out) == 3 * n_params + 2  # params, m, v, t, loss
+    ev = jax.eval_shape(eval_fn, *eval_args)
+    assert ev[0].shape == (4, spec.classes)

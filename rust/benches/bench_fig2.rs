@@ -1,0 +1,10 @@
+//! `cargo bench --bench bench_fig2` — regenerates the paper's fig2
+//! (FFF_SCALE=smoke|paper; see rust/src/experiments/fig2.rs).
+
+fn main() {
+    let scale = fastfeedforward::bench::Scale::from_env();
+    println!("scale: {scale:?} (set FFF_SCALE=paper for the full grid)");
+    let t0 = std::time::Instant::now();
+    fastfeedforward::experiments::fig2::run(scale);
+    println!("[bench_fig2] total wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

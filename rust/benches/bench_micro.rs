@@ -1,0 +1,115 @@
+//! Micro-benchmarks of the hot paths the experiments lean on: the GEMM
+//! kernel, the FFF routing descent, single-leaf inference, and the
+//! coordinator's batching overhead. These are the §Perf instruments
+//! (EXPERIMENTS.md §Perf records their before/after).
+
+use fastfeedforward::bench::{time_budgeted, time_fn, Table};
+use fastfeedforward::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, NativeFffBackend};
+use fastfeedforward::nn::{Ff, FffInfer};
+use fastfeedforward::rng::Rng;
+use fastfeedforward::tensor::{gemm, Matrix};
+use std::time::Duration;
+
+fn main() {
+    let mut table = Table::new("micro-benchmarks", &["name", "time", "derived"]);
+    let mut rng = Rng::seed_from_u64(0);
+
+    // GEMM peaks (the FF baseline's engine).
+    for &(m, k, n) in &[(256usize, 768usize, 768usize), (256, 784, 128), (2048, 768, 32)] {
+        let mut a = Matrix::zeros(m, k);
+        let mut b = Matrix::zeros(k, n);
+        rng.fill_normal(a.as_mut_slice(), 0.0, 1.0);
+        rng.fill_normal(b.as_mut_slice(), 0.0, 1.0);
+        let t = time_budgeted(Duration::from_millis(500), 5, 1000, || {
+            std::hint::black_box(gemm(&a, &b));
+        });
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        table.row(vec![
+            format!("gemm {m}x{k}x{n}"),
+            format!("{:.3} ms", t.mean_ms()),
+            format!("{:.2} GFLOP/s", flops / t.mean.as_secs_f64() / 1e9),
+        ]);
+    }
+
+    // FFF routing descent only (the O(d) mechanism).
+    for &depth in &[4usize, 8, 12] {
+        let inf = FffInfer::random(&mut rng, 768, 768, depth, 32, 1 << 10);
+        let xs: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..768).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let t = time_budgeted(Duration::from_millis(300), 5, 100_000, || {
+            for x in &xs {
+                std::hint::black_box(inf.route(x));
+            }
+        });
+        table.row(vec![
+            format!("fff route d={depth} (64 samples)"),
+            format!("{:.1} us", t.mean_us()),
+            format!("{:.2} us/sample", t.mean_us() / 64.0),
+        ]);
+    }
+
+    // Single-sample leaf inference (serving hot path).
+    {
+        let inf = FffInfer::random(&mut rng, 784, 10, 4, 8, 16);
+        let x: Vec<f32> = (0..784).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut out = vec![0.0f32; 10];
+        let t = time_budgeted(Duration::from_millis(300), 100, 1_000_000, || {
+            inf.infer_one(std::hint::black_box(&x), &mut out);
+        });
+        table.row(vec![
+            "fff infer_one 784->10 (d=4 l=8)".into(),
+            format!("{:.2} us", t.mean_us()),
+            String::new(),
+        ]);
+    }
+
+    // FF vs FFF batched inference at MNIST dims (quickstart's comparison).
+    {
+        let ff = Ff::new(&mut rng, 784, 64, 10).compile_infer();
+        let fff = FffInfer::random(&mut rng, 784, 10, 3, 8, 8);
+        let mut x = Matrix::zeros(256, 784);
+        rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+        let t_ff = time_fn(3, 30, || {
+            std::hint::black_box(ff.infer_batch(&x));
+        });
+        let t_fff = time_fn(3, 30, || {
+            std::hint::black_box(fff.infer_batch(&x));
+        });
+        table.row(vec![
+            "ff w=64 batch 256 (784->10)".into(),
+            format!("{:.3} ms", t_ff.mean_ms()),
+            String::new(),
+        ]);
+        table.row(vec![
+            "fff d=3 l=8 batch 256 (784->10)".into(),
+            format!("{:.3} ms", t_fff.mean_ms()),
+            format!("{:.2}x vs ff", t_ff.mean.as_secs_f64() / t_fff.mean.as_secs_f64()),
+        ]);
+    }
+
+    // Coordinator batching overhead: submit->response with a tiny model.
+    {
+        let model = FffInfer::random(&mut rng, 16, 4, 2, 2, 4);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_batch: 32, max_delay: Duration::from_micros(100) },
+                workers: 1,
+                queue_capacity: 10_000,
+            },
+            move || Box::new(NativeFffBackend::new(model.clone())),
+        );
+        let t = time_budgeted(Duration::from_millis(500), 20, 50_000, || {
+            let rx = coord.submit(vec![0.1; 16]).unwrap();
+            std::hint::black_box(rx.recv().unwrap());
+        });
+        table.row(vec![
+            "coordinator round-trip (1 in flight)".into(),
+            format!("{:.1} us", t.mean_us()),
+            "incl. 100us batch deadline".into(),
+        ]);
+        coord.shutdown();
+    }
+
+    table.print();
+}

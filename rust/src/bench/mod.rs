@@ -1,0 +1,165 @@
+//! Benchmark harness (criterion replacement for the offline environment).
+//!
+//! Provides warmed-up repeated timing with mean/std/percentiles, the
+//! paper-style table/series formatters used by every `cargo bench` target,
+//! and the `FFF_SCALE` switch that selects between a minutes-scale `smoke`
+//! grid and the paper's full grid.
+
+mod stats;
+mod table;
+
+pub use stats::{summarize, Stats};
+pub use table::{Series, Table};
+
+use std::time::{Duration, Instant};
+
+/// Experiment scale, selected by `FFF_SCALE={smoke,paper}` (default smoke).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Reduced grid/seeds/epochs: finishes in minutes on a 1-core box.
+    Smoke,
+    /// The paper's full grid (hours).
+    Paper,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("FFF_SCALE").as_deref() {
+            Ok("paper") | Ok("PAPER") => Scale::Paper,
+            _ => Scale::Smoke,
+        }
+    }
+
+    /// Pick `smoke` or `paper` value by scale.
+    pub fn pick<T>(&self, smoke: T, paper: T) -> T {
+        match self {
+            Scale::Smoke => smoke,
+            Scale::Paper => paper,
+        }
+    }
+}
+
+/// Timing result of [`time_fn`].
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn std_ms(&self) -> f64 {
+        self.std.as_secs_f64() * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.3} ± {:.3} ms (n={})", self.mean_ms(), self.std_ms(), self.iters)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs followed by `iters` measured runs.
+/// A `std::hint::black_box` around payload state is the caller's job; the
+/// harness only guarantees the measured call isn't elided entirely.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+    let s = summarize(&secs);
+    Timing {
+        mean: Duration::from_secs_f64(s.mean),
+        std: Duration::from_secs_f64(s.std),
+        min: Duration::from_secs_f64(s.min),
+        max: Duration::from_secs_f64(s.max),
+        iters,
+    }
+}
+
+/// Time `f` adaptively: run until `budget` wall time or `max_iters`,
+/// whichever first (at least `min_iters`). Used by the fig3/4 sweep where
+/// per-call cost spans 4 orders of magnitude.
+pub fn time_budgeted(budget: Duration, min_iters: usize, max_iters: usize, mut f: impl FnMut()) -> Timing {
+    // Warmup: one call.
+    f();
+    let mut samples = Vec::new();
+    let t_start = Instant::now();
+    while samples.len() < max_iters && (samples.len() < min_iters || t_start.elapsed() < budget) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let s = summarize(&samples);
+    Timing {
+        mean: Duration::from_secs_f64(s.mean),
+        std: Duration::from_secs_f64(s.std),
+        min: Duration::from_secs_f64(s.min),
+        max: Duration::from_secs_f64(s.max),
+        iters: samples.len(),
+    }
+}
+
+/// Where bench CSV artifacts land (`target/bench-results/`).
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("target/bench-results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a CSV artifact next to the printed table.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> std::io::Result<std::path::PathBuf> {
+    use std::io::Write;
+    let path = results_dir().join(format!("{name}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let mut calls = 0;
+        let t = time_fn(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.mean >= t.min && t.mean <= t.max + Duration::from_nanos(1));
+    }
+
+    #[test]
+    fn time_budgeted_respects_bounds() {
+        let t = time_budgeted(Duration::from_millis(5), 3, 10_000, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(t.iters >= 3 && t.iters <= 10_000);
+    }
+
+    #[test]
+    fn scale_pick() {
+        assert_eq!(Scale::Smoke.pick(1, 2), 1);
+        assert_eq!(Scale::Paper.pick(1, 2), 2);
+    }
+}

@@ -1,0 +1,66 @@
+//! Summary statistics used by the harness and the experiment reports.
+
+/// Summary of a sample of f64 values.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+/// Compute [`Stats`] of a sample (population std; p-quantiles by nearest
+/// rank). Empty input yields zeros.
+pub fn summarize(xs: &[f64]) -> Stats {
+    if xs.is_empty() {
+        return Stats::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Stats {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: q(0.5),
+        p99: q(0.99),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert!((s.p50 - 50.0).abs() < 1e-12);
+        assert!(s.p99 >= 98.0);
+    }
+
+    #[test]
+    fn empty_is_zeroed() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+}

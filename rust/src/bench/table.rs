@@ -1,0 +1,164 @@
+//! Plain-text table / series rendering so every bench prints the same
+//! row-and-column structure the paper's tables and figures report.
+
+/// An aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                line.push_str(&format!("{:<w$}", cells[i], w = widths[i] + 2));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum::<usize>().saturating_sub(2)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// CSV rows (no title) for [`crate::bench::write_csv`].
+    pub fn to_csv(&self) -> (String, Vec<String>) {
+        let header = self.header.join(",");
+        let rows = self.rows.iter().map(|r| r.join(",")).collect();
+        (header, rows)
+    }
+}
+
+/// A named (x, y, err) series — the textual analog of a paper figure curve.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64, err: f64) {
+        self.points.push((x, y, err));
+    }
+
+    /// Render a set of series as an aligned "figure data" block plus a
+    /// crude log-x ASCII plot for eyeballing trends in the terminal.
+    pub fn render_group(title: &str, series: &[Series]) -> String {
+        let mut out = format!("== {title} ==\n");
+        for s in series {
+            out.push_str(&format!("series: {}\n", s.name));
+            for &(x, y, e) in &s.points {
+                out.push_str(&format!("  x={x:<12.4} y={y:<14.6} err={e:.6}\n"));
+            }
+        }
+        // ASCII plot (y linear, x as given order).
+        let all: Vec<f64> = series.iter().flat_map(|s| s.points.iter().map(|p| p.1)).collect();
+        if let (Some(&lo), Some(&hi)) = (
+            all.iter().min_by(|a, b| a.partial_cmp(b).unwrap()),
+            all.iter().max_by(|a, b| a.partial_cmp(b).unwrap()),
+        ) {
+            if hi > lo {
+                out.push_str("plot (each row = one series, columns = points, 0-9 scaled y):\n");
+                for s in series {
+                    let glyphs: String = s
+                        .points
+                        .iter()
+                        .map(|p| {
+                            let t = ((p.1 - lo) / (hi - lo) * 9.0).round() as u32;
+                            char::from_digit(t.min(9), 10).unwrap()
+                        })
+                        .collect();
+                    out.push_str(&format!("  {:<24} {}\n", s.name, glyphs));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["model", "acc"]);
+        t.row(vec!["ff".into(), "99.0".into()]);
+        t.row(vec!["fastff".into(), "97.5".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("fastff"));
+        assert_eq!(t.num_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "table row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let (h, rows) = t.to_csv();
+        assert_eq!(h, "a,b");
+        assert_eq!(rows, vec!["1,2".to_string()]);
+    }
+
+    #[test]
+    fn series_group_renders() {
+        let mut s = Series::new("fff");
+        s.push(2.0, 0.1, 0.01);
+        s.push(4.0, 0.2, 0.01);
+        let r = Series::render_group("fig", &[s]);
+        assert!(r.contains("series: fff"));
+        assert!(r.contains("plot"));
+    }
+}

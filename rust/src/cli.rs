@@ -1,0 +1,116 @@
+//! Tiny argument parser (clap replacement for the offline environment).
+//!
+//! Grammar: `fff <subcommand> [--key value | --flag] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (testable).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default; panics with a usable message on a value
+    /// that fails to parse (CLI surface, not library surface).
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(t) => t,
+                Err(e) => panic!("invalid value for --{key}: {v:?} ({e})"),
+            },
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || self.options.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train extra --dataset mnist --width 64 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("dataset"), Some("mnist"));
+        assert_eq!(a.get_or("width", 0usize), 64);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn flag_followed_by_positional_consumes_value() {
+        // Documented greedy behavior: `--x v` binds v to x.
+        let a = parse("run --verbose yes");
+        assert_eq!(a.get("verbose"), Some("yes"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --scale=paper");
+        assert_eq!(a.get("scale"), Some("paper"));
+    }
+
+    #[test]
+    fn missing_option_uses_default() {
+        let a = parse("train");
+        assert_eq!(a.get_or("depth", 3usize), 3);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value for --width")]
+    fn bad_value_panics() {
+        let a = parse("train --width banana");
+        let _: usize = a.get_or("width", 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! `key = value` config files with `#` comments and `[section]` headers —
+//! the minimal subset of TOML the launcher needs, hand-rolled because the
+//! offline registry carries no serde/toml.
+
+use std::collections::BTreeMap;
+
+/// A parsed config file: `section.key -> value` (top-level keys have no
+/// section prefix).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KvFile {
+    values: BTreeMap<String, String>,
+}
+
+impl KvFile {
+    /// Parse from text. Returns `Err` with a line number on malformed input.
+    pub fn parse(text: &str) -> Result<KvFile, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected 'key = value', got {raw:?}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = v.trim().trim_matches('"').to_string();
+            if values.insert(key.clone(), value).is_some() {
+                return Err(format!("line {}: duplicate key {key:?}", lineno + 1));
+            }
+        }
+        Ok(KvFile { values })
+    }
+
+    /// Load from a path.
+    pub fn load(path: &std::path::Path) -> Result<KvFile, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("key {key:?}: cannot parse {v:?} as {}", std::any::type_name::<T>())),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_strings() {
+        let f = KvFile::parse(
+            "# experiment\nname = \"table1\"\n[train]\nlr = 0.2  # pure SGD\nwidth = 128\n",
+        )
+        .unwrap();
+        assert_eq!(f.get("name"), Some("table1"));
+        assert_eq!(f.get("train.lr"), Some("0.2"));
+        assert_eq!(f.get_parsed::<usize>("train.width").unwrap(), Some(128));
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let e = KvFile::parse("just some words\n").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let e = KvFile::parse("a = 1\na = 2\n").unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let f = KvFile::parse("a = 1\n").unwrap();
+        assert_eq!(f.get("b"), None);
+        assert_eq!(f.get_parsed::<usize>("b").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let f = KvFile::parse("a = banana\n").unwrap();
+        assert!(f.get_parsed::<usize>("a").is_err());
+    }
+}

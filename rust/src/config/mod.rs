@@ -1,0 +1,202 @@
+//! Typed experiment configuration + a small `key = value` config-file
+//! format (serde/toml replacement). Presets mirror the paper's recipes so
+//! every experiment is reproducible from a named config.
+
+mod kv;
+
+pub use kv::KvFile;
+
+use crate::data::DatasetKind;
+
+/// Which architecture a run trains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Vanilla feedforward layer of width `w`.
+    Ff,
+    /// Fast feedforward: depth `d`, leaf width `ell`.
+    Fff,
+    /// Noisy top-k mixture-of-experts: `experts × e`, top `k`.
+    Moe,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "ff" => Some(ModelKind::Ff),
+            "fff" | "fastff" | "fastfeedforward" => Some(ModelKind::Fff),
+            "moe" => Some(ModelKind::Moe),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Ff => "ff",
+            ModelKind::Fff => "fff",
+            ModelKind::Moe => "moe",
+        }
+    }
+}
+
+/// Optimizer choice (paper uses pure SGD for Table 1, Adam elsewhere).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adam,
+}
+
+/// One training run, fully specified.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub dataset: DatasetKind,
+    pub model: ModelKind,
+    /// FF width / FFF training width / MoE training width.
+    pub width: usize,
+    /// FFF leaf size (ℓ) or MoE expert size (e).
+    pub leaf: usize,
+    /// FFF depth; derived as log2(width/leaf) when `None`.
+    pub depth: Option<usize>,
+    /// MoE top-k.
+    pub k: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub optimizer: OptimizerKind,
+    /// Hardening-loss scale h (0 disables; f32::INFINITY freezes the tree).
+    pub hardening: f32,
+    /// MoE auxiliary loss weights (w_importance, w_load).
+    pub w_importance: f32,
+    pub w_load: f32,
+    pub max_epochs: usize,
+    /// Early-stopping patience in epochs (0 = no early stopping).
+    pub patience: usize,
+    /// Halve the LR after this many epochs without improvement (0 = off).
+    pub lr_plateau: usize,
+    /// Randomized child transposition probability (overfitting mitigation).
+    pub transposition_p: f32,
+    pub seed: u64,
+    /// Dataset size (train split, before 9:1 val split).
+    pub train_n: usize,
+    pub test_n: usize,
+}
+
+impl TrainConfig {
+    /// FFF depth, derived from width/leaf when unset: d = log2(w/ℓ).
+    pub fn fff_depth(&self) -> usize {
+        match self.depth {
+            Some(d) => d,
+            None => {
+                assert!(self.width % self.leaf == 0 && (self.width / self.leaf).is_power_of_two(),
+                    "width/leaf must be a power of two to derive depth (w={}, ell={})", self.width, self.leaf);
+                (self.width / self.leaf).trailing_zeros() as usize
+            }
+        }
+    }
+
+    /// Number of MoE experts for the same training width.
+    pub fn moe_experts(&self) -> usize {
+        self.width.div_ceil(self.leaf)
+    }
+
+    /// The paper's Table 1 recipe (explorative evaluation).
+    pub fn table1(dataset: DatasetKind, model: ModelKind, width: usize, leaf: usize, seed: u64) -> Self {
+        TrainConfig {
+            dataset,
+            model,
+            width,
+            leaf,
+            depth: None,
+            k: 2,
+            batch_size: 256,
+            lr: 0.2,
+            optimizer: OptimizerKind::Sgd,
+            hardening: 3.0,
+            w_importance: 0.1,
+            w_load: 0.1,
+            max_epochs: 200,
+            patience: 25,
+            lr_plateau: 0,
+            transposition_p: 0.0,
+            seed,
+            train_n: 8000,
+            test_n: 2000,
+        }
+    }
+
+    /// The paper's Table 2 recipe (comparative evaluation vs MoE).
+    pub fn table2(model: ModelKind, width: usize, seed: u64) -> Self {
+        let leaf = match model {
+            ModelKind::Moe => 16,
+            _ => 32,
+        };
+        TrainConfig {
+            dataset: DatasetKind::Cifar10,
+            model,
+            width,
+            leaf,
+            depth: None,
+            k: 2,
+            batch_size: 4096,
+            lr: 0.001,
+            optimizer: OptimizerKind::Adam,
+            hardening: 3.0,
+            w_importance: 0.1,
+            w_load: 0.1,
+            max_epochs: 7000,
+            patience: 350,
+            lr_plateau: 250,
+            transposition_p: 0.0,
+            seed,
+            train_n: 8000,
+            test_n: 2000,
+        }
+    }
+
+    /// The paper's Figure 2 recipe (inference-size counterparts; h=0).
+    pub fn fig2(dataset: DatasetKind, model: ModelKind, leaf: usize, depth: usize, seed: u64) -> Self {
+        let mut c = Self::table1(dataset, model, leaf << depth, leaf, seed);
+        c.depth = Some(depth);
+        c.hardening = 0.0;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_derivation() {
+        let c = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Fff, 128, 8, 0);
+        assert_eq!(c.fff_depth(), 4);
+        let c = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Fff, 16, 1, 0);
+        assert_eq!(c.fff_depth(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn depth_derivation_rejects_non_pow2() {
+        let c = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Fff, 96, 5, 0);
+        let _ = c.fff_depth();
+    }
+
+    #[test]
+    fn explicit_depth_wins() {
+        let mut c = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Fff, 128, 32, 0);
+        c.depth = Some(6);
+        assert_eq!(c.fff_depth(), 6);
+    }
+
+    #[test]
+    fn moe_expert_count() {
+        let c = TrainConfig::table2(ModelKind::Moe, 256, 0);
+        assert_eq!(c.moe_experts(), 16);
+        assert_eq!(c.leaf, 16);
+        assert_eq!(c.k, 2);
+    }
+
+    #[test]
+    fn model_kind_parse() {
+        assert_eq!(ModelKind::parse("FFF"), Some(ModelKind::Fff));
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,144 @@
+//! Deadline-based dynamic batching.
+//!
+//! The batcher drains the global request queue into batches, closing a
+//! batch when it reaches `max_batch` or when the *oldest* queued request
+//! has waited `max_delay` — the standard latency/throughput knob of
+//! serving systems. Batches are dispatched to workers round-robin.
+
+use super::InferRequest;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before the batch closes.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// A closed batch on its way to a worker.
+pub struct Batch {
+    pub requests: Vec<InferRequest>,
+}
+
+/// The batcher loop. Exits when the request channel closes.
+pub(crate) fn run_batcher(
+    rx: mpsc::Receiver<InferRequest>,
+    workers: Vec<mpsc::Sender<Batch>>,
+    cfg: BatcherConfig,
+) {
+    assert!(cfg.max_batch >= 1);
+    let mut next_worker = 0usize;
+    let mut pending: Vec<InferRequest> = Vec::with_capacity(cfg.max_batch);
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let timeout = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => Duration::from_secs(3600),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                if pending.is_empty() {
+                    deadline = Some(req.submitted + cfg.max_delay);
+                }
+                pending.push(req);
+                if pending.len() >= cfg.max_batch {
+                    dispatch(&mut pending, &workers, &mut next_worker);
+                    deadline = None;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    dispatch(&mut pending, &workers, &mut next_worker);
+                }
+                deadline = None;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    dispatch(&mut pending, &workers, &mut next_worker);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn dispatch(pending: &mut Vec<InferRequest>, workers: &[mpsc::Sender<Batch>], next: &mut usize) {
+    let mut batch = Batch { requests: std::mem::take(pending) };
+    // Round-robin over live workers; skip dead ones.
+    for _ in 0..workers.len() {
+        let w = *next % workers.len();
+        *next = (*next + 1) % workers.len();
+        match workers[w].send(batch) {
+            Ok(()) => return,
+            Err(mpsc::SendError(b)) => batch = b, // worker gone; try the next
+        }
+    }
+    // All workers gone; drop the batch (responses' channels close).
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64) -> InferRequest {
+        let (tx, _rx) = mpsc::channel();
+        InferRequest { id, input: vec![0.0; 4], submitted: Instant::now(), resp: tx }
+    }
+
+    #[test]
+    fn batches_close_at_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        let (wtx, wrx) = mpsc::channel();
+        let cfg = BatcherConfig { max_batch: 4, max_delay: Duration::from_secs(10) };
+        let h = std::thread::spawn(move || run_batcher(rx, vec![wtx], cfg));
+        for i in 0..8 {
+            tx.send(req(i)).unwrap();
+        }
+        let mut sizes = Vec::new();
+        for _ in 0..2 {
+            sizes.push(wrx.recv().unwrap().requests.len());
+        }
+        assert_eq!(sizes, vec![4, 4]);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        let (wtx, wrx) = mpsc::channel();
+        let cfg = BatcherConfig { max_batch: 100, max_delay: Duration::from_millis(5) };
+        let h = std::thread::spawn(move || run_batcher(rx, vec![wtx], cfg));
+        tx.send(req(0)).unwrap();
+        tx.send(req(1)).unwrap();
+        let t0 = Instant::now();
+        let batch = wrx.recv().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(500), "deadline not honored");
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn flush_on_close() {
+        let (tx, rx) = mpsc::channel();
+        let (wtx, wrx) = mpsc::channel();
+        let cfg = BatcherConfig { max_batch: 100, max_delay: Duration::from_secs(100) };
+        let h = std::thread::spawn(move || run_batcher(rx, vec![wtx], cfg));
+        tx.send(req(7)).unwrap();
+        drop(tx);
+        let batch = wrx.recv().unwrap();
+        assert_eq!(batch.requests[0].id, 7);
+        h.join().unwrap();
+    }
+}

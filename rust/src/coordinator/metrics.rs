@@ -1,0 +1,106 @@
+//! Serving metrics: completed/rejected counters, latency percentiles,
+//! batch-size distribution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink (lock only on record of the sample vectors).
+pub struct Metrics {
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    samples: Mutex<Samples>,
+}
+
+#[derive(Default)]
+struct Samples {
+    latencies_us: Vec<f64>,
+    batch_sizes: Vec<f64>,
+}
+
+/// Point-in-time view of the metrics.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub latency_p50: Duration,
+    pub latency_p99: Duration,
+    pub latency_mean: Duration,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            samples: Mutex::new(Samples::default()),
+        }
+    }
+
+    pub fn record(&self, latency: Duration, batch_size: usize) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut s = self.samples.lock().unwrap();
+        s.latencies_us.push(latency.as_secs_f64() * 1e6);
+        s.batch_sizes.push(batch_size as f64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let s = self.samples.lock().unwrap();
+        let lat = crate::bench::summarize(&s.latencies_us);
+        let batch = crate::bench::summarize(&s.batch_sizes);
+        MetricsSnapshot {
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            latency_p50: Duration::from_secs_f64(lat.p50 / 1e6),
+            latency_p99: Duration::from_secs_f64(lat.p99 / 1e6),
+            latency_mean: Duration::from_secs_f64(lat.mean / 1e6),
+            mean_batch: batch.mean,
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "completed={} rejected={} p50={:.1}us p99={:.1}us mean={:.1}us mean_batch={:.1}",
+            self.completed,
+            self.rejected,
+            self.latency_p50.as_secs_f64() * 1e6,
+            self.latency_p99.as_secs_f64() * 1e6,
+            self.latency_mean.as_secs_f64() * 1e6,
+            self.mean_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(100), 4);
+        m.record(Duration::from_micros(300), 8);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.rejected, 0);
+        assert!((s.latency_mean.as_micros() as i64 - 200).abs() <= 1);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.latency_p99, Duration::ZERO);
+    }
+}

@@ -1,0 +1,235 @@
+//! TCP front-end for the coordinator: a minimal length-prefixed binary
+//! protocol so non-rust clients can hit the serving stack.
+//!
+//! Wire format (little-endian):
+//!   request:  u32 n_floats, then n_floats × f32  (one sample)
+//!   response: u32 status (0 = ok), u32 n_floats, then n_floats × f32
+//!             status 1 = bad input length, 2 = overloaded, 3 = internal
+//!
+//! One request per connection round is supported (clients may pipeline
+//! sequentially on a kept-alive connection).
+
+use super::{Coordinator, SubmitError};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Handle to a running TCP server.
+pub struct TcpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Start serving `coord` on `bind_addr` (e.g. "127.0.0.1:0").
+    pub fn start(coord: Arc<Coordinator>, bind_addr: &str) -> std::io::Result<TcpServer> {
+        let listener = TcpListener::bind(bind_addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new().name("fff-tcp".into()).spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let coord = coord.clone();
+                        let stop3 = stop2.clone();
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, coord, stop3);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        })?;
+        Ok(TcpServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the acceptor thread.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut lenbuf = [0u8; 4];
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        match stream.read_exact(&mut lenbuf) {
+            Ok(()) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // poll for stop
+            }
+            Err(_) => return Ok(()), // client went away
+        }
+        let n = u32::from_le_bytes(lenbuf) as usize;
+        if n > 1 << 22 {
+            write_response(&mut stream, 1, &[])?;
+            return Ok(());
+        }
+        let mut data = vec![0u8; n * 4];
+        stream.read_exact(&mut data)?;
+        let input: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        match coord.submit(input) {
+            Ok(rx) => match rx.recv() {
+                Ok(resp) => write_response(&mut stream, 0, &resp.output)?,
+                Err(_) => write_response(&mut stream, 3, &[])?,
+            },
+            Err(SubmitError::BadInput { .. }) => write_response(&mut stream, 1, &[])?,
+            Err(SubmitError::QueueFull) => write_response(&mut stream, 2, &[])?,
+            Err(SubmitError::Closed) => write_response(&mut stream, 3, &[])?,
+        }
+    }
+}
+
+fn write_response(stream: &mut TcpStream, status: u32, output: &[f32]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(8 + 4 * output.len());
+    buf.extend_from_slice(&status.to_le_bytes());
+    buf.extend_from_slice(&(output.len() as u32).to_le_bytes());
+    for v in output {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&buf)
+}
+
+/// Blocking client for the wire protocol (tests, examples, tooling).
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<TcpClient> {
+        Ok(TcpClient { stream: TcpStream::connect(addr)? })
+    }
+
+    /// Send one sample, wait for the logits. `Err` statuses map to
+    /// `io::ErrorKind::Other` with a message.
+    pub fn infer(&mut self, input: &[f32]) -> std::io::Result<Vec<f32>> {
+        let mut buf = Vec::with_capacity(4 + input.len() * 4);
+        buf.extend_from_slice(&(input.len() as u32).to_le_bytes());
+        for v in input {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&buf)?;
+        let mut head = [0u8; 8];
+        self.stream.read_exact(&mut head)?;
+        let status = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+        let n = u32::from_le_bytes([head[4], head[5], head[6], head[7]]) as usize;
+        let mut data = vec![0u8; n * 4];
+        self.stream.read_exact(&mut data)?;
+        if status != 0 {
+            return Err(std::io::Error::other(format!("server status {status}")));
+        }
+        Ok(data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, CoordinatorConfig, NativeFffBackend};
+    use crate::nn::FffInfer;
+    use crate::rng::Rng;
+    use std::time::Duration;
+
+    fn coord() -> Arc<Coordinator> {
+        let mut rng = Rng::seed_from_u64(1);
+        let model = FffInfer::random(&mut rng, 8, 3, 2, 4, 4);
+        Arc::new(Coordinator::start(
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+                workers: 1,
+                queue_capacity: 128,
+            },
+            move || Box::new(NativeFffBackend::new(model.clone())),
+        ))
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let c = coord();
+        let server = TcpServer::start(c.clone(), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(server.addr()).unwrap();
+        let out = client.infer(&[0.1; 8]).unwrap();
+        assert_eq!(out.len(), 3);
+        // Pipelined second request on the same connection.
+        let out2 = client.infer(&[-0.3; 8]).unwrap();
+        assert_eq!(out2.len(), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_bad_input_status() {
+        let c = coord();
+        let server = TcpServer::start(c.clone(), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(server.addr()).unwrap();
+        let err = client.infer(&[0.0; 5]).unwrap_err();
+        assert!(err.to_string().contains("status 1"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_concurrent_clients() {
+        let c = coord();
+        let server = TcpServer::start(c.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut client = TcpClient::connect(addr).unwrap();
+                    for _ in 0..20 {
+                        assert_eq!(client.infer(&[0.5; 8]).unwrap().len(), 3);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.metrics().completed, 80);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,200 @@
+//! Inference workers and their backends.
+
+use super::batcher::Batch;
+use super::metrics::Metrics;
+use crate::nn::FffInfer;
+use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// What a worker executes: native engine or PJRT executable.
+pub trait Backend {
+    fn dim_in(&self) -> usize;
+    fn dim_out(&self) -> usize;
+    /// Batched inference: `B×dim_in → B×dim_out`.
+    fn infer(&mut self, batch: &Matrix) -> Matrix;
+    fn name(&self) -> &'static str {
+        "backend"
+    }
+}
+
+/// The native FFF inference engine as a backend.
+pub struct NativeFffBackend {
+    model: FffInfer,
+}
+
+impl NativeFffBackend {
+    pub fn new(model: FffInfer) -> Self {
+        NativeFffBackend { model }
+    }
+}
+
+impl Backend for NativeFffBackend {
+    fn dim_in(&self) -> usize {
+        self.model.dim_in()
+    }
+
+    fn dim_out(&self) -> usize {
+        self.model.dim_out()
+    }
+
+    fn infer(&mut self, batch: &Matrix) -> Matrix {
+        self.model.infer_batch(batch)
+    }
+
+    fn name(&self) -> &'static str {
+        "native-fff"
+    }
+}
+
+/// A PJRT executable as a backend. Constructed *inside* the worker thread
+/// (PJRT handles are not `Send`): pass [`HloBackend::factory`] the
+/// artifact directory and name.
+///
+/// The artifact must take `params… , x(B×dim_in)` and return logits as its
+/// only output (e.g. `fff_mnist_infer_b16`). Incoming batches are padded
+/// to the artifact's static batch size and outputs truncated.
+pub struct HloBackend {
+    exe: std::rc::Rc<crate::runtime::Executable>,
+    params: Vec<crate::runtime::HostTensor>,
+    batch: usize,
+    dim_in: usize,
+    dim_out: usize,
+    // Keep the runtime alive as long as the executable.
+    _rt: crate::runtime::Runtime,
+}
+
+impl HloBackend {
+    /// Build inside the current thread.
+    pub fn new(artifact_dir: &str, artifact: &str) -> anyhow::Result<HloBackend> {
+        let rt = crate::runtime::Runtime::from_dir(artifact_dir)?;
+        let exe = rt.load(artifact)?;
+        let params = rt.initial_params(artifact)?;
+        let spec = exe.spec().clone();
+        let x_spec = spec.inputs.last().expect("artifact with no inputs");
+        let out_spec = &spec.outputs[0];
+        Ok(HloBackend {
+            exe,
+            params,
+            batch: x_spec.dims[0],
+            dim_in: x_spec.dims[1],
+            dim_out: out_spec.dims[1],
+            _rt: rt,
+        })
+    }
+
+    /// A `Coordinator::start`-compatible factory.
+    pub fn factory(
+        artifact_dir: String,
+        artifact: String,
+    ) -> impl Fn() -> Box<dyn Backend> + Send + Sync + 'static {
+        move || {
+            Box::new(
+                HloBackend::new(&artifact_dir, &artifact)
+                    .expect("failed to build HLO backend in worker thread"),
+            )
+        }
+    }
+
+    /// Replace the parameter tensors (e.g. with trained weights).
+    pub fn set_params(&mut self, params: Vec<crate::runtime::HostTensor>) {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+    }
+}
+
+impl Backend for HloBackend {
+    fn dim_in(&self) -> usize {
+        self.dim_in
+    }
+
+    fn dim_out(&self) -> usize {
+        self.dim_out
+    }
+
+    fn infer(&mut self, batch: &Matrix) -> Matrix {
+        let b = batch.rows();
+        let mut out = Matrix::zeros(b, self.dim_out);
+        // Pad/chunk to the artifact's static batch size.
+        let mut row = 0;
+        while row < b {
+            let take = (b - row).min(self.batch);
+            let mut padded = vec![0.0f32; self.batch * self.dim_in];
+            for i in 0..take {
+                padded[i * self.dim_in..(i + 1) * self.dim_in]
+                    .copy_from_slice(batch.row(row + i));
+            }
+            let mut inputs = self.params.clone();
+            inputs.push(crate::runtime::HostTensor::f32(
+                vec![self.batch, self.dim_in],
+                padded,
+            ));
+            let outputs = self.exe.run(&inputs).expect("HLO inference failed");
+            let logits = outputs[0].as_f32();
+            for i in 0..take {
+                out.row_mut(row + i)
+                    .copy_from_slice(&logits[i * self.dim_out..(i + 1) * self.dim_out]);
+            }
+            row += take;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo-pjrt"
+    }
+}
+
+/// Worker loop: construct the backend, report its input dim, serve batches.
+pub(crate) fn run_worker<F>(
+    rx: mpsc::Receiver<Batch>,
+    factory: Arc<F>,
+    metrics: Arc<Metrics>,
+    in_flight: Arc<AtomicU64>,
+    dim_tx: mpsc::Sender<usize>,
+) where
+    F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
+{
+    let mut backend = factory();
+    let _ = dim_tx.send(backend.dim_in());
+    drop(dim_tx);
+    while let Ok(batch) = rx.recv() {
+        if batch.requests.is_empty() {
+            continue;
+        }
+        let n = batch.requests.len();
+        let x = super::stack_inputs(&batch.requests);
+        let y = backend.infer(&x);
+        let done = std::time::Instant::now();
+        for (i, req) in batch.requests.into_iter().enumerate() {
+            let latency = done.duration_since(req.submitted);
+            metrics.record(latency, n);
+            let _ = req.resp.send(super::InferResponse {
+                id: req.id,
+                output: y.row(i).to_vec(),
+                latency,
+                batch_size: n,
+            });
+        }
+        in_flight.fetch_sub(n as u64, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn native_backend_matches_model() {
+        let mut rng = Rng::seed_from_u64(5);
+        let model = FffInfer::random(&mut rng, 6, 2, 2, 3, 4);
+        let mut backend = NativeFffBackend::new(model.clone());
+        assert_eq!(backend.dim_in(), 6);
+        assert_eq!(backend.dim_out(), 2);
+        let x = Matrix::from_fn(4, 6, |r, c| ((r + c) as f32).sin());
+        let got = backend.infer(&x);
+        let want = model.infer_batch(&x);
+        assert!(got.max_abs_diff(&want) < 1e-7);
+    }
+}

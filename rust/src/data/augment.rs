@@ -1,0 +1,153 @@
+//! Train-time image augmentation for the Table 3 / Figure 6 ViT runs:
+//! "random horizontal, vertical flipping, and random linear augmentations
+//! (translate, rotate, scale)".
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Augmentation configuration (paper's ViT recipe defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct Augment {
+    pub hflip: bool,
+    pub vflip: bool,
+    /// Max translation as a fraction of image size.
+    pub translate: f32,
+    /// Max |rotation| in radians.
+    pub rotate: f32,
+    /// Max |log-scale| deviation.
+    pub scale: f32,
+}
+
+impl Default for Augment {
+    fn default() -> Self {
+        Augment { hflip: true, vflip: true, translate: 0.1, rotate: 0.25, scale: 0.1 }
+    }
+}
+
+impl Augment {
+    /// No-op augmentation (eval path).
+    pub fn none() -> Self {
+        Augment { hflip: false, vflip: false, translate: 0.0, rotate: 0.0, scale: 0.0 }
+    }
+
+    /// Apply an independent random augmentation to every row (image) of a
+    /// flattened `n × (h*w*c)` batch, in place.
+    pub fn apply_batch(&self, batch: &mut Matrix, h: usize, w: usize, c: usize, rng: &mut Rng) {
+        assert_eq!(batch.cols(), h * w * c, "augment: geometry mismatch");
+        let mut tmp = vec![0.0f32; h * w * c];
+        for r in 0..batch.rows() {
+            let row = batch.row_mut(r);
+            self.apply_one(row, &mut tmp, h, w, c, rng);
+        }
+    }
+
+    fn apply_one(&self, img: &mut [f32], tmp: &mut [f32], h: usize, w: usize, c: usize, rng: &mut Rng) {
+        // Flips first (exact pixel moves).
+        if self.hflip && rng.bernoulli(0.5) {
+            for y in 0..h {
+                for x in 0..w / 2 {
+                    for ch in 0..c {
+                        img.swap((y * w + x) * c + ch, (y * w + (w - 1 - x)) * c + ch);
+                    }
+                }
+            }
+        }
+        if self.vflip && rng.bernoulli(0.5) {
+            for y in 0..h / 2 {
+                for x in 0..w {
+                    for ch in 0..c {
+                        img.swap((y * w + x) * c + ch, ((h - 1 - y) * w + x) * c + ch);
+                    }
+                }
+            }
+        }
+        // Affine (translate/rotate/scale) via inverse bilinear warp.
+        if self.translate == 0.0 && self.rotate == 0.0 && self.scale == 0.0 {
+            return;
+        }
+        let angle = rng.uniform_range_f32(-self.rotate, self.rotate);
+        let scale = (rng.uniform_range_f32(-self.scale, self.scale)).exp();
+        let tx = rng.uniform_range_f32(-self.translate, self.translate) * w as f32;
+        let ty = rng.uniform_range_f32(-self.translate, self.translate) * h as f32;
+        let (sin, cos) = angle.sin_cos();
+        let cx = w as f32 / 2.0;
+        let cy = h as f32 / 2.0;
+        let inv_s = 1.0 / scale;
+        for y in 0..h {
+            for x in 0..w {
+                let dx = x as f32 - cx - tx;
+                let dy = y as f32 - cy - ty;
+                let sx = (cos * dx + sin * dy) * inv_s + cx;
+                let sy = (-sin * dx + cos * dy) * inv_s + cy;
+                for ch in 0..c {
+                    tmp[(y * w + x) * c + ch] = bilinear(img, h, w, c, sx, sy, ch);
+                }
+            }
+        }
+        img.copy_from_slice(tmp);
+    }
+}
+
+fn bilinear(img: &[f32], h: usize, w: usize, c: usize, x: f32, y: f32, ch: usize) -> f32 {
+    let x0f = x.floor();
+    let y0f = y.floor();
+    let fx = x - x0f;
+    let fy = y - y0f;
+    let sample = |xi: i64, yi: i64| -> f32 {
+        if xi < 0 || yi < 0 || xi >= w as i64 || yi >= h as i64 {
+            0.0
+        } else {
+            img[(yi as usize * w + xi as usize) * c + ch]
+        }
+    };
+    let (x0, y0) = (x0f as i64, y0f as i64);
+    sample(x0, y0) * (1.0 - fx) * (1.0 - fy)
+        + sample(x0 + 1, y0) * fx * (1.0 - fy)
+        + sample(x0, y0 + 1) * (1.0 - fx) * fy
+        + sample(x0 + 1, y0 + 1) * fx * fy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut m = Matrix::from_fn(2, 16, |r, c| (r * 16 + c) as f32 / 32.0);
+        let orig = m.clone();
+        Augment::none().apply_batch(&mut m, 4, 4, 1, &mut rng);
+        assert_eq!(m, orig);
+    }
+
+    #[test]
+    fn flip_preserves_mass() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut m = Matrix::from_fn(1, 16, |_, c| c as f32 / 16.0);
+        let sum_before = m.sum();
+        let aug = Augment { hflip: true, vflip: true, translate: 0.0, rotate: 0.0, scale: 0.0 };
+        aug.apply_batch(&mut m, 4, 4, 1, &mut rng);
+        assert!((m.sum() - sum_before).abs() < 1e-6);
+    }
+
+    #[test]
+    fn affine_changes_image_but_stays_bounded() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut m = Matrix::from_fn(1, 64, |_, c| if c % 5 == 0 { 1.0 } else { 0.0 });
+        let orig = m.clone();
+        Augment::default().apply_batch(&mut m, 8, 8, 1, &mut rng);
+        assert_ne!(m, orig);
+        assert!(m.as_slice().iter().all(|&v| (-0.001..=1.001).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let mut a = Matrix::from_fn(2, 64, |r, c| ((r + c) % 7) as f32 / 7.0);
+        let mut b = a.clone();
+        let mut r1 = Rng::seed_from_u64(9);
+        let mut r2 = Rng::seed_from_u64(9);
+        Augment::default().apply_batch(&mut a, 8, 8, 1, &mut r1);
+        Augment::default().apply_batch(&mut b, 8, 8, 1, &mut r2);
+        assert_eq!(a, b);
+    }
+}

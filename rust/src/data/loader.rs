@@ -1,0 +1,121 @@
+//! Batch iteration over a [`Dataset`]: the training loop's input pipeline.
+
+use super::Dataset;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Named split of an experiment's data (paper protocol).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// An epoch's worth of shuffled mini-batches.
+///
+/// Yields `(images, labels)` pairs; the final batch may be smaller unless
+/// `drop_last` is set. Shuffling is deterministic per (seed, epoch).
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    order: Vec<usize>,
+    batch_size: usize,
+    pos: usize,
+    drop_last: bool,
+}
+
+impl<'a> BatchIter<'a> {
+    /// Sequential (unshuffled) batches — used for evaluation.
+    pub fn sequential(data: &'a Dataset, batch_size: usize) -> Self {
+        assert!(batch_size > 0);
+        BatchIter { data, order: (0..data.len()).collect(), batch_size, pos: 0, drop_last: false }
+    }
+
+    /// Shuffled batches for one training epoch.
+    pub fn shuffled(data: &'a Dataset, batch_size: usize, rng: &mut Rng) -> Self {
+        assert!(batch_size > 0);
+        BatchIter { data, order: rng.permutation(data.len()), batch_size, pos: 0, drop_last: false }
+    }
+
+    /// Drop the trailing partial batch (paper's fixed-batch protocol).
+    pub fn drop_last(mut self) -> Self {
+        self.drop_last = true;
+        self
+    }
+
+    /// Number of batches this iterator will yield.
+    pub fn num_batches(&self) -> usize {
+        if self.drop_last {
+            self.data.len() / self.batch_size
+        } else {
+            self.data.len().div_ceil(self.batch_size)
+        }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = (Matrix, Vec<usize>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch_size).min(self.order.len());
+        if self.drop_last && end - self.pos < self.batch_size {
+            return None;
+        }
+        let idx = &self.order[self.pos..end];
+        self.pos = end;
+        let images = self.data.images.gather_rows(idx);
+        let labels = idx.iter().map(|&i| self.data.labels[i]).collect();
+        Some((images, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, DatasetKind, GenOptions};
+
+    fn data() -> Dataset {
+        generate(DatasetKind::Usps, &GenOptions { train_n: 103, test_n: 10, seed: 1 }).0
+    }
+
+    #[test]
+    fn sequential_covers_everything_once() {
+        let d = data();
+        let mut seen = 0;
+        for (x, y) in BatchIter::sequential(&d, 32) {
+            assert_eq!(x.rows(), y.len());
+            seen += y.len();
+        }
+        assert_eq!(seen, 103);
+    }
+
+    #[test]
+    fn drop_last_only_full_batches() {
+        let d = data();
+        let batches: Vec<_> = BatchIter::sequential(&d, 32).drop_last().collect();
+        assert_eq!(batches.len(), 3);
+        assert!(batches.iter().all(|(x, _)| x.rows() == 32));
+    }
+
+    #[test]
+    fn shuffled_is_a_permutation_and_seed_deterministic() {
+        let d = data();
+        let mut rng1 = Rng::seed_from_u64(5);
+        let mut rng2 = Rng::seed_from_u64(5);
+        let a: Vec<usize> = BatchIter::shuffled(&d, 16, &mut rng1).flat_map(|(_, y)| y).collect();
+        let b: Vec<usize> = BatchIter::shuffled(&d, 16, &mut rng2).flat_map(|(_, y)| y).collect();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 103);
+    }
+
+    #[test]
+    fn num_batches_matches_iteration() {
+        let d = data();
+        let it = BatchIter::sequential(&d, 25);
+        assert_eq!(it.num_batches(), 5);
+        assert_eq!(BatchIter::sequential(&d, 25).count(), 5);
+    }
+}

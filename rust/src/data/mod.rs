@@ -1,0 +1,108 @@
+//! Data substrate: procedural image-classification datasets standing in for
+//! the paper's USPS / MNIST / FashionMNIST / SVHN / CIFAR10 / CIFAR100
+//! (this environment has no network access — see DESIGN.md §3), plus
+//! splitting, batching, and the ViT augmentations of Table 3.
+
+mod augment;
+mod loader;
+mod synthetic;
+
+pub use augment::Augment;
+pub use loader::{BatchIter, Split};
+pub use synthetic::{generate, DatasetKind, GenOptions};
+
+use crate::tensor::Matrix;
+
+/// A fully-materialized labelled dataset of flattened images.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `n × (h*w*c)` row-major image matrix, values roughly in [0, 1].
+    pub images: Matrix,
+    /// Class label per row.
+    pub labels: Vec<usize>,
+    /// Image geometry (needed by augmentation and the ViT patcher).
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    /// Number of classes.
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Flattened input dimensionality `h*w*c`.
+    pub fn dim(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+
+    /// Select a subset of rows by index.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            images: self.images.gather_rows(idx),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            height: self.height,
+            width: self.width,
+            channels: self.channels,
+            num_classes: self.num_classes,
+        }
+    }
+
+    /// The paper's protocol: split the full training set 9:1 into
+    /// train/validation subsets (deterministic given `seed`).
+    pub fn split_train_val(&self, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = crate::rng::Rng::seed_from_u64(seed ^ 0x9E37_79B9_7F4A_7C15);
+        let perm = rng.permutation(self.len());
+        let n_val = self.len() / 10;
+        let (val_idx, train_idx) = perm.split_at(n_val);
+        (self.subset(train_idx), self.subset(val_idx))
+    }
+
+    /// Per-class sample counts (diagnostics, class-balance tests).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            h[l] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let (train, _) = generate(DatasetKind::Usps, &GenOptions { train_n: 200, test_n: 50, seed: 1 });
+        train
+    }
+
+    #[test]
+    fn split_is_nine_to_one_and_disjoint() {
+        let d = tiny();
+        let (tr, va) = d.split_train_val(7);
+        assert_eq!(va.len(), d.len() / 10);
+        assert_eq!(tr.len() + va.len(), d.len());
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = tiny();
+        let (a, _) = d.split_train_val(7);
+        let (b, _) = d.split_train_val(7);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn histogram_sums_to_len() {
+        let d = tiny();
+        assert_eq!(d.class_histogram().iter().sum::<usize>(), d.len());
+    }
+}

@@ -1,0 +1,492 @@
+//! Procedural image-classification generators.
+//!
+//! Each paper dataset is replaced by a generator with the same geometry and
+//! class count whose *difficulty profile* is tuned so the paper's relative
+//! orderings reproduce: USPS (easiest) < MNIST < FashionMNIST for the
+//! grayscale family, and SVHN < CIFAR10 < CIFAR100 for the color family.
+//!
+//! Construction. Every class owns a bank of `protos` prototype images:
+//! * digit-like classes render a fixed per-class arrangement of strokes
+//!   (line segments with a Gaussian brush) — classes differ structurally,
+//!   prototypes within a class differ by stroke jitter;
+//! * texture/object-like classes render a superposition of class-seeded
+//!   low-frequency sinusoid fields plus a class-shaped blob — the color
+//!   datasets add per-channel phase offsets and background clutter.
+//!
+//! A sample = random prototype → random affine warp (translate/rotate/
+//! scale, bilinear) → additive pixel noise → clamp to [0,1]. The affine
+//! jitter and noise scales are the difficulty knobs (table below).
+
+use super::Dataset;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Which paper dataset to mimic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    Usps,
+    Mnist,
+    FashionMnist,
+    Svhn,
+    Cifar10,
+    Cifar100,
+}
+
+impl DatasetKind {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<DatasetKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "usps" => Some(DatasetKind::Usps),
+            "mnist" => Some(DatasetKind::Mnist),
+            "fashionmnist" | "fashion" | "fashion-mnist" => Some(DatasetKind::FashionMnist),
+            "svhn" => Some(DatasetKind::Svhn),
+            "cifar10" | "cifar-10" => Some(DatasetKind::Cifar10),
+            "cifar100" | "cifar-100" => Some(DatasetKind::Cifar100),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Usps => "USPS",
+            DatasetKind::Mnist => "MNIST",
+            DatasetKind::FashionMnist => "FashionMNIST",
+            DatasetKind::Svhn => "SVHN",
+            DatasetKind::Cifar10 => "CIFAR10",
+            DatasetKind::Cifar100 => "CIFAR100",
+        }
+    }
+
+    /// (height, width, channels, classes) matching the real dataset.
+    pub fn geometry(&self) -> (usize, usize, usize, usize) {
+        match self {
+            DatasetKind::Usps => (16, 16, 1, 10),
+            DatasetKind::Mnist => (28, 28, 1, 10),
+            DatasetKind::FashionMnist => (28, 28, 1, 10),
+            DatasetKind::Svhn => (32, 32, 3, 10),
+            DatasetKind::Cifar10 => (32, 32, 3, 10),
+            DatasetKind::Cifar100 => (32, 32, 3, 100),
+        }
+    }
+
+    /// Difficulty profile: (prototypes per class, affine jitter, pixel
+    /// noise std, clutter amplitude). Calibrated in
+    /// `rust/tests/data_calibration.rs` so that a width-128 FF reaches
+    /// high accuracy while narrow nets degrade, mirroring Table 1/2.
+    fn profile(&self) -> Profile {
+        match self {
+            DatasetKind::Usps => Profile { protos: 6, jitter: 0.09, noise: 0.10, clutter: 0.05, strokes: true, proto_var: 0.25 },
+            DatasetKind::Mnist => {
+                Profile { protos: 10, jitter: 0.11, noise: 0.13, clutter: 0.10, strokes: true, proto_var: 0.45 }
+            }
+            DatasetKind::FashionMnist => {
+                Profile { protos: 16, jitter: 0.14, noise: 0.17, clutter: 0.30, strokes: false, proto_var: 0.55 }
+            }
+            DatasetKind::Svhn => {
+                Profile { protos: 16, jitter: 0.13, noise: 0.16, clutter: 0.40, strokes: true, proto_var: 0.6 }
+            }
+            DatasetKind::Cifar10 => {
+                Profile { protos: 32, jitter: 0.18, noise: 0.20, clutter: 0.55, strokes: false, proto_var: 0.8 }
+            }
+            DatasetKind::Cifar100 => {
+                Profile { protos: 24, jitter: 0.18, noise: 0.20, clutter: 0.55, strokes: false, proto_var: 0.75 }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Profile {
+    protos: usize,
+    jitter: f32,
+    noise: f32,
+    clutter: f32,
+    strokes: bool,
+    /// Within-class prototype variability (0 = identical prototypes,
+    /// 1 = prototype features as random as class features) — the main
+    /// difficulty knob separating narrow from wide networks.
+    proto_var: f32,
+}
+
+/// Generation options.
+#[derive(Clone, Copy, Debug)]
+pub struct GenOptions {
+    /// Training-set size (before the 9:1 train/val split).
+    pub train_n: usize,
+    /// Test-set size.
+    pub test_n: usize,
+    /// Master seed: the whole dataset is a pure function of (kind, seed).
+    pub seed: u64,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions { train_n: 8000, test_n: 2000, seed: 0 }
+    }
+}
+
+/// Generate the (train, test) pair for a dataset kind.
+pub fn generate(kind: DatasetKind, opts: &GenOptions) -> (Dataset, Dataset) {
+    let (h, w, c, classes) = kind.geometry();
+    let prof = kind.profile();
+    // Prototype bank is derived from (kind, seed) only — train and test
+    // draw different samples from the same class manifolds.
+    let mut proto_rng = Rng::seed_from_u64(opts.seed.wrapping_mul(0x9E37_79B9).wrapping_add(kind as u64));
+    let bank = PrototypeBank::build(&mut proto_rng, h, w, c, classes, prof);
+
+    let mut train_rng = Rng::seed_from_u64(opts.seed.wrapping_add(1));
+    let train = sample_set(&bank, opts.train_n, &mut train_rng);
+    let mut test_rng = Rng::seed_from_u64(opts.seed.wrapping_add(2));
+    let test = sample_set(&bank, opts.test_n, &mut test_rng);
+    (train, test)
+}
+
+struct PrototypeBank {
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    prof: Profile,
+    /// `classes × protos` images, each `h*w*c` floats.
+    protos: Vec<Vec<f32>>,
+}
+
+impl PrototypeBank {
+    fn build(rng: &mut Rng, h: usize, w: usize, c: usize, classes: usize, prof: Profile) -> Self {
+        let mut protos = Vec::with_capacity(classes * prof.protos);
+        for _class in 0..classes {
+            // Class identity: a per-class RNG; prototypes jitter around it.
+            let class_seed = rng.next_u64();
+            for p in 0..prof.protos {
+                let mut crng = Rng::seed_from_u64(class_seed ^ (p as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+                let img = if prof.strokes {
+                    render_strokes(&mut crng, class_seed, h, w, c, prof)
+                } else {
+                    render_texture(&mut crng, class_seed, h, w, c, prof)
+                };
+                protos.push(img);
+            }
+        }
+        PrototypeBank { h, w, c, classes, prof, protos }
+    }
+
+    fn proto(&self, class: usize, p: usize) -> &[f32] {
+        &self.protos[class * self.prof.protos + p]
+    }
+}
+
+/// Render a digit-like image: class-determined strokes + per-prototype jitter.
+fn render_strokes(rng: &mut Rng, class_seed: u64, h: usize, w: usize, c: usize, prof: Profile) -> Vec<f32> {
+    let mut img = vec![0.0f32; h * w * c];
+    // The stroke *layout* comes from a class-only RNG so that all
+    // prototypes of a class share structure.
+    let mut layout = Rng::seed_from_u64(class_seed);
+    let n_strokes = 3 + layout.below(3); // 3..=5 segments
+    let thickness = 0.09 * w as f32;
+    for _ in 0..n_strokes {
+        // Class-level endpoints, prototype-level jitter.
+        let pv = prof.proto_var * 0.6;
+        let jx = |r: &mut Rng, l: &mut Rng| {
+            (l.uniform_f32() * 0.8 + 0.1 + pv * (r.uniform_f32() - 0.5)) * w as f32
+        };
+        let jy = |r: &mut Rng, l: &mut Rng| {
+            (l.uniform_f32() * 0.8 + 0.1 + pv * (r.uniform_f32() - 0.5)) * h as f32
+        };
+        let (x0, y0) = (jx(rng, &mut layout), jy(rng, &mut layout));
+        let (x1, y1) = (jx(rng, &mut layout), jy(rng, &mut layout));
+        let intensity = 0.75 + 0.25 * rng.uniform_f32();
+        draw_segment(&mut img, h, w, c, x0, y0, x1, y1, thickness, intensity);
+    }
+    if prof.clutter > 0.0 {
+        add_clutter(rng, &mut img, h, w, c, prof.clutter);
+    }
+    img
+}
+
+/// Render a texture/object-like image: class-seeded sinusoid fields + blob.
+fn render_texture(rng: &mut Rng, class_seed: u64, h: usize, w: usize, c: usize, prof: Profile) -> Vec<f32> {
+    let mut img = vec![0.5f32; h * w * c];
+    let mut layout = Rng::seed_from_u64(class_seed ^ 0xDEAD_BEEF);
+    let n_waves = 4;
+    for ch in 0..c {
+        for _ in 0..n_waves {
+            // Class-level frequency/orientation, prototype-level phase.
+            let fx = layout.uniform_range_f32(0.5, 3.0) * std::f32::consts::TAU / w as f32;
+            let fy = layout.uniform_range_f32(0.5, 3.0) * std::f32::consts::TAU / h as f32;
+            let amp = layout.uniform_range_f32(0.08, 0.22);
+            let phase = rng.uniform_range_f32(0.0, std::f32::consts::TAU) * prof.proto_var
+                + layout.uniform_range_f32(0.0, std::f32::consts::TAU);
+            for y in 0..h {
+                for x in 0..w {
+                    img[(y * w + x) * c + ch] += amp * (fx * x as f32 + fy * y as f32 + phase).sin();
+                }
+            }
+        }
+    }
+    // A class-shaped central blob (object silhouette analog).
+    let pv = prof.proto_var;
+    let cx = (0.35 + 0.3 * layout.uniform_f32()) * w as f32
+        + (rng.uniform_f32() - 0.5) * (0.1 + 0.5 * pv) * w as f32;
+    let cy = (0.35 + 0.3 * layout.uniform_f32()) * h as f32
+        + (rng.uniform_f32() - 0.5) * (0.1 + 0.5 * pv) * h as f32;
+    let rx = (0.15 + 0.2 * layout.uniform_f32()) * (1.0 + pv * (rng.uniform_f32() - 0.5)) * w as f32;
+    let ry = (0.15 + 0.2 * layout.uniform_f32()) * (1.0 + pv * (rng.uniform_f32() - 0.5)) * h as f32;
+    // Blob color: class hue blended with per-prototype variation.
+    let blob_col: Vec<f32> = (0..c)
+        .map(|_| {
+            let class_c = layout.uniform_range_f32(0.1, 0.9);
+            let proto_c = rng.uniform_range_f32(0.1, 0.9);
+            class_c * (1.0 - pv) + proto_c * pv
+        })
+        .collect();
+    for y in 0..h {
+        for x in 0..w {
+            let dx = (x as f32 - cx) / rx;
+            let dy = (y as f32 - cy) / ry;
+            let m = (-0.5 * (dx * dx + dy * dy)).exp();
+            for ch in 0..c {
+                let v = &mut img[(y * w + x) * c + ch];
+                *v = *v * (1.0 - 0.8 * m) + blob_col[ch] * 0.8 * m;
+            }
+        }
+    }
+    if prof.clutter > 0.0 {
+        add_clutter(rng, &mut img, h, w, c, prof.clutter);
+    }
+    for v in img.iter_mut() {
+        *v = v.clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Background clutter: a couple of random soft blobs (distractors).
+fn add_clutter(rng: &mut Rng, img: &mut [f32], h: usize, w: usize, c: usize, amp: f32) {
+    let n = 2 + rng.below(3);
+    for _ in 0..n {
+        let cx = rng.uniform_f32() * w as f32;
+        let cy = rng.uniform_f32() * h as f32;
+        let r = (0.05 + 0.1 * rng.uniform_f32()) * w as f32;
+        let a = amp * (rng.uniform_f32() - 0.3);
+        for y in 0..h {
+            for x in 0..w {
+                let dx = (x as f32 - cx) / r;
+                let dy = (y as f32 - cy) / r;
+                let m = (-0.5 * (dx * dx + dy * dy)).exp();
+                for ch in 0..c {
+                    img[(y * w + x) * c + ch] += a * m;
+                }
+            }
+        }
+    }
+}
+
+/// Additive Gaussian brush along a segment.
+#[allow(clippy::too_many_arguments)]
+fn draw_segment(
+    img: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    x0: f32,
+    y0: f32,
+    x1: f32,
+    y1: f32,
+    thickness: f32,
+    intensity: f32,
+) {
+    let steps = (((x1 - x0).abs() + (y1 - y0).abs()) as usize).max(4) * 2;
+    let inv_t2 = 1.0 / (2.0 * thickness * thickness);
+    for s in 0..=steps {
+        let t = s as f32 / steps as f32;
+        let px = x0 + t * (x1 - x0);
+        let py = y0 + t * (y1 - y0);
+        let x_lo = (px - 3.0 * thickness).floor().max(0.0) as usize;
+        let x_hi = ((px + 3.0 * thickness).ceil() as usize).min(w.saturating_sub(1));
+        let y_lo = (py - 3.0 * thickness).floor().max(0.0) as usize;
+        let y_hi = ((py + 3.0 * thickness).ceil() as usize).min(h.saturating_sub(1));
+        for y in y_lo..=y_hi {
+            for x in x_lo..=x_hi {
+                let d2 = (x as f32 - px) * (x as f32 - px) + (y as f32 - py) * (y as f32 - py);
+                let v = intensity * (-d2 * inv_t2).exp() * 0.5;
+                for ch in 0..c {
+                    let p = &mut img[(y * w + x) * c + ch];
+                    *p = (*p + v).min(1.0);
+                }
+            }
+        }
+    }
+}
+
+/// Sample `n` images (balanced classes, shuffled) from a prototype bank.
+fn sample_set(bank: &PrototypeBank, n: usize, rng: &mut Rng) -> Dataset {
+    let dim = bank.h * bank.w * bank.c;
+    let mut images = Matrix::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % bank.classes; // balanced
+        let p = rng.below(bank.prof.protos);
+        let proto = bank.proto(class, p);
+        let row = images.row_mut(i);
+        warp_into(rng, proto, row, bank.h, bank.w, bank.c, bank.prof.jitter);
+        // Pixel noise.
+        for v in row.iter_mut() {
+            *v = (*v + rng.normal_f32(0.0, bank.prof.noise)).clamp(0.0, 1.0);
+        }
+        // Per-image mean centering (standard preprocessing). Without it,
+        // all-positive pixels put every sample on the same side of every
+        // random initial FFF boundary, and the hardening loss freezes that
+        // collapsed routing before prediction gradients can split it.
+        let mean: f32 = row.iter().sum::<f32>() / row.len() as f32;
+        for v in row.iter_mut() {
+            *v -= mean;
+        }
+        labels.push(class);
+    }
+    // Shuffle rows so class order is not systematic.
+    let perm = rng.permutation(n);
+    let images = images.gather_rows(&perm);
+    let labels: Vec<usize> = perm.iter().map(|&i| labels[i]).collect();
+    Dataset {
+        images,
+        labels,
+        height: bank.h,
+        width: bank.w,
+        channels: bank.c,
+        num_classes: bank.classes,
+    }
+}
+
+/// Random small affine warp of `proto` into `out` (bilinear sampling).
+fn warp_into(rng: &mut Rng, proto: &[f32], out: &mut [f32], h: usize, w: usize, c: usize, jitter: f32) {
+    let angle = rng.normal_f32(0.0, jitter * 0.8);
+    let scale = 1.0 + rng.normal_f32(0.0, jitter * 0.5);
+    let tx = rng.normal_f32(0.0, jitter * w as f32 * 0.6);
+    let ty = rng.normal_f32(0.0, jitter * h as f32 * 0.6);
+    let (sin, cos) = angle.sin_cos();
+    let cx = w as f32 / 2.0;
+    let cy = h as f32 / 2.0;
+    let inv_s = 1.0 / scale.max(0.2);
+    for y in 0..h {
+        for x in 0..w {
+            // Inverse map: output pixel -> source coordinates.
+            let dx = x as f32 - cx - tx;
+            let dy = y as f32 - cy - ty;
+            let sx = (cos * dx + sin * dy) * inv_s + cx;
+            let sy = (-sin * dx + cos * dy) * inv_s + cy;
+            for ch in 0..c {
+                out[(y * w + x) * c + ch] = bilinear(proto, h, w, c, sx, sy, ch);
+            }
+        }
+    }
+}
+
+/// Bilinear sample with zero padding outside the image.
+fn bilinear(img: &[f32], h: usize, w: usize, c: usize, x: f32, y: f32, ch: usize) -> f32 {
+    let x0 = x.floor();
+    let y0 = y.floor();
+    let fx = x - x0;
+    let fy = y - y0;
+    let sample = |xi: i64, yi: i64| -> f32 {
+        if xi < 0 || yi < 0 || xi >= w as i64 || yi >= h as i64 {
+            0.0
+        } else {
+            img[(yi as usize * w + xi as usize) * c + ch]
+        }
+    };
+    let (x0, y0) = (x0 as i64, y0 as i64);
+    sample(x0, y0) * (1.0 - fx) * (1.0 - fy)
+        + sample(x0 + 1, y0) * fx * (1.0 - fy)
+        + sample(x0, y0 + 1) * (1.0 - fx) * fy
+        + sample(x0 + 1, y0 + 1) * fx * fy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_real_datasets() {
+        assert_eq!(DatasetKind::Usps.geometry(), (16, 16, 1, 10));
+        assert_eq!(DatasetKind::Mnist.geometry(), (28, 28, 1, 10));
+        assert_eq!(DatasetKind::Cifar100.geometry(), (32, 32, 3, 100));
+    }
+
+    #[test]
+    fn generate_shapes_and_ranges() {
+        let (train, test) = generate(DatasetKind::Usps, &GenOptions { train_n: 100, test_n: 40, seed: 3 });
+        assert_eq!(train.len(), 100);
+        assert_eq!(test.len(), 40);
+        assert_eq!(train.dim(), 256);
+        // Centered pixels: bounded and zero-mean per image.
+        assert!(train.images.as_slice().iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        for r in 0..train.len() {
+            let m: f32 = train.images.row(r).iter().sum::<f32>() / 256.0;
+            assert!(m.abs() < 1e-4, "row {r} mean {m}");
+        }
+        assert!(train.labels.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let o = GenOptions { train_n: 50, test_n: 10, seed: 11 };
+        let (a, _) = generate(DatasetKind::Mnist, &o);
+        let (b, _) = generate(DatasetKind::Mnist, &o);
+        assert_eq!(a.images.as_slice(), b.images.as_slice());
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (a, _) = generate(DatasetKind::Mnist, &GenOptions { train_n: 50, test_n: 10, seed: 1 });
+        let (b, _) = generate(DatasetKind::Mnist, &GenOptions { train_n: 50, test_n: 10, seed: 2 });
+        assert_ne!(a.images.as_slice(), b.images.as_slice());
+    }
+
+    #[test]
+    fn classes_are_balanced() {
+        let (train, _) = generate(DatasetKind::Cifar10, &GenOptions { train_n: 500, test_n: 10, seed: 5 });
+        let hist = train.class_histogram();
+        assert!(hist.iter().all(|&c| c == 50), "{hist:?}");
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean intra-class distance should be well below inter-class.
+        let (train, _) = generate(DatasetKind::Usps, &GenOptions { train_n: 400, test_n: 10, seed: 9 });
+        let mut intra = 0.0f64;
+        let mut inter = 0.0f64;
+        let mut n_intra = 0;
+        let mut n_inter = 0;
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let d: f32 = train
+                    .images
+                    .row(i)
+                    .iter()
+                    .zip(train.images.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if train.labels[i] == train.labels[j] {
+                    intra += d as f64;
+                    n_intra += 1;
+                } else {
+                    inter += d as f64;
+                    n_inter += 1;
+                }
+            }
+        }
+        let intra = intra / n_intra.max(1) as f64;
+        let inter = inter / n_inter.max(1) as f64;
+        assert!(intra < inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn cifar100_has_100_classes() {
+        let (train, _) = generate(DatasetKind::Cifar100, &GenOptions { train_n: 1000, test_n: 10, seed: 1 });
+        assert_eq!(train.num_classes, 100);
+        let mut seen: Vec<usize> = train.labels.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 100);
+    }
+}

@@ -1,0 +1,143 @@
+//! Shared experiment machinery: multi-seed runs, best/mean/std reporting,
+//! and the paper's inference-speedup measurement.
+
+use crate::bench::{summarize, time_budgeted, Stats};
+use crate::config::TrainConfig;
+use crate::nn::{Ff, Fff, FffConfig};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+use crate::train::{run_training, Outcome};
+use std::time::Duration;
+
+/// Aggregated result of `seeds` independent runs of one configuration.
+#[derive(Clone, Debug)]
+pub struct MultiSeed {
+    pub best_ma: f32,
+    pub best_ga: f32,
+    pub ma: Stats,
+    pub ga: Stats,
+    pub ett_ma: Stats,
+    pub ett_ga: Stats,
+    pub outcomes: Vec<Outcome>,
+}
+
+/// Run a config across seeds (the paper reports the best of 10 runs in
+/// the main tables and mean±std in the appendix — we compute both).
+pub fn run_seeds(base: &TrainConfig, seeds: usize) -> MultiSeed {
+    let mut outcomes = Vec::with_capacity(seeds);
+    for s in 0..seeds {
+        let mut cfg = base.clone();
+        cfg.seed = s as u64;
+        outcomes.push(run_training(&cfg));
+    }
+    let mas: Vec<f64> = outcomes.iter().map(|o| o.memorization_accuracy as f64).collect();
+    let gas: Vec<f64> = outcomes.iter().map(|o| o.generalization_accuracy as f64).collect();
+    let ett_ma: Vec<f64> = outcomes.iter().map(|o| o.ett_memorization as f64).collect();
+    let ett_ga: Vec<f64> = outcomes.iter().map(|o| o.ett_generalization as f64).collect();
+    MultiSeed {
+        best_ma: mas.iter().cloned().fold(f64::MIN, f64::max) as f32,
+        best_ga: gas.iter().cloned().fold(f64::MIN, f64::max) as f32,
+        ma: summarize(&mas),
+        ga: summarize(&gas),
+        ett_ma: summarize(&ett_ma),
+        ett_ga: summarize(&ett_ga),
+        outcomes,
+    }
+}
+
+/// Mean inference time per forward pass of a randomly-initialized FF of
+/// width `w` at the given dims/batch (timing only — weights irrelevant).
+pub fn time_ff_infer(dim_in: usize, dim_out: usize, width: usize, batch: usize) -> Duration {
+    let mut rng = Rng::seed_from_u64(1);
+    let ff = Ff::new(&mut rng, dim_in, width, dim_out);
+    let inf = ff.compile_infer();
+    let x = rand_batch(&mut rng, batch, dim_in);
+    time_budgeted(Duration::from_millis(300), 5, 10_000, || {
+        std::hint::black_box(inf.infer_batch(&x));
+    })
+    .mean
+}
+
+/// Mean inference time per forward pass of a random FFF (FORWARD_I).
+pub fn time_fff_infer(
+    dim_in: usize,
+    dim_out: usize,
+    depth: usize,
+    leaf: usize,
+    batch: usize,
+    max_alloc: usize,
+) -> Duration {
+    let mut rng = Rng::seed_from_u64(2);
+    let inf = crate::nn::FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, max_alloc);
+    let x = rand_batch(&mut rng, batch, dim_in);
+    time_budgeted(Duration::from_millis(300), 5, 10_000, || {
+        std::hint::black_box(inf.infer_batch(&x));
+    })
+    .mean
+}
+
+/// The paper's "speedup": t_FF(same training width) / t_FFF.
+pub fn speedup(dim_in: usize, dim_out: usize, depth: usize, leaf: usize, batch: usize) -> f64 {
+    let w = leaf << depth;
+    let t_ff = time_ff_infer(dim_in, dim_out, w, batch);
+    let t_fff = time_fff_infer(dim_in, dim_out, depth, leaf, batch, usize::MAX);
+    t_ff.as_secs_f64() / t_fff.as_secs_f64()
+}
+
+pub fn rand_batch(rng: &mut Rng, batch: usize, dim: usize) -> Matrix {
+    let mut x = Matrix::zeros(batch, dim);
+    rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+    x
+}
+
+/// Flat mean of an entropy report.
+pub fn mean_entropy(groups: &[Vec<f32>]) -> f32 {
+    let flat: Vec<f32> = groups.iter().flatten().copied().collect();
+    if flat.is_empty() {
+        0.0
+    } else {
+        flat.iter().sum::<f32>() / flat.len() as f32
+    }
+}
+
+/// Build a trained FFF directly (for experiments needing model access,
+/// e.g. region histograms or layer timing).
+pub fn train_fff(cfg: &TrainConfig) -> (Fff, Outcome) {
+    let trainer = crate::train::Trainer::from_config(cfg);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut fc = FffConfig::new(trainer.train.dim(), trainer.train.num_classes, cfg.fff_depth(), cfg.leaf);
+    fc.hardening = cfg.hardening;
+    fc.transposition_p = cfg.transposition_p;
+    let mut fff = Fff::new(&mut rng, fc);
+    let out = trainer.run(&mut fff);
+    (fff, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::data::DatasetKind;
+
+    #[test]
+    fn run_seeds_aggregates() {
+        let mut cfg = TrainConfig::table1(DatasetKind::Usps, ModelKind::Ff, 16, 8, 0);
+        cfg.train_n = 300;
+        cfg.test_n = 100;
+        cfg.max_epochs = 5;
+        cfg.patience = 3;
+        let ms = run_seeds(&cfg, 2);
+        assert_eq!(ms.outcomes.len(), 2);
+        assert!(ms.best_ma >= ms.ma.mean as f32 - 1e-5);
+        assert!(ms.best_ga >= ms.ga.mean as f32 - 1e-5);
+    }
+
+    #[test]
+    fn speedup_is_positive_and_grows_with_width() {
+        let s_small = speedup(128, 10, 1, 8, 32);
+        let s_large = speedup(128, 10, 5, 8, 32);
+        assert!(s_small > 0.0 && s_large > 0.0);
+        // Wider training width → larger FF cost → larger speedup.
+        assert!(s_large > s_small, "speedup should grow: {s_small} vs {s_large}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Figure 2: evaluation with **inference-size** counterparts on
+//! SVHN/CIFAR10/CIFAR100 — FFFs of depths d and leaf sizes ℓ versus FFs
+//! whose width equals the FFF's inference size ℓ + d. Hardening is off
+//! (h = 0): the paper found it occurs on its own here.
+
+use super::common::run_seeds;
+use crate::bench::{write_csv, Scale, Series};
+use crate::config::{ModelKind, TrainConfig};
+use crate::data::DatasetKind;
+
+pub fn run(scale: Scale) {
+    let seeds = scale.pick(1, 10);
+    let depths: Vec<usize> = scale.pick(vec![2, 4], vec![2, 3, 4, 5, 6]);
+    let leaves: Vec<usize> = scale.pick(vec![2, 8, 32], vec![2, 4, 6, 8, 16, 32]);
+    let datasets = scale.pick(
+        vec![DatasetKind::Svhn, DatasetKind::Cifar10],
+        vec![DatasetKind::Svhn, DatasetKind::Cifar10, DatasetKind::Cifar100],
+    );
+    let (train_n, test_n) = scale.pick((1500, 400), (8000, 2000));
+    let (max_epochs, patience) = scale.pick((14, 6), (150, 25));
+
+    let mut csv_rows = Vec::new();
+    for dataset in datasets {
+        let mut series = Vec::new();
+        for &d in &depths {
+            let mut s_ma = Series::new(&format!("FFF d={d} M_A"));
+            let mut s_ga = Series::new(&format!("FFF d={d} G_A"));
+            for &leaf in &leaves {
+                let mut cfg = TrainConfig::fig2(dataset, ModelKind::Fff, leaf, d, 0);
+                cfg.train_n = train_n;
+                cfg.test_n = test_n;
+                cfg.max_epochs = max_epochs;
+                cfg.patience = patience;
+                let r = run_seeds(&cfg, seeds);
+                let isize = leaf + d;
+                s_ma.push(isize as f64, r.best_ma as f64 * 100.0, r.ma.std * 100.0);
+                s_ga.push(isize as f64, r.best_ga as f64 * 100.0, r.ga.std * 100.0);
+                csv_rows.push(format!(
+                    "{},fff,{d},{leaf},{isize},{:.4},{:.4}",
+                    dataset.name(),
+                    r.best_ma,
+                    r.best_ga
+                ));
+            }
+            series.push(s_ma);
+            series.push(s_ga);
+        }
+        // FF baselines at matching inference sizes (d = 0 series).
+        let mut f_ma = Series::new("FF (d=0) M_A");
+        let mut f_ga = Series::new("FF (d=0) G_A");
+        let ff_widths: Vec<usize> = leaves
+            .iter()
+            .flat_map(|&l| depths.iter().map(move |&d| l + d))
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        for &w in &ff_widths {
+            let mut cfg = TrainConfig::table1(dataset, ModelKind::Ff, w, 1, 0);
+            cfg.hardening = 0.0;
+            cfg.train_n = train_n;
+            cfg.test_n = test_n;
+            cfg.max_epochs = max_epochs;
+            cfg.patience = patience;
+            let r = run_seeds(&cfg, seeds);
+            f_ma.push(w as f64, r.best_ma as f64 * 100.0, r.ma.std * 100.0);
+            f_ga.push(w as f64, r.best_ga as f64 * 100.0, r.ga.std * 100.0);
+            csv_rows.push(format!("{},ff,0,,{w},{:.4},{:.4}", dataset.name(), r.best_ma, r.best_ga));
+        }
+        series.push(f_ma);
+        series.push(f_ga);
+        println!(
+            "{}",
+            Series::render_group(
+                &format!("Figure 2 — {} (x = inference size in neurons, y = accuracy %)", dataset.name()),
+                &series
+            )
+        );
+    }
+    let path = write_csv("fig2", "dataset,model,depth,leaf,inference_size,best_ma,best_ga", &csv_rows)
+        .expect("csv");
+    println!("csv: {}", path.display());
+    println!("paper shape: at equal inference size, FFF M_A/G_A sit above the FF");
+    println!("curve, with the M_A gap growing in depth and leaf size.");
+}

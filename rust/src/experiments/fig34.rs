@@ -1,0 +1,105 @@
+//! Figures 3–4: inference-speed comparison of the *mechanisms* — FF
+//! width-w GEMM vs MoE `O(E·dim)` gating vs FFF `O(d·dim)` descent — in
+//! BERT-base conditions (768 in / 768 out), batch 256, expert/leaf width
+//! 32, `k = 1`, `e = ℓ` (the paper's configuration that isolates the
+//! lookup cost from the mixture cost).
+//!
+//! Figure 3 = all three families; Figure 4 = MoE vs FFF close-up. The
+//! claim under test: MoE inference time grows **linearly in the number of
+//! experts** (exponential in the exponent), FFF **linearly in the depth**
+//! (logarithmic in the leaf count).
+
+use super::common::{time_ff_infer, time_fff_infer};
+use crate::bench::{time_budgeted, write_csv, Scale, Series};
+use crate::nn::MoeInfer;
+use crate::rng::Rng;
+use std::time::Duration;
+
+const DIM: usize = 768;
+const BLOCK: usize = 32;
+const BATCH: usize = 256;
+
+/// Allocation cap: beyond this many experts/leaves, storage is aliased
+/// (index % alloc) while gating/routing work stays exact — see
+/// DESIGN.md §3. 2^13 blocks ≈ 1.6 GB; the access pattern is already
+/// DRAM-resident far below the cap.
+const MAX_ALLOC: usize = 1 << 13;
+
+pub fn run(scale: Scale) {
+    let ff_exponents: Vec<u32> = (1..=5).collect();
+    let max_exp = scale.pick(10u32, 15u32);
+
+    let mut ff_series = Series::new("FF (width 32*2^k)");
+    let mut moe_series = Series::new("MoE (e=32, k=1)");
+    let mut fff_series = Series::new("FFF (l=32)");
+    let mut csv_rows = Vec::new();
+
+    for &e in &ff_exponents {
+        let w = BLOCK << e;
+        let t = time_ff_infer(DIM, DIM, w, BATCH);
+        println!("FF     width {w:>6}: {:>10.3} ms/pass", t.as_secs_f64() * 1e3);
+        ff_series.push((1u64 << e) as f64, t.as_secs_f64() * 1e3, 0.0);
+        csv_rows.push(format!("ff,{e},{w},{:.6}", t.as_secs_f64() * 1e3));
+    }
+    for e in 1..=max_exp {
+        let experts = 1usize << e;
+        let t = time_moe_infer(experts);
+        println!("MoE  experts {experts:>6}: {:>10.3} ms/pass", t.as_secs_f64() * 1e3);
+        moe_series.push(experts as f64, t.as_secs_f64() * 1e3, 0.0);
+        csv_rows.push(format!("moe,{e},{experts},{:.6}", t.as_secs_f64() * 1e3));
+    }
+    for d in 1..=max_exp as usize {
+        let t = time_fff_infer(DIM, DIM, d, BLOCK, BATCH, MAX_ALLOC);
+        println!("FFF    depth {d:>6}: {:>10.3} ms/pass  ({} leaves)", t.as_secs_f64() * 1e3, 1u64 << d);
+        fff_series.push((1u64 << d) as f64, t.as_secs_f64() * 1e3, 0.0);
+        csv_rows.push(format!("fff,{d},{},{:.6}", 1u64 << d, t.as_secs_f64() * 1e3));
+    }
+
+    println!(
+        "{}",
+        Series::render_group(
+            "Figure 3 — inference time vs #blocks (x = blocks/experts/leaves, y = ms)",
+            &[ff_series, moe_series.clone(), fff_series.clone()]
+        )
+    );
+    println!(
+        "{}",
+        Series::render_group("Figure 4 — close-up: MoE vs FFF", &[moe_series.clone(), fff_series.clone()])
+    );
+
+    // The quantitative claim: fit growth rates.
+    let moe_ratio = growth_per_doubling(&moe_series);
+    let fff_ratio = growth_per_doubling(&fff_series);
+    println!("time growth per doubling of blocks: MoE x{moe_ratio:.2}, FFF x{fff_ratio:.2}");
+    println!("paper shape: MoE ~x2 per doubling (linear in E); FFF ~x1 (+const per level).");
+
+    let path = write_csv("fig34", "model,exponent,blocks,ms_per_pass", &csv_rows).expect("csv");
+    println!("csv: {}", path.display());
+}
+
+/// Mean time per forward pass of a noiseless top-1 MoE at BERT dims.
+fn time_moe_infer(experts: usize) -> Duration {
+    let mut rng = Rng::seed_from_u64(3);
+    let inf = MoeInfer::random(&mut rng, DIM, DIM, experts, BLOCK, MAX_ALLOC);
+    let x = super::common::rand_batch(&mut rng, BATCH, DIM);
+    time_budgeted(Duration::from_millis(300), 5, 10_000, || {
+        std::hint::black_box(inf.infer_batch(&x));
+    })
+    .mean
+}
+
+/// Geometric-mean growth factor per doubling across a series' tail.
+fn growth_per_doubling(s: &Series) -> f64 {
+    let pts = &s.points;
+    if pts.len() < 3 {
+        return f64::NAN;
+    }
+    // Use the latter half where the variable cost dominates constants.
+    let from = pts.len() / 2;
+    let mut ratios = Vec::new();
+    for i in from.max(1)..pts.len() {
+        ratios.push(pts[i].1 / pts[i - 1].1);
+    }
+    let log_mean: f64 = ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64;
+    log_mean.exp()
+}

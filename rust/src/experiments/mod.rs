@@ -1,0 +1,16 @@
+//! Paper-experiment regeneration: one module per table/figure in the
+//! evaluation section (see DESIGN.md §5 for the index). Every module
+//! exposes `run(scale)` and prints the same row/series structure the
+//! paper reports, plus a CSV artifact under `target/bench-results/`.
+//!
+//! `Scale::Smoke` (default) is a minutes-scale grid; `FFF_SCALE=paper`
+//! selects the full grid.
+
+pub mod common;
+pub mod fig2;
+pub mod fig34;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+pub mod table3;

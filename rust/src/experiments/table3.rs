@@ -1,0 +1,154 @@
+//! Table 3: fast feedforward layers as building blocks — 4-layer vision
+//! transformers (dim 128, patch 4, input dropout 0.1) on augmented
+//! CIFAR10, with FF (w=128) vs FFF (training width 128, ℓ = 32…1) blocks.
+//! Reported per configuration: the paper's size accounting, the measured
+//! speedup *at the feedforward layers*, and G_A of the best hardening
+//! level (h ∈ {5, 10, ∞}).
+
+use super::common::rand_batch;
+use crate::bench::{time_budgeted, write_csv, Scale, Table};
+use crate::data::{generate, Augment, BatchIter, DatasetKind, GenOptions};
+use crate::nn::vit::{MlpKind, Vit, VitConfig};
+use crate::nn::{loss::cross_entropy, Adam, FffConfig, Model, Optimizer};
+use crate::rng::Rng;
+use std::time::Duration;
+
+pub fn run(scale: Scale) {
+    let leaves: Vec<usize> = scale.pick(vec![32, 1], vec![32, 16, 8, 4, 2, 1]);
+    let hardenings: Vec<f32> = scale.pick(vec![10.0], vec![5.0, 10.0, f32::INFINITY]);
+    let (train_n, test_n) = scale.pick((1000, 300), (8000, 2000));
+    let epochs = scale.pick(3, 60);
+    let batch = scale.pick(64, 128);
+
+    let mut table = Table::new(
+        "Table 3 — ViT on augmented CIFAR10 (FFF training width 128)",
+        &["model", "depth", "train width", "train size", "inf width", "inf size", "speedup", "G_A"],
+    );
+    let mut csv_rows = Vec::new();
+
+    // Baseline: FF w=128.
+    let ga_ff = train_vit(MlpKind::Ff { width: 128 }, train_n, test_n, epochs, batch, 0);
+    table.row(vec![
+        "FF w=128".into(),
+        "-".into(),
+        "128".into(),
+        "128 (100%)".into(),
+        "128 (100%)".into(),
+        "128 (100%)".into(),
+        "1.00x".into(),
+        format!("{:.1}", ga_ff * 100.0),
+    ]);
+    csv_rows.push(format!("ff,0,128,128,128,128,1.0,{ga_ff:.4}"));
+
+    for &leaf in &leaves {
+        let depth = (128usize / leaf).trailing_zeros() as usize;
+        let cfg = FffConfig::new(128, 128, depth, leaf);
+        let (tw, ts, iw, is) =
+            (cfg.training_width(), cfg.training_size(), cfg.inference_width(), cfg.inference_size());
+        // Best G_A over hardening levels (the paper reports the best model).
+        let mut best_ga = 0.0f32;
+        for &h in &hardenings {
+            let ga = train_vit(MlpKind::Fff { depth, leaf, hardening: h }, train_n, test_n, epochs, batch, 1);
+            best_ga = best_ga.max(ga);
+        }
+        let sp = layer_speedup(depth, leaf, batch);
+        table.row(vec![
+            format!("FFF l={leaf}"),
+            depth.to_string(),
+            tw.to_string(),
+            format!("{ts} ({}%)", ts * 100 / 128),
+            format!("{iw} ({}%)", (iw * 100).div_ceil(128)),
+            format!("{is} ({}%)", (is * 100).div_ceil(128)),
+            format!("{sp:.2}x"),
+            format!("{:.1}", best_ga * 100.0),
+        ]);
+        csv_rows.push(format!("fff,{depth},{tw},{ts},{iw},{is},{sp:.3},{best_ga:.4}"));
+    }
+    table.print();
+    let path = write_csv(
+        "table3",
+        "model,depth,train_width,train_size,inf_width,inf_size,layer_speedup,ga",
+        &csv_rows,
+    )
+    .expect("csv");
+    println!("csv: {}", path.display());
+    println!("paper shape: G_A declines only mildly as leaves shrink (single-neuron");
+    println!("leaves cost ~5.8% relative); layer speedup rises as leaf size falls.");
+}
+
+/// Train one ViT configuration; returns test G_A (best-val snapshot).
+fn train_vit(
+    mlp: MlpKind,
+    train_n: usize,
+    test_n: usize,
+    epochs: usize,
+    batch: usize,
+    seed: u64,
+) -> f32 {
+    let (full_train, test) =
+        generate(DatasetKind::Cifar10, &GenOptions { train_n, test_n, seed });
+    let (train, val) = full_train.split_train_val(seed);
+    let augment = Augment::default();
+    let mut rng = Rng::seed_from_u64(seed ^ 0x7177);
+    let mut vit = Vit::new(&mut rng, VitConfig::table3(mlp));
+    let mut opt = Adam::new(4e-4);
+    let mut best_val = 0.0f32;
+    let mut best_snap: Option<Vec<f32>> = None;
+    let mut plateau = 0usize;
+    for _epoch in 0..epochs {
+        for (mut x, labels) in BatchIter::shuffled(&train, batch, &mut rng) {
+            augment.apply_batch(&mut x, train.height, train.width, train.channels, &mut rng);
+            let logits = vit.forward_train(&x, &mut rng);
+            let (_, dl) = cross_entropy(&logits, &labels);
+            vit.zero_grad();
+            vit.backward(&dl);
+            opt.step(&mut vit);
+        }
+        let val_acc = eval(&mut vit, &val, batch);
+        if val_acc > best_val {
+            best_val = val_acc;
+            best_snap = Some(vit.snapshot());
+            plateau = 0;
+        } else {
+            plateau += 1;
+            // Paper: LR halving on 50-epoch validation plateaus (scaled here).
+            if plateau >= 50.min(epochs / 2 + 1) {
+                opt.set_lr(opt.lr() / 2.0);
+                plateau = 0;
+            }
+        }
+    }
+    if let Some(s) = best_snap {
+        vit.restore(&s);
+    }
+    eval(&mut vit, &test, batch)
+}
+
+fn eval(vit: &mut Vit, data: &crate::data::Dataset, batch: usize) -> f32 {
+    let mut hits = 0;
+    for (x, labels) in BatchIter::sequential(data, batch) {
+        let logits = vit.forward_infer(&x);
+        let pred = crate::tensor::argmax_rows(&logits);
+        hits += pred.iter().zip(&labels).filter(|(p, l)| p == l).count();
+    }
+    hits as f32 / data.len().max(1) as f32
+}
+
+/// Speedup at the feedforward layer itself: FF(128) vs compiled FFF
+/// inference on a token-shaped batch (batch·seq rows of dim 128).
+fn layer_speedup(depth: usize, leaf: usize, batch: usize) -> f64 {
+    let rows = batch * 65; // tokens per image + CLS
+    let mut rng = Rng::seed_from_u64(5);
+    let ff = crate::nn::Ff::new(&mut rng, 128, 128, 128).compile_infer();
+    let fff = crate::nn::FffInfer::random(&mut rng, 128, 128, depth, leaf, usize::MAX);
+    let x = rand_batch(&mut rng, rows, 128);
+    let t_ff = time_budgeted(Duration::from_millis(200), 5, 1000, || {
+        std::hint::black_box(ff.infer_batch(&x));
+    })
+    .mean;
+    let t_fff = time_budgeted(Duration::from_millis(200), 5, 1000, || {
+        std::hint::black_box(fff.infer_batch(&x));
+    })
+    .mean;
+    t_ff.as_secs_f64() / t_fff.as_secs_f64()
+}

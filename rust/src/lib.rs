@@ -1,0 +1,41 @@
+//! # fastfeedforward
+//!
+//! A production-grade reproduction of **"Fast Feedforward Networks"**
+//! (Belcak & Wattenhofer, 2023): feedforward layers whose neurons are the
+//! leaves of a differentiable binary tree, giving `O(log w)` inference in
+//! the training width `w`.
+//!
+//! The library is a three-layer stack (see `DESIGN.md`):
+//!
+//! * **L1 — Pallas kernels** and **L2 — JAX models** live in `python/` and
+//!   run only at *build* time; `make artifacts` lowers them to HLO text.
+//! * **L3 — this crate**: the [`runtime`] loads the artifacts through the
+//!   PJRT C API and the [`coordinator`] serves batched inference; [`nn`]
+//!   is the natively-implemented model zoo (FFF + the paper's FF and
+//!   noisy-top-k MoE baselines) used by the experiment sweeps, and
+//!   [`experiments`] regenerates every table and figure in the paper.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fastfeedforward::config::{ModelKind, TrainConfig};
+//! use fastfeedforward::data::DatasetKind;
+//! use fastfeedforward::train::run_training;
+//!
+//! let cfg = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Fff, 64, 8, /*seed=*/ 0);
+//! let outcome = run_training(&cfg);
+//! println!("G_A = {:.1}%", outcome.generalization_accuracy * 100.0);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod train;

@@ -1,0 +1,188 @@
+//! `fff` — the fastfeedforward launcher.
+//!
+//! ```text
+//! fff train  --dataset mnist --model fff --width 64 --leaf 8 [--seed 0]
+//! fff serve  --artifact fff_mnist_infer_b16 [--requests 1000] [--tcp 127.0.0.1:7878]
+//! fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6> [--scale paper]
+//! fff info                      # artifact manifest summary
+//! ```
+
+use fastfeedforward::bench::Scale;
+use fastfeedforward::cli::Args;
+use fastfeedforward::config::{ModelKind, TrainConfig};
+use fastfeedforward::data::DatasetKind;
+use fastfeedforward::experiments;
+use fastfeedforward::train::run_training;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("reproduce") => cmd_reproduce(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: fff <train|serve|reproduce|info> [options]");
+            eprintln!("  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8");
+            eprintln!("  serve      --artifact fff_mnist_infer_b16 --requests 1000");
+            eprintln!("  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6  (FFF_SCALE=paper for full grid)");
+            eprintln!("  info");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let dataset = DatasetKind::parse(args.get("dataset").unwrap_or("mnist"))
+        .expect("unknown --dataset (usps|mnist|fashion|svhn|cifar10|cifar100)");
+    let model = ModelKind::parse(args.get("model").unwrap_or("fff"))
+        .expect("unknown --model (ff|fff|moe)");
+    let width: usize = args.get_or("width", 64);
+    let leaf: usize = args.get_or("leaf", 8);
+    let seed: u64 = args.get_or("seed", 0);
+    let mut cfg = TrainConfig::table1(dataset, model, width, leaf, seed);
+    cfg.train_n = args.get_or("train-n", 8000);
+    cfg.test_n = args.get_or("test-n", 2000);
+    cfg.max_epochs = args.get_or("epochs", 100);
+    cfg.patience = args.get_or("patience", 20);
+    cfg.hardening = args.get_or("hardening", cfg.hardening);
+    cfg.lr = args.get_or("lr", cfg.lr);
+    println!(
+        "training {} on {} (width {}, leaf {}, seed {seed})",
+        model.name(),
+        dataset.name(),
+        width,
+        leaf
+    );
+    if let Some(path) = args.get("save") {
+        // Train with model access so the checkpoint can be written.
+        let trainer = fastfeedforward::train::Trainer::from_config(&cfg);
+        let mut rng = fastfeedforward::rng::Rng::seed_from_u64(cfg.seed);
+        let mut m = fastfeedforward::train::build_model(
+            &cfg,
+            trainer.train.dim(),
+            trainer.train.num_classes,
+            &mut rng,
+        );
+        let out = trainer.run(m.as_mut());
+        fastfeedforward::nn::checkpoint::save(m.as_mut(), std::path::Path::new(path))
+            .expect("write checkpoint");
+        println!(
+            "M_A {:.2}%  G_A {:.2}%  (epochs {}); checkpoint: {path}",
+            out.memorization_accuracy * 100.0,
+            out.generalization_accuracy * 100.0,
+            out.epochs_run
+        );
+        return;
+    }
+    let out = run_training(&cfg);
+    println!(
+        "M_A {:.2}%  (ETT {})\nG_A {:.2}%  (ETT {})\nepochs run: {}",
+        out.memorization_accuracy * 100.0,
+        out.ett_memorization,
+        out.generalization_accuracy * 100.0,
+        out.ett_generalization,
+        out.epochs_run
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    use fastfeedforward::coordinator::{
+        BatcherConfig, Coordinator, CoordinatorConfig, HloBackend,
+    };
+    use std::time::Duration;
+    let artifact = args.get("artifact").unwrap_or("fff_mnist_infer_b16").to_string();
+    let requests: usize = args.get_or("requests", 1000);
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: args.get_or("max-batch", 16),
+            max_delay: Duration::from_micros(args.get_or("max-delay-us", 2000)),
+        },
+        workers: args.get_or("workers", 1),
+        queue_capacity: args.get_or("queue", 4096),
+    };
+    println!("serving artifact {artifact} ({} workers)", cfg.workers);
+    let coord = Coordinator::start(cfg, HloBackend::factory("artifacts".into(), artifact));
+    if let Some(addr) = args.get("tcp") {
+        // Network mode: expose the coordinator over TCP until Ctrl-C.
+        let coord = std::sync::Arc::new(coord);
+        let server = fastfeedforward::coordinator::TcpServer::start(coord.clone(), addr)
+            .expect("bind TCP listener");
+        println!("listening on {} (length-prefixed f32 protocol; Ctrl-C to stop)", server.addr());
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            println!("{}", coord.metrics());
+        }
+    }
+    let dim = coord.dim_in();
+    let mut rng = fastfeedforward::rng::Rng::seed_from_u64(0);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for _ in 0..requests {
+        let x: Vec<f32> = (0..dim).map(|_| rng.uniform_f32() - 0.5).collect();
+        if let Ok(rx) = coord.submit(x) {
+            rxs.push(rx);
+        }
+        if rxs.len() >= 256 {
+            for rx in rxs.drain(..) {
+                let _ = rx.recv();
+            }
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed();
+    println!("{}", coord.metrics());
+    println!("throughput {:.0} req/s", requests as f64 / wall.as_secs_f64());
+    coord.shutdown();
+}
+
+fn cmd_reproduce(args: &Args) {
+    let scale = Scale::from_env();
+    let which = args.positional.first().map(|s| s.as_str());
+    match which {
+        Some("table1") => experiments::table1::run(scale),
+        Some("table2") => experiments::table2::run(scale),
+        Some("table3") => experiments::table3::run(scale),
+        Some("fig2") => experiments::fig2::run(scale),
+        Some("fig34") => experiments::fig34::run(scale),
+        Some("fig5") => experiments::fig5::run(scale),
+        Some("fig6") => experiments::fig6::run(scale),
+        Some("all") => {
+            experiments::table1::run(scale);
+            experiments::fig2::run(scale);
+            experiments::table2::run(scale);
+            experiments::fig34::run(scale);
+            experiments::table3::run(scale);
+            experiments::fig5::run(scale);
+            experiments::fig6::run(scale);
+        }
+        _ => {
+            eprintln!("usage: fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6|all>");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info() {
+    match fastfeedforward::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => {
+            println!("{} artifacts:", m.artifacts.len());
+            for a in &m.artifacts {
+                println!(
+                    "  {:<24} {} inputs, {} outputs{}{}",
+                    a.name,
+                    a.inputs.len(),
+                    a.outputs.len(),
+                    if a.params_file.is_some() { ", params" } else { "" },
+                    if a.notes.is_empty() { String::new() } else { format!(" — {}", a.notes) }
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("no artifacts ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Model checkpointing: save/restore any [`Model`]'s parameters to a
+//! simple self-describing binary format (magic + version + per-tensor
+//! lengths + payload + checksum). Used by the launcher to hand trained
+//! weights to the serving coordinator.
+
+use super::Model;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"FFFCKPT1";
+
+/// Serialize a model's parameters (visit order) to `path`.
+pub fn save(model: &mut dyn Model, path: &Path) -> Result<()> {
+    let mut lens: Vec<u64> = Vec::new();
+    let mut payload: Vec<f32> = Vec::new();
+    model.visit_params(&mut |p, _g| {
+        lens.push(p.len() as u64);
+        payload.extend_from_slice(p);
+    });
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(lens.len() as u64).to_le_bytes())?;
+    for l in &lens {
+        f.write_all(&l.to_le_bytes())?;
+    }
+    let mut checksum = 0u64;
+    for v in &payload {
+        let bits = v.to_bits() as u64;
+        checksum = checksum.wrapping_mul(0x100000001B3).wrapping_add(bits);
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.write_all(&checksum.to_le_bytes())?;
+    Ok(())
+}
+
+/// Restore parameters saved by [`save`] into a structurally identical
+/// model. Fails loudly on shape or checksum mismatch.
+pub fn load(model: &mut dyn Model, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a fastfeedforward checkpoint");
+    }
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u64buf)?;
+    let n_tensors = u64::from_le_bytes(u64buf) as usize;
+    let mut lens = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        f.read_exact(&mut u64buf)?;
+        lens.push(u64::from_le_bytes(u64buf) as usize);
+    }
+    let total: usize = lens.iter().sum();
+    let mut payload = vec![0f32; total];
+    let mut checksum = 0u64;
+    let mut f32buf = [0u8; 4];
+    for v in payload.iter_mut() {
+        f.read_exact(&mut f32buf)?;
+        *v = f32::from_le_bytes(f32buf);
+        checksum = checksum.wrapping_mul(0x100000001B3).wrapping_add(v.to_bits() as u64);
+    }
+    f.read_exact(&mut u64buf)?;
+    if u64::from_le_bytes(u64buf) != checksum {
+        bail!("{path:?}: checksum mismatch (corrupt checkpoint)");
+    }
+    // Validate structure before touching the model.
+    let mut expect: Vec<usize> = Vec::new();
+    model.visit_params(&mut |p, _g| expect.push(p.len()));
+    if expect != lens {
+        bail!(
+            "{path:?}: checkpoint structure mismatch (file has {} tensors {:?}..., model wants {:?}...)",
+            lens.len(),
+            &lens[..lens.len().min(4)],
+            &expect[..expect.len().min(4)]
+        );
+    }
+    let mut pos = 0usize;
+    model.visit_params(&mut |p, _g| {
+        p.copy_from_slice(&payload[pos..pos + p.len()]);
+        pos += p.len();
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Ff, Fff, FffConfig};
+    use crate::rng::Rng;
+    use crate::tensor::Matrix;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fff-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_outputs() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut fff = Fff::new(&mut rng, FffConfig::new(6, 3, 2, 4));
+        let x = Matrix::from_fn(5, 6, |r, c| ((r * 6 + c) as f32).sin());
+        let y0 = fff.forward_infer(&x);
+        let path = tmp("roundtrip");
+        save(&mut fff, &path).unwrap();
+
+        let mut rng2 = Rng::seed_from_u64(999); // different init
+        let mut fresh = Fff::new(&mut rng2, FffConfig::new(6, 3, 2, 4));
+        assert!(fresh.forward_infer(&x).max_abs_diff(&y0) > 1e-6);
+        load(&mut fresh, &path).unwrap();
+        assert!(fresh.forward_infer(&x).max_abs_diff(&y0) < 1e-9);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn structure_mismatch_rejected() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut ff = Ff::new(&mut rng, 4, 8, 2);
+        let path = tmp("mismatch");
+        save(&mut ff, &path).unwrap();
+        let mut other = Ff::new(&mut rng, 4, 16, 2);
+        let err = load(&mut other, &path).unwrap_err();
+        assert!(err.to_string().contains("structure mismatch"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut ff = Ff::new(&mut rng, 4, 8, 2);
+        let path = tmp("corrupt");
+        save(&mut ff, &path).unwrap();
+        // Flip a payload byte.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&mut ff, &path).unwrap_err();
+        assert!(
+            err.to_string().contains("checksum") || err.to_string().contains("mismatch"),
+            "{err}"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        let mut rng = Rng::seed_from_u64(4);
+        let mut ff = Ff::new(&mut rng, 2, 2, 2);
+        assert!(load(&mut ff, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

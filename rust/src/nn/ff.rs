@@ -1,0 +1,220 @@
+//! The vanilla feedforward baseline: in the paper's single-weight-set
+//! terminology, a ⟨dim_I, w, dim_O⟩-feedforward network — `w` hidden
+//! ReLU neurons, each with `dim_I` input and `dim_O` output weights.
+
+use super::{Linear, Model, ParamVisitor};
+use crate::rng::Rng;
+use crate::tensor::{relu_inplace, Matrix};
+
+/// `y = relu(x·W1 + b1)·W2 + b2`.
+#[derive(Clone, Debug)]
+pub struct Ff {
+    pub l1: Linear,
+    pub l2: Linear,
+    cache: Option<Cache>,
+}
+
+#[derive(Clone, Debug)]
+struct Cache {
+    x: Matrix,
+    a1: Matrix, // post-ReLU hidden activations
+}
+
+impl Ff {
+    pub fn new(rng: &mut Rng, dim_in: usize, width: usize, dim_out: usize) -> Self {
+        Ff { l1: Linear::new(rng, dim_in, width), l2: Linear::new(rng, width, dim_out), cache: None }
+    }
+
+    pub fn width(&self) -> usize {
+        self.l1.dim_out()
+    }
+
+    pub fn dim_in(&self) -> usize {
+        self.l1.dim_in()
+    }
+
+    pub fn dim_out(&self) -> usize {
+        self.l2.dim_out()
+    }
+
+    /// Pack weights into an inference-layout model for the timing benches.
+    pub fn compile_infer(&self) -> FfInfer {
+        FfInfer {
+            w1: self.l1.w.clone(),
+            w1t: self.l1.w.transpose(),
+            b1: self.l1.b.clone(),
+            w2: self.l2.w.clone(),
+            b2: self.l2.b.clone(),
+        }
+    }
+}
+
+impl Model for Ff {
+    fn forward_train(&mut self, x: &Matrix, _rng: &mut Rng) -> Matrix {
+        let mut a1 = self.l1.forward(x);
+        relu_inplace(&mut a1);
+        let y = self.l2.forward(&a1);
+        self.cache = Some(Cache { x: x.clone(), a1 });
+        y
+    }
+
+    fn backward(&mut self, d_logits: &Matrix) -> Matrix {
+        let cache = self.cache.as_ref().expect("backward before forward_train").clone();
+        let mut da1 = self.l2.backward(&cache.a1, d_logits);
+        // ReLU mask: a1 > 0 (cache holds post-activation values).
+        for (d, &a) in da1.as_mut_slice().iter_mut().zip(cache.a1.as_slice()) {
+            if a <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        self.l1.backward(&cache.x, &da1)
+    }
+
+    fn forward_infer(&self, x: &Matrix) -> Matrix {
+        let mut a1 = self.l1.forward(x);
+        relu_inplace(&mut a1);
+        self.l2.forward(&a1)
+    }
+
+    fn visit_params(&mut self, f: &mut ParamVisitor) {
+        self.l1.visit(f);
+        self.l2.visit(f);
+    }
+}
+
+/// Inference-optimized FF. Batched inference uses the blocked GEMM — the
+/// FF baseline's *best* engine, so the FFF speedup numbers are honest —
+/// while `infer_one` uses the transposed per-neuron layout the serving
+/// path wants.
+#[derive(Clone, Debug)]
+pub struct FfInfer {
+    w1: Matrix,  // dim_in × w (GEMM layout)
+    w1t: Matrix, // w × dim_in (per-sample layout)
+    b1: Vec<f32>,
+    w2: Matrix,
+    b2: Vec<f32>,
+}
+
+impl FfInfer {
+    pub fn width(&self) -> usize {
+        self.w1t.rows()
+    }
+
+    /// Single-sample inference into a caller-provided output buffer
+    /// (serving hot path; no allocation).
+    pub fn infer_one(&self, x: &[f32], out: &mut [f32]) {
+        let w = self.width();
+        let dim_out = self.w2.cols();
+        debug_assert_eq!(out.len(), dim_out);
+        out.copy_from_slice(&self.b2);
+        for h in 0..w {
+            let pre = crate::tensor::dot(self.w1t.row(h), x) + self.b1[h];
+            if pre > 0.0 {
+                crate::tensor::axpy_slice(pre, self.w2.row(h), out);
+            }
+        }
+    }
+
+    /// Batched inference via GEMM (allocates the output).
+    pub fn infer_batch(&self, x: &Matrix) -> Matrix {
+        let mut a1 = crate::tensor::gemm_bias(x, &self.w1, &self.b1);
+        crate::tensor::relu_inplace(&mut a1);
+        crate::tensor::gemm_bias(&a1, &self.w2, &self.b2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::cross_entropy;
+    use crate::nn::Optimizer;
+
+    #[test]
+    fn infer_matches_train_forward() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut ff = Ff::new(&mut rng, 6, 12, 4);
+        let x = Matrix::from_fn(5, 6, |r, c| ((r + 2 * c) as f32).cos());
+        let yt = ff.forward_train(&x, &mut rng);
+        let yi = ff.forward_infer(&x);
+        assert!(yt.max_abs_diff(&yi) < 1e-6);
+    }
+
+    #[test]
+    fn compiled_infer_matches_model() {
+        let mut rng = Rng::seed_from_u64(1);
+        let ff = Ff::new(&mut rng, 6, 12, 4);
+        let x = Matrix::from_fn(5, 6, |r, c| ((r * 3 + c) as f32).sin());
+        let yi = ff.forward_infer(&x);
+        let yc = ff.compile_infer().infer_batch(&x);
+        assert!(yi.max_abs_diff(&yc) < 1e-5, "diff={}", yi.max_abs_diff(&yc));
+    }
+
+    #[test]
+    fn gradient_check_end_to_end() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut ff = Ff::new(&mut rng, 4, 6, 3);
+        let x = Matrix::from_fn(8, 4, |r, c| ((r * 5 + 3 * c) % 7) as f32 / 7.0 - 0.4);
+        let labels: Vec<usize> = (0..8).map(|i| i % 3).collect();
+
+        let logits = ff.forward_train(&x, &mut rng);
+        let (_, dl) = cross_entropy(&logits, &labels);
+        ff.zero_grad();
+        ff.backward(&dl);
+
+        // Finite-difference a few params through the full loss.
+        let eps = 1e-2f32;
+        let mut grads = Vec::new();
+        ff.visit_params(&mut |_p, g| grads.push(g.to_vec()));
+        for (slot, idx) in [(0usize, 3usize), (1, 0), (2, 5), (3, 1)] {
+            let perturbed = |delta: f32, ff: &mut Ff| -> f32 {
+                let mut s = 0;
+                ff.visit_params(&mut |p, _g| {
+                    if s == slot {
+                        p[idx] += delta;
+                    }
+                    s += 1;
+                });
+                let y = ff.forward_infer(&x);
+                let (loss, _) = cross_entropy(&y, &labels);
+                let mut s2 = 0;
+                ff.visit_params(&mut |p, _g| {
+                    if s2 == slot {
+                        p[idx] -= delta;
+                    }
+                    s2 += 1;
+                });
+                loss
+            };
+            let fd = (perturbed(eps, &mut ff) - perturbed(-eps, &mut ff)) / (2.0 * eps);
+            let g = grads[slot][idx];
+            assert!((g - fd).abs() < 3e-3, "slot {slot} idx {idx}: {g} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn learns_xorish_task() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut ff = Ff::new(&mut rng, 2, 16, 2);
+        let mut opt = crate::nn::Sgd::new(0.5);
+        // XOR in {0,1}^2, repeated to a batch.
+        let x = Matrix::from_vec(4, 2, vec![0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0]);
+        let labels = vec![0usize, 1, 1, 0];
+        for _ in 0..500 {
+            let logits = ff.forward_train(&x, &mut rng);
+            let (_, dl) = cross_entropy(&logits, &labels);
+            ff.zero_grad();
+            ff.backward(&dl);
+            opt.step(&mut ff);
+        }
+        let acc = crate::nn::accuracy(&ff.forward_infer(&x), &labels);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn num_params_counts() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut ff = Ff::new(&mut rng, 10, 20, 5);
+        // 10*20 + 20 + 20*5 + 5
+        assert_eq!(ff.num_params(), 200 + 20 + 100 + 5);
+    }
+}

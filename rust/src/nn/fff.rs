@@ -1,0 +1,951 @@
+//! The paper's contribution: the **fast feedforward network**.
+//!
+//! A depth-`d` FFF is a balanced binary tree of `2^d − 1` *node* networks
+//! (⟨dim_I, n, 1⟩ feedforwards with a sigmoid head; `n = 1` in every paper
+//! experiment) over `2^d` *leaf* networks (⟨dim_I, ℓ, dim_O⟩ feedforwards).
+//!
+//! * [`Model::forward_train`] implements the paper's `FORWARD_T`: the
+//!   output is the mixture of **all** leaves, weighted by the product of
+//!   edge probabilities along each root→leaf path (Algorithm 1, training).
+//! * [`Model::forward_infer`] implements `FORWARD_I`: each node decision is
+//!   rounded and exactly one path is walked — `O(d·n + ℓ)` per sample.
+//! * The hardening loss `h·Σ H(N(ι))` and the randomized child
+//!   transpositions (the paper's localized-overfitting mitigation) are
+//!   built into the training pass.
+//!
+//! Tree indexing: node `(m, i)` (level `m`, `i`-th from the left) lives at
+//! `2^m − 1 + i`; its children are `(m+1, 2i)` (left, weight `1 − p`) and
+//! `(m+1, 2i+1)` (right, weight `p`), matching Algorithm 1 where the
+//! sigmoid output multiplies the **right** subtree.
+
+use super::{init, Linear, Model, ParamVisitor};
+use crate::rng::Rng;
+use crate::tensor::{
+    bernoulli_entropy, dot, gemm_nt, relu_inplace, sigmoid, Matrix,
+};
+
+/// FFF architecture + training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct FffConfig {
+    pub dim_in: usize,
+    pub dim_out: usize,
+    /// Tree depth `d ≥ 0` (`2^d` leaves).
+    pub depth: usize,
+    /// Leaf width ℓ.
+    pub leaf: usize,
+    /// Node width `n` (the paper uses `n = 1` throughout: a linear
+    /// boundary + head sigmoid; `n > 1` inserts a ReLU hidden layer).
+    pub node: usize,
+    /// Hardening-loss scale `h`. `0.0` disables it;
+    /// `f32::INFINITY` freezes the tree (the paper's `h = ∞` ViT rows).
+    pub hardening: f32,
+    /// Per-node, per-batch probability of transposing the soft decision
+    /// ⟨1−p, p⟩ → ⟨p, 1−p⟩ (localized-overfitting mitigation).
+    pub transposition_p: f32,
+}
+
+impl FffConfig {
+    /// Paper defaults: n = 1, h = 3.0, no transposition.
+    pub fn new(dim_in: usize, dim_out: usize, depth: usize, leaf: usize) -> Self {
+        FffConfig { dim_in, dim_out, depth, leaf, node: 1, hardening: 3.0, transposition_p: 0.0 }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        1 << self.depth
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        (1 << self.depth) - 1
+    }
+
+    /// Paper §Size-and-width: training width `2^d · ℓ`.
+    pub fn training_width(&self) -> usize {
+        self.num_leaves() * self.leaf
+    }
+
+    /// Inference width ℓ (only leaf neurons produce output).
+    pub fn inference_width(&self) -> usize {
+        self.leaf
+    }
+
+    /// Training size `(2^d − 1)·n + 2^d·ℓ` (all neurons).
+    pub fn training_size(&self) -> usize {
+        self.num_nodes() * self.node + self.training_width()
+    }
+
+    /// Inference size `d·n + ℓ` (neurons engaged by `FORWARD_I`).
+    pub fn inference_size(&self) -> usize {
+        self.depth * self.node + self.leaf
+    }
+}
+
+/// One node network: `n = 1` → a single linear boundary + sigmoid head;
+/// `n > 1` → ⟨dim_I, n, 1⟩ with ReLU hidden and sigmoid head.
+#[derive(Clone, Debug)]
+struct Node {
+    l1: Linear,          // dim_in × n
+    l2: Option<Linear>,  // n × 1, present only when n > 1
+}
+
+impl Node {
+    fn new(rng: &mut Rng, dim_in: usize, n: usize) -> Self {
+        if n == 1 {
+            Node { l1: Linear::new(rng, dim_in, 1), l2: None }
+        } else {
+            Node { l1: Linear::new(rng, dim_in, n), l2: Some(Linear::new(rng, n, 1)) }
+        }
+    }
+}
+
+/// One leaf network: ⟨dim_I, ℓ, dim_O⟩ with ReLU hidden.
+#[derive(Clone, Debug)]
+struct Leaf {
+    l1: Linear, // dim_in × ℓ
+    l2: Linear, // ℓ × dim_out
+}
+
+/// The fast feedforward network.
+#[derive(Clone, Debug)]
+pub struct Fff {
+    pub cfg: FffConfig,
+    nodes: Vec<Node>,
+    leaves: Vec<Leaf>,
+    cache: Option<Cache>,
+    /// Batch-mean Bernoulli entropy per node after the last training
+    /// forward — the paper's hardening monitor (Figures 5–6).
+    pub last_entropies: Vec<f32>,
+    last_aux: f32,
+}
+
+#[derive(Clone, Debug)]
+struct Cache {
+    x: Matrix,
+    /// Per node: raw sigmoid output p (before transposition), length B.
+    probs: Vec<Vec<f32>>,
+    /// Per node: raw logit, length B.
+    logits: Vec<Vec<f32>>,
+    /// Per node: hidden activations (post-ReLU), only for n > 1.
+    hidden: Vec<Option<Matrix>>,
+    /// Per node: was the batch's decision transposed?
+    transposed: Vec<bool>,
+    /// Prefix path weights per level: w[m] is B × 2^m; w[depth] = c.
+    prefix: Vec<Matrix>,
+    /// Per leaf: post-ReLU hidden activations, B × ℓ.
+    leaf_a1: Vec<Matrix>,
+}
+
+impl Fff {
+    pub fn new(rng: &mut Rng, cfg: FffConfig) -> Self {
+        assert!(cfg.leaf >= 1 && cfg.node >= 1);
+        let nodes = (0..cfg.num_nodes()).map(|_| Node::new(rng, cfg.dim_in, cfg.node)).collect();
+        let leaves = (0..cfg.num_leaves())
+            .map(|_| Leaf {
+                l1: Linear::new(rng, cfg.dim_in, cfg.leaf),
+                l2: Linear::new(rng, cfg.leaf, cfg.dim_out),
+            })
+            .collect();
+        Fff {
+            cfg,
+            nodes,
+            leaves,
+            cache: None,
+            last_entropies: vec![0.0; cfg.num_nodes()],
+            last_aux: 0.0,
+        }
+    }
+
+    /// Node `(level m, index i)` position in the BFS array.
+    #[inline]
+    fn node_at(m: usize, i: usize) -> usize {
+        (1 << m) - 1 + i
+    }
+
+    /// Raw node probabilities for a batch: (logits, probs, hidden).
+    fn node_forward(&self, node: usize, x: &Matrix) -> (Vec<f32>, Vec<f32>, Option<Matrix>) {
+        let nd = &self.nodes[node];
+        let mut h = nd.l1.forward(x); // B × n
+        let (logits, hidden) = if let Some(l2) = &nd.l2 {
+            relu_inplace(&mut h);
+            let z = l2.forward(&h); // B × 1
+            (z.into_vec(), Some(h))
+        } else {
+            (h.into_vec(), None)
+        };
+        let probs = logits.iter().map(|&z| sigmoid(z)).collect();
+        (logits, probs, hidden)
+    }
+
+    /// The leaf index `FORWARD_I` routes sample `x` to — the paper's
+    /// input-space regionalization byproduct (one region per leaf).
+    pub fn leaf_index(&self, x: &[f32]) -> usize {
+        let mut i = 0usize;
+        for m in 0..self.cfg.depth {
+            let nd = &self.nodes[Self::node_at(m, i)];
+            let logit = if let Some(l2) = &nd.l2 {
+                let mut acc = l2.b[0];
+                for h in 0..nd.l1.dim_out() {
+                    let mut pre = nd.l1.b[h];
+                    for (j, &xv) in x.iter().enumerate() {
+                        pre += xv * nd.l1.w.get(j, h);
+                    }
+                    if pre > 0.0 {
+                        acc += pre * l2.w.get(h, 0);
+                    }
+                }
+                acc
+            } else {
+                // n = 1 fast path: W is dim_in×1 — stride over column 0.
+                let mut acc = nd.l1.b[0];
+                for (j, &xv) in x.iter().enumerate() {
+                    acc += xv * nd.l1.w.get(j, 0);
+                }
+                acc
+            };
+            i = 2 * i + usize::from(logit >= 0.0);
+        }
+        i
+    }
+
+    /// Pack trained weights into the inference-layout model.
+    pub fn compile_infer(&self) -> FffInfer {
+        assert_eq!(self.cfg.node, 1, "compile_infer supports the paper's n = 1 nodes");
+        let d = self.cfg.depth;
+        let dim_in = self.cfg.dim_in;
+        let dim_out = self.cfg.dim_out;
+        let ell = self.cfg.leaf;
+        let mut node_w = Matrix::zeros(self.cfg.num_nodes().max(1), dim_in);
+        let mut node_b = vec![0.0f32; self.cfg.num_nodes()];
+        for (ni, nd) in self.nodes.iter().enumerate() {
+            for j in 0..dim_in {
+                node_w.set(ni, j, nd.l1.w.get(j, 0));
+            }
+            node_b[ni] = nd.l1.b[0];
+        }
+        let mut leaf_w1t = Vec::with_capacity(self.cfg.num_leaves());
+        let mut leaf_b1 = Vec::new();
+        let mut leaf_w2 = Vec::new();
+        let mut leaf_b2 = Vec::new();
+        for lf in &self.leaves {
+            leaf_w1t.push(lf.l1.w.transpose()); // ℓ × dim_in
+            leaf_b1.push(lf.l1.b.clone());
+            leaf_w2.push(lf.l2.w.clone()); // ℓ × dim_out
+            leaf_b2.push(lf.l2.b.clone());
+        }
+        FffInfer { depth: d, dim_in, dim_out, leaf: ell, node_w, node_b, leaf_w1t, leaf_b1, leaf_w2, leaf_b2 }
+    }
+
+    /// Count of leaves each sample of `x` routes to (region histogram).
+    pub fn region_histogram(&self, x: &Matrix) -> Vec<usize> {
+        let mut hist = vec![0usize; self.cfg.num_leaves()];
+        for r in 0..x.rows() {
+            hist[self.leaf_index(x.row(r))] += 1;
+        }
+        hist
+    }
+}
+
+impl Model for Fff {
+    fn forward_train(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
+        let b = x.rows();
+        let d = self.cfg.depth;
+        let num_nodes = self.cfg.num_nodes();
+        let mut probs = Vec::with_capacity(num_nodes);
+        let mut logits = Vec::with_capacity(num_nodes);
+        let mut hidden = Vec::with_capacity(num_nodes);
+        let mut transposed = Vec::with_capacity(num_nodes);
+        // Prefix path weights, level by level.
+        let mut prefix: Vec<Matrix> = Vec::with_capacity(d + 1);
+        prefix.push(Matrix::full(b, 1, 1.0));
+        for m in 0..d {
+            let mut next = Matrix::zeros(b, 1 << (m + 1));
+            for i in 0..(1 << m) {
+                let node = Self::node_at(m, i);
+                let (lg, mut pr, hd) = self.node_forward(node, x);
+                let flip = self.cfg.transposition_p > 0.0 && rng.bernoulli(self.cfg.transposition_p as f64);
+                if flip {
+                    for p in pr.iter_mut() {
+                        *p = 1.0 - *p;
+                    }
+                }
+                for r in 0..b {
+                    let w = prefix[m].get(r, i);
+                    let p = pr[r];
+                    next.set(r, 2 * i, w * (1.0 - p));
+                    next.set(r, 2 * i + 1, w * p);
+                }
+                // Cache raw (pre-transposition) probabilities.
+                if flip {
+                    for p in pr.iter_mut() {
+                        *p = 1.0 - *p;
+                    }
+                }
+                debug_assert_eq!(probs.len(), node);
+                probs.push(pr);
+                logits.push(lg);
+                hidden.push(hd);
+                transposed.push(flip);
+            }
+            prefix.push(next);
+        }
+        // Entropy monitor + hardening-loss value.
+        self.last_entropies = probs
+            .iter()
+            .map(|pr| pr.iter().map(|&p| bernoulli_entropy(p)).sum::<f32>() / b as f32)
+            .collect();
+        let h = self.cfg.hardening;
+        self.last_aux = if h > 0.0 && h.is_finite() {
+            h * self.last_entropies.iter().sum::<f32>()
+        } else {
+            0.0
+        };
+
+        // Leaves: y = Σ_j c_j ∘ leaf_j(x).
+        let c = &prefix[d];
+        let mut y = Matrix::zeros(b, self.cfg.dim_out);
+        let mut leaf_a1 = Vec::with_capacity(self.cfg.num_leaves());
+        for (j, lf) in self.leaves.iter().enumerate() {
+            let mut a1 = lf.l1.forward(x);
+            relu_inplace(&mut a1);
+            let out = lf.l2.forward(&a1);
+            for r in 0..b {
+                let w = c.get(r, j);
+                if w != 0.0 {
+                    crate::tensor::axpy_slice(w, out.row(r), y.row_mut(r));
+                }
+            }
+            leaf_a1.push(a1);
+        }
+        self.cache = Some(Cache { x: x.clone(), probs, logits, hidden, transposed, prefix, leaf_a1 });
+        y
+    }
+
+    fn backward(&mut self, d_logits: &Matrix) -> Matrix {
+        let cache = self.cache.take().expect("backward before forward_train");
+        let b = cache.x.rows();
+        let d = self.cfg.depth;
+        let c = &cache.prefix[d];
+        let mut dx = Matrix::zeros(b, self.cfg.dim_in);
+
+        // ---- Leaves + dL/dc ----
+        let mut dc = Matrix::zeros(b, self.cfg.num_leaves());
+        for (j, lf) in self.leaves.iter_mut().enumerate() {
+            let a1 = &cache.leaf_a1[j];
+            // t = dY · W2ᵀ (B×ℓ), shared by dc and da1.
+            let t = gemm_nt(d_logits, &lf.l2.w);
+            // dc_j[r] = a1[r]·t[r] + b2·dY[r]
+            for r in 0..b {
+                let v = dot(a1.row(r), t.row(r)) + dot(&lf.l2.b, d_logits.row(r));
+                dc.set(r, j, v);
+            }
+            // dOut_j = c_j ∘ dY → leaf-2 grads.
+            let mut dout = d_logits.clone();
+            for r in 0..b {
+                let w = c.get(r, j);
+                for v in dout.row_mut(r) {
+                    *v *= w;
+                }
+            }
+            lf.l2.accumulate_grads(a1, &dout);
+            // da1 = c_j ∘ t, masked by ReLU.
+            let mut da1 = t;
+            for r in 0..b {
+                let w = c.get(r, j);
+                let a1r = a1.row(r);
+                for (idx, v) in da1.row_mut(r).iter_mut().enumerate() {
+                    *v = if a1r[idx] > 0.0 { *v * w } else { 0.0 };
+                }
+            }
+            dx.add_assign(&lf.l1.backward(&cache.x, &da1));
+        }
+
+        // ---- Tree backward: from dc up to the root ----
+        // g[m] holds dL/d(prefix weight) at level m.
+        let h = self.cfg.hardening;
+        let frozen = h.is_infinite();
+        let mut g = dc; // level d
+        for m in (0..d).rev() {
+            let mut g_up = Matrix::zeros(b, 1 << m);
+            for i in 0..(1 << m) {
+                let node = Self::node_at(m, i);
+                let raw_p = &cache.probs[node];
+                let flip = cache.transposed[node];
+                let mut dlogit = vec![0.0f32; b];
+                for r in 0..b {
+                    let gl = g.get(r, 2 * i);
+                    let gr = g.get(r, 2 * i + 1);
+                    let p_eff = if flip { 1.0 - raw_p[r] } else { raw_p[r] };
+                    g_up.set(r, i, (1.0 - p_eff) * gl + p_eff * gr);
+                    if !frozen {
+                        // dL/dp_eff = w_parent · (g_right − g_left); chain
+                        // through transposition (dp_eff/dp_raw = ±1) and
+                        // the sigmoid.
+                        let mut dp = cache.prefix[m].get(r, i) * (gr - gl);
+                        if flip {
+                            dp = -dp;
+                        }
+                        let p = raw_p[r];
+                        let mut dz = dp * p * (1.0 - p);
+                        if h > 0.0 {
+                            dz += h / b as f32
+                                * super::loss::hardening_grad_logit(cache.logits[node][r], p);
+                        }
+                        dlogit[r] = dz;
+                    }
+                }
+                if !frozen {
+                    let dz = Matrix::from_vec(b, 1, dlogit);
+                    let nd = &mut self.nodes[node];
+                    if let Some(l2) = &mut nd.l2 {
+                        let hidden = cache.hidden[node].as_ref().unwrap();
+                        let mut dh = l2.backward(hidden, &dz);
+                        for (v, &a) in dh.as_mut_slice().iter_mut().zip(hidden.as_slice()) {
+                            if a <= 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                        dx.add_assign(&nd.l1.backward(&cache.x, &dh));
+                    } else {
+                        dx.add_assign(&nd.l1.backward(&cache.x, &dz));
+                    }
+                }
+            }
+            g = g_up;
+        }
+        dx
+    }
+
+    fn forward_infer(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows(), self.cfg.dim_out);
+        for r in 0..x.rows() {
+            let xr = x.row(r);
+            let leaf = &self.leaves[self.leaf_index(xr)];
+            let mut a1 = vec![0.0f32; self.cfg.leaf];
+            for (hn, a) in a1.iter_mut().enumerate() {
+                let mut acc = leaf.l1.b[hn];
+                for (j, &xv) in xr.iter().enumerate() {
+                    acc += xv * leaf.l1.w.get(j, hn);
+                }
+                *a = acc.max(0.0);
+            }
+            let out = y.row_mut(r);
+            out.copy_from_slice(&leaf.l2.b);
+            for (hn, &a) in a1.iter().enumerate() {
+                if a > 0.0 {
+                    crate::tensor::axpy_slice(a, leaf.l2.w.row(hn), out);
+                }
+            }
+        }
+        y
+    }
+
+    fn visit_params(&mut self, f: &mut ParamVisitor) {
+        for nd in &mut self.nodes {
+            nd.l1.visit(f);
+            if let Some(l2) = &mut nd.l2 {
+                l2.visit(f);
+            }
+        }
+        for lf in &mut self.leaves {
+            lf.l1.visit(f);
+            lf.l2.visit(f);
+        }
+    }
+
+    fn aux_loss(&self) -> f32 {
+        self.last_aux
+    }
+
+    fn entropy_report(&self) -> Vec<Vec<f32>> {
+        vec![self.last_entropies.clone()]
+    }
+}
+
+/// Inference-layout FFF: node boundaries packed as contiguous rows, one
+/// `[ℓ × dim_in]` weight block per leaf — the structure the paper's CUDA
+/// AOT compilation produces ("a simple offset in the data load"), and the
+/// model the serving coordinator executes.
+#[derive(Clone, Debug)]
+pub struct FffInfer {
+    depth: usize,
+    dim_in: usize,
+    dim_out: usize,
+    leaf: usize,
+    /// `(2^d − 1) × dim_in` node boundary normals (BFS order).
+    node_w: Matrix,
+    node_b: Vec<f32>,
+    leaf_w1t: Vec<Matrix>, // per leaf: ℓ × dim_in
+    leaf_b1: Vec<Vec<f32>>,
+    leaf_w2: Vec<Matrix>, // per leaf: ℓ × dim_out
+    leaf_b2: Vec<Vec<f32>>,
+}
+
+impl FffInfer {
+    /// Randomly-initialized inference model for the timing benches
+    /// (Figures 3–4). `max_alloc_leaves` caps allocation: beyond it, leaf
+    /// storage is aliased (`index % alloc`) while the routing work —
+    /// `d` boundary dot-products — stays exact; the DRAM-gather access
+    /// pattern is preserved because the allocated bank already exceeds
+    /// cache. The paper's A100 held all 2^15 leaves; see DESIGN.md §3.
+    pub fn random(
+        rng: &mut Rng,
+        dim_in: usize,
+        dim_out: usize,
+        depth: usize,
+        leaf: usize,
+        max_alloc_leaves: usize,
+    ) -> Self {
+        let n_leaves = (1usize << depth).min(max_alloc_leaves.max(1));
+        let mut node_w = Matrix::zeros((1 << depth) - 1, dim_in);
+        rng.fill_normal(node_w.as_mut_slice(), 0.0, 0.05);
+        let mut node_b = vec![0.0; (1 << depth) - 1];
+        rng.fill_normal(&mut node_b, 0.0, 0.05);
+        let mut leaf_w1t = Vec::with_capacity(n_leaves);
+        let mut leaf_b1 = Vec::with_capacity(n_leaves);
+        let mut leaf_w2 = Vec::with_capacity(n_leaves);
+        let mut leaf_b2 = Vec::with_capacity(n_leaves);
+        for _ in 0..n_leaves {
+            leaf_w1t.push(init::normal(rng, leaf, dim_in, 0.05));
+            leaf_b1.push(vec![0.0; leaf]);
+            leaf_w2.push(init::normal(rng, leaf, dim_out, 0.05));
+            leaf_b2.push(vec![0.0; dim_out]);
+        }
+        FffInfer { depth, dim_in, dim_out, leaf, node_w, node_b, leaf_w1t, leaf_b1, leaf_w2, leaf_b2 }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn dim_in(&self) -> usize {
+        self.dim_in
+    }
+
+    pub fn dim_out(&self) -> usize {
+        self.dim_out
+    }
+
+    /// Tree descent only: the leaf index for `x` (O(d · dim_in)).
+    #[inline]
+    pub fn route(&self, x: &[f32]) -> usize {
+        let mut i = 0usize;
+        let mut base = 0usize;
+        for m in 0..self.depth {
+            let node = base + i;
+            let logit = dot(self.node_w.row(node), x) + self.node_b[node];
+            i = 2 * i + usize::from(logit >= 0.0);
+            base += 1 << m;
+        }
+        i
+    }
+
+    /// Single-sample `FORWARD_I` into a caller buffer (serving hot path).
+    pub fn infer_one(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.dim_in);
+        debug_assert_eq!(out.len(), self.dim_out);
+        let leaf = self.route(x) % self.leaf_w1t.len();
+        let w1t = &self.leaf_w1t[leaf];
+        let b1 = &self.leaf_b1[leaf];
+        let w2 = &self.leaf_w2[leaf];
+        out.copy_from_slice(&self.leaf_b2[leaf]);
+        for hn in 0..self.leaf {
+            let a = dot(w1t.row(hn), x) + b1[hn];
+            if a > 0.0 {
+                crate::tensor::axpy_slice(a, w2.row(hn), out);
+            }
+        }
+    }
+
+    /// Batched `FORWARD_I`.
+    ///
+    /// §Perf: when several samples land on the same leaf, rows are
+    /// grouped by leaf and each group goes through the blocked GEMM
+    /// (leaf-grouped path); sparse routing (≲2 samples/leaf) falls back
+    /// to the per-sample path whose cost is dominated by the descent.
+    pub fn infer_batch(&self, x: &Matrix) -> Matrix {
+        let n_alloc = self.leaf_w1t.len();
+        if x.rows() < 2 * n_alloc {
+            // Sparse: per-sample path.
+            let mut y = Matrix::zeros(x.rows(), self.dim_out);
+            for r in 0..x.rows() {
+                self.infer_one(x.row(r), y.row_mut(r));
+            }
+            return y;
+        }
+        self.infer_batch_grouped(x)
+    }
+
+    /// Leaf-grouped batched inference (dense-routing fast path).
+    pub fn infer_batch_grouped(&self, x: &Matrix) -> Matrix {
+        let n_alloc = self.leaf_w1t.len();
+        let b = x.rows();
+        // 1) Route everything.
+        let mut leaf_of: Vec<usize> = Vec::with_capacity(b);
+        let mut counts = vec![0usize; n_alloc];
+        for r in 0..b {
+            let leaf = self.route(x.row(r)) % n_alloc;
+            leaf_of.push(leaf);
+            counts[leaf] += 1;
+        }
+        // 2) Group rows by leaf (counting sort).
+        let mut offsets = vec![0usize; n_alloc + 1];
+        for l in 0..n_alloc {
+            offsets[l + 1] = offsets[l] + counts[l];
+        }
+        let mut order = vec![0usize; b];
+        let mut cursor = offsets.clone();
+        for (r, &l) in leaf_of.iter().enumerate() {
+            order[cursor[l]] = r;
+            cursor[l] += 1;
+        }
+        // 3) Per-leaf GEMM on the gathered group.
+        let mut y = Matrix::zeros(b, self.dim_out);
+        for l in 0..n_alloc {
+            let rows = &order[offsets[l]..offsets[l + 1]];
+            if rows.is_empty() {
+                continue;
+            }
+            let xs = x.gather_rows(rows);
+            // a1 = relu(xs · w1 + b1): w1t is ℓ×dim_in, so xs·w1tᵀ.
+            let mut a1 = crate::tensor::gemm_nt(&xs, &self.leaf_w1t[l]);
+            for row in 0..a1.rows() {
+                for (v, &bb) in a1.row_mut(row).iter_mut().zip(&self.leaf_b1[l]) {
+                    *v = (*v + bb).max(0.0);
+                }
+            }
+            let out = crate::tensor::gemm_bias(&a1, &self.leaf_w2[l], &self.leaf_b2[l]);
+            for (local, &r) in rows.iter().enumerate() {
+                y.row_mut(r).copy_from_slice(out.row(local));
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::cross_entropy;
+    use crate::nn::Optimizer;
+
+    fn mk(depth: usize, leaf: usize, h: f32) -> (Fff, Rng) {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut cfg = FffConfig::new(5, 3, depth, leaf);
+        cfg.hardening = h;
+        let fff = Fff::new(&mut rng, cfg);
+        (fff, rng)
+    }
+
+    fn batch(b: usize, dim: usize) -> Matrix {
+        Matrix::from_fn(b, dim, |r, c| (((r * 31 + c * 17) % 13) as f32 / 13.0 - 0.5) * 2.0)
+    }
+
+    #[test]
+    fn size_accounting_matches_paper_formulas() {
+        let cfg = FffConfig::new(768, 768, 4, 8);
+        assert_eq!(cfg.training_width(), 128);
+        assert_eq!(cfg.inference_width(), 8);
+        assert_eq!(cfg.training_size(), 15 + 128);
+        assert_eq!(cfg.inference_size(), 12); // the Table-1 "remarkably close" FFF
+    }
+
+    #[test]
+    fn depth_zero_is_a_plain_ff() {
+        let (mut fff, mut rng) = mk(0, 4, 0.0);
+        let x = batch(6, 5);
+        let yt = fff.forward_train(&x, &mut rng);
+        let yi = fff.forward_infer(&x);
+        assert!(yt.max_abs_diff(&yi) < 1e-5);
+    }
+
+    #[test]
+    fn mixture_weights_sum_to_one() {
+        let (mut fff, mut rng) = mk(3, 2, 0.0);
+        let x = batch(9, 5);
+        let _ = fff.forward_train(&x, &mut rng);
+        let cache = fff.cache.as_ref().unwrap();
+        let c = &cache.prefix[3];
+        for r in 0..9 {
+            let s: f32 = c.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r}: {s}");
+            assert!(c.row(r).iter().all(|&w| w >= 0.0));
+        }
+    }
+
+    #[test]
+    fn forward_t_equals_explicit_mixture_oracle() {
+        // Oracle: enumerate all leaves, weight by the product of edge
+        // probabilities computed independently.
+        let (mut fff, mut rng) = mk(2, 3, 0.0);
+        let x = batch(4, 5);
+        let y = fff.forward_train(&x, &mut rng);
+
+        for r in 0..4 {
+            let xr = Matrix::from_vec(1, 5, x.row(r).to_vec());
+            let mut expect = vec![0.0f32; 3];
+            for leaf_j in 0..4usize {
+                // Path for leaf j in a depth-2 tree: root bit = j>>1, then j&1.
+                let mut weight = 1.0f32;
+                let mut i = 0usize;
+                for m in 0..2 {
+                    let bit = (leaf_j >> (1 - m)) & 1;
+                    let (_, p, _) = fff.node_forward(Fff::node_at(m, i), &xr);
+                    weight *= if bit == 1 { p[0] } else { 1.0 - p[0] };
+                    i = 2 * i + bit;
+                }
+                let lf = &fff.leaves[leaf_j];
+                let mut a1 = lf.l1.forward(&xr);
+                relu_inplace(&mut a1);
+                let out = lf.l2.forward(&a1);
+                for (e, &o) in expect.iter_mut().zip(out.row(0)) {
+                    *e += weight * o;
+                }
+            }
+            for (k, &e) in expect.iter().enumerate() {
+                assert!((y.get(r, k) - e).abs() < 1e-4, "r={r} k={k}: {} vs {e}", y.get(r, k));
+            }
+        }
+    }
+
+    #[test]
+    fn forward_i_follows_hard_path_oracle() {
+        let (fff, _) = mk(3, 2, 0.0);
+        let x = batch(8, 5);
+        for r in 0..8 {
+            let xr = x.row(r);
+            // Oracle: independent descent.
+            let mut i = 0usize;
+            for m in 0..3 {
+                let xm = Matrix::from_vec(1, 5, xr.to_vec());
+                let (_, p, _) = fff.node_forward(Fff::node_at(m, i), &xm);
+                i = 2 * i + usize::from(p[0] >= 0.5);
+            }
+            assert_eq!(fff.leaf_index(xr), i, "sample {r}");
+        }
+    }
+
+    #[test]
+    fn gradient_check_full_model() {
+        let (mut fff, mut rng) = mk(2, 2, 0.0);
+        let x = batch(6, 5);
+        let labels: Vec<usize> = (0..6).map(|i| i % 3).collect();
+        let logits = fff.forward_train(&x, &mut rng);
+        let (_, dl) = cross_entropy(&logits, &labels);
+        fff.zero_grad();
+        fff.backward(&dl);
+
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        fff.visit_params(&mut |_p, g| grads.push(g.to_vec()));
+
+        let eps = 2e-2f32;
+        let num_slots = grads.len();
+        // Probe several parameters across nodes and leaves.
+        for slot in (0..num_slots).step_by(num_slots.div_ceil(9).max(1)) {
+            let idx = grads[slot].len() / 2;
+            let eval = |delta: f32, m: &mut Fff| -> f32 {
+                let mut s = 0;
+                m.visit_params(&mut |p, _| {
+                    if s == slot {
+                        p[idx] += delta;
+                    }
+                    s += 1;
+                });
+                let mut r2 = Rng::seed_from_u64(123);
+                let y = m.forward_train(&x, &mut r2);
+                let (loss, _) = cross_entropy(&y, &labels);
+                let mut s2 = 0;
+                m.visit_params(&mut |p, _| {
+                    if s2 == slot {
+                        p[idx] -= delta;
+                    }
+                    s2 += 1;
+                });
+                loss
+            };
+            let fd = (eval(eps, &mut fff) - eval(-eps, &mut fff)) / (2.0 * eps);
+            let g = grads[slot][idx];
+            assert!(
+                (g - fd).abs() < 4e-3 + 0.05 * fd.abs(),
+                "slot {slot} idx {idx}: analytic {g} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn hardening_loss_gradient_check() {
+        // With a constant prediction gradient of zero, the only gradient
+        // comes from the hardening term; check against finite differences
+        // of h · Σ mean_batch H(p).
+        let (mut fff, mut rng) = mk(2, 2, 3.0);
+        let x = batch(5, 5);
+        let _ = fff.forward_train(&x, &mut rng);
+        fff.zero_grad();
+        let zero = Matrix::zeros(5, 3);
+        fff.backward(&zero);
+
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        fff.visit_params(&mut |_p, g| grads.push(g.to_vec()));
+
+        let harden_value = |m: &mut Fff, rng: &mut Rng| -> f32 {
+            let _ = m.forward_train(&x, rng);
+            m.aux_loss()
+        };
+        let eps = 1e-2f32;
+        // Slot 0 is the root node's weight matrix.
+        let idx = 2;
+        let eval = |delta: f32, m: &mut Fff| {
+            let mut s = 0;
+            m.visit_params(&mut |p, _| {
+                if s == 0 {
+                    p[idx] += delta;
+                }
+                s += 1;
+            });
+            let mut r = Rng::seed_from_u64(5);
+            let v = harden_value(m, &mut r);
+            let mut s2 = 0;
+            m.visit_params(&mut |p, _| {
+                if s2 == 0 {
+                    p[idx] -= delta;
+                }
+                s2 += 1;
+            });
+            v
+        };
+        let fd = (eval(eps, &mut fff) - eval(-eps, &mut fff)) / (2.0 * eps);
+        assert!(
+            (grads[0][idx] - fd).abs() < 2e-3 + 0.05 * fd.abs(),
+            "hardening grad {} vs fd {fd}",
+            grads[0][idx]
+        );
+    }
+
+    #[test]
+    fn frozen_tree_keeps_node_params_fixed() {
+        let (mut fff, mut rng) = mk(2, 2, f32::INFINITY);
+        let x = batch(6, 5);
+        let labels: Vec<usize> = (0..6).map(|i| i % 3).collect();
+        let before: Vec<f32> = {
+            let mut v = Vec::new();
+            fff.visit_params(&mut |p, _| v.extend_from_slice(p));
+            v
+        };
+        let mut opt = crate::nn::Sgd::new(0.5);
+        for _ in 0..5 {
+            let y = fff.forward_train(&x, &mut rng);
+            let (_, dl) = cross_entropy(&y, &labels);
+            fff.zero_grad();
+            fff.backward(&dl);
+            opt.step(&mut fff);
+        }
+        let after: Vec<f32> = {
+            let mut v = Vec::new();
+            fff.visit_params(&mut |p, _| v.extend_from_slice(p));
+            v
+        };
+        // Node params are the first 3 slots' worth: 3 nodes × (5 w + 1 b).
+        let node_span = 3 * 6;
+        assert_eq!(&before[..node_span], &after[..node_span], "frozen tree moved");
+        assert_ne!(&before[node_span..], &after[node_span..], "leaves should train");
+    }
+
+    #[test]
+    fn entropies_are_tracked_per_node() {
+        let (mut fff, mut rng) = mk(3, 2, 3.0);
+        let x = batch(16, 5);
+        let _ = fff.forward_train(&x, &mut rng);
+        assert_eq!(fff.last_entropies.len(), 7);
+        assert!(fff.last_entropies.iter().all(|&e| (0.0..=std::f32::consts::LN_2 + 1e-6).contains(&e)));
+        // Fresh random boundaries → near-maximal entropy.
+        assert!(fff.last_entropies[0] > 0.5);
+    }
+
+    #[test]
+    fn grouped_infer_matches_per_sample() {
+        let (fff, _) = mk(2, 4, 0.0);
+        let inf = fff.compile_infer();
+        let x = batch(64, 5); // 64 rows over 4 leaves → dense, grouped path
+        let grouped = inf.infer_batch_grouped(&x);
+        let mut per_sample = Matrix::zeros(64, 3);
+        for r in 0..64 {
+            inf.infer_one(x.row(r), per_sample.row_mut(r));
+        }
+        assert!(grouped.max_abs_diff(&per_sample) < 1e-5);
+    }
+
+    #[test]
+    fn compiled_infer_matches_forward_i() {
+        let (fff, _) = mk(3, 4, 0.0);
+        let x = batch(10, 5);
+        let a = fff.forward_infer(&x);
+        let b = fff.compile_infer().infer_batch(&x);
+        assert!(a.max_abs_diff(&b) < 1e-5, "diff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn region_histogram_counts_all_samples() {
+        let (fff, _) = mk(3, 2, 0.0);
+        let x = batch(32, 5);
+        let hist = fff.region_histogram(&x);
+        assert_eq!(hist.iter().sum::<usize>(), 32);
+        assert_eq!(hist.len(), 8);
+    }
+
+    #[test]
+    fn fff_learns_a_separable_task_and_hardens() {
+        // Two well-separated clusters per class; after training with the
+        // hardening loss, FORWARD_I accuracy should match FORWARD_T.
+        let mut rng = Rng::seed_from_u64(42);
+        let mut cfg = FffConfig::new(2, 2, 2, 4);
+        cfg.hardening = 1.0;
+        let mut fff = Fff::new(&mut rng, cfg);
+        let mut opt = crate::nn::Sgd::new(0.3);
+        let n = 128;
+        let mut x = Matrix::zeros(n, 2);
+        let mut labels = Vec::with_capacity(n);
+        let mut drng = Rng::seed_from_u64(1);
+        for r in 0..n {
+            let class = r % 2;
+            let cx = if class == 0 { -1.0 } else { 1.0 };
+            let cy = if r % 4 < 2 { -1.0 } else { 1.0 };
+            x.set(r, 0, cx + drng.normal_f32(0.0, 0.2));
+            x.set(r, 1, cy + drng.normal_f32(0.0, 0.2));
+            labels.push(class);
+        }
+        for _ in 0..300 {
+            let y = fff.forward_train(&x, &mut rng);
+            let (_, dl) = cross_entropy(&y, &labels);
+            fff.zero_grad();
+            fff.backward(&dl);
+            opt.step(&mut fff);
+        }
+        let acc_t = crate::nn::accuracy(&{
+            let mut r = Rng::seed_from_u64(9);
+            fff.forward_train(&x, &mut r)
+        }, &labels);
+        let acc_i = crate::nn::accuracy(&fff.forward_infer(&x), &labels);
+        assert!(acc_t > 0.95, "train-mode acc {acc_t}");
+        assert!(acc_i > 0.95, "inference-mode acc {acc_i}");
+        // Hardened: mean entropy low.
+        let mean_h: f32 =
+            fff.last_entropies.iter().sum::<f32>() / fff.last_entropies.len() as f32;
+        assert!(mean_h < 0.25, "mean entropy {mean_h}");
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let (mut fff, mut rng) = mk(2, 3, 0.0);
+        let x = batch(4, 5);
+        let snap = fff.snapshot();
+        let y0 = fff.forward_infer(&x);
+        // Perturb.
+        let mut opt = crate::nn::Sgd::new(0.5);
+        let y = fff.forward_train(&x, &mut rng);
+        let (_, dl) = cross_entropy(&y, &[0, 1, 2, 0]);
+        fff.zero_grad();
+        fff.backward(&dl);
+        opt.step(&mut fff);
+        assert!(fff.forward_infer(&x).max_abs_diff(&y0) > 1e-7);
+        fff.restore(&snap);
+        assert!(fff.forward_infer(&x).max_abs_diff(&y0) < 1e-7);
+    }
+}

@@ -1,0 +1,57 @@
+//! Weight initialization. The reference `fastfeedforward` package sits on
+//! PyTorch `nn.Linear` defaults — Kaiming-uniform fan-in — so we use the
+//! same scheme for comparability.
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// PyTorch `nn.Linear` default: U(-1/sqrt(fan_in), 1/sqrt(fan_in)).
+pub fn linear_weight(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Matrix {
+    let bound = 1.0 / (fan_in.max(1) as f32).sqrt();
+    let mut w = Matrix::zeros(fan_in, fan_out);
+    rng.fill_uniform(w.as_mut_slice(), -bound, bound);
+    w
+}
+
+/// PyTorch `nn.Linear` default bias: U(-1/sqrt(fan_in), 1/sqrt(fan_in)).
+pub fn linear_bias(rng: &mut Rng, fan_in: usize, fan_out: usize) -> Vec<f32> {
+    let bound = 1.0 / (fan_in.max(1) as f32).sqrt();
+    let mut b = vec![0.0; fan_out];
+    rng.fill_uniform(&mut b, -bound, bound);
+    b
+}
+
+/// N(0, std) initialization (embeddings, CLS token).
+pub fn normal(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Matrix {
+    let mut w = Matrix::zeros(rows, cols);
+    rng.fill_normal(w.as_mut_slice(), 0.0, std);
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_within_bound() {
+        let mut rng = Rng::seed_from_u64(0);
+        let w = linear_weight(&mut rng, 64, 32);
+        let bound = 1.0 / 8.0;
+        assert!(w.as_slice().iter().all(|&v| v.abs() <= bound));
+        assert_eq!(w.shape(), (64, 32));
+    }
+
+    #[test]
+    fn bias_within_bound() {
+        let mut rng = Rng::seed_from_u64(0);
+        let b = linear_bias(&mut rng, 100, 5);
+        assert!(b.iter().all(|&v| v.abs() <= 0.1));
+    }
+
+    #[test]
+    fn init_not_all_zero() {
+        let mut rng = Rng::seed_from_u64(1);
+        let w = linear_weight(&mut rng, 4, 4);
+        assert!(w.as_slice().iter().any(|&v| v != 0.0));
+    }
+}

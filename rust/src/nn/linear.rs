@@ -1,0 +1,135 @@
+//! A fully-connected layer with gradient accumulators — the shared building
+//! block of every architecture in the zoo.
+
+use super::init;
+use crate::rng::Rng;
+use crate::tensor::{gemm_bias, gemm_nt, gemm_tn, Matrix};
+
+/// `y = x·W + b` with `W: in×out` (row-major, so rows are input features).
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Matrix,
+    pub b: Vec<f32>,
+    pub gw: Matrix,
+    pub gb: Vec<f32>,
+}
+
+impl Linear {
+    /// Kaiming-uniform initialized layer.
+    pub fn new(rng: &mut Rng, dim_in: usize, dim_out: usize) -> Self {
+        Linear {
+            w: init::linear_weight(rng, dim_in, dim_out),
+            b: init::linear_bias(rng, dim_in, dim_out),
+            gw: Matrix::zeros(dim_in, dim_out),
+            gb: vec![0.0; dim_out],
+        }
+    }
+
+    pub fn dim_in(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn dim_out(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Forward: `x (B×in) -> B×out`.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        gemm_bias(x, &self.w, &self.b)
+    }
+
+    /// Backward: accumulate `gw += xᵀ·dy`, `gb += Σ dy`, return `dx = dy·Wᵀ`.
+    pub fn backward(&mut self, x: &Matrix, dy: &Matrix) -> Matrix {
+        self.accumulate_grads(x, dy);
+        self.input_grad(dy)
+    }
+
+    /// Grad accumulation only (when dx is not needed, e.g. first layer).
+    pub fn accumulate_grads(&mut self, x: &Matrix, dy: &Matrix) {
+        let gw = gemm_tn(x, dy);
+        self.gw.add_assign(&gw);
+        for r in 0..dy.rows() {
+            let row = dy.row(r);
+            for (gb, &d) in self.gb.iter_mut().zip(row) {
+                *gb += d;
+            }
+        }
+    }
+
+    /// `dx = dy · Wᵀ` without touching gradients.
+    ///
+    /// `gemm_nt(a, b)` computes `a·bᵀ` with `b: n×k`; here `b = W (in×out)`
+    /// so `dy·Wᵀ` comes out directly as `B×in`.
+    pub fn input_grad(&self, dy: &Matrix) -> Matrix {
+        gemm_nt(dy, &self.w)
+    }
+
+    /// Visit (param, grad) pairs in stable order: W then b.
+    pub fn visit(&mut self, f: &mut super::ParamVisitor) {
+        f(self.w.as_mut_slice(), self.gw.as_mut_slice());
+        f(&mut self.b, &mut self.gb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm;
+
+    #[test]
+    fn forward_matches_gemm_plus_bias() {
+        let mut rng = Rng::seed_from_u64(1);
+        let l = Linear::new(&mut rng, 4, 3);
+        let x = Matrix::from_fn(2, 4, |r, c| (r + c) as f32 * 0.1);
+        let y = l.forward(&x);
+        let mut y0 = gemm(&x, &l.w);
+        for r in 0..2 {
+            for c in 0..3 {
+                y0.set(r, c, y0.get(r, c) + l.b[c]);
+            }
+        }
+        assert!(y.max_abs_diff(&y0) < 1e-6);
+    }
+
+    #[test]
+    fn backward_finite_difference() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut l = Linear::new(&mut rng, 3, 2);
+        let x = Matrix::from_fn(4, 3, |r, c| ((r * 3 + c) as f32).sin());
+        // Loss = sum(y^2)/2 so dL/dy = y.
+        let y = l.forward(&x);
+        let dx = l.backward(&x, &y);
+
+        let eps = 1e-3f32;
+        // Check dW numerically.
+        for (i, j) in [(0usize, 0usize), (2, 1), (1, 0)] {
+            let orig = l.w.get(i, j);
+            l.w.set(i, j, orig + eps);
+            let lp: f32 = l.forward(&x).as_slice().iter().map(|v| v * v / 2.0).sum();
+            l.w.set(i, j, orig - eps);
+            let lm: f32 = l.forward(&x).as_slice().iter().map(|v| v * v / 2.0).sum();
+            l.w.set(i, j, orig);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((l.gw.get(i, j) - fd).abs() < 2e-2, "dW[{i}{j}]={} fd={fd}", l.gw.get(i, j));
+        }
+        // Check dx numerically.
+        let (r, c) = (1usize, 2usize);
+        let mut xp = x.clone();
+        xp.set(r, c, x.get(r, c) + eps);
+        let lp: f32 = l.forward(&xp).as_slice().iter().map(|v| v * v / 2.0).sum();
+        let mut xm = x.clone();
+        xm.set(r, c, x.get(r, c) - eps);
+        let lm: f32 = l.forward(&xm).as_slice().iter().map(|v| v * v / 2.0).sum();
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!((dx.get(r, c) - fd).abs() < 2e-2, "dx={} fd={fd}", dx.get(r, c));
+    }
+
+    #[test]
+    fn visit_order_stable() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut l = Linear::new(&mut rng, 5, 2);
+        let mut sizes = Vec::new();
+        l.visit(&mut |p, _| sizes.push(p.len()));
+        assert_eq!(sizes, vec![10, 2]);
+    }
+}

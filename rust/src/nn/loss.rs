@@ -1,0 +1,117 @@
+//! Losses: softmax cross-entropy for the classification heads, and the
+//! paper's Bernoulli-entropy *hardening loss* helpers for FFF nodes.
+
+use crate::tensor::{bernoulli_entropy, log_softmax_rows, softmax_rows, Matrix};
+
+/// Softmax cross-entropy over logits, batch-mean.
+/// Returns `(loss, d_logits)` with `d_logits` already scaled by `1/B`.
+pub fn cross_entropy(logits: &Matrix, labels: &[usize]) -> (f32, Matrix) {
+    assert_eq!(logits.rows(), labels.len());
+    let b = labels.len().max(1) as f32;
+    let logp = log_softmax_rows(logits);
+    let mut loss = 0.0f32;
+    for (r, &l) in labels.iter().enumerate() {
+        loss -= logp.get(r, l);
+    }
+    loss /= b;
+    let mut grad = softmax_rows(logits);
+    for (r, &l) in labels.iter().enumerate() {
+        grad.set(r, l, grad.get(r, l) - 1.0);
+    }
+    grad.scale(1.0 / b);
+    (loss, grad)
+}
+
+/// Hardening-loss value for a batch of node decision probabilities:
+/// batch-mean of Σ_nodes H(p). (The paper writes the batch *sum*; we use
+/// the mean so the hyperparameter `h = 3.0` is batch-size independent —
+/// matching the per-sample normalization its released recipe implies.)
+pub fn hardening_loss(node_probs: &[Vec<f32>]) -> f32 {
+    if node_probs.is_empty() || node_probs[0].is_empty() {
+        return 0.0;
+    }
+    let b = node_probs[0].len() as f32;
+    let total: f32 = node_probs
+        .iter()
+        .map(|probs| probs.iter().map(|&p| bernoulli_entropy(p)).sum::<f32>())
+        .sum();
+    total / b
+}
+
+/// d H(σ(z)) / dz in closed form: `-z · σ(z) · (1 - σ(z))`.
+///
+/// Derivation: H(p) = -p ln p - (1-p) ln(1-p), dH/dp = ln((1-p)/p) = -z
+/// for p = σ(z), and dp/dz = p(1-p).
+#[inline]
+pub fn hardening_grad_logit(logit: f32, p: f32) -> f32 {
+    -logit * p * (1.0 - p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_of_perfect_prediction_is_small() {
+        let logits = Matrix::from_vec(1, 3, vec![20.0, 0.0, 0.0]);
+        let (loss, _) = cross_entropy(&logits, &[0]);
+        assert!(loss < 1e-6, "loss={loss}");
+    }
+
+    #[test]
+    fn ce_uniform_is_log_classes() {
+        let logits = Matrix::zeros(4, 10);
+        let (loss, _) = cross_entropy(&logits, &[0, 3, 5, 9]);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ce_grad_matches_finite_difference() {
+        let logits = Matrix::from_vec(2, 3, vec![0.5, -0.2, 0.1, 1.0, 0.0, -1.0]);
+        let labels = [2usize, 0];
+        let (_, grad) = cross_entropy(&logits, &labels);
+        let eps = 1e-3f32;
+        for r in 0..2 {
+            for c in 0..3 {
+                let mut lp = logits.clone();
+                lp.set(r, c, logits.get(r, c) + eps);
+                let mut lm = logits.clone();
+                lm.set(r, c, logits.get(r, c) - eps);
+                let fd = (cross_entropy(&lp, &labels).0 - cross_entropy(&lm, &labels).0) / (2.0 * eps);
+                assert!((grad.get(r, c) - fd).abs() < 1e-3, "({r},{c}): {} vs {fd}", grad.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn ce_grad_rows_sum_to_zero() {
+        let logits = Matrix::from_vec(1, 4, vec![0.3, 0.2, -0.1, 0.9]);
+        let (_, grad) = cross_entropy(&logits, &[1]);
+        assert!(grad.row(0).iter().sum::<f32>().abs() < 1e-6);
+    }
+
+    #[test]
+    fn hardening_loss_zero_for_hard_decisions() {
+        let probs = vec![vec![0.0, 1.0, 1.0], vec![1.0, 0.0, 0.0]];
+        assert!(hardening_loss(&probs) < 1e-4);
+    }
+
+    #[test]
+    fn hardening_loss_max_at_half() {
+        let hard = hardening_loss(&[vec![0.9, 0.9]]);
+        let soft = hardening_loss(&[vec![0.5, 0.5]]);
+        assert!(soft > hard);
+        assert!((soft - std::f32::consts::LN_2).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hardening_grad_matches_fd() {
+        for &z in &[-2.0f32, -0.3, 0.0, 0.7, 3.0] {
+            let eps = 1e-3;
+            let h = |z: f32| bernoulli_entropy(crate::tensor::sigmoid(z));
+            let fd = (h(z + eps) - h(z - eps)) / (2.0 * eps);
+            let p = crate::tensor::sigmoid(z);
+            assert!((hardening_grad_logit(z, p) - fd).abs() < 1e-3, "z={z}");
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Native model zoo: the paper's fast feedforward network ([`Fff`]) and its
+//! two comparison architectures — the vanilla feedforward layer ([`Ff`])
+//! and the Shazeer-2017 noisy top-k mixture-of-experts ([`Moe`]) — plus a
+//! small vision transformer ([`vit::Vit`]) with pluggable FF/FFF blocks,
+//! and the optimizers the paper's recipes call for.
+//!
+//! All backward passes are written by hand and validated against
+//! finite differences in the module tests; the same math is cross-checked
+//! against the JAX/HLO build in `rust/tests/parity_hlo.rs`.
+
+pub mod checkpoint;
+pub mod ff;
+pub mod fff;
+pub mod init;
+pub mod linear;
+pub mod loss;
+pub mod model;
+pub mod moe;
+pub mod optim;
+pub mod vit;
+
+pub use ff::Ff;
+pub use fff::{Fff, FffConfig, FffInfer};
+pub use linear::Linear;
+pub use model::{accuracy, Model, ParamVisitor};
+pub use moe::{Moe, MoeConfig, MoeInfer};
+pub use optim::{Adam, Optimizer, Sgd};

@@ -1,0 +1,99 @@
+//! The [`Model`] trait every trainable architecture implements; it is what
+//! the [`crate::train`] loop, the optimizers, and the snapshot machinery
+//! program against.
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Visitor over (parameter, gradient) slices. Traversal order is stable
+/// for a given architecture, which is what lets [`crate::nn::optim::Adam`]
+/// key its moment buffers by visit order and lets snapshots round-trip.
+pub type ParamVisitor<'a> = dyn FnMut(&mut [f32], &mut [f32]) + 'a;
+
+/// A trainable model mapping a batch `x: B×dim_in` to logits `B×dim_out`.
+pub trait Model {
+    /// Training-mode forward (for FFF this is the paper's `FORWARD_T`, the
+    /// soft mixture over all leaves). Caches whatever the backward pass
+    /// needs. `rng` drives stochastic components (MoE noise, child
+    /// transposition, dropout).
+    fn forward_train(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix;
+
+    /// Backward from `d_logits` (dL/dlogits, already including the 1/B
+    /// batch-mean factor); accumulates parameter gradients — including the
+    /// model's auxiliary losses (hardening / importance / load) — and
+    /// returns dL/dx for composition into deeper architectures.
+    fn backward(&mut self, d_logits: &Matrix) -> Matrix;
+
+    /// Inference-mode forward (for FFF the paper's `FORWARD_I`: hard,
+    /// single-path decisions; for MoE noiseless top-k).
+    fn forward_infer(&self, x: &Matrix) -> Matrix;
+
+    /// Visit every (param, grad) pair in a stable order.
+    fn visit_params(&mut self, f: &mut ParamVisitor);
+
+    /// Zero all gradient accumulators.
+    fn zero_grad(&mut self) {
+        self.visit_params(&mut |_p, g| g.iter_mut().for_each(|v| *v = 0.0));
+    }
+
+    /// The value of the model's auxiliary loss for the last training
+    /// forward/backward (hardening loss for FFF, importance+load for MoE).
+    fn aux_loss(&self) -> f32 {
+        0.0
+    }
+
+    /// Batch-mean node-decision entropies from the last training forward,
+    /// grouped by layer: one inner vec per FFF layer (the paper's
+    /// hardening monitor, Figures 5–6). Empty for models without FFF
+    /// components.
+    fn entropy_report(&self) -> Vec<Vec<f32>> {
+        Vec::new()
+    }
+
+    /// Copy all parameter values out (early-stopping snapshot).
+    fn snapshot(&mut self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.visit_params(&mut |p, _g| out.extend_from_slice(p));
+        out
+    }
+
+    /// Restore parameters from a [`Model::snapshot`].
+    fn restore(&mut self, snap: &[f32]) {
+        let mut pos = 0;
+        self.visit_params(&mut |p, _g| {
+            p.copy_from_slice(&snap[pos..pos + p.len()]);
+            pos += p.len();
+        });
+        assert_eq!(pos, snap.len(), "restore: snapshot length mismatch");
+    }
+
+    /// Total number of trainable scalars.
+    fn num_params(&mut self) -> usize {
+        let mut n = 0;
+        self.visit_params(&mut |p, _g| n += p.len());
+        n
+    }
+}
+
+/// Classification accuracy of `logits` against `labels`.
+pub fn accuracy(logits: &Matrix, labels: &[usize]) -> f32 {
+    assert_eq!(logits.rows(), labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let pred = crate::tensor::argmax_rows(logits);
+    let hits = pred.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hits as f32 / labels.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_hits() {
+        let logits = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 2.0, -1.0]);
+        assert_eq!(accuracy(&logits, &[0, 1, 0]), 1.0);
+        assert!((accuracy(&logits, &[1, 1, 0]) - 2.0 / 3.0).abs() < 1e-6);
+    }
+}

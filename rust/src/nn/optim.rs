@@ -1,0 +1,155 @@
+//! Optimizers: pure SGD (Table 1 recipe: lr 0.2) and Adam (Tables 2–3).
+//! Both program against [`Model::visit_params`]'s stable traversal order.
+
+use super::model::Model;
+
+/// A first-order optimizer stepping a [`Model`]'s parameters from its
+/// accumulated gradients.
+pub trait Optimizer {
+    /// Apply one update step; gradients are *not* zeroed (the train loop
+    /// owns `zero_grad` so grad-accumulation schemes remain possible).
+    fn step(&mut self, model: &mut dyn Model);
+
+    /// Current learning rate.
+    fn lr(&self) -> f32;
+
+    /// Set the learning rate (plateau halving).
+    fn set_lr(&mut self, lr: f32);
+}
+
+/// Plain SGD: `p -= lr · g`.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, model: &mut dyn Model) {
+        let lr = self.lr;
+        model.visit_params(&mut |p, g| {
+            for (pi, gi) in p.iter_mut().zip(g.iter()) {
+                *pi -= lr * gi;
+            }
+        });
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction; defaults β=(0.9, 0.999), ε=1e-8.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    /// First/second moment buffers, keyed by visit order.
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, model: &mut dyn Model) {
+        self.t += 1;
+        let (lr, b1, b2, eps, t) = (self.lr, self.beta1, self.beta2, self.eps, self.t);
+        let bc1 = 1.0 - b1.powi(t as i32);
+        let bc2 = 1.0 - b2.powi(t as i32);
+        let m = &mut self.m;
+        let v = &mut self.v;
+        let mut slot = 0usize;
+        model.visit_params(&mut |p, g| {
+            if slot == m.len() {
+                m.push(vec![0.0; p.len()]);
+                v.push(vec![0.0; p.len()]);
+            }
+            let (ms, vs) = (&mut m[slot], &mut v[slot]);
+            assert_eq!(ms.len(), p.len(), "Adam: param {slot} changed size");
+            for i in 0..p.len() {
+                ms[i] = b1 * ms[i] + (1.0 - b1) * g[i];
+                vs[i] = b2 * vs[i] + (1.0 - b2) * g[i] * g[i];
+                let mhat = ms[i] / bc1;
+                let vhat = vs[i] / bc2;
+                p[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+            slot += 1;
+        });
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Ff, Model};
+    use crate::rng::Rng;
+    use crate::tensor::Matrix;
+
+    fn toy() -> (Ff, Matrix, Vec<usize>) {
+        let mut rng = Rng::seed_from_u64(0);
+        let model = Ff::new(&mut rng, 4, 8, 2);
+        // Distinct, well-spread inputs so the task is learnable.
+        let x = Matrix::from_fn(16, 4, |r, c| ((r * 4 + c) as f32 * 0.37).sin());
+        let labels: Vec<usize> = (0..16).map(|i| i % 2).collect();
+        (model, x, labels)
+    }
+
+    fn train_steps(opt: &mut dyn Optimizer, steps: usize) -> f32 {
+        let (mut model, x, labels) = toy();
+        let mut rng = Rng::seed_from_u64(1);
+        let mut last = f32::INFINITY;
+        for _ in 0..steps {
+            let logits = model.forward_train(&x, &mut rng);
+            let (loss, dl) = crate::nn::loss::cross_entropy(&logits, &labels);
+            model.zero_grad();
+            model.backward(&dl);
+            opt.step(&mut model);
+            last = loss;
+        }
+        last
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        let final_loss = train_steps(&mut Sgd::new(0.5), 250);
+        assert!(final_loss < 0.2, "loss={final_loss}");
+    }
+
+    #[test]
+    fn adam_reduces_loss() {
+        let final_loss = train_steps(&mut Adam::new(0.02), 250);
+        assert!(final_loss < 0.2, "loss={final_loss}");
+    }
+
+    #[test]
+    fn lr_halving_is_visible() {
+        let mut opt = Adam::new(0.01);
+        opt.set_lr(opt.lr() / 2.0);
+        assert!((opt.lr() - 0.005).abs() < 1e-9);
+    }
+}

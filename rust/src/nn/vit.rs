@@ -1,0 +1,856 @@
+//! A small vision transformer with pluggable FF / FFF blocks — the
+//! Table 3 / Figure 6 subject: "4-layer vision transformers with patch
+//! size 4, hidden dimension 128, input dropout 0.1, and no layer dropout",
+//! whose feedforward layers are replaced by fast feedforward layers.
+//!
+//! Everything (patch embedding, multi-head attention, layer norm, dropout,
+//! residual blocks, classification head) carries a hand-written backward
+//! pass, finite-difference-checked in the tests below.
+
+use super::{Fff, FffConfig, Linear, Model, ParamVisitor};
+use crate::rng::Rng;
+use crate::tensor::{gemm, gemm_nt, gemm_tn, softmax_rows_inplace, Matrix};
+
+/// Which MLP the transformer blocks use.
+#[derive(Clone, Debug)]
+pub enum MlpKind {
+    /// Vanilla feedforward of the given width (the Table 3 baseline).
+    Ff { width: usize },
+    /// Fast feedforward with the given depth/leaf/hardening.
+    Fff { depth: usize, leaf: usize, hardening: f32 },
+}
+
+/// ViT architecture configuration.
+#[derive(Clone, Debug)]
+pub struct VitConfig {
+    pub image_h: usize,
+    pub image_w: usize,
+    pub channels: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub classes: usize,
+    pub input_dropout: f32,
+    pub mlp: MlpKind,
+}
+
+impl VitConfig {
+    /// The paper's Table 3 setup for 32×32×3 inputs.
+    pub fn table3(mlp: MlpKind) -> Self {
+        VitConfig {
+            image_h: 32,
+            image_w: 32,
+            channels: 3,
+            patch: 4,
+            dim: 128,
+            layers: 4,
+            heads: 4,
+            classes: 10,
+            input_dropout: 0.1,
+            mlp,
+        }
+    }
+
+    pub fn tokens(&self) -> usize {
+        (self.image_h / self.patch) * (self.image_w / self.patch)
+    }
+
+    /// Tokens + CLS.
+    pub fn seq(&self) -> usize {
+        self.tokens() + 1
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch * self.channels
+    }
+}
+
+// ---------------------------------------------------------------- LayerNorm
+
+/// Row-wise layer norm with affine parameters.
+#[derive(Clone, Debug)]
+struct LayerNorm {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+    g_gamma: Vec<f32>,
+    g_beta: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+struct LnCache {
+    xhat: Matrix,
+    rstd: Vec<f32>,
+}
+
+impl LayerNorm {
+    fn new(dim: usize) -> Self {
+        LayerNorm {
+            gamma: vec![1.0; dim],
+            beta: vec![0.0; dim],
+            g_gamma: vec![0.0; dim],
+            g_beta: vec![0.0; dim],
+        }
+    }
+
+    fn forward(&self, x: &Matrix) -> (Matrix, LnCache) {
+        let dim = x.cols() as f32;
+        let mut xhat = x.clone();
+        let mut rstds = Vec::with_capacity(x.rows());
+        for r in 0..x.rows() {
+            let row = xhat.row_mut(r);
+            let mean = row.iter().sum::<f32>() / dim;
+            let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / dim;
+            let rstd = 1.0 / (var + 1e-5).sqrt();
+            for v in row.iter_mut() {
+                *v = (*v - mean) * rstd;
+            }
+            rstds.push(rstd);
+        }
+        let mut y = xhat.clone();
+        for r in 0..y.rows() {
+            let row = y.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = *v * self.gamma[j] + self.beta[j];
+            }
+        }
+        (y, LnCache { xhat, rstd: rstds })
+    }
+
+    fn backward(&mut self, dy: &Matrix, cache: &LnCache) -> Matrix {
+        let dim = dy.cols();
+        let dimf = dim as f32;
+        let mut dx = Matrix::zeros(dy.rows(), dim);
+        for r in 0..dy.rows() {
+            let dyr = dy.row(r);
+            let xh = cache.xhat.row(r);
+            for j in 0..dim {
+                self.g_gamma[j] += dyr[j] * xh[j];
+                self.g_beta[j] += dyr[j];
+            }
+            let dxh: Vec<f32> = (0..dim).map(|j| dyr[j] * self.gamma[j]).collect();
+            let mean_dxh = dxh.iter().sum::<f32>() / dimf;
+            let mean_dxh_xh = dxh.iter().zip(xh).map(|(a, b)| a * b).sum::<f32>() / dimf;
+            let rstd = cache.rstd[r];
+            for j in 0..dim {
+                dx.set(r, j, rstd * (dxh[j] - mean_dxh - xh[j] * mean_dxh_xh));
+            }
+        }
+        dx
+    }
+
+    fn visit(&mut self, f: &mut ParamVisitor) {
+        f(&mut self.gamma, &mut self.g_gamma);
+        f(&mut self.beta, &mut self.g_beta);
+    }
+}
+
+// ---------------------------------------------------------------- Attention
+
+/// Multi-head self-attention over per-sample contiguous token blocks.
+#[derive(Clone, Debug)]
+struct Mha {
+    wq: Linear,
+    wk: Linear,
+    wv: Linear,
+    wo: Linear,
+    heads: usize,
+}
+
+#[derive(Clone, Debug)]
+struct MhaCache {
+    x: Matrix,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    /// Softmaxed attention per (sample, head): seq×seq each.
+    attn: Vec<Matrix>,
+    /// Concatenated head outputs (input to wo).
+    ctx: Matrix,
+    seq: usize,
+}
+
+impl Mha {
+    fn new(rng: &mut Rng, dim: usize, heads: usize) -> Self {
+        assert_eq!(dim % heads, 0);
+        Mha {
+            wq: Linear::new(rng, dim, dim),
+            wk: Linear::new(rng, dim, dim),
+            wv: Linear::new(rng, dim, dim),
+            wo: Linear::new(rng, dim, dim),
+            heads,
+        }
+    }
+
+    /// Copy head `h`'s columns of sample `b`'s token block into seq×dh.
+    fn slice_head(m: &Matrix, b: usize, h: usize, seq: usize, dh: usize) -> Matrix {
+        let mut out = Matrix::zeros(seq, dh);
+        for t in 0..seq {
+            let row = m.row(b * seq + t);
+            out.row_mut(t).copy_from_slice(&row[h * dh..(h + 1) * dh]);
+        }
+        out
+    }
+
+    fn scatter_head(m: &mut Matrix, src: &Matrix, b: usize, h: usize, seq: usize, dh: usize) {
+        for t in 0..seq {
+            let row = m.row_mut(b * seq + t);
+            row[h * dh..(h + 1) * dh].copy_from_slice(src.row(t));
+        }
+    }
+
+    /// `x`: (B·seq)×dim with per-sample contiguous blocks.
+    fn forward(&self, x: &Matrix, seq: usize) -> (Matrix, MhaCache) {
+        let dim = x.cols();
+        let dh = dim / self.heads;
+        let batches = x.rows() / seq;
+        let q = self.wq.forward(x);
+        let k = self.wk.forward(x);
+        let v = self.wv.forward(x);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = Matrix::zeros(x.rows(), dim);
+        let mut attns = Vec::with_capacity(batches * self.heads);
+        for b in 0..batches {
+            for h in 0..self.heads {
+                let qh = Self::slice_head(&q, b, h, seq, dh);
+                let kh = Self::slice_head(&k, b, h, seq, dh);
+                let vh = Self::slice_head(&v, b, h, seq, dh);
+                let mut scores = gemm_nt(&qh, &kh);
+                scores.scale(scale);
+                softmax_rows_inplace(&mut scores);
+                let out = gemm(&scores, &vh);
+                Self::scatter_head(&mut ctx, &out, b, h, seq, dh);
+                attns.push(scores);
+            }
+        }
+        let y = self.wo.forward(&ctx);
+        (y, MhaCache { x: x.clone(), q, k, v, attn: attns, ctx, seq })
+    }
+
+    fn backward(&mut self, dy: &Matrix, cache: &MhaCache) -> Matrix {
+        let dim = dy.cols();
+        let dh = dim / self.heads;
+        let seq = cache.seq;
+        let batches = dy.rows() / seq;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let dctx = self.wo.backward(&cache.ctx, dy);
+        let mut dq = Matrix::zeros(dy.rows(), dim);
+        let mut dk = Matrix::zeros(dy.rows(), dim);
+        let mut dv = Matrix::zeros(dy.rows(), dim);
+        for b in 0..batches {
+            for h in 0..self.heads {
+                let attn = &cache.attn[b * self.heads + h];
+                let dout = Self::slice_head(&dctx, b, h, seq, dh);
+                let qh = Self::slice_head(&cache.q, b, h, seq, dh);
+                let kh = Self::slice_head(&cache.k, b, h, seq, dh);
+                let vh = Self::slice_head(&cache.v, b, h, seq, dh);
+                // dV = attnᵀ · dout
+                let dvh = gemm_tn(attn, &dout);
+                // dAttn = dout · vᵀ
+                let dattn = gemm_nt(&dout, &vh);
+                // Softmax backward per row.
+                let mut dscores = dattn;
+                for t in 0..seq {
+                    let a = attn.row(t);
+                    let dsr = dscores.row_mut(t);
+                    let dot: f32 = a.iter().zip(dsr.iter()).map(|(x, y)| x * y).sum();
+                    for (ds, &av) in dsr.iter_mut().zip(a) {
+                        *ds = av * (*ds - dot);
+                    }
+                }
+                dscores.scale(scale);
+                // dQ = dscores · K ; dK = dscoresᵀ · Q
+                let dqh = gemm(&dscores, &kh);
+                let dkh = gemm_tn(&dscores, &qh);
+                Self::scatter_head(&mut dq, &dqh, b, h, seq, dh);
+                Self::scatter_head(&mut dk, &dkh, b, h, seq, dh);
+                Self::scatter_head(&mut dv, &dvh, b, h, seq, dh);
+            }
+        }
+        let mut dx = self.wq.backward(&cache.x, &dq);
+        dx.add_assign(&self.wk.backward(&cache.x, &dk));
+        dx.add_assign(&self.wv.backward(&cache.x, &dv));
+        dx
+    }
+
+    fn visit(&mut self, f: &mut ParamVisitor) {
+        self.wq.visit(f);
+        self.wk.visit(f);
+        self.wv.visit(f);
+        self.wo.visit(f);
+    }
+}
+
+// ---------------------------------------------------------------- MLP block
+
+/// The block MLP: vanilla FF or the paper's FFF, both dim→dim.
+#[derive(Clone, Debug)]
+enum Mlp {
+    Ff(super::Ff),
+    Fff(Fff),
+}
+
+impl Mlp {
+    fn forward_train(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
+        match self {
+            Mlp::Ff(m) => m.forward_train(x, rng),
+            Mlp::Fff(m) => m.forward_train(x, rng),
+        }
+    }
+
+    fn backward(&mut self, dy: &Matrix) -> Matrix {
+        match self {
+            Mlp::Ff(m) => m.backward(dy),
+            Mlp::Fff(m) => m.backward(dy),
+        }
+    }
+
+    fn forward_infer(&self, x: &Matrix) -> Matrix {
+        match self {
+            Mlp::Ff(m) => m.forward_infer(x),
+            Mlp::Fff(m) => m.forward_infer(x),
+        }
+    }
+
+    fn visit(&mut self, f: &mut ParamVisitor) {
+        match self {
+            Mlp::Ff(m) => m.visit_params(f),
+            Mlp::Fff(m) => m.visit_params(f),
+        }
+    }
+
+    fn aux_loss(&self) -> f32 {
+        match self {
+            Mlp::Ff(_) => 0.0,
+            Mlp::Fff(m) => m.aux_loss(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- Block
+
+#[derive(Clone, Debug)]
+struct Block {
+    ln1: LayerNorm,
+    attn: Mha,
+    ln2: LayerNorm,
+    mlp: Mlp,
+}
+
+#[derive(Clone, Debug)]
+struct BlockCache {
+    ln1: LnCache,
+    mha: MhaCache,
+    ln2: LnCache,
+}
+
+impl Block {
+    fn forward_train(&mut self, x: &Matrix, seq: usize, rng: &mut Rng) -> (Matrix, BlockCache) {
+        let (n1, ln1c) = self.ln1.forward(x);
+        let (a, mhac) = self.attn.forward(&n1, seq);
+        let mut x_mid = x.clone();
+        x_mid.add_assign(&a);
+        let (n2, ln2c) = self.ln2.forward(&x_mid);
+        let m = self.mlp.forward_train(&n2, rng);
+        let mut y = x_mid;
+        y.add_assign(&m);
+        (y, BlockCache { ln1: ln1c, mha: mhac, ln2: ln2c })
+    }
+
+    fn backward(&mut self, dy: &Matrix, cache: &BlockCache) -> Matrix {
+        // y = x_mid + mlp(ln2(x_mid))
+        let dn2 = self.mlp.backward(dy);
+        let mut dx_mid = self.ln2.backward(&dn2, &cache.ln2);
+        dx_mid.add_assign(dy);
+        // x_mid = x + attn(ln1(x))
+        let dn1 = self.attn.backward(&dx_mid, &cache.mha);
+        let mut dx = self.ln1.backward(&dn1, &cache.ln1);
+        dx.add_assign(&dx_mid);
+        dx
+    }
+
+    fn forward_infer(&self, x: &Matrix, seq: usize) -> Matrix {
+        let (n1, _) = self.ln1.forward(x);
+        let (a, _) = self.attn.forward(&n1, seq);
+        let mut x_mid = x.clone();
+        x_mid.add_assign(&a);
+        let (n2, _) = self.ln2.forward(&x_mid);
+        let m = self.mlp.forward_infer(&n2);
+        let mut y = x_mid;
+        y.add_assign(&m);
+        y
+    }
+
+    fn visit(&mut self, f: &mut ParamVisitor) {
+        self.ln1.visit(f);
+        self.attn.visit(f);
+        self.ln2.visit(f);
+        self.mlp.visit(f);
+    }
+}
+
+// ---------------------------------------------------------------- ViT
+
+/// The vision transformer.
+#[derive(Clone, Debug)]
+pub struct Vit {
+    pub cfg: VitConfig,
+    patch_embed: Linear,
+    pos: Matrix, // seq × dim
+    g_pos: Matrix,
+    cls: Vec<f32>,
+    g_cls: Vec<f32>,
+    blocks: Vec<Block>,
+    ln_f: LayerNorm,
+    head: Linear,
+    cache: Option<VitCache>,
+    last_aux: f32,
+}
+
+#[derive(Clone, Debug)]
+struct VitCache {
+    patches: Matrix,
+    dropout_mask: Option<Matrix>,
+    blocks: Vec<BlockCache>,
+    ln_f: LnCache,
+    ln_f_in: Matrix,
+    batch: usize,
+}
+
+impl Vit {
+    pub fn new(rng: &mut Rng, cfg: VitConfig) -> Self {
+        assert_eq!(cfg.image_h % cfg.patch, 0);
+        assert_eq!(cfg.image_w % cfg.patch, 0);
+        let patch_embed = Linear::new(rng, cfg.patch_dim(), cfg.dim);
+        let pos = super::init::normal(rng, cfg.seq(), cfg.dim, 0.02);
+        let g_pos = Matrix::zeros(cfg.seq(), cfg.dim);
+        let mut cls = vec![0.0; cfg.dim];
+        rng.fill_normal(&mut cls, 0.0, 0.02);
+        let g_cls = vec![0.0; cfg.dim];
+        let blocks = (0..cfg.layers)
+            .map(|_| Block {
+                ln1: LayerNorm::new(cfg.dim),
+                attn: Mha::new(rng, cfg.dim, cfg.heads),
+                ln2: LayerNorm::new(cfg.dim),
+                mlp: match &cfg.mlp {
+                    MlpKind::Ff { width } => Mlp::Ff(super::Ff::new(rng, cfg.dim, *width, cfg.dim)),
+                    MlpKind::Fff { depth, leaf, hardening } => {
+                        let mut fc = FffConfig::new(cfg.dim, cfg.dim, *depth, *leaf);
+                        fc.hardening = *hardening;
+                        Mlp::Fff(Fff::new(rng, fc))
+                    }
+                },
+            })
+            .collect();
+        let ln_f = LayerNorm::new(cfg.dim);
+        let head = Linear::new(rng, cfg.dim, cfg.classes);
+        Vit { cfg, patch_embed, pos, g_pos, cls, g_cls, blocks, ln_f, head, cache: None, last_aux: 0.0 }
+    }
+
+    /// Cut flattened images into patch rows: (B·T) × patch_dim.
+    fn patchify(&self, x: &Matrix) -> Matrix {
+        let (h, w, c, p) = (self.cfg.image_h, self.cfg.image_w, self.cfg.channels, self.cfg.patch);
+        let t = self.cfg.tokens();
+        let pd = self.cfg.patch_dim();
+        let pw = w / p;
+        let ph = h / p;
+        let mut out = Matrix::zeros(x.rows() * t, pd);
+        for b in 0..x.rows() {
+            let img = x.row(b);
+            for ty in 0..ph {
+                for tx in 0..pw {
+                    let row = out.row_mut(b * t + ty * pw + tx);
+                    let mut k = 0;
+                    for dy in 0..p {
+                        for dxp in 0..p {
+                            let (y, xx) = (ty * p + dy, tx * p + dxp);
+                            for ch in 0..c {
+                                row[k] = img[(y * w + xx) * c + ch];
+                                k += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Build the token matrix with CLS + positional embeddings.
+    fn tokens_from(&self, emb: &Matrix, batch: usize) -> Matrix {
+        let seq = self.cfg.seq();
+        let t = self.cfg.tokens();
+        let dim = self.cfg.dim;
+        let mut toks = Matrix::zeros(batch * seq, dim);
+        for b in 0..batch {
+            let row = toks.row_mut(b * seq);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = self.cls[j] + self.pos.get(0, j);
+            }
+            for tt in 0..t {
+                let e = emb.row(b * t + tt);
+                let row = toks.row_mut(b * seq + 1 + tt);
+                for j in 0..dim {
+                    row[j] = e[j] + self.pos.get(1 + tt, j);
+                }
+            }
+        }
+        toks
+    }
+
+    /// Batch-mean node entropies per transformer layer for the last
+    /// training forward (Figure 6's monitor). Empty vecs for FF blocks.
+    pub fn layer_entropies(&self) -> Vec<Vec<f32>> {
+        self.blocks
+            .iter()
+            .map(|b| match &b.mlp {
+                Mlp::Fff(f) => f.last_entropies.clone(),
+                Mlp::Ff(_) => Vec::new(),
+            })
+            .collect()
+    }
+
+    /// Compiled inference models of the FFF layers (layer-speedup
+    /// measurement); `None` entries for FF blocks.
+    pub fn compile_mlp_infer(&self) -> Vec<Option<super::FffInfer>> {
+        self.blocks
+            .iter()
+            .map(|b| match &b.mlp {
+                Mlp::Fff(f) => Some(f.compile_infer()),
+                Mlp::Ff(_) => None,
+            })
+            .collect()
+    }
+}
+
+impl Model for Vit {
+    fn forward_train(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
+        let batch = x.rows();
+        let seq = self.cfg.seq();
+        let patches = self.patchify(x);
+        let emb = self.patch_embed.forward(&patches);
+        let mut toks = self.tokens_from(&emb, batch);
+        let dropout_mask = if self.cfg.input_dropout > 0.0 {
+            let keep = 1.0 - self.cfg.input_dropout;
+            let mut mask = Matrix::zeros(toks.rows(), toks.cols());
+            for v in mask.as_mut_slice() {
+                *v = if rng.bernoulli(keep as f64) { 1.0 / keep } else { 0.0 };
+            }
+            toks.mul_assign_elem(&mask);
+            Some(mask)
+        } else {
+            None
+        };
+        let mut caches = Vec::with_capacity(self.blocks.len());
+        let mut h = toks;
+        for blk in &mut self.blocks {
+            let (nh, c) = blk.forward_train(&h, seq, rng);
+            h = nh;
+            caches.push(c);
+        }
+        let cls_idx: Vec<usize> = (0..batch).map(|b| b * seq).collect();
+        let cls_rows = h.gather_rows(&cls_idx);
+        let (n, lnc) = self.ln_f.forward(&cls_rows);
+        let logits = self.head.forward(&n);
+        self.last_aux = self.blocks.iter().map(|b| b.mlp.aux_loss()).sum();
+        self.cache =
+            Some(VitCache { patches, dropout_mask, blocks: caches, ln_f: lnc, ln_f_in: n, batch });
+        logits
+    }
+
+    fn backward(&mut self, d_logits: &Matrix) -> Matrix {
+        let cache = self.cache.take().expect("backward before forward_train");
+        let batch = cache.batch;
+        let seq = self.cfg.seq();
+        let dim = self.cfg.dim;
+        let dn = self.head.backward(&cache.ln_f_in, d_logits);
+        let dcls_rows = self.ln_f.backward(&dn, &cache.ln_f);
+        let mut dh = Matrix::zeros(batch * seq, dim);
+        for b in 0..batch {
+            dh.row_mut(b * seq).copy_from_slice(dcls_rows.row(b));
+        }
+        for (blk, c) in self.blocks.iter_mut().zip(cache.blocks.iter()).rev() {
+            dh = blk.backward(&dh, c);
+        }
+        if let Some(mask) = &cache.dropout_mask {
+            dh.mul_assign_elem(mask);
+        }
+        // Token grads → pos, cls, patch embedding.
+        let t = self.cfg.tokens();
+        for b in 0..batch {
+            for s in 0..seq {
+                let g = dh.row(b * seq + s).to_vec();
+                for j in 0..dim {
+                    self.g_pos.set(s, j, self.g_pos.get(s, j) + g[j]);
+                }
+                if s == 0 {
+                    for j in 0..dim {
+                        self.g_cls[j] += g[j];
+                    }
+                }
+            }
+        }
+        let mut demb = Matrix::zeros(batch * t, dim);
+        for b in 0..batch {
+            for tt in 0..t {
+                demb.row_mut(b * t + tt).copy_from_slice(dh.row(b * seq + 1 + tt));
+            }
+        }
+        let _ = self.patch_embed.backward(&cache.patches, &demb);
+        // Images are leaves; input grads not propagated further.
+        Matrix::zeros(batch, self.cfg.image_h * self.cfg.image_w * self.cfg.channels)
+    }
+
+    fn forward_infer(&self, x: &Matrix) -> Matrix {
+        let batch = x.rows();
+        let seq = self.cfg.seq();
+        let patches = self.patchify(x);
+        let emb = self.patch_embed.forward(&patches);
+        let mut h = self.tokens_from(&emb, batch);
+        for blk in &self.blocks {
+            h = blk.forward_infer(&h, seq);
+        }
+        let cls_idx: Vec<usize> = (0..batch).map(|b| b * seq).collect();
+        let cls_rows = h.gather_rows(&cls_idx);
+        let (n, _) = self.ln_f.forward(&cls_rows);
+        self.head.forward(&n)
+    }
+
+    fn visit_params(&mut self, f: &mut ParamVisitor) {
+        self.patch_embed.visit(f);
+        f(self.pos.as_mut_slice(), self.g_pos.as_mut_slice());
+        f(&mut self.cls, &mut self.g_cls);
+        for blk in &mut self.blocks {
+            blk.visit(f);
+        }
+        self.ln_f.visit(f);
+        self.head.visit(f);
+    }
+
+    fn aux_loss(&self) -> f32 {
+        self.last_aux
+    }
+
+    fn entropy_report(&self) -> Vec<Vec<f32>> {
+        self.layer_entropies()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::cross_entropy;
+    use crate::nn::Optimizer;
+
+    fn tiny_cfg(mlp: MlpKind) -> VitConfig {
+        VitConfig {
+            image_h: 8,
+            image_w: 8,
+            channels: 1,
+            patch: 4,
+            dim: 16,
+            layers: 2,
+            heads: 2,
+            classes: 3,
+            input_dropout: 0.0,
+            mlp,
+        }
+    }
+
+    fn images(b: usize) -> Matrix {
+        Matrix::from_fn(b, 64, |r, c| (((r * 64 + c) as f32) * 0.173).sin() * 0.5 + 0.5)
+    }
+
+    #[test]
+    fn shapes_and_patching() {
+        let cfg = tiny_cfg(MlpKind::Ff { width: 8 });
+        assert_eq!(cfg.tokens(), 4);
+        assert_eq!(cfg.seq(), 5);
+        assert_eq!(cfg.patch_dim(), 16);
+        let mut rng = Rng::seed_from_u64(0);
+        let mut vit = Vit::new(&mut rng, cfg);
+        let x = images(3);
+        let y = vit.forward_train(&x, &mut rng);
+        assert_eq!(y.shape(), (3, 3));
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn patchify_preserves_pixels() {
+        let cfg = tiny_cfg(MlpKind::Ff { width: 8 });
+        let mut rng = Rng::seed_from_u64(0);
+        let vit = Vit::new(&mut rng, cfg);
+        let x = images(1);
+        let p = vit.patchify(&x);
+        assert_eq!(p.shape(), (4, 16));
+        // Patch (0,0), pixel (1,1) == image pixel (1,1) = flat index 9.
+        assert_eq!(p.get(0, 5), x.get(0, 9));
+        // Patch (1,1) top-left == image pixel (4,4).
+        assert_eq!(p.get(3, 0), x.get(0, 4 * 8 + 4));
+    }
+
+    #[test]
+    fn infer_matches_train_mode_for_ff_no_dropout() {
+        let cfg = tiny_cfg(MlpKind::Ff { width: 8 });
+        let mut rng = Rng::seed_from_u64(1);
+        let mut vit = Vit::new(&mut rng, cfg);
+        let x = images(2);
+        let yt = vit.forward_train(&x, &mut rng);
+        let yi = vit.forward_infer(&x);
+        assert!(yt.max_abs_diff(&yi) < 1e-4, "diff={}", yt.max_abs_diff(&yi));
+    }
+
+    #[test]
+    fn gradient_check_through_the_whole_transformer() {
+        let cfg = tiny_cfg(MlpKind::Ff { width: 8 });
+        let mut rng = Rng::seed_from_u64(2);
+        let mut vit = Vit::new(&mut rng, cfg);
+        let x = images(2);
+        let labels = vec![0usize, 2];
+        let logits = vit.forward_train(&x, &mut rng);
+        let (_, dl) = cross_entropy(&logits, &labels);
+        vit.zero_grad();
+        vit.backward(&dl);
+
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        vit.visit_params(&mut |_p, g| grads.push(g.to_vec()));
+        let n_slots = grads.len();
+        let eps = 3e-2f32;
+        for slot in (0..n_slots).step_by(n_slots.div_ceil(12).max(1)) {
+            let idx = grads[slot].len() / 3;
+            let eval = |delta: f32, m: &mut Vit| -> f32 {
+                let mut s = 0;
+                m.visit_params(&mut |p, _| {
+                    if s == slot {
+                        p[idx] += delta;
+                    }
+                    s += 1;
+                });
+                let y = m.forward_infer(&x);
+                let (loss, _) = cross_entropy(&y, &labels);
+                let mut s2 = 0;
+                m.visit_params(&mut |p, _| {
+                    if s2 == slot {
+                        p[idx] -= delta;
+                    }
+                    s2 += 1;
+                });
+                loss
+            };
+            let fd = (eval(eps, &mut vit) - eval(-eps, &mut vit)) / (2.0 * eps);
+            let g = grads[slot][idx];
+            assert!(
+                (g - fd).abs() < 5e-3 + 0.12 * fd.abs(),
+                "slot {slot} idx {idx}: analytic {g} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_check_with_fff_blocks() {
+        let cfg = tiny_cfg(MlpKind::Fff { depth: 2, leaf: 2, hardening: 0.0 });
+        let mut rng = Rng::seed_from_u64(3);
+        let mut vit = Vit::new(&mut rng, cfg);
+        let x = images(2);
+        let labels = vec![1usize, 0];
+        let logits = vit.forward_train(&x, &mut rng);
+        let (_, dl) = cross_entropy(&logits, &labels);
+        vit.zero_grad();
+        vit.backward(&dl);
+
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        vit.visit_params(&mut |_p, g| grads.push(g.to_vec()));
+        let n_slots = grads.len();
+        let eps = 3e-2f32;
+        for slot in [0, n_slots / 3, n_slots / 2, n_slots - 2] {
+            let idx = grads[slot].len().saturating_sub(1) / 2;
+            let eval = |delta: f32, m: &mut Vit| -> f32 {
+                let mut s = 0;
+                m.visit_params(&mut |p, _| {
+                    if s == slot {
+                        p[idx] += delta;
+                    }
+                    s += 1;
+                });
+                let mut r = Rng::seed_from_u64(99);
+                let y = m.forward_train(&x, &mut r);
+                let (loss, _) = cross_entropy(&y, &labels);
+                let mut s2 = 0;
+                m.visit_params(&mut |p, _| {
+                    if s2 == slot {
+                        p[idx] -= delta;
+                    }
+                    s2 += 1;
+                });
+                loss
+            };
+            let fd = (eval(eps, &mut vit) - eval(-eps, &mut vit)) / (2.0 * eps);
+            let g = grads[slot][idx];
+            assert!(
+                (g - fd).abs() < 6e-3 + 0.12 * fd.abs(),
+                "slot {slot} idx {idx}: analytic {g} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn vit_learns_a_tiny_task() {
+        let cfg = tiny_cfg(MlpKind::Fff { depth: 1, leaf: 4, hardening: 1.0 });
+        let mut rng = Rng::seed_from_u64(4);
+        let mut vit = Vit::new(&mut rng, cfg);
+        let mut opt = crate::nn::Adam::new(3e-3);
+        let n = 24;
+        let mut x = Matrix::zeros(n, 64);
+        let mut labels = Vec::new();
+        let mut drng = Rng::seed_from_u64(5);
+        for r in 0..n {
+            let class = r % 3;
+            let base = class as f32 * 0.33;
+            for v in x.row_mut(r) {
+                *v = base + drng.uniform_f32() * 0.2;
+            }
+            labels.push(class);
+        }
+        let mut loss0 = None;
+        let mut lossn = 0.0;
+        for _ in 0..60 {
+            let y = vit.forward_train(&x, &mut rng);
+            let (loss, dl) = cross_entropy(&y, &labels);
+            vit.zero_grad();
+            vit.backward(&dl);
+            opt.step(&mut vit);
+            loss0.get_or_insert(loss);
+            lossn = loss;
+        }
+        assert!(lossn < loss0.unwrap() * 0.5, "{} -> {lossn}", loss0.unwrap());
+        let acc = crate::nn::accuracy(&vit.forward_infer(&x), &labels);
+        assert!(acc > 0.8, "acc={acc}");
+    }
+
+    #[test]
+    fn layer_entropies_reported_for_fff() {
+        let cfg = tiny_cfg(MlpKind::Fff { depth: 2, leaf: 2, hardening: 0.1 });
+        let mut rng = Rng::seed_from_u64(6);
+        let mut vit = Vit::new(&mut rng, cfg);
+        let x = images(2);
+        let _ = vit.forward_train(&x, &mut rng);
+        let ents = vit.layer_entropies();
+        assert_eq!(ents.len(), 2);
+        assert!(ents.iter().all(|e| e.len() == 3)); // 2^2 − 1 nodes
+    }
+
+    #[test]
+    fn dropout_only_in_training() {
+        let mut cfg = tiny_cfg(MlpKind::Ff { width: 8 });
+        cfg.input_dropout = 0.5;
+        let mut rng = Rng::seed_from_u64(7);
+        let mut vit = Vit::new(&mut rng, cfg);
+        let x = images(2);
+        let y1 = vit.forward_train(&x, &mut rng);
+        let y2 = vit.forward_train(&x, &mut rng);
+        assert!(y1.max_abs_diff(&y2) > 1e-6, "dropout should randomize training");
+        let i1 = vit.forward_infer(&x);
+        let i2 = vit.forward_infer(&x);
+        assert!(i1.max_abs_diff(&i2) < 1e-9, "inference must be deterministic");
+    }
+}

@@ -1,0 +1,287 @@
+//! Deterministic, splittable pseudo-random number generation.
+//!
+//! The offline registry ships no `rand` crate, so the repository carries its
+//! own generator: **xoshiro256++**, the same generator family JAX's host-side
+//! seeding and most modern simulators use. Every experiment in this
+//! reproduction derives its stream from an explicit `u64` seed so that
+//! tables and figures regenerate bit-identically run to run.
+//!
+//! # Example
+//! ```
+//! use fastfeedforward::rng::Rng;
+//! let mut rng = Rng::seed_from_u64(42);
+//! let x: f32 = rng.normal_f32(0.0, 1.0);
+//! let mut child = rng.split();            // independent stream
+//! assert!(x.is_finite());
+//! assert_ne!(child.next_u64(), rng.next_u64());
+//! ```
+
+mod xoshiro;
+
+pub use xoshiro::Xoshiro256PlusPlus;
+
+/// The library-wide RNG handle. A thin, copyable wrapper over
+/// xoshiro256++ plus the sampling routines the experiments need.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    core: Xoshiro256PlusPlus,
+}
+
+impl Rng {
+    /// Seed deterministically from a single `u64` (SplitMix64 expansion,
+    /// following Blackman & Vigna's recommendation).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Rng { core: Xoshiro256PlusPlus::seed_from_u64(seed) }
+    }
+
+    /// Derive an independent child stream (jump-based split). The parent
+    /// remains usable; parent and child never overlap for < 2^128 draws.
+    pub fn split(&mut self) -> Self {
+        // Advance parent past the child's region with a long jump.
+        let child = self.core.clone();
+        self.core.long_jump();
+        Rng { core: child }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.core.next_u64()
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.core.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` (f32).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform_f32()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift (unbiased
+    /// enough for simulation purposes; rejection step included).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Rng::below(0)");
+        let n = n as u64;
+        // Rejection sampling to remove modulo bias.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; this is not the hot path).
+    pub fn standard_normal_f32(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            return (r * theta.cos()) as f32;
+        }
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.standard_normal_f32()
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform_f64() < p
+    }
+
+    /// Sample an index from an (unnormalized, non-negative) weight vector.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+        assert!(total > 0.0, "categorical: all weights zero");
+        let mut t = self.uniform_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w.max(0.0) as f64;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fill `buf` with i.i.d. N(mean, std) samples.
+    pub fn fill_normal(&mut self, buf: &mut [f32], mean: f32, std: f32) {
+        for v in buf.iter_mut() {
+            *v = self.normal_f32(mean, std);
+        }
+    }
+
+    /// Fill `buf` with i.i.d. U[lo, hi) samples.
+    pub fn fill_uniform(&mut self, buf: &mut [f32], lo: f32, hi: f32) {
+        for v in buf.iter_mut() {
+            *v = self.uniform_range_f32(lo, hi);
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.below(i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k <= n), order randomized.
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Partial Fisher–Yates.
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            p.swap(i, j);
+        }
+        p.truncate(k);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from_u64(1);
+        let mut b = Rng::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Rng::seed_from_u64(99);
+        let mut child = parent.split();
+        let a: Vec<u64> = (0..32).map(|_| parent.next_u64()).collect();
+        let b: Vec<u64> = (0..32).map(|_| child.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..10_000 {
+            let u = rng.uniform_f32();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut rng = Rng::seed_from_u64(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from_u64(5);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.standard_normal_f32() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::seed_from_u64(6);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            let v = rng.below(7);
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut rng = Rng::seed_from_u64(8);
+        let p = rng.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut rng = Rng::seed_from_u64(9);
+        let picks = rng.choose_k(50, 20);
+        assert_eq!(picks.len(), 20);
+        let mut s = picks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Rng::seed_from_u64(10);
+        let w = [0.0f32, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Rng::seed_from_u64(11);
+        let hits = (0..100_000).filter(|_| rng.bernoulli(0.25)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.25).abs() < 0.01, "rate={rate}");
+    }
+}

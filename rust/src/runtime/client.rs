@@ -1,0 +1,160 @@
+//! The PJRT client wrapper: HLO-text → compile → execute, with an
+//! executable cache and initial-parameter loading.
+
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::{HostTensor, TensorData};
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates shapes against the manifest
+    /// and returns the decomposed tuple outputs.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.dims != s.dims || t.dtype() != s.dtype {
+                bail!(
+                    "{}: input {i} mismatch: got {:?}/{:?}, manifest says {:?}/{:?}",
+                    self.spec.name,
+                    t.dims,
+                    t.dtype(),
+                    s.dims,
+                    s.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).context("pjrt execute")?;
+        // Single replica; jax lowering used return_tuple=True → 1 tuple buffer.
+        let mut lit = result[0][0].to_literal_sync().context("to_literal_sync")?;
+        let parts = lit.decompose_tuple().context("decompose outputs")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in &parts {
+            out.push(HostTensor::from_literal(p)?);
+        }
+        if out.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: manifest says {} outputs, executable returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+}
+
+/// Artifact directory + PJRT client + compiled-executable cache.
+///
+/// Not `Send`: PJRT handles stay on the thread that created them; the
+/// coordinator gives each worker thread its own `Runtime`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (expects `manifest.kv` inside).
+    pub fn from_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The artifact directory this runtime reads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an artifact by name; cached per runtime.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        let exe = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Initial parameters recorded by the AOT pipeline for this artifact,
+    /// split per the manifest's leading input shapes (all f32).
+    pub fn initial_params(&self, name: &str) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.get(name).with_context(|| format!("artifact {name:?}"))?;
+        let pf = spec.params_file.as_ref().with_context(|| format!("{name}: no params blob"))?;
+        let bytes = std::fs::read(pf).with_context(|| format!("read {pf:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{name}: params blob length {} not a multiple of 4", bytes.len());
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(spec.params_count);
+        let mut pos = 0usize;
+        for ts in spec.inputs.iter().take(spec.params_count) {
+            let n = ts.num_elements();
+            if pos + n > floats.len() {
+                bail!("{name}: params blob too short at tensor {}", out.len());
+            }
+            out.push(HostTensor {
+                dims: ts.dims.clone(),
+                data: TensorData::F32(floats[pos..pos + n].to_vec()),
+            });
+            pos += n;
+        }
+        if pos != floats.len() {
+            bail!("{name}: params blob has {} trailing floats", floats.len() - pos);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Compile-and-execute tests live in `rust/tests/runtime_hlo.rs`
+    //! (they need `make artifacts` to have run).
+}

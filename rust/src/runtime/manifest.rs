@@ -1,0 +1,149 @@
+//! Artifact manifest (`artifacts/manifest.kv`) parsing.
+//!
+//! The AOT pipeline (python/compile/aot.py) records one section per entry
+//! point: HLO file, ordered input/output specs (`8x16xf32;...`), and the
+//! optional initial-parameter blob.
+
+use crate::config::KvFile;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::tensor::Dtype;
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dims: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    /// Parse `8x16xf32` / `4xi32` / `scalar_f32`.
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        if let Some(dt) = s.strip_prefix("scalar_") {
+            return Ok(TensorSpec { dims: vec![], dtype: Dtype::parse(dt)? });
+        }
+        let parts: Vec<&str> = s.split('x').collect();
+        if parts.len() < 2 {
+            bail!("bad tensor spec {s:?}");
+        }
+        let dtype = Dtype::parse(parts[parts.len() - 1])?;
+        let dims = parts[..parts.len() - 1]
+            .iter()
+            .map(|p| p.parse::<usize>().with_context(|| format!("bad dim in {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dims, dtype })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub params_file: Option<PathBuf>,
+    pub params_count: usize,
+    pub notes: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.kv`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.kv");
+        let kv = KvFile::load(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        // Collect artifact names from `artifact.<name>.file` keys.
+        let mut names: Vec<String> = kv
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix("artifact.")
+                    .and_then(|rest| rest.strip_suffix(".file"))
+                    .map(str::to_string)
+            })
+            .collect();
+        names.sort();
+        let mut artifacts = Vec::new();
+        for name in names {
+            let get = |field: &str| kv.get(&format!("artifact.{name}.{field}"));
+            let file = dir.join(get("file").context("missing file")?);
+            let parse_list = |v: Option<&str>| -> Result<Vec<TensorSpec>> {
+                v.unwrap_or("")
+                    .split(';')
+                    .filter(|s| !s.is_empty())
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            let inputs = parse_list(get("inputs")).with_context(|| format!("{name}: inputs"))?;
+            let outputs = parse_list(get("outputs")).with_context(|| format!("{name}: outputs"))?;
+            let params_file = get("params").map(|p| dir.join(p));
+            let params_count = get("params_count").and_then(|v| v.parse().ok()).unwrap_or(0);
+            let notes = get("notes").unwrap_or("").to_string();
+            artifacts.push(ArtifactSpec { name, file, inputs, outputs, params_file, params_count, notes });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parse() {
+        let t = TensorSpec::parse("8x16xf32").unwrap();
+        assert_eq!(t.dims, vec![8, 16]);
+        assert_eq!(t.dtype, Dtype::F32);
+        assert_eq!(t.num_elements(), 128);
+        let s = TensorSpec::parse("scalar_f32").unwrap();
+        assert!(s.dims.is_empty());
+        let i = TensorSpec::parse("4xi32").unwrap();
+        assert_eq!(i.dtype, Dtype::I32);
+        assert!(TensorSpec::parse("banana").is_err());
+    }
+
+    #[test]
+    fn manifest_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fff-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.kv"),
+            "[artifact.demo]\nfile = demo.hlo.txt\ninputs = 2x3xf32;scalar_f32\noutputs = 2x4xf32\nnotes = hello\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("demo").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.outputs[0].dims, vec![2, 4]);
+        assert_eq!(a.notes, "hello");
+        assert!(a.params_file.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repo_manifest_parses_when_built() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.kv").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.get("parity_fff_train").is_some());
+        let parity = m.get("parity_fff_infer").unwrap();
+        assert_eq!(parity.inputs.len(), 7); // 6 params + x
+        assert_eq!(parity.params_count, 6);
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the HLO-text artifacts `make artifacts` produced and
+//! executes them on the CPU PJRT client — the request-path half of the
+//! three-layer architecture (Python never runs here).
+//!
+//! ```no_run
+//! use fastfeedforward::runtime::Runtime;
+//! let rt = Runtime::from_dir("artifacts").unwrap();
+//! let exe = rt.load("fff_mnist_infer_b16").unwrap();
+//! let x = fastfeedforward::runtime::HostTensor::f32(vec![16, 784], vec![0.0; 16 * 784]);
+//! let mut inputs = rt.initial_params("fff_mnist_infer_b16").unwrap();
+//! inputs.push(x);
+//! let logits = exe.run(&inputs).unwrap();
+//! assert_eq!(logits[0].dims, vec![16, 10]);
+//! ```
+
+mod client;
+mod manifest;
+mod tensor;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use tensor::{Dtype, HostTensor, TensorData};

@@ -1,0 +1,289 @@
+//! GEMM kernels for the native engine.
+//!
+//! Layout is row-major everywhere. The main kernel uses the classic
+//! `i-k-j` loop order with a 4-row unroll: the innermost loop walks
+//! contiguous rows of `B` and `C`, which LLVM auto-vectorizes to full-width
+//! SIMD on this target. K-blocking keeps the working set of `B` in L1/L2.
+//!
+//! This file is a §Perf target; see EXPERIMENTS.md §Perf for the measured
+//! iteration log (naive → ikj → 4-row unroll + k-blocking).
+
+use super::Matrix;
+
+/// Panel size along `k` — chosen so a `KB × cols(B)` panel of `B` stays
+/// resident in L2 for the matrix sizes the experiments use.
+const KB: usize = 256;
+
+/// `C = A (m×k) · B (k×n)`.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm_acc(a, b, &mut c);
+    c
+}
+
+/// `C = A·B + bias` where `bias` is a length-`n` row broadcast over rows.
+pub fn gemm_bias(a: &Matrix, b: &Matrix, bias: &[f32]) -> Matrix {
+    assert_eq!(bias.len(), b.cols(), "gemm_bias: bias length mismatch");
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    for r in 0..c.rows() {
+        c.row_mut(r).copy_from_slice(bias);
+    }
+    gemm_acc(a, b, &mut c);
+    c
+}
+
+/// `C += A·B` (accumulating GEMM core).
+pub fn gemm_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "gemm: inner dims {ka} vs {kb}");
+    assert_eq!(c.shape(), (m, n), "gemm: output shape");
+    let k = ka;
+
+    let av = a.as_slice();
+    let bv = b.as_slice();
+    let cv = c.as_mut_slice();
+
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        let mut i = 0;
+        // 4-row unrolled macro-kernel.
+        while i + 4 <= m {
+            let (a0, a1, a2, a3) = (
+                &av[i * k..(i + 1) * k],
+                &av[(i + 1) * k..(i + 2) * k],
+                &av[(i + 2) * k..(i + 3) * k],
+                &av[(i + 3) * k..(i + 4) * k],
+            );
+            for p in k0..k1 {
+                let (x0, x1, x2, x3) = (a0[p], a1[p], a2[p], a3[p]);
+                let brow = &bv[p * n..p * n + n];
+                let (c01, rest) = cv[i * n..].split_at_mut(2 * n);
+                let (c0, c1) = c01.split_at_mut(n);
+                let (c2, c3rest) = rest.split_at_mut(n);
+                let c3 = &mut c3rest[..n];
+                for j in 0..n {
+                    let bj = brow[j];
+                    c0[j] += x0 * bj;
+                    c1[j] += x1 * bj;
+                    c2[j] += x2 * bj;
+                    c3[j] += x3 * bj;
+                }
+            }
+            i += 4;
+        }
+        // Remainder rows.
+        while i < m {
+            let arow = &av[i * k..(i + 1) * k];
+            let crow = &mut cv[i * n..(i + 1) * n];
+            for p in k0..k1 {
+                let x = arow[p];
+                let brow = &bv[p * n..p * n + n];
+                for j in 0..n {
+                    crow[j] += x * brow[j];
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+/// `C = Aᵀ (k×m)ᵀ·B`, i.e. `A` is `k×m` and the result is `m×n`.
+/// Used for weight gradients: `dW = Xᵀ · dY`.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (k, m) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "gemm_tn: inner dims");
+    let mut c = Matrix::zeros(m, n);
+    let av = a.as_slice();
+    let bv = b.as_slice();
+    let cv = c.as_mut_slice();
+    // For each sample p, rank-1 update C += a_p ⊗ b_p; inner loop is
+    // contiguous over both B's row and C's row.
+    for p in 0..k {
+        let arow = &av[p * m..(p + 1) * m];
+        let brow = &bv[p * n..(p + 1) * n];
+        for i in 0..m {
+            let x = arow[i];
+            if x == 0.0 {
+                continue; // common after ReLU masks
+            }
+            let crow = &mut cv[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += x * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = A (m×k) · Bᵀ` where `B` is `n×k`. Used for input gradients:
+/// `dX = dY · Wᵀ` with `W` stored `k_in×k_out`… kept general.
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(k, kb, "gemm_nt: inner dims");
+    let mut c = Matrix::zeros(m, n);
+    let av = a.as_slice();
+    let bv = b.as_slice();
+    let cv = c.as_mut_slice();
+    for i in 0..m {
+        let arow = &av[i * k..(i + 1) * k];
+        let crow = &mut cv[i * n..(i + 1) * n];
+        // Register blocking: 4 B-rows per pass over arow (¼ the arow
+        // traffic, 4 independent dot chains) — §Perf iteration 1.
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &bv[j * k..(j + 1) * k];
+            let b1 = &bv[(j + 1) * k..(j + 2) * k];
+            let b2 = &bv[(j + 2) * k..(j + 3) * k];
+            let b3 = &bv[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for p in 0..k {
+                let x = arow[p];
+                s0 += x * b0[p];
+                s1 += x * b1[p];
+                s2 += x * b2[p];
+                s3 += x * b3[p];
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            crow[j] = dot(arow, &bv[j * k..(j + 1) * k]);
+            j += 1;
+        }
+    }
+    c
+}
+
+/// Dot product of two equal-length slices (unrolled).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let n = a.len();
+    let mut p = 0;
+    while p + 4 <= n {
+        acc0 += a[p] * b[p];
+        acc1 += a[p + 1] * b[p + 1];
+        acc2 += a[p + 2] * b[p + 2];
+        acc3 += a[p + 3] * b[p + 3];
+        p += 4;
+    }
+    while p < n {
+        acc0 += a[p] * b[p];
+        p += 1;
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+/// `y += alpha * x` over slices.
+#[inline]
+pub fn axpy_slice(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a.get(i, p) as f64 * b.get(p, j) as f64;
+                }
+                c.set(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        rng.fill_normal(m.as_mut_slice(), 0.0, 1.0);
+        m
+    }
+
+    #[test]
+    fn gemm_matches_naive_various_shapes() {
+        let mut rng = Rng::seed_from_u64(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (4, 4, 4), (17, 33, 9), (64, 300, 10), (5, 1, 5)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let c = gemm(&a, &b);
+            let c0 = naive(&a, &b);
+            assert!(c.max_abs_diff(&c0) < 1e-3, "({m},{k},{n}) diff={}", c.max_abs_diff(&c0));
+        }
+    }
+
+    #[test]
+    fn gemm_bias_adds_bias() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = rand_mat(&mut rng, 6, 4);
+        let b = rand_mat(&mut rng, 4, 3);
+        let bias = vec![1.0, -2.0, 0.5];
+        let c = gemm_bias(&a, &b, &bias);
+        let mut c0 = naive(&a, &b);
+        for r in 0..6 {
+            for j in 0..3 {
+                c0.set(r, j, c0.get(r, j) + bias[j]);
+            }
+        }
+        assert!(c.max_abs_diff(&c0) < 1e-4);
+    }
+
+    #[test]
+    fn gemm_tn_matches_transpose() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = rand_mat(&mut rng, 13, 7); // k×m
+        let b = rand_mat(&mut rng, 13, 5); // k×n
+        let c = gemm_tn(&a, &b);
+        let c0 = naive(&a.transpose(), &b);
+        assert!(c.max_abs_diff(&c0) < 1e-3);
+    }
+
+    #[test]
+    fn gemm_nt_matches_transpose() {
+        let mut rng = Rng::seed_from_u64(4);
+        let a = rand_mat(&mut rng, 9, 11); // m×k
+        let b = rand_mat(&mut rng, 6, 11); // n×k
+        let c = gemm_nt(&a, &b);
+        let c0 = naive(&a, &b.transpose());
+        assert!(c.max_abs_diff(&c0) < 1e-3);
+    }
+
+    #[test]
+    fn dot_matches_sum() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = vec![5.0f32, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+    }
+
+    #[test]
+    fn gemm_acc_accumulates() {
+        let mut rng = Rng::seed_from_u64(5);
+        let a = rand_mat(&mut rng, 8, 8);
+        let b = rand_mat(&mut rng, 8, 8);
+        let mut c = gemm(&a, &b);
+        gemm_acc(&a, &b, &mut c);
+        let mut c2 = gemm(&a, &b);
+        c2.scale(2.0);
+        assert!(c.max_abs_diff(&c2) < 1e-4);
+    }
+}

@@ -1,0 +1,224 @@
+//! Elementwise / rowwise kernels shared by the native engine.
+
+use super::Matrix;
+
+/// Numerically-stable row-wise softmax, in place.
+pub fn softmax_rows_inplace(m: &mut Matrix) {
+    let cols = m.cols();
+    for r in 0..m.rows() {
+        let row = m.row_mut(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+        debug_assert_eq!(row.len(), cols);
+    }
+}
+
+/// Row-wise softmax into a new matrix.
+pub fn softmax_rows(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    softmax_rows_inplace(&mut out);
+    out
+}
+
+/// Row-wise log-softmax into a new matrix.
+pub fn log_softmax_rows(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = max + row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+    out
+}
+
+/// Index of the max entry per row.
+pub fn argmax_rows(m: &Matrix) -> Vec<usize> {
+    (0..m.rows())
+        .map(|r| {
+            let row = m.row(r);
+            let mut best = 0;
+            let mut bv = row[0];
+            for (i, &v) in row.iter().enumerate().skip(1) {
+                if v > bv {
+                    bv = v;
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// ReLU forward, in place; returns nothing (mask recoverable from output).
+pub fn relu_inplace(m: &mut Matrix) {
+    for v in m.as_mut_slice() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// GELU (tanh approximation), in place.
+pub fn gelu_inplace(m: &mut Matrix) {
+    for v in m.as_mut_slice() {
+        *v = gelu(*v);
+    }
+}
+
+/// GELU (tanh approximation).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Derivative of GELU (tanh approximation).
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    let x3 = x * x * x;
+    let t = (C * (x + 0.044715 * x3)).tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// Bernoulli entropy H(p) in nats, safe at the endpoints.
+#[inline]
+pub fn bernoulli_entropy(p: f32) -> f32 {
+    let p = p.clamp(1e-7, 1.0 - 1e-7);
+    -(p * p.ln() + (1.0 - p) * (1.0 - p).ln())
+}
+
+/// Row-wise layer norm (no affine), in place; returns per-row (mean, rstd)
+/// needed by the backward pass.
+pub fn layernorm_rows_inplace(m: &mut Matrix, eps: f32) -> Vec<(f32, f32)> {
+    let cols = m.cols() as f32;
+    let mut stats = Vec::with_capacity(m.rows());
+    for r in 0..m.rows() {
+        let row = m.row_mut(r);
+        let mean = row.iter().sum::<f32>() / cols;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / cols;
+        let rstd = 1.0 / (var + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * rstd;
+        }
+        stats.push((mean, rstd));
+    }
+    stats
+}
+
+/// Mean of a slice.
+#[inline]
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_normalized_and_ordered() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, -1.0, -1.0]);
+        let s = softmax_rows(&m);
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        assert!(s.get(0, 2) > s.get(0, 1) && s.get(0, 1) > s.get(0, 0));
+        assert!((s.get(1, 0) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_stable_at_large_logits() {
+        let m = Matrix::from_vec(1, 2, vec![1000.0, 1001.0]);
+        let s = softmax_rows(&m);
+        assert!(s.as_slice().iter().all(|v| v.is_finite()));
+        assert!((s.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax_log() {
+        let m = Matrix::from_vec(1, 4, vec![0.3, -1.2, 2.0, 0.0]);
+        let ls = log_softmax_rows(&m);
+        let s = softmax_rows(&m);
+        for j in 0..4 {
+            assert!((ls.get(0, j) - s.get(0, j).ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn argmax_rows_finds_max() {
+        let m = Matrix::from_vec(2, 3, vec![0.0, 5.0, 1.0, 7.0, 2.0, 3.0]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+
+    #[test]
+    fn sigmoid_symmetry_and_range() {
+        for &x in &[-50.0f32, -3.0, 0.0, 3.0, 50.0] {
+            let s = sigmoid(x);
+            assert!((0.0..=1.0).contains(&s));
+            assert!((s + sigmoid(-x) - 1.0).abs() < 1e-6);
+        }
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn entropy_extremes() {
+        assert!(bernoulli_entropy(0.5) > bernoulli_entropy(0.9));
+        assert!(bernoulli_entropy(0.0) < 1e-5);
+        assert!(bernoulli_entropy(1.0) < 1e-5);
+        assert!((bernoulli_entropy(0.5) - std::f32::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}: {} vs {fd}", gelu_grad(x));
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut m = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        layernorm_rows_inplace(&mut m, 1e-5);
+        let mean: f32 = m.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = m.row(0).iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut m = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]);
+        relu_inplace(&mut m);
+        assert_eq!(m.as_slice(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Mini property-based-testing framework (the offline registry has no
+//! `proptest`/`quickcheck`, so the repository carries its own).
+//!
+//! Deterministic by default (fixed seed), overridable with `FFF_PROP_SEED`
+//! for exploration and `FFF_PROP_CASES` for deeper soak runs. On failure
+//! the framework reports the case index and the `Debug` rendering of the
+//! generated input, which together with the seed make the failure exactly
+//! reproducible.
+
+pub mod prop;
+
+pub use prop::{check, check_with, Config};

@@ -1,0 +1,99 @@
+//! Property-check driver.
+
+use crate::rng::Rng;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let cases = std::env::var("FFF_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("FFF_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xF0F0_2023);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` against `cases` inputs drawn by `gen`. Panics with a
+/// reproducible report on the first failure.
+///
+/// ```
+/// use fastfeedforward::testing::check;
+/// check("abs is non-negative", |rng| rng.normal_f32(0.0, 10.0), |x| {
+///     if x.abs() >= 0.0 { Ok(()) } else { Err(format!("abs({x}) < 0")) }
+/// });
+/// ```
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check_with(Config::default(), name, gen, prop)
+}
+
+/// [`check`] with explicit configuration.
+pub fn check_with<T: std::fmt::Debug>(
+    config: Config,
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::seed_from_u64(config.seed);
+    for case in 0..config.cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}):\n  input: {input:?}\n  error: {msg}\n  \
+                 reproduce with FFF_PROP_SEED={}",
+                config.cases, config.seed, config.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum symmetric", |rng| (rng.below(100), rng.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_report() {
+        check("always fails", |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut first: Vec<usize> = Vec::new();
+        check_with(Config { cases: 10, seed: 42 }, "collect", |rng| rng.below(1000), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        check_with(Config { cases: 10, seed: 42 }, "collect", |rng| rng.below(1000), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

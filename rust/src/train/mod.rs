@@ -1,0 +1,8 @@
+//! Training orchestration: the epoch loop implementing the paper's
+//! measurement protocol — memorization accuracy `M_A`, generalization
+//! accuracy `G_A`, and "epochs to train" (ETT) — with early stopping,
+//! plateau LR-halving, and the FFF entropy monitor.
+
+mod trainer;
+
+pub use trainer::{build_model, run_training, EpochRecord, Outcome, Trainer};

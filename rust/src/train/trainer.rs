@@ -1,0 +1,268 @@
+//! The trainer.
+//!
+//! Paper protocol (Experiments section):
+//! * the provided training set is split 9:1 into train/validation;
+//! * `M_A` — train until training accuracy stops improving, report the
+//!   best training-set accuracy (FFFs are always scored with `FORWARD_I`);
+//! * `G_A` — use the parameters at the best validation accuracy, report
+//!   their test-set accuracy;
+//! * ETT — the number of epochs elapsed until the respective best score;
+//! * early stopping after `patience` epochs without improvement on either
+//!   monitor; optional LR halving on `lr_plateau`-epoch training-accuracy
+//!   plateaus (the Table 2 recipe).
+
+use crate::config::{ModelKind, OptimizerKind, TrainConfig};
+use crate::data::{generate, BatchIter, Dataset, GenOptions};
+use crate::nn::{loss::cross_entropy, Adam, Fff, FffConfig, Model, Moe, MoeConfig, Optimizer, Sgd};
+use crate::rng::Rng;
+
+/// Per-epoch log entry.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub aux_loss: f32,
+    pub train_acc: f32,
+    pub val_acc: f32,
+    /// Batch-mean node entropies per FFF layer (the paper's hardening
+    /// monitor); empty for models without FFF components.
+    pub entropies: Vec<Vec<f32>>,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// Best training-set accuracy (hard inference), the paper's `M_A`.
+    pub memorization_accuracy: f32,
+    /// Test accuracy of the best-validation snapshot, the paper's `G_A`.
+    pub generalization_accuracy: f32,
+    /// Epochs until `M_A` was reached.
+    pub ett_memorization: usize,
+    /// Epochs until the best validation accuracy was reached.
+    pub ett_generalization: usize,
+    pub epochs_run: usize,
+    pub history: Vec<EpochRecord>,
+}
+
+/// Build the model a [`TrainConfig`] describes.
+pub fn build_model(cfg: &TrainConfig, dim_in: usize, dim_out: usize, rng: &mut Rng) -> Box<dyn Model> {
+    match cfg.model {
+        ModelKind::Ff => Box::new(crate::nn::Ff::new(rng, dim_in, cfg.width, dim_out)),
+        ModelKind::Fff => {
+            let mut fc = FffConfig::new(dim_in, dim_out, cfg.fff_depth(), cfg.leaf);
+            fc.hardening = cfg.hardening;
+            fc.transposition_p = cfg.transposition_p;
+            Box::new(Fff::new(rng, fc))
+        }
+        ModelKind::Moe => {
+            let mut mc = MoeConfig::new(dim_in, dim_out, cfg.moe_experts(), cfg.leaf, cfg.k);
+            mc.w_importance = cfg.w_importance;
+            mc.w_load = cfg.w_load;
+            Box::new(Moe::new(rng, mc))
+        }
+    }
+}
+
+/// Generic training driver over any [`Model`].
+pub struct Trainer<'a> {
+    pub cfg: &'a TrainConfig,
+    pub train: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+impl<'a> Trainer<'a> {
+    /// Materialize the config's dataset and apply the 9:1 split.
+    pub fn from_config(cfg: &'a TrainConfig) -> Self {
+        let (full_train, test) = generate(
+            cfg.dataset,
+            &GenOptions { train_n: cfg.train_n, test_n: cfg.test_n, seed: cfg.seed },
+        );
+        let (train, val) = full_train.split_train_val(cfg.seed);
+        Trainer { cfg, train, val, test }
+    }
+
+    /// Run the full protocol on `model`.
+    pub fn run(&self, model: &mut dyn Model) -> Outcome {
+        let cfg = self.cfg;
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xABCD_EF01);
+        let mut opt: Box<dyn Optimizer> = match cfg.optimizer {
+            OptimizerKind::Sgd => Box::new(Sgd::new(cfg.lr)),
+            OptimizerKind::Adam => Box::new(Adam::new(cfg.lr)),
+        };
+
+        let mut best_train_acc = f32::NEG_INFINITY;
+        let mut best_val_acc = f32::NEG_INFINITY;
+        let mut ett_mem = 0usize;
+        let mut ett_gen = 0usize;
+        let mut best_val_snapshot: Option<Vec<f32>> = None;
+        let mut stale_epochs = 0usize;
+        let mut plateau_epochs = 0usize;
+        let mut history = Vec::new();
+        let mut epochs_run = 0;
+
+        for epoch in 1..=cfg.max_epochs {
+            epochs_run = epoch;
+            let mut epoch_loss = 0.0;
+            let mut epoch_aux = 0.0;
+            let mut batches = 0;
+            let mut entropies: Vec<Vec<f32>> = Vec::new();
+            for (x, labels) in BatchIter::shuffled(&self.train, cfg.batch_size, &mut rng) {
+                let logits = model.forward_train(&x, &mut rng);
+                let (loss, dl) = cross_entropy(&logits, &labels);
+                model.zero_grad();
+                model.backward(&dl);
+                opt.step(model);
+                epoch_loss += loss;
+                epoch_aux += model.aux_loss();
+                entropies = model.entropy_report(); // last batch's monitor
+                batches += 1;
+            }
+
+            let train_acc = self.eval_infer(model, &self.train);
+            let val_acc = self.eval_infer(model, &self.val);
+
+            let improved_train = train_acc > best_train_acc + 1e-6;
+            if improved_train {
+                best_train_acc = train_acc;
+                ett_mem = epoch;
+                plateau_epochs = 0;
+            } else {
+                plateau_epochs += 1;
+            }
+            let improved_val = val_acc > best_val_acc + 1e-6;
+            if improved_val {
+                best_val_acc = val_acc;
+                ett_gen = epoch;
+                best_val_snapshot = Some(model.snapshot());
+            }
+            if improved_train || improved_val {
+                stale_epochs = 0;
+            } else {
+                stale_epochs += 1;
+            }
+
+            history.push(EpochRecord {
+                epoch,
+                train_loss: epoch_loss / batches.max(1) as f32,
+                aux_loss: epoch_aux / batches.max(1) as f32,
+                train_acc,
+                val_acc,
+                entropies,
+            });
+
+            if cfg.lr_plateau > 0 && plateau_epochs >= cfg.lr_plateau {
+                opt.set_lr(opt.lr() / 2.0);
+                plateau_epochs = 0;
+            }
+            if cfg.patience > 0 && stale_epochs >= cfg.patience {
+                break;
+            }
+            // Memorization reached its ceiling — nothing left to learn.
+            if best_train_acc >= 1.0 - 1e-6 && best_val_acc >= 1.0 - 1e-6 {
+                break;
+            }
+        }
+
+        // G_A: restore the best-validation snapshot, evaluate on test.
+        let generalization_accuracy = match best_val_snapshot {
+            Some(snap) => {
+                let current = model.snapshot();
+                model.restore(&snap);
+                let acc = self.eval_infer(model, &self.test);
+                model.restore(&current);
+                acc
+            }
+            None => self.eval_infer(model, &self.test),
+        };
+
+        Outcome {
+            memorization_accuracy: best_train_acc.max(0.0),
+            generalization_accuracy,
+            ett_memorization: ett_mem,
+            ett_generalization: ett_gen,
+            epochs_run,
+            history,
+        }
+    }
+
+    /// Evaluate hard-inference accuracy on a dataset, in batches.
+    pub fn eval_infer(&self, model: &dyn Model, data: &Dataset) -> f32 {
+        let mut hits = 0usize;
+        for (x, labels) in BatchIter::sequential(data, 512) {
+            let logits = model.forward_infer(&x);
+            let pred = crate::tensor::argmax_rows(&logits);
+            hits += pred.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        }
+        hits as f32 / data.len().max(1) as f32
+    }
+
+}
+
+/// One-call convenience: build dataset + model from a config and train.
+pub fn run_training(cfg: &TrainConfig) -> Outcome {
+    let trainer = Trainer::from_config(cfg);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut model = build_model(cfg, trainer.train.dim(), trainer.train.num_classes, &mut rng);
+    trainer.run(model.as_mut())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetKind;
+
+    fn quick_cfg(model: ModelKind) -> TrainConfig {
+        let mut c = TrainConfig::table1(DatasetKind::Usps, model, 32, 8, 0);
+        c.train_n = 600;
+        c.test_n = 200;
+        c.max_epochs = 30;
+        c.patience = 10;
+        c
+    }
+
+    #[test]
+    fn ff_trains_to_reasonable_accuracy() {
+        let out = run_training(&quick_cfg(ModelKind::Ff));
+        assert!(out.memorization_accuracy > 0.7, "M_A={}", out.memorization_accuracy);
+        assert!(out.generalization_accuracy > 0.6, "G_A={}", out.generalization_accuracy);
+        assert!(out.ett_memorization >= 1);
+        assert!(!out.history.is_empty());
+    }
+
+    #[test]
+    fn fff_trains_and_hard_inference_works() {
+        let out = run_training(&quick_cfg(ModelKind::Fff));
+        assert!(out.memorization_accuracy > 0.6, "M_A={}", out.memorization_accuracy);
+        assert!(out.generalization_accuracy > 0.5, "G_A={}", out.generalization_accuracy);
+    }
+
+    #[test]
+    fn history_is_monotone_in_epochs() {
+        let out = run_training(&quick_cfg(ModelKind::Ff));
+        for (i, rec) in out.history.iter().enumerate() {
+            assert_eq!(rec.epoch, i + 1);
+        }
+        assert!(out.epochs_run <= 30);
+    }
+
+    #[test]
+    fn early_stopping_respects_patience() {
+        let mut cfg = quick_cfg(ModelKind::Ff);
+        cfg.patience = 3;
+        cfg.max_epochs = 100;
+        let out = run_training(&cfg);
+        // Must stop well before max_epochs on this easy task.
+        assert!(out.epochs_run < 100);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg(ModelKind::Fff);
+        let a = run_training(&cfg);
+        let b = run_training(&cfg);
+        assert_eq!(a.memorization_accuracy, b.memorization_accuracy);
+        assert_eq!(a.generalization_accuracy, b.generalization_accuracy);
+        assert_eq!(a.epochs_run, b.epochs_run);
+    }
+}

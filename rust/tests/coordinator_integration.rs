@@ -1,0 +1,140 @@
+//! Integration: the serving coordinator under load — order preservation,
+//! backpressure, multi-worker dispatch, and the full three-layer path
+//! (HLO backend) when artifacts are present.
+
+use fastfeedforward::coordinator::BatcherConfig;
+use fastfeedforward::coordinator::{Coordinator, CoordinatorConfig, HloBackend, NativeFffBackend};
+use fastfeedforward::nn::FffInfer;
+use fastfeedforward::rng::Rng;
+use std::time::Duration;
+
+fn native_coord(workers: usize, queue: usize) -> Coordinator {
+    let mut rng = Rng::seed_from_u64(3);
+    let model = FffInfer::random(&mut rng, 32, 5, 4, 8, 16);
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+        workers,
+        queue_capacity: queue,
+    };
+    Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))
+}
+
+#[test]
+fn many_concurrent_clients_all_served() {
+    let coord = std::sync::Arc::new(native_coord(2, 10_000));
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(t);
+            let mut got = 0;
+            for _ in 0..100 {
+                let x: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let rx = coord.submit(x).unwrap();
+                let resp = rx.recv().unwrap();
+                assert_eq!(resp.output.len(), 5);
+                got += 1;
+            }
+            got
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 400);
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, 400);
+    assert!(snap.mean_batch >= 1.0);
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    // A queue of 1: spam submissions without reading responses; at least
+    // one must be rejected, and everything accepted must complete.
+    let coord = native_coord(1, 1);
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..2000 {
+        match coord.submit(vec![0.0; 32]) {
+            Ok(rx) => rxs.push(rx),
+            Err(fastfeedforward::coordinator::SubmitError::QueueFull) => rejected += 1,
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+    assert!(rejected > 0, "backpressure never kicked in");
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.rejected, rejected as u64);
+}
+
+#[test]
+fn latency_includes_batching_delay() {
+    let coord = native_coord(1, 100);
+    let rx = coord.submit(vec![0.1; 32]).unwrap();
+    let resp = rx.recv().unwrap();
+    // One lonely request waits out the 1ms deadline.
+    assert!(resp.latency >= Duration::from_micros(500), "{:?}", resp.latency);
+    assert_eq!(resp.batch_size, 1);
+}
+
+#[test]
+fn hlo_backend_serves_mnist_artifact() {
+    if !std::path::Path::new("artifacts/manifest.kv").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(2) },
+        workers: 1,
+        queue_capacity: 1024,
+    };
+    let coord = Coordinator::start(
+        cfg,
+        HloBackend::factory("artifacts".into(), "fff_mnist_infer_b16".into()),
+    );
+    assert_eq!(coord.dim_in(), 784);
+    let mut rng = Rng::seed_from_u64(8);
+    let mut rxs = Vec::new();
+    for _ in 0..40 {
+        let x: Vec<f32> = (0..784).map(|_| rng.uniform_f32()).collect();
+        rxs.push(coord.submit(x).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.output.len(), 10);
+        assert!(resp.output.iter().all(|v| v.is_finite()));
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, 40);
+    coord.shutdown();
+}
+
+/// Failure injection: a backend that panics must not hang clients — the
+/// response channel drops and `recv` errors instead of blocking forever.
+struct PanickyBackend;
+
+impl fastfeedforward::coordinator::Backend for PanickyBackend {
+    fn dim_in(&self) -> usize {
+        4
+    }
+    fn dim_out(&self) -> usize {
+        2
+    }
+    fn infer(&mut self, _batch: &fastfeedforward::tensor::Matrix) -> fastfeedforward::tensor::Matrix {
+        panic!("injected backend failure");
+    }
+}
+
+#[test]
+fn worker_panic_fails_requests_instead_of_hanging() {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
+        workers: 1,
+        queue_capacity: 16,
+    };
+    let coord = Coordinator::start(cfg, || Box::new(PanickyBackend));
+    let rx = coord.submit(vec![0.0; 4]).unwrap();
+    // The worker thread dies; the request's response sender is dropped.
+    let got = rx.recv_timeout(Duration::from_secs(5));
+    assert!(got.is_err(), "expected a dropped-channel error, got a response");
+}

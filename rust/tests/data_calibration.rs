@@ -1,0 +1,60 @@
+//! Dataset-difficulty calibration: the synthetic substitutes must keep the
+//! paper's relative orderings (DESIGN.md §3). Small-scale smoke version of
+//! the calibration used to tune the generator profiles.
+
+use fastfeedforward::config::{ModelKind, TrainConfig};
+use fastfeedforward::data::{generate, DatasetKind, GenOptions};
+use fastfeedforward::train::run_training;
+
+fn ga(kind: DatasetKind, width: usize) -> f32 {
+    let mut c = TrainConfig::table1(kind, ModelKind::Ff, width, 8, 0);
+    c.train_n = 1000;
+    c.test_n = 300;
+    c.max_epochs = 30;
+    c.patience = 10;
+    run_training(&c).generalization_accuracy
+}
+
+#[test]
+fn grayscale_family_difficulty_ordering() {
+    // USPS should be no harder than FashionMNIST for the same FF budget.
+    let usps = ga(DatasetKind::Usps, 64);
+    let fashion = ga(DatasetKind::FashionMnist, 64);
+    assert!(
+        usps >= fashion - 0.03,
+        "USPS analog ({usps}) should be easier than FashionMNIST analog ({fashion})"
+    );
+    assert!(usps > 0.7, "USPS analog too hard: {usps}");
+}
+
+#[test]
+fn wider_ff_does_better_on_hard_datasets() {
+    // Monotonicity in width — the backbone of Table 1's left-to-right read.
+    let narrow = ga(DatasetKind::FashionMnist, 16);
+    let wide = ga(DatasetKind::FashionMnist, 128);
+    assert!(
+        wide >= narrow - 0.02,
+        "width should not hurt: w=16 -> {narrow}, w=128 -> {wide}"
+    );
+}
+
+#[test]
+fn color_datasets_have_correct_geometry_and_are_harder() {
+    let (cifar_train, _) = generate(DatasetKind::Cifar10, &GenOptions { train_n: 300, test_n: 50, seed: 0 });
+    assert_eq!(cifar_train.dim(), 32 * 32 * 3);
+    let (usps_train, _) = generate(DatasetKind::Usps, &GenOptions { train_n: 300, test_n: 50, seed: 0 });
+    assert_eq!(usps_train.dim(), 256);
+}
+
+#[test]
+fn train_test_drawn_from_same_manifold() {
+    // A model trained on train should beat chance on test by a wide
+    // margin (same prototype bank) — guards against seed-split bugs.
+    let mut c = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Ff, 64, 8, 3);
+    c.train_n = 800;
+    c.test_n = 300;
+    c.max_epochs = 25;
+    c.patience = 10;
+    let out = run_training(&c);
+    assert!(out.generalization_accuracy > 0.4, "G_A = {}", out.generalization_accuracy);
+}

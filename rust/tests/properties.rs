@@ -1,0 +1,251 @@
+//! Property-based tests over the paper's invariants, via the in-repo
+//! mini framework (`fastfeedforward::testing`).
+
+use fastfeedforward::nn::loss::cross_entropy;
+use fastfeedforward::nn::{Fff, FffConfig, FffInfer, Model};
+use fastfeedforward::rng::Rng;
+use fastfeedforward::tensor::Matrix;
+use fastfeedforward::testing::check;
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_normal(m.as_mut_slice(), 0.0, 1.0);
+    m
+}
+
+#[derive(Debug)]
+struct FffCase {
+    depth: usize,
+    leaf: usize,
+    dim_in: usize,
+    dim_out: usize,
+    batch: usize,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> FffCase {
+    FffCase {
+        depth: rng.below(5),
+        leaf: 1 + rng.below(6),
+        dim_in: 2 + rng.below(12),
+        dim_out: 1 + rng.below(6),
+        batch: 1 + rng.below(12),
+        seed: rng.next_u64(),
+    }
+}
+
+fn build(case: &FffCase) -> (Fff, Matrix) {
+    let mut rng = Rng::seed_from_u64(case.seed);
+    let cfg = FffConfig::new(case.dim_in, case.dim_out, case.depth, case.leaf);
+    let fff = Fff::new(&mut rng, cfg);
+    let x = rand_matrix(&mut rng, case.batch, case.dim_in);
+    (fff, x)
+}
+
+#[test]
+fn prop_routing_index_in_bounds() {
+    check("routing index in [0, 2^d)", gen_case, |case| {
+        let (fff, x) = build(case);
+        for r in 0..x.rows() {
+            let idx = fff.leaf_index(x.row(r));
+            if idx >= (1 << case.depth) {
+                return Err(format!("leaf index {idx} out of range for depth {}", case.depth));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_entropy_report_complete_and_bounded() {
+    check("entropy report: one per node, in [0, ln2]", gen_case, |case| {
+        let (mut fff, x) = build(case);
+        let mut rng = Rng::seed_from_u64(1);
+        let _ = fff.forward_train(&x, &mut rng);
+        let flat: Vec<f32> = fff.entropy_report().into_iter().flatten().collect();
+        if flat.len() != (1 << case.depth) - 1 {
+            return Err(format!(
+                "expected {} node entropies, got {}",
+                (1 << case.depth) - 1,
+                flat.len()
+            ));
+        }
+        for &e in &flat {
+            if !(0.0..=std::f32::consts::LN_2 + 1e-5).contains(&e) {
+                return Err(format!("entropy {e} out of range"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forward_i_equals_forward_t_at_depth_zero() {
+    check(
+        "d=0 => FORWARD_T == FORWARD_I",
+        |rng| {
+            let mut c = gen_case(rng);
+            c.depth = 0;
+            c
+        },
+        |case| {
+            let (mut fff, x) = build(case);
+            let mut rng = Rng::seed_from_u64(2);
+            let yt = fff.forward_train(&x, &mut rng);
+            let yi = fff.forward_infer(&x);
+            let diff = yt.max_abs_diff(&yi);
+            if diff > 1e-4 {
+                return Err(format!("diff {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hardened_boundaries_make_t_equal_i() {
+    check("scaled boundaries => FORWARD_T ~= FORWARD_I", gen_case, |case| {
+        let (mut fff, x) = build(case);
+        // Scale node parameters hard (visit order: nodes first).
+        let n_node_slots = 2 * ((1usize << case.depth) - 1);
+        let mut slot = 0;
+        fff.visit_params(&mut |p, _| {
+            if slot < n_node_slots {
+                for v in p.iter_mut() {
+                    *v *= 1e4;
+                }
+            }
+            slot += 1;
+        });
+        let mut rng = Rng::seed_from_u64(3);
+        let yt = fff.forward_train(&x, &mut rng);
+        let yi = fff.forward_infer(&x);
+        let diff = yt.max_abs_diff(&yi);
+        let scale = yi.as_slice().iter().fold(1.0f32, |a, &b| a.max(b.abs()));
+        if diff > 1e-3 * scale {
+            return Err(format!("diff {diff} (scale {scale})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gradients_are_finite() {
+    check("backward produces finite grads", gen_case, |case| {
+        let (mut fff, x) = build(case);
+        let labels: Vec<usize> = (0..case.batch).map(|i| i % case.dim_out).collect();
+        let mut rng = Rng::seed_from_u64(4);
+        let logits = fff.forward_train(&x, &mut rng);
+        let (_, dl) = cross_entropy(&logits, &labels);
+        fff.zero_grad();
+        fff.backward(&dl);
+        let mut ok = true;
+        fff.visit_params(&mut |_p, g| {
+            if g.iter().any(|v| !v.is_finite()) {
+                ok = false;
+            }
+        });
+        if ok {
+            Ok(())
+        } else {
+            Err("non-finite gradient".into())
+        }
+    });
+}
+
+#[test]
+fn prop_snapshot_restore_identity() {
+    check("snapshot/restore is identity on outputs", gen_case, |case| {
+        let (mut fff, x) = build(case);
+        let snap = fff.snapshot();
+        let y0 = fff.forward_infer(&x);
+        fff.visit_params(&mut |p, _| {
+            for v in p.iter_mut() {
+                *v += 0.37;
+            }
+        });
+        fff.restore(&snap);
+        let y1 = fff.forward_infer(&x);
+        let diff = y0.max_abs_diff(&y1);
+        if diff > 0.0 {
+            return Err(format!("outputs changed by {diff}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compiled_infer_matches_model() {
+    check("FffInfer::compile == Fff::forward_infer", gen_case, |case| {
+        let (fff, x) = build(case);
+        let compiled = fff.compile_infer();
+        let a = fff.forward_infer(&x);
+        let b = compiled.infer_batch(&x);
+        let diff = a.max_abs_diff(&b);
+        if diff > 1e-4 {
+            return Err(format!("diff {diff}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aliased_routing_matches_full_model() {
+    // Aliasing caps leaf *storage*; the routing descent is identical.
+    check(
+        "aliased FffInfer routes like full model",
+        |rng| (1 + rng.below(8), rng.next_u64()),
+        |&(depth, seed)| {
+            let mut r1 = Rng::seed_from_u64(seed);
+            let full = FffInfer::random(&mut r1, 8, 3, depth, 2, usize::MAX);
+            let mut r2 = Rng::seed_from_u64(seed);
+            let aliased = FffInfer::random(&mut r2, 8, 3, depth, 2, 2);
+            let mut xr = Rng::seed_from_u64(seed ^ 1);
+            for _ in 0..8 {
+                let x: Vec<f32> = (0..8).map(|_| xr.normal_f32(0.0, 1.0)).collect();
+                if full.route(&x) != aliased.route(&x) {
+                    return Err("routing differs between full and aliased models".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transposition_preserves_mixture_normalization() {
+    check(
+        "child transposition keeps weights normalized",
+        |rng| {
+            let mut c = gen_case(rng);
+            c.depth = 1 + c.depth.min(3);
+            c
+        },
+        |case| {
+            let mut rng = Rng::seed_from_u64(case.seed);
+            let mut cfg = FffConfig::new(case.dim_in, case.dim_out, case.depth, case.leaf);
+            cfg.transposition_p = 0.5;
+            let mut fff = Fff::new(&mut rng, cfg);
+            let x = rand_matrix(&mut rng, case.batch, case.dim_in);
+            let labels: Vec<usize> = (0..case.batch).map(|i| i % case.dim_out).collect();
+            let y = fff.forward_train(&x, &mut rng);
+            if y.as_slice().iter().any(|v| !v.is_finite()) {
+                return Err("non-finite output under transposition".into());
+            }
+            let (_, dl) = cross_entropy(&y, &labels);
+            fff.zero_grad();
+            fff.backward(&dl);
+            let mut ok = true;
+            fff.visit_params(&mut |_p, g| {
+                if g.iter().any(|v| !v.is_finite()) {
+                    ok = false;
+                }
+            });
+            if ok {
+                Ok(())
+            } else {
+                Err("non-finite gradient under transposition".into())
+            }
+        },
+    );
+}

@@ -1,0 +1,182 @@
+//! Integration: the PJRT runtime executes `make artifacts` outputs, and
+//! the numbers match the native rust engine exactly where they must.
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built, so `cargo test` works on a fresh checkout; `make test` always
+//! builds artifacts first.
+
+use fastfeedforward::nn::{Fff, FffConfig, Model};
+use fastfeedforward::rng::Rng;
+use fastfeedforward::runtime::{HostTensor, Runtime};
+use fastfeedforward::tensor::Matrix;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.kv").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+/// Build the native FFF whose parameters equal the artifact's params.bin.
+///
+/// jax layout (see python/compile/kernels/ref.py):
+///   node_w (N, dim_in), node_b (N,), leaf_w1 (L, dim_in, ell),
+///   leaf_b1 (L, ell), leaf_w2 (L, ell, dim_out), leaf_b2 (L, dim_out)
+/// rust visit order (see rust/src/nn/fff.rs):
+///   per node: w (dim_in×1), b(1); per leaf: w1, b1, w2, b2.
+fn native_from_params(
+    params: &[HostTensor],
+    dim_in: usize,
+    dim_out: usize,
+    depth: usize,
+    leaf: usize,
+) -> Fff {
+    let mut rng = Rng::seed_from_u64(0);
+    let mut cfg = FffConfig::new(dim_in, dim_out, depth, leaf);
+    cfg.hardening = 0.0;
+    let mut fff = Fff::new(&mut rng, cfg);
+    let n_nodes = (1usize << depth) - 1;
+    let n_leaves = 1usize << depth;
+    let node_w = params[0].as_f32();
+    let node_b = params[1].as_f32();
+    let leaf_w1 = params[2].as_f32();
+    let leaf_b1 = params[3].as_f32();
+    let leaf_w2 = params[4].as_f32();
+    let leaf_b2 = params[5].as_f32();
+
+    let mut slot = 0usize;
+    fff.visit_params(&mut |p, _g| {
+        if slot < 2 * n_nodes {
+            let node = slot / 2;
+            if slot % 2 == 0 {
+                // node weight column: jax row node_w[node, :] — same order.
+                p.copy_from_slice(&node_w[node * dim_in..(node + 1) * dim_in]);
+            } else {
+                p[0] = node_b[node];
+            }
+        } else {
+            let lslot = slot - 2 * n_nodes;
+            let l = lslot / 4;
+            assert!(l < n_leaves);
+            match lslot % 4 {
+                0 => p.copy_from_slice(&leaf_w1[l * dim_in * leaf..(l + 1) * dim_in * leaf]),
+                1 => p.copy_from_slice(&leaf_b1[l * leaf..(l + 1) * leaf]),
+                2 => p.copy_from_slice(&leaf_w2[l * leaf * dim_out..(l + 1) * leaf * dim_out]),
+                _ => p.copy_from_slice(&leaf_b2[l * dim_out..(l + 1) * dim_out]),
+            }
+        }
+        slot += 1;
+    });
+    fff
+}
+
+fn parity_input(batch: usize, dim_in: usize) -> Matrix {
+    Matrix::from_fn(batch, dim_in, |r, c| (((r * dim_in + c) as f32) * 0.37).sin())
+}
+
+#[test]
+fn parity_train_forward_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::from_dir(dir).unwrap();
+    let exe = rt.load("parity_fff_train").unwrap();
+    let params = rt.initial_params("parity_fff_train").unwrap();
+    let (depth, leaf, dim_in, dim_out, batch) = (2usize, 4usize, 16usize, 4usize, 8usize);
+
+    let x = parity_input(batch, dim_in);
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::f32(vec![batch, dim_in], x.as_slice().to_vec()));
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![batch, dim_out]);
+
+    let mut native = native_from_params(&params, dim_in, dim_out, depth, leaf);
+    let mut rng = Rng::seed_from_u64(9);
+    let want = native.forward_train(&x, &mut rng);
+    let got = Matrix::from_vec(batch, dim_out, out[0].as_f32().to_vec());
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-4, "HLO vs native FORWARD_T diff = {diff}");
+}
+
+#[test]
+fn parity_infer_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::from_dir(dir).unwrap();
+    let exe = rt.load("parity_fff_infer").unwrap();
+    let params = rt.initial_params("parity_fff_infer").unwrap();
+    let (depth, leaf, dim_in, dim_out, batch) = (2usize, 4usize, 16usize, 4usize, 8usize);
+
+    let x = parity_input(batch, dim_in);
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::f32(vec![batch, dim_in], x.as_slice().to_vec()));
+    let out = exe.run(&inputs).unwrap();
+
+    let native = native_from_params(&params, dim_in, dim_out, depth, leaf);
+    let want = native.forward_infer(&x);
+    let got = Matrix::from_vec(batch, dim_out, out[0].as_f32().to_vec());
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-4, "HLO vs native FORWARD_I diff = {diff}");
+
+    // And the compiled-inference layout agrees too.
+    let compiled = native.compile_infer().infer_batch(&x);
+    assert!(compiled.max_abs_diff(&want) < 1e-5);
+}
+
+#[test]
+fn mnist_train_step_reduces_loss_from_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::from_dir(dir).unwrap();
+    let exe = rt.load("fff_mnist_train_b256").unwrap();
+    let mut params = rt.initial_params("fff_mnist_train_b256").unwrap();
+    let (dim_in, batch) = (784usize, 256usize);
+
+    // Synthetic MNIST batch from the data substrate.
+    let (train, _) = fastfeedforward::data::generate(
+        fastfeedforward::data::DatasetKind::Mnist,
+        &fastfeedforward::data::GenOptions { train_n: batch, test_n: 1, seed: 4 },
+    );
+    let x = HostTensor::f32(vec![batch, dim_in], train.images.as_slice().to_vec());
+    let labels = HostTensor::i32(vec![batch], train.labels.iter().map(|&l| l as i32).collect());
+    let lr = HostTensor::scalar_f32(0.2);
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let mut inputs = params.clone();
+        inputs.push(x.clone());
+        inputs.push(labels.clone());
+        inputs.push(lr.clone());
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 7); // 6 updated params + loss
+        losses.push(out[6].as_f32()[0]);
+        params = out[..6].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "training via HLO did not reduce loss: {losses:?}"
+    );
+}
+
+#[test]
+fn manifest_shapes_validated() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::from_dir(dir).unwrap();
+    let exe = rt.load("parity_fff_infer").unwrap();
+    // Wrong arity.
+    let err = exe.run(&[]).unwrap_err();
+    assert!(err.to_string().contains("expected"), "{err}");
+    // Wrong shape.
+    let mut inputs = rt.initial_params("parity_fff_infer").unwrap();
+    inputs.push(HostTensor::f32(vec![1, 16], vec![0.0; 16]));
+    let err = exe.run(&inputs).unwrap_err();
+    assert!(err.to_string().contains("mismatch"), "{err}");
+}
+
+#[test]
+fn runtime_caches_executables() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::from_dir(dir).unwrap();
+    let a = rt.load("parity_fff_infer").unwrap();
+    let b = rt.load("parity_fff_infer").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}

@@ -1,0 +1,84 @@
+//! Integration: the native training stack end-to-end on the synthetic
+//! datasets — the small-scale version of the paper's qualitative claims.
+
+use fastfeedforward::config::{ModelKind, TrainConfig};
+use fastfeedforward::data::DatasetKind;
+use fastfeedforward::train::run_training;
+
+fn cfg(model: ModelKind, width: usize, leaf: usize) -> TrainConfig {
+    let mut c = TrainConfig::table1(DatasetKind::Mnist, model, width, leaf, 0);
+    c.train_n = 1200;
+    c.test_n = 400;
+    c.max_epochs = 40;
+    c.patience = 12;
+    c
+}
+
+#[test]
+fn ff_reaches_high_accuracy_on_mnist_analog() {
+    let out = run_training(&cfg(ModelKind::Ff, 64, 8));
+    assert!(out.memorization_accuracy > 0.85, "M_A = {}", out.memorization_accuracy);
+    assert!(out.generalization_accuracy > 0.75, "G_A = {}", out.generalization_accuracy);
+}
+
+#[test]
+fn fff_comparable_to_ff_at_same_training_width() {
+    // The paper's headline: FFF is within a few points of the FF of the
+    // same training width. Allow a generous margin at this tiny scale.
+    let ff = run_training(&cfg(ModelKind::Ff, 64, 8));
+    let fff = run_training(&cfg(ModelKind::Fff, 64, 8));
+    assert!(
+        fff.generalization_accuracy > ff.generalization_accuracy - 0.15,
+        "FFF G_A {} vs FF G_A {}",
+        fff.generalization_accuracy,
+        ff.generalization_accuracy
+    );
+    assert!(fff.memorization_accuracy > 0.7, "M_A = {}", fff.memorization_accuracy);
+}
+
+#[test]
+fn fff_hardens_during_training() {
+    let out = run_training(&cfg(ModelKind::Fff, 32, 8));
+    let first = &out.history.first().unwrap().entropies;
+    let last = &out.history.last().unwrap().entropies;
+    let mean = |e: &Vec<Vec<f32>>| {
+        let f: Vec<f32> = e.iter().flatten().copied().collect();
+        f.iter().sum::<f32>() / f.len().max(1) as f32
+    };
+    assert!(
+        mean(last) < mean(first),
+        "entropy did not decrease: {} -> {}",
+        mean(first),
+        mean(last)
+    );
+    // Paper: entropies below ~0.10 mean rounding costs little.
+    assert!(mean(last) < 0.4, "final mean entropy {}", mean(last));
+}
+
+#[test]
+fn moe_trains_but_slower_than_fff() {
+    // Table-2 qualitative: FFF reaches its accuracy in fewer epochs.
+    let mut fff_cfg = cfg(ModelKind::Fff, 64, 16);
+    fff_cfg.max_epochs = 30;
+    let mut moe_cfg = cfg(ModelKind::Moe, 64, 16);
+    moe_cfg.max_epochs = 30;
+    let fff = run_training(&fff_cfg);
+    let moe = run_training(&moe_cfg);
+    assert!(
+        fff.memorization_accuracy >= moe.memorization_accuracy - 0.02,
+        "FFF M_A {} should be >= MoE M_A {}",
+        fff.memorization_accuracy,
+        moe.memorization_accuracy
+    );
+}
+
+#[test]
+fn usps_analog_trains_quickly() {
+    let mut c = TrainConfig::table1(DatasetKind::Usps, ModelKind::Fff, 32, 8, 1);
+    c.train_n = 800;
+    c.test_n = 200;
+    c.max_epochs = 30;
+    c.patience = 10;
+    let out = run_training(&c);
+    assert!(out.generalization_accuracy > 0.7, "G_A = {}", out.generalization_accuracy);
+}
