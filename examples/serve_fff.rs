@@ -24,6 +24,7 @@ fn main() {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(2) },
         workers: 1,
+        threads: 0,
         queue_capacity: 4096,
     };
     println!("starting coordinator: 1 PJRT worker, max_batch=16, deadline=2ms");

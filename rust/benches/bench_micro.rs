@@ -2,15 +2,160 @@
 //! kernel, the FFF routing descent, single-leaf inference, and the
 //! coordinator's batching overhead. These are the §Perf instruments
 //! (EXPERIMENTS.md §Perf records their before/after).
+//!
+//! The run starts with the **gemm/fff_infer thread-scaling suite** (fixed
+//! seeds, 1/2/4/8 threads) and records it to `BENCH_gemm.json` so the perf
+//! trajectory is tracked PR over PR:
+//!
+//! ```text
+//! cargo bench --manifest-path rust/Cargo.toml --bench bench_micro          # full, from repo root
+//! cargo bench --bench bench_micro -- --quick                               # CI smoke subset
+//! ```
 
 use fastfeedforward::bench::{time_budgeted, time_fn, Table};
 use fastfeedforward::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, NativeFffBackend};
 use fastfeedforward::nn::{Ff, FffInfer};
 use fastfeedforward::rng::Rng;
-use fastfeedforward::tensor::{gemm, Matrix};
+use fastfeedforward::tensor::{gemm, gemm_scalar, pool, Matrix};
 use std::time::Duration;
 
+/// Thread counts the scaling suite sweeps.
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// GEMM + FFF-inference thread-scaling suite → `BENCH_gemm.json`.
+fn scaling_suite(quick: bool) {
+    let mut table = Table::new("gemm/fff_infer scaling", &["name", "time", "derived"]);
+    let mut gemm_rows: Vec<String> = Vec::new();
+    let mut fff_rows: Vec<String> = Vec::new();
+    let budget = Duration::from_millis(if quick { 120 } else { 400 });
+
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(64, 64, 64), (256, 256, 256)]
+    } else {
+        &[(64, 64, 64), (128, 128, 128), (256, 256, 256), (512, 512, 512)]
+    };
+    for &(m, k, n) in shapes {
+        let mut rng = Rng::seed_from_u64(42);
+        let mut a = Matrix::zeros(m, k);
+        let mut b = Matrix::zeros(k, n);
+        rng.fill_normal(a.as_mut_slice(), 0.0, 1.0);
+        rng.fill_normal(b.as_mut_slice(), 0.0, 1.0);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        // Baseline: the seed's serial scalar kernel.
+        let t_scalar = time_budgeted(budget, 3, 1000, || {
+            std::hint::black_box(gemm_scalar(&a, &b));
+        });
+        table.row(vec![
+            format!("gemm {m}x{k}x{n} scalar(seed)"),
+            format!("{:.3} ms", t_scalar.mean_ms()),
+            format!("{:.2} GFLOP/s", flops / t_scalar.mean.as_secs_f64() / 1e9),
+        ]);
+        gemm_rows.push(format!(
+            "{{\"shape\": \"{m}x{k}x{n}\", \"kernel\": \"scalar\", \"threads\": 1, \
+             \"ms\": {}, \"gflops\": {}, \"speedup_vs_scalar\": 1.0}}",
+            json_num(t_scalar.mean_ms()),
+            json_num(flops / t_scalar.mean.as_secs_f64() / 1e9),
+        ));
+        for &threads in &THREAD_SWEEP {
+            pool::set_global_threads(threads);
+            let t = time_budgeted(budget, 3, 1000, || {
+                std::hint::black_box(gemm(&a, &b));
+            });
+            let speedup = t_scalar.mean.as_secs_f64() / t.mean.as_secs_f64();
+            table.row(vec![
+                format!("gemm {m}x{k}x{n} pooled t={threads}"),
+                format!("{:.3} ms", t.mean_ms()),
+                format!(
+                    "{:.2} GFLOP/s, {speedup:.2}x vs scalar",
+                    flops / t.mean.as_secs_f64() / 1e9
+                ),
+            ]);
+            gemm_rows.push(format!(
+                "{{\"shape\": \"{m}x{k}x{n}\", \"kernel\": \"auto\", \"threads\": {threads}, \
+                 \"ms\": {}, \"gflops\": {}, \"speedup_vs_scalar\": {}}}",
+                json_num(t.mean_ms()),
+                json_num(flops / t.mean.as_secs_f64() / 1e9),
+                json_num(speedup),
+            ));
+        }
+    }
+
+    // FFF batched inference: leaf-bucketed grouped path vs the per-sample
+    // loop, across the same thread sweep (fixed seed, skewed-free random
+    // routing; depth 8 → 256 leaves).
+    let (dim_in, dim_out, depth, leaf) = (256usize, 256usize, 8usize, 16usize);
+    let batch = if quick { 512 } else { 2048 };
+    let mut rng = Rng::seed_from_u64(7);
+    let model = FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, 1 << depth);
+    let mut x = Matrix::zeros(batch, dim_in);
+    rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+    let t_per_sample = time_budgeted(budget, 3, 1000, || {
+        let mut y = Matrix::zeros(batch, dim_out);
+        for r in 0..batch {
+            model.infer_one(x.row(r), y.row_mut(r));
+        }
+        std::hint::black_box(y);
+    });
+    table.row(vec![
+        format!("fff_infer d={depth} l={leaf} b={batch} per-sample"),
+        format!("{:.3} ms", t_per_sample.mean_ms()),
+        format!("{:.2} us/sample", t_per_sample.mean_us() / batch as f64),
+    ]);
+    fff_rows.push(format!(
+        "{{\"depth\": {depth}, \"leaf\": {leaf}, \"batch\": {batch}, \"path\": \"per-sample\", \
+         \"threads\": 1, \"ms\": {}, \"speedup_vs_per_sample\": 1.0}}",
+        json_num(t_per_sample.mean_ms()),
+    ));
+    for &threads in &THREAD_SWEEP {
+        pool::set_global_threads(threads);
+        let t = time_budgeted(budget, 3, 1000, || {
+            std::hint::black_box(model.infer_batch_grouped(&x));
+        });
+        let speedup = t_per_sample.mean.as_secs_f64() / t.mean.as_secs_f64();
+        table.row(vec![
+            format!("fff_infer d={depth} l={leaf} b={batch} grouped t={threads}"),
+            format!("{:.3} ms", t.mean_ms()),
+            format!("{speedup:.2}x vs per-sample"),
+        ]);
+        fff_rows.push(format!(
+            "{{\"depth\": {depth}, \"leaf\": {leaf}, \"batch\": {batch}, \"path\": \"grouped\", \
+             \"threads\": {threads}, \"ms\": {}, \"speedup_vs_per_sample\": {}}}",
+            json_num(t.mean_ms()),
+            json_num(speedup),
+        ));
+    }
+    // Back to the default-sized pool (honors FFF_THREADS) for the rest.
+    pool::set_global_threads(pool::default_global_threads());
+    table.print();
+
+    let out_path = std::env::var("FFF_BENCH_GEMM_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());
+    let json = format!(
+        "{{\n  \"schema\": \"fff-bench-gemm/v1\",\n  \"quick\": {quick},\n  \
+         \"host_threads\": {},\n  \"gemm\": [\n    {}\n  ],\n  \"fff_infer\": [\n    {}\n  ]\n}}\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        gemm_rows.join(",\n    "),
+        fff_rows.join(",\n    "),
+    );
+    match std::fs::write(&out_path, json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    scaling_suite(quick);
+    if quick {
+        return;
+    }
     let mut table = Table::new("micro-benchmarks", &["name", "time", "derived"]);
     let mut rng = Rng::seed_from_u64(0);
 
@@ -95,6 +240,7 @@ fn main() {
             CoordinatorConfig {
                 batcher: BatcherConfig { max_batch: 32, max_delay: Duration::from_micros(100) },
                 workers: 1,
+                threads: 0,
                 queue_capacity: 10_000,
             },
             move || Box::new(NativeFffBackend::new(model.clone())),

@@ -45,6 +45,82 @@ pub enum OptimizerKind {
     Adam,
 }
 
+/// Serving configuration: coordinator shape plus per-worker compute-pool
+/// size. Loadable from a `key = value` file (`[serve]` section) and
+/// overridable from `fff serve` CLI flags; converts into
+/// `coordinator::CoordinatorConfig` via `From`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Inference worker threads (each owns a backend).
+    pub workers: usize,
+    /// Per-worker GEMM/FFF compute-pool threads; `0` shares the
+    /// process-global pool (`FFF_THREADS` or all cores).
+    pub threads: usize,
+    /// Batch-size cap for the deadline batcher.
+    pub max_batch: usize,
+    /// Batching deadline in microseconds.
+    pub max_delay_us: u64,
+    /// Backpressure bound on in-flight requests.
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 1,
+            threads: 0,
+            max_batch: 16,
+            max_delay_us: 2000,
+            queue_capacity: 4096,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Read `serve.*` keys from a parsed config file; absent keys keep
+    /// their defaults.
+    ///
+    /// ```
+    /// use fastfeedforward::config::{KvFile, ServeConfig};
+    /// let kv = KvFile::parse("[serve]\nworkers = 2\nthreads = 4\n").unwrap();
+    /// let cfg = ServeConfig::from_kv(&kv).unwrap();
+    /// assert_eq!(cfg.workers, 2);
+    /// assert_eq!(cfg.threads, 4);
+    /// assert_eq!(cfg.max_batch, ServeConfig::default().max_batch);
+    /// ```
+    pub fn from_kv(kv: &KvFile) -> Result<ServeConfig, String> {
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = kv.get_parsed::<usize>("serve.workers")? {
+            cfg.workers = v;
+        }
+        if let Some(v) = kv.get_parsed::<usize>("serve.threads")? {
+            cfg.threads = v;
+        }
+        if let Some(v) = kv.get_parsed::<usize>("serve.max_batch")? {
+            cfg.max_batch = v;
+        }
+        if let Some(v) = kv.get_parsed::<u64>("serve.max_delay_us")? {
+            cfg.max_delay_us = v;
+        }
+        if let Some(v) = kv.get_parsed::<usize>("serve.queue_capacity")? {
+            cfg.queue_capacity = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Bounds checks shared by file loading and CLI-flag overrides.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("serve.workers must be >= 1".into());
+        }
+        if self.max_batch == 0 {
+            return Err("serve.max_batch must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// One training run, fully specified.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -198,5 +274,23 @@ mod tests {
     fn model_kind_parse() {
         assert_eq!(ModelKind::parse("FFF"), Some(ModelKind::Fff));
         assert_eq!(ModelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn serve_config_defaults_and_kv_overrides() {
+        let kv = KvFile::parse("[serve]\nworkers = 3\nthreads = 2\nqueue_capacity = 99\n").unwrap();
+        let cfg = ServeConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.queue_capacity, 99);
+        assert_eq!(cfg.max_batch, ServeConfig::default().max_batch);
+        let empty = KvFile::parse("").unwrap();
+        assert_eq!(ServeConfig::from_kv(&empty).unwrap(), ServeConfig::default());
+    }
+
+    #[test]
+    fn serve_config_rejects_zero_workers() {
+        let kv = KvFile::parse("[serve]\nworkers = 0\n").unwrap();
+        assert!(ServeConfig::from_kv(&kv).is_err());
     }
 }

@@ -63,6 +63,11 @@ pub struct InferResponse {
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
     pub workers: usize,
+    /// Per-worker compute-pool threads for the native backend's parallel
+    /// GEMM / leaf-bucketed FFF inference. `0` (default) shares the
+    /// process-global [`crate::tensor::pool`]; `n > 0` pins an `n`-thread
+    /// pool to each worker so workers cannot oversubscribe each other.
+    pub threads: usize,
     /// Bound on queued requests (backpressure): `submit` fails fast once
     /// this many requests are in flight.
     pub queue_capacity: usize,
@@ -73,7 +78,22 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             batcher: BatcherConfig::default(),
             workers: 1,
+            threads: 0,
             queue_capacity: 4096,
+        }
+    }
+}
+
+impl From<crate::config::ServeConfig> for CoordinatorConfig {
+    fn from(s: crate::config::ServeConfig) -> CoordinatorConfig {
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: s.max_batch,
+                max_delay: std::time::Duration::from_micros(s.max_delay_us),
+            },
+            workers: s.workers,
+            threads: s.threads,
+            queue_capacity: s.queue_capacity,
         }
     }
 }
@@ -140,9 +160,12 @@ impl Coordinator {
             let metrics = metrics.clone();
             let in_flight = in_flight.clone();
             let dim_tx = dim_tx.clone();
+            let threads = config.threads;
             let handle = std::thread::Builder::new()
                 .name(format!("fff-worker-{w}"))
-                .spawn(move || worker::run_worker(brx, factory, metrics, in_flight, dim_tx))
+                .spawn(move || {
+                    worker::run_worker(brx, factory, metrics, in_flight, dim_tx, threads)
+                })
                 .expect("spawn worker");
             worker_handles.push(handle);
         }
@@ -258,6 +281,7 @@ mod tests {
                 max_delay: std::time::Duration::from_millis(2),
             },
             workers,
+            threads: 0,
             queue_capacity: 64,
         };
         Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))

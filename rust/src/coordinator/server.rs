@@ -182,6 +182,7 @@ mod tests {
             CoordinatorConfig {
                 batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
                 workers: 1,
+                threads: 0,
                 queue_capacity: 128,
             },
             move || Box::new(NativeFffBackend::new(model.clone())),

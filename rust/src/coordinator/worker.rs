@@ -146,15 +146,25 @@ impl Backend for HloBackend {
 }
 
 /// Worker loop: construct the backend, report its input dim, serve batches.
+///
+/// `threads > 0` pins a private `threads`-wide compute pool to this worker
+/// thread, so its GEMM/FFF traffic cannot oversubscribe the cores shared
+/// with sibling workers; `0` shares the process-global pool.
 pub(crate) fn run_worker<F>(
     rx: mpsc::Receiver<Batch>,
     factory: Arc<F>,
     metrics: Arc<Metrics>,
     in_flight: Arc<AtomicU64>,
     dim_tx: mpsc::Sender<usize>,
+    threads: usize,
 ) where
     F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
 {
+    if threads > 0 {
+        crate::tensor::pool::set_current(Some(Arc::new(
+            crate::tensor::pool::ThreadPool::new(threads),
+        )));
+    }
     let mut backend = factory();
     let _ = dim_tx.send(backend.dim_in());
     drop(dim_tx);

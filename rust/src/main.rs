@@ -3,6 +3,7 @@
 //! ```text
 //! fff train  --dataset mnist --model fff --width 64 --leaf 8 [--seed 0]
 //! fff serve  --artifact fff_mnist_infer_b16 [--requests 1000] [--tcp 127.0.0.1:7878]
+//!            [--workers N] [--threads N] [--config serve.kv]
 //! fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6> [--scale paper]
 //! fff info                      # artifact manifest summary
 //! ```
@@ -24,7 +25,7 @@ fn main() {
         _ => {
             eprintln!("usage: fff <train|serve|reproduce|info> [options]");
             eprintln!("  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8");
-            eprintln!("  serve      --artifact fff_mnist_infer_b16 --requests 1000");
+            eprintln!("  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0");
             eprintln!("  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6  (FFF_SCALE=paper for full grid)");
             eprintln!("  info");
             std::process::exit(2);
@@ -87,21 +88,32 @@ fn cmd_train(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
-    use fastfeedforward::coordinator::{
-        BatcherConfig, Coordinator, CoordinatorConfig, HloBackend,
-    };
-    use std::time::Duration;
+    use fastfeedforward::config::{KvFile, ServeConfig};
+    use fastfeedforward::coordinator::{Coordinator, CoordinatorConfig, HloBackend};
     let artifact = args.get("artifact").unwrap_or("fff_mnist_infer_b16").to_string();
     let requests: usize = args.get_or("requests", 1000);
-    let cfg = CoordinatorConfig {
-        batcher: BatcherConfig {
-            max_batch: args.get_or("max-batch", 16),
-            max_delay: Duration::from_micros(args.get_or("max-delay-us", 2000)),
-        },
-        workers: args.get_or("workers", 1),
-        queue_capacity: args.get_or("queue", 4096),
+    // Layering: built-in defaults < --config file < explicit CLI flags.
+    let mut scfg = match args.get("config") {
+        Some(path) => {
+            let kv = KvFile::load(std::path::Path::new(path))
+                .unwrap_or_else(|e| panic!("--config: {e}"));
+            ServeConfig::from_kv(&kv).unwrap_or_else(|e| panic!("--config: {e}"))
+        }
+        None => ServeConfig::default(),
     };
-    println!("serving artifact {artifact} ({} workers)", cfg.workers);
+    scfg.workers = args.get_or("workers", scfg.workers);
+    scfg.threads = args.get_or("threads", scfg.threads);
+    scfg.max_batch = args.get_or("max-batch", scfg.max_batch);
+    scfg.max_delay_us = args.get_or("max-delay-us", scfg.max_delay_us);
+    scfg.queue_capacity = args.get_or("queue", scfg.queue_capacity);
+    // Re-validate: CLI flags are applied after the config file's checks.
+    scfg.validate().unwrap_or_else(|e| panic!("serve options: {e}"));
+    let cfg = CoordinatorConfig::from(scfg);
+    println!(
+        "serving artifact {artifact} ({} workers, {} pool threads/worker)",
+        cfg.workers,
+        if cfg.threads == 0 { "shared".to_string() } else { cfg.threads.to_string() },
+    );
     let coord = Coordinator::start(cfg, HloBackend::factory("artifacts".into(), artifact));
     if let Some(addr) = args.get("tcp") {
         // Network mode: expose the coordinator over TCP until Ctrl-C.

@@ -1,6 +1,9 @@
 //! The vanilla feedforward baseline: in the paper's single-weight-set
 //! terminology, a ⟨dim_I, w, dim_O⟩-feedforward network — `w` hidden
 //! ReLU neurons, each with `dim_I` input and `dim_O` output weights.
+//!
+//! All dense products go through [`crate::tensor::gemm`], so wide-width
+//! paper sweeps inherit the pooled multi-threaded GEMM automatically.
 
 use super::{Linear, Model, ParamVisitor};
 use crate::rng::Rng;

@@ -575,6 +575,14 @@ impl FffInfer {
     }
 
     /// Leaf-grouped batched inference (dense-routing fast path).
+    ///
+    /// §Perf: tree descent stays per-sample, but the per-leaf GEMMs are
+    /// independent, so non-empty leaf buckets are dispatched as tasks on
+    /// the [`crate::tensor::pool`] thread pool. Bucket sizes are skewed
+    /// whenever routing is non-uniform (the load-balancing problem of
+    /// arXiv 2405.16836); the pool's work stealing absorbs the skew.
+    /// Serial and pooled dispatch produce bit-identical outputs — every
+    /// bucket's arithmetic is self-contained.
     pub fn infer_batch_grouped(&self, x: &Matrix) -> Matrix {
         let n_alloc = self.leaf_w1t.len();
         let b = x.rows();
@@ -597,13 +605,18 @@ impl FffInfer {
             order[cursor[l]] = r;
             cursor[l] += 1;
         }
-        // 3) Per-leaf GEMM on the gathered group.
+        // 3) Per-leaf GEMM on each gathered group, one pool task per
+        //    non-empty bucket.
+        let buckets: Vec<usize> = (0..n_alloc).filter(|&l| counts[l] > 0).collect();
         let mut y = Matrix::zeros(b, self.dim_out);
-        for l in 0..n_alloc {
-            let rows = &order[offsets[l]..offsets[l + 1]];
-            if rows.is_empty() {
-                continue;
-            }
+        let dim_out = self.dim_out;
+        let yptr = crate::tensor::pool::SendPtr(y.as_mut_slice().as_mut_ptr());
+        let order_ref: &[usize] = &order;
+        let offsets_ref: &[usize] = &offsets;
+        let buckets_ref: &[usize] = &buckets;
+        let run_bucket = |t: usize| {
+            let l = buckets_ref[t];
+            let rows = &order_ref[offsets_ref[l]..offsets_ref[l + 1]];
             let xs = x.gather_rows(rows);
             // a1 = relu(xs · w1 + b1): w1t is ℓ×dim_in, so xs·w1tᵀ.
             let mut a1 = crate::tensor::gemm_nt(&xs, &self.leaf_w1t[l]);
@@ -614,7 +627,25 @@ impl FffInfer {
             }
             let out = crate::tensor::gemm_bias(&a1, &self.leaf_w2[l], &self.leaf_b2[l]);
             for (local, &r) in rows.iter().enumerate() {
-                y.row_mut(r).copy_from_slice(out.row(local));
+                // SAFETY: each sample row lands in exactly one bucket, so
+                // tasks write disjoint rows of `y`; `run` blocks until all
+                // buckets are done.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(yptr.0.add(r * dim_out), dim_out)
+                };
+                dst.copy_from_slice(out.row(local));
+            }
+        };
+        let pool = crate::tensor::pool::current();
+        let flops = 2 * b * self.leaf * (self.dim_in + self.dim_out);
+        if pool.threads() > 1
+            && buckets.len() > 1
+            && flops >= crate::tensor::parallel_flop_threshold()
+        {
+            pool.run(buckets.len(), &run_bucket);
+        } else {
+            for t in 0..buckets.len() {
+                run_bucket(t);
             }
         }
         y

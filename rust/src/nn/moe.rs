@@ -12,6 +12,9 @@
 //! auxiliary losses; the top-k *threshold* term inside the load loss is
 //! treated as stop-gradient (the standard simplification — the smooth
 //! estimator's dominant term is the numerator).
+//!
+//! Expert and gate products run on [`crate::tensor::gemm`], inheriting the
+//! pooled multi-threaded engine above its FLOP threshold.
 
 use super::{Linear, Model, ParamVisitor};
 use crate::rng::Rng;

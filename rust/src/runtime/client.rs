@@ -1,5 +1,11 @@
 //! The PJRT client wrapper: HLO-text → compile → execute, with an
 //! executable cache and initial-parameter loading.
+//!
+//! The compile/execute half needs the `xla` crate (xla-rs), which the
+//! offline registry does not carry; it is gated behind the `pjrt` feature.
+//! Without it, [`Runtime`] still opens artifact directories and loads
+//! parameter blobs, but [`Runtime::load`] and [`Executable::run`] return
+//! errors explaining how to enable the real backend.
 
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
@@ -11,14 +17,22 @@ use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::{HostTensor, TensorData};
 
 /// A compiled artifact, ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
+/// Stub executable: carries the manifest spec; `run` always errors.
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    spec: ArtifactSpec,
+}
+
 impl Executable {
     /// Execute with host tensors; validates shapes against the manifest
     /// and returns the decomposed tuple outputs.
+    #[cfg(feature = "pjrt")]
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
@@ -61,6 +75,16 @@ impl Executable {
         Ok(out)
     }
 
+    /// Stub: execution is unavailable without the `pjrt` feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        bail!(
+            "{}: built without the `pjrt` feature; vendor xla-rs and rebuild with \
+             `--features pjrt` to execute HLO artifacts",
+            self.spec.name
+        )
+    }
+
     pub fn spec(&self) -> &ArtifactSpec {
         &self.spec
     }
@@ -71,6 +95,7 @@ impl Executable {
 /// Not `Send`: PJRT handles stay on the thread that created them; the
 /// coordinator gives each worker thread its own `Runtime`.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
@@ -82,8 +107,15 @@ impl Runtime {
     pub fn from_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime {
+            #[cfg(feature = "pjrt")]
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -95,11 +127,18 @@ impl Runtime {
         &self.dir
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "cpu-stub (pjrt feature disabled)".to_string()
+    }
+
     /// Load (compile) an artifact by name; cached per runtime.
+    #[cfg(feature = "pjrt")]
     pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
@@ -116,6 +155,23 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
         let exe = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Stub load: resolves the manifest spec so callers can inspect shapes,
+    /// but the returned [`Executable`] errors on [`Executable::run`].
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let exe = Rc::new(Executable { spec });
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
     }

@@ -1,6 +1,8 @@
 //! Host-side tensors and their conversion to/from PJRT literals.
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
 /// Element type of an artifact input/output.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -103,6 +105,7 @@ impl HostTensor {
     }
 
     /// Convert to a PJRT literal.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims_i64: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -129,6 +132,7 @@ impl HostTensor {
     }
 
     /// Read a PJRT literal back into a host tensor.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape().context("literal shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -174,6 +178,7 @@ mod tests {
         assert!(Dtype::parse("f64").is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
@@ -182,6 +187,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_scalar() {
         let t = HostTensor::scalar_f32(0.25);
@@ -191,6 +197,7 @@ mod tests {
         assert_eq!(back.as_f32(), &[0.25]);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = HostTensor::i32(vec![3], vec![7, -1, 2]);

@@ -1,18 +1,55 @@
-//! GEMM kernels for the native engine.
+//! GEMM kernels for the native engine (v2: packed + multi-threaded).
 //!
-//! Layout is row-major everywhere. The main kernel uses the classic
-//! `i-k-j` loop order with a 4-row unroll: the innermost loop walks
-//! contiguous rows of `B` and `C`, which LLVM auto-vectorizes to full-width
-//! SIMD on this target. K-blocking keeps the working set of `B` in L1/L2.
+//! Layout is row-major everywhere. Three execution tiers (see
+//! EXPERIMENTS.md §Perf for the measured iteration log
+//! naive → ikj → packed+parallel):
 //!
-//! This file is a §Perf target; see EXPERIMENTS.md §Perf for the measured
-//! iteration log (naive → ikj → 4-row unroll + k-blocking).
+//! 1. **Small** (below [`parallel_flop_threshold`]): the v1 serial kernel —
+//!    classic `i-k-j` loop order with a 4-row unroll and k-blocking; the
+//!    innermost loop walks contiguous rows of `B` and `C` and
+//!    auto-vectorizes to full-width SIMD. Zero dispatch overhead, so
+//!    experiment-scale matrices are not pessimized.
+//! 2. **Large**: row bands of `C` are dispatched as work-stealing tasks on
+//!    the [`super::pool`] thread pool. Band boundaries never change the
+//!    per-element accumulation order, so results are **bit-identical across
+//!    thread counts**.
+//! 3. Within a band, one of two serial kernels runs, chosen once per
+//!    process by a ~1 ms self-calibration (overridable with
+//!    `FFF_GEMM_KERNEL=packed|banded`):
+//!    * `packed` — `A`/`B` panels packed into cache-blocked buffers and an
+//!      explicit 4x8 register-tiled microkernel (the BLIS/matrixmultiply
+//!      scheme; wins when the compiler keeps the 4x8 accumulator tile in
+//!      SIMD registers);
+//!    * `banded` — the v1 `i-k-j` kernel applied per band (wins where the
+//!      packed microkernel fails to vectorize; measured on the dev box the
+//!      gcc prototype needed this fallback while LLVM vectorizes both).
 
+use super::pool::{self, SendPtr};
 use super::Matrix;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::Once;
 
-/// Panel size along `k` — chosen so a `KB × cols(B)` panel of `B` stays
-/// resident in L2 for the matrix sizes the experiments use.
-const KB: usize = 256;
+/// Panel size along `k` — a `KC × NR` micro-panel of `B` (8 KiB) plus a
+/// `KC × MR` micro-panel of `A` stays resident in L1.
+const KC: usize = 256;
+/// Microkernel tile: MR rows of `A` × NR columns of `B`.
+const MR: usize = 4;
+const NR: usize = 8;
+
+/// 2·m·k·n below which GEMMs stay on the serial v1 kernel. Defaults to
+/// 4 MFLOP (~a 128³ product); tune with [`set_parallel_flop_threshold`].
+static PAR_FLOP_THRESHOLD: AtomicUsize = AtomicUsize::new(4_000_000);
+
+/// Current FLOP cutoff between the serial small path and the pooled path.
+pub fn parallel_flop_threshold() -> usize {
+    PAR_FLOP_THRESHOLD.load(Ordering::Relaxed)
+}
+
+/// Set the FLOP cutoff (2·m·k·n) above which GEMMs use the thread pool.
+/// `0` sends everything through the pooled path (used by tests/benches).
+pub fn set_parallel_flop_threshold(flops: usize) {
+    PAR_FLOP_THRESHOLD.store(flops, Ordering::Relaxed);
+}
 
 /// `C = A (m×k) · B (k×n)`.
 pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
@@ -32,20 +69,64 @@ pub fn gemm_bias(a: &Matrix, b: &Matrix, bias: &[f32]) -> Matrix {
     c
 }
 
-/// `C += A·B` (accumulating GEMM core).
+/// `C += A·B` (accumulating GEMM core, auto-dispatched).
 pub fn gemm_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "gemm: inner dims {ka} vs {kb}");
     assert_eq!(c.shape(), (m, n), "gemm: output shape");
     let k = ka;
+    if 2 * m * k * n < parallel_flop_threshold() {
+        seed_kernel(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, k, n);
+        return;
+    }
+    let p = pool::current();
+    match kernel_choice() {
+        KernelKind::Packed => packed_parallel(a.as_slice(), b.as_slice(), c, m, k, n, &p),
+        KernelKind::Banded => banded_parallel(a.as_slice(), b.as_slice(), c, m, k, n, &p),
+    }
+}
 
-    let av = a.as_slice();
-    let bv = b.as_slice();
-    let cv = c.as_mut_slice();
+/// `C = A·B` forced through the v1 serial kernel (bench baseline).
+pub fn gemm_scalar(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    assert_eq!(k, b.rows(), "gemm_scalar: inner dims");
+    let mut c = Matrix::zeros(m, n);
+    seed_kernel(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, k, n);
+    c
+}
 
-    for k0 in (0..k).step_by(KB) {
-        let k1 = (k0 + KB).min(k);
+/// `C = A·B` forced through the packed 4x8 microkernel path on the current
+/// pool, regardless of size (property tests and bench suite).
+pub fn gemm_packed(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    assert_eq!(k, b.rows(), "gemm_packed: inner dims");
+    let mut c = Matrix::zeros(m, n);
+    let p = pool::current();
+    packed_parallel(a.as_slice(), b.as_slice(), &mut c, m, k, n, &p);
+    c
+}
+
+/// Rows per parallel band: aim for ~4 tasks per thread (work stealing
+/// evens out the tail), within [MR, 64], rounded up to a whole number of
+/// MR-row micro-panels. Band boundaries do not affect numerics.
+fn band_rows(m: usize, threads: usize) -> usize {
+    let target = m.div_ceil(threads.max(1) * 4).clamp(MR, 64);
+    target.div_ceil(MR) * MR
+}
+
+// ---------------------------------------------------------------------------
+// Banded path: the v1 i-k-j kernel over pool-dispatched row bands.
+// ---------------------------------------------------------------------------
+
+/// The v1 serial kernel: `C += A·B` over raw row-major slices. Per element
+/// the accumulation order is `p` ascending within each k-block — identical
+/// whether invoked on a full matrix or any row band of it.
+fn seed_kernel(av: &[f32], bv: &[f32], cv: &mut [f32], m: usize, k: usize, n: usize) {
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
         let mut i = 0;
         // 4-row unrolled macro-kernel.
         while i + 4 <= m {
@@ -62,8 +143,7 @@ pub fn gemm_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
                 let (c0, c1) = c01.split_at_mut(n);
                 let (c2, c3rest) = rest.split_at_mut(n);
                 let c3 = &mut c3rest[..n];
-                for j in 0..n {
-                    let bj = brow[j];
+                for (j, &bj) in brow.iter().enumerate() {
                     c0[j] += x0 * bj;
                     c1[j] += x1 * bj;
                     c2[j] += x2 * bj;
@@ -79,8 +159,8 @@ pub fn gemm_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
             for p in k0..k1 {
                 let x = arow[p];
                 let brow = &bv[p * n..p * n + n];
-                for j in 0..n {
-                    crow[j] += x * brow[j];
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += x * bj;
                 }
             }
             i += 1;
@@ -88,8 +168,260 @@ pub fn gemm_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
 }
 
+/// Row-band parallel wrapper around [`seed_kernel`].
+fn banded_parallel(
+    av: &[f32],
+    bv: &[f32],
+    c: &mut Matrix,
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &pool::ThreadPool,
+) {
+    let band = band_rows(m, p.threads());
+    let n_bands = m.div_ceil(band);
+    let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    p.run(n_bands, &|t| {
+        let i0 = t * band;
+        let rows = band.min(m - i0);
+        // SAFETY: bands are disjoint row ranges of `c`, and `run` returns
+        // before `c` is touched again by the caller.
+        let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
+        seed_kernel(&av[i0 * k..(i0 + rows) * k], bv, cv, rows, k, n);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Packed path: cache-blocked panels + explicit 4x8 microkernel.
+// ---------------------------------------------------------------------------
+
+/// Pack a `kc`-deep panel of `B` (rows `k0..k0+kc`, all `n` columns) into
+/// NR-wide micro-panels: `bpack[jp][p][c]`, zero-padded in the tail panel.
+fn pack_b(bv: &[f32], n: usize, k0: usize, kc: usize, bpack: &mut [f32]) {
+    let n_panels = n.div_ceil(NR);
+    for jp in 0..n_panels {
+        let j0 = jp * NR;
+        let nr = NR.min(n - j0);
+        let dst = &mut bpack[jp * kc * NR..(jp + 1) * kc * NR];
+        for p in 0..kc {
+            let src = &bv[(k0 + p) * n + j0..(k0 + p) * n + j0 + nr];
+            let d = &mut dst[p * NR..p * NR + NR];
+            d[..nr].copy_from_slice(src);
+            d[nr..].fill(0.0);
+        }
+    }
+}
+
+/// Pack `rows` rows of `A` starting at `i0`, columns `k0..k0+kc`, into
+/// MR-tall micro-panels: `apack[ip][p][r]`, zero-padded in the tail panel.
+fn pack_a(av: &[f32], k: usize, i0: usize, rows: usize, k0: usize, kc: usize, apack: &mut [f32]) {
+    let m_panels = rows.div_ceil(MR);
+    for ip in 0..m_panels {
+        let r0 = ip * MR;
+        let mr = MR.min(rows - r0);
+        let dst = &mut apack[ip * kc * MR..(ip + 1) * kc * MR];
+        for p in 0..kc {
+            let d = &mut dst[p * MR..p * MR + MR];
+            for (r, dr) in d[..mr].iter_mut().enumerate() {
+                *dr = av[(i0 + r0 + r) * k + k0 + p];
+            }
+            d[mr..].fill(0.0);
+        }
+    }
+}
+
+/// The 4x8 register-tiled microkernel: `C[mr×nr] += Apanel · Bpanel`.
+///
+/// Accumulators are four `[f32; NR]` arrays whose addresses are never
+/// taken, so the compiler can keep the whole tile in SIMD registers (the
+/// prototype showed that forming pointers into them forces a stack spill).
+#[inline(always)]
+fn kernel_4x8(kc: usize, ap: &[f32], bp: &[f32], cv: &mut [f32], n: usize, mr: usize, nr: usize) {
+    let mut acc0 = [0.0f32; NR];
+    let mut acc1 = [0.0f32; NR];
+    let mut acc2 = [0.0f32; NR];
+    let mut acc3 = [0.0f32; NR];
+    for p in 0..kc {
+        let b: &[f32; NR] = bp[p * NR..(p + 1) * NR].try_into().unwrap();
+        let a: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
+        for (acc, &bc) in acc0.iter_mut().zip(b.iter()) {
+            *acc += a[0] * bc;
+        }
+        for (acc, &bc) in acc1.iter_mut().zip(b.iter()) {
+            *acc += a[1] * bc;
+        }
+        for (acc, &bc) in acc2.iter_mut().zip(b.iter()) {
+            *acc += a[2] * bc;
+        }
+        for (acc, &bc) in acc3.iter_mut().zip(b.iter()) {
+            *acc += a[3] * bc;
+        }
+    }
+    if mr > 0 {
+        for (cj, &s) in cv[..nr].iter_mut().zip(acc0.iter()) {
+            *cj += s;
+        }
+    }
+    if mr > 1 {
+        for (cj, &s) in cv[n..n + nr].iter_mut().zip(acc1.iter()) {
+            *cj += s;
+        }
+    }
+    if mr > 2 {
+        for (cj, &s) in cv[2 * n..2 * n + nr].iter_mut().zip(acc2.iter()) {
+            *cj += s;
+        }
+    }
+    if mr > 3 {
+        for (cj, &s) in cv[3 * n..3 * n + nr].iter_mut().zip(acc3.iter()) {
+            *cj += s;
+        }
+    }
+}
+
+/// Packed serial band: pack the band's rows of `A`, then run the
+/// microkernel over every (MR row-panel × NR col-panel) tile.
+#[allow(clippy::too_many_arguments)]
+fn packed_band(
+    av: &[f32],
+    bpack: &[f32],
+    cv: &mut [f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    k0: usize,
+    kc: usize,
+) {
+    let m_panels = rows.div_ceil(MR);
+    let n_panels = n.div_ceil(NR);
+    let mut apack = vec![0.0f32; m_panels * MR * kc];
+    pack_a(av, k, i0, rows, k0, kc, &mut apack);
+    for ip in 0..m_panels {
+        let r0 = ip * MR;
+        let mr = MR.min(rows - r0);
+        let ap = &apack[ip * kc * MR..(ip + 1) * kc * MR];
+        for jp in 0..n_panels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let bp = &bpack[jp * kc * NR..(jp + 1) * kc * NR];
+            kernel_4x8(kc, ap, bp, &mut cv[r0 * n + j0..], n, mr, nr);
+        }
+    }
+}
+
+/// Packed + pooled `C += A·B`: per k-panel, `B` is packed once (shared,
+/// read-only) and row bands are dispatched as pool tasks, each packing its
+/// own slice of `A` into a thread-local buffer.
+fn packed_parallel(
+    av: &[f32],
+    bv: &[f32],
+    c: &mut Matrix,
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &pool::ThreadPool,
+) {
+    let n_panels = n.div_ceil(NR);
+    let kc_max = k.min(KC);
+    let mut bpack = vec![0.0f32; n_panels * kc_max * NR];
+    let band = band_rows(m, p.threads());
+    let n_bands = m.div_ceil(band);
+    let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        pack_b(bv, n, k0, kc, &mut bpack);
+        let bp: &[f32] = &bpack[..n_panels * kc * NR];
+        p.run(n_bands, &|t| {
+            let i0 = t * band;
+            let rows = band.min(m - i0);
+            // SAFETY: bands are disjoint row ranges of `c`, and `run`
+            // returns before `c` is touched again by the caller.
+            let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
+            packed_band(av, bp, cv, i0, rows, k, n, k0, kc);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel self-calibration.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum KernelKind {
+    Packed,
+    Banded,
+}
+
+static KERNEL_CHOICE: AtomicU8 = AtomicU8::new(0);
+static CALIBRATE: Once = Once::new();
+
+/// Which serial kernel the pooled path uses per band. Decided once per
+/// process: `FFF_GEMM_KERNEL=packed|banded` wins, otherwise a ~1 ms timing
+/// duel on a 64×256×64 product picks the faster one for this build/CPU.
+/// (Auto-vectorizers are fickle: the C prototype of the 4x8 microkernel
+/// ran 4x faster than i-k-j under LLVM-style codegen but 4x *slower* under
+/// gcc without `-ffast-math` — calibrating beats guessing.)
+fn kernel_choice() -> KernelKind {
+    CALIBRATE.call_once(|| {
+        let choice = match std::env::var("FFF_GEMM_KERNEL").as_deref() {
+            Ok("packed") => KernelKind::Packed,
+            Ok("banded") => KernelKind::Banded,
+            _ => calibrate(),
+        };
+        KERNEL_CHOICE.store(choice as u8 + 1, Ordering::Relaxed);
+    });
+    if KERNEL_CHOICE.load(Ordering::Relaxed) == KernelKind::Packed as u8 + 1 {
+        KernelKind::Packed
+    } else {
+        KernelKind::Banded
+    }
+}
+
+fn calibrate() -> KernelKind {
+    let (m, k, n) = (64, 256, 64);
+    let a = Matrix::from_fn(m, k, |r, c| ((r * 31 + c * 7) % 17) as f32 / 17.0 - 0.5);
+    let b = Matrix::from_fn(k, n, |r, c| ((r * 13 + c * 5) % 19) as f32 / 19.0 - 0.5);
+    let mut c = Matrix::zeros(m, n);
+    let time_min = |f: &mut dyn FnMut()| {
+        let mut best = std::time::Duration::MAX;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            f();
+            best = best.min(t0.elapsed());
+        }
+        best
+    };
+    let n_panels = n.div_ceil(NR);
+    let mut bpack = vec![0.0f32; n_panels * k * NR];
+    pack_b(b.as_slice(), n, 0, k, &mut bpack);
+    let t_packed = time_min(&mut || {
+        packed_band(a.as_slice(), &bpack, c.as_mut_slice(), 0, m, k, n, 0, k);
+    });
+    let t_banded = time_min(&mut || {
+        seed_kernel(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, k, n);
+    });
+    if t_packed <= t_banded {
+        KernelKind::Packed
+    } else {
+        KernelKind::Banded
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transposed variants.
+// ---------------------------------------------------------------------------
+
 /// `C = Aᵀ (k×m)ᵀ·B`, i.e. `A` is `k×m` and the result is `m×n`.
 /// Used for weight gradients: `dW = Xᵀ · dY`.
+///
+/// Structured as rank-1 updates `C += a_p ⊗ b_p`. Rows of `A` that are
+/// mostly zero (common after ReLU masks) keep a per-element skip; dense
+/// rows run branch-free — a branch per element on dense gradients was a
+/// measured pessimization. The dense path multiplies by the zeros it no
+/// longer skips, which is bit-identical for finite inputs except that
+/// `-0.0 + 0.0` normalizes to `+0.0` (and non-finite `B` rows propagate
+/// NaN where the skip used to mask them).
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
     let (k, m) = a.shape();
     let (kb, n) = b.shape();
@@ -97,28 +429,71 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(m, n);
     let av = a.as_slice();
     let bv = b.as_slice();
-    let cv = c.as_mut_slice();
-    // For each sample p, rank-1 update C += a_p ⊗ b_p; inner loop is
-    // contiguous over both B's row and C's row.
+    // Per-row sparsity census: one pass over A decides, row by row,
+    // whether the skip loop or the dense loop runs.
+    let mostly_zero: Vec<bool> = (0..k)
+        .map(|p| {
+            let zeros = av[p * m..(p + 1) * m].iter().filter(|&&x| x == 0.0).count();
+            2 * zeros >= m
+        })
+        .collect();
+    let p = pool::current();
+    if 2 * m * k * n < parallel_flop_threshold() || p.threads() == 1 {
+        gemm_tn_band(av, bv, c.as_mut_slice(), 0, m, k, m, n, &mostly_zero);
+        return c;
+    }
+    let band = band_rows(m, p.threads());
+    let n_bands = m.div_ceil(band);
+    let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let mz: &[bool] = &mostly_zero;
+    p.run(n_bands, &|t| {
+        let i0 = t * band;
+        let rows = band.min(m - i0);
+        // SAFETY: disjoint row bands of `c`; `run` blocks until done.
+        let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
+        gemm_tn_band(av, bv, cv, i0, rows, k, m, n, mz);
+    });
+    c
+}
+
+/// Rank-1-update band: `C[i0..i0+rows] += Σ_p a_p[i0..] ⊗ b_p`. The `p`
+/// loop stays outermost so per-element accumulation order matches the
+/// serial kernel exactly (thread-count-invariant results).
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn_band(
+    av: &[f32],
+    bv: &[f32],
+    cv: &mut [f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+    mostly_zero: &[bool],
+) {
     for p in 0..k {
-        let arow = &av[p * m..(p + 1) * m];
+        let arow = &av[p * m + i0..p * m + i0 + rows];
         let brow = &bv[p * n..(p + 1) * n];
-        for i in 0..m {
-            let x = arow[i];
-            if x == 0.0 {
-                continue; // common after ReLU masks
+        if mostly_zero[p] {
+            for (i, &x) in arow.iter().enumerate() {
+                if x == 0.0 {
+                    continue; // skip loop: row is mostly ReLU zeros
+                }
+                axpy_slice(x, brow, &mut cv[i * n..(i + 1) * n]);
             }
-            let crow = &mut cv[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += x * brow[j];
+        } else {
+            for (i, &x) in arow.iter().enumerate() {
+                axpy_slice(x, brow, &mut cv[i * n..(i + 1) * n]);
             }
         }
     }
-    c
 }
 
 /// `C = A (m×k) · Bᵀ` where `B` is `n×k`. Used for input gradients:
 /// `dX = dY · Wᵀ` with `W` stored `k_in×k_out`… kept general.
+///
+/// Each output row is a bundle of dot products, computed independently —
+/// row-band dispatch is trivially bit-identical to the serial loop.
 pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
@@ -126,12 +501,38 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(m, n);
     let av = a.as_slice();
     let bv = b.as_slice();
-    let cv = c.as_mut_slice();
-    for i in 0..m {
-        let arow = &av[i * k..(i + 1) * k];
+    let p = pool::current();
+    if 2 * m * k * n < parallel_flop_threshold() || p.threads() == 1 {
+        gemm_nt_band(av, bv, c.as_mut_slice(), 0, m, k, n);
+        return c;
+    }
+    let band = band_rows(m, p.threads());
+    let n_bands = m.div_ceil(band);
+    let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    p.run(n_bands, &|t| {
+        let i0 = t * band;
+        let rows = band.min(m - i0);
+        // SAFETY: disjoint row bands of `c`; `run` blocks until done.
+        let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
+        gemm_nt_band(av, bv, cv, i0, rows, k, n);
+    });
+    c
+}
+
+/// Dot-product band with 4 B-rows per pass over each A row (¼ the A-row
+/// traffic, 4 independent dot chains — §Perf iteration 1).
+fn gemm_nt_band(
+    av: &[f32],
+    bv: &[f32],
+    cv: &mut [f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..rows {
+        let arow = &av[(i0 + i) * k..(i0 + i + 1) * k];
         let crow = &mut cv[i * n..(i + 1) * n];
-        // Register blocking: 4 B-rows per pass over arow (¼ the arow
-        // traffic, 4 independent dot chains) — §Perf iteration 1.
         let mut j = 0;
         while j + 4 <= n {
             let b0 = &bv[j * k..(j + 1) * k];
@@ -139,8 +540,7 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
             let b2 = &bv[(j + 2) * k..(j + 3) * k];
             let b3 = &bv[(j + 3) * k..(j + 4) * k];
             let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for p in 0..k {
-                let x = arow[p];
+            for (p, &x) in arow.iter().enumerate() {
                 s0 += x * b0[p];
                 s1 += x * b1[p];
                 s2 += x * b2[p];
@@ -157,7 +557,6 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
             j += 1;
         }
     }
-    c
 }
 
 /// Dot product of two equal-length slices (unrolled).
@@ -233,6 +632,63 @@ mod tests {
     }
 
     #[test]
+    fn gemm_packed_matches_naive_ragged_shapes() {
+        let mut rng = Rng::seed_from_u64(11);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (17, 33, 9),
+            (33, 257, 31),
+            (65, 513, 129),
+            (128, 64, 8),
+            (31, 300, 17),
+            (5, 1, 5),
+        ] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let c = gemm_packed(&a, &b);
+            let c0 = naive(&a, &b);
+            assert!(c.max_abs_diff(&c0) < 1e-3, "({m},{k},{n}) diff={}", c.max_abs_diff(&c0));
+        }
+    }
+
+    #[test]
+    fn pooled_paths_are_thread_count_invariant() {
+        use crate::tensor::pool::{set_current, ThreadPool};
+        use std::sync::Arc;
+        let mut rng = Rng::seed_from_u64(12);
+        let a = rand_mat(&mut rng, 70, 130);
+        let b = rand_mat(&mut rng, 130, 50);
+        let serial = {
+            set_current(Some(Arc::new(ThreadPool::new(1))));
+            let c = gemm_packed(&a, &b);
+            set_current(None);
+            c
+        };
+        for threads in [2usize, 4, 8] {
+            set_current(Some(Arc::new(ThreadPool::new(threads))));
+            let c = gemm_packed(&a, &b);
+            set_current(None);
+            assert_eq!(c, serial, "packed path drifted at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn banded_parallel_is_bit_identical_to_scalar() {
+        use crate::tensor::pool::ThreadPool;
+        let mut rng = Rng::seed_from_u64(13);
+        let a = rand_mat(&mut rng, 67, 90);
+        let b = rand_mat(&mut rng, 90, 41);
+        let want = gemm_scalar(&a, &b);
+        for threads in [1usize, 3, 4] {
+            let p = ThreadPool::new(threads);
+            let mut c = Matrix::zeros(67, 41);
+            banded_parallel(a.as_slice(), b.as_slice(), &mut c, 67, 90, 41, &p);
+            assert_eq!(c, want, "banded path diverged from the v1 kernel at {threads} threads");
+        }
+    }
+
+    #[test]
     fn gemm_bias_adds_bias() {
         let mut rng = Rng::seed_from_u64(2);
         let a = rand_mat(&mut rng, 6, 4);
@@ -256,6 +712,28 @@ mod tests {
         let c = gemm_tn(&a, &b);
         let c0 = naive(&a.transpose(), &b);
         assert!(c.max_abs_diff(&c0) < 1e-3);
+    }
+
+    #[test]
+    fn gemm_tn_sparse_and_dense_rows_agree() {
+        // Mix fully-dense rows with ReLU-style sparse rows so both the
+        // skip loop and the branch-free loop run; compare to the naive
+        // transpose oracle.
+        let mut rng = Rng::seed_from_u64(31);
+        let mut a = rand_mat(&mut rng, 40, 23); // k×m
+        for p in 0..40 {
+            if p % 2 == 0 {
+                for v in a.row_mut(p).iter_mut() {
+                    if *v < 0.4 {
+                        *v = 0.0; // mostly-zero row → skip loop
+                    }
+                }
+            }
+        }
+        let b = rand_mat(&mut rng, 40, 11);
+        let c = gemm_tn(&a, &b);
+        let c0 = naive(&a.transpose(), &b);
+        assert!(c.max_abs_diff(&c0) < 1e-3, "diff={}", c.max_abs_diff(&c0));
     }
 
     #[test]
@@ -285,5 +763,13 @@ mod tests {
         let mut c2 = gemm(&a, &b);
         c2.scale(2.0);
         assert!(c.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn threshold_is_tunable() {
+        let before = parallel_flop_threshold();
+        set_parallel_flop_threshold(123);
+        assert_eq!(parallel_flop_threshold(), 123);
+        set_parallel_flop_threshold(before);
     }
 }

@@ -3,12 +3,17 @@
 //!
 //! The offline registry has no `ndarray`/`nalgebra`, so this is built from
 //! scratch. The GEMM lives in [`gemm`] and is one of the §Perf targets
-//! (see EXPERIMENTS.md §Perf).
+//! (see EXPERIMENTS.md §Perf); large products run multi-threaded on the
+//! [`pool`] work-stealing thread pool.
 
 mod gemm;
 mod ops;
+pub mod pool;
 
-pub use gemm::{axpy_slice, dot, gemm, gemm_acc, gemm_bias, gemm_nt, gemm_tn};
+pub use gemm::{
+    axpy_slice, dot, gemm, gemm_acc, gemm_bias, gemm_nt, gemm_packed, gemm_scalar, gemm_tn,
+    parallel_flop_threshold, set_parallel_flop_threshold,
+};
 pub use ops::*;
 
 /// Row-major 2-D `f32` tensor. Rows index samples in all batched code.

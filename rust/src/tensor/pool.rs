@@ -1,0 +1,400 @@
+//! A reusable scoped thread pool for data-parallel compute (std-only).
+//!
+//! The pool runs *parallel regions*: [`ThreadPool::run`] takes a task count
+//! and a borrowed `Fn(usize)` closure, and returns only after every task
+//! index has been executed. Workers pull indices from a shared atomic
+//! counter, so finishing early means stealing the remaining indices from
+//! slower siblings — dynamic self-scheduling that load-balances the skewed
+//! per-leaf batch sizes the FFF serving path produces (cf. the
+//! load-balancing analysis in arXiv 2405.16836).
+//!
+//! Safety model: the closure is borrowed for the duration of `run` and
+//! `run` blocks until all workers have retired the region, so the
+//! lifetime-erased reference handed to the workers never outlives the
+//! caller's borrow. Nested `run` calls (a pool task that itself calls
+//! `run`, e.g. a leaf-bucket task invoking a parallel GEMM) execute inline
+//! on the calling thread — no deadlock, no oversubscription.
+//!
+//! Sizing: the process-global pool defaults to `FFF_THREADS` or the
+//! machine's available parallelism, and can be resized with
+//! [`set_global_threads`]. Serving workers can instead pin a private pool
+//! to their thread with [`set_current`] (the coordinator's `threads` knob).
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+
+/// A raw pointer that may cross task closures. Holders must only derive
+/// disjoint slices from it per task (e.g. row bands of one output buffer),
+/// which is what keeps the aliasing sound.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// One parallel region, shared with the workers.
+#[derive(Clone)]
+struct Job {
+    /// Lifetime-erased borrow of the caller's closure; sound because
+    /// `run` does not return (or unwind) until `State::active` drops to
+    /// zero.
+    func: &'static (dyn Fn(usize) + Sync),
+    /// Next task index to claim (work stealing via fetch_add).
+    next: Arc<AtomicUsize>,
+    n_tasks: usize,
+    /// Set when any task panicked; `run` re-panics after the barrier.
+    panicked: Arc<std::sync::atomic::AtomicBool>,
+}
+
+struct State {
+    job: Option<Job>,
+    /// Bumped once per region; workers run each generation exactly once.
+    generation: u64,
+    /// Workers still executing the current region.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new generation (or shutdown).
+    work_cv: Condvar,
+    /// The submitting thread waits here for `active == 0`.
+    done_cv: Condvar,
+}
+
+/// The pool. Dropping it shuts the workers down and joins them.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes parallel regions from concurrent submitters.
+    submit: Mutex<()>,
+    threads: usize,
+}
+
+thread_local! {
+    /// True on pool worker threads and on any thread currently inside
+    /// `run`; used to run nested regions inline.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+    /// Per-thread pool override (serving workers pin their own pool).
+    static CURRENT: RefCell<Option<Arc<ThreadPool>>> = const { RefCell::new(None) };
+}
+
+impl ThreadPool {
+    /// A pool where `run` executes across `threads` threads total: the
+    /// submitting thread plus `threads - 1` workers. `threads <= 1` spawns
+    /// nothing and `run` degenerates to a serial loop.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, generation: 0, active: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 0..threads - 1 {
+            let shared = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("fff-pool-{w}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawn pool worker");
+            handles.push(handle);
+        }
+        ThreadPool { shared, handles, submit: Mutex::new(()), threads }
+    }
+
+    /// Total threads a region runs across (submitter included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(0), f(1), …, f(n_tasks - 1)`, distributed over the pool.
+    ///
+    /// Blocks until every task has run. Task order is unspecified; tasks
+    /// must only touch disjoint data (or synchronize internally). Calls
+    /// from inside a pool task run inline on the calling thread. A
+    /// panicking task does not tear the region: the barrier still
+    /// completes, then `run` re-panics on the submitting thread.
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if self.handles.is_empty() || n_tasks == 1 || IN_POOL.with(|c| c.get()) {
+            for t in 0..n_tasks {
+                f(t);
+            }
+            return;
+        }
+        let _region = self.submit.lock().unwrap_or_else(|p| p.into_inner());
+        // SAFETY: workers drop every reference to `func` before
+        // decrementing `active`, and this function neither returns nor
+        // unwinds until `active == 0` (task panics are caught and deferred
+        // past the barrier), so the erased 'static borrow never outlives
+        // `f`.
+        let func: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let next = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+            st.job = Some(Job {
+                func,
+                next: next.clone(),
+                n_tasks,
+                panicked: panicked.clone(),
+            });
+            st.generation += 1;
+            st.active = self.handles.len();
+            self.shared.work_cv.notify_all();
+        }
+        // The submitting thread steals tasks too.
+        IN_POOL.with(|c| c.set(true));
+        loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= n_tasks {
+                break;
+            }
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(t))).is_err() {
+                panicked.store(true, Ordering::Relaxed);
+                break;
+            }
+        }
+        IN_POOL.with(|c| c.set(false));
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+            while st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+            st.job = None;
+        }
+        if panicked.load(Ordering::Relaxed) {
+            panic!("ThreadPool::run: a pool task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen_generation = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen_generation {
+                    seen_generation = st.generation;
+                    break st.job.clone().expect("generation bumped without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        loop {
+            let t = job.next.fetch_add(1, Ordering::Relaxed);
+            if t >= job.n_tasks {
+                break;
+            }
+            // Catch task panics so the region barrier always completes;
+            // `run` re-panics on the submitting thread.
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.func)(t))).is_err() {
+                job.panicked.store(true, Ordering::Relaxed);
+                break;
+            }
+        }
+        // Drop the Job (and with it the lifetime-erased closure reference)
+        // BEFORE decrementing `active`: once the last decrement lands,
+        // `run` may return and invalidate the borrow.
+        drop(job);
+        let mut st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Default size for the global pool: `FFF_THREADS` or available cores.
+/// Public so callers that resized the global pool (e.g. the bench thread
+/// sweep) can restore the documented default without re-deriving it.
+pub fn default_global_threads() -> usize {
+    if let Ok(v) = std::env::var("FFF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn global_cell() -> &'static RwLock<Arc<ThreadPool>> {
+    static GLOBAL: OnceLock<RwLock<Arc<ThreadPool>>> = OnceLock::new();
+    GLOBAL.get_or_init(|| RwLock::new(Arc::new(ThreadPool::new(default_global_threads()))))
+}
+
+/// The process-global pool (created on first use).
+pub fn global() -> Arc<ThreadPool> {
+    global_cell().read().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+/// Replace the global pool with an `n`-thread one (benches sweep 1/2/4/8).
+/// In-flight regions on the old pool finish before it is dropped (`Arc`).
+pub fn set_global_threads(n: usize) {
+    let pool = Arc::new(ThreadPool::new(n));
+    let old = {
+        let mut guard = global_cell().write().unwrap_or_else(|p| p.into_inner());
+        std::mem::replace(&mut *guard, pool)
+    };
+    // Joining the old pool's workers (if this was the last Arc) happens
+    // outside the lock so `global()` callers never block on it.
+    drop(old);
+}
+
+/// The pool compute kernels should dispatch on: the calling thread's
+/// pinned pool if set ([`set_current`]), else the global pool.
+pub fn current() -> Arc<ThreadPool> {
+    if let Some(p) = CURRENT.with(|c| c.borrow().clone()) {
+        return p;
+    }
+    global()
+}
+
+/// Pin (or clear) this thread's pool. Serving workers use this so each
+/// worker's GEMM traffic runs on its own bounded pool (`threads` knob).
+pub fn set_current(pool: Option<Arc<ThreadPool>>) {
+    CURRENT.with(|c| *c.borrow_mut() = pool);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for n_tasks in [1usize, 2, 3, 7, 64, 1000] {
+            let hits: Vec<AtomicU64> = (0..n_tasks).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n_tasks, &|t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n_tasks={n_tasks}: some task not run exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_serial() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.run(10, &|t| {
+            sum.fetch_add(t, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_regions() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(17, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * 17);
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            // A task dispatching its own region must not deadlock.
+            pool.run(8, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn tasks_see_borrowed_data() {
+        let pool = ThreadPool::new(4);
+        let input: Vec<usize> = (0..100).collect();
+        let out: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(100, &|t| {
+            out[t].store(input[t] * 2, Ordering::Relaxed);
+        });
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.load(Ordering::Relaxed), 2 * i);
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_are_serialized() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    pool.run(5, &|_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 5);
+    }
+
+    #[test]
+    fn task_panic_propagates_after_barrier_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(16, &|t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic should propagate out of run");
+        // The pool must remain fully usable after a panicked region.
+        let count = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn set_current_overrides_global() {
+        let pinned = Arc::new(ThreadPool::new(1));
+        set_current(Some(pinned.clone()));
+        assert_eq!(current().threads(), 1);
+        set_current(None);
+        // Back to the global pool (whatever its size is).
+        assert!(current().threads() >= 1);
+    }
+}

@@ -10,6 +10,10 @@
 //! * early stopping after `patience` epochs without improvement on either
 //!   monitor; optional LR halving on `lr_plateau`-epoch training-accuracy
 //!   plateaus (the Table 2 recipe).
+//!
+//! Every forward/backward product runs on [`crate::tensor::gemm`]; batches
+//! above its FLOP threshold (the Table 2 `batch_size = 4096` recipes in
+//! particular) are dispatched across the [`crate::tensor::pool`] threads.
 
 use crate::config::{ModelKind, OptimizerKind, TrainConfig};
 use crate::data::{generate, BatchIter, Dataset, GenOptions};

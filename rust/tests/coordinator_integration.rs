@@ -14,6 +14,7 @@ fn native_coord(workers: usize, queue: usize) -> Coordinator {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
         workers,
+        threads: 0,
         queue_capacity: queue,
     };
     Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))
@@ -86,6 +87,7 @@ fn hlo_backend_serves_mnist_artifact() {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(2) },
         workers: 1,
+        threads: 0,
         queue_capacity: 1024,
     };
     let coord = Coordinator::start(
@@ -130,6 +132,7 @@ fn worker_panic_fails_requests_instead_of_hanging() {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
         workers: 1,
+        threads: 0,
         queue_capacity: 16,
     };
     let coord = Coordinator::start(cfg, || Box::new(PanickyBackend));

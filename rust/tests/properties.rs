@@ -249,3 +249,147 @@ fn prop_transposition_preserves_mixture_normalization() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// Threaded GEMM engine properties (PR: packed parallel GEMM + pooled FFF).
+// ---------------------------------------------------------------------------
+
+/// f64 reference product, the oracle every GEMM path must agree with.
+fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a.get(i, p) as f64 * b.get(p, j) as f64;
+            }
+            c.set(i, j, acc as f32);
+        }
+    }
+    c
+}
+
+#[derive(Debug)]
+struct GemmCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    seed: u64,
+}
+
+fn gen_gemm_case(rng: &mut Rng) -> GemmCase {
+    GemmCase {
+        m: 1 + rng.below(70),
+        k: 1 + rng.below(300),
+        n: 1 + rng.below(40),
+        threads: 1 + rng.below(5),
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_threaded_gemm_matches_naive_reference() {
+    use fastfeedforward::tensor::pool::{set_current, ThreadPool};
+    use fastfeedforward::tensor::{gemm, gemm_packed, gemm_scalar};
+    check("pooled gemm ≡ naive within 1e-3 on ragged shapes", gen_gemm_case, |case| {
+        let mut rng = Rng::seed_from_u64(case.seed);
+        let a = rand_matrix(&mut rng, case.m, case.k);
+        let b = rand_matrix(&mut rng, case.k, case.n);
+        let reference = naive_gemm(&a, &b);
+        set_current(Some(std::sync::Arc::new(ThreadPool::new(case.threads))));
+        let packed = gemm_packed(&a, &b);
+        let auto = gemm(&a, &b);
+        set_current(None);
+        let scalar = gemm_scalar(&a, &b);
+        for (name, got) in [("packed", &packed), ("auto", &auto), ("scalar", &scalar)] {
+            let diff = got.max_abs_diff(&reference);
+            if diff > 1e-3 {
+                return Err(format!(
+                    "{name} path diff {diff} at {}x{}x{} (threads {})",
+                    case.m, case.k, case.n, case.threads
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_transposed_variants_match_naive() {
+    use fastfeedforward::tensor::pool::{set_current, ThreadPool};
+    use fastfeedforward::tensor::{gemm_nt, gemm_tn};
+    check("pooled gemm_tn/gemm_nt ≡ naive within 1e-3", gen_gemm_case, |case| {
+        let mut rng = Rng::seed_from_u64(case.seed);
+        // gemm_tn: A is k×m with ReLU-style sparsity to exercise both the
+        // skip loop and the dense loop.
+        let mut at = rand_matrix(&mut rng, case.k, case.m);
+        for v in at.as_mut_slice().iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let b = rand_matrix(&mut rng, case.k, case.n);
+        let a_nt = rand_matrix(&mut rng, case.m, case.k);
+        let b_nt = rand_matrix(&mut rng, case.n, case.k);
+        set_current(Some(std::sync::Arc::new(ThreadPool::new(case.threads))));
+        let tn = gemm_tn(&at, &b);
+        let nt = gemm_nt(&a_nt, &b_nt);
+        set_current(None);
+        let tn_ref = naive_gemm(&at.transpose(), &b);
+        let nt_ref = naive_gemm(&a_nt, &b_nt.transpose());
+        if tn.max_abs_diff(&tn_ref) > 1e-3 {
+            return Err(format!("gemm_tn diff {}", tn.max_abs_diff(&tn_ref)));
+        }
+        if nt.max_abs_diff(&nt_ref) > 1e-3 {
+            return Err(format!("gemm_nt diff {}", nt.max_abs_diff(&nt_ref)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grouped_parallel_infer_matches_infer_one_depths_1_to_8() {
+    use fastfeedforward::tensor::pool::{set_current, ThreadPool};
+    // Depths 1..=8, forced through the pooled grouped path: the parallel
+    // leaf buckets must reproduce the per-sample FORWARD_I exactly.
+    check(
+        "infer_batch_grouped (pooled) ≡ infer_one loop",
+        |rng| {
+            (
+                1 + rng.below(8),          // depth 1..=8
+                1 + rng.below(6),          // leaf width
+                2 + rng.below(10),         // dim_in
+                1 + rng.below(5),          // dim_out
+                8 + rng.below(120),        // batch
+                2 + rng.below(6),          // pool threads
+                rng.next_u64(),
+            )
+        },
+        |&(depth, leaf, dim_in, dim_out, batch, threads, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let model = FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, 1 << depth.min(6));
+            let x = rand_matrix(&mut rng, batch, dim_in);
+            let mut per_sample = Matrix::zeros(batch, dim_out);
+            for r in 0..batch {
+                model.infer_one(x.row(r), per_sample.row_mut(r));
+            }
+            // Force the pooled dispatch regardless of problem size.
+            let saved = fastfeedforward::tensor::parallel_flop_threshold();
+            fastfeedforward::tensor::set_parallel_flop_threshold(0);
+            set_current(Some(std::sync::Arc::new(ThreadPool::new(threads))));
+            let grouped = model.infer_batch_grouped(&x);
+            set_current(None);
+            fastfeedforward::tensor::set_parallel_flop_threshold(saved);
+            let diff = grouped.max_abs_diff(&per_sample);
+            if diff > 1e-5 {
+                return Err(format!(
+                    "diff {diff} at depth {depth} leaf {leaf} batch {batch} threads {threads}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
