@@ -44,7 +44,12 @@ fn ablation_hardening(scale: Scale) {
         cfg.hardening = h;
         let trainer = Trainer::from_config(&cfg);
         let mut rng = Rng::seed_from_u64(0);
-        let mut fc = FffConfig::new(trainer.train.dim(), trainer.train.num_classes, cfg.fff_depth(), cfg.leaf);
+        let mut fc = FffConfig::new(
+            trainer.train.dim(),
+            trainer.train.num_classes,
+            cfg.fff_depth(),
+            cfg.leaf,
+        );
         fc.hardening = h;
         let mut fff = Fff::new(&mut rng, fc);
         let _ = trainer.run(&mut fff);
@@ -103,7 +108,12 @@ fn ablation_node_width(scale: Scale) {
         let cfg = base_cfg(scale);
         let trainer = Trainer::from_config(&cfg);
         let mut rng = Rng::seed_from_u64(0);
-        let mut fc = FffConfig::new(trainer.train.dim(), trainer.train.num_classes, cfg.fff_depth(), cfg.leaf);
+        let mut fc = FffConfig::new(
+            trainer.train.dim(),
+            trainer.train.num_classes,
+            cfg.fff_depth(),
+            cfg.leaf,
+        );
         fc.node = n;
         fc.hardening = cfg.hardening;
         let mut fff = Fff::new(&mut rng, fc);

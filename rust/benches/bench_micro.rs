@@ -4,12 +4,14 @@
 //! (EXPERIMENTS.md §Perf records their before/after).
 //!
 //! The run starts with the **gemm/fff_infer thread-scaling suite** (fixed
-//! seeds, 1/2/4/8 threads) and records it to `BENCH_gemm.json` so the perf
+//! seeds, 1/2/4/8 threads) plus the **routing-descent suite** (depths
+//! 4–15, 1/2/4 threads) and records both to `BENCH_gemm.json` so the perf
 //! trajectory is tracked PR over PR:
 //!
 //! ```text
 //! cargo bench --manifest-path rust/Cargo.toml --bench bench_micro          # full, from repo root
 //! cargo bench --bench bench_micro -- --quick                               # CI smoke subset
+//! cargo bench --bench bench_micro -- --quick --routing-only                # descent smoke only
 //! ```
 
 use fastfeedforward::bench::{time_budgeted, time_fn, Table};
@@ -22,12 +24,81 @@ use std::time::Duration;
 /// Thread counts the scaling suite sweeps.
 const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
 
+/// Thread counts the routing suite sweeps (ISSUE 2 acceptance grid).
+const ROUTE_THREAD_SWEEP: [usize; 3] = [1, 2, 4];
+
 fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v:.4}")
     } else {
         "null".to_string()
     }
+}
+
+/// Routing-descent scaling suite: the batched level-synchronous router
+/// ([`FffInfer::route_batch`]) vs the per-sample descent, depths 4–15 at
+/// 1/2/4 threads, in the descent-dominated regime (`leaf ≤ 8`). Returns
+/// the `routing` rows for `BENCH_gemm.json`.
+fn routing_suite(quick: bool) -> Vec<String> {
+    let mut table = Table::new("routing descent scaling", &["name", "time", "derived"]);
+    let mut rows: Vec<String> = Vec::new();
+    let budget = Duration::from_millis(if quick { 120 } else { 400 });
+    let (dim_in, leaf) = (128usize, 4usize);
+    let batch = if quick { 1024 } else { 4096 };
+    // Leaf storage is aliased to 64 banks so deep trees stay routing
+    // benchmarks, not allocation benchmarks; descent work is exact.
+    let depths: &[usize] = if quick { &[4, 11] } else { &[4, 8, 12, 15] };
+    for &depth in depths {
+        let mut rng = Rng::seed_from_u64(21);
+        let model = FffInfer::random(&mut rng, dim_in, 16, depth, leaf, 64);
+        let mut x = Matrix::zeros(batch, dim_in);
+        rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+        // Baseline: the dependent per-sample walk, single thread.
+        pool::set_global_threads(1);
+        let t_per_sample = time_budgeted(budget, 3, 1000, || {
+            let mut acc = 0usize;
+            for r in 0..batch {
+                acc ^= model.route(x.row(r));
+            }
+            std::hint::black_box(acc);
+        });
+        let us = t_per_sample.mean_us();
+        table.row(vec![
+            format!("route d={depth} b={batch} per-sample"),
+            format!("{:.3} ms", t_per_sample.mean_ms()),
+            format!("{:.0} samples/ms", batch as f64 / t_per_sample.mean_ms()),
+        ]);
+        rows.push(format!(
+            "{{\"depth\": {depth}, \"dim_in\": {dim_in}, \"batch\": {batch}, \
+             \"path\": \"per-sample\", \"threads\": 1, \"ms\": {}, \"us_per_sample\": {}, \
+             \"speedup_vs_per_sample\": 1.0}}",
+            json_num(t_per_sample.mean_ms()),
+            json_num(us / batch as f64),
+        ));
+        for &threads in &ROUTE_THREAD_SWEEP {
+            pool::set_global_threads(threads);
+            let t = time_budgeted(budget, 3, 1000, || {
+                std::hint::black_box(model.route_batch(&x));
+            });
+            let speedup = t_per_sample.mean.as_secs_f64() / t.mean.as_secs_f64();
+            table.row(vec![
+                format!("route_batch d={depth} b={batch} t={threads}"),
+                format!("{:.3} ms", t.mean_ms()),
+                format!("{speedup:.2}x vs per-sample"),
+            ]);
+            rows.push(format!(
+                "{{\"depth\": {depth}, \"dim_in\": {dim_in}, \"batch\": {batch}, \
+                 \"path\": \"batched\", \"threads\": {threads}, \"ms\": {}, \
+                 \"us_per_sample\": {}, \"speedup_vs_per_sample\": {}}}",
+                json_num(t.mean_ms()),
+                json_num(t.mean_us() / batch as f64),
+                json_num(speedup),
+            ));
+        }
+    }
+    pool::set_global_threads(pool::default_global_threads());
+    table.print();
+    rows
 }
 
 /// GEMM + FFF-inference thread-scaling suite → `BENCH_gemm.json`.
@@ -136,13 +207,17 @@ fn scaling_suite(quick: bool) {
     pool::set_global_threads(pool::default_global_threads());
     table.print();
 
+    let routing_rows = routing_suite(quick);
+
     let out_path = std::env::var("FFF_BENCH_GEMM_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());
     let json = format!(
-        "{{\n  \"schema\": \"fff-bench-gemm/v1\",\n  \"quick\": {quick},\n  \
-         \"host_threads\": {},\n  \"gemm\": [\n    {}\n  ],\n  \"fff_infer\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"schema\": \"fff-bench-gemm/v2\",\n  \"quick\": {quick},\n  \
+         \"host_threads\": {},\n  \"gemm\": [\n    {}\n  ],\n  \"fff_infer\": [\n    {}\n  ],\n  \
+         \"routing\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         gemm_rows.join(",\n    "),
         fff_rows.join(",\n    "),
+        routing_rows.join(",\n    "),
     );
     match std::fs::write(&out_path, json) {
         Ok(()) => println!("wrote {out_path}"),
@@ -152,6 +227,12 @@ fn scaling_suite(quick: bool) {
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    // Routing-only smoke: run just the descent suite (no JSON rewrite, so
+    // a partial run never clobbers the tracked artifact).
+    if std::env::args().any(|a| a == "--routing-only") {
+        let _ = routing_suite(quick);
+        return;
+    }
     scaling_suite(quick);
     if quick {
         return;

@@ -97,7 +97,12 @@ pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
 /// Time `f` adaptively: run until `budget` wall time or `max_iters`,
 /// whichever first (at least `min_iters`). Used by the fig3/4 sweep where
 /// per-call cost spans 4 orders of magnitude.
-pub fn time_budgeted(budget: Duration, min_iters: usize, max_iters: usize, mut f: impl FnMut()) -> Timing {
+pub fn time_budgeted(
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    mut f: impl FnMut(),
+) -> Timing {
     // Warmup: one call.
     f();
     let mut samples = Vec::new();

@@ -11,13 +11,48 @@ pub struct KvFile {
     values: BTreeMap<String, String>,
 }
 
+/// Truncate `line` at the first `#` that is *outside* double quotes, so
+/// quoted values may contain `#` (`path = "a#b"`). If the line ends with
+/// quotes still open, the quote tracking was meaningless (an unquoted
+/// value with a stray `"`, e.g. `size = 3.5" # in`), so fall back to
+/// stripping at the first `#` anywhere.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quotes = false;
+    let mut quoted_hash = None;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            '#' if quoted_hash.is_none() => quoted_hash = Some(i),
+            _ => {}
+        }
+    }
+    if in_quotes {
+        if let Some(i) = quoted_hash {
+            return &line[..i];
+        }
+    }
+    line
+}
+
+/// Strip exactly one pair of enclosing double quotes, if present. Unlike
+/// `trim_matches('"')`, repeated or embedded quotes survive: `""x""`
+/// unquotes to `"x"`, and `"a"b"` to `a"b`.
+fn unquote(v: &str) -> &str {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
 impl KvFile {
     /// Parse from text. Returns `Err` with a line number on malformed input.
     pub fn parse(text: &str) -> Result<KvFile, String> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
@@ -25,15 +60,15 @@ impl KvFile {
                 section = name.trim().to_string();
                 continue;
             }
-            let (k, v) = line
-                .split_once('=')
-                .ok_or_else(|| format!("line {}: expected 'key = value', got {raw:?}", lineno + 1))?;
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                format!("line {}: expected 'key = value', got {raw:?}", lineno + 1)
+            })?;
             let key = if section.is_empty() {
                 k.trim().to_string()
             } else {
                 format!("{section}.{}", k.trim())
             };
-            let value = v.trim().trim_matches('"').to_string();
+            let value = unquote(v.trim()).to_string();
             if values.insert(key.clone(), value).is_some() {
                 return Err(format!("line {}: duplicate key {key:?}", lineno + 1));
             }
@@ -54,10 +89,9 @@ impl KvFile {
     pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
         match self.values.get(key) {
             None => Ok(None),
-            Some(v) => v
-                .parse()
-                .map(Some)
-                .map_err(|_| format!("key {key:?}: cannot parse {v:?} as {}", std::any::type_name::<T>())),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                format!("key {key:?}: cannot parse {v:?} as {}", std::any::type_name::<T>())
+            }),
         }
     }
 
@@ -113,5 +147,44 @@ mod tests {
     fn bad_parse_is_error() {
         let f = KvFile::parse("a = banana\n").unwrap();
         assert!(f.get_parsed::<usize>("a").is_err());
+    }
+
+    #[test]
+    fn quoted_value_may_contain_hash() {
+        // Regression: comment stripping used to run before quote handling,
+        // silently truncating `"a#b"` to `"a`.
+        let f = KvFile::parse("path = \"runs/a#b\"  # trailing comment\n").unwrap();
+        assert_eq!(f.get("path"), Some("runs/a#b"));
+    }
+
+    #[test]
+    fn quoted_value_may_contain_equals() {
+        let f = KvFile::parse("flags = \"-Copt=3\" # tuned\n").unwrap();
+        assert_eq!(f.get("flags"), Some("-Copt=3"));
+    }
+
+    #[test]
+    fn embedded_and_repeated_quotes_survive() {
+        // Regression: trim_matches('"') used to eat every leading/trailing
+        // quote; exactly one enclosing pair must be stripped.
+        let f = KvFile::parse("a = \"he said \"hi\"\"\nb = \"\"x\"\"\nc = \"\"\n").unwrap();
+        assert_eq!(f.get("a"), Some("he said \"hi\""));
+        assert_eq!(f.get("b"), Some("\"x\""));
+        assert_eq!(f.get("c"), Some(""));
+    }
+
+    #[test]
+    fn lone_quote_value_is_preserved() {
+        let f = KvFile::parse("q = \"\nw = plain # note\n").unwrap();
+        assert_eq!(f.get("q"), Some("\""));
+        assert_eq!(f.get("w"), Some("plain"));
+    }
+
+    #[test]
+    fn unbalanced_quote_still_strips_comment() {
+        // A stray quote in an unquoted value must not swallow the
+        // comment: quote tracking resets when the line ends unbalanced.
+        let f = KvFile::parse("size = 3.5\" # inches\n").unwrap();
+        assert_eq!(f.get("size"), Some("3.5\""));
     }
 }

@@ -161,8 +161,12 @@ impl TrainConfig {
         match self.depth {
             Some(d) => d,
             None => {
-                assert!(self.width % self.leaf == 0 && (self.width / self.leaf).is_power_of_two(),
-                    "width/leaf must be a power of two to derive depth (w={}, ell={})", self.width, self.leaf);
+                assert!(
+                    self.width % self.leaf == 0 && (self.width / self.leaf).is_power_of_two(),
+                    "width/leaf must be a power of two to derive depth (w={}, ell={})",
+                    self.width,
+                    self.leaf
+                );
                 (self.width / self.leaf).trailing_zeros() as usize
             }
         }
@@ -174,7 +178,13 @@ impl TrainConfig {
     }
 
     /// The paper's Table 1 recipe (explorative evaluation).
-    pub fn table1(dataset: DatasetKind, model: ModelKind, width: usize, leaf: usize, seed: u64) -> Self {
+    pub fn table1(
+        dataset: DatasetKind,
+        model: ModelKind,
+        width: usize,
+        leaf: usize,
+        seed: u64,
+    ) -> Self {
         TrainConfig {
             dataset,
             model,
@@ -228,7 +238,13 @@ impl TrainConfig {
     }
 
     /// The paper's Figure 2 recipe (inference-size counterparts; h=0).
-    pub fn fig2(dataset: DatasetKind, model: ModelKind, leaf: usize, depth: usize, seed: u64) -> Self {
+    pub fn fig2(
+        dataset: DatasetKind,
+        model: ModelKind,
+        leaf: usize,
+        depth: usize,
+        seed: u64,
+    ) -> Self {
         let mut c = Self::table1(dataset, model, leaf << depth, leaf, seed);
         c.depth = Some(depth);
         c.hardening = 0.0;

@@ -3,10 +3,15 @@
 //! The batcher drains the global request queue into batches, closing a
 //! batch when it reaches `max_batch` or when the *oldest* queued request
 //! has waited `max_delay` — the standard latency/throughput knob of
-//! serving systems. Batches are dispatched to workers round-robin.
+//! serving systems. Batches go to the **least-loaded** worker (fewest
+//! dispatched-but-uncompleted requests, round-robin on ties): FFF batch
+//! service times are uneven because routing skews leaf buckets (arXiv
+//! 2405.16836), and blind round-robin queues batches behind whichever
+//! worker drew the slow ones.
 
 use super::InferRequest;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -29,10 +34,18 @@ pub struct Batch {
     pub requests: Vec<InferRequest>,
 }
 
+/// A worker endpoint as the batcher sees it: its batch queue plus the
+/// number of requests dispatched to it and not yet completed (the worker
+/// decrements after responding).
+pub(crate) struct WorkerSlot {
+    pub(crate) tx: mpsc::Sender<Batch>,
+    pub(crate) outstanding: Arc<AtomicU64>,
+}
+
 /// The batcher loop. Exits when the request channel closes.
 pub(crate) fn run_batcher(
     rx: mpsc::Receiver<InferRequest>,
-    workers: Vec<mpsc::Sender<Batch>>,
+    workers: Vec<WorkerSlot>,
     cfg: BatcherConfig,
 ) {
     assert!(cfg.max_batch >= 1);
@@ -71,18 +84,45 @@ pub(crate) fn run_batcher(
     }
 }
 
-fn dispatch(pending: &mut Vec<InferRequest>, workers: &[mpsc::Sender<Batch>], next: &mut usize) {
+fn dispatch(pending: &mut Vec<InferRequest>, workers: &[WorkerSlot], next: &mut usize) {
     let mut batch = Batch { requests: std::mem::take(pending) };
-    // Round-robin over live workers; skip dead ones.
-    for _ in 0..workers.len() {
-        let w = *next % workers.len();
-        *next = (*next + 1) % workers.len();
-        match workers[w].send(batch) {
+    let n = workers.len();
+    let mut dead = vec![false; n];
+    loop {
+        // Least-loaded live worker; the scan starts at the round-robin
+        // cursor so ties rotate instead of pinning worker 0.
+        let mut best: Option<(usize, u64)> = None;
+        for off in 0..n {
+            let w = (*next + off) % n;
+            if dead[w] {
+                continue;
+            }
+            let load = workers[w].outstanding.load(Ordering::Acquire);
+            let better = match best {
+                None => true,
+                Some((_, l)) => load < l,
+            };
+            if better {
+                best = Some((w, load));
+            }
+        }
+        let Some((w, _)) = best else {
+            // All workers gone; drop the batch (responses' channels close).
+            return;
+        };
+        *next = (w + 1) % n;
+        let len = batch.requests.len() as u64;
+        workers[w].outstanding.fetch_add(len, Ordering::AcqRel);
+        match workers[w].tx.send(batch) {
             Ok(()) => return,
-            Err(mpsc::SendError(b)) => batch = b, // worker gone; try the next
+            Err(mpsc::SendError(b)) => {
+                // Worker gone: roll back its counter and try another.
+                workers[w].outstanding.fetch_sub(len, Ordering::AcqRel);
+                dead[w] = true;
+                batch = b;
+            }
         }
     }
-    // All workers gone; drop the batch (responses' channels close).
 }
 
 #[cfg(test)]
@@ -95,12 +135,16 @@ mod tests {
         InferRequest { id, input: vec![0.0; 4], submitted: Instant::now(), resp: tx }
     }
 
+    fn slot(tx: mpsc::Sender<Batch>) -> WorkerSlot {
+        WorkerSlot { tx, outstanding: Arc::new(AtomicU64::new(0)) }
+    }
+
     #[test]
     fn batches_close_at_max_batch() {
         let (tx, rx) = mpsc::channel();
         let (wtx, wrx) = mpsc::channel();
         let cfg = BatcherConfig { max_batch: 4, max_delay: Duration::from_secs(10) };
-        let h = std::thread::spawn(move || run_batcher(rx, vec![wtx], cfg));
+        let h = std::thread::spawn(move || run_batcher(rx, vec![slot(wtx)], cfg));
         for i in 0..8 {
             tx.send(req(i)).unwrap();
         }
@@ -118,7 +162,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let (wtx, wrx) = mpsc::channel();
         let cfg = BatcherConfig { max_batch: 100, max_delay: Duration::from_millis(5) };
-        let h = std::thread::spawn(move || run_batcher(rx, vec![wtx], cfg));
+        let h = std::thread::spawn(move || run_batcher(rx, vec![slot(wtx)], cfg));
         tx.send(req(0)).unwrap();
         tx.send(req(1)).unwrap();
         let t0 = Instant::now();
@@ -134,11 +178,61 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let (wtx, wrx) = mpsc::channel();
         let cfg = BatcherConfig { max_batch: 100, max_delay: Duration::from_secs(100) };
-        let h = std::thread::spawn(move || run_batcher(rx, vec![wtx], cfg));
+        let h = std::thread::spawn(move || run_batcher(rx, vec![slot(wtx)], cfg));
         tx.send(req(7)).unwrap();
         drop(tx);
         let batch = wrx.recv().unwrap();
         assert_eq!(batch.requests[0].id, 7);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn dispatch_prefers_least_loaded_worker() {
+        // Worker 0 is busy (5 outstanding); a fresh batch must land on
+        // the idle worker 1 even though round-robin would pick 0.
+        let (w0tx, w0rx) = mpsc::channel();
+        let (w1tx, w1rx) = mpsc::channel();
+        let workers = vec![slot(w0tx), slot(w1tx)];
+        workers[0].outstanding.store(5, Ordering::Release);
+        let mut pending = vec![req(0), req(1)];
+        let mut next = 0usize;
+        dispatch(&mut pending, &workers, &mut next);
+        assert_eq!(w1rx.recv().unwrap().requests.len(), 2);
+        assert!(w0rx.try_recv().is_err(), "busy worker should not receive");
+        assert_eq!(workers[1].outstanding.load(Ordering::Acquire), 2);
+    }
+
+    #[test]
+    fn dispatch_rolls_back_and_skips_dead_worker() {
+        // Worker 0 idle but dead (receiver dropped): the batch must fall
+        // through to worker 1 and worker 0's counter must roll back.
+        let (w0tx, w0rx) = mpsc::channel();
+        let (w1tx, w1rx) = mpsc::channel();
+        drop(w0rx);
+        let workers = vec![slot(w0tx), slot(w1tx)];
+        // Bias worker 1 so the least-loaded pick is the dead worker 0.
+        workers[1].outstanding.store(3, Ordering::Release);
+        let mut pending = vec![req(9)];
+        let mut next = 0usize;
+        dispatch(&mut pending, &workers, &mut next);
+        assert_eq!(w1rx.recv().unwrap().requests[0].id, 9);
+        assert_eq!(workers[0].outstanding.load(Ordering::Acquire), 0, "no rollback");
+        assert_eq!(workers[1].outstanding.load(Ordering::Acquire), 4);
+    }
+
+    #[test]
+    fn dispatch_rotates_on_ties() {
+        let (w0tx, w0rx) = mpsc::channel();
+        let (w1tx, w1rx) = mpsc::channel();
+        let workers = vec![slot(w0tx), slot(w1tx)];
+        let mut next = 0usize;
+        let mut pending = vec![req(0)];
+        dispatch(&mut pending, &workers, &mut next);
+        // Drain and reset so the second dispatch sees a tie again.
+        assert_eq!(w0rx.recv().unwrap().requests.len(), 1);
+        workers[0].outstanding.store(0, Ordering::Release);
+        let mut pending = vec![req(1)];
+        dispatch(&mut pending, &workers, &mut next);
+        assert_eq!(w1rx.recv().unwrap().requests.len(), 1, "tie should rotate to worker 1");
     }
 }

@@ -1,6 +1,8 @@
 //! Serving metrics: completed/rejected counters, latency percentiles,
-//! batch-size distribution.
+//! batch-size distribution, and per-batch routing occupancy/skew (the
+//! load-balance signal of arXiv 2405.16836, reported by routing backends).
 
+use crate::nn::RoutingStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -16,6 +18,10 @@ pub struct Metrics {
 struct Samples {
     latencies_us: Vec<f64>,
     batch_sizes: Vec<f64>,
+    /// Per routed batch: mean samples per non-empty leaf.
+    leaf_occupancy: Vec<f64>,
+    /// Per routed batch: largest bucket over mean bucket (1.0 balanced).
+    leaf_skew: Vec<f64>,
 }
 
 /// Point-in-time view of the metrics.
@@ -27,6 +33,10 @@ pub struct MetricsSnapshot {
     pub latency_p99: Duration,
     pub latency_mean: Duration,
     pub mean_batch: f64,
+    /// Mean leaf occupancy across routed batches (0 when none recorded).
+    pub mean_leaf_occupancy: f64,
+    /// Mean leaf skew across routed batches (0 when none recorded).
+    pub mean_leaf_skew: f64,
 }
 
 impl Metrics {
@@ -45,10 +55,22 @@ impl Metrics {
         s.batch_sizes.push(batch_size as f64);
     }
 
+    /// Record one routed batch's leaf-occupancy summary.
+    pub fn record_routing(&self, stats: &RoutingStats) {
+        if stats.samples == 0 {
+            return;
+        }
+        let mut s = self.samples.lock().unwrap();
+        s.leaf_occupancy.push(stats.mean_occupancy());
+        s.leaf_skew.push(stats.skew());
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let s = self.samples.lock().unwrap();
         let lat = crate::bench::summarize(&s.latencies_us);
         let batch = crate::bench::summarize(&s.batch_sizes);
+        let occupancy = crate::bench::summarize(&s.leaf_occupancy);
+        let skew = crate::bench::summarize(&s.leaf_skew);
         MetricsSnapshot {
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -56,6 +78,8 @@ impl Metrics {
             latency_p99: Duration::from_secs_f64(lat.p99 / 1e6),
             latency_mean: Duration::from_secs_f64(lat.mean / 1e6),
             mean_batch: batch.mean,
+            mean_leaf_occupancy: occupancy.mean,
+            mean_leaf_skew: skew.mean,
         }
     }
 }
@@ -70,13 +94,16 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "completed={} rejected={} p50={:.1}us p99={:.1}us mean={:.1}us mean_batch={:.1}",
+            "completed={} rejected={} p50={:.1}us p99={:.1}us mean={:.1}us mean_batch={:.1} \
+             leaf_occupancy={:.2} leaf_skew={:.2}",
             self.completed,
             self.rejected,
             self.latency_p50.as_secs_f64() * 1e6,
             self.latency_p99.as_secs_f64() * 1e6,
             self.latency_mean.as_secs_f64() * 1e6,
-            self.mean_batch
+            self.mean_batch,
+            self.mean_leaf_occupancy,
+            self.mean_leaf_skew
         )
     }
 }
@@ -102,5 +129,21 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.latency_p99, Duration::ZERO);
+        assert_eq!(s.mean_leaf_occupancy, 0.0);
+        assert_eq!(s.mean_leaf_skew, 0.0);
+    }
+
+    #[test]
+    fn routing_stats_are_averaged() {
+        let m = Metrics::new();
+        // Batch 1: 8 samples over 4 leaves, max bucket 4 (skew 2.0).
+        m.record_routing(&RoutingStats { samples: 8, distinct_leaves: 4, max_bucket: 4 });
+        // Batch 2: 6 samples over 2 leaves, max bucket 3 (skew 1.0).
+        m.record_routing(&RoutingStats { samples: 6, distinct_leaves: 2, max_bucket: 3 });
+        // Empty batches are ignored.
+        m.record_routing(&RoutingStats { samples: 0, distinct_leaves: 0, max_bucket: 0 });
+        let s = m.snapshot();
+        assert!((s.mean_leaf_occupancy - 2.5).abs() < 1e-9, "{}", s.mean_leaf_occupancy);
+        assert!((s.mean_leaf_skew - 1.5).abs() < 1e-9, "{}", s.mean_leaf_skew);
     }
 }

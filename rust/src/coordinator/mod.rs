@@ -148,14 +148,16 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let in_flight = Arc::new(AtomicU64::new(0));
 
-        // Per-worker batch queues (round-robin dispatch from the batcher).
-        let mut worker_txs = Vec::new();
+        // Per-worker batch queues; the batcher dispatches to the
+        // least-loaded worker using the shared outstanding counters.
+        let mut worker_slots = Vec::new();
         let mut worker_handles = Vec::new();
         // The probe worker reports dim_in back so submit() can validate.
         let (dim_tx, dim_rx) = mpsc::channel::<usize>();
         for w in 0..config.workers {
             let (btx, brx) = mpsc::channel::<Batch>();
-            worker_txs.push(btx);
+            let outstanding = Arc::new(AtomicU64::new(0));
+            worker_slots.push(batcher::WorkerSlot { tx: btx, outstanding: outstanding.clone() });
             let factory = factory.clone();
             let metrics = metrics.clone();
             let in_flight = in_flight.clone();
@@ -164,7 +166,9 @@ impl Coordinator {
             let handle = std::thread::Builder::new()
                 .name(format!("fff-worker-{w}"))
                 .spawn(move || {
-                    worker::run_worker(brx, factory, metrics, in_flight, dim_tx, threads)
+                    worker::run_worker(
+                        brx, factory, metrics, in_flight, outstanding, dim_tx, threads,
+                    )
                 })
                 .expect("spawn worker");
             worker_handles.push(handle);
@@ -176,7 +180,7 @@ impl Coordinator {
         let bcfg = config.batcher;
         let batcher_handle = std::thread::Builder::new()
             .name("fff-batcher".into())
-            .spawn(move || batcher::run_batcher(rx, worker_txs, bcfg))
+            .spawn(move || batcher::run_batcher(rx, worker_slots, bcfg))
             .expect("spawn batcher");
 
         Coordinator {

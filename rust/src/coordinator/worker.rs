@@ -2,7 +2,7 @@
 
 use super::batcher::Batch;
 use super::metrics::Metrics;
-use crate::nn::FffInfer;
+use crate::nn::{FffInfer, RoutingStats};
 use crate::tensor::Matrix;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -13,6 +13,11 @@ pub trait Backend {
     fn dim_out(&self) -> usize;
     /// Batched inference: `B×dim_in → B×dim_out`.
     fn infer(&mut self, batch: &Matrix) -> Matrix;
+    /// Leaf-occupancy stats of the last `infer` call, for backends that
+    /// route (the native FFF engine). `None` when not applicable.
+    fn last_routing(&self) -> Option<RoutingStats> {
+        None
+    }
     fn name(&self) -> &'static str {
         "backend"
     }
@@ -21,11 +26,12 @@ pub trait Backend {
 /// The native FFF inference engine as a backend.
 pub struct NativeFffBackend {
     model: FffInfer,
+    last_routing: Option<RoutingStats>,
 }
 
 impl NativeFffBackend {
     pub fn new(model: FffInfer) -> Self {
-        NativeFffBackend { model }
+        NativeFffBackend { model, last_routing: None }
     }
 }
 
@@ -39,7 +45,16 @@ impl Backend for NativeFffBackend {
     }
 
     fn infer(&mut self, batch: &Matrix) -> Matrix {
-        self.model.infer_batch(batch)
+        // One batched descent serves both the leaf evaluation and the
+        // occupancy/skew telemetry (arXiv 2405.16836's balance signal).
+        let leaf_of = self.model.route_batch(batch);
+        self.last_routing =
+            Some(RoutingStats::from_leaf_ids(&leaf_of, self.model.alloc_leaves()));
+        self.model.infer_batch_routed(batch, &leaf_of)
+    }
+
+    fn last_routing(&self) -> Option<RoutingStats> {
+        self.last_routing
     }
 
     fn name(&self) -> &'static str {
@@ -150,11 +165,15 @@ impl Backend for HloBackend {
 /// `threads > 0` pins a private `threads`-wide compute pool to this worker
 /// thread, so its GEMM/FFF traffic cannot oversubscribe the cores shared
 /// with sibling workers; `0` shares the process-global pool.
+/// `outstanding` is this worker's dispatched-but-uncompleted request
+/// count, decremented here so the batcher's least-loaded dispatch sees
+/// service completion, not just queue handoff.
 pub(crate) fn run_worker<F>(
     rx: mpsc::Receiver<Batch>,
     factory: Arc<F>,
     metrics: Arc<Metrics>,
     in_flight: Arc<AtomicU64>,
+    outstanding: Arc<AtomicU64>,
     dim_tx: mpsc::Sender<usize>,
     threads: usize,
 ) where
@@ -175,6 +194,9 @@ pub(crate) fn run_worker<F>(
         let n = batch.requests.len();
         let x = super::stack_inputs(&batch.requests);
         let y = backend.infer(&x);
+        if let Some(stats) = backend.last_routing() {
+            metrics.record_routing(&stats);
+        }
         let done = std::time::Instant::now();
         for (i, req) in batch.requests.into_iter().enumerate() {
             let latency = done.duration_since(req.submitted);
@@ -186,6 +208,7 @@ pub(crate) fn run_worker<F>(
                 batch_size: n,
             });
         }
+        outstanding.fetch_sub(n as u64, Ordering::AcqRel);
         in_flight.fetch_sub(n as u64, Ordering::AcqRel);
     }
 }
@@ -206,5 +229,8 @@ mod tests {
         let got = backend.infer(&x);
         let want = model.infer_batch(&x);
         assert!(got.max_abs_diff(&want) < 1e-7);
+        let stats = backend.last_routing().expect("native backend reports routing stats");
+        assert_eq!(stats.samples, 4);
+        assert!(stats.distinct_leaves >= 1 && stats.max_bucket >= 1);
     }
 }

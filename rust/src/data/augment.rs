@@ -41,7 +41,15 @@ impl Augment {
         }
     }
 
-    fn apply_one(&self, img: &mut [f32], tmp: &mut [f32], h: usize, w: usize, c: usize, rng: &mut Rng) {
+    fn apply_one(
+        &self,
+        img: &mut [f32],
+        tmp: &mut [f32],
+        h: usize,
+        w: usize,
+        c: usize,
+        rng: &mut Rng,
+    ) {
         // Flips first (exact pixel moves).
         if self.hflip && rng.bernoulli(0.5) {
             for y in 0..h {

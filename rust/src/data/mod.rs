@@ -80,7 +80,8 @@ mod tests {
     use super::*;
 
     fn tiny() -> Dataset {
-        let (train, _) = generate(DatasetKind::Usps, &GenOptions { train_n: 200, test_n: 50, seed: 1 });
+        let (train, _) =
+            generate(DatasetKind::Usps, &GenOptions { train_n: 200, test_n: 50, seed: 1 });
         train
     }
 

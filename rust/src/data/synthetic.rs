@@ -75,21 +75,63 @@ impl DatasetKind {
     /// high accuracy while narrow nets degrade, mirroring Table 1/2.
     fn profile(&self) -> Profile {
         match self {
-            DatasetKind::Usps => Profile { protos: 6, jitter: 0.09, noise: 0.10, clutter: 0.05, strokes: true, proto_var: 0.25 },
+            DatasetKind::Usps => Profile {
+                protos: 6,
+                jitter: 0.09,
+                noise: 0.10,
+                clutter: 0.05,
+                strokes: true,
+                proto_var: 0.25,
+            },
             DatasetKind::Mnist => {
-                Profile { protos: 10, jitter: 0.11, noise: 0.13, clutter: 0.10, strokes: true, proto_var: 0.45 }
+                Profile {
+                    protos: 10,
+                    jitter: 0.11,
+                    noise: 0.13,
+                    clutter: 0.10,
+                    strokes: true,
+                    proto_var: 0.45,
+                }
             }
             DatasetKind::FashionMnist => {
-                Profile { protos: 16, jitter: 0.14, noise: 0.17, clutter: 0.30, strokes: false, proto_var: 0.55 }
+                Profile {
+                    protos: 16,
+                    jitter: 0.14,
+                    noise: 0.17,
+                    clutter: 0.30,
+                    strokes: false,
+                    proto_var: 0.55,
+                }
             }
             DatasetKind::Svhn => {
-                Profile { protos: 16, jitter: 0.13, noise: 0.16, clutter: 0.40, strokes: true, proto_var: 0.6 }
+                Profile {
+                    protos: 16,
+                    jitter: 0.13,
+                    noise: 0.16,
+                    clutter: 0.40,
+                    strokes: true,
+                    proto_var: 0.6,
+                }
             }
             DatasetKind::Cifar10 => {
-                Profile { protos: 32, jitter: 0.18, noise: 0.20, clutter: 0.55, strokes: false, proto_var: 0.8 }
+                Profile {
+                    protos: 32,
+                    jitter: 0.18,
+                    noise: 0.20,
+                    clutter: 0.55,
+                    strokes: false,
+                    proto_var: 0.8,
+                }
             }
             DatasetKind::Cifar100 => {
-                Profile { protos: 24, jitter: 0.18, noise: 0.20, clutter: 0.55, strokes: false, proto_var: 0.75 }
+                Profile {
+                    protos: 24,
+                    jitter: 0.18,
+                    noise: 0.20,
+                    clutter: 0.55,
+                    strokes: false,
+                    proto_var: 0.75,
+                }
             }
         }
     }
@@ -131,7 +173,8 @@ pub fn generate(kind: DatasetKind, opts: &GenOptions) -> (Dataset, Dataset) {
     let prof = kind.profile();
     // Prototype bank is derived from (kind, seed) only — train and test
     // draw different samples from the same class manifolds.
-    let mut proto_rng = Rng::seed_from_u64(opts.seed.wrapping_mul(0x9E37_79B9).wrapping_add(kind as u64));
+    let mut proto_rng =
+        Rng::seed_from_u64(opts.seed.wrapping_mul(0x9E37_79B9).wrapping_add(kind as u64));
     let bank = PrototypeBank::build(&mut proto_rng, h, w, c, classes, prof);
 
     let mut train_rng = Rng::seed_from_u64(opts.seed.wrapping_add(1));
@@ -158,7 +201,8 @@ impl PrototypeBank {
             // Class identity: a per-class RNG; prototypes jitter around it.
             let class_seed = rng.next_u64();
             for p in 0..prof.protos {
-                let mut crng = Rng::seed_from_u64(class_seed ^ (p as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+                let mut crng =
+                    Rng::seed_from_u64(class_seed ^ (p as u64).wrapping_mul(0xA24B_AED4_963E_E407));
                 let img = if prof.strokes {
                     render_strokes(&mut crng, class_seed, h, w, c, prof)
                 } else {
@@ -176,7 +220,14 @@ impl PrototypeBank {
 }
 
 /// Render a digit-like image: class-determined strokes + per-prototype jitter.
-fn render_strokes(rng: &mut Rng, class_seed: u64, h: usize, w: usize, c: usize, prof: Profile) -> Vec<f32> {
+fn render_strokes(
+    rng: &mut Rng,
+    class_seed: u64,
+    h: usize,
+    w: usize,
+    c: usize,
+    prof: Profile,
+) -> Vec<f32> {
     let mut img = vec![0.0f32; h * w * c];
     // The stroke *layout* comes from a class-only RNG so that all
     // prototypes of a class share structure.
@@ -204,7 +255,14 @@ fn render_strokes(rng: &mut Rng, class_seed: u64, h: usize, w: usize, c: usize, 
 }
 
 /// Render a texture/object-like image: class-seeded sinusoid fields + blob.
-fn render_texture(rng: &mut Rng, class_seed: u64, h: usize, w: usize, c: usize, prof: Profile) -> Vec<f32> {
+fn render_texture(
+    rng: &mut Rng,
+    class_seed: u64,
+    h: usize,
+    w: usize,
+    c: usize,
+    prof: Profile,
+) -> Vec<f32> {
     let mut img = vec![0.5f32; h * w * c];
     let mut layout = Rng::seed_from_u64(class_seed ^ 0xDEAD_BEEF);
     let n_waves = 4;
@@ -218,7 +276,8 @@ fn render_texture(rng: &mut Rng, class_seed: u64, h: usize, w: usize, c: usize, 
                 + layout.uniform_range_f32(0.0, std::f32::consts::TAU);
             for y in 0..h {
                 for x in 0..w {
-                    img[(y * w + x) * c + ch] += amp * (fx * x as f32 + fy * y as f32 + phase).sin();
+                    img[(y * w + x) * c + ch] +=
+                        amp * (fx * x as f32 + fy * y as f32 + phase).sin();
                 }
             }
         }
@@ -229,8 +288,10 @@ fn render_texture(rng: &mut Rng, class_seed: u64, h: usize, w: usize, c: usize, 
         + (rng.uniform_f32() - 0.5) * (0.1 + 0.5 * pv) * w as f32;
     let cy = (0.35 + 0.3 * layout.uniform_f32()) * h as f32
         + (rng.uniform_f32() - 0.5) * (0.1 + 0.5 * pv) * h as f32;
-    let rx = (0.15 + 0.2 * layout.uniform_f32()) * (1.0 + pv * (rng.uniform_f32() - 0.5)) * w as f32;
-    let ry = (0.15 + 0.2 * layout.uniform_f32()) * (1.0 + pv * (rng.uniform_f32() - 0.5)) * h as f32;
+    let rx =
+        (0.15 + 0.2 * layout.uniform_f32()) * (1.0 + pv * (rng.uniform_f32() - 0.5)) * w as f32;
+    let ry =
+        (0.15 + 0.2 * layout.uniform_f32()) * (1.0 + pv * (rng.uniform_f32() - 0.5)) * h as f32;
     // Blob color: class hue blended with per-prototype variation.
     let blob_col: Vec<f32> = (0..c)
         .map(|_| {
@@ -357,7 +418,15 @@ fn sample_set(bank: &PrototypeBank, n: usize, rng: &mut Rng) -> Dataset {
 }
 
 /// Random small affine warp of `proto` into `out` (bilinear sampling).
-fn warp_into(rng: &mut Rng, proto: &[f32], out: &mut [f32], h: usize, w: usize, c: usize, jitter: f32) {
+fn warp_into(
+    rng: &mut Rng,
+    proto: &[f32],
+    out: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    jitter: f32,
+) {
     let angle = rng.normal_f32(0.0, jitter * 0.8);
     let scale = 1.0 + rng.normal_f32(0.0, jitter * 0.5);
     let tx = rng.normal_f32(0.0, jitter * w as f32 * 0.6);
@@ -413,7 +482,8 @@ mod tests {
 
     #[test]
     fn generate_shapes_and_ranges() {
-        let (train, test) = generate(DatasetKind::Usps, &GenOptions { train_n: 100, test_n: 40, seed: 3 });
+        let (train, test) =
+            generate(DatasetKind::Usps, &GenOptions { train_n: 100, test_n: 40, seed: 3 });
         assert_eq!(train.len(), 100);
         assert_eq!(test.len(), 40);
         assert_eq!(train.dim(), 256);
@@ -444,7 +514,8 @@ mod tests {
 
     #[test]
     fn classes_are_balanced() {
-        let (train, _) = generate(DatasetKind::Cifar10, &GenOptions { train_n: 500, test_n: 10, seed: 5 });
+        let (train, _) =
+            generate(DatasetKind::Cifar10, &GenOptions { train_n: 500, test_n: 10, seed: 5 });
         let hist = train.class_histogram();
         assert!(hist.iter().all(|&c| c == 50), "{hist:?}");
     }
@@ -452,7 +523,8 @@ mod tests {
     #[test]
     fn classes_are_visually_distinct() {
         // Mean intra-class distance should be well below inter-class.
-        let (train, _) = generate(DatasetKind::Usps, &GenOptions { train_n: 400, test_n: 10, seed: 9 });
+        let (train, _) =
+            generate(DatasetKind::Usps, &GenOptions { train_n: 400, test_n: 10, seed: 9 });
         let mut intra = 0.0f64;
         let mut inter = 0.0f64;
         let mut n_intra = 0;
@@ -482,7 +554,8 @@ mod tests {
 
     #[test]
     fn cifar100_has_100_classes() {
-        let (train, _) = generate(DatasetKind::Cifar100, &GenOptions { train_n: 1000, test_n: 10, seed: 1 });
+        let (train, _) =
+            generate(DatasetKind::Cifar100, &GenOptions { train_n: 1000, test_n: 10, seed: 1 });
         assert_eq!(train.num_classes, 100);
         let mut seen: Vec<usize> = train.labels.clone();
         seen.sort_unstable();

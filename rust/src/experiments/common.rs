@@ -105,7 +105,12 @@ pub fn mean_entropy(groups: &[Vec<f32>]) -> f32 {
 pub fn train_fff(cfg: &TrainConfig) -> (Fff, Outcome) {
     let trainer = crate::train::Trainer::from_config(cfg);
     let mut rng = Rng::seed_from_u64(cfg.seed);
-    let mut fc = FffConfig::new(trainer.train.dim(), trainer.train.num_classes, cfg.fff_depth(), cfg.leaf);
+    let mut fc = FffConfig::new(
+        trainer.train.dim(),
+        trainer.train.num_classes,
+        cfg.fff_depth(),
+        cfg.leaf,
+    );
     fc.hardening = cfg.hardening;
     fc.transposition_p = cfg.transposition_p;
     let mut fff = Fff::new(&mut rng, fc);

@@ -64,20 +64,32 @@ pub fn run(scale: Scale) {
             let r = run_seeds(&cfg, seeds);
             f_ma.push(w as f64, r.best_ma as f64 * 100.0, r.ma.std * 100.0);
             f_ga.push(w as f64, r.best_ga as f64 * 100.0, r.ga.std * 100.0);
-            csv_rows.push(format!("{},ff,0,,{w},{:.4},{:.4}", dataset.name(), r.best_ma, r.best_ga));
+            csv_rows.push(format!(
+                "{},ff,0,,{w},{:.4},{:.4}",
+                dataset.name(),
+                r.best_ma,
+                r.best_ga
+            ));
         }
         series.push(f_ma);
         series.push(f_ga);
         println!(
             "{}",
             Series::render_group(
-                &format!("Figure 2 — {} (x = inference size in neurons, y = accuracy %)", dataset.name()),
+                &format!(
+                    "Figure 2 — {} (x = inference size in neurons, y = accuracy %)",
+                    dataset.name()
+                ),
                 &series
             )
         );
     }
-    let path = write_csv("fig2", "dataset,model,depth,leaf,inference_size,best_ma,best_ga", &csv_rows)
-        .expect("csv");
+    let path = write_csv(
+        "fig2",
+        "dataset,model,depth,leaf,inference_size,best_ma,best_ga",
+        &csv_rows,
+    )
+    .expect("csv");
     println!("csv: {}", path.display());
     println!("paper shape: at equal inference size, FFF M_A/G_A sit above the FF");
     println!("curve, with the M_A gap growing in depth and leaf size.");

@@ -50,7 +50,11 @@ pub fn run(scale: Scale) {
     }
     for d in 1..=max_exp as usize {
         let t = time_fff_infer(DIM, DIM, d, BLOCK, BATCH, MAX_ALLOC);
-        println!("FFF    depth {d:>6}: {:>10.3} ms/pass  ({} leaves)", t.as_secs_f64() * 1e3, 1u64 << d);
+        println!(
+            "FFF    depth {d:>6}: {:>10.3} ms/pass  ({} leaves)",
+            t.as_secs_f64() * 1e3,
+            1u64 << d
+        );
         fff_series.push((1u64 << d) as f64, t.as_secs_f64() * 1e3, 0.0);
         csv_rows.push(format!("fff,{d},{},{:.6}", 1u64 << d, t.as_secs_f64() * 1e3));
     }
@@ -64,7 +68,10 @@ pub fn run(scale: Scale) {
     );
     println!(
         "{}",
-        Series::render_group("Figure 4 — close-up: MoE vs FFF", &[moe_series.clone(), fff_series.clone()])
+        Series::render_group(
+            "Figure 4 — close-up: MoE vs FFF",
+            &[moe_series.clone(), fff_series.clone()]
+        )
     );
 
     // The quantitative claim: fit growth rates.

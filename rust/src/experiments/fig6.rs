@@ -23,7 +23,8 @@ pub fn run(scale: Scale) {
     let mut opt = Adam::new(4e-4);
 
     let layers = vit.cfg.layers;
-    let mut series: Vec<Series> = (0..layers).map(|l| Series::new(&format!("layer {}", l + 1))).collect();
+    let mut series: Vec<Series> =
+        (0..layers).map(|l| Series::new(&format!("layer {}", l + 1))).collect();
     let mut csv_rows = Vec::new();
     for epoch in 1..=epochs {
         for (mut x, labels) in BatchIter::shuffled(&train, batch, &mut rng) {

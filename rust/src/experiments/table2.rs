@@ -54,7 +54,8 @@ pub fn run(scale: Scale) {
         }
     }
     table.print();
-    let path = write_csv("table2", "width,model,best_ma,ett_ma,best_ga,ett_ga", &csv_rows).expect("csv");
+    let path =
+        write_csv("table2", "width,model,best_ma,ett_ma,best_ga,ett_ga", &csv_rows).expect("csv");
     println!("csv: {}", path.display());
     println!("paper shape: FFF beats MoE on M_A/G_A at every width and reaches its");
     println!("scores at ETTs an order of magnitude smaller; FF holds the M_A ceiling.");

@@ -43,12 +43,23 @@ pub fn run(scale: Scale) {
     for &leaf in &leaves {
         let depth = (128usize / leaf).trailing_zeros() as usize;
         let cfg = FffConfig::new(128, 128, depth, leaf);
-        let (tw, ts, iw, is) =
-            (cfg.training_width(), cfg.training_size(), cfg.inference_width(), cfg.inference_size());
+        let (tw, ts, iw, is) = (
+            cfg.training_width(),
+            cfg.training_size(),
+            cfg.inference_width(),
+            cfg.inference_size(),
+        );
         // Best G_A over hardening levels (the paper reports the best model).
         let mut best_ga = 0.0f32;
         for &h in &hardenings {
-            let ga = train_vit(MlpKind::Fff { depth, leaf, hardening: h }, train_n, test_n, epochs, batch, 1);
+            let ga = train_vit(
+                MlpKind::Fff { depth, leaf, hardening: h },
+                train_n,
+                test_n,
+                epochs,
+                batch,
+                1,
+            );
             best_ga = best_ga.max(ga);
         }
         let sp = layer_speedup(depth, leaf, batch);

@@ -25,8 +25,12 @@ fn main() {
         _ => {
             eprintln!("usage: fff <train|serve|reproduce|info> [options]");
             eprintln!("  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8");
-            eprintln!("  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0");
-            eprintln!("  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6  (FFF_SCALE=paper for full grid)");
+            eprintln!(
+                "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0"
+            );
+            eprintln!(
+                "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6  (FFF_SCALE=paper for full grid)"
+            );
             eprintln!("  info");
             std::process::exit(2);
         }

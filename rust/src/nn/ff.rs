@@ -25,7 +25,11 @@ struct Cache {
 
 impl Ff {
     pub fn new(rng: &mut Rng, dim_in: usize, width: usize, dim_out: usize) -> Self {
-        Ff { l1: Linear::new(rng, dim_in, width), l2: Linear::new(rng, width, dim_out), cache: None }
+        Ff {
+            l1: Linear::new(rng, dim_in, width),
+            l2: Linear::new(rng, width, dim_out),
+            cache: None,
+        }
     }
 
     pub fn width(&self) -> usize {

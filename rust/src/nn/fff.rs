@@ -17,12 +17,31 @@
 //! `2^m − 1 + i`; its children are `(m+1, 2i)` (left, weight `1 − p`) and
 //! `(m+1, 2i+1)` (right, weight `p`), matching Algorithm 1 where the
 //! sigmoid output multiplies the **right** subtree.
+//!
+//! Descent: every path that walks the tree — the training model's
+//! [`Fff::leaf_index`], the compiled engine's [`TreeRouter::route`] /
+//! [`TreeRouter::route_batch`], and everything built on them — evaluates
+//! node logits with the same [`routing_dot`] kernel and the same
+//! `logit >= 0` decision, so all of them pick identical leaves bit for
+//! bit. Mixed-path serving (batched router for full batches, per-sample
+//! descent for stragglers) depends on that invariant.
 
 use super::{init, Linear, Model, ParamVisitor};
 use crate::rng::Rng;
 use crate::tensor::{
-    bernoulli_entropy, dot, gemm_nt, relu_inplace, sigmoid, Matrix,
+    bernoulli_entropy, dot, gemm_nt, prefetch_slice, relu_inplace, routing_dot, sigmoid, Matrix,
 };
+
+/// The descent control flow shared by every routing path: starting at the
+/// root, fold `logit(level, node_in_level)` decisions into a leaf index.
+#[inline]
+fn descend(depth: usize, mut logit: impl FnMut(usize, usize) -> f32) -> usize {
+    let mut i = 0usize;
+    for m in 0..depth {
+        i = 2 * i + usize::from(logit(m, i) >= 0.0);
+    }
+    i
+}
 
 /// FFF architecture + training hyperparameters.
 #[derive(Clone, Copy, Debug)]
@@ -177,11 +196,15 @@ impl Fff {
 
     /// The leaf index `FORWARD_I` routes sample `x` to — the paper's
     /// input-space regionalization byproduct (one region per leaf).
+    ///
+    /// For the paper's `n = 1` nodes the logit is the same [`routing_dot`]
+    /// over the same contiguous weight column the compiled [`TreeRouter`]
+    /// reads, so this training-side diagnostic always agrees with the
+    /// serving engine on the leaf, bit for bit.
     pub fn leaf_index(&self, x: &[f32]) -> usize {
-        let mut i = 0usize;
-        for m in 0..self.cfg.depth {
+        descend(self.cfg.depth, |m, i| {
             let nd = &self.nodes[Self::node_at(m, i)];
-            let logit = if let Some(l2) = &nd.l2 {
+            if let Some(l2) = &nd.l2 {
                 let mut acc = l2.b[0];
                 for h in 0..nd.l1.dim_out() {
                     let mut pre = nd.l1.b[h];
@@ -194,33 +217,36 @@ impl Fff {
                 }
                 acc
             } else {
-                // n = 1 fast path: W is dim_in×1 — stride over column 0.
-                let mut acc = nd.l1.b[0];
-                for (j, &xv) in x.iter().enumerate() {
-                    acc += xv * nd.l1.w.get(j, 0);
-                }
-                acc
-            };
-            i = 2 * i + usize::from(logit >= 0.0);
+                // n = 1: W is dim_in×1, so column 0 is the full buffer.
+                routing_dot(nd.l1.w.as_slice(), x) + nd.l1.b[0]
+            }
+        })
+    }
+
+    /// Gather the `n = 1` node boundaries into the level-SoA routing
+    /// layout — the batched descent engine shared by serving,
+    /// diagnostics, and benches.
+    pub fn router(&self) -> TreeRouter {
+        assert_eq!(self.cfg.node, 1, "router supports the paper's n = 1 nodes");
+        let mut levels = Vec::with_capacity(self.cfg.depth);
+        for m in 0..self.cfg.depth {
+            let width = 1usize << m;
+            let mut w = Matrix::zeros(width, self.cfg.dim_in);
+            let mut b = Vec::with_capacity(width);
+            for i in 0..width {
+                let nd = &self.nodes[Self::node_at(m, i)];
+                // n = 1: the dim_in×1 weight column is already contiguous.
+                w.row_mut(i).copy_from_slice(nd.l1.w.as_slice());
+                b.push(nd.l1.b[0]);
+            }
+            levels.push(RouteLevel { w, b });
         }
-        i
+        TreeRouter { depth: self.cfg.depth, dim_in: self.cfg.dim_in, levels }
     }
 
     /// Pack trained weights into the inference-layout model.
     pub fn compile_infer(&self) -> FffInfer {
         assert_eq!(self.cfg.node, 1, "compile_infer supports the paper's n = 1 nodes");
-        let d = self.cfg.depth;
-        let dim_in = self.cfg.dim_in;
-        let dim_out = self.cfg.dim_out;
-        let ell = self.cfg.leaf;
-        let mut node_w = Matrix::zeros(self.cfg.num_nodes().max(1), dim_in);
-        let mut node_b = vec![0.0f32; self.cfg.num_nodes()];
-        for (ni, nd) in self.nodes.iter().enumerate() {
-            for j in 0..dim_in {
-                node_w.set(ni, j, nd.l1.w.get(j, 0));
-            }
-            node_b[ni] = nd.l1.b[0];
-        }
         let mut leaf_w1t = Vec::with_capacity(self.cfg.num_leaves());
         let mut leaf_b1 = Vec::new();
         let mut leaf_w2 = Vec::new();
@@ -231,14 +257,34 @@ impl Fff {
             leaf_w2.push(lf.l2.w.clone()); // ℓ × dim_out
             leaf_b2.push(lf.l2.b.clone());
         }
-        FffInfer { depth: d, dim_in, dim_out, leaf: ell, node_w, node_b, leaf_w1t, leaf_b1, leaf_w2, leaf_b2 }
+        FffInfer {
+            dim_out: self.cfg.dim_out,
+            leaf: self.cfg.leaf,
+            router: self.router(),
+            leaf_w1t,
+            leaf_b1,
+            leaf_w2,
+            leaf_b2,
+        }
     }
 
     /// Count of leaves each sample of `x` routes to (region histogram).
+    /// `n = 1` trees batch the whole descent through the compiled
+    /// [`TreeRouter`] once the batch is large enough to amortize the
+    /// `O(2^d · dim_in)` router pack; small batches (and wider nodes)
+    /// walk per sample. Both paths share the [`routing_dot`] kernel, so
+    /// the counts are identical either way.
     pub fn region_histogram(&self, x: &Matrix) -> Vec<usize> {
         let mut hist = vec![0usize; self.cfg.num_leaves()];
-        for r in 0..x.rows() {
-            hist[self.leaf_index(x.row(r))] += 1;
+        let amortized = x.rows() * self.cfg.depth.max(1) >= self.cfg.num_nodes();
+        if self.cfg.node == 1 && amortized {
+            for leaf in self.router().route_batch(x) {
+                hist[leaf] += 1;
+            }
+        } else {
+            for r in 0..x.rows() {
+                hist[self.leaf_index(x.row(r))] += 1;
+            }
         }
         hist
     }
@@ -261,7 +307,8 @@ impl Model for Fff {
             for i in 0..(1 << m) {
                 let node = Self::node_at(m, i);
                 let (lg, mut pr, hd) = self.node_forward(node, x);
-                let flip = self.cfg.transposition_p > 0.0 && rng.bernoulli(self.cfg.transposition_p as f64);
+                let flip = self.cfg.transposition_p > 0.0
+                    && rng.bernoulli(self.cfg.transposition_p as f64);
                 if flip {
                     for p in pr.iter_mut() {
                         *p = 1.0 - *p;
@@ -315,7 +362,8 @@ impl Model for Fff {
             }
             leaf_a1.push(a1);
         }
-        self.cache = Some(Cache { x: x.clone(), probs, logits, hidden, transposed, prefix, leaf_a1 });
+        self.cache =
+            Some(Cache { x: x.clone(), probs, logits, hidden, transposed, prefix, leaf_a1 });
         y
     }
 
@@ -460,19 +508,205 @@ impl Model for Fff {
     }
 }
 
-/// Inference-layout FFF: node boundaries packed as contiguous rows, one
-/// `[ℓ × dim_in]` weight block per leaf — the structure the paper's CUDA
-/// AOT compilation produces ("a simple offset in the data load"), and the
-/// model the serving coordinator executes.
+/// One level of the descent tree in SoA layout: row `i` is the boundary
+/// normal of node `(m, i)`, so every row the level can touch is contiguous
+/// inside one `2^m × dim_in` block.
 #[derive(Clone, Debug)]
-pub struct FffInfer {
+struct RouteLevel {
+    /// `2^m × dim_in` boundary normals, level nodes left to right.
+    w: Matrix,
+    /// Per-node bias, length `2^m`.
+    b: Vec<f32>,
+}
+
+/// Row-block granularity of the batched descent: a block's input rows are
+/// re-read once per level, so blocks are sized to stay cache-resident
+/// across all `depth` passes.
+const ROUTE_BLOCK: usize = 256;
+/// How many samples ahead the gathered kernel prefetches node rows.
+const ROUTE_PREFETCH_AHEAD: usize = 4;
+/// Levels whose weight block fits under this byte budget use the resident
+/// kernel (no prefetch): after one pass over the block the level is hot.
+const ROUTE_RESIDENT_BYTES: usize = 512 * 1024;
+/// Minimum batch rows before the descent fans out on the pool.
+const ROUTE_PAR_MIN_ROWS: usize = 128;
+
+/// Batched, level-synchronous tree-descent engine — the one descent
+/// implementation behind serving, diagnostics, and benches.
+///
+/// Node boundaries live in per-level SoA blocks ([`RouteLevel`]), gathered
+/// once at compile time. [`TreeRouter::route_batch`] advances a whole row
+/// block one level at a time: within a level every sample's dot product is
+/// independent, so the CPU overlaps their cache misses (the per-sample
+/// walk serializes them — the next node address exists only after the
+/// current logit resolves), and because each sample's *next* row address
+/// is known before its dot runs, larger-than-cache levels prefetch ahead.
+/// Row bands go wide on [`crate::tensor::pool`]; per-sample independence
+/// makes the result bit-identical at every thread count.
+///
+/// §Perf (EXPERIMENTS.md, batched tree descent): a full-level GEMM path
+/// (`X · level_wᵀ` per level) was measured and rejected — it computes
+/// `2^m` logits per sample where one is needed, and its different
+/// accumulation order breaks the bitwise `route ≡ route_batch` invariant
+/// the serving stack leans on. The per-level choice is instead between
+/// the resident and the prefetch-gathered masked-dot kernels, by level
+/// size.
+#[derive(Clone, Debug)]
+pub struct TreeRouter {
     depth: usize,
     dim_in: usize,
+    levels: Vec<RouteLevel>,
+}
+
+impl TreeRouter {
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn dim_in(&self) -> usize {
+        self.dim_in
+    }
+
+    /// Single-sample descent: the leaf index for `x` (O(d · dim_in)).
+    #[inline]
+    pub fn route(&self, x: &[f32]) -> usize {
+        debug_assert_eq!(x.len(), self.dim_in);
+        descend(self.depth, |m, i| {
+            let level = &self.levels[m];
+            routing_dot(level.w.row(i), x) + level.b[i]
+        })
+    }
+
+    /// Batched descent: the raw leaf index in `[0, 2^depth)` for every
+    /// row of `x`, bit-identical to per-sample [`TreeRouter::route`] at
+    /// any batch shape and thread count.
+    pub fn route_batch(&self, x: &Matrix) -> Vec<usize> {
+        assert_eq!(x.cols(), self.dim_in, "route_batch: input dim mismatch");
+        let b = x.rows();
+        let mut idx = vec![0usize; b];
+        if self.depth == 0 || b == 0 {
+            return idx;
+        }
+        let pool = crate::tensor::pool::current();
+        let flops = 2 * b * self.depth * self.dim_in;
+        if pool.threads() > 1
+            && b >= 2 * ROUTE_PAR_MIN_ROWS
+            && flops >= crate::tensor::parallel_flop_threshold()
+        {
+            let band = b.div_ceil(pool.threads() * 4).clamp(ROUTE_PAR_MIN_ROWS, 4 * ROUTE_BLOCK);
+            let n_bands = b.div_ceil(band);
+            let iptr = crate::tensor::pool::SendPtr(idx.as_mut_ptr());
+            pool.run(n_bands, &|t| {
+                let r0 = t * band;
+                let rows = band.min(b - r0);
+                // SAFETY: bands are disjoint row ranges of `idx`, and
+                // `run` blocks until every task has retired.
+                let band_idx = unsafe { std::slice::from_raw_parts_mut(iptr.0.add(r0), rows) };
+                self.route_rows(x, r0, band_idx);
+            });
+        } else {
+            self.route_rows(x, 0, &mut idx);
+        }
+        idx
+    }
+
+    /// Descend `idx.len()` samples starting at row `r0`, block by block.
+    fn route_rows(&self, x: &Matrix, r0: usize, idx: &mut [usize]) {
+        let mut i0 = 0;
+        while i0 < idx.len() {
+            let rows = ROUTE_BLOCK.min(idx.len() - i0);
+            self.route_block(x, r0 + i0, &mut idx[i0..i0 + rows]);
+            i0 += rows;
+        }
+    }
+
+    /// Level-synchronous descent of one row block. `idx[i]` holds sample
+    /// `r0 + i`'s node index within the current level; after the last
+    /// level it is the leaf index.
+    fn route_block(&self, x: &Matrix, r0: usize, idx: &mut [usize]) {
+        for level in &self.levels {
+            if level.w.len() * std::mem::size_of::<f32>() <= ROUTE_RESIDENT_BYTES {
+                // Resident kernel: the level block stays cached across the
+                // whole block, so a plain pass is compute-bound.
+                for (i, ix) in idx.iter_mut().enumerate() {
+                    let logit = routing_dot(level.w.row(*ix), x.row(r0 + i)) + level.b[*ix];
+                    *ix = 2 * *ix + usize::from(logit >= 0.0);
+                }
+            } else {
+                // Gathered kernel: node rows come from DRAM. Every
+                // sample's row address is already known this level, so
+                // prefetch a few samples ahead — the dependent per-sample
+                // walk has no address to prefetch until its dot resolves.
+                let n = idx.len();
+                for i in 0..n {
+                    if i + ROUTE_PREFETCH_AHEAD < n {
+                        prefetch_slice(level.w.row(idx[i + ROUTE_PREFETCH_AHEAD]));
+                    }
+                    let ix = idx[i];
+                    let logit = routing_dot(level.w.row(ix), x.row(r0 + i)) + level.b[ix];
+                    idx[i] = 2 * ix + usize::from(logit >= 0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Leaf-occupancy summary of one routed batch — the skew signal of the
+/// FFF load-balancing problem (arXiv 2405.16836): bucket sizes are
+/// whatever routing makes them, and downstream dispatch must absorb it.
+#[derive(Clone, Copy, Debug)]
+pub struct RoutingStats {
+    /// Rows in the batch.
+    pub samples: usize,
+    /// Leaf buckets holding at least one sample.
+    pub distinct_leaves: usize,
+    /// Size of the largest bucket.
+    pub max_bucket: usize,
+}
+
+impl RoutingStats {
+    /// Summarize raw leaf indices (as returned by `route_batch`) under an
+    /// allocation of `n_alloc` leaf banks (aliased models fold indices).
+    pub fn from_leaf_ids(leaf_of: &[usize], n_alloc: usize) -> RoutingStats {
+        let n_alloc = n_alloc.max(1);
+        let mut counts = vec![0usize; n_alloc];
+        for &raw in leaf_of {
+            counts[raw % n_alloc] += 1;
+        }
+        RoutingStats {
+            samples: leaf_of.len(),
+            distinct_leaves: counts.iter().filter(|&&c| c > 0).count(),
+            max_bucket: counts.iter().copied().max().unwrap_or(0),
+        }
+    }
+
+    /// Mean samples per non-empty leaf bucket.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.distinct_leaves == 0 {
+            return 0.0;
+        }
+        self.samples as f64 / self.distinct_leaves as f64
+    }
+
+    /// Largest bucket relative to the mean (1.0 = perfectly balanced).
+    pub fn skew(&self) -> f64 {
+        let mean = self.mean_occupancy();
+        if mean == 0.0 {
+            return 0.0;
+        }
+        self.max_bucket as f64 / mean
+    }
+}
+
+/// Inference-layout FFF: node boundaries in the [`TreeRouter`]'s per-level
+/// SoA blocks, one `[ℓ × dim_in]` weight block per leaf — the structure
+/// the paper's CUDA AOT compilation produces ("a simple offset in the data
+/// load"), and the model the serving coordinator executes.
+#[derive(Clone, Debug)]
+pub struct FffInfer {
     dim_out: usize,
     leaf: usize,
-    /// `(2^d − 1) × dim_in` node boundary normals (BFS order).
-    node_w: Matrix,
-    node_b: Vec<f32>,
+    router: TreeRouter,
     leaf_w1t: Vec<Matrix>, // per leaf: ℓ × dim_in
     leaf_b1: Vec<Vec<f32>>,
     leaf_w2: Vec<Matrix>, // per leaf: ℓ × dim_out
@@ -485,7 +719,8 @@ impl FffInfer {
     /// storage is aliased (`index % alloc`) while the routing work —
     /// `d` boundary dot-products — stays exact; the DRAM-gather access
     /// pattern is preserved because the allocated bank already exceeds
-    /// cache. The paper's A100 held all 2^15 leaves; see DESIGN.md §3.
+    /// cache. The paper's A100 held all 2^15 leaves; see EXPERIMENTS.md
+    /// §Aliased leaf storage.
     pub fn random(
         rng: &mut Rng,
         dim_in: usize,
@@ -495,10 +730,16 @@ impl FffInfer {
         max_alloc_leaves: usize,
     ) -> Self {
         let n_leaves = (1usize << depth).min(max_alloc_leaves.max(1));
-        let mut node_w = Matrix::zeros((1 << depth) - 1, dim_in);
-        rng.fill_normal(node_w.as_mut_slice(), 0.0, 0.05);
-        let mut node_b = vec![0.0; (1 << depth) - 1];
-        rng.fill_normal(&mut node_b, 0.0, 0.05);
+        let mut levels = Vec::with_capacity(depth);
+        for m in 0..depth {
+            let width = 1usize << m;
+            let mut w = Matrix::zeros(width, dim_in);
+            rng.fill_normal(w.as_mut_slice(), 0.0, 0.05);
+            let mut b = vec![0.0; width];
+            rng.fill_normal(&mut b, 0.0, 0.05);
+            levels.push(RouteLevel { w, b });
+        }
+        let router = TreeRouter { depth, dim_in, levels };
         let mut leaf_w1t = Vec::with_capacity(n_leaves);
         let mut leaf_b1 = Vec::with_capacity(n_leaves);
         let mut leaf_w2 = Vec::with_capacity(n_leaves);
@@ -509,40 +750,52 @@ impl FffInfer {
             leaf_w2.push(init::normal(rng, leaf, dim_out, 0.05));
             leaf_b2.push(vec![0.0; dim_out]);
         }
-        FffInfer { depth, dim_in, dim_out, leaf, node_w, node_b, leaf_w1t, leaf_b1, leaf_w2, leaf_b2 }
+        FffInfer { dim_out, leaf, router, leaf_w1t, leaf_b1, leaf_w2, leaf_b2 }
     }
 
     pub fn depth(&self) -> usize {
-        self.depth
+        self.router.depth()
     }
 
     pub fn dim_in(&self) -> usize {
-        self.dim_in
+        self.router.dim_in()
     }
 
     pub fn dim_out(&self) -> usize {
         self.dim_out
     }
 
+    /// The descent engine (shared with diagnostics and benches).
+    pub fn router(&self) -> &TreeRouter {
+        &self.router
+    }
+
+    /// Number of allocated leaf banks (< `2^depth` when aliased).
+    pub fn alloc_leaves(&self) -> usize {
+        self.leaf_w1t.len()
+    }
+
     /// Tree descent only: the leaf index for `x` (O(d · dim_in)).
     #[inline]
     pub fn route(&self, x: &[f32]) -> usize {
-        let mut i = 0usize;
-        let mut base = 0usize;
-        for m in 0..self.depth {
-            let node = base + i;
-            let logit = dot(self.node_w.row(node), x) + self.node_b[node];
-            i = 2 * i + usize::from(logit >= 0.0);
-            base += 1 << m;
-        }
-        i
+        self.router.route(x)
+    }
+
+    /// Batched tree descent (see [`TreeRouter::route_batch`]).
+    pub fn route_batch(&self, x: &Matrix) -> Vec<usize> {
+        self.router.route_batch(x)
     }
 
     /// Single-sample `FORWARD_I` into a caller buffer (serving hot path).
     pub fn infer_one(&self, x: &[f32], out: &mut [f32]) {
-        debug_assert_eq!(x.len(), self.dim_in);
+        let leaf = self.router.route(x) % self.leaf_w1t.len();
+        self.infer_leaf(leaf, x, out);
+    }
+
+    /// Evaluate leaf `leaf` on `x` into `out` (post-descent hot path).
+    fn infer_leaf(&self, leaf: usize, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.router.dim_in());
         debug_assert_eq!(out.len(), self.dim_out);
-        let leaf = self.route(x) % self.leaf_w1t.len();
         let w1t = &self.leaf_w1t[leaf];
         let b1 = &self.leaf_b1[leaf];
         let w2 = &self.leaf_w2[leaf];
@@ -557,42 +810,55 @@ impl FffInfer {
 
     /// Batched `FORWARD_I`.
     ///
-    /// §Perf: when several samples land on the same leaf, rows are
-    /// grouped by leaf and each group goes through the blocked GEMM
-    /// (leaf-grouped path); sparse routing (≲2 samples/leaf) falls back
-    /// to the per-sample path whose cost is dominated by the descent.
+    /// §Perf: one batched descent ([`TreeRouter::route_batch`]) for every
+    /// path; when several samples land on the same leaf, rows are grouped
+    /// by leaf and each group goes through the blocked GEMM (leaf-grouped
+    /// path); sparse routing (≲2 samples/leaf) evaluates leaves
+    /// per sample instead.
     pub fn infer_batch(&self, x: &Matrix) -> Matrix {
+        let leaf_of = self.router.route_batch(x);
+        self.infer_batch_routed(x, &leaf_of)
+    }
+
+    /// Batched `FORWARD_I` with the descent already done (`leaf_of` holds
+    /// raw indices from [`TreeRouter::route_batch`]). The serving backend
+    /// uses this split to surface [`RoutingStats`] without descending
+    /// twice.
+    pub fn infer_batch_routed(&self, x: &Matrix, leaf_of: &[usize]) -> Matrix {
+        assert_eq!(leaf_of.len(), x.rows(), "infer_batch_routed: leaf index count");
         let n_alloc = self.leaf_w1t.len();
         if x.rows() < 2 * n_alloc {
-            // Sparse: per-sample path.
+            // Sparse: per-sample leaf evaluation.
             let mut y = Matrix::zeros(x.rows(), self.dim_out);
             for r in 0..x.rows() {
-                self.infer_one(x.row(r), y.row_mut(r));
+                self.infer_leaf(leaf_of[r] % n_alloc, x.row(r), y.row_mut(r));
             }
             return y;
         }
-        self.infer_batch_grouped(x)
+        self.infer_grouped(x, leaf_of)
     }
 
-    /// Leaf-grouped batched inference (dense-routing fast path).
-    ///
-    /// §Perf: tree descent stays per-sample, but the per-leaf GEMMs are
-    /// independent, so non-empty leaf buckets are dispatched as tasks on
-    /// the [`crate::tensor::pool`] thread pool. Bucket sizes are skewed
-    /// whenever routing is non-uniform (the load-balancing problem of
-    /// arXiv 2405.16836); the pool's work stealing absorbs the skew.
-    /// Serial and pooled dispatch produce bit-identical outputs — every
-    /// bucket's arithmetic is self-contained.
+    /// Leaf-grouped batched inference (dense-routing fast path), forced
+    /// regardless of occupancy — benches and tests pin this path.
     pub fn infer_batch_grouped(&self, x: &Matrix) -> Matrix {
+        let leaf_of = self.router.route_batch(x);
+        self.infer_grouped(x, &leaf_of)
+    }
+
+    /// §Perf: the per-leaf GEMMs are independent, so non-empty leaf
+    /// buckets are dispatched as tasks on the [`crate::tensor::pool`]
+    /// thread pool. Bucket sizes are skewed whenever routing is
+    /// non-uniform (the load-balancing problem of arXiv 2405.16836); the
+    /// pool's work stealing absorbs the skew. Serial and pooled dispatch
+    /// produce bit-identical outputs — every bucket's arithmetic is
+    /// self-contained.
+    fn infer_grouped(&self, x: &Matrix, leaf_of: &[usize]) -> Matrix {
         let n_alloc = self.leaf_w1t.len();
         let b = x.rows();
-        // 1) Route everything.
-        let mut leaf_of: Vec<usize> = Vec::with_capacity(b);
+        // 1) Bucket counts from the (batched) descent.
         let mut counts = vec![0usize; n_alloc];
-        for r in 0..b {
-            let leaf = self.route(x.row(r)) % n_alloc;
-            leaf_of.push(leaf);
-            counts[leaf] += 1;
+        for &raw in leaf_of {
+            counts[raw % n_alloc] += 1;
         }
         // 2) Group rows by leaf (counting sort).
         let mut offsets = vec![0usize; n_alloc + 1];
@@ -601,7 +867,8 @@ impl FffInfer {
         }
         let mut order = vec![0usize; b];
         let mut cursor = offsets.clone();
-        for (r, &l) in leaf_of.iter().enumerate() {
+        for (r, &raw) in leaf_of.iter().enumerate() {
+            let l = raw % n_alloc;
             order[cursor[l]] = r;
             cursor[l] += 1;
         }
@@ -637,7 +904,7 @@ impl FffInfer {
             }
         };
         let pool = crate::tensor::pool::current();
-        let flops = 2 * b * self.leaf * (self.dim_in + self.dim_out);
+        let flops = 2 * b * self.leaf * (self.router.dim_in() + self.dim_out);
         if pool.threads() > 1
             && buckets.len() > 1
             && flops >= crate::tensor::parallel_flop_threshold()
@@ -885,7 +1152,8 @@ mod tests {
         let x = batch(16, 5);
         let _ = fff.forward_train(&x, &mut rng);
         assert_eq!(fff.last_entropies.len(), 7);
-        assert!(fff.last_entropies.iter().all(|&e| (0.0..=std::f32::consts::LN_2 + 1e-6).contains(&e)));
+        let bound = std::f32::consts::LN_2 + 1e-6;
+        assert!(fff.last_entropies.iter().all(|&e| (0.0..=bound).contains(&e)));
         // Fresh random boundaries → near-maximal entropy.
         assert!(fff.last_entropies[0] > 0.5);
     }
@@ -919,6 +1187,62 @@ mod tests {
         let hist = fff.region_histogram(&x);
         assert_eq!(hist.iter().sum::<usize>(), 32);
         assert_eq!(hist.len(), 8);
+    }
+
+    #[test]
+    fn route_batch_equals_route_equals_leaf_index() {
+        // The tentpole invariant: one descent implementation means the
+        // batched router, the per-sample router, and the training model
+        // pick the same leaf for every sample — exactly, not within tol.
+        for depth in 0..=5 {
+            let (fff, _) = mk(depth, 2, 0.0);
+            let inf = fff.compile_infer();
+            let x = batch(33, 5);
+            let batched = inf.route_batch(&x);
+            assert_eq!(batched.len(), 33);
+            for r in 0..x.rows() {
+                let per_sample = inf.route(x.row(r));
+                assert_eq!(batched[r], per_sample, "depth {depth} sample {r}");
+                assert_eq!(per_sample, fff.leaf_index(x.row(r)), "depth {depth} sample {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn region_histogram_matches_per_sample_leaf_index() {
+        let (fff, _) = mk(4, 2, 0.0);
+        let x = batch(41, 5);
+        let hist = fff.region_histogram(&x);
+        let mut want = vec![0usize; fff.cfg.num_leaves()];
+        for r in 0..x.rows() {
+            want[fff.leaf_index(x.row(r))] += 1;
+        }
+        assert_eq!(hist, want);
+    }
+
+    #[test]
+    fn routed_and_unrouted_batched_inference_agree() {
+        let (fff, _) = mk(3, 4, 0.0);
+        let inf = fff.compile_infer();
+        let x = batch(40, 5);
+        let leaf_of = inf.route_batch(&x);
+        let routed = inf.infer_batch_routed(&x, &leaf_of);
+        let direct = inf.infer_batch(&x);
+        assert_eq!(routed, direct);
+    }
+
+    #[test]
+    fn routing_stats_summarize_buckets() {
+        let stats = RoutingStats::from_leaf_ids(&[0, 1, 1, 3, 5], 4);
+        // Raw index 5 folds to bucket 1 under 4 allocated banks.
+        assert_eq!(stats.samples, 5);
+        assert_eq!(stats.distinct_leaves, 3);
+        assert_eq!(stats.max_bucket, 3);
+        assert!((stats.mean_occupancy() - 5.0 / 3.0).abs() < 1e-12);
+        assert!((stats.skew() - 9.0 / 5.0).abs() < 1e-12);
+        let empty = RoutingStats::from_leaf_ids(&[], 4);
+        assert_eq!(empty.mean_occupancy(), 0.0);
+        assert_eq!(empty.skew(), 0.0);
     }
 
     #[test]

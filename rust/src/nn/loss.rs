@@ -77,8 +77,10 @@ mod tests {
                 lp.set(r, c, logits.get(r, c) + eps);
                 let mut lm = logits.clone();
                 lm.set(r, c, logits.get(r, c) - eps);
-                let fd = (cross_entropy(&lp, &labels).0 - cross_entropy(&lm, &labels).0) / (2.0 * eps);
-                assert!((grad.get(r, c) - fd).abs() < 1e-3, "({r},{c}): {} vs {fd}", grad.get(r, c));
+                let fd =
+                    (cross_entropy(&lp, &labels).0 - cross_entropy(&lm, &labels).0) / (2.0 * eps);
+                let g = grad.get(r, c);
+                assert!((g - fd).abs() < 1e-3, "({r},{c}): {g} vs {fd}");
             }
         }
     }

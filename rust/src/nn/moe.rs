@@ -36,7 +36,13 @@ pub struct MoeConfig {
 }
 
 impl MoeConfig {
-    pub fn new(dim_in: usize, dim_out: usize, experts: usize, expert_width: usize, k: usize) -> Self {
+    pub fn new(
+        dim_in: usize,
+        dim_out: usize,
+        experts: usize,
+        expert_width: usize,
+        k: usize,
+    ) -> Self {
         MoeConfig { dim_in, dim_out, experts, expert_width, k, w_importance: 0.1, w_load: 0.1 }
     }
 
@@ -247,7 +253,17 @@ impl Model for Moe {
         let (cv_load, _) = Self::cv_squared(&load);
         self.last_aux = self.cfg.w_importance * cv_imp + self.cfg.w_load * cv_load;
 
-        self.cache = Some(Cache { x: x.clone(), clean, nstd, eps, topk, gates, assignment, expert_a1, expert_out });
+        self.cache = Some(Cache {
+            x: x.clone(),
+            clean,
+            nstd,
+            eps,
+            topk,
+            gates,
+            assignment,
+            expert_a1,
+            expert_out,
+        });
         y
     }
 
@@ -396,7 +412,13 @@ impl Model for Moe {
 
 impl Moe {
     /// Smooth load estimator: load_i = Σ_r Φ((clean_{r,i} − kth_excl) / σ).
-    fn load_vector(&self, clean: &Matrix, nstd: &Matrix, eps: &Matrix, topk: &[Vec<usize>]) -> Vec<f32> {
+    fn load_vector(
+        &self,
+        clean: &Matrix,
+        nstd: &Matrix,
+        eps: &Matrix,
+        topk: &[Vec<usize>],
+    ) -> Vec<f32> {
         let b = clean.rows();
         let e = self.cfg.experts;
         let mut load = vec![0.0f32; e];
@@ -413,7 +435,12 @@ impl Moe {
     }
 
     fn kth_excluding(&self, cache: &Cache, r: usize) -> Vec<f32> {
-        let view = CacheView { clean: &cache.clean, nstd: &cache.nstd, eps: &cache.eps, topk: &cache.topk };
+        let view = CacheView {
+            clean: &cache.clean,
+            nstd: &cache.nstd,
+            eps: &cache.eps,
+            topk: &cache.topk,
+        };
         self.kth_excluding_view(&view, r)
     }
 
@@ -422,7 +449,8 @@ impl Moe {
     fn kth_excluding_view(&self, c: &CacheView, r: usize) -> Vec<f32> {
         let e = self.cfg.experts;
         let k = self.cfg.k;
-        let h: Vec<f32> = (0..e).map(|i| c.clean.get(r, i) + c.eps.get(r, i) * c.nstd.get(r, i)).collect();
+        let h: Vec<f32> =
+            (0..e).map(|i| c.clean.get(r, i) + c.eps.get(r, i) * c.nstd.get(r, i)).collect();
         let mut sorted = h.clone();
         sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
         // For experts inside the top-k the threshold is the (k+1)-th value

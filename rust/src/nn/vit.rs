@@ -444,7 +444,19 @@ impl Vit {
             .collect();
         let ln_f = LayerNorm::new(cfg.dim);
         let head = Linear::new(rng, cfg.dim, cfg.classes);
-        Vit { cfg, patch_embed, pos, g_pos, cls, g_cls, blocks, ln_f, head, cache: None, last_aux: 0.0 }
+        Vit {
+            cfg,
+            patch_embed,
+            pos,
+            g_pos,
+            cls,
+            g_cls,
+            blocks,
+            ln_f,
+            head,
+            cache: None,
+            last_aux: 0.0,
+        }
     }
 
     /// Cut flattened images into patch rows: (B·T) × patch_dim.

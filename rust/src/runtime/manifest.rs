@@ -89,7 +89,15 @@ impl Manifest {
             let params_file = get("params").map(|p| dir.join(p));
             let params_count = get("params_count").and_then(|v| v.parse().ok()).unwrap_or(0);
             let notes = get("notes").unwrap_or("").to_string();
-            artifacts.push(ArtifactSpec { name, file, inputs, outputs, params_file, params_count, notes });
+            artifacts.push(ArtifactSpec {
+                name,
+                file,
+                inputs,
+                outputs,
+                params_file,
+                params_count,
+                notes,
+            });
         }
         Ok(Manifest { artifacts })
     }

@@ -12,7 +12,7 @@ pub mod pool;
 
 pub use gemm::{
     axpy_slice, dot, gemm, gemm_acc, gemm_bias, gemm_nt, gemm_packed, gemm_scalar, gemm_tn,
-    parallel_flop_threshold, set_parallel_flop_threshold,
+    parallel_flop_threshold, prefetch_slice, routing_dot, set_parallel_flop_threshold,
 };
 pub use ops::*;
 

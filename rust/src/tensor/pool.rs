@@ -25,12 +25,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 
 /// A raw pointer that may cross task closures. Holders must only derive
-/// disjoint slices from it per task (e.g. row bands of one output buffer),
-/// which is what keeps the aliasing sound.
+/// disjoint slices from it per task (e.g. row bands of one output buffer,
+/// or row bands of the router's leaf-index buffer), which is what keeps
+/// the aliasing sound. Defaults to `f32` — the element type of every GEMM
+/// output — but is generic so integer-typed buffers can band-dispatch too.
 #[derive(Clone, Copy)]
-pub(crate) struct SendPtr(pub(crate) *mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+pub(crate) struct SendPtr<T = f32>(pub(crate) *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
 
 /// One parallel region, shared with the workers.
 #[derive(Clone)]

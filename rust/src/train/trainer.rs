@@ -49,7 +49,12 @@ pub struct Outcome {
 }
 
 /// Build the model a [`TrainConfig`] describes.
-pub fn build_model(cfg: &TrainConfig, dim_in: usize, dim_out: usize, rng: &mut Rng) -> Box<dyn Model> {
+pub fn build_model(
+    cfg: &TrainConfig,
+    dim_in: usize,
+    dim_out: usize,
+    rng: &mut Rng,
+) -> Box<dyn Model> {
     match cfg.model {
         ModelKind::Ff => Box::new(crate::nn::Ff::new(rng, dim_in, cfg.width, dim_out)),
         ModelKind::Fff => {

@@ -122,7 +122,10 @@ impl fastfeedforward::coordinator::Backend for PanickyBackend {
     fn dim_out(&self) -> usize {
         2
     }
-    fn infer(&mut self, _batch: &fastfeedforward::tensor::Matrix) -> fastfeedforward::tensor::Matrix {
+    fn infer(
+        &mut self,
+        _batch: &fastfeedforward::tensor::Matrix,
+    ) -> fastfeedforward::tensor::Matrix {
         panic!("injected backend failure");
     }
 }

@@ -40,9 +40,11 @@ fn wider_ff_does_better_on_hard_datasets() {
 
 #[test]
 fn color_datasets_have_correct_geometry_and_are_harder() {
-    let (cifar_train, _) = generate(DatasetKind::Cifar10, &GenOptions { train_n: 300, test_n: 50, seed: 0 });
+    let (cifar_train, _) =
+        generate(DatasetKind::Cifar10, &GenOptions { train_n: 300, test_n: 50, seed: 0 });
     assert_eq!(cifar_train.dim(), 32 * 32 * 3);
-    let (usps_train, _) = generate(DatasetKind::Usps, &GenOptions { train_n: 300, test_n: 50, seed: 0 });
+    let (usps_train, _) =
+        generate(DatasetKind::Usps, &GenOptions { train_n: 300, test_n: 50, seed: 0 });
     assert_eq!(usps_train.dim(), 256);
 }
 

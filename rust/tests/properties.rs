@@ -201,11 +201,149 @@ fn prop_aliased_routing_matches_full_model() {
             let mut r2 = Rng::seed_from_u64(seed);
             let aliased = FffInfer::random(&mut r2, 8, 3, depth, 2, 2);
             let mut xr = Rng::seed_from_u64(seed ^ 1);
-            for _ in 0..8 {
-                let x: Vec<f32> = (0..8).map(|_| xr.normal_f32(0.0, 1.0)).collect();
-                if full.route(&x) != aliased.route(&x) {
+            let x = rand_matrix(&mut xr, 8, 8);
+            let full_batch = full.route_batch(&x);
+            let aliased_batch = aliased.route_batch(&x);
+            for r in 0..x.rows() {
+                let want = full.route(x.row(r));
+                if want != aliased.route(x.row(r)) {
                     return Err("routing differs between full and aliased models".into());
                 }
+                if full_batch[r] != want || aliased_batch[r] != want {
+                    return Err(format!(
+                        "route_batch differs from per-sample route at row {r} \
+                         (depth {depth}, aliased storage)"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Batched SoA tree-descent engine properties (PR: level-synchronous router).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_route_batch_equals_route_equals_leaf_index() {
+    // The single-descent-implementation invariant: for n = 1 trees of any
+    // depth 0..=8 and ragged batch shapes, the batched level-synchronous
+    // router, the per-sample router, and the training model's
+    // `leaf_index` must pick the same leaf for every sample — exact
+    // index equality, not a tolerance.
+    check(
+        "route_batch ≡ route ≡ leaf_index (depths 0..=8)",
+        |rng| {
+            let mut c = gen_case(rng);
+            c.depth = rng.below(9);
+            c.batch = 1 + rng.below(150);
+            c
+        },
+        |case| {
+            let (fff, x) = build(case);
+            let inf = fff.compile_infer();
+            let batched = inf.route_batch(&x);
+            if batched.len() != x.rows() {
+                return Err(format!("route_batch returned {} indices", batched.len()));
+            }
+            for r in 0..x.rows() {
+                let per_sample = inf.route(x.row(r));
+                let training = fff.leaf_index(x.row(r));
+                if batched[r] != per_sample || per_sample != training {
+                    return Err(format!(
+                        "row {r}: route_batch={} route={per_sample} leaf_index={training} \
+                         (depth {}, batch {})",
+                        batched[r], case.depth, case.batch
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_route_batch_thread_count_invariant() {
+    use fastfeedforward::tensor::pool::{set_current, ThreadPool};
+    // Pool determinism: the same leaf assignment at 1/2/4 threads, with
+    // the FLOP threshold forced to zero so batches actually fan out.
+    check(
+        "route_batch identical at 1/2/4 threads",
+        |rng| {
+            (
+                1 + rng.below(10),   // depth 1..=10
+                2 + rng.below(12),   // dim_in
+                64 + rng.below(300), // batch (large enough to band-split)
+                rng.next_u64(),
+            )
+        },
+        |&(depth, dim_in, batch, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let model = FffInfer::random(&mut rng, dim_in, 3, depth, 2, 1 << depth.min(6));
+            let x = rand_matrix(&mut rng, batch, dim_in);
+            let saved = fastfeedforward::tensor::parallel_flop_threshold();
+            fastfeedforward::tensor::set_parallel_flop_threshold(0);
+            let mut results: Vec<Vec<usize>> = Vec::new();
+            for threads in [1usize, 2, 4] {
+                set_current(Some(std::sync::Arc::new(ThreadPool::new(threads))));
+                results.push(model.route_batch(&x));
+                set_current(None);
+            }
+            fastfeedforward::tensor::set_parallel_flop_threshold(saved);
+            for (i, r) in results.iter().enumerate().skip(1) {
+                if r != &results[0] {
+                    return Err(format!(
+                        "leaf assignment drifted between 1 thread and {} threads \
+                         (depth {depth}, batch {batch})",
+                        [1, 2, 4][i]
+                    ));
+                }
+            }
+            // And the pooled batched result equals the per-sample walk.
+            for r in 0..x.rows() {
+                if results[0][r] != model.route(x.row(r)) {
+                    return Err(format!("row {r}: batched ≠ per-sample"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_infer_batch_routed_consistent_with_infer_one() {
+    // The serving split (route_batch + infer_batch_routed) must match the
+    // single-sample hot path on both the sparse and grouped branches.
+    check(
+        "infer_batch(_routed) ≡ infer_one loop",
+        |rng| {
+            (
+                rng.below(6),       // depth 0..=5
+                1 + rng.below(5),   // leaf width
+                2 + rng.below(10),  // dim_in
+                1 + rng.below(5),   // dim_out
+                1 + rng.below(140), // batch: spans sparse and dense paths
+                rng.next_u64(),
+            )
+        },
+        |&(depth, leaf, dim_in, dim_out, batch, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let model = FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, 1 << depth);
+            let x = rand_matrix(&mut rng, batch, dim_in);
+            let leaf_of = model.route_batch(&x);
+            let routed = model.infer_batch_routed(&x, &leaf_of);
+            let auto = model.infer_batch(&x);
+            if routed.max_abs_diff(&auto) > 0.0 {
+                return Err("pre-routed and auto-routed batched inference differ".into());
+            }
+            let mut per_sample = Matrix::zeros(batch, dim_out);
+            for r in 0..batch {
+                model.infer_one(x.row(r), per_sample.row_mut(r));
+            }
+            let diff = routed.max_abs_diff(&per_sample);
+            if diff > 1e-5 {
+                return Err(format!("diff {diff} at depth {depth} batch {batch}"));
             }
             Ok(())
         },
