@@ -4,9 +4,11 @@
 //! (EXPERIMENTS.md §Perf records their before/after).
 //!
 //! The run starts with the **gemm/fff_infer thread-scaling suite** (fixed
-//! seeds, 1/2/4/8 threads) plus the **routing-descent suite** (depths
-//! 4–15, 1/2/4 threads) and records both to `BENCH_gemm.json` so the perf
-//! trajectory is tracked PR over PR:
+//! seeds, 1/2/4/8 threads, every GEMM kernel kind forced in turn and each
+//! row labelled with the kernel + detected ISA) plus the
+//! **routing-descent suite** (depths 4–15, 1/2/4 threads) and records
+//! both to `BENCH_gemm.json` (schema v3) so the perf trajectory is
+//! tracked PR over PR:
 //!
 //! ```text
 //! cargo bench --manifest-path rust/Cargo.toml --bench bench_micro          # full, from repo root
@@ -18,7 +20,7 @@ use fastfeedforward::bench::{time_budgeted, time_fn, Table};
 use fastfeedforward::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, NativeFffBackend};
 use fastfeedforward::nn::{Ff, FffInfer};
 use fastfeedforward::rng::Rng;
-use fastfeedforward::tensor::{gemm, gemm_scalar, pool, Matrix};
+use fastfeedforward::tensor::{gemm, gemm_scalar, kernels, pool, Matrix};
 use std::time::Duration;
 
 /// Thread counts the scaling suite sweeps.
@@ -113,6 +115,16 @@ fn scaling_suite(quick: bool) {
     } else {
         &[(64, 64, 64), (128, 128, 128), (256, 256, 256), (512, 512, 512)]
     };
+    // Microkernel ISA for row labels ("avx2-fma", "avx", "neon",
+    // "portable"); the banded/serial kernels are compiler-auto-vectorized.
+    let packed_isa = kernels::table().isa;
+    // Zero the FLOP threshold for the sweep so rows labelled
+    // packed/banded really run that kernel even at 64³ (small shapes
+    // then include the dispatch overhead they would dodge in production,
+    // which is the honest number for a kernel-labelled row). The guard
+    // restores the threshold (and clears any forced kernel) when the
+    // sweep scope ends, panic included.
+    let threshold_guard = fastfeedforward::testing::KernelStateGuard::zero_threshold();
     for &(m, k, n) in shapes {
         let mut rng = Rng::seed_from_u64(42);
         let mut a = Matrix::zeros(m, k);
@@ -120,44 +132,57 @@ fn scaling_suite(quick: bool) {
         rng.fill_normal(a.as_mut_slice(), 0.0, 1.0);
         rng.fill_normal(b.as_mut_slice(), 0.0, 1.0);
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
-        // Baseline: the seed's serial scalar kernel.
-        let t_scalar = time_budgeted(budget, 3, 1000, || {
+        // Baseline: the seed's serial kernel (what `serial` forces).
+        let t_serial = time_budgeted(budget, 3, 1000, || {
             std::hint::black_box(gemm_scalar(&a, &b));
         });
         table.row(vec![
-            format!("gemm {m}x{k}x{n} scalar(seed)"),
-            format!("{:.3} ms", t_scalar.mean_ms()),
-            format!("{:.2} GFLOP/s", flops / t_scalar.mean.as_secs_f64() / 1e9),
+            format!("gemm {m}x{k}x{n} serial(seed)"),
+            format!("{:.3} ms", t_serial.mean_ms()),
+            format!("{:.2} GFLOP/s", flops / t_serial.mean.as_secs_f64() / 1e9),
         ]);
         gemm_rows.push(format!(
-            "{{\"shape\": \"{m}x{k}x{n}\", \"kernel\": \"scalar\", \"threads\": 1, \
-             \"ms\": {}, \"gflops\": {}, \"speedup_vs_scalar\": 1.0}}",
-            json_num(t_scalar.mean_ms()),
-            json_num(flops / t_scalar.mean.as_secs_f64() / 1e9),
+            "{{\"shape\": \"{m}x{k}x{n}\", \"kernel\": \"serial\", \"isa\": \"autovec\", \
+             \"threads\": 1, \"ms\": {}, \"gflops\": {}, \"speedup_vs_serial\": 1.0}}",
+            json_num(t_serial.mean_ms()),
+            json_num(flops / t_serial.mean.as_secs_f64() / 1e9),
         ));
-        for &threads in &THREAD_SWEEP {
-            pool::set_global_threads(threads);
-            let t = time_budgeted(budget, 3, 1000, || {
-                std::hint::black_box(gemm(&a, &b));
-            });
-            let speedup = t_scalar.mean.as_secs_f64() / t.mean.as_secs_f64();
-            table.row(vec![
-                format!("gemm {m}x{k}x{n} pooled t={threads}"),
-                format!("{:.3} ms", t.mean_ms()),
-                format!(
-                    "{:.2} GFLOP/s, {speedup:.2}x vs scalar",
-                    flops / t.mean.as_secs_f64() / 1e9
-                ),
-            ]);
-            gemm_rows.push(format!(
-                "{{\"shape\": \"{m}x{k}x{n}\", \"kernel\": \"auto\", \"threads\": {threads}, \
-                 \"ms\": {}, \"gflops\": {}, \"speedup_vs_scalar\": {}}}",
-                json_num(t.mean_ms()),
-                json_num(flops / t.mean.as_secs_f64() / 1e9),
-                json_num(speedup),
-            ));
+        for kind in [kernels::KernelKind::Packed, kernels::KernelKind::Banded] {
+            kernels::force(Some(kind));
+            let isa = match kind {
+                kernels::KernelKind::Packed => packed_isa,
+                _ => "autovec",
+            };
+            for &threads in &THREAD_SWEEP {
+                pool::set_global_threads(threads);
+                let t = time_budgeted(budget, 3, 1000, || {
+                    std::hint::black_box(gemm(&a, &b));
+                });
+                let speedup = t_serial.mean.as_secs_f64() / t.mean.as_secs_f64();
+                table.row(vec![
+                    format!("gemm {m}x{k}x{n} {}[{isa}] t={threads}", kind.name()),
+                    format!("{:.3} ms", t.mean_ms()),
+                    format!(
+                        "{:.2} GFLOP/s, {speedup:.2}x vs serial",
+                        flops / t.mean.as_secs_f64() / 1e9
+                    ),
+                ]);
+                gemm_rows.push(format!(
+                    "{{\"shape\": \"{m}x{k}x{n}\", \"kernel\": \"{}\", \"isa\": \"{isa}\", \
+                     \"threads\": {threads}, \"ms\": {}, \"gflops\": {}, \
+                     \"speedup_vs_serial\": {}}}",
+                    kind.name(),
+                    json_num(t.mean_ms()),
+                    json_num(flops / t.mean.as_secs_f64() / 1e9),
+                    json_num(speedup),
+                ));
+            }
+            kernels::force(None);
         }
     }
+    // The fff_infer suite below measures production dispatch, so the
+    // threshold goes back to its real value here.
+    drop(threshold_guard);
 
     // FFF batched inference: leaf-bucketed grouped path vs the per-sample
     // loop, across the same thread sweep (fixed seed, skewed-free random
@@ -211,9 +236,9 @@ fn scaling_suite(quick: bool) {
 
     let out_path = std::env::var("FFF_BENCH_GEMM_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());
     let json = format!(
-        "{{\n  \"schema\": \"fff-bench-gemm/v2\",\n  \"quick\": {quick},\n  \
-         \"host_threads\": {},\n  \"gemm\": [\n    {}\n  ],\n  \"fff_infer\": [\n    {}\n  ],\n  \
-         \"routing\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"schema\": \"fff-bench-gemm/v3\",\n  \"quick\": {quick},\n  \
+         \"host_threads\": {},\n  \"isa\": \"{packed_isa}\",\n  \"gemm\": [\n    {}\n  ],\n  \
+         \"fff_infer\": [\n    {}\n  ],\n  \"routing\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         gemm_rows.join(",\n    "),
         fff_rows.join(",\n    "),

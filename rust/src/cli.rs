@@ -1,6 +1,11 @@
 //! Tiny argument parser (clap replacement for the offline environment).
 //!
-//! Grammar: `fff <subcommand> [--key value | --flag] [positional...]`.
+//! Grammar: `fff <subcommand> [--key value | --key=value | --flag]
+//! [positional...]`. Parsing is fallible: malformed options (an empty
+//! option name like a bare `--`, or an option that should have consumed a
+//! value but hit the end of the argument list) surface as `Err`, which
+//! `main` turns into the usage error — they used to be either silently
+//! misparsed or one refactor away from an `unwrap` panic.
 
 use std::collections::BTreeMap;
 
@@ -15,20 +20,31 @@ pub struct Args {
 
 impl Args {
     /// Parse from `std::env::args()` (skipping argv[0]).
-    pub fn from_env() -> Args {
+    pub fn from_env() -> Result<Args, String> {
         Self::parse(std::env::args().skip(1))
     }
 
     /// Parse from an explicit iterator (testable).
-    pub fn parse(args: impl IntoIterator<Item = String>) -> Args {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Args, String> {
         let mut out = Args::default();
         let mut iter = args.into_iter().peekable();
         while let Some(arg) = iter.next() {
             if let Some(key) = arg.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
+                    if k.is_empty() {
+                        return Err(format!("missing option name in {arg:?}"));
+                    }
                     out.options.insert(k.to_string(), v.to_string());
+                } else if key.is_empty() {
+                    return Err("missing option name after `--`".to_string());
                 } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = iter.next().unwrap();
+                    // The peek above guarantees a next item today; the
+                    // error path (instead of `.unwrap()`) keeps a missing
+                    // value a usage error rather than a panic if the two
+                    // ever drift apart.
+                    let Some(v) = iter.next() else {
+                        return Err(format!("missing value for --{key}"));
+                    };
                     out.options.insert(key.to_string(), v);
                 } else {
                     out.flags.push(key.to_string());
@@ -39,7 +55,7 @@ impl Args {
                 out.positional.push(arg);
             }
         }
-        out
+        Ok(out)
     }
 
     /// String option.
@@ -74,7 +90,7 @@ mod tests {
     use super::*;
 
     fn parse(s: &str) -> Args {
-        Args::parse(s.split_whitespace().map(str::to_string))
+        Args::parse(s.split_whitespace().map(str::to_string)).expect("parse")
     }
 
     #[test]
@@ -105,6 +121,28 @@ mod tests {
         let a = parse("train");
         assert_eq!(a.get_or("depth", 3usize), 3);
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_valueless_option_is_a_flag_not_a_panic() {
+        // Regression for the `iter.next().unwrap()` hazard: an option at
+        // the very end of the argument list must parse as a flag (nothing
+        // follows to bind), never panic or error.
+        let a = parse("train --verbose");
+        assert!(a.flag("verbose"));
+        let a = parse("serve --threads 2 --trace");
+        assert_eq!(a.get_or("threads", 0usize), 2);
+        assert!(a.flag("trace"));
+    }
+
+    #[test]
+    fn bare_double_dash_is_a_usage_error() {
+        // `--` has no option name; it used to swallow the next positional
+        // as the value of the empty-string option.
+        let err = Args::parse(["train".into(), "--".into(), "mnist".into()]).unwrap_err();
+        assert!(err.contains("missing option name"), "got: {err}");
+        let err = Args::parse(["train".into(), "--=x".into()]).unwrap_err();
+        assert!(err.contains("missing option name"), "got: {err}");
     }
 
     #[test]

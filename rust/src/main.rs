@@ -16,25 +16,33 @@ use fastfeedforward::experiments;
 use fastfeedforward::train::run_training;
 
 fn main() {
-    let args = Args::from_env();
+    let args = match Args::from_env() {
+        Ok(args) => args,
+        Err(e) => {
+            eprintln!("fff: {e}");
+            usage();
+        }
+    };
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("info") => cmd_info(),
-        _ => {
-            eprintln!("usage: fff <train|serve|reproduce|info> [options]");
-            eprintln!("  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8");
-            eprintln!(
-                "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0"
-            );
-            eprintln!(
-                "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6  (FFF_SCALE=paper for full grid)"
-            );
-            eprintln!("  info");
-            std::process::exit(2);
-        }
+        _ => usage(),
     }
+}
+
+fn usage() -> ! {
+    eprintln!("usage: fff <train|serve|reproduce|info> [options]");
+    eprintln!("  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8");
+    eprintln!(
+        "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0"
+    );
+    eprintln!(
+        "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6  (FFF_SCALE=paper for full grid)"
+    );
+    eprintln!("  info");
+    std::process::exit(2);
 }
 
 fn cmd_train(args: &Args) {

@@ -24,7 +24,10 @@
 //! node logits with the same [`routing_dot`] kernel and the same
 //! `logit >= 0` decision, so all of them pick identical leaves bit for
 //! bit. Mixed-path serving (batched router for full batches, per-sample
-//! descent for stragglers) depends on that invariant.
+//! descent for stragglers) depends on that invariant. The kernel itself
+//! is dispatched by [`crate::tensor::kernels`] (AVX on x86_64, NEON on
+//! aarch64, lane-striped scalar elsewhere) and is bit-identical across
+//! all three, so the invariant holds across ISAs too.
 
 use super::{init, Linear, Model, ParamVisitor};
 use crate::rng::Rng;
@@ -624,12 +627,16 @@ impl TreeRouter {
     /// `r0 + i`'s node index within the current level; after the last
     /// level it is the leaf index.
     fn route_block(&self, x: &Matrix, r0: usize, idx: &mut [usize]) {
+        // Resolve the ISA-dispatched dot once per block instead of once
+        // per logit (the hookup into `tensor::kernels`; same function
+        // `routing_dot` resolves to, so numerics are unchanged).
+        let rdot = crate::tensor::kernels::table().routing_dot;
         for level in &self.levels {
             if level.w.len() * std::mem::size_of::<f32>() <= ROUTE_RESIDENT_BYTES {
                 // Resident kernel: the level block stays cached across the
                 // whole block, so a plain pass is compute-bound.
                 for (i, ix) in idx.iter_mut().enumerate() {
-                    let logit = routing_dot(level.w.row(*ix), x.row(r0 + i)) + level.b[*ix];
+                    let logit = rdot(level.w.row(*ix), x.row(r0 + i)) + level.b[*ix];
                     *ix = 2 * *ix + usize::from(logit >= 0.0);
                 }
             } else {
@@ -643,7 +650,7 @@ impl TreeRouter {
                         prefetch_slice(level.w.row(idx[i + ROUTE_PREFETCH_AHEAD]));
                     }
                     let ix = idx[i];
-                    let logit = routing_dot(level.w.row(ix), x.row(r0 + i)) + level.b[ix];
+                    let logit = rdot(level.w.row(ix), x.row(r0 + i)) + level.b[ix];
                     idx[i] = 2 * ix + usize::from(logit >= 0.0);
                 }
             }
@@ -1222,6 +1229,10 @@ mod tests {
 
     #[test]
     fn routed_and_unrouted_batched_inference_agree() {
+        // Bitwise comparison of two dispatched computations: hold the
+        // kernel lock so a concurrent forced-kernel/threshold test can't
+        // flip the GEMM strategy between them.
+        let _serialize = crate::tensor::kernels::force_lock();
         let (fff, _) = mk(3, 4, 0.0);
         let inf = fff.compile_infer();
         let x = batch(40, 5);

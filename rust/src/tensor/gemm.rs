@@ -1,40 +1,42 @@
-//! GEMM kernels for the native engine (v2: packed + multi-threaded).
+//! GEMM drivers for the native engine (v3: explicit-SIMD microkernel).
 //!
-//! Layout is row-major everywhere. Three execution tiers (see
-//! EXPERIMENTS.md §Perf for the measured iteration log
-//! naive → ikj → packed+parallel):
+//! Layout is row-major everywhere. Execution tiers (see EXPERIMENTS.md
+//! §Perf for the measured iteration log naive → ikj → packed+parallel →
+//! intrinsic microkernel):
 //!
-//! 1. **Small** (below [`parallel_flop_threshold`]): the v1 serial kernel —
-//!    classic `i-k-j` loop order with a 4-row unroll and k-blocking; the
-//!    innermost loop walks contiguous rows of `B` and `C` and
-//!    auto-vectorizes to full-width SIMD. Zero dispatch overhead, so
+//! 1. **Small** (below [`parallel_flop_threshold`]) or kind `serial`: the
+//!    v1 serial kernel — classic `i-k-j` loop order with a 4-row unroll
+//!    and k-blocking; the innermost loop walks contiguous rows of `B` and
+//!    `C` and auto-vectorizes. Zero dispatch overhead, so
 //!    experiment-scale matrices are not pessimized.
 //! 2. **Large**: row bands of `C` are dispatched as work-stealing tasks on
 //!    the [`super::pool`] thread pool. Band boundaries never change the
-//!    per-element accumulation order, so results are **bit-identical across
-//!    thread counts**.
-//! 3. Within a band, one of two serial kernels runs, chosen once per
-//!    process by a ~1 ms self-calibration (overridable with
-//!    `FFF_GEMM_KERNEL=packed|banded`):
-//!    * `packed` — `A`/`B` panels packed into cache-blocked buffers and an
-//!      explicit 4x8 register-tiled microkernel (the BLIS/matrixmultiply
-//!      scheme; wins when the compiler keeps the 4x8 accumulator tile in
-//!      SIMD registers);
-//!    * `banded` — the v1 `i-k-j` kernel applied per band (wins where the
-//!      packed microkernel fails to vectorize; measured on the dev box the
-//!      gcc prototype needed this fallback while LLVM vectorizes both).
+//!    per-element accumulation order, so results are **bit-identical
+//!    across thread counts** for every kernel kind.
+//! 3. Within a band, the strategy is [`kernels::active`]
+//!    (`FFF_GEMM_KERNEL=packed|banded|serial` overrides, tests force it
+//!    per case):
+//!    * `packed` (default) — `A`/`B` panels packed into cache-blocked
+//!      buffers and the 4x8 microkernel from the detected
+//!      [`kernels::table`]: explicit AVX2/FMA or NEON intrinsics, with
+//!      the auto-vectorized tile as the portable fallback;
+//!    * `banded` — the v1 `i-k-j` kernel applied per band (kept as the
+//!      comparison baseline and for hosts where packing buys nothing).
+//!
+//!    The packed-vs-banded runtime calibration from iteration 2 is gone:
+//!    it existed because auto-vectorizers disagreed 4x on the
+//!    microkernel, and the intrinsic tile removed that variance
+//!    (EXPERIMENTS.md §Perf iteration 3).
 
+use super::kernels::{self, KernelKind, MR, NR};
+use super::ops::{axpy_slice, dot};
 use super::pool::{self, SendPtr};
 use super::Matrix;
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
-use std::sync::Once;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Panel size along `k` — a `KC × NR` micro-panel of `B` (8 KiB) plus a
 /// `KC × MR` micro-panel of `A` stays resident in L1.
 const KC: usize = 256;
-/// Microkernel tile: MR rows of `A` × NR columns of `B`.
-const MR: usize = 4;
-const NR: usize = 8;
 
 /// 2·m·k·n below which GEMMs stay on the serial v1 kernel. Defaults to
 /// 4 MFLOP (~a 128³ product); tune with [`set_parallel_flop_threshold`].
@@ -76,18 +78,21 @@ pub fn gemm_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(ka, kb, "gemm: inner dims {ka} vs {kb}");
     assert_eq!(c.shape(), (m, n), "gemm: output shape");
     let k = ka;
-    if 2 * m * k * n < parallel_flop_threshold() {
+    let kind = kernels::active();
+    if kind == KernelKind::Serial || 2 * m * k * n < parallel_flop_threshold() {
         seed_kernel(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, k, n);
         return;
     }
     let p = pool::current();
-    match kernel_choice() {
+    match kind {
         KernelKind::Packed => packed_parallel(a.as_slice(), b.as_slice(), c, m, k, n, &p),
         KernelKind::Banded => banded_parallel(a.as_slice(), b.as_slice(), c, m, k, n, &p),
+        KernelKind::Serial => unreachable!("serial handled above"),
     }
 }
 
-/// `C = A·B` forced through the v1 serial kernel (bench baseline).
+/// `C = A·B` forced through the v1 serial kernel (bench baseline, and
+/// what `FFF_GEMM_KERNEL=serial` routes everything to).
 pub fn gemm_scalar(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let n = b.cols();
@@ -97,7 +102,7 @@ pub fn gemm_scalar(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = A·B` forced through the packed 4x8 microkernel path on the current
+/// `C = A·B` forced through the packed microkernel path on the current
 /// pool, regardless of size (property tests and bench suite).
 pub fn gemm_packed(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
@@ -192,7 +197,7 @@ fn banded_parallel(
 }
 
 // ---------------------------------------------------------------------------
-// Packed path: cache-blocked panels + explicit 4x8 microkernel.
+// Packed path: cache-blocked panels + the dispatched 4x8 microkernel.
 // ---------------------------------------------------------------------------
 
 /// Pack a `kc`-deep panel of `B` (rows `k0..k0+kc`, all `n` columns) into
@@ -230,57 +235,9 @@ fn pack_a(av: &[f32], k: usize, i0: usize, rows: usize, k0: usize, kc: usize, ap
     }
 }
 
-/// The 4x8 register-tiled microkernel: `C[mr×nr] += Apanel · Bpanel`.
-///
-/// Accumulators are four `[f32; NR]` arrays whose addresses are never
-/// taken, so the compiler can keep the whole tile in SIMD registers (the
-/// prototype showed that forming pointers into them forces a stack spill).
-#[inline(always)]
-fn kernel_4x8(kc: usize, ap: &[f32], bp: &[f32], cv: &mut [f32], n: usize, mr: usize, nr: usize) {
-    let mut acc0 = [0.0f32; NR];
-    let mut acc1 = [0.0f32; NR];
-    let mut acc2 = [0.0f32; NR];
-    let mut acc3 = [0.0f32; NR];
-    for p in 0..kc {
-        let b: &[f32; NR] = bp[p * NR..(p + 1) * NR].try_into().unwrap();
-        let a: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
-        for (acc, &bc) in acc0.iter_mut().zip(b.iter()) {
-            *acc += a[0] * bc;
-        }
-        for (acc, &bc) in acc1.iter_mut().zip(b.iter()) {
-            *acc += a[1] * bc;
-        }
-        for (acc, &bc) in acc2.iter_mut().zip(b.iter()) {
-            *acc += a[2] * bc;
-        }
-        for (acc, &bc) in acc3.iter_mut().zip(b.iter()) {
-            *acc += a[3] * bc;
-        }
-    }
-    if mr > 0 {
-        for (cj, &s) in cv[..nr].iter_mut().zip(acc0.iter()) {
-            *cj += s;
-        }
-    }
-    if mr > 1 {
-        for (cj, &s) in cv[n..n + nr].iter_mut().zip(acc1.iter()) {
-            *cj += s;
-        }
-    }
-    if mr > 2 {
-        for (cj, &s) in cv[2 * n..2 * n + nr].iter_mut().zip(acc2.iter()) {
-            *cj += s;
-        }
-    }
-    if mr > 3 {
-        for (cj, &s) in cv[3 * n..3 * n + nr].iter_mut().zip(acc3.iter()) {
-            *cj += s;
-        }
-    }
-}
-
-/// Packed serial band: pack the band's rows of `A`, then run the
-/// microkernel over every (MR row-panel × NR col-panel) tile.
+/// Packed serial band: pack the band's rows of `A`, then run `micro`
+/// (the microkernel from [`kernels::table`]) over every (MR row-panel ×
+/// NR col-panel) tile.
 #[allow(clippy::too_many_arguments)]
 fn packed_band(
     av: &[f32],
@@ -292,6 +249,7 @@ fn packed_band(
     n: usize,
     k0: usize,
     kc: usize,
+    micro: kernels::Micro4x8,
 ) {
     let m_panels = rows.div_ceil(MR);
     let n_panels = n.div_ceil(NR);
@@ -305,7 +263,7 @@ fn packed_band(
             let j0 = jp * NR;
             let nr = NR.min(n - j0);
             let bp = &bpack[jp * kc * NR..(jp + 1) * kc * NR];
-            kernel_4x8(kc, ap, bp, &mut cv[r0 * n + j0..], n, mr, nr);
+            micro(kc, ap, bp, &mut cv[r0 * n + j0..], n, mr, nr);
         }
     }
 }
@@ -322,6 +280,7 @@ fn packed_parallel(
     n: usize,
     p: &pool::ThreadPool,
 ) {
+    let micro = kernels::table().micro_4x8;
     let n_panels = n.div_ceil(NR);
     let kc_max = k.min(KC);
     let mut bpack = vec![0.0f32; n_panels * kc_max * NR];
@@ -338,73 +297,8 @@ fn packed_parallel(
             // SAFETY: bands are disjoint row ranges of `c`, and `run`
             // returns before `c` is touched again by the caller.
             let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
-            packed_band(av, bp, cv, i0, rows, k, n, k0, kc);
+            packed_band(av, bp, cv, i0, rows, k, n, k0, kc, micro);
         });
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Kernel self-calibration.
-// ---------------------------------------------------------------------------
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum KernelKind {
-    Packed,
-    Banded,
-}
-
-static KERNEL_CHOICE: AtomicU8 = AtomicU8::new(0);
-static CALIBRATE: Once = Once::new();
-
-/// Which serial kernel the pooled path uses per band. Decided once per
-/// process: `FFF_GEMM_KERNEL=packed|banded` wins, otherwise a ~1 ms timing
-/// duel on a 64×256×64 product picks the faster one for this build/CPU.
-/// (Auto-vectorizers are fickle: the C prototype of the 4x8 microkernel
-/// ran 4x faster than i-k-j under LLVM-style codegen but 4x *slower* under
-/// gcc without `-ffast-math` — calibrating beats guessing.)
-fn kernel_choice() -> KernelKind {
-    CALIBRATE.call_once(|| {
-        let choice = match std::env::var("FFF_GEMM_KERNEL").as_deref() {
-            Ok("packed") => KernelKind::Packed,
-            Ok("banded") => KernelKind::Banded,
-            _ => calibrate(),
-        };
-        KERNEL_CHOICE.store(choice as u8 + 1, Ordering::Relaxed);
-    });
-    if KERNEL_CHOICE.load(Ordering::Relaxed) == KernelKind::Packed as u8 + 1 {
-        KernelKind::Packed
-    } else {
-        KernelKind::Banded
-    }
-}
-
-fn calibrate() -> KernelKind {
-    let (m, k, n) = (64, 256, 64);
-    let a = Matrix::from_fn(m, k, |r, c| ((r * 31 + c * 7) % 17) as f32 / 17.0 - 0.5);
-    let b = Matrix::from_fn(k, n, |r, c| ((r * 13 + c * 5) % 19) as f32 / 19.0 - 0.5);
-    let mut c = Matrix::zeros(m, n);
-    let time_min = |f: &mut dyn FnMut()| {
-        let mut best = std::time::Duration::MAX;
-        for _ in 0..3 {
-            let t0 = std::time::Instant::now();
-            f();
-            best = best.min(t0.elapsed());
-        }
-        best
-    };
-    let n_panels = n.div_ceil(NR);
-    let mut bpack = vec![0.0f32; n_panels * k * NR];
-    pack_b(b.as_slice(), n, 0, k, &mut bpack);
-    let t_packed = time_min(&mut || {
-        packed_band(a.as_slice(), &bpack, c.as_mut_slice(), 0, m, k, n, 0, k);
-    });
-    let t_banded = time_min(&mut || {
-        seed_kernel(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, k, n);
-    });
-    if t_packed <= t_banded {
-        KernelKind::Packed
-    } else {
-        KernelKind::Banded
     }
 }
 
@@ -438,7 +332,10 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
         })
         .collect();
     let p = pool::current();
-    if 2 * m * k * n < parallel_flop_threshold() || p.threads() == 1 {
+    if kernels::active() == KernelKind::Serial
+        || 2 * m * k * n < parallel_flop_threshold()
+        || p.threads() == 1
+    {
         gemm_tn_band(av, bv, c.as_mut_slice(), 0, m, k, m, n, &mostly_zero);
         return c;
     }
@@ -502,7 +399,10 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let av = a.as_slice();
     let bv = b.as_slice();
     let p = pool::current();
-    if 2 * m * k * n < parallel_flop_threshold() || p.threads() == 1 {
+    if kernels::active() == KernelKind::Serial
+        || 2 * m * k * n < parallel_flop_threshold()
+        || p.threads() == 1
+    {
         gemm_nt_band(av, bv, c.as_mut_slice(), 0, m, k, n);
         return c;
     }
@@ -556,177 +456,6 @@ fn gemm_nt_band(
             crow[j] = dot(arow, &bv[j * k..(j + 1) * k]);
             j += 1;
         }
-    }
-}
-
-/// Dot product of two equal-length slices (unrolled).
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    let n = a.len();
-    let mut p = 0;
-    while p + 4 <= n {
-        acc0 += a[p] * b[p];
-        acc1 += a[p + 1] * b[p + 1];
-        acc2 += a[p + 2] * b[p + 2];
-        acc3 += a[p + 3] * b[p + 3];
-        p += 4;
-    }
-    while p < n {
-        acc0 += a[p] * b[p];
-        p += 1;
-    }
-    acc0 + acc1 + acc2 + acc3
-}
-
-/// `y += alpha * x` over slices.
-#[inline]
-pub fn axpy_slice(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Routing dot product (the tree-descent kernel).
-// ---------------------------------------------------------------------------
-
-/// Stripe width of the routing dot: 16 independent accumulator lanes
-/// (two 8-wide SIMD chains on AVX), reduced by a fixed pairwise tree.
-const RDOT_LANES: usize = 16;
-
-/// The boundary-logit dot product every tree-descent path uses.
-///
-/// Fixed numerics: products are accumulated into [`RDOT_LANES`] independent
-/// lanes (`lane = p mod 16`) and reduced by a fixed pairwise tree, using
-/// separate multiply and add (never FMA). The explicit-SIMD path and the
-/// scalar path perform the *same* IEEE operations in the *same* order, so
-/// [`routing_dot`] is bit-identical across ISAs, batch shapes, and thread
-/// counts — which is what lets `route`, `route_batch`, and the training
-/// model's `leaf_index` guarantee identical descent decisions (a logit on
-/// the wrong side of zero would silently route to a different leaf).
-///
-/// This is also the §Perf "explicit SIMD" answer for the descent: the
-/// auto-vectorizer keeps [`dot`]'s 4-stripe form at 4 lanes, while the
-/// explicit 2×8-lane kernel measured 2–3x faster per descent level (see
-/// EXPERIMENTS.md §Perf, batched tree descent).
-#[inline]
-pub fn routing_dot(a: &[f32], b: &[f32]) -> f32 {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if avx_available() {
-            // SAFETY: the `avx` feature was verified at runtime.
-            return unsafe { routing_dot_avx(a, b) };
-        }
-    }
-    routing_dot_scalar(a, b)
-}
-
-/// Fixed reduction tree over the 16 accumulator lanes.
-#[inline]
-fn rdot_reduce(acc: &[f32; RDOT_LANES]) -> f32 {
-    let s0 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    let s1 = (acc[4] + acc[5]) + (acc[6] + acc[7]);
-    let s2 = (acc[8] + acc[9]) + (acc[10] + acc[11]);
-    let s3 = (acc[12] + acc[13]) + (acc[14] + acc[15]);
-    (s0 + s1) + (s2 + s3)
-}
-
-/// Scalar replica of the SIMD routing dot (same lanes, same order).
-fn routing_dot_scalar(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let mut acc = [0.0f32; RDOT_LANES];
-    let mut p = 0;
-    while p + RDOT_LANES <= n {
-        for q in 0..RDOT_LANES {
-            acc[q] += a[p + q] * b[p + q];
-        }
-        p += RDOT_LANES;
-    }
-    while p < n {
-        acc[p % RDOT_LANES] += a[p] * b[p];
-        p += 1;
-    }
-    rdot_reduce(&acc)
-}
-
-/// Runtime AVX detection, cached (0 = unknown, 1 = no, 2 = yes).
-#[cfg(target_arch = "x86_64")]
-fn avx_available() -> bool {
-    static AVX: AtomicU8 = AtomicU8::new(0);
-    match AVX.load(Ordering::Relaxed) {
-        2 => true,
-        1 => false,
-        _ => {
-            let yes = std::arch::is_x86_feature_detected!("avx");
-            AVX.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
-            yes
-        }
-    }
-}
-
-/// Two 8-wide mul+add chains; bit-identical to [`routing_dot_scalar`]
-/// because each SIMD lane is an independent IEEE add chain and the
-/// writeback feeds the same fixed reduction tree.
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx")]
-unsafe fn routing_dot_avx(a: &[f32], b: &[f32]) -> f32 {
-    use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps,
-    };
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
-    let mut p = 0usize;
-    while p + RDOT_LANES <= n {
-        let prod0 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(p)), _mm256_loadu_ps(bp.add(p)));
-        let prod1 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(p + 8)), _mm256_loadu_ps(bp.add(p + 8)));
-        acc0 = _mm256_add_ps(acc0, prod0);
-        acc1 = _mm256_add_ps(acc1, prod1);
-        p += RDOT_LANES;
-    }
-    let mut acc = [0.0f32; RDOT_LANES];
-    _mm256_storeu_ps(acc.as_mut_ptr(), acc0);
-    _mm256_storeu_ps(acc.as_mut_ptr().add(8), acc1);
-    while p < n {
-        acc[p % RDOT_LANES] += a[p] * b[p];
-        p += 1;
-    }
-    rdot_reduce(&acc)
-}
-
-/// Prefetch a weight row the descent will need a few samples from now.
-///
-/// The level-synchronous router knows every sample's next node row up
-/// front (unlike the dependent per-sample walk, whose next address exists
-/// only after the current dot resolves), so it can hide DRAM latency on
-/// deep, larger-than-cache levels. No-op on non-x86_64 targets.
-#[inline]
-pub fn prefetch_slice(row: &[f32]) {
-    #[cfg(target_arch = "x86_64")]
-    {
-        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T1};
-        let ptr = row.as_ptr();
-        let mut p = 0usize;
-        // One prefetch per 64-byte line.
-        while p < row.len() {
-            // SAFETY: `ptr + p` stays inside `row`; prefetch cannot fault.
-            unsafe { _mm_prefetch::<_MM_HINT_T1>(ptr.add(p) as *const i8) };
-            p += 16;
-        }
-    }
-    #[cfg(not(target_arch = "x86_64"))]
-    {
-        let _ = row;
     }
 }
 
@@ -792,22 +521,40 @@ mod tests {
     }
 
     #[test]
+    fn forced_kinds_all_match_naive() {
+        // Every forced strategy must agree with the oracle on a shape big
+        // enough to clear the FLOP threshold (the unit-test twin of the
+        // forced-kernel property matrix in tests/properties.rs). The
+        // guard clears the forced kind and restores the threshold even
+        // if an assert below panics.
+        let mut rng = Rng::seed_from_u64(14);
+        let a = rand_mat(&mut rng, 80, 200);
+        let b = rand_mat(&mut rng, 200, 60);
+        let c0 = naive(&a, &b);
+        let _serialize = kernels::force_lock();
+        let _guard = crate::testing::KernelStateGuard::zero_threshold();
+        for kind in KernelKind::ALL {
+            kernels::force(Some(kind));
+            let c = gemm(&a, &b);
+            kernels::force(None);
+            assert!(
+                c.max_abs_diff(&c0) < 1e-3,
+                "kernel {} diff={}",
+                kind.name(),
+                c.max_abs_diff(&c0)
+            );
+        }
+    }
+
+    #[test]
     fn pooled_paths_are_thread_count_invariant() {
-        use crate::tensor::pool::{set_current, ThreadPool};
-        use std::sync::Arc;
+        use crate::tensor::pool::with_threads;
         let mut rng = Rng::seed_from_u64(12);
         let a = rand_mat(&mut rng, 70, 130);
         let b = rand_mat(&mut rng, 130, 50);
-        let serial = {
-            set_current(Some(Arc::new(ThreadPool::new(1))));
-            let c = gemm_packed(&a, &b);
-            set_current(None);
-            c
-        };
+        let serial = with_threads(1, || gemm_packed(&a, &b));
         for threads in [2usize, 4, 8] {
-            set_current(Some(Arc::new(ThreadPool::new(threads))));
-            let c = gemm_packed(&a, &b);
-            set_current(None);
+            let c = with_threads(threads, || gemm_packed(&a, &b));
             assert_eq!(c, serial, "packed path drifted at {threads} threads");
         }
     }
@@ -886,55 +633,6 @@ mod tests {
     }
 
     #[test]
-    fn dot_matches_sum() {
-        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
-        let b = vec![5.0f32, 4.0, 3.0, 2.0, 1.0];
-        assert_eq!(dot(&a, &b), 35.0);
-    }
-
-    #[test]
-    fn routing_dot_is_bit_identical_to_scalar_replica() {
-        // The dispatched kernel (SIMD where available) must reproduce the
-        // scalar lane-striped replica bit for bit on every length,
-        // including ragged tails — routing correctness rides on it.
-        let mut rng = Rng::seed_from_u64(77);
-        let mut a = vec![0.0f32; 301];
-        let mut b = vec![0.0f32; 301];
-        rng.fill_normal(&mut a, 0.0, 1.0);
-        rng.fill_normal(&mut b, 0.0, 1.0);
-        for n in 1..=301 {
-            let got = routing_dot(&a[..n], &b[..n]);
-            let want = routing_dot_scalar(&a[..n], &b[..n]);
-            assert_eq!(got.to_bits(), want.to_bits(), "lane drift at n={n}");
-        }
-    }
-
-    #[test]
-    fn routing_dot_matches_reference_numerically() {
-        let mut rng = Rng::seed_from_u64(78);
-        for &n in &[1usize, 5, 16, 17, 64, 300] {
-            let mut a = vec![0.0f32; n];
-            let mut b = vec![0.0f32; n];
-            rng.fill_normal(&mut a, 0.0, 1.0);
-            rng.fill_normal(&mut b, 0.0, 1.0);
-            let reference: f64 =
-                a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
-            let got = routing_dot(&a, &b) as f64;
-            assert!((got - reference).abs() < 1e-3, "n={n}: {got} vs {reference}");
-        }
-    }
-
-    #[test]
-    fn prefetch_slice_is_a_safe_noop() {
-        // Prefetch has no observable effect; this just exercises the
-        // pointer arithmetic on ragged lengths under Miri-style review.
-        let v = vec![1.0f32; 131];
-        prefetch_slice(&v);
-        prefetch_slice(&v[..1]);
-        prefetch_slice(&[]);
-    }
-
-    #[test]
     fn gemm_acc_accumulates() {
         let mut rng = Rng::seed_from_u64(5);
         let a = rand_mat(&mut rng, 8, 8);
@@ -948,6 +646,9 @@ mod tests {
 
     #[test]
     fn threshold_is_tunable() {
+        // Under the kernel lock: tests asserting bitwise equality between
+        // dispatched GEMMs rely on the threshold holding still.
+        let _serialize = kernels::force_lock();
         let before = parallel_flop_threshold();
         set_parallel_flop_threshold(123);
         assert_eq!(parallel_flop_threshold(), 123);

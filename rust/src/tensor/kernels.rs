@@ -1,0 +1,762 @@
+//! Runtime ISA detection and kernel dispatch — the one place the crate
+//! decides which machine kernels the hot paths run.
+//!
+//! Two orthogonal decisions live here (they used to be scattered between
+//! `gemm.rs` statics and a ~1 ms timing calibration):
+//!
+//! * **ISA** ([`table`]): detected once per process. On x86_64 with
+//!   AVX2+FMA the packed GEMM path runs the explicit 4x8 intrinsic
+//!   microkernel ([`micro_4x8_avx2fma`]) and the routing dot runs the
+//!   two-chain AVX kernel; on aarch64 the NEON variants run; anywhere
+//!   else the portable auto-vectorized tile and the scalar lane-striped
+//!   dot are the fallback. The table is a set of function pointers, so
+//!   `gemm`, `gemm_tn`/`gemm_nt`, and the tree-descent routing share one
+//!   detection story and benches can label rows with [`KernelTable::isa`].
+//! * **GEMM kind** ([`active`]): which execution strategy `gemm_acc`
+//!   uses above the FLOP threshold — `packed` (panel packing + the
+//!   microkernel from the table), `banded` (the iteration-1 `i-k-j`
+//!   kernel per row band), or `serial` (the seed kernel, no pool).
+//!   `FFF_GEMM_KERNEL=packed|banded|serial` overrides; tests re-enter
+//!   dispatch per case via [`force`]. The old timing calibration is
+//!   gone: with the microkernel written in intrinsics, packed wins on
+//!   both gcc-style and LLVM codegen (EXPERIMENTS.md §Perf iteration 3),
+//!   so the only reason to calibrate — auto-vectorizer variance — no
+//!   longer exists.
+//!
+//! Numerics contracts (what the golden-vector fixtures pin):
+//!
+//! * The 4x8 microkernel accumulates `acc[r][j] = fma(a_r, b_j, acc[r][j])`
+//!   with `p` ascending, then adds the tile into `C` with a separate add.
+//!   [`micro_4x8_ref`] is the scalar `f32::mul_add` replica of exactly
+//!   that order; the AVX2/FMA and NEON kernels are bit-identical to it.
+//!   The portable tile uses separate multiply+add (unfused — what
+//!   auto-vectorizers reliably emit), so fused and portable results may
+//!   differ by final-rounding ulps; *within* one kernel, results are
+//!   bit-identical across band splits and thread counts.
+//! * [`routing_dot`] accumulates into 16 independent lanes
+//!   (`lane = p mod 16`, separate mul and add, never FMA) reduced by a
+//!   fixed pairwise tree. Every ISA performs the same IEEE operations in
+//!   the same order, so routing decisions are bit-identical across x86,
+//!   aarch64, and the scalar fallback — the invariant tree descent rides
+//!   on (a logit on the wrong side of zero would route to a different
+//!   leaf on different hardware).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Microkernel tile: MR rows of `A` × NR columns of `B`.
+pub const MR: usize = 4;
+pub const NR: usize = 8;
+
+/// GEMM execution strategy above the FLOP threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Panel packing + the ISA microkernel from [`table`], row bands on
+    /// the pool.
+    Packed,
+    /// The iteration-1 `i-k-j` kernel per row band on the pool.
+    Banded,
+    /// The seed serial kernel, no pool dispatch at any size.
+    Serial,
+}
+
+impl KernelKind {
+    /// Every kind, in forced-test-matrix order.
+    pub const ALL: [KernelKind; 3] = [KernelKind::Packed, KernelKind::Banded, KernelKind::Serial];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Packed => "packed",
+            KernelKind::Banded => "banded",
+            KernelKind::Serial => "serial",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "packed" => Some(KernelKind::Packed),
+            "banded" => Some(KernelKind::Banded),
+            "serial" => Some(KernelKind::Serial),
+            _ => None,
+        }
+    }
+}
+
+/// Programmatic override (0 = none, else kind discriminant + 1).
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// The GEMM kind the dispatcher uses *now*: [`force`] override first,
+/// then `FFF_GEMM_KERNEL` (read once per process), then `packed`.
+pub fn active() -> KernelKind {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => KernelKind::Packed,
+        2 => KernelKind::Banded,
+        3 => KernelKind::Serial,
+        _ => env_default(),
+    }
+}
+
+/// Force (or clear) the GEMM kind for subsequent dispatches. This is the
+/// re-entry point of the forced-kernel test matrix
+/// ([`crate::testing::check_kernels`]): unlike the env override it can
+/// change per test case within one process. Forcing sections that assert
+/// on [`active`] should hold [`force_lock`] — the override is
+/// process-global and `cargo test` runs tests on concurrent threads.
+pub fn force(kind: Option<KernelKind>) {
+    FORCED.store(kind.map(|k| k as u8 + 1).unwrap_or(0), Ordering::Relaxed);
+}
+
+/// Serializes forcing sections against each other (see [`force`]).
+pub fn force_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn env_default() -> KernelKind {
+    static ENV: OnceLock<KernelKind> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("FFF_GEMM_KERNEL") {
+        Ok(v) => KernelKind::parse(&v).unwrap_or_else(|| {
+            eprintln!("FFF_GEMM_KERNEL: unknown kernel {v:?} (want packed|banded|serial); using packed");
+            KernelKind::Packed
+        }),
+        Err(_) => KernelKind::Packed,
+    })
+}
+
+/// `C[mr×nr] += A-panel · B-panel` over packed panels: `ap` is `kc`
+/// MR-groups (zero-padded), `bp` is `kc` NR-groups (zero-padded), `cv`
+/// starts at the tile's top-left element with row stride `n`.
+pub type Micro4x8 =
+    fn(kc: usize, ap: &[f32], bp: &[f32], cv: &mut [f32], n: usize, mr: usize, nr: usize);
+
+/// The boundary-logit dot product (lane-striped, fixed reduction).
+pub type RoutingDotFn = fn(&[f32], &[f32]) -> f32;
+
+/// The per-process kernel set, selected by runtime CPU detection.
+pub struct KernelTable {
+    /// Detected ISA label for bench rows / diagnostics:
+    /// `avx2-fma`, `avx`, `neon`, or `portable`.
+    pub isa: &'static str,
+    /// Whether [`KernelTable::micro_4x8`] uses fused multiply-add (and is
+    /// therefore bit-identical to [`micro_4x8_ref`] rather than to the
+    /// portable tile).
+    pub fused_tile: bool,
+    /// The packed-path GEMM microkernel.
+    pub micro_4x8: Micro4x8,
+    /// The tree-descent dot kernel (always ≡ [`routing_dot_scalar`]).
+    pub routing_dot: RoutingDotFn,
+}
+
+/// The detected kernel table (runs CPU feature detection on first call).
+pub fn table() -> &'static KernelTable {
+    static TABLE: OnceLock<KernelTable> = OnceLock::new();
+    TABLE.get_or_init(detect)
+}
+
+fn detect() -> KernelTable {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return KernelTable {
+                isa: "avx2-fma",
+                fused_tile: true,
+                micro_4x8: micro_4x8_avx2fma_entry,
+                routing_dot: routing_dot_avx_entry,
+            };
+        }
+        if std::arch::is_x86_feature_detected!("avx") {
+            // AVX without FMA: the routing dot still gets its two 8-wide
+            // chains; the GEMM tile stays on the portable (unfused) form.
+            return KernelTable {
+                isa: "avx",
+                fused_tile: false,
+                micro_4x8: micro_4x8_portable,
+                routing_dot: routing_dot_avx_entry,
+            };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelTable {
+                isa: "neon",
+                fused_tile: true,
+                micro_4x8: micro_4x8_neon_entry,
+                routing_dot: routing_dot_neon_entry,
+            };
+        }
+    }
+    KernelTable {
+        isa: "portable",
+        fused_tile: false,
+        micro_4x8: micro_4x8_portable,
+        routing_dot: routing_dot_scalar,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4x8 GEMM microkernels.
+// ---------------------------------------------------------------------------
+
+/// Scalar `f32::mul_add` replica of the fused microkernel contract —
+/// the documented accumulation order the AVX2/FMA and NEON kernels are
+/// bit-identical to. Slow; exists for golden-vector fixtures and as the
+/// single written-out statement of the tile numerics.
+pub fn micro_4x8_ref(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let a: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
+        let b: &[f32; NR] = bp[p * NR..(p + 1) * NR].try_into().unwrap();
+        for (r, row) in acc.iter_mut().enumerate() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = a[r].mul_add(b[j], *slot);
+            }
+        }
+    }
+    for r in 0..mr {
+        for j in 0..nr {
+            cv[r * n + j] += acc[r][j];
+        }
+    }
+}
+
+/// The portable 4x8 tile: separate multiply+add in a shape LLVM's
+/// auto-vectorizer reliably widens (the `matrixmultiply` idiom). The
+/// fallback where no intrinsic kernel is installed.
+///
+/// Accumulators are four `[f32; NR]` arrays whose addresses are never
+/// taken, so the compiler can keep the tile in SIMD registers (the
+/// prototype showed that forming pointers into them forces a stack
+/// spill — EXPERIMENTS.md §Perf, microkernel lesson #1).
+pub fn micro_4x8_portable(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc0 = [0.0f32; NR];
+    let mut acc1 = [0.0f32; NR];
+    let mut acc2 = [0.0f32; NR];
+    let mut acc3 = [0.0f32; NR];
+    for p in 0..kc {
+        let b: &[f32; NR] = bp[p * NR..(p + 1) * NR].try_into().unwrap();
+        let a: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
+        for (acc, &bc) in acc0.iter_mut().zip(b.iter()) {
+            *acc += a[0] * bc;
+        }
+        for (acc, &bc) in acc1.iter_mut().zip(b.iter()) {
+            *acc += a[1] * bc;
+        }
+        for (acc, &bc) in acc2.iter_mut().zip(b.iter()) {
+            *acc += a[2] * bc;
+        }
+        for (acc, &bc) in acc3.iter_mut().zip(b.iter()) {
+            *acc += a[3] * bc;
+        }
+    }
+    if mr > 0 {
+        for (cj, &s) in cv[..nr].iter_mut().zip(acc0.iter()) {
+            *cj += s;
+        }
+    }
+    if mr > 1 {
+        for (cj, &s) in cv[n..n + nr].iter_mut().zip(acc1.iter()) {
+            *cj += s;
+        }
+    }
+    if mr > 2 {
+        for (cj, &s) in cv[2 * n..2 * n + nr].iter_mut().zip(acc2.iter()) {
+            *cj += s;
+        }
+    }
+    if mr > 3 {
+        for (cj, &s) in cv[3 * n..3 * n + nr].iter_mut().zip(acc3.iter()) {
+            *cj += s;
+        }
+    }
+}
+
+/// Table entry for the AVX2/FMA kernel.
+#[cfg(target_arch = "x86_64")]
+fn micro_4x8_avx2fma_entry(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+) {
+    // Real asserts, not debug: the table field is `pub`, so safe code can
+    // reach this with short panels, and the kernel reads through raw
+    // pointers. One branch per tile is noise next to a kc-deep FMA loop.
+    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR, "micro_4x8: short panel");
+    assert!(mr == 0 || cv.len() >= (mr - 1) * n + nr, "micro_4x8: short C tile");
+    // SAFETY: installed in the table only after runtime avx2+fma
+    // detection; panel/tile bounds asserted above.
+    unsafe { micro_4x8_avx2fma(kc, ap, bp, cv, n, mr, nr) }
+}
+
+/// Explicit 4x8 AVX2/FMA microkernel: per `p`, one 8-wide load of the
+/// `B` group and four broadcast+FMA updates; the tile lives in four ymm
+/// registers for the whole `kc` loop. Bit-identical to
+/// [`micro_4x8_ref`]. Measured 62.8/65.6 GF/s serial at 256³/512³ under
+/// the compiler whose auto-vectorized tile ran at 11.7 GF/s
+/// (EXPERIMENTS.md §Perf iteration 3).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn micro_4x8_avx2fma(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_broadcast_ss, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+    let apt = ap.as_ptr();
+    let bpt = bp.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    for p in 0..kc {
+        let b = _mm256_loadu_ps(bpt.add(p * NR));
+        let a = apt.add(p * MR);
+        acc0 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a), b, acc0);
+        acc1 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(1)), b, acc1);
+        acc2 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(2)), b, acc2);
+        acc3 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(3)), b, acc3);
+    }
+    if nr == NR {
+        // Full-width tile: vector read-modify-write per C row.
+        let c = cv.as_mut_ptr();
+        if mr > 0 {
+            _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), acc0));
+        }
+        if mr > 1 {
+            _mm256_storeu_ps(c.add(n), _mm256_add_ps(_mm256_loadu_ps(c.add(n)), acc1));
+        }
+        if mr > 2 {
+            _mm256_storeu_ps(c.add(2 * n), _mm256_add_ps(_mm256_loadu_ps(c.add(2 * n)), acc2));
+        }
+        if mr > 3 {
+            _mm256_storeu_ps(c.add(3 * n), _mm256_add_ps(_mm256_loadu_ps(c.add(3 * n)), acc3));
+        }
+    } else {
+        // Edge tile: spill the accumulators once, then masked scalar
+        // writeback (the loop above never took their address).
+        let mut t = [[0.0f32; NR]; MR];
+        _mm256_storeu_ps(t[0].as_mut_ptr(), acc0);
+        _mm256_storeu_ps(t[1].as_mut_ptr(), acc1);
+        _mm256_storeu_ps(t[2].as_mut_ptr(), acc2);
+        _mm256_storeu_ps(t[3].as_mut_ptr(), acc3);
+        for (r, row) in t.iter().enumerate().take(mr) {
+            for (j, &s) in row.iter().enumerate().take(nr) {
+                cv[r * n + j] += s;
+            }
+        }
+    }
+}
+
+/// Table entry for the NEON kernel.
+#[cfg(target_arch = "aarch64")]
+fn micro_4x8_neon_entry(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+) {
+    // Real asserts, not debug — see micro_4x8_avx2fma_entry.
+    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR, "micro_4x8: short panel");
+    assert!(mr == 0 || cv.len() >= (mr - 1) * n + nr, "micro_4x8: short C tile");
+    // SAFETY: installed in the table only after runtime neon detection;
+    // panel/tile bounds asserted above.
+    unsafe { micro_4x8_neon(kc, ap, bp, cv, n, mr, nr) }
+}
+
+/// NEON 4x4 microkernel, applied to each 4-column half of the packed
+/// 8-wide `B` panel: per `p`, two 4-wide loads of the `B` group and four
+/// `vfmaq` updates per half (eight q-register accumulators total). Lane
+/// `j` accumulates `fma(a_r, b_j, acc)` with `p` ascending — the same
+/// per-lane order as the AVX2 kernel — so NEON output is bit-identical
+/// to [`micro_4x8_ref`] too.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn micro_4x8_neon(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+) {
+    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32};
+    let apt = ap.as_ptr();
+    let bpt = bp.as_ptr();
+    // acc{r}l = lanes 0..4 of row r, acc{r}h = lanes 4..8.
+    let mut acc0l = vdupq_n_f32(0.0);
+    let mut acc0h = vdupq_n_f32(0.0);
+    let mut acc1l = vdupq_n_f32(0.0);
+    let mut acc1h = vdupq_n_f32(0.0);
+    let mut acc2l = vdupq_n_f32(0.0);
+    let mut acc2h = vdupq_n_f32(0.0);
+    let mut acc3l = vdupq_n_f32(0.0);
+    let mut acc3h = vdupq_n_f32(0.0);
+    for p in 0..kc {
+        let bl = vld1q_f32(bpt.add(p * NR));
+        let bh = vld1q_f32(bpt.add(p * NR + 4));
+        let a = apt.add(p * MR);
+        let a0 = vdupq_n_f32(*a);
+        let a1 = vdupq_n_f32(*a.add(1));
+        let a2 = vdupq_n_f32(*a.add(2));
+        let a3 = vdupq_n_f32(*a.add(3));
+        acc0l = vfmaq_f32(acc0l, a0, bl);
+        acc0h = vfmaq_f32(acc0h, a0, bh);
+        acc1l = vfmaq_f32(acc1l, a1, bl);
+        acc1h = vfmaq_f32(acc1h, a1, bh);
+        acc2l = vfmaq_f32(acc2l, a2, bl);
+        acc2h = vfmaq_f32(acc2h, a2, bh);
+        acc3l = vfmaq_f32(acc3l, a3, bl);
+        acc3h = vfmaq_f32(acc3h, a3, bh);
+    }
+    if nr == NR {
+        let c = cv.as_mut_ptr();
+        if mr > 0 {
+            vst1q_f32(c, vaddq_f32(vld1q_f32(c), acc0l));
+            vst1q_f32(c.add(4), vaddq_f32(vld1q_f32(c.add(4)), acc0h));
+        }
+        if mr > 1 {
+            let c1 = c.add(n);
+            vst1q_f32(c1, vaddq_f32(vld1q_f32(c1), acc1l));
+            vst1q_f32(c1.add(4), vaddq_f32(vld1q_f32(c1.add(4)), acc1h));
+        }
+        if mr > 2 {
+            let c2 = c.add(2 * n);
+            vst1q_f32(c2, vaddq_f32(vld1q_f32(c2), acc2l));
+            vst1q_f32(c2.add(4), vaddq_f32(vld1q_f32(c2.add(4)), acc2h));
+        }
+        if mr > 3 {
+            let c3 = c.add(3 * n);
+            vst1q_f32(c3, vaddq_f32(vld1q_f32(c3), acc3l));
+            vst1q_f32(c3.add(4), vaddq_f32(vld1q_f32(c3.add(4)), acc3h));
+        }
+    } else {
+        let mut t = [[0.0f32; NR]; MR];
+        vst1q_f32(t[0].as_mut_ptr(), acc0l);
+        vst1q_f32(t[0].as_mut_ptr().add(4), acc0h);
+        vst1q_f32(t[1].as_mut_ptr(), acc1l);
+        vst1q_f32(t[1].as_mut_ptr().add(4), acc1h);
+        vst1q_f32(t[2].as_mut_ptr(), acc2l);
+        vst1q_f32(t[2].as_mut_ptr().add(4), acc2h);
+        vst1q_f32(t[3].as_mut_ptr(), acc3l);
+        vst1q_f32(t[3].as_mut_ptr().add(4), acc3h);
+        for (r, row) in t.iter().enumerate().take(mr) {
+            for (j, &s) in row.iter().enumerate().take(nr) {
+                cv[r * n + j] += s;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing dot product (the tree-descent kernel).
+// ---------------------------------------------------------------------------
+
+/// Stripe width of the routing dot: 16 independent accumulator lanes
+/// (two 8-wide SIMD chains on AVX, four 4-wide on NEON), reduced by a
+/// fixed pairwise tree.
+pub const RDOT_LANES: usize = 16;
+
+/// The boundary-logit dot product every tree-descent path uses.
+///
+/// Fixed numerics: products are accumulated into [`RDOT_LANES`]
+/// independent lanes (`lane = p mod 16`) and reduced by a fixed pairwise
+/// tree, using separate multiply and add (never FMA). Every ISA path
+/// performs the *same* IEEE operations in the *same* order, so
+/// [`routing_dot`] is bit-identical across ISAs, batch shapes, and
+/// thread counts — which is what lets `route`, `route_batch`, and the
+/// training model's `leaf_index` guarantee identical descent decisions
+/// (a logit on the wrong side of zero would silently route to a
+/// different leaf).
+#[inline]
+pub fn routing_dot(a: &[f32], b: &[f32]) -> f32 {
+    (table().routing_dot)(a, b)
+}
+
+/// Fixed reduction tree over the 16 accumulator lanes.
+#[inline]
+fn rdot_reduce(acc: &[f32; RDOT_LANES]) -> f32 {
+    let s0 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    let s1 = (acc[4] + acc[5]) + (acc[6] + acc[7]);
+    let s2 = (acc[8] + acc[9]) + (acc[10] + acc[11]);
+    let s3 = (acc[12] + acc[13]) + (acc[14] + acc[15]);
+    (s0 + s1) + (s2 + s3)
+}
+
+/// Scalar replica of the SIMD routing dots (same lanes, same order) —
+/// the portable fallback and the golden-fixture reference.
+pub fn routing_dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = [0.0f32; RDOT_LANES];
+    let mut p = 0;
+    while p + RDOT_LANES <= n {
+        for q in 0..RDOT_LANES {
+            acc[q] += a[p + q] * b[p + q];
+        }
+        p += RDOT_LANES;
+    }
+    while p < n {
+        acc[p % RDOT_LANES] += a[p] * b[p];
+        p += 1;
+    }
+    rdot_reduce(&acc)
+}
+
+/// Table entry for the AVX routing dot.
+#[cfg(target_arch = "x86_64")]
+fn routing_dot_avx_entry(a: &[f32], b: &[f32]) -> f32 {
+    // Real assert: the kernel reads `b` through raw pointers up to
+    // `a.len()`, and this entry is reachable from safe code.
+    assert_eq!(a.len(), b.len(), "routing_dot: length mismatch");
+    // SAFETY: installed in the table only after runtime avx detection;
+    // lengths asserted equal above.
+    unsafe { routing_dot_avx(a, b) }
+}
+
+/// Two 8-wide mul+add chains; bit-identical to [`routing_dot_scalar`]
+/// because each SIMD lane is an independent IEEE add chain and the
+/// writeback feeds the same fixed reduction tree.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn routing_dot_avx(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut p = 0usize;
+    while p + RDOT_LANES <= n {
+        let prod0 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(p)), _mm256_loadu_ps(bp.add(p)));
+        let prod1 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(p + 8)), _mm256_loadu_ps(bp.add(p + 8)));
+        acc0 = _mm256_add_ps(acc0, prod0);
+        acc1 = _mm256_add_ps(acc1, prod1);
+        p += RDOT_LANES;
+    }
+    let mut acc = [0.0f32; RDOT_LANES];
+    _mm256_storeu_ps(acc.as_mut_ptr(), acc0);
+    _mm256_storeu_ps(acc.as_mut_ptr().add(8), acc1);
+    while p < n {
+        acc[p % RDOT_LANES] += a[p] * b[p];
+        p += 1;
+    }
+    rdot_reduce(&acc)
+}
+
+/// Table entry for the NEON routing dot.
+#[cfg(target_arch = "aarch64")]
+fn routing_dot_neon_entry(a: &[f32], b: &[f32]) -> f32 {
+    // Real assert — see routing_dot_avx_entry.
+    assert_eq!(a.len(), b.len(), "routing_dot: length mismatch");
+    // SAFETY: installed in the table only after runtime neon detection;
+    // lengths asserted equal above.
+    unsafe { routing_dot_neon(a, b) }
+}
+
+/// Four 4-wide mul+add chains — NEON q-register lanes 0..4/4..8/8..12/
+/// 12..16 map exactly onto the scalar replica's 16 stripe lanes, so the
+/// aarch64 descent is bit-identical to x86 and to the scalar fallback
+/// (this replaces the scalar stripe-16 replica as the aarch64 path).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn routing_dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut p = 0usize;
+    while p + RDOT_LANES <= n {
+        acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(ap.add(p)), vld1q_f32(bp.add(p))));
+        acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(ap.add(p + 4)), vld1q_f32(bp.add(p + 4))));
+        acc2 = vaddq_f32(acc2, vmulq_f32(vld1q_f32(ap.add(p + 8)), vld1q_f32(bp.add(p + 8))));
+        acc3 = vaddq_f32(acc3, vmulq_f32(vld1q_f32(ap.add(p + 12)), vld1q_f32(bp.add(p + 12))));
+        p += RDOT_LANES;
+    }
+    let mut acc = [0.0f32; RDOT_LANES];
+    vst1q_f32(acc.as_mut_ptr(), acc0);
+    vst1q_f32(acc.as_mut_ptr().add(4), acc1);
+    vst1q_f32(acc.as_mut_ptr().add(8), acc2);
+    vst1q_f32(acc.as_mut_ptr().add(12), acc3);
+    while p < n {
+        acc[p % RDOT_LANES] += a[p] * b[p];
+        p += 1;
+    }
+    rdot_reduce(&acc)
+}
+
+/// Prefetch a weight row the descent will need a few samples from now.
+///
+/// The level-synchronous router knows every sample's next node row up
+/// front (unlike the dependent per-sample walk, whose next address exists
+/// only after the current dot resolves), so it can hide DRAM latency on
+/// deep, larger-than-cache levels. No-op where no prefetch intrinsic is
+/// wired up.
+#[inline]
+pub fn prefetch_slice(row: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T1};
+        let ptr = row.as_ptr();
+        let mut p = 0usize;
+        // One prefetch per 64-byte line.
+        while p < row.len() {
+            // SAFETY: `ptr + p` stays inside `row`; prefetch cannot fault.
+            unsafe { _mm_prefetch::<_MM_HINT_T1>(ptr.add(p) as *const i8) };
+            p += 16;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = row;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("fast"), None);
+    }
+
+    #[test]
+    fn force_overrides_and_clears() {
+        let _serialize = force_lock();
+        let before = active();
+        force(Some(KernelKind::Banded));
+        assert_eq!(active(), KernelKind::Banded);
+        force(Some(KernelKind::Serial));
+        assert_eq!(active(), KernelKind::Serial);
+        force(None);
+        assert_eq!(active(), before);
+    }
+
+    #[test]
+    fn table_is_consistent() {
+        let t = table();
+        assert!(["avx2-fma", "avx", "neon", "portable"].contains(&t.isa));
+        // The microkernel entry must match the fused flag's contract on a
+        // probe tile: fused ≡ mul_add replica, unfused ≡ portable tile.
+        let mut rng = Rng::seed_from_u64(9);
+        let kc = 37;
+        let mut ap = vec![0.0f32; kc * MR];
+        let mut bp = vec![0.0f32; kc * NR];
+        rng.fill_normal(&mut ap, 0.0, 1.0);
+        rng.fill_normal(&mut bp, 0.0, 1.0);
+        let mut got = vec![0.0f32; MR * NR];
+        (t.micro_4x8)(kc, &ap, &bp, &mut got, NR, MR, NR);
+        let mut want = vec![0.0f32; MR * NR];
+        if t.fused_tile {
+            micro_4x8_ref(kc, &ap, &bp, &mut want, NR, MR, NR);
+        } else {
+            micro_4x8_portable(kc, &ap, &bp, &mut want, NR, MR, NR);
+        }
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "microkernel drifted from its {} contract",
+            if t.fused_tile { "fused" } else { "portable" }
+        );
+    }
+
+    #[test]
+    fn routing_dot_is_bit_identical_to_scalar_replica() {
+        // The dispatched kernel (SIMD where available) must reproduce the
+        // scalar lane-striped replica bit for bit on every length,
+        // including ragged tails — routing correctness rides on it.
+        let mut rng = Rng::seed_from_u64(77);
+        let mut a = vec![0.0f32; 301];
+        let mut b = vec![0.0f32; 301];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        for n in 1..=301 {
+            let got = routing_dot(&a[..n], &b[..n]);
+            let want = routing_dot_scalar(&a[..n], &b[..n]);
+            assert_eq!(got.to_bits(), want.to_bits(), "lane drift at n={n}");
+        }
+    }
+
+    #[test]
+    fn routing_dot_matches_reference_numerically() {
+        let mut rng = Rng::seed_from_u64(78);
+        for &n in &[1usize, 5, 16, 17, 64, 300] {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            rng.fill_normal(&mut a, 0.0, 1.0);
+            rng.fill_normal(&mut b, 0.0, 1.0);
+            let reference: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = routing_dot(&a, &b) as f64;
+            assert!((got - reference).abs() < 1e-3, "n={n}: {got} vs {reference}");
+        }
+    }
+
+    #[test]
+    fn micro_ref_and_portable_agree_when_products_are_exact() {
+        // With few-significand-bit inputs every product is exact, so the
+        // fused and unfused tiles must coincide bit for bit — a cheap
+        // cross-check that the two replicas implement the same loop.
+        let kc = 11;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| (i % 7) as f32 - 3.0).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| (i % 5) as f32 * 0.25 - 0.5).collect();
+        let mut c1 = vec![0.0f32; MR * 10];
+        let mut c2 = vec![0.0f32; MR * 10];
+        micro_4x8_ref(kc, &ap, &bp, &mut c1, 10, 3, 7);
+        micro_4x8_portable(kc, &ap, &bp, &mut c2, 10, 3, 7);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn prefetch_slice_is_a_safe_noop() {
+        // Prefetch has no observable effect; this just exercises the
+        // pointer arithmetic on ragged lengths under Miri-style review.
+        let v = vec![1.0f32; 131];
+        prefetch_slice(&v);
+        prefetch_slice(&v[..1]);
+        prefetch_slice(&[]);
+    }
+}

@@ -2,18 +2,22 @@
 //! linear-algebra and elementwise kernels the native engine needs.
 //!
 //! The offline registry has no `ndarray`/`nalgebra`, so this is built from
-//! scratch. The GEMM lives in [`gemm`] and is one of the §Perf targets
-//! (see EXPERIMENTS.md §Perf); large products run multi-threaded on the
-//! [`pool`] work-stealing thread pool.
+//! scratch. The GEMM drivers live in [`gemm`] and are one of the §Perf
+//! targets (see EXPERIMENTS.md §Perf); the machine kernels they run —
+//! explicit AVX2/FMA and NEON microkernels plus the routing dot — are
+//! detected and dispatched by [`kernels`], and large products run
+//! multi-threaded on the [`pool`] work-stealing thread pool.
 
 mod gemm;
+pub mod kernels;
 mod ops;
 pub mod pool;
 
 pub use gemm::{
-    axpy_slice, dot, gemm, gemm_acc, gemm_bias, gemm_nt, gemm_packed, gemm_scalar, gemm_tn,
-    parallel_flop_threshold, prefetch_slice, routing_dot, set_parallel_flop_threshold,
+    gemm, gemm_acc, gemm_bias, gemm_nt, gemm_packed, gemm_scalar, gemm_tn,
+    parallel_flop_threshold, set_parallel_flop_threshold,
 };
+pub use kernels::{prefetch_slice, routing_dot};
 pub use ops::*;
 
 /// Row-major 2-D `f32` tensor. Rows index samples in all batched code.

@@ -138,6 +138,42 @@ pub fn mean(xs: &[f32]) -> f32 {
     xs.iter().sum::<f32>() / xs.len() as f32
 }
 
+/// Dot product of two equal-length slices (4-stripe unrolled). General
+/// BLAS-1 helper; the tree descent uses the stricter
+/// [`super::kernels::routing_dot`] instead, whose lane order is pinned
+/// across ISAs.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let n = a.len();
+    let mut p = 0;
+    while p + 4 <= n {
+        acc0 += a[p] * b[p];
+        acc1 += a[p + 1] * b[p + 1];
+        acc2 += a[p + 2] * b[p + 2];
+        acc3 += a[p + 3] * b[p + 3];
+        p += 4;
+    }
+    while p < n {
+        acc0 += a[p] * b[p];
+        p += 1;
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+/// `y += alpha * x` over slices.
+#[inline]
+pub fn axpy_slice(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,5 +256,20 @@ mod tests {
         let mut m = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]);
         relu_inplace(&mut m);
         assert_eq!(m.as_slice(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn dot_matches_sum() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = vec![5.0f32, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = vec![1.0f32, -2.0, 0.5];
+        let mut y = vec![1.0f32, 1.0, 1.0];
+        axpy_slice(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, -3.0, 2.0]);
     }
 }

@@ -280,6 +280,23 @@ pub fn set_current(pool: Option<Arc<ThreadPool>>) {
     CURRENT.with(|c| *c.borrow_mut() = pool);
 }
 
+/// Run `f` with this thread's pool pinned to a fresh `threads`-wide pool,
+/// restoring the previous pinning afterwards — also when `f` panics, so a
+/// failing test cannot leak its pool into later tests on the same thread.
+/// Test/bench helper: forces a thread count without touching the global
+/// pool other threads share.
+pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Arc<ThreadPool>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_current(self.0.take());
+        }
+    }
+    let _restore = Restore(CURRENT.with(|c| c.borrow().clone()));
+    set_current(Some(Arc::new(ThreadPool::new(threads))));
+    f()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -398,5 +415,15 @@ mod tests {
         set_current(None);
         // Back to the global pool (whatever its size is).
         assert!(current().threads() >= 1);
+    }
+
+    #[test]
+    fn with_threads_scopes_and_restores_pinning() {
+        let outer = Arc::new(ThreadPool::new(3));
+        set_current(Some(outer.clone()));
+        let inner = with_threads(2, || current().threads());
+        assert_eq!(inner, 2);
+        assert_eq!(current().threads(), 3, "previous pinning must be restored");
+        set_current(None);
     }
 }

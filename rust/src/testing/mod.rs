@@ -9,4 +9,4 @@
 
 pub mod prop;
 
-pub use prop::{check, check_with, Config};
+pub use prop::{check, check_kernels, check_with, Config, KernelStateGuard};

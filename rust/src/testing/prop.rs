@@ -1,6 +1,7 @@
 //! Property-check driver.
 
 use crate::rng::Rng;
+use crate::tensor::kernels::{self, KernelKind};
 
 /// Property-run configuration.
 #[derive(Clone, Copy, Debug)]
@@ -61,6 +62,75 @@ pub fn check_with<T: std::fmt::Debug>(
     }
 }
 
+/// Scoped reset of the process-global kernel knobs forced-kernel
+/// sections mutate: zeroes the parallel-FLOP threshold on construction
+/// (so every GEMM takes the dispatched path), and on drop — panic
+/// included — clears any forced kernel and restores the threshold, so a
+/// failing test cannot leak either into unrelated tests. Construct only
+/// while [`kernels::force_lock`] is held (or in a single-threaded
+/// process such as a bench binary), so save/restore pairs from
+/// concurrent tests never interleave. The single shared implementation
+/// behind [`check_kernels`], the forcing unit tests, and the bench
+/// suite's kernel sweep.
+pub struct KernelStateGuard {
+    saved_threshold: usize,
+}
+
+impl KernelStateGuard {
+    pub fn zero_threshold() -> KernelStateGuard {
+        let saved_threshold = crate::tensor::parallel_flop_threshold();
+        crate::tensor::set_parallel_flop_threshold(0);
+        KernelStateGuard { saved_threshold }
+    }
+}
+
+impl Drop for KernelStateGuard {
+    fn drop(&mut self) {
+        kernels::force(None);
+        crate::tensor::set_parallel_flop_threshold(self.saved_threshold);
+    }
+}
+
+/// The forced-kernel test matrix: run `prop` against `cases` generated
+/// inputs × every [`KernelKind`], re-entering the GEMM dispatch per case
+/// via [`kernels::force`] — so `cargo test` exercises the packed, banded,
+/// and serial paths on every property, not just whichever kind
+/// `FFF_GEMM_KERNEL` (or the default) selects for the process. For the
+/// duration, [`kernels::force_lock`] is held and the parallel-FLOP
+/// threshold is zeroed (both restored on exit, panic included); tests
+/// that assert bitwise equality between two dispatched computations must
+/// hold the same lock, or a concurrent matrix could flip the kernel
+/// between their two halves.
+pub fn check_kernels<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T, KernelKind) -> Result<(), String>,
+) {
+    let _serialize = kernels::force_lock();
+    let _guard = KernelStateGuard::zero_threshold();
+    let config = Config::default();
+    let mut rng = Rng::seed_from_u64(config.seed);
+    for case in 0..config.cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        for kind in KernelKind::ALL {
+            kernels::force(Some(kind));
+            let result = prop(&input, kind);
+            kernels::force(None);
+            if let Err(msg) = result {
+                panic!(
+                    "property '{name}' [kernel {}] failed at case {case}/{} (seed {:#x}):\n  \
+                     input: {input:?}\n  error: {msg}\n  reproduce with FFF_PROP_SEED={}",
+                    kind.name(),
+                    config.cases,
+                    config.seed,
+                    config.seed
+                );
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,6 +150,39 @@ mod tests {
     #[should_panic(expected = "property 'always fails'")]
     fn failing_property_panics_with_report() {
         check("always fails", |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn check_kernels_visits_every_kind_per_case() {
+        let mut seen: Vec<KernelKind> = Vec::new();
+        check_kernels(
+            "kind sweep",
+            |rng| rng.below(1000),
+            |_, kind| {
+                assert_eq!(kernels::active(), kind, "dispatch not re-entered for {kind:?}");
+                seen.push(kind);
+                Ok(())
+            },
+        );
+        let per_case = KernelKind::ALL.len();
+        assert_eq!(seen.len() % per_case, 0);
+        assert_eq!(&seen[..per_case], &KernelKind::ALL);
+    }
+
+    #[test]
+    #[should_panic(expected = "[kernel banded]")]
+    fn check_kernels_reports_failing_kind() {
+        check_kernels(
+            "banded fails",
+            |rng| rng.below(10),
+            |_, kind| {
+                if kind == KernelKind::Banded {
+                    Err("nope".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
     }
 
     #[test]

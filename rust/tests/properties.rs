@@ -5,7 +5,7 @@ use fastfeedforward::nn::loss::cross_entropy;
 use fastfeedforward::nn::{Fff, FffConfig, FffInfer, Model};
 use fastfeedforward::rng::Rng;
 use fastfeedforward::tensor::Matrix;
-use fastfeedforward::testing::check;
+use fastfeedforward::testing::{check, check_kernels};
 
 fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
     let mut m = Matrix::zeros(rows, cols);
@@ -268,6 +268,11 @@ fn prop_route_batch_thread_count_invariant() {
     use fastfeedforward::tensor::pool::{set_current, ThreadPool};
     // Pool determinism: the same leaf assignment at 1/2/4 threads, with
     // the FLOP threshold forced to zero so batches actually fan out.
+    // Serialized with the forced-kernel matrix: this test mutates the
+    // process-global threshold and asserts exact equality; the guard
+    // restores the threshold even if a case panics.
+    let _serialize = fastfeedforward::tensor::kernels::force_lock();
+    let _guard = fastfeedforward::testing::KernelStateGuard::zero_threshold();
     check(
         "route_batch identical at 1/2/4 threads",
         |rng| {
@@ -282,15 +287,12 @@ fn prop_route_batch_thread_count_invariant() {
             let mut rng = Rng::seed_from_u64(seed);
             let model = FffInfer::random(&mut rng, dim_in, 3, depth, 2, 1 << depth.min(6));
             let x = rand_matrix(&mut rng, batch, dim_in);
-            let saved = fastfeedforward::tensor::parallel_flop_threshold();
-            fastfeedforward::tensor::set_parallel_flop_threshold(0);
             let mut results: Vec<Vec<usize>> = Vec::new();
             for threads in [1usize, 2, 4] {
                 set_current(Some(std::sync::Arc::new(ThreadPool::new(threads))));
                 results.push(model.route_batch(&x));
                 set_current(None);
             }
-            fastfeedforward::tensor::set_parallel_flop_threshold(saved);
             for (i, r) in results.iter().enumerate().skip(1) {
                 if r != &results[0] {
                     return Err(format!(
@@ -315,6 +317,10 @@ fn prop_route_batch_thread_count_invariant() {
 fn prop_infer_batch_routed_consistent_with_infer_one() {
     // The serving split (route_batch + infer_batch_routed) must match the
     // single-sample hot path on both the sparse and grouped branches.
+    // The routed-vs-auto comparison is bitwise, so hold the kernel lock:
+    // a concurrent forced-kernel matrix flipping the dispatch between
+    // the two computations would make them differ by accumulation order.
+    let _serialize = fastfeedforward::tensor::kernels::force_lock();
     check(
         "infer_batch(_routed) ≡ infer_one loop",
         |rng| {
@@ -389,7 +395,10 @@ fn prop_transposition_preserves_mixture_normalization() {
 }
 
 // ---------------------------------------------------------------------------
-// Threaded GEMM engine properties (PR: packed parallel GEMM + pooled FFF).
+// Threaded GEMM engine properties, run as a forced-kernel matrix: every
+// case re-enters dispatch per KernelKind (packed | banded | serial), so
+// `cargo test` exercises all three strategies — including the intrinsic
+// microkernel where detected — not just the process default.
 // ---------------------------------------------------------------------------
 
 /// f64 reference product, the oracle every GEMM path must agree with.
@@ -429,60 +438,129 @@ fn gen_gemm_case(rng: &mut Rng) -> GemmCase {
 }
 
 #[test]
-fn prop_threaded_gemm_matches_naive_reference() {
-    use fastfeedforward::tensor::pool::{set_current, ThreadPool};
+fn prop_forced_kernel_gemm_matches_naive_reference() {
+    use fastfeedforward::tensor::kernels::KernelKind;
+    use fastfeedforward::tensor::pool::with_threads;
     use fastfeedforward::tensor::{gemm, gemm_packed, gemm_scalar};
-    check("pooled gemm ≡ naive within 1e-3 on ragged shapes", gen_gemm_case, |case| {
-        let mut rng = Rng::seed_from_u64(case.seed);
-        let a = rand_matrix(&mut rng, case.m, case.k);
-        let b = rand_matrix(&mut rng, case.k, case.n);
-        let reference = naive_gemm(&a, &b);
-        set_current(Some(std::sync::Arc::new(ThreadPool::new(case.threads))));
-        let packed = gemm_packed(&a, &b);
-        let auto = gemm(&a, &b);
-        set_current(None);
-        let scalar = gemm_scalar(&a, &b);
-        for (name, got) in [("packed", &packed), ("auto", &auto), ("scalar", &scalar)] {
-            let diff = got.max_abs_diff(&reference);
+    // check_kernels zeroes the FLOP threshold for the run, so every case
+    // takes the dispatched path. The kind-invariant work — inputs, the
+    // f64 oracle, and the packed-direct/scalar checks — is done once per
+    // case (on the matrix's first kind) and reused across kinds.
+    let mut per_case: Option<(Matrix, Matrix, Matrix)> = None;
+    check_kernels(
+        "forced-kernel gemm ≡ naive within 1e-3 on ragged shapes",
+        gen_gemm_case,
+        |case, kind| {
+            if kind == KernelKind::ALL[0] {
+                let mut rng = Rng::seed_from_u64(case.seed);
+                let a = rand_matrix(&mut rng, case.m, case.k);
+                let b = rand_matrix(&mut rng, case.k, case.n);
+                let reference = naive_gemm(&a, &b);
+                let packed = with_threads(case.threads, || gemm_packed(&a, &b));
+                let scalar = gemm_scalar(&a, &b);
+                for (name, got) in [("packed-direct", &packed), ("scalar", &scalar)] {
+                    let diff = got.max_abs_diff(&reference);
+                    if diff > 1e-3 {
+                        return Err(format!(
+                            "{name} path diff {diff} at {}x{}x{} (threads {})",
+                            case.m, case.k, case.n, case.threads
+                        ));
+                    }
+                }
+                per_case = Some((a, b, reference));
+            }
+            let (a, b, reference) = per_case.as_ref().expect("per-case state set on first kind");
+            let forced = with_threads(case.threads, || gemm(a, b));
+            let diff = forced.max_abs_diff(reference);
             if diff > 1e-3 {
                 return Err(format!(
-                    "{name} path diff {diff} at {}x{}x{} (threads {})",
-                    case.m, case.k, case.n, case.threads
+                    "{} path diff {diff} at {}x{}x{} (threads {})",
+                    kind.name(),
+                    case.m,
+                    case.k,
+                    case.n,
+                    case.threads
                 ));
             }
-        }
-        Ok(())
-    });
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_forced_kernel_parallel_is_bit_identical_to_serial() {
+    use fastfeedforward::tensor::pool::with_threads;
+    use fastfeedforward::tensor::gemm;
+    // The acceptance invariant: for EVERY kernel kind, pooled output is
+    // bit-identical to the same kind's 1-thread output at every thread
+    // count (band boundaries never change per-element accumulation
+    // order; `serial` never fans out at all).
+    check_kernels(
+        "forced-kernel gemm bit-identical across 1/2/4/8 threads",
+        |rng| {
+            let mut c = gen_gemm_case(rng);
+            c.m = 8 + c.m; // enough rows to split into several bands
+            c
+        },
+        |case, kind| {
+            let mut rng = Rng::seed_from_u64(case.seed);
+            let a = rand_matrix(&mut rng, case.m, case.k);
+            let b = rand_matrix(&mut rng, case.k, case.n);
+            let serial = with_threads(1, || gemm(&a, &b));
+            for threads in [2usize, 4, 8] {
+                let c = with_threads(threads, || gemm(&a, &b));
+                if c != serial {
+                    return Err(format!(
+                        "kernel {} drifted between 1 and {threads} threads at {}x{}x{}",
+                        kind.name(),
+                        case.m,
+                        case.k,
+                        case.n
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
 fn prop_gemm_transposed_variants_match_naive() {
-    use fastfeedforward::tensor::pool::{set_current, ThreadPool};
+    use fastfeedforward::tensor::pool::with_threads;
     use fastfeedforward::tensor::{gemm_nt, gemm_tn};
-    check("pooled gemm_tn/gemm_nt ≡ naive within 1e-3", gen_gemm_case, |case| {
-        let mut rng = Rng::seed_from_u64(case.seed);
-        // gemm_tn: A is k×m with ReLU-style sparsity to exercise both the
-        // skip loop and the dense loop.
-        let mut at = rand_matrix(&mut rng, case.k, case.m);
-        for v in at.as_mut_slice().iter_mut() {
-            if *v < 0.0 {
-                *v = 0.0;
+    // The transposed variants share the dispatch story: `serial` pins
+    // them to their serial bands, packed/banded band-dispatch on the
+    // pool. All must match the oracle.
+    // Inputs and the f64 oracles are kind-invariant: computed once per
+    // case on the matrix's first kind, reused for the other two.
+    let mut per_case: Option<(Matrix, Matrix, Matrix, Matrix, Matrix, Matrix)> = None;
+    check_kernels("pooled gemm_tn/gemm_nt ≡ naive within 1e-3", gen_gemm_case, |case, kind| {
+        use fastfeedforward::tensor::kernels::KernelKind;
+        if kind == KernelKind::ALL[0] {
+            let mut rng = Rng::seed_from_u64(case.seed);
+            // gemm_tn: A is k×m with ReLU-style sparsity to exercise
+            // both the skip loop and the dense loop.
+            let mut at = rand_matrix(&mut rng, case.k, case.m);
+            for v in at.as_mut_slice().iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
             }
+            let b = rand_matrix(&mut rng, case.k, case.n);
+            let a_nt = rand_matrix(&mut rng, case.m, case.k);
+            let b_nt = rand_matrix(&mut rng, case.n, case.k);
+            let tn_ref = naive_gemm(&at.transpose(), &b);
+            let nt_ref = naive_gemm(&a_nt, &b_nt.transpose());
+            per_case = Some((at, b, a_nt, b_nt, tn_ref, nt_ref));
         }
-        let b = rand_matrix(&mut rng, case.k, case.n);
-        let a_nt = rand_matrix(&mut rng, case.m, case.k);
-        let b_nt = rand_matrix(&mut rng, case.n, case.k);
-        set_current(Some(std::sync::Arc::new(ThreadPool::new(case.threads))));
-        let tn = gemm_tn(&at, &b);
-        let nt = gemm_nt(&a_nt, &b_nt);
-        set_current(None);
-        let tn_ref = naive_gemm(&at.transpose(), &b);
-        let nt_ref = naive_gemm(&a_nt, &b_nt.transpose());
-        if tn.max_abs_diff(&tn_ref) > 1e-3 {
-            return Err(format!("gemm_tn diff {}", tn.max_abs_diff(&tn_ref)));
+        let (at, b, a_nt, b_nt, tn_ref, nt_ref) =
+            per_case.as_ref().expect("per-case state set on first kind");
+        let (tn, nt) = with_threads(case.threads, || (gemm_tn(at, b), gemm_nt(a_nt, b_nt)));
+        if tn.max_abs_diff(tn_ref) > 1e-3 {
+            return Err(format!("gemm_tn diff {}", tn.max_abs_diff(tn_ref)));
         }
-        if nt.max_abs_diff(&nt_ref) > 1e-3 {
-            return Err(format!("gemm_nt diff {}", nt.max_abs_diff(&nt_ref)));
+        if nt.max_abs_diff(nt_ref) > 1e-3 {
+            return Err(format!("gemm_nt diff {}", nt.max_abs_diff(nt_ref)));
         }
         Ok(())
     });
@@ -490,10 +568,12 @@ fn prop_gemm_transposed_variants_match_naive() {
 
 #[test]
 fn prop_grouped_parallel_infer_matches_infer_one_depths_1_to_8() {
-    use fastfeedforward::tensor::pool::{set_current, ThreadPool};
-    // Depths 1..=8, forced through the pooled grouped path: the parallel
-    // leaf buckets must reproduce the per-sample FORWARD_I exactly.
-    check(
+    use fastfeedforward::tensor::pool::with_threads;
+    // Depths 1..=8, forced through the pooled grouped path under every
+    // kernel kind: the parallel leaf buckets (whose leaf GEMMs run on
+    // the forced kernel) must reproduce the per-sample FORWARD_I.
+    let mut per_case: Option<(FffInfer, Matrix, Matrix)> = None;
+    check_kernels(
         "infer_batch_grouped (pooled) ≡ infer_one loop",
         |rng| {
             (
@@ -506,25 +586,32 @@ fn prop_grouped_parallel_infer_matches_infer_one_depths_1_to_8() {
                 rng.next_u64(),
             )
         },
-        |&(depth, leaf, dim_in, dim_out, batch, threads, seed)| {
-            let mut rng = Rng::seed_from_u64(seed);
-            let model = FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, 1 << depth.min(6));
-            let x = rand_matrix(&mut rng, batch, dim_in);
-            let mut per_sample = Matrix::zeros(batch, dim_out);
-            for r in 0..batch {
-                model.infer_one(x.row(r), per_sample.row_mut(r));
+        |&(depth, leaf, dim_in, dim_out, batch, threads, seed), kind| {
+            use fastfeedforward::tensor::kernels::KernelKind;
+            // Model, inputs, and the per-sample oracle are kind-invariant
+            // — built once per case on the matrix's first kind.
+            if kind == KernelKind::ALL[0] {
+                let mut rng = Rng::seed_from_u64(seed);
+                let model =
+                    FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, 1 << depth.min(6));
+                let x = rand_matrix(&mut rng, batch, dim_in);
+                let mut per_sample = Matrix::zeros(batch, dim_out);
+                for r in 0..batch {
+                    model.infer_one(x.row(r), per_sample.row_mut(r));
+                }
+                per_case = Some((model, x, per_sample));
             }
-            // Force the pooled dispatch regardless of problem size.
-            let saved = fastfeedforward::tensor::parallel_flop_threshold();
-            fastfeedforward::tensor::set_parallel_flop_threshold(0);
-            set_current(Some(std::sync::Arc::new(ThreadPool::new(threads))));
-            let grouped = model.infer_batch_grouped(&x);
-            set_current(None);
-            fastfeedforward::tensor::set_parallel_flop_threshold(saved);
-            let diff = grouped.max_abs_diff(&per_sample);
+            let (model, x, per_sample) =
+                per_case.as_ref().expect("per-case state set on first kind");
+            // check_kernels already zeroed the FLOP threshold, so the
+            // grouped path's leaf GEMMs take the pooled dispatch.
+            let grouped = with_threads(threads, || model.infer_batch_grouped(x));
+            let diff = grouped.max_abs_diff(per_sample);
             if diff > 1e-5 {
                 return Err(format!(
-                    "diff {diff} at depth {depth} leaf {leaf} batch {batch} threads {threads}"
+                    "diff {diff} at depth {depth} leaf {leaf} batch {batch} threads {threads} \
+                     kernel {}",
+                    kind.name()
                 ));
             }
             Ok(())
