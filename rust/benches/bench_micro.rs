@@ -6,8 +6,11 @@
 //! The run starts with the **gemm/fff_infer thread-scaling suite** (fixed
 //! seeds, 1/2/4/8 threads, every GEMM kernel kind forced in turn and each
 //! row labelled with the kernel + detected ISA) plus the
-//! **routing-descent suite** (depths 4–15, 1/2/4 threads) and records
-//! both to `BENCH_gemm.json` (schema v3) so the perf trajectory is
+//! **fused-vs-separate epilogue suite** (bias+ReLU in the store phase vs
+//! an elementwise pass), the **scratch-arena suite** (retained
+//! `InferScratch` vs the allocating wrappers at batch 4096, depth 8),
+//! and the **routing-descent suite** (depths 4–15, 1/2/4 threads), all
+//! recorded to `BENCH_gemm.json` (schema v4) so the perf trajectory is
 //! tracked PR over PR:
 //!
 //! ```text
@@ -18,9 +21,10 @@
 
 use fastfeedforward::bench::{time_budgeted, time_fn, Table};
 use fastfeedforward::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, NativeFffBackend};
-use fastfeedforward::nn::{Ff, FffInfer};
+use fastfeedforward::nn::{Ff, FffInfer, InferScratch};
 use fastfeedforward::rng::Rng;
-use fastfeedforward::tensor::{gemm, gemm_scalar, kernels, pool, Matrix};
+use fastfeedforward::tensor::kernels::relu_store;
+use fastfeedforward::tensor::{gemm, gemm_bias_relu, gemm_scalar, kernels, pool, Matrix};
 use std::time::Duration;
 
 /// Thread counts the scaling suite sweeps.
@@ -95,6 +99,115 @@ fn routing_suite(quick: bool) -> Vec<String> {
                 json_num(t.mean_ms()),
                 json_num(t.mean_us() / batch as f64),
                 json_num(speedup),
+            ));
+        }
+    }
+    pool::set_global_threads(pool::default_global_threads());
+    table.print();
+    rows
+}
+
+/// Fused-vs-separate epilogue suite: `gemm_bias_relu` (bias+ReLU in the
+/// store phase) against `gemm` + an elementwise bias/ReLU pass, on a
+/// square shape and the thin-`k` leaf-GEMM shape where the saved passes
+/// matter. Returns the `epilogue` rows for `BENCH_gemm.json`.
+fn epilogue_suite(quick: bool) -> Vec<String> {
+    let mut table = Table::new("fused vs separate epilogue", &["name", "time", "derived"]);
+    let mut rows: Vec<String> = Vec::new();
+    let budget = Duration::from_millis(if quick { 120 } else { 400 });
+    let shapes: &[(usize, usize, usize)] =
+        if quick { &[(512, 16, 256)] } else { &[(256, 256, 256), (4096, 16, 256)] };
+    // Zero threshold so the labelled kernel really runs at every shape;
+    // guard restores it (and clears the forced kind) on exit.
+    let _guard = fastfeedforward::testing::KernelStateGuard::zero_threshold();
+    let isa = kernels::table().isa;
+    for &(m, k, n) in shapes {
+        let mut rng = Rng::seed_from_u64(99);
+        let mut a = Matrix::zeros(m, k);
+        let mut b = Matrix::zeros(k, n);
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(a.as_mut_slice(), 0.0, 1.0);
+        rng.fill_normal(b.as_mut_slice(), 0.0, 1.0);
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        kernels::force(Some(kernels::KernelKind::Packed));
+        for &threads in &[1usize, 2] {
+            pool::set_global_threads(threads);
+            let t_unfused = time_budgeted(budget, 3, 1000, || {
+                let mut c = gemm(&a, &b);
+                for r in 0..c.rows() {
+                    for (j, v) in c.row_mut(r).iter_mut().enumerate() {
+                        *v = relu_store(*v + bias[j]);
+                    }
+                }
+                std::hint::black_box(c);
+            });
+            let t_fused = time_budgeted(budget, 3, 1000, || {
+                std::hint::black_box(gemm_bias_relu(&a, &b, &bias));
+            });
+            let speedup = t_unfused.mean.as_secs_f64() / t_fused.mean.as_secs_f64();
+            table.row(vec![
+                format!("bias_relu {m}x{k}x{n} t={threads} fused"),
+                format!("{:.3} ms", t_fused.mean_ms()),
+                format!("{speedup:.2}x vs separate pass ({:.3} ms)", t_unfused.mean_ms()),
+            ]);
+            for (fused, t) in [(false, &t_unfused), (true, &t_fused)] {
+                rows.push(format!(
+                    "{{\"shape\": \"{m}x{k}x{n}\", \"epilogue\": \"bias_relu\", \
+                     \"fused\": {fused}, \"kernel\": \"packed\", \"isa\": \"{isa}\", \
+                     \"threads\": {threads}, \"ms\": {}, \"speedup_vs_unfused\": {}}}",
+                    json_num(t.mean_ms()),
+                    json_num(if fused { speedup } else { 1.0 }),
+                ));
+            }
+        }
+        kernels::force(None);
+    }
+    pool::set_global_threads(pool::default_global_threads());
+    table.print();
+    rows
+}
+
+/// Scratch-arena suite: steady-state batched serving with retained
+/// [`InferScratch`]/output (arena on) against the allocating wrappers
+/// (arena off), batch 4096 at depth 8 — the ISSUE-4 acceptance shape.
+/// Both sides share one precomputed descent so the rows isolate the
+/// bucket-engine cost. Returns the `scratch` rows for `BENCH_gemm.json`.
+fn scratch_suite(quick: bool) -> Vec<String> {
+    let mut table = Table::new("scratch arena on/off", &["name", "time", "derived"]);
+    let mut rows: Vec<String> = Vec::new();
+    let budget = Duration::from_millis(if quick { 120 } else { 400 });
+    let (dim_in, dim_out, leaf) = (256usize, 256usize, 16usize);
+    let (depth, batch) = if quick { (6usize, 1024usize) } else { (8usize, 4096usize) };
+    let mut rng = Rng::seed_from_u64(17);
+    let model = FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, 1 << depth);
+    let mut x = Matrix::zeros(batch, dim_in);
+    rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+    let leaf_of = model.route_batch(&x);
+    for &threads in &[1usize, 2, 4] {
+        pool::set_global_threads(threads);
+        let t_alloc = time_budgeted(budget, 3, 1000, || {
+            std::hint::black_box(model.infer_batch_routed(&x, &leaf_of));
+        });
+        let mut scratch = InferScratch::new();
+        let mut y = Matrix::zeros(0, 0);
+        let t_arena = time_budgeted(budget, 3, 1000, || {
+            model.infer_batch_routed_into(&x, &leaf_of, &mut scratch, &mut y);
+            std::hint::black_box(&y);
+        });
+        let speedup = t_alloc.mean.as_secs_f64() / t_arena.mean.as_secs_f64();
+        table.row(vec![
+            format!("serve d={depth} l={leaf} b={batch} t={threads} arena"),
+            format!("{:.3} ms", t_arena.mean_ms()),
+            format!("{speedup:.2}x vs allocating ({:.3} ms)", t_alloc.mean_ms()),
+        ]);
+        for (arena, t) in [(false, &t_alloc), (true, &t_arena)] {
+            rows.push(format!(
+                "{{\"depth\": {depth}, \"leaf\": {leaf}, \"dim\": {dim_in}, \
+                 \"batch\": {batch}, \"arena\": {arena}, \"threads\": {threads}, \
+                 \"ms\": {}, \"samples_per_ms\": {}, \"speedup_vs_alloc\": {}}}",
+                json_num(t.mean_ms()),
+                json_num(batch as f64 / t.mean_ms()),
+                json_num(if arena { speedup } else { 1.0 }),
             ));
         }
     }
@@ -232,16 +345,21 @@ fn scaling_suite(quick: bool) {
     pool::set_global_threads(pool::default_global_threads());
     table.print();
 
+    let epilogue_rows = epilogue_suite(quick);
+    let scratch_rows = scratch_suite(quick);
     let routing_rows = routing_suite(quick);
 
     let out_path = std::env::var("FFF_BENCH_GEMM_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());
     let json = format!(
-        "{{\n  \"schema\": \"fff-bench-gemm/v3\",\n  \"quick\": {quick},\n  \
+        "{{\n  \"schema\": \"fff-bench-gemm/v4\",\n  \"quick\": {quick},\n  \
          \"host_threads\": {},\n  \"isa\": \"{packed_isa}\",\n  \"gemm\": [\n    {}\n  ],\n  \
-         \"fff_infer\": [\n    {}\n  ],\n  \"routing\": [\n    {}\n  ]\n}}\n",
+         \"fff_infer\": [\n    {}\n  ],\n  \"epilogue\": [\n    {}\n  ],\n  \
+         \"scratch\": [\n    {}\n  ],\n  \"routing\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         gemm_rows.join(",\n    "),
         fff_rows.join(",\n    "),
+        epilogue_rows.join(",\n    "),
+        scratch_rows.join(",\n    "),
         routing_rows.join(",\n    "),
     );
     match std::fs::write(&out_path, json) {

@@ -260,14 +260,15 @@ impl Drop for Coordinator {
     }
 }
 
-/// Stack request inputs into a row-major batch matrix.
-pub(crate) fn stack_inputs(reqs: &[InferRequest]) -> Matrix {
+/// Stack request inputs into a worker-retained row-major batch matrix
+/// (resized in place, so a warm worker's batch assembly stops
+/// allocating).
+pub(crate) fn stack_inputs_into(reqs: &[InferRequest], m: &mut Matrix) {
     let dim = reqs.first().map(|r| r.input.len()).unwrap_or(0);
-    let mut m = Matrix::zeros(reqs.len(), dim);
+    m.resize(reqs.len(), dim);
     for (i, r) in reqs.iter().enumerate() {
         m.row_mut(i).copy_from_slice(&r.input);
     }
-    m
 }
 
 #[cfg(test)]

@@ -2,7 +2,7 @@
 
 use super::batcher::Batch;
 use super::metrics::Metrics;
-use crate::nn::{FffInfer, RoutingStats};
+use crate::nn::{FffInfer, InferScratch, RoutingStats};
 use crate::tensor::Matrix;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -13,6 +13,14 @@ pub trait Backend {
     fn dim_out(&self) -> usize;
     /// Batched inference: `B×dim_in → B×dim_out`.
     fn infer(&mut self, batch: &Matrix) -> Matrix;
+    /// Batched inference into a caller-owned output (resized to
+    /// `B×dim_out`). The worker loop retains one matrix across batches,
+    /// so backends that can reuse it override this — the native FFF
+    /// engine's steady state then performs zero heap allocations per
+    /// batch. The default falls back to the allocating [`Backend::infer`].
+    fn infer_into(&mut self, batch: &Matrix, out: &mut Matrix) {
+        *out = self.infer(batch);
+    }
     /// Leaf-occupancy stats of the last `infer` call, for backends that
     /// route (the native FFF engine). `None` when not applicable.
     fn last_routing(&self) -> Option<RoutingStats> {
@@ -23,15 +31,17 @@ pub trait Backend {
     }
 }
 
-/// The native FFF inference engine as a backend.
+/// The native FFF inference engine as a backend. Routing and bucket
+/// scratch live here and are reused across every batch the worker serves.
 pub struct NativeFffBackend {
     model: FffInfer,
+    scratch: InferScratch,
     last_routing: Option<RoutingStats>,
 }
 
 impl NativeFffBackend {
     pub fn new(model: FffInfer) -> Self {
-        NativeFffBackend { model, last_routing: None }
+        NativeFffBackend { model, scratch: InferScratch::new(), last_routing: None }
     }
 }
 
@@ -45,12 +55,17 @@ impl Backend for NativeFffBackend {
     }
 
     fn infer(&mut self, batch: &Matrix) -> Matrix {
-        // One batched descent serves both the leaf evaluation and the
-        // occupancy/skew telemetry (arXiv 2405.16836's balance signal).
-        let leaf_of = self.model.route_batch(batch);
-        self.last_routing =
-            Some(RoutingStats::from_leaf_ids(&leaf_of, self.model.alloc_leaves()));
-        self.model.infer_batch_routed(batch, &leaf_of)
+        let mut y = Matrix::zeros(0, 0);
+        self.infer_into(batch, &mut y);
+        y
+    }
+
+    fn infer_into(&mut self, batch: &Matrix, out: &mut Matrix) {
+        // One batched descent and ONE masked-leaf histogram serve both
+        // the leaf evaluation and the occupancy/skew telemetry
+        // (arXiv 2405.16836's balance signal); every buffer is retained
+        // across batches, so a warm worker allocates nothing here.
+        self.last_routing = Some(self.model.infer_batch_stats_into(batch, &mut self.scratch, out));
     }
 
     fn last_routing(&self) -> Option<RoutingStats> {
@@ -187,13 +202,18 @@ pub(crate) fn run_worker<F>(
     let mut backend = factory();
     let _ = dim_tx.send(backend.dim_in());
     drop(dim_tx);
+    // Input/output matrices retained across batches: with the native
+    // backend's internal scratch, a warm worker's per-batch work is
+    // allocation-free up to the per-request response copies.
+    let mut x = Matrix::zeros(0, 0);
+    let mut y = Matrix::zeros(0, 0);
     while let Ok(batch) = rx.recv() {
         if batch.requests.is_empty() {
             continue;
         }
         let n = batch.requests.len();
-        let x = super::stack_inputs(&batch.requests);
-        let y = backend.infer(&x);
+        super::stack_inputs_into(&batch.requests, &mut x);
+        backend.infer_into(&x, &mut y);
         if let Some(stats) = backend.last_routing() {
             metrics.record_routing(&stats);
         }

@@ -21,8 +21,10 @@ const BATCH: usize = 256;
 
 /// Allocation cap: beyond this many experts/leaves, storage is aliased
 /// (index % alloc) while gating/routing work stays exact — see
-/// DESIGN.md §3. 2^13 blocks ≈ 1.6 GB; the access pattern is already
-/// DRAM-resident far below the cap.
+/// EXPERIMENTS.md §Aliased leaf storage. 2^13 blocks ≈ 1.6 GB (≈ 2.4 GB
+/// for FFF under the packed GEMM kind since PR 4, whose compiled models
+/// then also carry each leaf's W1 prepacked into microkernel panels);
+/// the access pattern is already DRAM-resident far below the cap.
 const MAX_ALLOC: usize = 1 << 13;
 
 pub fn run(scale: Scale) {

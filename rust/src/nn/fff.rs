@@ -31,9 +31,43 @@
 
 use super::{init, Linear, Model, ParamVisitor};
 use crate::rng::Rng;
+use crate::tensor::kernels::{self, KernelKind};
 use crate::tensor::{
-    bernoulli_entropy, dot, gemm_nt, prefetch_slice, relu_inplace, routing_dot, sigmoid, Matrix,
+    bernoulli_entropy, dot, gemm_nt, prefetch_slice, relu_inplace, routing_dot, scratch, sigmoid,
+    Epilogue, Matrix, PackedB,
 };
+
+/// Fold a raw leaf index onto the allocated leaf banks — **the** aliased
+/// leaf-storage masking rule (see EXPERIMENTS.md §Aliased leaf storage).
+/// Every path that touches leaf storage routes its raw descent index
+/// through here, so the aliasing semantics live in exactly one place.
+#[inline]
+fn masked_leaf(raw: usize, n_alloc: usize) -> usize {
+    raw % n_alloc
+}
+
+/// Masked-leaf histogram over `n_alloc` banks, into a retained buffer
+/// (cleared and refilled). One pass serves both the bucket engine's
+/// counting sort and the routing telemetry — the serving path builds it
+/// exactly once per batch.
+fn bucket_counts(leaf_of: &[usize], n_alloc: usize, counts: &mut Vec<usize>) {
+    counts.clear();
+    counts.resize(n_alloc, 0);
+    for &raw in leaf_of {
+        counts[masked_leaf(raw, n_alloc)] += 1;
+    }
+}
+
+/// Whether model compilation should build the prepacked W1 panels: only
+/// when the packed GEMM kind is active — the kind is process-fixed
+/// outside the forced-kernel test matrix, and a banded/serial process
+/// (or one on a host without an intrinsic microkernel worth feeding)
+/// would otherwise pay ~2x leaf-W1 memory for panels it never reads.
+/// The grouped engine falls back to the fused gather-dot kernel whenever
+/// panels are absent, so a later forced-kernel flip stays correct.
+fn should_prepack() -> bool {
+    kernels::active() == KernelKind::Packed
+}
 
 /// The descent control flow shared by every routing path: starting at the
 /// root, fold `logit(level, node_in_level)` decisions into a leaf index.
@@ -250,12 +284,18 @@ impl Fff {
     /// Pack trained weights into the inference-layout model.
     pub fn compile_infer(&self) -> FffInfer {
         assert_eq!(self.cfg.node, 1, "compile_infer supports the paper's n = 1 nodes");
+        let prepack = should_prepack();
         let mut leaf_w1t = Vec::with_capacity(self.cfg.num_leaves());
+        let mut leaf_w1p = Vec::with_capacity(self.cfg.num_leaves());
         let mut leaf_b1 = Vec::new();
         let mut leaf_w2 = Vec::new();
         let mut leaf_b2 = Vec::new();
         for lf in &self.leaves {
-            leaf_w1t.push(lf.l1.w.transpose()); // ℓ × dim_in
+            let w1t = lf.l1.w.transpose(); // ℓ × dim_in
+            if prepack {
+                leaf_w1p.push(PackedB::pack_nt(&w1t));
+            }
+            leaf_w1t.push(w1t);
             leaf_b1.push(lf.l1.b.clone());
             leaf_w2.push(lf.l2.w.clone()); // ℓ × dim_out
             leaf_b2.push(lf.l2.b.clone());
@@ -265,6 +305,7 @@ impl Fff {
             leaf: self.cfg.leaf,
             router: self.router(),
             leaf_w1t,
+            leaf_w1p,
             leaf_b1,
             leaf_w2,
             leaf_b2,
@@ -466,27 +507,36 @@ impl Model for Fff {
     }
 
     fn forward_infer(&self, x: &Matrix) -> Matrix {
-        let mut y = Matrix::zeros(x.rows(), self.cfg.dim_out);
-        for r in 0..x.rows() {
-            let xr = x.row(r);
-            let leaf = &self.leaves[self.leaf_index(xr)];
-            let mut a1 = vec![0.0f32; self.cfg.leaf];
-            for (hn, a) in a1.iter_mut().enumerate() {
-                let mut acc = leaf.l1.b[hn];
-                for (j, &xv) in xr.iter().enumerate() {
-                    acc += xv * leaf.l1.w.get(j, hn);
-                }
-                *a = acc.max(0.0);
-            }
-            let out = y.row_mut(r);
-            out.copy_from_slice(&leaf.l2.b);
-            for (hn, &a) in a1.iter().enumerate() {
-                if a > 0.0 {
-                    crate::tensor::axpy_slice(a, leaf.l2.w.row(hn), out);
-                }
-            }
-        }
+        let mut y = Matrix::zeros(0, 0);
+        self.forward_infer_into(x, &mut y);
         y
+    }
+
+    fn forward_infer_into(&self, x: &Matrix, y: &mut Matrix) {
+        y.resize(x.rows(), self.cfg.dim_out);
+        // One thread-local hidden buffer for the whole batch (it is
+        // fully rewritten per sample) — trainer scoring passes that
+        // retain `y` run this allocation-free once warm.
+        scratch::with_f32(self.cfg.leaf, |a1| {
+            for r in 0..x.rows() {
+                let xr = x.row(r);
+                let leaf = &self.leaves[self.leaf_index(xr)];
+                for (hn, a) in a1.iter_mut().enumerate() {
+                    let mut acc = leaf.l1.b[hn];
+                    for (j, &xv) in xr.iter().enumerate() {
+                        acc += xv * leaf.l1.w.get(j, hn);
+                    }
+                    *a = acc.max(0.0);
+                }
+                let out = y.row_mut(r);
+                out.copy_from_slice(&leaf.l2.b);
+                for (hn, &a) in a1.iter().enumerate() {
+                    if a > 0.0 {
+                        crate::tensor::axpy_slice(a, leaf.l2.w.row(hn), out);
+                    }
+                }
+            }
+        });
     }
 
     fn visit_params(&mut self, f: &mut ParamVisitor) {
@@ -584,11 +634,24 @@ impl TreeRouter {
     /// row of `x`, bit-identical to per-sample [`TreeRouter::route`] at
     /// any batch shape and thread count.
     pub fn route_batch(&self, x: &Matrix) -> Vec<usize> {
+        let mut idx = Vec::new();
+        self.route_batch_into(x, &mut idx);
+        idx
+    }
+
+    /// [`TreeRouter::route_batch`] into a caller-retained buffer: `idx`
+    /// is cleared and resized to `x.rows()`, reusing its capacity — a
+    /// serving worker that keeps the vector across batches stops
+    /// allocating once it has seen its largest batch.
+    pub fn route_batch_into(&self, x: &Matrix, idx: &mut Vec<usize>) {
         assert_eq!(x.cols(), self.dim_in, "route_batch: input dim mismatch");
         let b = x.rows();
-        let mut idx = vec![0usize; b];
+        // The descent uses `idx` as its per-level node state starting at
+        // the root, so the reset to zero is load-bearing, not just init.
+        idx.clear();
+        idx.resize(b, 0);
         if self.depth == 0 || b == 0 {
-            return idx;
+            return;
         }
         let pool = crate::tensor::pool::current();
         let flops = 2 * b * self.depth * self.dim_in;
@@ -608,9 +671,8 @@ impl TreeRouter {
                 self.route_rows(x, r0, band_idx);
             });
         } else {
-            self.route_rows(x, 0, &mut idx);
+            self.route_rows(x, 0, idx);
         }
-        idx
     }
 
     /// Descend `idx.len()` samples starting at row `r0`, block by block.
@@ -675,13 +737,18 @@ impl RoutingStats {
     /// Summarize raw leaf indices (as returned by `route_batch`) under an
     /// allocation of `n_alloc` leaf banks (aliased models fold indices).
     pub fn from_leaf_ids(leaf_of: &[usize], n_alloc: usize) -> RoutingStats {
-        let n_alloc = n_alloc.max(1);
-        let mut counts = vec![0usize; n_alloc];
-        for &raw in leaf_of {
-            counts[raw % n_alloc] += 1;
-        }
+        let mut counts = Vec::new();
+        bucket_counts(leaf_of, n_alloc.max(1), &mut counts);
+        RoutingStats::from_counts(&counts, leaf_of.len())
+    }
+
+    /// Summarize an already-built masked-leaf histogram — the bucket
+    /// engine's counting-sort array, so serving derives its telemetry
+    /// from the single histogram pass it performs anyway
+    /// ([`FffInfer::infer_batch_stats_into`]).
+    pub fn from_counts(counts: &[usize], samples: usize) -> RoutingStats {
         RoutingStats {
-            samples: leaf_of.len(),
+            samples,
             distinct_leaves: counts.iter().filter(|&&c| c > 0).count(),
             max_bucket: counts.iter().copied().max().unwrap_or(0),
         }
@@ -714,10 +781,46 @@ pub struct FffInfer {
     dim_out: usize,
     leaf: usize,
     router: TreeRouter,
-    leaf_w1t: Vec<Matrix>, // per leaf: ℓ × dim_in
+    leaf_w1t: Vec<Matrix>, // per leaf: ℓ × dim_in (per-sample layout)
+    /// Per leaf: W1 prepacked into the microkernel's B panels at compile
+    /// time, so bucket GEMMs skip `pack_b` and feed the fused-epilogue
+    /// microkernel directly (§Perf iteration 4). Empty when the packed
+    /// kind was not active at compile time ([`should_prepack`]) — the
+    /// grouped engine then uses the gather-dot kernel.
+    leaf_w1p: Vec<PackedB>,
     leaf_b1: Vec<Vec<f32>>,
     leaf_w2: Vec<Matrix>, // per leaf: ℓ × dim_out
     leaf_b2: Vec<Vec<f32>>,
+}
+
+/// Reusable working memory for batched `FORWARD_I`: the counting-sort
+/// arrays and segment work list of the grouped bucket engine, plus the
+/// routed-leaf buffer of [`FffInfer::infer_batch_into`]. A serving
+/// worker (or trainer scoring loop) holds one of these across batches;
+/// after the first batch at the largest shape, every vector here has
+/// reached steady-state capacity and batched inference performs **zero
+/// heap allocations** (tests/alloc_regression.rs pins this). Per-task
+/// activation tiles and GEMM pack panels come from
+/// [`crate::tensor::scratch`] instead — they are per-pool-worker, not
+/// per-call.
+#[derive(Debug, Default)]
+pub struct InferScratch {
+    leaf_of: Vec<usize>,
+    counts: Vec<usize>,
+    offsets: Vec<usize>,
+    cursor: Vec<usize>,
+    order: Vec<usize>,
+    /// Work list for the bucket engine: `(leaf, lo, hi)` row segments of
+    /// `order`. Large buckets are split into several segments so the
+    /// pool parallelizes even when routing concentrates the whole batch
+    /// in a handful of leaves (the skew worst case).
+    segments: Vec<(usize, usize, usize)>,
+}
+
+impl InferScratch {
+    pub fn new() -> InferScratch {
+        InferScratch::default()
+    }
 }
 
 impl FffInfer {
@@ -747,17 +850,23 @@ impl FffInfer {
             levels.push(RouteLevel { w, b });
         }
         let router = TreeRouter { depth, dim_in, levels };
+        let prepack = should_prepack();
         let mut leaf_w1t = Vec::with_capacity(n_leaves);
+        let mut leaf_w1p = Vec::with_capacity(n_leaves);
         let mut leaf_b1 = Vec::with_capacity(n_leaves);
         let mut leaf_w2 = Vec::with_capacity(n_leaves);
         let mut leaf_b2 = Vec::with_capacity(n_leaves);
         for _ in 0..n_leaves {
-            leaf_w1t.push(init::normal(rng, leaf, dim_in, 0.05));
+            let w1t = init::normal(rng, leaf, dim_in, 0.05);
+            if prepack {
+                leaf_w1p.push(PackedB::pack_nt(&w1t));
+            }
+            leaf_w1t.push(w1t);
             leaf_b1.push(vec![0.0; leaf]);
             leaf_w2.push(init::normal(rng, leaf, dim_out, 0.05));
             leaf_b2.push(vec![0.0; dim_out]);
         }
-        FffInfer { dim_out, leaf, router, leaf_w1t, leaf_b1, leaf_w2, leaf_b2 }
+        FffInfer { dim_out, leaf, router, leaf_w1t, leaf_w1p, leaf_b1, leaf_w2, leaf_b2 }
     }
 
     pub fn depth(&self) -> usize {
@@ -793,9 +902,15 @@ impl FffInfer {
         self.router.route_batch(x)
     }
 
+    /// Batched tree descent into a caller-retained buffer (see
+    /// [`TreeRouter::route_batch_into`]).
+    pub fn route_batch_into(&self, x: &Matrix, idx: &mut Vec<usize>) {
+        self.router.route_batch_into(x, idx)
+    }
+
     /// Single-sample `FORWARD_I` into a caller buffer (serving hot path).
     pub fn infer_one(&self, x: &[f32], out: &mut [f32]) {
-        let leaf = self.router.route(x) % self.leaf_w1t.len();
+        let leaf = masked_leaf(self.router.route(x), self.leaf_w1t.len());
         self.infer_leaf(leaf, x, out);
     }
 
@@ -819,12 +934,53 @@ impl FffInfer {
     ///
     /// §Perf: one batched descent ([`TreeRouter::route_batch`]) for every
     /// path; when several samples land on the same leaf, rows are grouped
-    /// by leaf and each group goes through the blocked GEMM (leaf-grouped
-    /// path); sparse routing (≲2 samples/leaf) evaluates leaves
-    /// per sample instead.
+    /// by leaf and each group goes through the packed bucket GEMM
+    /// (leaf-grouped path); sparse routing (≲2 samples/leaf) evaluates
+    /// leaves per sample instead.
     pub fn infer_batch(&self, x: &Matrix) -> Matrix {
         let leaf_of = self.router.route_batch(x);
         self.infer_batch_routed(x, &leaf_of)
+    }
+
+    /// [`FffInfer::infer_batch`] with caller-retained scratch and output
+    /// — the zero-allocation serving form.
+    pub fn infer_batch_into(&self, x: &Matrix, scratch: &mut InferScratch, y: &mut Matrix) {
+        // Take the routed-leaf buffer out so `scratch` stays borrowable;
+        // `mem::take`/put-back moves capacity, never reallocates.
+        let mut leaf_of = std::mem::take(&mut scratch.leaf_of);
+        self.router.route_batch_into(x, &mut leaf_of);
+        self.infer_batch_routed_into(x, &leaf_of, scratch, y);
+        scratch.leaf_of = leaf_of;
+    }
+
+    /// Batched `FORWARD_I` **plus routing telemetry** in one pass — the
+    /// serving backend's call: one batched descent, one masked-leaf
+    /// histogram (shared between the returned [`RoutingStats`] and the
+    /// bucket engine's counting sort), one bucket sweep. Allocation-free
+    /// once `scratch`/`y` are warm, like the other `_into` forms.
+    pub fn infer_batch_stats_into(
+        &self,
+        x: &Matrix,
+        scratch: &mut InferScratch,
+        y: &mut Matrix,
+    ) -> RoutingStats {
+        let mut leaf_of = std::mem::take(&mut scratch.leaf_of);
+        self.router.route_batch_into(x, &mut leaf_of);
+        let n_alloc = self.leaf_w1t.len();
+        bucket_counts(&leaf_of, n_alloc, &mut scratch.counts);
+        let stats = RoutingStats::from_counts(&scratch.counts, leaf_of.len());
+        y.resize(x.rows(), self.dim_out);
+        if x.rows() < 2 * n_alloc {
+            // Sparse: per-sample leaf evaluation (the histogram was
+            // needed for the stats regardless, so nothing is wasted).
+            for r in 0..x.rows() {
+                self.infer_leaf(masked_leaf(leaf_of[r], n_alloc), x.row(r), y.row_mut(r));
+            }
+        } else {
+            self.infer_grouped_counted(x, &leaf_of, scratch, y);
+        }
+        scratch.leaf_of = leaf_of;
+        stats
     }
 
     /// Batched `FORWARD_I` with the descent already done (`leaf_of` holds
@@ -832,97 +988,194 @@ impl FffInfer {
     /// uses this split to surface [`RoutingStats`] without descending
     /// twice.
     pub fn infer_batch_routed(&self, x: &Matrix, leaf_of: &[usize]) -> Matrix {
+        let mut y = Matrix::zeros(0, 0);
+        self.infer_batch_routed_into(x, leaf_of, &mut InferScratch::new(), &mut y);
+        y
+    }
+
+    /// [`FffInfer::infer_batch_routed`] into caller-retained scratch and
+    /// output. After warm-up (one batch at the largest shape), the whole
+    /// call — counting sort, bucket dispatch, gathers, both GEMMs —
+    /// performs **zero heap allocations** under every kernel kind
+    /// (tests/alloc_regression.rs).
+    pub fn infer_batch_routed_into(
+        &self,
+        x: &Matrix,
+        leaf_of: &[usize],
+        scratch: &mut InferScratch,
+        y: &mut Matrix,
+    ) {
         assert_eq!(leaf_of.len(), x.rows(), "infer_batch_routed: leaf index count");
         let n_alloc = self.leaf_w1t.len();
+        y.resize(x.rows(), self.dim_out);
         if x.rows() < 2 * n_alloc {
             // Sparse: per-sample leaf evaluation.
-            let mut y = Matrix::zeros(x.rows(), self.dim_out);
             for r in 0..x.rows() {
-                self.infer_leaf(leaf_of[r] % n_alloc, x.row(r), y.row_mut(r));
+                self.infer_leaf(masked_leaf(leaf_of[r], n_alloc), x.row(r), y.row_mut(r));
             }
-            return y;
+            return;
         }
-        self.infer_grouped(x, leaf_of)
+        self.infer_grouped_into(x, leaf_of, scratch, y);
     }
 
     /// Leaf-grouped batched inference (dense-routing fast path), forced
     /// regardless of occupancy — benches and tests pin this path.
     pub fn infer_batch_grouped(&self, x: &Matrix) -> Matrix {
         let leaf_of = self.router.route_batch(x);
-        self.infer_grouped(x, &leaf_of)
+        let mut y = Matrix::zeros(0, 0);
+        self.infer_grouped_into(x, &leaf_of, &mut InferScratch::new(), &mut y);
+        y
     }
 
-    /// §Perf: the per-leaf GEMMs are independent, so non-empty leaf
-    /// buckets are dispatched as tasks on the [`crate::tensor::pool`]
-    /// thread pool. Bucket sizes are skewed whenever routing is
-    /// non-uniform (the load-balancing problem of arXiv 2405.16836); the
-    /// pool's work stealing absorbs the skew. Serial and pooled dispatch
-    /// produce bit-identical outputs — every bucket's arithmetic is
-    /// self-contained.
-    fn infer_grouped(&self, x: &Matrix, leaf_of: &[usize]) -> Matrix {
+    /// §Perf iteration 4 (the zero-allocation single-pass bucket engine):
+    /// the per-leaf GEMMs are independent — and row-independent inside a
+    /// leaf — so non-empty leaf buckets are dispatched as row segments on
+    /// the [`crate::tensor::pool`] thread pool. Bucket sizes are skewed
+    /// whenever routing is non-uniform (the load-balancing problem of
+    /// arXiv 2405.16836): work stealing absorbs moderate skew, and
+    /// oversized buckets are split into segments so even a single hot
+    /// leaf fans out across every thread. Each segment is one pass:
+    /// the first GEMM packs its `A` panels straight from the scattered
+    /// batch rows (no gathered copy) and runs the fused bias+ReLU
+    /// microkernel over the leaf's **prepacked** `W1` panels (packed
+    /// kind; banded/serial kinds take the fused gather-dot kernel), and
+    /// the second GEMM writes each result row directly into its final
+    /// row of `y` (the tensor module's scatter-row kernel — no staging
+    /// buffer, no copy-back, exact-zero activations skipped). Serial and
+    /// pooled dispatch produce bit-identical outputs — every bucket's
+    /// arithmetic is self-contained.
+    fn infer_grouped_into(
+        &self,
+        x: &Matrix,
+        leaf_of: &[usize],
+        scratch: &mut InferScratch,
+        y: &mut Matrix,
+    ) {
+        // 1) Bucket counts from the (batched) descent.
+        bucket_counts(leaf_of, self.leaf_w1t.len(), &mut scratch.counts);
+        self.infer_grouped_counted(x, leaf_of, scratch, y);
+    }
+
+    /// [`FffInfer::infer_grouped_into`] minus the histogram step:
+    /// `scratch.counts` must already hold this batch's masked-leaf
+    /// histogram ([`bucket_counts`]) — which is how the serving entry
+    /// shares one histogram between telemetry and grouping.
+    fn infer_grouped_counted(
+        &self,
+        x: &Matrix,
+        leaf_of: &[usize],
+        scratch: &mut InferScratch,
+        y: &mut Matrix,
+    ) {
         let n_alloc = self.leaf_w1t.len();
         let b = x.rows();
-        // 1) Bucket counts from the (batched) descent.
-        let mut counts = vec![0usize; n_alloc];
-        for &raw in leaf_of {
-            counts[raw % n_alloc] += 1;
-        }
+        debug_assert_eq!(scratch.counts.len(), n_alloc);
+        debug_assert_eq!(scratch.counts.iter().sum::<usize>(), b);
+        y.resize(b, self.dim_out);
         // 2) Group rows by leaf (counting sort).
-        let mut offsets = vec![0usize; n_alloc + 1];
+        scratch.offsets.clear();
+        scratch.offsets.resize(n_alloc + 1, 0);
         for l in 0..n_alloc {
-            offsets[l + 1] = offsets[l] + counts[l];
+            scratch.offsets[l + 1] = scratch.offsets[l] + scratch.counts[l];
         }
-        let mut order = vec![0usize; b];
-        let mut cursor = offsets.clone();
+        scratch.order.clear();
+        scratch.order.resize(b, 0);
+        scratch.cursor.clear();
+        scratch.cursor.extend_from_slice(&scratch.offsets[..n_alloc]);
         for (r, &raw) in leaf_of.iter().enumerate() {
-            let l = raw % n_alloc;
-            order[cursor[l]] = r;
-            cursor[l] += 1;
+            let l = masked_leaf(raw, n_alloc);
+            scratch.order[scratch.cursor[l]] = r;
+            scratch.cursor[l] += 1;
         }
-        // 3) Per-leaf GEMM on each gathered group, one pool task per
-        //    non-empty bucket.
-        let buckets: Vec<usize> = (0..n_alloc).filter(|&l| counts[l] > 0).collect();
-        let mut y = Matrix::zeros(b, self.dim_out);
+        // 3) Build the segment work list: one task per non-empty bucket,
+        //    with buckets larger than `seg` rows split so the pool has
+        //    work for every thread even when one leaf holds most of the
+        //    batch (the old per-bucket dispatch serialized exactly that
+        //    worst case). Splitting never changes numerics: both bucket
+        //    GEMMs are row-independent, so any row partition produces
+        //    bit-identical output.
+        let dim_in = self.router.dim_in();
         let dim_out = self.dim_out;
-        let yptr = crate::tensor::pool::SendPtr(y.as_mut_slice().as_mut_ptr());
-        let order_ref: &[usize] = &order;
-        let offsets_ref: &[usize] = &offsets;
-        let buckets_ref: &[usize] = &buckets;
-        let run_bucket = |t: usize| {
-            let l = buckets_ref[t];
-            let rows = &order_ref[offsets_ref[l]..offsets_ref[l + 1]];
-            let xs = x.gather_rows(rows);
-            // a1 = relu(xs · w1 + b1): w1t is ℓ×dim_in, so xs·w1tᵀ.
-            let mut a1 = crate::tensor::gemm_nt(&xs, &self.leaf_w1t[l]);
-            for row in 0..a1.rows() {
-                for (v, &bb) in a1.row_mut(row).iter_mut().zip(&self.leaf_b1[l]) {
-                    *v = (*v + bb).max(0.0);
-                }
-            }
-            let out = crate::tensor::gemm_bias(&a1, &self.leaf_w2[l], &self.leaf_b2[l]);
-            for (local, &r) in rows.iter().enumerate() {
-                // SAFETY: each sample row lands in exactly one bucket, so
-                // tasks write disjoint rows of `y`; `run` blocks until all
-                // buckets are done.
-                let dst = unsafe {
-                    std::slice::from_raw_parts_mut(yptr.0.add(r * dim_out), dim_out)
-                };
-                dst.copy_from_slice(out.row(local));
-            }
-        };
+        let leaf = self.leaf;
         let pool = crate::tensor::pool::current();
-        let flops = 2 * b * self.leaf * (self.router.dim_in() + self.dim_out);
-        if pool.threads() > 1
-            && buckets.len() > 1
-            && flops >= crate::tensor::parallel_flop_threshold()
-        {
-            pool.run(buckets.len(), &run_bucket);
+        let flops = 2 * b * leaf * (dim_in + dim_out);
+        let parallel =
+            pool.threads() > 1 && flops >= crate::tensor::parallel_flop_threshold();
+        let seg = if parallel {
+            // ~4 tasks per thread; segments stay at least two row-panels
+            // tall so per-segment setup cannot dominate.
+            b.div_ceil(pool.threads() * 4).max(8)
         } else {
-            for t in 0..buckets.len() {
-                run_bucket(t);
+            usize::MAX
+        };
+        scratch.segments.clear();
+        for l in 0..n_alloc {
+            let (lo, hi) = (scratch.offsets[l], scratch.offsets[l + 1]);
+            let mut s = lo;
+            while s < hi {
+                let e = s.saturating_add(seg).min(hi);
+                scratch.segments.push((l, s, e));
+                s = e;
             }
         }
-        y
+        // Resolve the GEMM strategy once per batch, not once per segment.
+        // The packed path additionally needs the prepacked panels, which
+        // compile-time skips when a non-packed kind was active (see
+        // `should_prepack`) — fall back to the gather-dot kernel then.
+        let packed = kernels::active() == KernelKind::Packed
+            && self.leaf_w1p.len() == self.leaf_w1t.len();
+        let yptr = crate::tensor::pool::SendPtr(y.as_mut_slice().as_mut_ptr());
+        let order_ref: &[usize] = &scratch.order;
+        let segments_ref: &[(usize, usize, usize)] = &scratch.segments;
+        let run_segment = |t: usize| {
+            let (l, lo, hi) = segments_ref[t];
+            let rows = &order_ref[lo..hi];
+            let b1 = &self.leaf_b1[l];
+            // a1 = relu(x[rows] · w1 + b1), gather fused into the kernel.
+            scratch::with_f32(rows.len() * leaf, |a1| {
+                if packed {
+                    crate::tensor::gemm_packed_gather_epi(
+                        x,
+                        rows,
+                        &self.leaf_w1p[l],
+                        a1,
+                        Epilogue::BiasRelu(b1),
+                    );
+                } else {
+                    crate::tensor::gemm_nt_gather_epi(
+                        x,
+                        rows,
+                        &self.leaf_w1t[l],
+                        a1,
+                        Epilogue::BiasRelu(b1),
+                    );
+                }
+                // y[rows] = a1 · w2 + b2, scattered directly into place.
+                // SAFETY: segments partition `order`, which holds each
+                // sample row exactly once, so tasks write disjoint rows
+                // of `y`; `run` blocks until every segment is done; `y`
+                // was resized to b × dim_out above.
+                unsafe {
+                    crate::tensor::gemm_bias_scatter_raw(
+                        a1,
+                        leaf,
+                        self.leaf_w2[l].as_slice(),
+                        dim_out,
+                        &self.leaf_b2[l],
+                        rows,
+                        yptr.0,
+                    );
+                }
+            });
+        };
+        let n_segments = segments_ref.len();
+        if parallel && n_segments > 1 {
+            pool.run(n_segments, &run_segment);
+        } else {
+            for t in 0..n_segments {
+                run_segment(t);
+            }
+        }
     }
 }
 
@@ -1240,6 +1493,56 @@ mod tests {
         let routed = inf.infer_batch_routed(&x, &leaf_of);
         let direct = inf.infer_batch(&x);
         assert_eq!(routed, direct);
+    }
+
+    #[test]
+    fn scratch_paths_match_allocating_paths_bitwise() {
+        // The `_into` serving forms must be pure memory plumbing: same
+        // bits as the allocating wrappers, batch after batch, with one
+        // scratch reused across differently-shaped batches. Kernel lock
+        // held: the comparisons are bitwise across dispatched GEMMs.
+        let _serialize = kernels::force_lock();
+        let (fff, _) = mk(3, 4, 0.0);
+        let inf = fff.compile_infer();
+        let mut scratch = InferScratch::new();
+        let mut y = Matrix::zeros(0, 0);
+        let mut leaf_of_buf = Vec::new();
+        for &b in &[64usize, 17, 80, 64] {
+            let x = batch(b, 5);
+            inf.route_batch_into(&x, &mut leaf_of_buf);
+            assert_eq!(leaf_of_buf, inf.route_batch(&x), "route_batch_into drifted at b={b}");
+            inf.infer_batch_routed_into(&x, &leaf_of_buf, &mut scratch, &mut y);
+            assert_eq!(y, inf.infer_batch_routed(&x, &leaf_of_buf), "routed_into drifted at b={b}");
+            inf.infer_batch_into(&x, &mut scratch, &mut y);
+            assert_eq!(y, inf.infer_batch(&x), "infer_batch_into drifted at b={b}");
+            // The one-pass serving entry: same output, and stats equal
+            // to the standalone summary of the same descent.
+            let stats = inf.infer_batch_stats_into(&x, &mut scratch, &mut y);
+            assert_eq!(y, inf.infer_batch(&x), "stats entry drifted at b={b}");
+            let want = RoutingStats::from_leaf_ids(&leaf_of_buf, inf.alloc_leaves());
+            assert_eq!(
+                (stats.samples, stats.distinct_leaves, stats.max_bucket),
+                (want.samples, want.distinct_leaves, want.max_bucket),
+                "stats drifted at b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_infer_into_matches_forward_infer() {
+        let (fff, _) = mk(3, 4, 0.0);
+        let x = batch(19, 5);
+        let want = fff.forward_infer(&x);
+        let mut y = Matrix::zeros(2, 2); // wrong shape on purpose: must resize
+        fff.forward_infer_into(&x, &mut y);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn masked_leaf_folds_aliased_banks() {
+        assert_eq!(masked_leaf(0, 4), 0);
+        assert_eq!(masked_leaf(5, 4), 1);
+        assert_eq!(masked_leaf(7, 1), 0);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod optim;
 pub mod vit;
 
 pub use ff::Ff;
-pub use fff::{Fff, FffConfig, FffInfer, RoutingStats, TreeRouter};
+pub use fff::{Fff, FffConfig, FffInfer, InferScratch, RoutingStats, TreeRouter};
 pub use linear::Linear;
 pub use model::{accuracy, Model, ParamVisitor};
 pub use moe::{Moe, MoeConfig, MoeInfer};

@@ -28,6 +28,15 @@ pub trait Model {
     /// single-path decisions; for MoE noiseless top-k).
     fn forward_infer(&self, x: &Matrix) -> Matrix;
 
+    /// [`Model::forward_infer`] into a caller-owned output, resized to
+    /// `B × dim_out`. Scoring loops retain `y` across batches/epochs so
+    /// evaluation stops allocating; implementations that can reuse
+    /// caller memory override this (the default just assigns the
+    /// allocating form).
+    fn forward_infer_into(&self, x: &Matrix, y: &mut Matrix) {
+        *y = self.forward_infer(x);
+    }
+
     /// Visit every (param, grad) pair in a stable order.
     fn visit_params(&mut self, f: &mut ParamVisitor);
 

@@ -1,4 +1,7 @@
-//! GEMM drivers for the native engine (v3: explicit-SIMD microkernel).
+//! GEMM drivers for the native engine (v4: fused store-phase epilogues,
+//! prepacked-B serving path, scratch-arena pack buffers — see
+//! EXPERIMENTS.md §Perf iteration 4; v3 added the explicit-SIMD
+//! microkernel).
 //!
 //! Layout is row-major everywhere. Execution tiers (see EXPERIMENTS.md
 //! §Perf for the measured iteration log naive → ikj → packed+parallel →
@@ -28,9 +31,10 @@
 //!    microkernel, and the intrinsic tile removed that variance
 //!    (EXPERIMENTS.md §Perf iteration 3).
 
-use super::kernels::{self, KernelKind, MR, NR};
+use super::kernels::{self, Epilogue, KernelKind, MR, NR};
 use super::ops::{axpy_slice, dot};
 use super::pool::{self, SendPtr};
+use super::scratch;
 use super::Matrix;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -61,14 +65,79 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// `C = A·B + bias` where `bias` is a length-`n` row broadcast over rows.
+///
+/// v4 numerics: the bias is applied in the **store phase** of the last
+/// k-panel (packed path's `_epi` microkernel) or as an elementwise pass
+/// after accumulation (banded/serial) — per element `(Σ_p a·b) + bias[j]`,
+/// exactly the order a separate bias pass over a [`gemm`] result
+/// produces, so the fused and unfused forms are bit-identical kind by
+/// kind and thread count by thread count. (The former bias-*initialized*
+/// form `((bias + acc₀) + acc₁)…` differed from the separate-pass order
+/// by final-rounding ulps; every kind now shares the epilogue-last
+/// order.)
 pub fn gemm_bias(a: &Matrix, b: &Matrix, bias: &[f32]) -> Matrix {
-    assert_eq!(bias.len(), b.cols(), "gemm_bias: bias length mismatch");
-    let mut c = Matrix::zeros(a.rows(), b.cols());
-    for r in 0..c.rows() {
-        c.row_mut(r).copy_from_slice(bias);
+    gemm_epi(a, b, Epilogue::Bias(bias))
+}
+
+/// `C = relu(A·B + bias)` with the ReLU fused into the same store —
+/// [`kernels::relu_store`] semantics (`-0.0` and NaN normalize to
+/// `+0.0`). One pass over `C` instead of GEMM + bias pass + ReLU pass;
+/// at thin-`k` shapes (a leaf's second GEMM, an FF layer with narrow
+/// hidden width) the saved passes are a measurable fraction of the whole
+/// product (EXPERIMENTS.md §Perf iteration 4).
+pub fn gemm_bias_relu(a: &Matrix, b: &Matrix, bias: &[f32]) -> Matrix {
+    gemm_epi(a, b, Epilogue::BiasRelu(bias))
+}
+
+/// Shared epilogue-fused driver behind [`gemm_bias`]/[`gemm_bias_relu`]:
+/// the [`gemm_acc`] dispatch (serial seed kernel below the FLOP
+/// threshold, pooled banded/packed above) with `epi` applied exactly
+/// once per element after its full accumulation.
+fn gemm_epi(a: &Matrix, b: &Matrix, epi: Epilogue) -> Matrix {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "gemm: inner dims {ka} vs {kb}");
+    if let Epilogue::Bias(bb) | Epilogue::BiasRelu(bb) = epi {
+        assert_eq!(bb.len(), n, "gemm: bias length mismatch");
     }
-    gemm_acc(a, b, &mut c);
+    let mut c = Matrix::zeros(m, n);
+    let k = ka;
+    if k == 0 {
+        // No k-panels would run, so apply the epilogue directly.
+        epilogue_pass(c.as_mut_slice(), m, n, epi);
+        return c;
+    }
+    let kind = kernels::active();
+    if kind == KernelKind::Serial || 2 * m * k * n < parallel_flop_threshold() {
+        seed_kernel(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, k, n);
+        epilogue_pass(c.as_mut_slice(), m, n, epi);
+        return c;
+    }
+    let p = pool::current();
+    match kind {
+        KernelKind::Packed => {
+            packed_parallel_epi(a.as_slice(), b.as_slice(), &mut c, m, k, n, &p, epi)
+        }
+        KernelKind::Banded => {
+            banded_parallel_epi(a.as_slice(), b.as_slice(), &mut c, m, k, n, &p, epi)
+        }
+        KernelKind::Serial => unreachable!("serial handled above"),
+    }
     c
+}
+
+/// Elementwise epilogue over an already-accumulated row-major band — the
+/// unfused form, bit-identical to the fused stores (both compute
+/// `epi(accumulated_value)` per element, in the same order).
+fn epilogue_pass(cv: &mut [f32], rows: usize, n: usize, epi: Epilogue) {
+    if matches!(epi, Epilogue::None) {
+        return;
+    }
+    for r in 0..rows {
+        for (j, v) in cv[r * n..(r + 1) * n].iter_mut().enumerate() {
+            *v = epi.apply(j, *v);
+        }
+    }
 }
 
 /// `C += A·B` (accumulating GEMM core, auto-dispatched).
@@ -183,6 +252,23 @@ fn banded_parallel(
     n: usize,
     p: &pool::ThreadPool,
 ) {
+    banded_parallel_epi(av, bv, c, m, k, n, p, Epilogue::None)
+}
+
+/// [`banded_parallel`] with the epilogue applied per band right after
+/// its accumulation (while the band is cache-hot); same per-element ops
+/// and order as a whole-matrix [`epilogue_pass`].
+#[allow(clippy::too_many_arguments)]
+fn banded_parallel_epi(
+    av: &[f32],
+    bv: &[f32],
+    c: &mut Matrix,
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &pool::ThreadPool,
+    epi: Epilogue,
+) {
     let band = band_rows(m, p.threads());
     let n_bands = m.div_ceil(band);
     let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
@@ -193,6 +279,7 @@ fn banded_parallel(
         // before `c` is touched again by the caller.
         let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
         seed_kernel(&av[i0 * k..(i0 + rows) * k], bv, cv, rows, k, n);
+        epilogue_pass(cv, rows, n, epi);
     });
 }
 
@@ -235,9 +322,11 @@ fn pack_a(av: &[f32], k: usize, i0: usize, rows: usize, k0: usize, kc: usize, ap
     }
 }
 
-/// Packed serial band: pack the band's rows of `A`, then run `micro`
-/// (the microkernel from [`kernels::table`]) over every (MR row-panel ×
-/// NR col-panel) tile.
+/// Packed serial band: pack the band's rows of `A` (into this thread's
+/// [`scratch`] buffer — no allocation once warm), then run the epilogue
+/// microkernel from [`kernels::table`] over every (MR row-panel ×
+/// NR col-panel) tile. `epi` fires in the tiles' store phase; the caller
+/// passes [`Epilogue::None`] for every k-panel but the last.
 #[allow(clippy::too_many_arguments)]
 fn packed_band(
     av: &[f32],
@@ -249,28 +338,30 @@ fn packed_band(
     n: usize,
     k0: usize,
     kc: usize,
-    micro: kernels::Micro4x8,
+    micro: kernels::Micro4x8Epi,
+    epi: Epilogue,
 ) {
     let m_panels = rows.div_ceil(MR);
     let n_panels = n.div_ceil(NR);
-    let mut apack = vec![0.0f32; m_panels * MR * kc];
-    pack_a(av, k, i0, rows, k0, kc, &mut apack);
-    for ip in 0..m_panels {
-        let r0 = ip * MR;
-        let mr = MR.min(rows - r0);
-        let ap = &apack[ip * kc * MR..(ip + 1) * kc * MR];
-        for jp in 0..n_panels {
-            let j0 = jp * NR;
-            let nr = NR.min(n - j0);
-            let bp = &bpack[jp * kc * NR..(jp + 1) * kc * NR];
-            micro(kc, ap, bp, &mut cv[r0 * n + j0..], n, mr, nr);
+    scratch::with_f32(m_panels * MR * kc, |apack| {
+        pack_a(av, k, i0, rows, k0, kc, apack);
+        for ip in 0..m_panels {
+            let r0 = ip * MR;
+            let mr = MR.min(rows - r0);
+            let ap = &apack[ip * kc * MR..(ip + 1) * kc * MR];
+            for jp in 0..n_panels {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                let bp = &bpack[jp * kc * NR..(jp + 1) * kc * NR];
+                micro(kc, ap, bp, &mut cv[r0 * n + j0..], n, mr, nr, epi.narrow(j0));
+            }
         }
-    }
+    });
 }
 
 /// Packed + pooled `C += A·B`: per k-panel, `B` is packed once (shared,
 /// read-only) and row bands are dispatched as pool tasks, each packing its
-/// own slice of `A` into a thread-local buffer.
+/// own slice of `A` into a thread-local scratch buffer.
 fn packed_parallel(
     av: &[f32],
     bv: &[f32],
@@ -280,25 +371,227 @@ fn packed_parallel(
     n: usize,
     p: &pool::ThreadPool,
 ) {
-    let micro = kernels::table().micro_4x8;
+    packed_parallel_epi(av, bv, c, m, k, n, p, Epilogue::None)
+}
+
+/// [`packed_parallel`] with `epi` fused into the stores of the **last**
+/// k-panel (earlier panels store with [`Epilogue::None`], i.e. plain
+/// accumulation), so each element passes through the epilogue exactly
+/// once, after its full sum — the order [`epilogue_pass`] replicates.
+#[allow(clippy::too_many_arguments)]
+fn packed_parallel_epi(
+    av: &[f32],
+    bv: &[f32],
+    c: &mut Matrix,
+    m: usize,
+    k: usize,
+    n: usize,
+    p: &pool::ThreadPool,
+    epi: Epilogue,
+) {
+    let micro = kernels::table().micro_4x8_epi;
     let n_panels = n.div_ceil(NR);
     let kc_max = k.min(KC);
-    let mut bpack = vec![0.0f32; n_panels * kc_max * NR];
     let band = band_rows(m, p.threads());
     let n_bands = m.div_ceil(band);
     let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
-    for k0 in (0..k).step_by(KC) {
-        let kc = KC.min(k - k0);
-        pack_b(bv, n, k0, kc, &mut bpack);
-        let bp: &[f32] = &bpack[..n_panels * kc * NR];
-        p.run(n_bands, &|t| {
-            let i0 = t * band;
-            let rows = band.min(m - i0);
-            // SAFETY: bands are disjoint row ranges of `c`, and `run`
-            // returns before `c` is touched again by the caller.
-            let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
-            packed_band(av, bp, cv, i0, rows, k, n, k0, kc, micro);
-        });
+    scratch::with_f32(n_panels * kc_max * NR, |bpack| {
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            pack_b(bv, n, k0, kc, bpack);
+            let bp: &[f32] = &bpack[..n_panels * kc * NR];
+            let panel_epi = if k0 + kc == k { epi } else { Epilogue::None };
+            p.run(n_bands, &|t| {
+                let i0 = t * band;
+                let rows = band.min(m - i0);
+                // SAFETY: bands are disjoint row ranges of `c`, and `run`
+                // returns before `c` is touched again by the caller.
+                let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
+                packed_band(av, bp, cv, i0, rows, k, n, k0, kc, micro, panel_epi);
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Prepacked-B path: serving-time bucket GEMMs over weights packed once.
+// ---------------------------------------------------------------------------
+
+/// A weight matrix prepacked into the packed path's NR-wide micro-panels,
+/// built **once** (model-compile time) from the transposed `n×k` layout
+/// the FFF leaf storage uses. Serving-time bucket GEMMs then skip
+/// `pack_b` entirely and feed the microkernel directly; only the gathered
+/// `A` rows are packed per call — straight from scattered batch rows, so
+/// the old gather-copy disappears too.
+///
+/// Layout: ascending k-chunks of `kc = min(KC, k − k0)` packed rows, each
+/// chunk holding `ceil(n/NR)` panels of `kc × NR` (columns ≥ `n`
+/// zero-padded), chunks concatenated. Identical panel contents to what
+/// `pack_b` produces from the untransposed matrix, so a product through
+/// [`gemm_packed_gather_epi`] is bit-identical to the packed-kind
+/// [`gemm_bias`] over the same operands.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack from the transposed (`n × k`) layout.
+    pub fn pack_nt(bt: &Matrix) -> PackedB {
+        let (n, k) = bt.shape();
+        let n_panels = n.div_ceil(NR);
+        let mut data = vec![0.0f32; n_panels * NR * k];
+        let mut off = 0;
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            for jp in 0..n_panels {
+                let j0 = jp * NR;
+                let nc = NR.min(n - j0);
+                for p in 0..kc {
+                    let dst = &mut data[off + (jp * kc + p) * NR..][..NR];
+                    for (c, d) in dst.iter_mut().enumerate().take(nc) {
+                        *d = bt.get(j0 + c, k0 + p);
+                    }
+                    // Columns ≥ n stay at the zero fill.
+                }
+            }
+            off += n_panels * kc * NR;
+        }
+        PackedB { k, n, data }
+    }
+
+    /// Inner dimension (rows of the packed operand).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The panel block of the k-chunk starting at byte offset `off`.
+    fn chunk(&self, off: usize, kc: usize) -> &[f32] {
+        &self.data[off..off + self.n.div_ceil(NR) * kc * NR]
+    }
+}
+
+/// `C = epi(Xrows · B)` through the packed microkernel over a prepacked
+/// `B`: left-operand row `i` is `x.row(rows[i])`, packed straight into
+/// MR-tall panels (gather fused into the pack); `C` is the caller's
+/// `rows.len() × n` row-major scratch, zeroed here; `epi` fuses into the
+/// last k-chunk's stores. Single-threaded by design (the leaf-bucket
+/// callers are pool tasks); the A-panel buffer comes from [`scratch`],
+/// so steady state allocates nothing.
+pub fn gemm_packed_gather_epi(
+    x: &Matrix,
+    rows: &[usize],
+    b: &PackedB,
+    c: &mut [f32],
+    epi: Epilogue,
+) {
+    let m = rows.len();
+    let k = x.cols();
+    let n = b.n;
+    assert_eq!(k, b.k, "gemm_packed_gather: inner dims");
+    assert!(c.len() >= m * n, "gemm_packed_gather: short output");
+    if let Epilogue::Bias(bb) | Epilogue::BiasRelu(bb) = epi {
+        assert!(bb.len() >= n, "gemm_packed_gather: short bias");
+    }
+    let c = &mut c[..m * n];
+    c.fill(0.0);
+    if k == 0 {
+        epilogue_pass(c, m, n, epi);
+        return;
+    }
+    let micro = kernels::table().micro_4x8_epi;
+    let m_panels = m.div_ceil(MR);
+    let n_panels = n.div_ceil(NR);
+    let kc_max = k.min(KC);
+    scratch::with_f32(m_panels * MR * kc_max, |apack| {
+        let mut off = 0;
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            pack_a_gather(x, rows, k0, kc, apack);
+            let bp = b.chunk(off, kc);
+            let chunk_epi = if k0 + kc == k { epi } else { Epilogue::None };
+            for ip in 0..m_panels {
+                let r0 = ip * MR;
+                let mr = MR.min(m - r0);
+                let ap = &apack[ip * kc * MR..(ip + 1) * kc * MR];
+                for jp in 0..n_panels {
+                    let j0 = jp * NR;
+                    let nr = NR.min(n - j0);
+                    let bpp = &bp[jp * kc * NR..(jp + 1) * kc * NR];
+                    micro(kc, ap, bpp, &mut c[r0 * n + j0..], n, mr, nr, chunk_epi.narrow(j0));
+                }
+            }
+            off += n_panels * kc * NR;
+        }
+    });
+}
+
+/// Pack gathered rows `x.row(rows[i])` (columns `k0..k0+kc`) into MR-tall
+/// micro-panels — same panel contents `pack_a` would produce from a
+/// contiguous copy of those rows, without materializing the copy.
+fn pack_a_gather(x: &Matrix, rows: &[usize], k0: usize, kc: usize, apack: &mut [f32]) {
+    let m = rows.len();
+    let m_panels = m.div_ceil(MR);
+    for ip in 0..m_panels {
+        let r0 = ip * MR;
+        let mr = MR.min(m - r0);
+        let dst = &mut apack[ip * kc * MR..(ip + 1) * kc * MR];
+        if mr < MR {
+            dst.fill(0.0); // zero-pad the tail panel's missing rows
+        }
+        for r in 0..mr {
+            let src = &x.row(rows[r0 + r])[k0..k0 + kc];
+            for (p, &v) in src.iter().enumerate() {
+                dst[p * MR + r] = v;
+            }
+        }
+    }
+}
+
+/// Scatter-row output GEMM — the leaf bucket's second product, writing
+/// each result row **directly into its final row of the output matrix**
+/// (deleting the contiguous staging buffer and the copy-back loop):
+/// `y[rows[i]] = bias + Σ_p a[i·k+p] · b_row(p)`, with exact-zero `a`
+/// terms skipped (post-ReLU activations are roughly half zeros, halving
+/// the axpy traffic). Per-element accumulation order is `p` ascending —
+/// the serial i-k-j kernel's order — independent of bucket split and
+/// thread count. The zero skip can flip the sign of an exactly-zero
+/// output relative to a non-skipping kernel (`-0.0 + +0.0 = +0.0`);
+/// finite nonzero results are unaffected.
+///
+/// # Safety
+/// `y` must point to a row-major buffer with row stride `n` large enough
+/// that every `rows[i]` row is in bounds, the buffer must outlive the
+/// call, and no other thread may touch the rows named by `rows` while it
+/// runs (the leaf-bucket dispatch hands each task a disjoint row set).
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_bias_scatter_raw(
+    av: &[f32],
+    k: usize,
+    bv: &[f32],
+    n: usize,
+    bias: &[f32],
+    rows: &[usize],
+    y: *mut f32,
+) {
+    debug_assert!(av.len() >= rows.len() * k, "gemm_bias_scatter: short A");
+    debug_assert!(bv.len() >= k * n, "gemm_bias_scatter: short B");
+    debug_assert_eq!(bias.len(), n, "gemm_bias_scatter: bias length");
+    for (i, &r) in rows.iter().enumerate() {
+        let dst = std::slice::from_raw_parts_mut(y.add(r * n), n);
+        dst.copy_from_slice(bias);
+        for (p, &xv) in av[i * k..(i + 1) * k].iter().enumerate() {
+            if xv != 0.0 {
+                axpy_slice(xv, &bv[p * n..(p + 1) * n], dst);
+            }
+        }
     }
 }
 
@@ -392,6 +685,19 @@ fn gemm_tn_band(
 /// Each output row is a bundle of dot products, computed independently —
 /// row-band dispatch is trivially bit-identical to the serial loop.
 pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm_nt_epi(a, b, Epilogue::None)
+}
+
+/// `C = relu(A·Bᵀ + bias)` with bias and ReLU fused into the dot
+/// kernel's store (`C` is write-only here, so the fusion costs nothing
+/// and deletes two elementwise passes). Same dispatch and band
+/// bit-identity story as [`gemm_nt`].
+pub fn gemm_nt_bias_relu(a: &Matrix, b: &Matrix, bias: &[f32]) -> Matrix {
+    assert_eq!(bias.len(), b.rows(), "gemm_nt_bias_relu: bias length mismatch");
+    gemm_nt_epi(a, b, Epilogue::BiasRelu(bias))
+}
+
+fn gemm_nt_epi(a: &Matrix, b: &Matrix, epi: Epilogue) -> Matrix {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "gemm_nt: inner dims");
@@ -403,7 +709,7 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
         || 2 * m * k * n < parallel_flop_threshold()
         || p.threads() == 1
     {
-        gemm_nt_band(av, bv, c.as_mut_slice(), 0, m, k, n);
+        gemm_nt_band(av, bv, c.as_mut_slice(), 0, m, k, n, epi);
         return c;
     }
     let band = band_rows(m, p.threads());
@@ -414,13 +720,17 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
         let rows = band.min(m - i0);
         // SAFETY: disjoint row bands of `c`; `run` blocks until done.
         let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
-        gemm_nt_band(av, bv, cv, i0, rows, k, n);
+        gemm_nt_band(av, bv, cv, i0, rows, k, n, epi);
     });
     c
 }
 
 /// Dot-product band with 4 B-rows per pass over each A row (¼ the A-row
-/// traffic, 4 independent dot chains — §Perf iteration 1).
+/// traffic, 4 independent dot chains — §Perf iteration 1). The store is
+/// a plain assignment, so the epilogue fuses for free: `crow[j] =
+/// epi.apply(j, s)` is the same arithmetic as storing `s` and running a
+/// separate pass.
+#[allow(clippy::too_many_arguments)]
 fn gemm_nt_band(
     av: &[f32],
     bv: &[f32],
@@ -429,33 +739,58 @@ fn gemm_nt_band(
     rows: usize,
     k: usize,
     n: usize,
+    epi: Epilogue,
 ) {
     for i in 0..rows {
         let arow = &av[(i0 + i) * k..(i0 + i + 1) * k];
-        let crow = &mut cv[i * n..(i + 1) * n];
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = &bv[j * k..(j + 1) * k];
-            let b1 = &bv[(j + 1) * k..(j + 2) * k];
-            let b2 = &bv[(j + 2) * k..(j + 3) * k];
-            let b3 = &bv[(j + 3) * k..(j + 4) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for (p, &x) in arow.iter().enumerate() {
-                s0 += x * b0[p];
-                s1 += x * b1[p];
-                s2 += x * b2[p];
-                s3 += x * b3[p];
-            }
-            crow[j] = s0;
-            crow[j + 1] = s1;
-            crow[j + 2] = s2;
-            crow[j + 3] = s3;
-            j += 4;
+        gemm_nt_row(arow, bv, &mut cv[i * n..(i + 1) * n], k, n, epi);
+    }
+}
+
+/// One output row of the `nt` kernel: `crow[j] = epi(arow · bv_j)`.
+fn gemm_nt_row(arow: &[f32], bv: &[f32], crow: &mut [f32], k: usize, n: usize, epi: Epilogue) {
+    let mut j = 0;
+    while j + 4 <= n {
+        let b0 = &bv[j * k..(j + 1) * k];
+        let b1 = &bv[(j + 1) * k..(j + 2) * k];
+        let b2 = &bv[(j + 2) * k..(j + 3) * k];
+        let b3 = &bv[(j + 3) * k..(j + 4) * k];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for (p, &x) in arow.iter().enumerate() {
+            s0 += x * b0[p];
+            s1 += x * b1[p];
+            s2 += x * b2[p];
+            s3 += x * b3[p];
         }
-        while j < n {
-            crow[j] = dot(arow, &bv[j * k..(j + 1) * k]);
-            j += 1;
-        }
+        crow[j] = epi.apply(j, s0);
+        crow[j + 1] = epi.apply(j + 1, s1);
+        crow[j + 2] = epi.apply(j + 2, s2);
+        crow[j + 3] = epi.apply(j + 3, s3);
+        j += 4;
+    }
+    while j < n {
+        crow[j] = epi.apply(j, dot(arow, &bv[j * k..(j + 1) * k]));
+        j += 1;
+    }
+}
+
+/// `C = epi(Xrows · Bᵀ)` where left-operand row `i` is `x.row(rows[i])`:
+/// the gather is fused into the kernel, so no copied input panel exists
+/// at all. Single-threaded by design — the leaf-bucket callers are
+/// already pool tasks (a nested region would run inline anyway). This is
+/// the banded/serial-kind leaf path; the packed kind uses
+/// [`gemm_packed_gather_epi`].
+pub fn gemm_nt_gather_epi(x: &Matrix, rows: &[usize], bt: &Matrix, c: &mut [f32], epi: Epilogue) {
+    let k = x.cols();
+    let (n, kb) = bt.shape();
+    assert_eq!(k, kb, "gemm_nt_gather: inner dims");
+    assert!(c.len() >= rows.len() * n, "gemm_nt_gather: short output");
+    if let Epilogue::Bias(bb) | Epilogue::BiasRelu(bb) = epi {
+        assert!(bb.len() >= n, "gemm_nt_gather: short bias");
+    }
+    let bv = bt.as_slice();
+    for (i, &r) in rows.iter().enumerate() {
+        gemm_nt_row(x.row(r), bv, &mut c[i * n..(i + 1) * n], k, n, epi);
     }
 }
 
@@ -588,6 +923,140 @@ mod tests {
             }
         }
         assert!(c.max_abs_diff(&c0) < 1e-4);
+    }
+
+    #[test]
+    fn gemm_bias_relu_matches_manual() {
+        let mut rng = Rng::seed_from_u64(21);
+        let a = rand_mat(&mut rng, 7, 5);
+        let b = rand_mat(&mut rng, 5, 4);
+        let bias = vec![0.3, -0.7, 0.0, 1.1];
+        let c = gemm_bias_relu(&a, &b, &bias);
+        let c0 = naive(&a, &b);
+        for r in 0..7 {
+            for j in 0..4 {
+                let want = (c0.get(r, j) + bias[j]).max(0.0);
+                assert!((c.get(r, j) - want).abs() < 1e-4, "({r},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_is_bit_identical_to_separate_pass_per_kind() {
+        // The v4 contract: for every kernel kind, gemm_bias(_relu) must
+        // equal gemm + elementwise pass *bitwise* — the fused store is
+        // the same per-element operation order.
+        use crate::tensor::kernels::relu_store;
+        let mut rng = Rng::seed_from_u64(22);
+        let a = rand_mat(&mut rng, 70, 300);
+        let b = rand_mat(&mut rng, 300, 50);
+        let mut bias = vec![0.0f32; 50];
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        bias[7] = -0.0;
+        let _serialize = kernels::force_lock();
+        let _guard = crate::testing::KernelStateGuard::zero_threshold();
+        for kind in KernelKind::ALL {
+            kernels::force(Some(kind));
+            let fused = gemm_bias(&a, &b, &bias);
+            let fused_relu = gemm_bias_relu(&a, &b, &bias);
+            let mut unfused = gemm(&a, &b);
+            let mut unfused_relu = unfused.clone();
+            for r in 0..unfused.rows() {
+                for (j, v) in unfused.row_mut(r).iter_mut().enumerate() {
+                    *v += bias[j];
+                }
+                for (j, v) in unfused_relu.row_mut(r).iter_mut().enumerate() {
+                    *v = relu_store(*v + bias[j]);
+                }
+            }
+            kernels::force(None);
+            assert_eq!(fused, unfused, "gemm_bias drifted under {}", kind.name());
+            assert_eq!(fused_relu, unfused_relu, "gemm_bias_relu drifted under {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn gemm_nt_bias_relu_matches_separate_pass() {
+        use crate::tensor::kernels::relu_store;
+        let mut rng = Rng::seed_from_u64(23);
+        let a = rand_mat(&mut rng, 9, 11);
+        let b = rand_mat(&mut rng, 6, 11); // n×k
+        let mut bias = vec![0.0f32; 6];
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        let fused = gemm_nt_bias_relu(&a, &b, &bias);
+        let mut unfused = gemm_nt(&a, &b);
+        for r in 0..unfused.rows() {
+            for (j, v) in unfused.row_mut(r).iter_mut().enumerate() {
+                *v = relu_store(*v + bias[j]);
+            }
+        }
+        assert_eq!(fused, unfused, "nt fused store drifted from separate pass");
+    }
+
+    #[test]
+    fn gather_variants_match_contiguous_paths_bitwise() {
+        // The serving-path kernels: gemm_nt_gather_epi ≡ gemm_nt over a
+        // gathered copy, and gemm_packed_gather_epi ≡ forced-packed
+        // gemm_bias over the same operands — both bit-exact, since the
+        // gather only changes where rows are read from.
+        let mut rng = Rng::seed_from_u64(24);
+        let x = rand_mat(&mut rng, 40, 33);
+        let bt = rand_mat(&mut rng, 13, 33); // n×k transposed layout
+        let mut bias = vec![0.0f32; 13];
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        let rows: Vec<usize> = (0..23).map(|i| (i * 7) % 40).collect();
+        let xs = x.gather_rows(&rows);
+
+        let mut got = vec![0.0f32; rows.len() * 13];
+        gemm_nt_gather_epi(&x, &rows, &bt, &mut got, Epilogue::BiasRelu(&bias));
+        let want = gemm_nt_bias_relu(&xs, &bt, &bias);
+        assert_eq!(got, want.as_slice(), "nt gather kernel drifted");
+
+        let _serialize = kernels::force_lock();
+        let _guard = crate::testing::KernelStateGuard::zero_threshold();
+        kernels::force(Some(KernelKind::Packed));
+        let want_packed = gemm_bias(&xs, &bt.transpose(), &bias);
+        kernels::force(None);
+        let packed = PackedB::pack_nt(&bt);
+        assert_eq!((packed.k(), packed.n()), (33, 13));
+        let mut got_packed = vec![7.0f32; rows.len() * 13]; // stale scratch: must be overwritten
+        gemm_packed_gather_epi(&x, &rows, &packed, &mut got_packed, Epilogue::Bias(&bias));
+        assert_eq!(got_packed, want_packed.as_slice(), "prepacked gather path drifted");
+    }
+
+    #[test]
+    fn scatter_rows_match_gemm_bias_plus_copy() {
+        let mut rng = Rng::seed_from_u64(25);
+        let a = rand_mat(&mut rng, 6, 9);
+        // ReLU-style zeros in A so the skip loop runs.
+        let mut a = a;
+        for v in a.as_mut_slice().iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let b = rand_mat(&mut rng, 9, 5);
+        let bias = vec![0.5, -0.25, 0.0, 1.0, -1.0];
+        let rows = vec![11usize, 2, 7, 0, 13, 4];
+        let mut y = Matrix::full(14, 5, f32::NAN); // scattered rows overwritten, rest untouched
+        let yptr = y.as_mut_slice().as_mut_ptr();
+        // SAFETY: rows are in bounds of y and the call is single-threaded.
+        unsafe {
+            gemm_bias_scatter_raw(a.as_slice(), 9, b.as_slice(), 5, &bias, &rows, yptr);
+        }
+        let want = gemm_bias(&a, &b, &bias);
+        for (i, &r) in rows.iter().enumerate() {
+            for j in 0..5 {
+                assert!(
+                    (y.get(r, j) - want.get(i, j)).abs() < 1e-5,
+                    "row {r} col {j}: {} vs {}",
+                    y.get(r, j),
+                    want.get(i, j)
+                );
+            }
+        }
+        // Untouched rows stay NaN (the kernel writes only `rows`).
+        assert!(y.get(1, 0).is_nan());
     }
 
     #[test]

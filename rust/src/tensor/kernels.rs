@@ -33,6 +33,14 @@
 //!   auto-vectorizers reliably emit), so fused and portable results may
 //!   differ by final-rounding ulps; *within* one kernel, results are
 //!   bit-identical across band splits and thread counts.
+//! * The `_epi` microkernel variants fuse a store-phase [`Epilogue`]
+//!   (bias add, bias+ReLU) into the tile writeback: each element stores
+//!   `epi(C + acc)`, the same per-element operation order as a separate
+//!   elementwise pass over a finished GEMM — so fused and unfused
+//!   drivers are bit-identical kind by kind, and [`Epilogue::None`]
+//!   degenerates to the base kernels exactly. The ReLU is the masked
+//!   select [`relu_store`] (`-0.0`/NaN normalize to `+0.0` on every
+//!   ISA; NEON deliberately avoids `vmaxq`, which would propagate NaN).
 //! * [`routing_dot`] accumulates into 16 independent lanes
 //!   (`lane = p mod 16`, separate mul and add, never FMA) reduced by a
 //!   fixed pairwise tree. Every ISA performs the same IEEE operations in
@@ -47,6 +55,70 @@ use std::sync::OnceLock;
 /// Microkernel tile: MR rows of `A` × NR columns of `B`.
 pub const MR: usize = 4;
 pub const NR: usize = 8;
+
+/// Store-phase epilogue of the `_epi` microkernels and the band kernels'
+/// write-back: each output element is stored as `C = epi(C + acc)`.
+///
+/// Numerics contract (what the epilogue golden vectors pin): the bias is
+/// added *after* the accumulated tile is added into `C` — per element
+/// `(C_partial + acc) + bias[j]` — which is exactly the order a separate
+/// bias pass over a finished GEMM produces, so a fused store is
+/// bit-identical to `gemm` + elementwise pass for every kernel kind and
+/// thread count. The ReLU is [`relu_store`].
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// Plain accumulate store: `C += acc`.
+    None,
+    /// `C = (C + acc) + bias[j]`, bias broadcast over rows.
+    Bias(&'a [f32]),
+    /// `C = relu_store((C + acc) + bias[j])`.
+    BiasRelu(&'a [f32]),
+}
+
+impl<'a> Epilogue<'a> {
+    /// The epilogue restricted to columns `j0..` (for a column panel).
+    #[inline]
+    pub fn narrow(self, j0: usize) -> Epilogue<'a> {
+        match self {
+            Epilogue::None => Epilogue::None,
+            Epilogue::Bias(b) => Epilogue::Bias(&b[j0..]),
+            Epilogue::BiasRelu(b) => Epilogue::BiasRelu(&b[j0..]),
+        }
+    }
+
+    /// Scalar application to one stored element — the single written-out
+    /// statement of the epilogue every ISA's store phase replicates.
+    #[inline]
+    pub fn apply(self, j: usize, t: f32) -> f32 {
+        match self {
+            Epilogue::None => t,
+            Epilogue::Bias(b) => t + b[j],
+            Epilogue::BiasRelu(b) => relu_store(t + b[j]),
+        }
+    }
+
+    /// Bias slice length available from column 0 (usize::MAX for `None`),
+    /// for the entry-point bounds asserts.
+    #[inline]
+    fn bias_len(&self) -> usize {
+        match self {
+            Epilogue::None => usize::MAX,
+            Epilogue::Bias(b) | Epilogue::BiasRelu(b) => b.len(),
+        }
+    }
+}
+
+/// The store-phase ReLU: strict `t > 0` keeps `t`, everything else stores
+/// a literal `+0.0` — the same compare+mask select the SIMD kernels use,
+/// so `-0.0` (and NaN) normalize to `+0.0` identically on every ISA.
+#[inline]
+pub fn relu_store(t: f32) -> f32 {
+    if t > 0.0 {
+        t
+    } else {
+        0.0
+    }
+}
 
 /// GEMM execution strategy above the FLOP threshold.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -129,6 +201,21 @@ fn env_default() -> KernelKind {
 pub type Micro4x8 =
     fn(kc: usize, ap: &[f32], bp: &[f32], cv: &mut [f32], n: usize, mr: usize, nr: usize);
 
+/// [`Micro4x8`] with a fused store-phase [`Epilogue`]: the tile is stored
+/// as `C = epi(C + acc)` instead of `C += acc`, saving the separate
+/// bias/ReLU pass over `C` (which at leaf-GEMM shapes — small `k`, wide
+/// `n` — costs as much as the accumulation itself).
+pub type Micro4x8Epi = for<'a> fn(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+    epi: Epilogue<'a>,
+);
+
 /// The boundary-logit dot product (lane-striped, fixed reduction).
 pub type RoutingDotFn = fn(&[f32], &[f32]) -> f32;
 
@@ -143,6 +230,10 @@ pub struct KernelTable {
     pub fused_tile: bool,
     /// The packed-path GEMM microkernel.
     pub micro_4x8: Micro4x8,
+    /// The epilogue-fusing variant of the microkernel; with
+    /// [`Epilogue::None`] it is bit-identical to [`KernelTable::micro_4x8`]
+    /// (the base kernels are thin `None` wrappers around it).
+    pub micro_4x8_epi: Micro4x8Epi,
     /// The tree-descent dot kernel (always ≡ [`routing_dot_scalar`]).
     pub routing_dot: RoutingDotFn,
 }
@@ -162,6 +253,7 @@ fn detect() -> KernelTable {
                 isa: "avx2-fma",
                 fused_tile: true,
                 micro_4x8: micro_4x8_avx2fma_entry,
+                micro_4x8_epi: micro_4x8_epi_avx2fma_entry,
                 routing_dot: routing_dot_avx_entry,
             };
         }
@@ -172,6 +264,7 @@ fn detect() -> KernelTable {
                 isa: "avx",
                 fused_tile: false,
                 micro_4x8: micro_4x8_portable,
+                micro_4x8_epi: micro_4x8_portable_epi,
                 routing_dot: routing_dot_avx_entry,
             };
         }
@@ -183,6 +276,7 @@ fn detect() -> KernelTable {
                 isa: "neon",
                 fused_tile: true,
                 micro_4x8: micro_4x8_neon_entry,
+                micro_4x8_epi: micro_4x8_epi_neon_entry,
                 routing_dot: routing_dot_neon_entry,
             };
         }
@@ -191,6 +285,7 @@ fn detect() -> KernelTable {
         isa: "portable",
         fused_tile: false,
         micro_4x8: micro_4x8_portable,
+        micro_4x8_epi: micro_4x8_portable_epi,
         routing_dot: routing_dot_scalar,
     }
 }
@@ -212,6 +307,24 @@ pub fn micro_4x8_ref(
     mr: usize,
     nr: usize,
 ) {
+    micro_4x8_ref_epi(kc, ap, bp, cv, n, mr, nr, Epilogue::None)
+}
+
+/// [`micro_4x8_ref`] with the fused store-phase epilogue — the scalar
+/// `mul_add` contract the AVX2/FMA and NEON `_epi` kernels are
+/// bit-identical to. With [`Epilogue::None`] the store degenerates to
+/// `C += acc`, so this is also the implementation behind
+/// [`micro_4x8_ref`].
+pub fn micro_4x8_ref_epi(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+    epi: Epilogue,
+) {
     let mut acc = [[0.0f32; NR]; MR];
     for p in 0..kc {
         let a: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
@@ -224,7 +337,7 @@ pub fn micro_4x8_ref(
     }
     for r in 0..mr {
         for j in 0..nr {
-            cv[r * n + j] += acc[r][j];
+            cv[r * n + j] = epi.apply(j, cv[r * n + j] + acc[r][j]);
         }
     }
 }
@@ -288,6 +401,53 @@ pub fn micro_4x8_portable(
     }
 }
 
+/// [`micro_4x8_portable`] with the fused store-phase epilogue: the same
+/// unfused mul+add accumulation loop, then `C = epi(C + acc)` in one
+/// pass while the tile is still in registers. [`Epilogue::None`] routes
+/// to the base tile (identical stores either way).
+pub fn micro_4x8_portable_epi(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+    epi: Epilogue,
+) {
+    if matches!(epi, Epilogue::None) {
+        return micro_4x8_portable(kc, ap, bp, cv, n, mr, nr);
+    }
+    let mut acc0 = [0.0f32; NR];
+    let mut acc1 = [0.0f32; NR];
+    let mut acc2 = [0.0f32; NR];
+    let mut acc3 = [0.0f32; NR];
+    for p in 0..kc {
+        let b: &[f32; NR] = bp[p * NR..(p + 1) * NR].try_into().unwrap();
+        let a: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
+        for (acc, &bc) in acc0.iter_mut().zip(b.iter()) {
+            *acc += a[0] * bc;
+        }
+        for (acc, &bc) in acc1.iter_mut().zip(b.iter()) {
+            *acc += a[1] * bc;
+        }
+        for (acc, &bc) in acc2.iter_mut().zip(b.iter()) {
+            *acc += a[2] * bc;
+        }
+        for (acc, &bc) in acc3.iter_mut().zip(b.iter()) {
+            *acc += a[3] * bc;
+        }
+    }
+    // Spilling the accumulators into one array here is fine: the hot
+    // kc loop above never took their addresses.
+    let accs = [acc0, acc1, acc2, acc3];
+    for (r, acc) in accs.iter().enumerate().take(mr) {
+        for (j, &s) in acc.iter().enumerate().take(nr) {
+            cv[r * n + j] = epi.apply(j, cv[r * n + j] + s);
+        }
+    }
+}
+
 /// Table entry for the AVX2/FMA kernel.
 #[cfg(target_arch = "x86_64")]
 fn micro_4x8_avx2fma_entry(
@@ -299,14 +459,31 @@ fn micro_4x8_avx2fma_entry(
     mr: usize,
     nr: usize,
 ) {
+    micro_4x8_epi_avx2fma_entry(kc, ap, bp, cv, n, mr, nr, Epilogue::None)
+}
+
+/// Table entry for the AVX2/FMA kernel with fused epilogue.
+#[cfg(target_arch = "x86_64")]
+fn micro_4x8_epi_avx2fma_entry(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+    epi: Epilogue,
+) {
     // Real asserts, not debug: the table field is `pub`, so safe code can
     // reach this with short panels, and the kernel reads through raw
     // pointers. One branch per tile is noise next to a kc-deep FMA loop.
     assert!(ap.len() >= kc * MR && bp.len() >= kc * NR, "micro_4x8: short panel");
     assert!(mr == 0 || cv.len() >= (mr - 1) * n + nr, "micro_4x8: short C tile");
+    // Full-width epilogue tiles load 8 bias lanes with one vector read.
+    assert!(epi.bias_len() >= nr, "micro_4x8: short bias");
     // SAFETY: installed in the table only after runtime avx2+fma
-    // detection; panel/tile bounds asserted above.
-    unsafe { micro_4x8_avx2fma(kc, ap, bp, cv, n, mr, nr) }
+    // detection; panel/tile/bias bounds asserted above.
+    unsafe { micro_4x8_avx2fma(kc, ap, bp, cv, n, mr, nr, epi) }
 }
 
 /// Explicit 4x8 AVX2/FMA microkernel: per `p`, one 8-wide load of the
@@ -325,10 +502,11 @@ unsafe fn micro_4x8_avx2fma(
     n: usize,
     mr: usize,
     nr: usize,
+    epi: Epilogue,
 ) {
     use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_broadcast_ss, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_setzero_ps,
-        _mm256_storeu_ps,
+        _mm256_add_ps, _mm256_and_ps, _mm256_broadcast_ss, _mm256_cmp_ps, _mm256_fmadd_ps,
+        _mm256_loadu_ps, _mm256_setzero_ps, _mm256_storeu_ps, _CMP_GT_OQ,
     };
     let apt = ap.as_ptr();
     let bpt = bp.as_ptr();
@@ -345,23 +523,46 @@ unsafe fn micro_4x8_avx2fma(
         acc3 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(3)), b, acc3);
     }
     if nr == NR {
-        // Full-width tile: vector read-modify-write per C row.
+        // Full-width tile: vector read-modify-write per C row, with the
+        // epilogue fused into the same store. The ReLU select is
+        // `and(t, t > 0)` — bit-identical to [`relu_store`] (NaN and
+        // -0.0 both mask to +0.0).
         let c = cv.as_mut_ptr();
+        let zero = _mm256_setzero_ps();
+        let (bias, relu, fused) = match epi {
+            Epilogue::None => (zero, false, false),
+            Epilogue::Bias(b) => (_mm256_loadu_ps(b.as_ptr()), false, true),
+            Epilogue::BiasRelu(b) => (_mm256_loadu_ps(b.as_ptr()), true, true),
+        };
+        macro_rules! store_row {
+            ($off:expr, $acc:expr) => {{
+                let cr = c.add($off);
+                let mut t = _mm256_add_ps(_mm256_loadu_ps(cr), $acc);
+                if fused {
+                    t = _mm256_add_ps(t, bias);
+                }
+                if relu {
+                    t = _mm256_and_ps(t, _mm256_cmp_ps::<_CMP_GT_OQ>(t, zero));
+                }
+                _mm256_storeu_ps(cr, t);
+            }};
+        }
         if mr > 0 {
-            _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), acc0));
+            store_row!(0, acc0);
         }
         if mr > 1 {
-            _mm256_storeu_ps(c.add(n), _mm256_add_ps(_mm256_loadu_ps(c.add(n)), acc1));
+            store_row!(n, acc1);
         }
         if mr > 2 {
-            _mm256_storeu_ps(c.add(2 * n), _mm256_add_ps(_mm256_loadu_ps(c.add(2 * n)), acc2));
+            store_row!(2 * n, acc2);
         }
         if mr > 3 {
-            _mm256_storeu_ps(c.add(3 * n), _mm256_add_ps(_mm256_loadu_ps(c.add(3 * n)), acc3));
+            store_row!(3 * n, acc3);
         }
     } else {
         // Edge tile: spill the accumulators once, then masked scalar
-        // writeback (the loop above never took their address).
+        // writeback through the epilogue (the loop above never took
+        // their address).
         let mut t = [[0.0f32; NR]; MR];
         _mm256_storeu_ps(t[0].as_mut_ptr(), acc0);
         _mm256_storeu_ps(t[1].as_mut_ptr(), acc1);
@@ -369,7 +570,7 @@ unsafe fn micro_4x8_avx2fma(
         _mm256_storeu_ps(t[3].as_mut_ptr(), acc3);
         for (r, row) in t.iter().enumerate().take(mr) {
             for (j, &s) in row.iter().enumerate().take(nr) {
-                cv[r * n + j] += s;
+                cv[r * n + j] = epi.apply(j, cv[r * n + j] + s);
             }
         }
     }
@@ -386,12 +587,28 @@ fn micro_4x8_neon_entry(
     mr: usize,
     nr: usize,
 ) {
-    // Real asserts, not debug — see micro_4x8_avx2fma_entry.
+    micro_4x8_epi_neon_entry(kc, ap, bp, cv, n, mr, nr, Epilogue::None)
+}
+
+/// Table entry for the NEON kernel with fused epilogue.
+#[cfg(target_arch = "aarch64")]
+fn micro_4x8_epi_neon_entry(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    cv: &mut [f32],
+    n: usize,
+    mr: usize,
+    nr: usize,
+    epi: Epilogue,
+) {
+    // Real asserts, not debug — see micro_4x8_epi_avx2fma_entry.
     assert!(ap.len() >= kc * MR && bp.len() >= kc * NR, "micro_4x8: short panel");
     assert!(mr == 0 || cv.len() >= (mr - 1) * n + nr, "micro_4x8: short C tile");
+    assert!(epi.bias_len() >= nr, "micro_4x8: short bias");
     // SAFETY: installed in the table only after runtime neon detection;
-    // panel/tile bounds asserted above.
-    unsafe { micro_4x8_neon(kc, ap, bp, cv, n, mr, nr) }
+    // panel/tile/bias bounds asserted above.
+    unsafe { micro_4x8_neon(kc, ap, bp, cv, n, mr, nr, epi) }
 }
 
 /// NEON 4x4 microkernel, applied to each 4-column half of the packed
@@ -410,8 +627,12 @@ unsafe fn micro_4x8_neon(
     n: usize,
     mr: usize,
     nr: usize,
+    epi: Epilogue,
 ) {
-    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32};
+    use std::arch::aarch64::{
+        vaddq_f32, vandq_u32, vcgtq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32,
+        vreinterpretq_f32_u32, vreinterpretq_u32_f32, vst1q_f32,
+    };
     let apt = ap.as_ptr();
     let bpt = bp.as_ptr();
     // acc{r}l = lanes 0..4 of row r, acc{r}h = lanes 4..8.
@@ -442,24 +663,52 @@ unsafe fn micro_4x8_neon(
     }
     if nr == NR {
         let c = cv.as_mut_ptr();
+        let zero = vdupq_n_f32(0.0);
+        let (biasl, biash, relu, fused) = match epi {
+            Epilogue::None => (zero, zero, false, false),
+            Epilogue::Bias(b) => (vld1q_f32(b.as_ptr()), vld1q_f32(b.as_ptr().add(4)), false, true),
+            Epilogue::BiasRelu(b) => {
+                (vld1q_f32(b.as_ptr()), vld1q_f32(b.as_ptr().add(4)), true, true)
+            }
+        };
+        // The ReLU select is `and(t, t > 0)` (vcgtq mask), bit-identical
+        // to [`relu_store`] — NEON's vmaxq would propagate NaN where x86
+        // maxps and the scalar replica return +0.0, so the masked form is
+        // the one that matches across ISAs.
+        macro_rules! store_row {
+            ($off:expr, $accl:expr, $acch:expr) => {{
+                let cr = c.add($off);
+                let mut tl = vaddq_f32(vld1q_f32(cr), $accl);
+                let mut th = vaddq_f32(vld1q_f32(cr.add(4)), $acch);
+                if fused {
+                    tl = vaddq_f32(tl, biasl);
+                    th = vaddq_f32(th, biash);
+                }
+                if relu {
+                    tl = vreinterpretq_f32_u32(vandq_u32(
+                        vreinterpretq_u32_f32(tl),
+                        vcgtq_f32(tl, zero),
+                    ));
+                    th = vreinterpretq_f32_u32(vandq_u32(
+                        vreinterpretq_u32_f32(th),
+                        vcgtq_f32(th, zero),
+                    ));
+                }
+                vst1q_f32(cr, tl);
+                vst1q_f32(cr.add(4), th);
+            }};
+        }
         if mr > 0 {
-            vst1q_f32(c, vaddq_f32(vld1q_f32(c), acc0l));
-            vst1q_f32(c.add(4), vaddq_f32(vld1q_f32(c.add(4)), acc0h));
+            store_row!(0, acc0l, acc0h);
         }
         if mr > 1 {
-            let c1 = c.add(n);
-            vst1q_f32(c1, vaddq_f32(vld1q_f32(c1), acc1l));
-            vst1q_f32(c1.add(4), vaddq_f32(vld1q_f32(c1.add(4)), acc1h));
+            store_row!(n, acc1l, acc1h);
         }
         if mr > 2 {
-            let c2 = c.add(2 * n);
-            vst1q_f32(c2, vaddq_f32(vld1q_f32(c2), acc2l));
-            vst1q_f32(c2.add(4), vaddq_f32(vld1q_f32(c2.add(4)), acc2h));
+            store_row!(2 * n, acc2l, acc2h);
         }
         if mr > 3 {
-            let c3 = c.add(3 * n);
-            vst1q_f32(c3, vaddq_f32(vld1q_f32(c3), acc3l));
-            vst1q_f32(c3.add(4), vaddq_f32(vld1q_f32(c3.add(4)), acc3h));
+            store_row!(3 * n, acc3l, acc3h);
         }
     } else {
         let mut t = [[0.0f32; NR]; MR];
@@ -473,7 +722,7 @@ unsafe fn micro_4x8_neon(
         vst1q_f32(t[3].as_mut_ptr().add(4), acc3h);
         for (r, row) in t.iter().enumerate().take(mr) {
             for (j, &s) in row.iter().enumerate().take(nr) {
-                cv[r * n + j] += s;
+                cv[r * n + j] = epi.apply(j, cv[r * n + j] + s);
             }
         }
     }
@@ -702,6 +951,65 @@ mod tests {
             "microkernel drifted from its {} contract",
             if t.fused_tile { "fused" } else { "portable" }
         );
+        // The epilogue kernel under every epilogue, same contract story;
+        // with None it must match the base kernel bit for bit.
+        let mut bias = vec![0.0f32; NR];
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        bias[3] = -0.0;
+        for epi in
+            [Epilogue::None, Epilogue::Bias(&bias), Epilogue::BiasRelu(&bias)]
+        {
+            let mut got = vec![0.25f32; MR * NR];
+            (t.micro_4x8_epi)(kc, &ap, &bp, &mut got, NR, MR, NR, epi);
+            let mut want = vec![0.25f32; MR * NR];
+            if t.fused_tile {
+                micro_4x8_ref_epi(kc, &ap, &bp, &mut want, NR, MR, NR, epi);
+            } else {
+                micro_4x8_portable_epi(kc, &ap, &bp, &mut want, NR, MR, NR, epi);
+            }
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "epilogue kernel drifted from its contract under {epi:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn relu_store_normalizes_zeros_and_nan() {
+        assert_eq!(relu_store(2.5), 2.5);
+        assert_eq!(relu_store(-1.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(relu_store(-0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(relu_store(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(relu_store(f32::NAN).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn epilogue_boundary_hits_exact_zero_as_positive_zero() {
+        // Construct tile sums that land exactly on ±0 at the ReLU
+        // boundary: with kc = 0 the accumulator is +0.0, so the stored
+        // value is relu((C + 0) + bias). C = -bias makes the pre-ReLU
+        // sum exactly +0.0 (IEEE x + (-x) = +0.0), and a -0.0 bias over
+        // a +0.0 C exercises the signed-zero add — every case must
+        // store literal +0.0 bits, on the dispatched kernel too.
+        let c0 = [0.5f32, -0.5, 0.0, -0.0, 1.0, -1.0, 0.25, -0.25];
+        let bias = [-0.5f32, 0.5, -0.0, 0.0, -1.0, 1.0, -0.25, 0.25];
+        let ap: [f32; 0] = [];
+        let bp: [f32; 0] = [];
+        let kernels: [Micro4x8Epi; 3] =
+            [micro_4x8_ref_epi, micro_4x8_portable_epi, table().micro_4x8_epi];
+        for kernel in kernels {
+            let mut c = c0.to_vec();
+            kernel(0, &ap, &bp, &mut c, NR, 1, NR, Epilogue::BiasRelu(&bias));
+            for (j, v) in c.iter().enumerate() {
+                assert_eq!(
+                    v.to_bits(),
+                    0.0f32.to_bits(),
+                    "lane {j}: ReLU boundary produced {v} (bits {:#010x}), want +0.0",
+                    v.to_bits()
+                );
+            }
+        }
     }
 
     #[test]

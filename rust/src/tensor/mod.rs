@@ -12,20 +12,35 @@ mod gemm;
 pub mod kernels;
 mod ops;
 pub mod pool;
+pub mod scratch;
 
 pub use gemm::{
-    gemm, gemm_acc, gemm_bias, gemm_nt, gemm_packed, gemm_scalar, gemm_tn,
-    parallel_flop_threshold, set_parallel_flop_threshold,
+    gemm, gemm_acc, gemm_bias, gemm_bias_relu, gemm_nt, gemm_nt_bias_relu, gemm_nt_gather_epi,
+    gemm_packed, gemm_packed_gather_epi, gemm_scalar, gemm_tn, parallel_flop_threshold,
+    set_parallel_flop_threshold, PackedB,
 };
-pub use kernels::{prefetch_slice, routing_dot};
+pub(crate) use gemm::gemm_bias_scatter_raw;
+pub use kernels::{prefetch_slice, relu_store, routing_dot, Epilogue};
 pub use ops::*;
 
 /// Row-major 2-D `f32` tensor. Rows index samples in all batched code.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Invariant: `data.len() >= rows * cols`. [`Matrix::resize`] is
+/// grow-only on the backing buffer, so a retained matrix shrunk for a
+/// small batch regrows to a previously-seen size without reallocating
+/// *or* re-zeroing (the tail beyond `rows * cols` is retained garbage
+/// that no accessor exposes). Equality compares the logical window.
+#[derive(Clone, Debug)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
     data: Vec<f32>,
+}
+
+impl PartialEq for Matrix {
+    fn eq(&self, other: &Matrix) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.as_slice() == other.as_slice()
+    }
 }
 
 impl Matrix {
@@ -74,55 +89,78 @@ impl Matrix {
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.rows * self.cols
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
     #[inline]
     pub fn as_slice(&self) -> &[f32] {
-        &self.data
+        &self.data[..self.rows * self.cols]
     }
 
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        &mut self.data
+        &mut self.data[..self.rows * self.cols]
     }
 
-    /// Consume into the underlying row-major buffer.
+    /// Consume into the underlying row-major buffer (truncated to the
+    /// logical `rows * cols` window).
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        let mut data = self.data;
+        data.truncate(self.rows * self.cols);
+        data
     }
 
-    /// Immutable view of row `r`.
+    /// Immutable view of row `r`. Indexes through the logical window, so
+    /// an out-of-range row panics in release builds too — the retained
+    /// tail beyond `rows * cols` (see [`Matrix::resize`]) is unreachable.
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
         debug_assert!(r < self.rows);
-        &self.data[r * self.cols..(r + 1) * self.cols]
+        &self.as_slice()[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Mutable view of row `r`.
+    /// Mutable view of row `r` (window-checked like [`Matrix::row`]).
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         debug_assert!(r < self.rows);
-        &mut self.data[r * self.cols..(r + 1) * self.cols]
+        let cols = self.cols;
+        &mut self.as_mut_slice()[r * cols..(r + 1) * cols]
     }
 
-    /// Element access.
+    /// Element access (window-checked like [`Matrix::row`]).
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
-        self.data[r * self.cols + c]
+        self.as_slice()[r * self.cols + c]
     }
 
-    /// Element assignment.
+    /// Element assignment (window-checked like [`Matrix::row`]).
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);
-        self.data[r * self.cols + c] = v;
+        let idx = r * self.cols + c;
+        self.as_mut_slice()[idx] = v;
+    }
+
+    /// Reshape in place to `rows × cols`. The backing buffer is
+    /// **grow-only**: it extends (zero-filling just the new tail) only
+    /// when `rows * cols` exceeds every size seen so far, so a retained
+    /// serving matrix cycling through fluctuating batch sizes performs
+    /// neither allocations nor memsets once it has seen its largest
+    /// batch. Contents are **unspecified** after a resize; callers
+    /// overwrite every element (the batched inference and serving paths
+    /// write every output row).
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        if self.data.len() < rows * cols {
+            self.data.resize(rows * cols, 0.0);
+        }
     }
 
     /// Transposed copy.
@@ -153,7 +191,7 @@ impl Matrix {
 
     /// Elementwise map in place.
     pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
-        for v in self.data.iter_mut() {
+        for v in self.as_mut_slice() {
             *v = f(*v);
         }
     }
@@ -168,7 +206,7 @@ impl Matrix {
     /// `self += other` (shapes must match).
     pub fn add_assign(&mut self, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+        for (a, b) in self.as_mut_slice().iter_mut().zip(other.as_slice()) {
             *a += b;
         }
     }
@@ -176,14 +214,14 @@ impl Matrix {
     /// `self += alpha * other`.
     pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+        for (a, b) in self.as_mut_slice().iter_mut().zip(other.as_slice()) {
             *a += alpha * b;
         }
     }
 
     /// `self *= alpha`.
     pub fn scale(&mut self, alpha: f32) {
-        for a in self.data.iter_mut() {
+        for a in self.as_mut_slice() {
             *a *= alpha;
         }
     }
@@ -191,32 +229,32 @@ impl Matrix {
     /// Elementwise product in place.
     pub fn mul_assign_elem(&mut self, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+        for (a, b) in self.as_mut_slice().iter_mut().zip(other.as_slice()) {
             *a *= b;
         }
     }
 
     /// Zero all entries (reuse allocation between steps).
     pub fn fill_zero(&mut self) {
-        self.data.iter_mut().for_each(|v| *v = 0.0);
+        self.as_mut_slice().iter_mut().for_each(|v| *v = 0.0);
     }
 
     /// Sum of all entries.
     pub fn sum(&self) -> f32 {
-        self.data.iter().sum()
+        self.as_slice().iter().sum()
     }
 
     /// Frobenius norm.
     pub fn frobenius(&self) -> f32 {
-        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+        self.as_slice().iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
     /// Max absolute difference to another matrix (for tests).
     pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
         assert_eq!(self.shape(), other.shape());
-        self.data
+        self.as_slice()
             .iter()
-            .zip(other.data.iter())
+            .zip(other.as_slice())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max)
     }
@@ -252,6 +290,35 @@ mod tests {
         let m = Matrix::from_fn(5, 2, |r, _| r as f32);
         let g = m.gather_rows(&[4, 0, 2]);
         assert_eq!(g.as_slice(), &[4.0, 4.0, 0.0, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn resize_reshapes_and_reuses() {
+        let mut m = Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f32);
+        let cap = m.data.capacity();
+        m.resize(2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.len(), 6);
+        assert_eq!(m.as_slice().len(), 6, "accessors expose the logical window only");
+        m.resize(4, 3);
+        assert_eq!(m.shape(), (4, 3));
+        assert_eq!(m.data.len(), 12, "backing buffer is grow-only (no re-zeroing regrow)");
+        assert_eq!(m.data.capacity(), cap, "regrow within capacity must not reallocate");
+        // Contents are unspecified after resize; writing works as usual.
+        m.row_mut(3).copy_from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.get(3, 2), 3.0);
+    }
+
+    #[test]
+    fn equality_and_reductions_ignore_retained_tail() {
+        // A shrunk matrix keeps garbage beyond rows*cols; equality,
+        // sums, and into_vec must all see only the logical window.
+        let mut a = Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32 + 1.0);
+        a.resize(2, 2);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a, b);
+        assert_eq!(a.sum(), 10.0);
+        assert_eq!(a.into_vec(), vec![1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]

@@ -44,20 +44,28 @@ pub fn log_softmax_rows(m: &Matrix) -> Matrix {
 
 /// Index of the max entry per row.
 pub fn argmax_rows(m: &Matrix) -> Vec<usize> {
-    (0..m.rows())
-        .map(|r| {
-            let row = m.row(r);
-            let mut best = 0;
-            let mut bv = row[0];
-            for (i, &v) in row.iter().enumerate().skip(1) {
-                if v > bv {
-                    bv = v;
-                    best = i;
-                }
+    let mut out = Vec::new();
+    argmax_rows_into(m, &mut out);
+    out
+}
+
+/// [`argmax_rows`] into a caller-retained buffer (cleared and refilled,
+/// reusing capacity — scoring loops stop allocating once warm).
+pub fn argmax_rows_into(m: &Matrix, out: &mut Vec<usize>) {
+    out.clear();
+    out.reserve(m.rows());
+    for r in 0..m.rows() {
+        let row = m.row(r);
+        let mut best = 0;
+        let mut bv = row[0];
+        for (i, &v) in row.iter().enumerate().skip(1) {
+            if v > bv {
+                bv = v;
+                best = i;
             }
-            best
-        })
-        .collect()
+        }
+        out.push(best);
+    }
 }
 
 /// Logistic sigmoid.

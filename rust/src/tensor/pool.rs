@@ -34,18 +34,19 @@ pub(crate) struct SendPtr<T = f32>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
-/// One parallel region, shared with the workers.
+/// One parallel region, shared with the workers. Deliberately tiny and
+/// allocation-free to clone: the region's task counter and panic flag
+/// live in [`Shared`] (reset by `run` before each generation), so
+/// dispatching a region performs **zero heap allocations** — serving
+/// batches can fan out leaf buckets on every request without touching
+/// the allocator (asserted by `tests/alloc_regression.rs`).
 #[derive(Clone)]
 struct Job {
     /// Lifetime-erased borrow of the caller's closure; sound because
     /// `run` does not return (or unwind) until `State::active` drops to
     /// zero.
     func: &'static (dyn Fn(usize) + Sync),
-    /// Next task index to claim (work stealing via fetch_add).
-    next: Arc<AtomicUsize>,
     n_tasks: usize,
-    /// Set when any task panicked; `run` re-panics after the barrier.
-    panicked: Arc<std::sync::atomic::AtomicBool>,
 }
 
 struct State {
@@ -63,6 +64,14 @@ struct Shared {
     work_cv: Condvar,
     /// The submitting thread waits here for `active == 0`.
     done_cv: Condvar,
+    /// Next task index of the current region (work stealing via
+    /// fetch_add). Reset by `run` before the generation is published;
+    /// safe to reuse across regions because the barrier guarantees every
+    /// worker has retired the previous region first.
+    next: AtomicUsize,
+    /// Set when any task of the current region panicked; `run` re-panics
+    /// after the barrier.
+    panicked: std::sync::atomic::AtomicBool,
 }
 
 /// The pool. Dropping it shuts the workers down and joins them.
@@ -92,6 +101,8 @@ impl ThreadPool {
             state: Mutex::new(State { job: None, generation: 0, active: 0, shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+            panicked: std::sync::atomic::AtomicBool::new(false),
         });
         let mut handles = Vec::with_capacity(threads - 1);
         for w in 0..threads - 1 {
@@ -136,16 +147,15 @@ impl ThreadPool {
         let func: &'static (dyn Fn(usize) + Sync) = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
         };
-        let next = Arc::new(AtomicUsize::new(0));
-        let panicked = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        // Reset the region atomics BEFORE publishing the generation: the
+        // mutex release below orders these stores ahead of any worker's
+        // first read. Reuse is safe — the previous region's barrier
+        // guaranteed every worker retired before `run` last returned.
+        self.shared.next.store(0, Ordering::Relaxed);
+        self.shared.panicked.store(false, Ordering::Relaxed);
         {
             let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
-            st.job = Some(Job {
-                func,
-                next: next.clone(),
-                n_tasks,
-                panicked: panicked.clone(),
-            });
+            st.job = Some(Job { func, n_tasks });
             st.generation += 1;
             st.active = self.handles.len();
             self.shared.work_cv.notify_all();
@@ -153,12 +163,12 @@ impl ThreadPool {
         // The submitting thread steals tasks too.
         IN_POOL.with(|c| c.set(true));
         loop {
-            let t = next.fetch_add(1, Ordering::Relaxed);
+            let t = self.shared.next.fetch_add(1, Ordering::Relaxed);
             if t >= n_tasks {
                 break;
             }
             if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(t))).is_err() {
-                panicked.store(true, Ordering::Relaxed);
+                self.shared.panicked.store(true, Ordering::Relaxed);
                 break;
             }
         }
@@ -170,7 +180,7 @@ impl ThreadPool {
             }
             st.job = None;
         }
-        if panicked.load(Ordering::Relaxed) {
+        if self.shared.panicked.load(Ordering::Relaxed) {
             panic!("ThreadPool::run: a pool task panicked");
         }
     }
@@ -207,14 +217,14 @@ fn worker_loop(shared: &Shared) {
             }
         };
         loop {
-            let t = job.next.fetch_add(1, Ordering::Relaxed);
+            let t = shared.next.fetch_add(1, Ordering::Relaxed);
             if t >= job.n_tasks {
                 break;
             }
             // Catch task panics so the region barrier always completes;
             // `run` re-panics on the submitting thread.
             if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.func)(t))).is_err() {
-                job.panicked.store(true, Ordering::Relaxed);
+                shared.panicked.store(true, Ordering::Relaxed);
                 break;
             }
         }

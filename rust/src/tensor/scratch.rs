@@ -1,0 +1,102 @@
+//! Per-thread reusable scratch buffers for the compute hot paths.
+//!
+//! Pool workers live for the process (or for a serving worker's
+//! lifetime), so a buffer checked out here warms up to the largest size
+//! its thread has seen and then stops allocating: steady-state batched
+//! inference and packed-GEMM traffic become allocation-free (asserted by
+//! `tests/alloc_regression.rs`). The consumers are the packed GEMM's
+//! panel buffers (`apack`/`bpack`), the leaf-bucket activation tiles in
+//! `nn::fff`, and the per-sample `a1` buffer of `Fff::forward_infer`.
+//!
+//! Checkout is stack-like and re-entrant: nested [`with_f32`] calls pop
+//! distinct buffers, and each returns to the thread's free stack on
+//! exit, so a bucket task that checks out an activation tile can still
+//! run a packed GEMM that checks out panel buffers underneath it.
+//!
+//! Contents are **stale** on checkout (only capacity growth is
+//! zero-filled, by `Vec::resize`): every caller fully overwrites the
+//! slice it asked for, which the panel packers, gathers, and fused GEMM
+//! epilogues all do by construction. Callers that accumulate (`C +=`)
+//! must zero their slice first — `infer_grouped`'s activation tile does.
+//!
+//! If the closure panics the buffer is dropped rather than returned (a
+//! later checkout simply allocates afresh), so a failing pool task can
+//! never hand a poisoned buffer to an unrelated batch.
+
+use std::cell::RefCell;
+
+thread_local! {
+    static F32_STACK: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with a reusable thread-local scratch slice of exactly `len`
+/// elements. Contents are unspecified (see module docs); the slice must
+/// be fully overwritten (or zeroed) before being read.
+pub fn with_f32<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    let mut buf = F32_STACK.with(|s| s.borrow_mut().pop()).unwrap_or_default();
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    let out = f(&mut buf[..len]);
+    F32_STACK.with(|s| s.borrow_mut().push(buf));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_closure_result_and_exact_len() {
+        let got = with_f32(17, |buf| {
+            assert_eq!(buf.len(), 17);
+            buf.fill(2.0);
+            buf.iter().sum::<f32>()
+        });
+        assert_eq!(got, 34.0);
+    }
+
+    #[test]
+    fn nested_checkouts_get_distinct_buffers() {
+        with_f32(8, |outer| {
+            outer.fill(1.0);
+            with_f32(8, |inner| {
+                inner.fill(2.0);
+                assert_eq!(inner[0], 2.0);
+            });
+            // The inner checkout must not have aliased `outer`.
+            assert!(outer.iter().all(|&v| v == 1.0));
+        });
+    }
+
+    #[test]
+    fn buffer_is_reused_across_checkouts() {
+        // Warm a buffer, then check a second checkout of the same size
+        // sees the retained (stale) contents — proof of reuse, and a
+        // reminder that callers must overwrite.
+        let marker = 1234.5f32;
+        with_f32(33, |buf| buf.fill(marker));
+        let stale = with_f32(33, |buf| buf[32]);
+        assert_eq!(stale, marker);
+    }
+
+    #[test]
+    fn growth_zero_fills_new_tail() {
+        // A fresh thread-local stack (new thread) grows from empty: the
+        // whole slice is zero-filled by the first checkout.
+        std::thread::spawn(|| {
+            with_f32(9, |buf| assert!(buf.iter().all(|&v| v == 0.0)));
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn panic_drops_buffer_without_poisoning() {
+        let _ = std::panic::catch_unwind(|| {
+            with_f32(4, |_| panic!("boom"));
+        });
+        // Subsequent checkouts still work.
+        with_f32(4, |buf| buf.fill(1.0));
+    }
+}

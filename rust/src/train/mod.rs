@@ -5,4 +5,4 @@
 
 mod trainer;
 
-pub use trainer::{build_model, run_training, EpochRecord, Outcome, Trainer};
+pub use trainer::{build_model, run_training, EpochRecord, EvalScratch, Outcome, Trainer};

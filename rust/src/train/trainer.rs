@@ -19,6 +19,30 @@ use crate::config::{ModelKind, OptimizerKind, TrainConfig};
 use crate::data::{generate, BatchIter, Dataset, GenOptions};
 use crate::nn::{loss::cross_entropy, Adam, Fff, FffConfig, Model, Moe, MoeConfig, Optimizer, Sgd};
 use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Reusable buffers for the `FORWARD_I` scoring passes: `run` holds one
+/// of these across **all** epochs, so the per-epoch train/val evaluations
+/// (and the final test-set pass) reuse the same logits matrix and
+/// prediction vector instead of allocating per batch per epoch — the
+/// trainer-side counterpart of the serving path's
+/// [`crate::nn::InferScratch`].
+pub struct EvalScratch {
+    logits: Matrix,
+    preds: Vec<usize>,
+}
+
+impl EvalScratch {
+    pub fn new() -> EvalScratch {
+        EvalScratch { logits: Matrix::zeros(0, 0), preds: Vec::new() }
+    }
+}
+
+impl Default for EvalScratch {
+    fn default() -> EvalScratch {
+        EvalScratch::new()
+    }
+}
 
 /// Per-epoch log entry.
 #[derive(Clone, Debug)]
@@ -109,6 +133,8 @@ impl<'a> Trainer<'a> {
         let mut plateau_epochs = 0usize;
         let mut history = Vec::new();
         let mut epochs_run = 0;
+        // One scoring scratch for every evaluation this run performs.
+        let mut eval_scratch = EvalScratch::new();
 
         for epoch in 1..=cfg.max_epochs {
             epochs_run = epoch;
@@ -128,8 +154,8 @@ impl<'a> Trainer<'a> {
                 batches += 1;
             }
 
-            let train_acc = self.eval_infer(model, &self.train);
-            let val_acc = self.eval_infer(model, &self.val);
+            let train_acc = self.eval_infer_with(model, &self.train, &mut eval_scratch);
+            let val_acc = self.eval_infer_with(model, &self.val, &mut eval_scratch);
 
             let improved_train = train_acc > best_train_acc + 1e-6;
             if improved_train {
@@ -178,11 +204,11 @@ impl<'a> Trainer<'a> {
             Some(snap) => {
                 let current = model.snapshot();
                 model.restore(&snap);
-                let acc = self.eval_infer(model, &self.test);
+                let acc = self.eval_infer_with(model, &self.test, &mut eval_scratch);
                 model.restore(&current);
                 acc
             }
-            None => self.eval_infer(model, &self.test),
+            None => self.eval_infer_with(model, &self.test, &mut eval_scratch),
         };
 
         Outcome {
@@ -197,15 +223,26 @@ impl<'a> Trainer<'a> {
 
     /// Evaluate hard-inference accuracy on a dataset, in batches.
     pub fn eval_infer(&self, model: &dyn Model, data: &Dataset) -> f32 {
+        self.eval_infer_with(model, data, &mut EvalScratch::new())
+    }
+
+    /// [`Trainer::eval_infer`] with caller-retained scoring buffers —
+    /// what `run` uses so every epoch's `FORWARD_I` passes share one
+    /// scratch instead of allocating logits/predictions per batch.
+    pub fn eval_infer_with(
+        &self,
+        model: &dyn Model,
+        data: &Dataset,
+        scratch: &mut EvalScratch,
+    ) -> f32 {
         let mut hits = 0usize;
         for (x, labels) in BatchIter::sequential(data, 512) {
-            let logits = model.forward_infer(&x);
-            let pred = crate::tensor::argmax_rows(&logits);
-            hits += pred.iter().zip(&labels).filter(|(p, l)| p == l).count();
+            model.forward_infer_into(&x, &mut scratch.logits);
+            crate::tensor::argmax_rows_into(&scratch.logits, &mut scratch.preds);
+            hits += scratch.preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
         }
         hits as f32 / data.len().max(1) as f32
     }
-
 }
 
 /// One-call convenience: build dataset + model from a config and train.

@@ -1,0 +1,162 @@
+//! Allocation-regression suite: proves the serving hot path is
+//! **zero-allocation in steady state** (ISSUE 4 acceptance).
+//!
+//! A counting global allocator wraps `System`; after a warm-up that
+//! grows every retained buffer ([`InferScratch`], the routed-leaf
+//! vector, the output matrix, the thread-local [`tensor::scratch`]
+//! buffers), the measured window re-runs the exact same batch and the
+//! allocation counter must not move — for **every** forced GEMM kernel
+//! kind, via `testing::check_kernels`.
+//!
+//! Everything lives in ONE `#[test]`: the harness runs tests in a single
+//! binary concurrently, and a process-global allocation counter cannot
+//! attribute allocations across interleaved tests. The measured sections
+//! run on a 1-thread pool — work stealing on a wider pool could move a
+//! bucket to a worker whose thread-local scratch never saw it during
+//! warm-up, which would charge a (legitimate, once-per-thread) growth
+//! allocation to the steady state nondeterministically. The pool's own
+//! dispatch machinery is covered separately with a no-op region, which
+//! is deterministic at any width.
+
+use fastfeedforward::nn::{FffInfer, InferScratch};
+use fastfeedforward::rng::Rng;
+use fastfeedforward::tensor::kernels::{self, KernelKind};
+use fastfeedforward::tensor::pool::{with_threads, ThreadPool};
+use fastfeedforward::tensor::{gemm_acc, Matrix};
+use fastfeedforward::testing::{check_kernels, KernelStateGuard};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAllocator;
+
+// SAFETY: pure delegation to `System`, plus a relaxed counter bump on
+// every acquiring call (alloc, alloc_zeroed, realloc).
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::SeqCst)
+}
+
+/// Run `f` twice to warm every retained buffer, then `reps` more times
+/// counting allocations; returns the steady-state allocation count.
+fn measure(mut f: impl FnMut(), reps: usize) -> u64 {
+    f();
+    f();
+    let before = allocations();
+    for _ in 0..reps {
+        f();
+    }
+    allocations() - before
+}
+
+#[test]
+fn steady_state_hot_paths_are_allocation_free() {
+    // --- 1) Batched routed inference, per kernel kind. ---
+    check_kernels(
+        "warm infer_batch_routed_into allocates nothing",
+        |rng| {
+            (
+                2 + rng.below(3),  // depth 2..=4
+                2 + rng.below(5),  // leaf width
+                6 + rng.below(10), // dim_in
+                3 + rng.below(6),  // dim_out
+                rng.next_u64(),
+            )
+        },
+        |&(depth, leaf, dim_in, dim_out, seed), kind| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let model = FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, 1 << depth);
+            // ≥ 2·n_alloc rows → the grouped (bucketed) fast path.
+            let batch = 4 << depth;
+            let mut x = Matrix::zeros(batch, dim_in);
+            rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+            with_threads(1, || {
+                let mut scratch = InferScratch::new();
+                let mut leaf_of: Vec<usize> = Vec::new();
+                let mut y = Matrix::zeros(0, 0);
+                let delta = measure(
+                    || {
+                        model.route_batch_into(&x, &mut leaf_of);
+                        model.infer_batch_routed_into(&x, &leaf_of, &mut scratch, &mut y);
+                        // The serving backend's one-pass entry (descent +
+                        // histogram/telemetry + buckets) must be warm too.
+                        std::hint::black_box(model.infer_batch_stats_into(
+                            &x,
+                            &mut scratch,
+                            &mut y,
+                        ));
+                    },
+                    3,
+                );
+                if delta != 0 {
+                    return Err(format!(
+                        "{delta} heap allocations in warm steady state (kernel {}, \
+                         depth {depth}, leaf {leaf}, dims {dim_in}->{dim_out}, batch {batch})",
+                        kind.name()
+                    ));
+                }
+                // The batch output must still be real: every row written.
+                if y.shape() != (batch, dim_out) {
+                    return Err(format!("output shape {:?}", y.shape()));
+                }
+                Ok(())
+            })
+        },
+    );
+
+    // --- 2) The packed/banded/serial GEMM cores into a retained C
+    //        (covers the pack-panel scratch buffers). ---
+    {
+        let _serialize = kernels::force_lock();
+        let _guard = KernelStateGuard::zero_threshold();
+        let mut rng = Rng::seed_from_u64(7);
+        let mut a = Matrix::zeros(48, 96);
+        let mut b = Matrix::zeros(96, 24);
+        rng.fill_normal(a.as_mut_slice(), 0.0, 1.0);
+        rng.fill_normal(b.as_mut_slice(), 0.0, 1.0);
+        let mut c = Matrix::zeros(48, 24);
+        for kind in KernelKind::ALL {
+            kernels::force(Some(kind));
+            let delta = with_threads(1, || measure(|| gemm_acc(&a, &b, &mut c), 3));
+            kernels::force(None);
+            assert_eq!(
+                delta,
+                0,
+                "warm gemm_acc allocated {delta} times under kernel {}",
+                kind.name()
+            );
+        }
+    }
+
+    // --- 3) Pool region dispatch itself (any width; no-op tasks make
+    //        this deterministic under work stealing). ---
+    {
+        let pool = ThreadPool::new(4);
+        let delta = measure(|| pool.run(64, &|_| {}), 10);
+        assert_eq!(delta, 0, "ThreadPool::run allocated {delta} times per warm region");
+    }
+}

@@ -567,6 +567,125 @@ fn prop_gemm_transposed_variants_match_naive() {
 }
 
 #[test]
+fn prop_fused_epilogues_bit_identical_to_unfused_across_kernels_and_threads() {
+    use fastfeedforward::tensor::kernels::relu_store;
+    use fastfeedforward::tensor::pool::with_threads;
+    use fastfeedforward::tensor::{gemm, gemm_bias, gemm_bias_relu, gemm_nt, gemm_nt_bias_relu};
+    // ISSUE 4 acceptance: for every kernel kind and 1/2/4/8 threads, the
+    // fused bias / bias+ReLU entry points must equal "plain GEMM + an
+    // elementwise epilogue pass" BITWISE — the fused store performs the
+    // same per-element operations in the same order. The unfused
+    // reference is computed once per (case, kind) at 1 thread, so the
+    // comparison also pins thread-count invariance of the fused paths.
+    let mut per_case: Option<(Matrix, Matrix, Matrix, Vec<f32>)> = None;
+    check_kernels(
+        "fused epilogue ≡ gemm + separate pass (bitwise)",
+        gen_gemm_case,
+        |case, kind| {
+            use fastfeedforward::tensor::kernels::KernelKind;
+            if kind == KernelKind::ALL[0] {
+                let mut rng = Rng::seed_from_u64(case.seed);
+                let a = rand_matrix(&mut rng, case.m, case.k);
+                let b = rand_matrix(&mut rng, case.k, case.n);
+                let bt = rand_matrix(&mut rng, case.n, case.k);
+                let mut bias = vec![0.0f32; case.n];
+                rng.fill_normal(&mut bias, 0.0, 1.0);
+                if case.n > 2 {
+                    bias[2] = -0.0; // signed-zero lane through the epilogue
+                }
+                per_case = Some((a, b, bt, bias));
+            }
+            let (a, b, bt, bias) = per_case.as_ref().expect("per-case state");
+            // Unfused references under THIS kind, single-threaded.
+            let (mut want, mut want_relu, mut want_nt) =
+                with_threads(1, || (gemm(a, b), gemm(a, b), gemm_nt(a, bt)));
+            for r in 0..want.rows() {
+                for (j, v) in want.row_mut(r).iter_mut().enumerate() {
+                    *v += bias[j];
+                }
+                for (j, v) in want_relu.row_mut(r).iter_mut().enumerate() {
+                    *v = relu_store(*v + bias[j]);
+                }
+                for (j, v) in want_nt.row_mut(r).iter_mut().enumerate() {
+                    *v = relu_store(*v + bias[j]);
+                }
+            }
+            for threads in [1usize, 2, 4, 8] {
+                let (fused, fused_relu, fused_nt) = with_threads(threads, || {
+                    (gemm_bias(a, b, bias), gemm_bias_relu(a, b, bias),
+                     gemm_nt_bias_relu(a, bt, bias))
+                });
+                if fused != want {
+                    return Err(format!("gemm_bias drifted at {threads} threads"));
+                }
+                if fused_relu != want_relu {
+                    return Err(format!("gemm_bias_relu drifted at {threads} threads"));
+                }
+                if fused_nt != want_nt {
+                    return Err(format!("gemm_nt_bias_relu drifted at {threads} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scratch_serving_path_reuse_is_bitwise_stable() {
+    use fastfeedforward::nn::InferScratch;
+    use fastfeedforward::tensor::pool::with_threads;
+    // One InferScratch + output matrix + leaf buffer survive across ALL
+    // cases and kernel kinds of the matrix (deliberately dirty between
+    // cases): the `_into` serving forms must still match the allocating
+    // wrappers bitwise, and the grouped engine must be thread-count
+    // invariant — each leaf bucket's arithmetic is self-contained.
+    let mut scratch = InferScratch::new();
+    let mut leaf_of = Vec::new();
+    let mut y = Matrix::zeros(0, 0);
+    check_kernels(
+        "warm-scratch inference ≡ allocating inference (bitwise)",
+        |rng| {
+            (
+                rng.below(6),       // depth 0..=5
+                1 + rng.below(5),   // leaf width
+                2 + rng.below(10),  // dim_in
+                1 + rng.below(5),   // dim_out
+                1 + rng.below(140), // batch: spans sparse and grouped
+                rng.next_u64(),
+            )
+        },
+        |&(depth, leaf, dim_in, dim_out, batch, seed), kind| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let model = FffInfer::random(&mut rng, dim_in, dim_out, depth, leaf, 1 << depth);
+            let x = rand_matrix(&mut rng, batch, dim_in);
+            model.route_batch_into(&x, &mut leaf_of);
+            if leaf_of != model.route_batch(&x) {
+                return Err("route_batch_into ≠ route_batch".into());
+            }
+            let fresh = model.infer_batch_routed(&x, &leaf_of);
+            model.infer_batch_routed_into(&x, &leaf_of, &mut scratch, &mut y);
+            if y != fresh {
+                return Err(format!(
+                    "dirty-scratch output drifted (kernel {}, depth {depth}, batch {batch})",
+                    kind.name()
+                ));
+            }
+            for threads in [2usize, 4, 8] {
+                let pooled = with_threads(threads, || model.infer_batch_routed(&x, &leaf_of));
+                if pooled != fresh {
+                    return Err(format!(
+                        "grouped inference drifted between 1 and {threads} threads \
+                         (kernel {}, depth {depth}, batch {batch})",
+                        kind.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_grouped_parallel_infer_matches_infer_one_depths_1_to_8() {
     use fastfeedforward::tensor::pool::with_threads;
     // Depths 1..=8, forced through the pooled grouped path under every
