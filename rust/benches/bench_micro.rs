@@ -9,19 +9,23 @@
 //! **fused-vs-separate epilogue suite** (bias+ReLU in the store phase vs
 //! an elementwise pass), the **scratch-arena suite** (retained
 //! `InferScratch` vs the allocating wrappers at batch 4096, depth 8),
-//! and the **routing-descent suite** (depths 4–15, 1/2/4 threads), all
-//! recorded to `BENCH_gemm.json` (schema v4) so the perf trajectory is
+//! the **routing-descent suite** (depths 4–15, 1/2/4 threads), and the
+//! **training-engine suite** (level-batched GEMM training vs the
+//! per-node baseline on the Table-2-shaped workload, 1/2/4 threads), all
+//! recorded to `BENCH_gemm.json` (schema v5) so the perf trajectory is
 //! tracked PR over PR:
 //!
 //! ```text
 //! cargo bench --manifest-path rust/Cargo.toml --bench bench_micro          # full, from repo root
 //! cargo bench --bench bench_micro -- --quick                               # CI smoke subset
 //! cargo bench --bench bench_micro -- --quick --routing-only                # descent smoke only
+//! cargo bench --bench bench_micro -- --quick --train-only                  # training smoke only
 //! ```
 
 use fastfeedforward::bench::{time_budgeted, time_fn, Table};
 use fastfeedforward::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, NativeFffBackend};
-use fastfeedforward::nn::{Ff, FffInfer, InferScratch};
+use fastfeedforward::nn::loss::cross_entropy_into;
+use fastfeedforward::nn::{Ff, Fff, FffConfig, FffInfer, InferScratch, Model};
 use fastfeedforward::rng::Rng;
 use fastfeedforward::tensor::kernels::relu_store;
 use fastfeedforward::tensor::{gemm, gemm_bias_relu, gemm_scalar, kernels, pool, Matrix};
@@ -216,6 +220,81 @@ fn scratch_suite(quick: bool) -> Vec<String> {
     rows
 }
 
+/// Training-engine suite: the level-batched GEMM training step
+/// (forward `FORWARD_T`, cross-entropy gradient, backward) against the
+/// per-node baseline engine, on the Table-2-shaped workload (dim ≥ 128,
+/// depth ≥ 8, batch 4096; ISSUE 5 acceptance: ≥ 2x single-thread and
+/// scaling at 2+ threads). Returns the `train` rows for
+/// `BENCH_gemm.json`.
+fn train_suite(quick: bool) -> Vec<String> {
+    let mut table = Table::new("training engine scaling", &["name", "time", "derived"]);
+    let mut rows: Vec<String> = Vec::new();
+    let budget = Duration::from_millis(if quick { 150 } else { 600 });
+    let (dim_in, dim_out, leaf) = (if quick { 128usize } else { 256 }, 10usize, 4usize);
+    let (depth, batch) = if quick { (5usize, 1024usize) } else { (8usize, 4096usize) };
+    let mut rng = Rng::seed_from_u64(33);
+    let mut cfg = FffConfig::new(dim_in, dim_out, depth, leaf);
+    cfg.hardening = 3.0;
+    let mut model = Fff::new(&mut rng, cfg);
+    let mut x = Matrix::zeros(batch, dim_in);
+    rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+    let labels: Vec<usize> = (0..batch).map(|r| r % dim_out).collect();
+    let mut logits = Matrix::zeros(0, 0);
+    let mut dl = Matrix::zeros(0, 0);
+    let mut dx = Matrix::zeros(0, 0);
+
+    // Baseline: the per-node reference engine, single thread (what every
+    // pre-PR-5 Table 2 epoch ran).
+    pool::set_global_threads(1);
+    let mut brng = Rng::seed_from_u64(5);
+    let t_base = time_budgeted(budget, 2, 200, || {
+        let y = model.forward_train_baseline(&x, &mut brng);
+        std::hint::black_box(cross_entropy_into(&y, &labels, &mut dl));
+        model.zero_grad();
+        std::hint::black_box(model.backward_baseline(&dl));
+    });
+    table.row(vec![
+        format!("train step d={depth} dim={dim_in} b={batch} per-node"),
+        format!("{:.3} ms", t_base.mean_ms()),
+        format!("{:.0} samples/ms", batch as f64 / t_base.mean_ms()),
+    ]);
+    rows.push(format!(
+        "{{\"depth\": {depth}, \"dim\": {dim_in}, \"leaf\": {leaf}, \"batch\": {batch}, \
+         \"path\": \"per-node\", \"threads\": 1, \"ms\": {}, \"samples_per_ms\": {}, \
+         \"speedup_vs_per_node\": 1.0}}",
+        json_num(t_base.mean_ms()),
+        json_num(batch as f64 / t_base.mean_ms()),
+    ));
+    for &threads in &ROUTE_THREAD_SWEEP {
+        pool::set_global_threads(threads);
+        let mut srng = Rng::seed_from_u64(5);
+        let t = time_budgeted(budget, 2, 200, || {
+            model.forward_train_into(&x, &mut srng, &mut logits);
+            std::hint::black_box(cross_entropy_into(&logits, &labels, &mut dl));
+            model.zero_grad();
+            model.backward_into(&dl, &mut dx);
+            std::hint::black_box(&dx);
+        });
+        let speedup = t_base.mean.as_secs_f64() / t.mean.as_secs_f64();
+        table.row(vec![
+            format!("train step d={depth} dim={dim_in} b={batch} level-batched t={threads}"),
+            format!("{:.3} ms", t.mean_ms()),
+            format!("{speedup:.2}x vs per-node"),
+        ]);
+        rows.push(format!(
+            "{{\"depth\": {depth}, \"dim\": {dim_in}, \"leaf\": {leaf}, \"batch\": {batch}, \
+             \"path\": \"level-batched\", \"threads\": {threads}, \"ms\": {}, \
+             \"samples_per_ms\": {}, \"speedup_vs_per_node\": {}}}",
+            json_num(t.mean_ms()),
+            json_num(batch as f64 / t.mean_ms()),
+            json_num(speedup),
+        ));
+    }
+    pool::set_global_threads(pool::default_global_threads());
+    table.print();
+    rows
+}
+
 /// GEMM + FFF-inference thread-scaling suite → `BENCH_gemm.json`.
 fn scaling_suite(quick: bool) {
     let mut table = Table::new("gemm/fff_infer scaling", &["name", "time", "derived"]);
@@ -348,19 +427,22 @@ fn scaling_suite(quick: bool) {
     let epilogue_rows = epilogue_suite(quick);
     let scratch_rows = scratch_suite(quick);
     let routing_rows = routing_suite(quick);
+    let train_rows = train_suite(quick);
 
     let out_path = std::env::var("FFF_BENCH_GEMM_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());
     let json = format!(
-        "{{\n  \"schema\": \"fff-bench-gemm/v4\",\n  \"quick\": {quick},\n  \
+        "{{\n  \"schema\": \"fff-bench-gemm/v5\",\n  \"quick\": {quick},\n  \
          \"host_threads\": {},\n  \"isa\": \"{packed_isa}\",\n  \"gemm\": [\n    {}\n  ],\n  \
          \"fff_infer\": [\n    {}\n  ],\n  \"epilogue\": [\n    {}\n  ],\n  \
-         \"scratch\": [\n    {}\n  ],\n  \"routing\": [\n    {}\n  ]\n}}\n",
+         \"scratch\": [\n    {}\n  ],\n  \"routing\": [\n    {}\n  ],\n  \
+         \"train\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         gemm_rows.join(",\n    "),
         fff_rows.join(",\n    "),
         epilogue_rows.join(",\n    "),
         scratch_rows.join(",\n    "),
         routing_rows.join(",\n    "),
+        train_rows.join(",\n    "),
     );
     match std::fs::write(&out_path, json) {
         Ok(()) => println!("wrote {out_path}"),
@@ -370,10 +452,14 @@ fn scaling_suite(quick: bool) {
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    // Routing-only smoke: run just the descent suite (no JSON rewrite, so
-    // a partial run never clobbers the tracked artifact).
+    // Routing-only / train-only smokes: run just that suite (no JSON
+    // rewrite, so a partial run never clobbers the tracked artifact).
     if std::env::args().any(|a| a == "--routing-only") {
         let _ = routing_suite(quick);
+        return;
+    }
+    if std::env::args().any(|a| a == "--train-only") {
+        let _ = train_suite(quick);
         return;
     }
     scaling_suite(quick);

@@ -51,24 +51,45 @@ impl<'a> BatchIter<'a> {
             self.data.len().div_ceil(self.batch_size)
         }
     }
+
+    /// Refill caller-retained batch buffers with the next mini-batch:
+    /// `x` is resized (grow-only) and overwritten, `labels` cleared and
+    /// refilled. Returns `false` when the epoch is exhausted. The
+    /// training loop holds one `(x, labels)` pair across all batches of
+    /// all epochs, so after the first full-size batch the input pipeline
+    /// materializes nothing — the `_into` twin of the `Iterator` impl,
+    /// which gathers a fresh matrix + label vec per batch.
+    pub fn next_batch_into(&mut self, x: &mut Matrix, labels: &mut Vec<usize>) -> bool {
+        if self.pos >= self.order.len() {
+            return false;
+        }
+        let end = (self.pos + self.batch_size).min(self.order.len());
+        if self.drop_last && end - self.pos < self.batch_size {
+            return false;
+        }
+        let idx = &self.order[self.pos..end];
+        self.pos = end;
+        x.resize(idx.len(), self.data.images.cols());
+        for (o, &i) in idx.iter().enumerate() {
+            x.row_mut(o).copy_from_slice(self.data.images.row(i));
+        }
+        labels.clear();
+        labels.extend(idx.iter().map(|&i| self.data.labels[i]));
+        true
+    }
 }
 
 impl<'a> Iterator for BatchIter<'a> {
     type Item = (Matrix, Vec<usize>);
 
     fn next(&mut self) -> Option<Self::Item> {
-        if self.pos >= self.order.len() {
-            return None;
+        let mut images = Matrix::zeros(0, 0);
+        let mut labels = Vec::new();
+        if self.next_batch_into(&mut images, &mut labels) {
+            Some((images, labels))
+        } else {
+            None
         }
-        let end = (self.pos + self.batch_size).min(self.order.len());
-        if self.drop_last && end - self.pos < self.batch_size {
-            return None;
-        }
-        let idx = &self.order[self.pos..end];
-        self.pos = end;
-        let images = self.data.images.gather_rows(idx);
-        let labels = idx.iter().map(|&i| self.data.labels[i]).collect();
-        Some((images, labels))
     }
 }
 
@@ -109,6 +130,25 @@ mod tests {
         let b: Vec<usize> = BatchIter::shuffled(&d, 16, &mut rng2).flat_map(|(_, y)| y).collect();
         assert_eq!(a, b);
         assert_eq!(a.len(), 103);
+    }
+
+    #[test]
+    fn next_batch_into_matches_iterator_with_retained_buffers() {
+        let d = data();
+        let mut rng1 = Rng::seed_from_u64(8);
+        let mut rng2 = Rng::seed_from_u64(8);
+        let mut it = BatchIter::shuffled(&d, 32, &mut rng1);
+        let mut x = Matrix::zeros(0, 0);
+        let mut labels = Vec::new();
+        let mut got = 0usize;
+        for (want_x, want_l) in BatchIter::shuffled(&d, 32, &mut rng2) {
+            assert!(it.next_batch_into(&mut x, &mut labels), "refill form ended early");
+            assert_eq!(x, want_x, "batch {got} matrix drifted");
+            assert_eq!(labels, want_l, "batch {got} labels drifted");
+            got += 1;
+        }
+        assert!(!it.next_batch_into(&mut x, &mut labels), "refill form yielded extra batch");
+        assert_eq!(got, 4);
     }
 
     #[test]

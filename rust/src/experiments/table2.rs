@@ -18,7 +18,7 @@ pub fn run(scale: Scale) {
 
     let mut table = Table::new(
         "Table 2 — CIFAR10, equal training widths (inference width 32)",
-        &["width", "model", "M_A", "ETT", "G_A", "ETT"],
+        &["width", "model", "M_A", "ETT", "G_A", "ETT", "ms/epoch"],
     );
     let mut csv_rows = Vec::new();
     for &width in &widths {
@@ -31,6 +31,11 @@ pub fn run(scale: Scale) {
             cfg.lr_plateau = lr_plateau;
             cfg.batch_size = batch;
             let r = run_seeds(&cfg, seeds);
+            // Epoch wall-clock (training + scoring) across the seeds —
+            // the recipes that exercise the pool-parallel level-batched
+            // training engine at batch 4096.
+            let ep_ms = r.outcomes.iter().map(|o| o.mean_epoch_ms).sum::<f64>()
+                / r.outcomes.len().max(1) as f64;
             table.row(vec![
                 width.to_string(),
                 match model {
@@ -42,9 +47,10 @@ pub fn run(scale: Scale) {
                 format!("{:.0}", r.ett_ma.mean),
                 format!("{:.1}", r.best_ga * 100.0),
                 format!("{:.0}", r.ett_ga.mean),
+                format!("{ep_ms:.1}"),
             ]);
             csv_rows.push(format!(
-                "{width},{},{:.4},{:.1},{:.4},{:.1}",
+                "{width},{},{:.4},{:.1},{:.4},{:.1},{ep_ms:.2}",
                 model.name(),
                 r.best_ma,
                 r.ett_ma.mean,
@@ -54,8 +60,8 @@ pub fn run(scale: Scale) {
         }
     }
     table.print();
-    let path =
-        write_csv("table2", "width,model,best_ma,ett_ma,best_ga,ett_ga", &csv_rows).expect("csv");
+    let path = write_csv("table2", "width,model,best_ma,ett_ma,best_ga,ett_ga,epoch_ms", &csv_rows)
+        .expect("csv");
     println!("csv: {}", path.display());
     println!("paper shape: FFF beats MoE on M_A/G_A at every width and reaches its");
     println!("scores at ETTs an order of magnitude smaller; FF holds the M_A ceiling.");

@@ -7,20 +7,26 @@
 
 use super::{Linear, Model, ParamVisitor};
 use crate::rng::Rng;
-use crate::tensor::{relu_inplace, Matrix};
+use crate::tensor::{gemm_bias_relu, gemm_bias_relu_into, gemm_nt_into, Matrix};
 
 /// `y = relu(x·W1 + b1)·W2 + b2`.
 #[derive(Clone, Debug)]
 pub struct Ff {
     pub l1: Linear,
     pub l2: Linear,
-    cache: Option<Cache>,
+    cache: Cache,
 }
 
-#[derive(Clone, Debug)]
+/// Retained training-pass state: every matrix here is grow-only and
+/// reused step after step, so warm training steps make zero heap
+/// allocations (tests/alloc_regression.rs). `valid` replaces the old
+/// `Option` — backward before any forward still panics.
+#[derive(Clone, Debug, Default)]
 struct Cache {
     x: Matrix,
-    a1: Matrix, // post-ReLU hidden activations
+    a1: Matrix,  // post-ReLU hidden activations
+    da1: Matrix, // backward scratch: dL/da1
+    valid: bool,
 }
 
 impl Ff {
@@ -28,7 +34,7 @@ impl Ff {
         Ff {
             l1: Linear::new(rng, dim_in, width),
             l2: Linear::new(rng, width, dim_out),
-            cache: None,
+            cache: Cache::default(),
         }
     }
 
@@ -57,29 +63,46 @@ impl Ff {
 }
 
 impl Model for Ff {
-    fn forward_train(&mut self, x: &Matrix, _rng: &mut Rng) -> Matrix {
-        let mut a1 = self.l1.forward(x);
-        relu_inplace(&mut a1);
-        let y = self.l2.forward(&a1);
-        self.cache = Some(Cache { x: x.clone(), a1 });
+    fn forward_train(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
+        let mut y = Matrix::zeros(0, 0);
+        self.forward_train_into(x, rng, &mut y);
         y
     }
 
+    /// Both GEMMs write into the retained cache/output (bias and ReLU
+    /// fused into the first store) — a warm step allocates nothing.
+    fn forward_train_into(&mut self, x: &Matrix, _rng: &mut Rng, y: &mut Matrix) {
+        let cache = &mut self.cache;
+        cache.x.resize(x.rows(), x.cols());
+        cache.x.as_mut_slice().copy_from_slice(x.as_slice());
+        gemm_bias_relu_into(x, &self.l1.w, &self.l1.b, &mut cache.a1);
+        self.l2.forward_into(&cache.a1, y);
+        cache.valid = true;
+    }
+
     fn backward(&mut self, d_logits: &Matrix) -> Matrix {
-        let cache = self.cache.as_ref().expect("backward before forward_train").clone();
-        let mut da1 = self.l2.backward(&cache.a1, d_logits);
+        let mut dx = Matrix::zeros(0, 0);
+        self.backward_into(d_logits, &mut dx);
+        dx
+    }
+
+    fn backward_into(&mut self, d_logits: &Matrix, dx: &mut Matrix) {
+        assert!(self.cache.valid, "backward before forward_train");
+        self.l2.accumulate_grads(&self.cache.a1, d_logits);
+        gemm_nt_into(d_logits, &self.l2.w, &mut self.cache.da1);
         // ReLU mask: a1 > 0 (cache holds post-activation values).
-        for (d, &a) in da1.as_mut_slice().iter_mut().zip(cache.a1.as_slice()) {
+        let cache = &mut self.cache;
+        for (d, &a) in cache.da1.as_mut_slice().iter_mut().zip(cache.a1.as_slice()) {
             if a <= 0.0 {
                 *d = 0.0;
             }
         }
-        self.l1.backward(&cache.x, &da1)
+        self.l1.accumulate_grads(&cache.x, &cache.da1);
+        gemm_nt_into(&cache.da1, &self.l1.w, dx);
     }
 
     fn forward_infer(&self, x: &Matrix) -> Matrix {
-        let mut a1 = self.l1.forward(x);
-        relu_inplace(&mut a1);
+        let a1 = gemm_bias_relu(x, &self.l1.w, &self.l1.b);
         self.l2.forward(&a1)
     }
 

@@ -32,10 +32,13 @@
 use super::{init, Linear, Model, ParamVisitor};
 use crate::rng::Rng;
 use crate::tensor::kernels::{self, KernelKind};
+use crate::tensor::pool::SendPtr;
 use crate::tensor::{
-    bernoulli_entropy, dot, gemm_nt, prefetch_slice, relu_inplace, routing_dot, scratch, sigmoid,
-    Epilogue, Matrix, PackedB,
+    bernoulli_entropy, dot, gemm_acc, gemm_bias_into, gemm_bias_relu_into, gemm_into, gemm_nt,
+    gemm_nt_acc, gemm_nt_into, gemm_tn_acc, prefetch_slice, relu_inplace, routing_dot, scratch,
+    sigmoid, Epilogue, Matrix, PackedB,
 };
+use std::slice::from_raw_parts_mut;
 
 /// Fold a raw leaf index onto the allocated leaf banks — **the** aliased
 /// leaf-storage masking rule (see EXPERIMENTS.md §Aliased leaf storage).
@@ -78,6 +81,69 @@ fn descend(depth: usize, mut logit: impl FnMut(usize, usize) -> f32) -> usize {
         i = 2 * i + usize::from(logit(m, i) >= 0.0);
     }
     i
+}
+
+/// Rows per shard of the level-batched training engine's row-band work.
+/// A **constant**, never a function of the pool width: the shard
+/// partition — and with it the order of every fixed-order partial
+/// reduction ([`col_sums_sharded`], the entropy monitor) — is identical
+/// at `FFF_THREADS=1/2/4/8`, which is what makes training bit-identical
+/// across thread counts (the training twin of the inference engines'
+/// invariant). 128 rows keeps a Table-2 batch (4096) at 32 shards —
+/// enough for work stealing to absorb stragglers on an 8-wide pool.
+const TRAIN_SHARD_ROWS: usize = 128;
+
+/// Number of shards the fixed partition cuts a `b`-row batch into.
+#[inline]
+fn n_shards(b: usize) -> usize {
+    b.div_ceil(TRAIN_SHARD_ROWS).max(1)
+}
+
+/// Row range `[r0, r1)` of shard `s` under the fixed partition.
+#[inline]
+fn shard_range(s: usize, b: usize) -> (usize, usize) {
+    let r0 = (s * TRAIN_SHARD_ROWS).min(b);
+    (r0, (r0 + TRAIN_SHARD_ROWS).min(b))
+}
+
+/// Dispatch the fixed shard partition on the current pool. Shards write
+/// disjoint row bands (or private partial-sum rows), so pooled and
+/// serial execution produce identical bits; nested calls from inside a
+/// pool task run inline.
+fn run_shards(n_shards: usize, f: &(dyn Fn(usize) + Sync)) {
+    crate::tensor::pool::current().run(n_shards, f);
+}
+
+/// `out[j] += Σ_r m[r, j]` via the fixed shard partition: each shard
+/// accumulates its rows (ascending) into a private partials row, then
+/// the partials are reduced in shard-index order — the fixed-order
+/// gradient reduction that keeps bias gradients (and every other
+/// column-sum in the training engine) bit-identical at any thread count
+/// while still going wide on the pool.
+fn col_sums_sharded(m: &Matrix, partials: &mut Matrix, out: &mut [f32]) {
+    let b = m.rows();
+    let cols = m.cols();
+    debug_assert_eq!(out.len(), cols, "col_sums_sharded: output length");
+    let ns = n_shards(b);
+    partials.resize(ns, cols);
+    let pptr = SendPtr(partials.as_mut_slice().as_mut_ptr());
+    run_shards(ns, &|s| {
+        let (r0, r1) = shard_range(s, b);
+        // SAFETY: shard `s` exclusively owns row `s` of `partials`;
+        // `run` blocks until every shard has retired.
+        let part = unsafe { from_raw_parts_mut(pptr.0.add(s * cols), cols) };
+        part.fill(0.0);
+        for r in r0..r1 {
+            for (p, &v) in part.iter_mut().zip(m.row(r)) {
+                *p += v;
+            }
+        }
+    });
+    for s in 0..ns {
+        for (o, &p) in out.iter_mut().zip(partials.row(s)) {
+            *o += p;
+        }
+    }
 }
 
 /// FFF architecture + training hyperparameters.
@@ -167,6 +233,7 @@ pub struct Fff {
     nodes: Vec<Node>,
     leaves: Vec<Leaf>,
     cache: Option<Cache>,
+    train: TrainCache,
     /// Batch-mean Bernoulli entropy per node after the last training
     /// forward — the paper's hardening monitor (Figures 5–6).
     pub last_entropies: Vec<f32>,
@@ -190,6 +257,98 @@ struct Cache {
     leaf_a1: Vec<Matrix>,
 }
 
+/// Retained state of the level-batched (`n = 1`) training engine: the
+/// per-level SoA weight gathers, forward caches, and backward scratch.
+/// Every matrix is grow-only and reused step after step, so once warmed
+/// (one step at the largest batch shape) a training step performs
+/// **zero steady-state heap allocations** — the training extension of
+/// PR 4's serving arenas, pinned by tests/alloc_regression.rs.
+#[derive(Clone, Debug, Default)]
+struct TrainCache {
+    /// Input batch copy (backward runs after the caller's `x` is gone).
+    x: Matrix,
+    /// Per level: node boundaries in GEMM layout (`dim_in × 2^m`,
+    /// column `i` = node `(m, i)`'s weight column), regathered each step
+    /// (the optimizer moves the weights between steps).
+    level_w: Vec<Matrix>,
+    /// Per level: node biases, length `2^m`.
+    level_b: Vec<Vec<f32>>,
+    /// Per level: raw node logits `Z_m = X·W_m + b_m` (B × 2^m).
+    logits: Vec<Matrix>,
+    /// Per level: raw sigmoid probabilities (pre-transposition).
+    probs: Vec<Matrix>,
+    /// Per level: this batch's per-node transposition draws.
+    flips: Vec<Vec<bool>>,
+    /// Prefix path weights per level: w[m] is B × 2^m; w[depth] = c.
+    prefix: Vec<Matrix>,
+    /// Concatenated leaf bank: every leaf's W1 side by side
+    /// (`dim_in × 2^d·ℓ` — the paper's **training width**), regathered
+    /// each step. Turns `2^d` thin per-leaf products into one dense
+    /// training-width GEMM at full microkernel efficiency.
+    w1_all: Matrix,
+    /// The same bank transposed (`2^d·ℓ × dim_in`), so the backward's
+    /// `dx += dA1·W1ᵀ` runs as one cache-blocked [`gemm_acc`] instead of
+    /// re-streaming the bank per sample row.
+    w1t_all: Matrix,
+    /// Concatenated leaf hidden biases, length `2^d·ℓ`.
+    b1_all: Vec<f32>,
+    /// Vertically stacked leaf output weights (`2^d·ℓ × dim_out`).
+    w2_stack: Matrix,
+    /// Stacked leaf output biases (`2^d × dim_out`): row `j` = `b2_j`,
+    /// so the mixture's bias term is the single product `C·B2`.
+    b2_stack: Matrix,
+    /// Post-ReLU hidden activations of **all** leaves (B × 2^d·ℓ).
+    a1_all: Matrix,
+    /// Mixture-scaled activations `S[r, jℓ+h] = c_j[r]·a1[r, jℓ+h]` —
+    /// makes the mixture output the single product `S·W2_stack` (the
+    /// path weights sum to 1, but per-leaf biases still need `C·B2`).
+    s: Matrix,
+    /// Backward: masked `c_j ∘ t` for all leaves (B × 2^d·ℓ); the `t`
+    /// rows themselves live only in per-task scratch inside the fused
+    /// backward pass.
+    da1_all: Matrix,
+    /// Backward: stacked leaf gradients, scattered into the per-leaf
+    /// accumulators after the big products.
+    gw1_all: Matrix,
+    gw2_all: Matrix,
+    gb2_all: Matrix,
+    gb1_all: Vec<f32>,
+    /// Per-shard partial sums of the fixed-order reductions
+    /// (`n_shards × cols`, see [`col_sums_sharded`]).
+    partials: Matrix,
+    /// Upsweep: dL/d(prefix weight) at the current level (g) and its
+    /// parent level (g_up); swapped as the sweep ascends.
+    g: Matrix,
+    g_up: Matrix,
+    /// Upsweep: per-level node-logit gradients (B × 2^m).
+    dz: Matrix,
+    /// Upsweep: per-level weight gradients `dZᵀ·X` (2^m × dim_in, row
+    /// `i` = node `i`'s contiguous gradient column).
+    dw: Matrix,
+    /// Upsweep: per-level bias gradients, length 2^m.
+    level_gb: Vec<f32>,
+    /// A forward pass has filled this cache and backward has not yet
+    /// consumed it.
+    valid: bool,
+}
+
+impl TrainCache {
+    /// Grow the per-level buffer vectors to the model's depth (first
+    /// call allocates the empty slots; afterwards a no-op).
+    fn ensure(&mut self, depth: usize) {
+        while self.level_w.len() < depth {
+            self.level_w.push(Matrix::default());
+            self.level_b.push(Vec::new());
+            self.logits.push(Matrix::default());
+            self.probs.push(Matrix::default());
+            self.flips.push(Vec::new());
+        }
+        while self.prefix.len() < depth + 1 {
+            self.prefix.push(Matrix::default());
+        }
+    }
+}
+
 impl Fff {
     pub fn new(rng: &mut Rng, cfg: FffConfig) -> Self {
         assert!(cfg.leaf >= 1 && cfg.node >= 1);
@@ -205,6 +364,7 @@ impl Fff {
             nodes,
             leaves,
             cache: None,
+            train: TrainCache::default(),
             last_entropies: vec![0.0; cfg.num_nodes()],
             last_aux: 0.0,
         }
@@ -332,10 +492,528 @@ impl Fff {
         }
         hist
     }
+
+    /// The pre-PR-5 per-node training forward, kept as (a) the engine for
+    /// `node > 1` architectures the level-batched path does not cover,
+    /// (b) the benches' baseline, and (c) the oracle the level-batched
+    /// engine is property-tested against. Pairs with
+    /// [`Fff::backward_baseline`]; draws the same transposition stream
+    /// (node BFS order) as the batched path, so the two engines agree on
+    /// a shared seed.
+    pub fn forward_train_baseline(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
+        self.forward_train_per_node(x, rng)
+    }
+
+    /// Backward for [`Fff::forward_train_baseline`] (the per-node
+    /// reference engine).
+    pub fn backward_baseline(&mut self, d_logits: &Matrix) -> Matrix {
+        self.backward_per_node(d_logits)
+    }
+
+    /// The paper's `FORWARD_T` as level-batched GEMMs (`n = 1` engine):
+    /// per tree level, **one** `B×dim_in · dim_in×2^m` product (bias
+    /// fused into the store) computes every node logit for the whole
+    /// batch, and the sigmoid/transposition/prefix-weight/entropy work is
+    /// a sharded row-band pass over the fixed [`TRAIN_SHARD_ROWS`]
+    /// partition; the leaves run as one concatenated training-width bank
+    /// (`A1 = relu(X·W1_all)`, `y = (C∘A1)·W2_stack + C·B2`) instead of
+    /// `2^d` thin per-leaf products. Everything lands in the retained
+    /// [`TrainCache`], so a warm step allocates nothing, and every
+    /// reduction is fixed-order, so the result is bit-identical at any
+    /// thread count.
+    fn forward_train_batched(&mut self, x: &Matrix, rng: &mut Rng, y: &mut Matrix) {
+        let b = x.rows();
+        let d = self.cfg.depth;
+        let dim_in = self.cfg.dim_in;
+        let dim_out = self.cfg.dim_out;
+        assert_eq!(x.cols(), dim_in, "forward_train: input dim mismatch");
+        self.cache = None; // invalidate the per-node cache
+        self.train.ensure(d);
+        self.last_entropies.clear();
+        self.last_entropies.resize(self.cfg.num_nodes(), 0.0);
+        let ns = n_shards(b);
+
+        // Input copy for the backward pass.
+        self.train.x.resize(b, dim_in);
+        self.train.x.as_mut_slice().copy_from_slice(x.as_slice());
+
+        // Root prefix weight: every sample starts at 1.
+        self.train.prefix[0].resize(b, 1);
+        self.train.prefix[0].as_mut_slice().fill(1.0);
+
+        for m in 0..d {
+            let width = 1usize << m;
+            // Gather the level's boundaries into GEMM layout
+            // (dim_in × width) and draw this batch's transpositions, in
+            // the same node order as the per-node engine (shared rng
+            // stream → identical flips on a shared seed).
+            {
+                let lw = &mut self.train.level_w[m];
+                lw.resize(dim_in, width);
+                let lb = &mut self.train.level_b[m];
+                lb.clear();
+                let flips = &mut self.train.flips[m];
+                flips.clear();
+                for i in 0..width {
+                    let nd = &self.nodes[Self::node_at(m, i)];
+                    // n = 1: the dim_in×1 weight column is contiguous.
+                    for (j, &wj) in nd.l1.w.as_slice().iter().enumerate() {
+                        lw.set(j, i, wj);
+                    }
+                    lb.push(nd.l1.b[0]);
+                    flips.push(
+                        self.cfg.transposition_p > 0.0
+                            && rng.bernoulli(self.cfg.transposition_p as f64),
+                    );
+                }
+            }
+            // Every node logit of the level in one GEMM, bias fused.
+            {
+                let tc = &mut self.train;
+                gemm_bias_into(x, &tc.level_w[m], &tc.level_b[m], &mut tc.logits[m]);
+            }
+            // Sigmoid → probs, prefix-weight update, entropy partials:
+            // one sharded row-band pass.
+            {
+                let tc = &mut self.train;
+                tc.probs[m].resize(b, width);
+                tc.partials.resize(ns, width);
+                let (lower, upper) = tc.prefix.split_at_mut(m + 1);
+                let cur: &Matrix = &lower[m];
+                let next = &mut upper[0];
+                next.resize(b, 2 * width);
+                let z: &Matrix = &tc.logits[m];
+                let flips: &[bool] = &tc.flips[m];
+                let pptr = SendPtr(tc.probs[m].as_mut_slice().as_mut_ptr());
+                let partptr = SendPtr(tc.partials.as_mut_slice().as_mut_ptr());
+                let nptr = SendPtr(next.as_mut_slice().as_mut_ptr());
+                run_shards(ns, &|s| {
+                    let (r0, r1) = shard_range(s, b);
+                    // SAFETY: shard `s` exclusively owns rows r0..r1 of
+                    // probs/next and row `s` of partials; `run` blocks
+                    // until every shard retires.
+                    let part = unsafe { from_raw_parts_mut(partptr.0.add(s * width), width) };
+                    part.fill(0.0);
+                    for r in r0..r1 {
+                        let zrow = z.row(r);
+                        let wrow = cur.row(r);
+                        let prow = unsafe { from_raw_parts_mut(pptr.0.add(r * width), width) };
+                        let nrow =
+                            unsafe { from_raw_parts_mut(nptr.0.add(r * 2 * width), 2 * width) };
+                        for i in 0..width {
+                            let p = sigmoid(zrow[i]);
+                            prow[i] = p;
+                            part[i] += bernoulli_entropy(p);
+                            let pe = if flips[i] { 1.0 - p } else { p };
+                            let w = wrow[i];
+                            nrow[2 * i] = w * (1.0 - pe);
+                            nrow[2 * i + 1] = w * pe;
+                        }
+                    }
+                });
+                // Hardening monitor: partials reduced in shard order.
+                let base = width - 1; // node_at(m, 0)
+                for i in 0..width {
+                    let mut acc = 0.0f32;
+                    for s in 0..ns {
+                        acc += tc.partials.get(s, i);
+                    }
+                    self.last_entropies[base + i] = acc / b as f32;
+                }
+            }
+        }
+
+        let h = self.cfg.hardening;
+        self.last_aux = if h > 0.0 && h.is_finite() {
+            h * self.last_entropies.iter().sum::<f32>()
+        } else {
+            0.0
+        };
+
+        // Leaves as ONE concatenated bank — the paper's `FORWARD_T` is a
+        // dense training-width (2^d·ℓ) computation, so run it that way:
+        //   A1 = relu(X·W1_all + b1_all)        (B × 2^d·ℓ, one GEMM)
+        //   S  = C ∘ A1  (leaf-block-wise)      (sharded row pass)
+        //   y  = S·W2_stack + C·B2              (two GEMMs)
+        // One full-width product at peak microkernel efficiency replaces
+        // 2^d thin (n = ℓ) per-leaf products and the per-leaf mixture
+        // axpy loops.
+        let n_leaves = self.cfg.num_leaves();
+        let lw = self.cfg.leaf;
+        let wall = n_leaves * lw;
+        {
+            let tc = &mut self.train;
+            tc.w1_all.resize(dim_in, wall);
+            tc.b1_all.clear();
+            tc.w2_stack.resize(wall, dim_out);
+            tc.b2_stack.resize(n_leaves, dim_out);
+            tc.w1t_all.resize(wall, dim_in);
+            for (j, lf) in self.leaves.iter().enumerate() {
+                for q in 0..dim_in {
+                    let src = lf.l1.w.row(q);
+                    tc.w1_all.row_mut(q)[j * lw..(j + 1) * lw].copy_from_slice(src);
+                    for (h, &v) in src.iter().enumerate() {
+                        tc.w1t_all.set(j * lw + h, q, v);
+                    }
+                }
+                tc.b1_all.extend_from_slice(&lf.l1.b);
+                tc.w2_stack.as_mut_slice()[j * lw * dim_out..(j + 1) * lw * dim_out]
+                    .copy_from_slice(lf.l2.w.as_slice());
+                tc.b2_stack.row_mut(j).copy_from_slice(&lf.l2.b);
+            }
+            gemm_bias_relu_into(x, &tc.w1_all, &tc.b1_all, &mut tc.a1_all);
+            tc.s.resize(b, wall);
+            let c: &Matrix = &tc.prefix[d];
+            let a1: &Matrix = &tc.a1_all;
+            let sptr = SendPtr(tc.s.as_mut_slice().as_mut_ptr());
+            run_shards(ns, &|sh| {
+                let (r0, r1) = shard_range(sh, b);
+                for r in r0..r1 {
+                    let crow = c.row(r);
+                    let arow = a1.row(r);
+                    // SAFETY: shards own disjoint rows of `s`.
+                    let srow = unsafe { from_raw_parts_mut(sptr.0.add(r * wall), wall) };
+                    for j in 0..n_leaves {
+                        let w = crow[j];
+                        for h in 0..lw {
+                            srow[j * lw + h] = w * arow[j * lw + h];
+                        }
+                    }
+                }
+            });
+            gemm_into(&tc.s, &tc.w2_stack, y);
+            gemm_acc(&tc.prefix[d], &tc.b2_stack, y);
+        }
+        self.train.valid = true;
+    }
+
+    /// Backward mirror of [`Fff::forward_train_batched`]: one fused
+    /// sharded mega-pass produces dc, the masked `dA1`, and the hidden
+    /// bias partials for the whole leaf bank, the stacked weight
+    /// gradients are a handful of training-width products
+    /// ([`gemm_tn_acc`], plus one blocked [`gemm_acc`] over the
+    /// transposed bank for `dx`) scattered back into the per-leaf
+    /// accumulators, then a level-synchronous upsweep — per level one
+    /// sharded row pass builds `g_up`/`dZ`, one `gemm_tn` accumulates
+    /// every node's weight gradient, and one `gemm_nt_acc` folds the
+    /// level into `dx`.
+    fn backward_batched(&mut self, d_logits: &Matrix, dx: &mut Matrix) {
+        assert!(self.train.valid, "backward before forward_train");
+        self.train.valid = false;
+        let d = self.cfg.depth;
+        let dim_in = self.cfg.dim_in;
+        let dim_out = self.cfg.dim_out;
+        let leaf = self.cfg.leaf;
+        let n_leaves = self.cfg.num_leaves();
+        let b = self.train.x.rows();
+        assert_eq!(d_logits.shape(), (b, dim_out), "backward: d_logits shape");
+        let h = self.cfg.hardening;
+        let frozen = h.is_infinite();
+        let ns = n_shards(b);
+        dx.resize(b, dim_in);
+        dx.fill_zero();
+
+        // ---- Leaves, as the concatenated bank (mirror of the forward):
+        //   g = dY·B2ᵀ                          (dc's bias term, one GEMM)
+        //   fused pass: t = dY·W2_stackᵀ (per-row scratch),
+        //               g[r,j] += a1_j·t_j, dA1 = relu-mask(c_j ∘ t),
+        //               gb1 shard partials
+        //   dx += dA1·W1ᵀ                       (blocked gemm_acc)
+        //   gw2_stack = Sᵀ·dY, gb2 = Cᵀ·dY, gw1 = dA1ᵀ·X (transposed)
+        // then the stacked gradients scatter into the per-leaf layers.
+        let lw = leaf;
+        let wall = n_leaves * lw;
+        {
+            let tc = &mut self.train;
+            // dc's bias term: dc[r, j] = … + b2_j·dY[r] = (dY·B2ᵀ)[r, j].
+            gemm_nt_into(d_logits, &tc.b2_stack, &mut tc.g);
+            tc.da1_all.resize(b, wall);
+            tc.partials.resize(ns, wall);
+            // The fused leaf mega-pass, one sweep per shard: per row,
+            // T = dY·W2_stackᵀ into a thread-local scratch row (never
+            // materialized batch-wide), then dc, the masked dA1, and the
+            // gb1 shard partials — the activation arrays stream once
+            // instead of once per consumer.
+            {
+                let a1: &Matrix = &tc.a1_all;
+                let c: &Matrix = &tc.prefix[d];
+                let w2: &Matrix = &tc.w2_stack;
+                let gptr = SendPtr(tc.g.as_mut_slice().as_mut_ptr());
+                let daptr = SendPtr(tc.da1_all.as_mut_slice().as_mut_ptr());
+                let partptr = SendPtr(tc.partials.as_mut_slice().as_mut_ptr());
+                run_shards(ns, &|sh| {
+                    let (r0, r1) = shard_range(sh, b);
+                    // SAFETY: shards own disjoint rows of g/da1_all and
+                    // row `sh` of partials; `run` blocks until every
+                    // shard retires.
+                    let part = unsafe { from_raw_parts_mut(partptr.0.add(sh * wall), wall) };
+                    part.fill(0.0);
+                    scratch::with_f32(wall, |trow| {
+                        for r in r0..r1 {
+                            let a1row = a1.row(r);
+                            let crow = c.row(r);
+                            let dyrow = d_logits.row(r);
+                            // Same kernel gemm_nt_into would run on this
+                            // row, so the bits match the unfused form.
+                            crate::tensor::gemm_nt_row(
+                                dyrow,
+                                w2.as_slice(),
+                                trow,
+                                dim_out,
+                                wall,
+                                Epilogue::None,
+                            );
+                            let grow =
+                                unsafe { from_raw_parts_mut(gptr.0.add(r * n_leaves), n_leaves) };
+                            let darow = unsafe { from_raw_parts_mut(daptr.0.add(r * wall), wall) };
+                            for j in 0..n_leaves {
+                                let w = crow[j];
+                                let mut acc = 0.0f32;
+                                for h in 0..lw {
+                                    let i = j * lw + h;
+                                    // dc_j[r] = a1[r]·t[r] + (bias term)
+                                    acc += a1row[i] * trow[i];
+                                    // da1 = c_j ∘ t, masked by ReLU.
+                                    darow[i] = if a1row[i] > 0.0 { trow[i] * w } else { 0.0 };
+                                }
+                                grow[j] += acc;
+                            }
+                            for (p, &v) in part.iter_mut().zip(darow.iter()) {
+                                *p += v; // gb1 shard partial
+                            }
+                        }
+                    });
+                });
+            }
+            // gb1: the shard partials reduced in shard-index order.
+            tc.gb1_all.clear();
+            tc.gb1_all.resize(wall, 0.0);
+            for s in 0..ns {
+                for (o, &p) in tc.gb1_all.iter_mut().zip(tc.partials.row(s)) {
+                    *o += p;
+                }
+            }
+            // dx += dA1·W1ᵀ: one cache-blocked product over the
+            // transposed bank (the blocked GEMM keeps the 2^d·ℓ-wide
+            // operand in panel-sized tiles instead of re-streaming it
+            // per sample row).
+            gemm_acc(&tc.da1_all, &tc.w1t_all, dx);
+            // Stacked weight gradients — one training-width product
+            // each. gw1 is accumulated **transposed** (2^d·ℓ × dim_in):
+            // that orientation gives the rank-1 kernel L1-resident
+            // accumulator bands; the scatter below untransposes.
+            tc.gw2_all.resize(wall, dim_out);
+            tc.gw2_all.fill_zero();
+            gemm_tn_acc(&tc.s, d_logits, &mut tc.gw2_all);
+            tc.gb2_all.resize(n_leaves, dim_out);
+            tc.gb2_all.fill_zero();
+            gemm_tn_acc(&tc.prefix[d], d_logits, &mut tc.gb2_all);
+            tc.gw1_all.resize(wall, dim_in);
+            tc.gw1_all.fill_zero();
+            gemm_tn_acc(&tc.da1_all, &tc.x, &mut tc.gw1_all);
+        }
+        // Scatter the stacked gradients into the per-leaf accumulators.
+        {
+            let tc = &self.train;
+            for (j, lf) in self.leaves.iter_mut().enumerate() {
+                let gw2_src = &tc.gw2_all.as_slice()[j * lw * dim_out..(j + 1) * lw * dim_out];
+                for (gv, &sv) in lf.l2.gw.as_mut_slice().iter_mut().zip(gw2_src) {
+                    *gv += sv;
+                }
+                for (gv, &sv) in lf.l2.gb.iter_mut().zip(tc.gb2_all.row(j)) {
+                    *gv += sv;
+                }
+                for h in 0..lw {
+                    // gw1_all row jℓ+h = leaf j's hidden-h input grads =
+                    // column h of lf.l1.gw (dim_in × ℓ).
+                    let src = tc.gw1_all.row(j * lw + h);
+                    let gw = lf.l1.gw.as_mut_slice();
+                    for (q, &sv) in src.iter().enumerate() {
+                        gw[q * lw + h] += sv;
+                    }
+                }
+                for (gv, &sv) in lf.l1.gb.iter_mut().zip(&tc.gb1_all[j * lw..(j + 1) * lw]) {
+                    *gv += sv;
+                }
+            }
+        }
+
+        // ---- Tree upsweep: from g = dc at level d up to the root ----
+        for m in (0..d).rev() {
+            let width = 1usize << m;
+            let tc = &mut self.train;
+            tc.g_up.resize(b, width);
+            tc.dz.resize(b, width);
+            {
+                let g: &Matrix = &tc.g;
+                let probs: &Matrix = &tc.probs[m];
+                let logits: &Matrix = &tc.logits[m];
+                let pref: &Matrix = &tc.prefix[m];
+                let flips: &[bool] = &tc.flips[m];
+                let guptr = SendPtr(tc.g_up.as_mut_slice().as_mut_ptr());
+                let dzptr = SendPtr(tc.dz.as_mut_slice().as_mut_ptr());
+                let hb = if frozen || h <= 0.0 { 0.0 } else { h / b as f32 };
+                run_shards(ns, &|s| {
+                    let (r0, r1) = shard_range(s, b);
+                    for r in r0..r1 {
+                        let grow = g.row(r);
+                        // SAFETY: shards own disjoint rows of g_up/dz.
+                        let gup = unsafe { from_raw_parts_mut(guptr.0.add(r * width), width) };
+                        let dzrow = unsafe { from_raw_parts_mut(dzptr.0.add(r * width), width) };
+                        for i in 0..width {
+                            let gl = grow[2 * i];
+                            let gr = grow[2 * i + 1];
+                            let p = probs.get(r, i);
+                            let pe = if flips[i] { 1.0 - p } else { p };
+                            gup[i] = (1.0 - pe) * gl + pe * gr;
+                            if !frozen {
+                                // dL/dp_eff = w_parent · (g_r − g_l);
+                                // chain through transposition (±1) and
+                                // the sigmoid; hardening adds its
+                                // closed-form logit gradient.
+                                let mut dp = pref.get(r, i) * (gr - gl);
+                                if flips[i] {
+                                    dp = -dp;
+                                }
+                                let mut dzv = dp * p * (1.0 - p);
+                                if hb > 0.0 {
+                                    dzv += hb
+                                        * super::loss::hardening_grad_logit(
+                                            logits.get(r, i),
+                                            p,
+                                        );
+                                }
+                                dzrow[i] = dzv;
+                            }
+                        }
+                    }
+                });
+            }
+            if !frozen {
+                // dW_m = dZᵀ·X (row i = node i's contiguous gradient).
+                tc.dw.resize(width, dim_in);
+                tc.dw.fill_zero();
+                gemm_tn_acc(&tc.dz, &tc.x, &mut tc.dw);
+                tc.level_gb.clear();
+                tc.level_gb.resize(width, 0.0);
+                col_sums_sharded(&tc.dz, &mut tc.partials, &mut tc.level_gb);
+                for i in 0..width {
+                    let nd = &mut self.nodes[Self::node_at(m, i)];
+                    for (gj, &dj) in nd.l1.gw.as_mut_slice().iter_mut().zip(tc.dw.row(i)) {
+                        *gj += dj;
+                    }
+                    nd.l1.gb[0] += tc.level_gb[i];
+                }
+                // dx += dZ·W_mᵀ — one product for the whole level.
+                gemm_nt_acc(&tc.dz, &tc.level_w[m], dx);
+            }
+            std::mem::swap(&mut tc.g, &mut tc.g_up);
+        }
+    }
 }
 
 impl Model for Fff {
     fn forward_train(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
+        let mut y = Matrix::zeros(0, 0);
+        self.forward_train_into(x, rng, &mut y);
+        y
+    }
+
+    /// `n = 1` (every paper experiment) runs the level-batched GEMM
+    /// engine; wider nodes fall back to the per-node reference path.
+    fn forward_train_into(&mut self, x: &Matrix, rng: &mut Rng, y: &mut Matrix) {
+        if self.cfg.node == 1 {
+            self.forward_train_batched(x, rng, y);
+        } else {
+            *y = self.forward_train_per_node(x, rng);
+        }
+    }
+
+    fn backward(&mut self, d_logits: &Matrix) -> Matrix {
+        let mut dx = Matrix::zeros(0, 0);
+        self.backward_into(d_logits, &mut dx);
+        dx
+    }
+
+    fn backward_into(&mut self, d_logits: &Matrix, dx: &mut Matrix) {
+        if self.train.valid {
+            self.backward_batched(d_logits, dx);
+        } else {
+            *dx = self.backward_per_node(d_logits);
+        }
+    }
+
+    fn forward_infer(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(0, 0);
+        self.forward_infer_into(x, &mut y);
+        y
+    }
+
+    fn forward_infer_into(&self, x: &Matrix, y: &mut Matrix) {
+        y.resize(x.rows(), self.cfg.dim_out);
+        // One thread-local hidden buffer for the whole batch (it is
+        // fully rewritten per sample) — trainer scoring passes that
+        // retain `y` run this allocation-free once warm.
+        scratch::with_f32(self.cfg.leaf, |a1| {
+            for r in 0..x.rows() {
+                let xr = x.row(r);
+                let leaf = &self.leaves[self.leaf_index(xr)];
+                for (hn, a) in a1.iter_mut().enumerate() {
+                    let mut acc = leaf.l1.b[hn];
+                    for (j, &xv) in xr.iter().enumerate() {
+                        acc += xv * leaf.l1.w.get(j, hn);
+                    }
+                    *a = acc.max(0.0);
+                }
+                let out = y.row_mut(r);
+                out.copy_from_slice(&leaf.l2.b);
+                for (hn, &a) in a1.iter().enumerate() {
+                    if a > 0.0 {
+                        crate::tensor::axpy_slice(a, leaf.l2.w.row(hn), out);
+                    }
+                }
+            }
+        });
+    }
+
+    fn visit_params(&mut self, f: &mut ParamVisitor) {
+        for nd in &mut self.nodes {
+            nd.l1.visit(f);
+            if let Some(l2) = &mut nd.l2 {
+                l2.visit(f);
+            }
+        }
+        for lf in &mut self.leaves {
+            lf.l1.visit(f);
+            lf.l2.visit(f);
+        }
+    }
+
+    fn aux_loss(&self) -> f32 {
+        self.last_aux
+    }
+
+    fn entropy_report(&self) -> Vec<Vec<f32>> {
+        vec![self.last_entropies.clone()]
+    }
+
+    /// Allocation-free accumulation straight from the retained monitor
+    /// (the default would clone `last_entropies` every batch).
+    fn accumulate_entropies(&self, sums: &mut Vec<Vec<f32>>) {
+        if sums.is_empty() {
+            sums.push(self.last_entropies.clone());
+        } else {
+            for (s, &e) in sums[0].iter_mut().zip(&self.last_entropies) {
+                *s += e;
+            }
+        }
+    }
+}
+
+impl Fff {
+    /// The per-node `FORWARD_T` (see [`Fff::forward_train_baseline`]).
+    fn forward_train_per_node(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
+        self.train.valid = false; // invalidate the level-batched cache
         let b = x.rows();
         let d = self.cfg.depth;
         let num_nodes = self.cfg.num_nodes();
@@ -411,7 +1089,8 @@ impl Model for Fff {
         y
     }
 
-    fn backward(&mut self, d_logits: &Matrix) -> Matrix {
+    /// The per-node backward (see [`Fff::backward_baseline`]).
+    fn backward_per_node(&mut self, d_logits: &Matrix) -> Matrix {
         let cache = self.cache.take().expect("backward before forward_train");
         let b = cache.x.rows();
         let d = self.cfg.depth;
@@ -504,60 +1183,6 @@ impl Model for Fff {
             g = g_up;
         }
         dx
-    }
-
-    fn forward_infer(&self, x: &Matrix) -> Matrix {
-        let mut y = Matrix::zeros(0, 0);
-        self.forward_infer_into(x, &mut y);
-        y
-    }
-
-    fn forward_infer_into(&self, x: &Matrix, y: &mut Matrix) {
-        y.resize(x.rows(), self.cfg.dim_out);
-        // One thread-local hidden buffer for the whole batch (it is
-        // fully rewritten per sample) — trainer scoring passes that
-        // retain `y` run this allocation-free once warm.
-        scratch::with_f32(self.cfg.leaf, |a1| {
-            for r in 0..x.rows() {
-                let xr = x.row(r);
-                let leaf = &self.leaves[self.leaf_index(xr)];
-                for (hn, a) in a1.iter_mut().enumerate() {
-                    let mut acc = leaf.l1.b[hn];
-                    for (j, &xv) in xr.iter().enumerate() {
-                        acc += xv * leaf.l1.w.get(j, hn);
-                    }
-                    *a = acc.max(0.0);
-                }
-                let out = y.row_mut(r);
-                out.copy_from_slice(&leaf.l2.b);
-                for (hn, &a) in a1.iter().enumerate() {
-                    if a > 0.0 {
-                        crate::tensor::axpy_slice(a, leaf.l2.w.row(hn), out);
-                    }
-                }
-            }
-        });
-    }
-
-    fn visit_params(&mut self, f: &mut ParamVisitor) {
-        for nd in &mut self.nodes {
-            nd.l1.visit(f);
-            if let Some(l2) = &mut nd.l2 {
-                l2.visit(f);
-            }
-        }
-        for lf in &mut self.leaves {
-            lf.l1.visit(f);
-            lf.l2.visit(f);
-        }
-    }
-
-    fn aux_loss(&self) -> f32 {
-        self.last_aux
-    }
-
-    fn entropy_report(&self) -> Vec<Vec<f32>> {
-        vec![self.last_entropies.clone()]
     }
 }
 
@@ -1220,8 +1845,9 @@ mod tests {
         let (mut fff, mut rng) = mk(3, 2, 0.0);
         let x = batch(9, 5);
         let _ = fff.forward_train(&x, &mut rng);
-        let cache = fff.cache.as_ref().unwrap();
-        let c = &cache.prefix[3];
+        // n = 1 → the level-batched engine's cache holds the mixture.
+        assert!(fff.train.valid);
+        let c = &fff.train.prefix[3];
         for r in 0..9 {
             let s: f32 = c.row(r).iter().sum();
             assert!((s - 1.0).abs() < 1e-5, "row {r}: {s}");
@@ -1329,6 +1955,63 @@ mod tests {
     }
 
     #[test]
+    fn gradient_check_multi_shard_batch() {
+        // `gradient_check_full_model` runs a 6-row batch — one training
+        // shard. This one crosses the fixed 128-row shard boundary so
+        // the finite-difference check also covers the sharded passes
+        // and fixed-order partial reductions of the batched backward.
+        let mut rng = Rng::seed_from_u64(17);
+        let mut cfg = FffConfig::new(4, 3, 3, 2);
+        cfg.hardening = 1.0;
+        let mut fff = Fff::new(&mut rng, cfg);
+        let b = 2 * TRAIN_SHARD_ROWS + 37;
+        let x = batch(b, 4);
+        let labels: Vec<usize> = (0..b).map(|i| (i * 7) % 3).collect();
+        let logits = fff.forward_train(&x, &mut rng);
+        let (_, dl) = cross_entropy(&logits, &labels);
+        fff.zero_grad();
+        fff.backward(&dl);
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        fff.visit_params(&mut |_p, g| grads.push(g.to_vec()));
+
+        let eps = 2e-2f32;
+        let num_slots = grads.len();
+        let loss_with = |m: &mut Fff| -> f32 {
+            let mut r2 = Rng::seed_from_u64(123);
+            let y = m.forward_train(&x, &mut r2);
+            let (ce, _) = cross_entropy(&y, &labels);
+            ce + m.aux_loss()
+        };
+        for slot in (0..num_slots).step_by(num_slots.div_ceil(7).max(1)) {
+            let idx = grads[slot].len() / 2;
+            let eval = |delta: f32, m: &mut Fff| -> f32 {
+                let mut s = 0;
+                m.visit_params(&mut |p, _| {
+                    if s == slot {
+                        p[idx] += delta;
+                    }
+                    s += 1;
+                });
+                let loss = loss_with(m);
+                let mut s2 = 0;
+                m.visit_params(&mut |p, _| {
+                    if s2 == slot {
+                        p[idx] -= delta;
+                    }
+                    s2 += 1;
+                });
+                loss
+            };
+            let fd = (eval(eps, &mut fff) - eval(-eps, &mut fff)) / (2.0 * eps);
+            let g = grads[slot][idx];
+            assert!(
+                (g - fd).abs() < 4e-3 + 0.05 * fd.abs(),
+                "slot {slot} idx {idx}: analytic {g} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
     fn hardening_loss_gradient_check() {
         // With a constant prediction gradient of zero, the only gradient
         // comes from the hardening term; check against finite differences
@@ -1416,6 +2099,96 @@ mod tests {
         assert!(fff.last_entropies.iter().all(|&e| (0.0..=bound).contains(&e)));
         // Fresh random boundaries → near-maximal entropy.
         assert!(fff.last_entropies[0] > 0.5);
+    }
+
+    #[test]
+    fn level_batched_engine_matches_per_node_baseline() {
+        // The tentpole's correctness anchor: the level-batched GEMM
+        // engine and the per-node reference produce the same forward
+        // mixture, gradients, entropies, and aux loss — across depths,
+        // hardening settings (incl. the frozen tree), and transposition
+        // (both engines draw the same flip stream on a shared seed).
+        let close = |a: f32, b: f32| (a - b).abs() <= 1e-4 + 1e-3 * b.abs();
+        for &(depth, h, tp) in &[
+            (0usize, 0.0f32, 0.0f32),
+            (1, 0.0, 0.0),
+            (3, 0.0, 0.0),
+            (3, 3.0, 0.0),
+            (2, 3.0, 0.5),
+            (2, f32::INFINITY, 0.0),
+        ] {
+            let mut rng = Rng::seed_from_u64(77);
+            let mut cfg = FffConfig::new(5, 3, depth, 2);
+            cfg.hardening = h;
+            cfg.transposition_p = tp;
+            let mut batched = Fff::new(&mut rng, cfg);
+            let mut baseline = batched.clone();
+            let x = batch(70, 5);
+            let labels: Vec<usize> = (0..70).map(|i| i % 3).collect();
+            let mut ra = Rng::seed_from_u64(9);
+            let mut rb = Rng::seed_from_u64(9);
+            let ya = batched.forward_train(&x, &mut ra);
+            let yb = baseline.forward_train_baseline(&x, &mut rb);
+            assert!(
+                ya.max_abs_diff(&yb) < 1e-4,
+                "depth {depth} h {h} tp {tp}: forward diff {}",
+                ya.max_abs_diff(&yb)
+            );
+            for (i, (ea, eb)) in
+                batched.last_entropies.iter().zip(&baseline.last_entropies).enumerate()
+            {
+                assert!(close(*ea, *eb), "entropy {i}: {ea} vs {eb}");
+            }
+            assert!(close(batched.aux_loss(), baseline.aux_loss()), "aux loss");
+            let (_, dla) = cross_entropy(&ya, &labels);
+            let (_, dlb) = cross_entropy(&yb, &labels);
+            batched.zero_grad();
+            baseline.zero_grad();
+            let dxa = batched.backward(&dla);
+            let dxb = baseline.backward_baseline(&dlb);
+            assert!(
+                dxa.max_abs_diff(&dxb) < 2e-4,
+                "depth {depth} h {h} tp {tp}: dx diff {}",
+                dxa.max_abs_diff(&dxb)
+            );
+            let mut ga = Vec::new();
+            batched.visit_params(&mut |_p, g| ga.extend_from_slice(g));
+            let mut gb = Vec::new();
+            baseline.visit_params(&mut |_p, g| gb.extend_from_slice(g));
+            for (i, (a, b)) in ga.iter().zip(&gb).enumerate() {
+                assert!(close(*a, *b), "depth {depth} h {h} tp {tp}: grad {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn train_cache_reuse_is_bitwise_stable_across_batch_shapes() {
+        // A warm TrainCache cycling through fluctuating batch shapes must
+        // behave exactly like a cold one — retained (stale) buffer
+        // contents can never leak into results. Kernel lock held: the
+        // comparisons are bitwise across dispatched GEMMs.
+        let _serialize = kernels::force_lock();
+        let (mut warm, _) = mk(3, 4, 3.0);
+        for &bsz in &[64usize, 17, 80, 64] {
+            let x = batch(bsz, 5);
+            let labels: Vec<usize> = (0..bsz).map(|i| i % 3).collect();
+            let (mut cold, _) = mk(3, 4, 3.0);
+            let mut r1 = Rng::seed_from_u64(3);
+            let mut r2 = Rng::seed_from_u64(3);
+            let yw = warm.forward_train(&x, &mut r1);
+            let yc = cold.forward_train(&x, &mut r2);
+            assert_eq!(yw, yc, "forward drifted at b={bsz}");
+            assert_eq!(warm.last_entropies, cold.last_entropies, "entropies at b={bsz}");
+            let (_, dl) = cross_entropy(&yw, &labels);
+            warm.zero_grad();
+            cold.zero_grad();
+            assert_eq!(warm.backward(&dl), cold.backward(&dl), "dx drifted at b={bsz}");
+            let mut gw = Vec::new();
+            warm.visit_params(&mut |_p, g| gw.extend_from_slice(g));
+            let mut gc = Vec::new();
+            cold.visit_params(&mut |_p, g| gc.extend_from_slice(g));
+            assert_eq!(gw, gc, "grads drifted at b={bsz}");
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use super::init;
 use crate::rng::Rng;
-use crate::tensor::{gemm_bias, gemm_nt, gemm_tn, Matrix};
+use crate::tensor::{gemm_bias, gemm_bias_into, gemm_nt, gemm_tn_acc, Matrix};
 
 /// `y = x·W + b` with `W: in×out` (row-major, so rows are input features).
 #[derive(Clone, Debug)]
@@ -38,6 +38,12 @@ impl Linear {
         gemm_bias(x, &self.w, &self.b)
     }
 
+    /// [`Linear::forward`] into a caller-retained output (resized,
+    /// grow-only) — the zero-allocation training-step form.
+    pub fn forward_into(&self, x: &Matrix, y: &mut Matrix) {
+        gemm_bias_into(x, &self.w, &self.b, y)
+    }
+
     /// Backward: accumulate `gw += xᵀ·dy`, `gb += Σ dy`, return `dx = dy·Wᵀ`.
     pub fn backward(&mut self, x: &Matrix, dy: &Matrix) -> Matrix {
         self.accumulate_grads(x, dy);
@@ -45,9 +51,11 @@ impl Linear {
     }
 
     /// Grad accumulation only (when dx is not needed, e.g. first layer).
+    /// The weight gradient accumulates straight into `gw`
+    /// ([`gemm_tn_acc`]) — no temporary, so warm training steps make no
+    /// heap allocations here.
     pub fn accumulate_grads(&mut self, x: &Matrix, dy: &Matrix) {
-        let gw = gemm_tn(x, dy);
-        self.gw.add_assign(&gw);
+        gemm_tn_acc(x, dy, &mut self.gw);
         for r in 0..dy.rows() {
             let row = dy.row(r);
             for (gb, &d) in self.gb.iter_mut().zip(row) {

@@ -1,25 +1,49 @@
 //! Losses: softmax cross-entropy for the classification heads, and the
 //! paper's Bernoulli-entropy *hardening loss* helpers for FFF nodes.
 
-use crate::tensor::{bernoulli_entropy, log_softmax_rows, softmax_rows, Matrix};
+use crate::tensor::{bernoulli_entropy, Matrix};
 
 /// Softmax cross-entropy over logits, batch-mean.
 /// Returns `(loss, d_logits)` with `d_logits` already scaled by `1/B`.
 pub fn cross_entropy(logits: &Matrix, labels: &[usize]) -> (f32, Matrix) {
+    let mut grad = Matrix::zeros(0, 0);
+    let loss = cross_entropy_into(logits, labels, &mut grad);
+    (loss, grad)
+}
+
+/// [`cross_entropy`] into a caller-retained gradient matrix (resized,
+/// grow-only) with no intermediate log-softmax/softmax materialization:
+/// one numerically-stable pass per row computes the softmax straight
+/// into `d_logits` and the label term of the loss. The training loop
+/// holds one gradient matrix across every step of the run.
+pub fn cross_entropy_into(logits: &Matrix, labels: &[usize], d_logits: &mut Matrix) -> f32 {
     assert_eq!(logits.rows(), labels.len());
     let b = labels.len().max(1) as f32;
-    let logp = log_softmax_rows(logits);
+    d_logits.resize(logits.rows(), logits.cols());
     let mut loss = 0.0f32;
     for (r, &l) in labels.iter().enumerate() {
-        loss -= logp.get(r, l);
+        let row = logits.row(r);
+        let out = d_logits.row_mut(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o = (v - max).exp();
+            sum += *o;
+        }
+        let inv = 1.0 / sum;
+        for o in out.iter_mut() {
+            *o *= inv; // softmax
+        }
+        // -log p(label) = -(z_l - max - ln Σ exp(z - max)).
+        loss -= row[l] - max - sum.ln();
+        out[l] -= 1.0;
     }
     loss /= b;
-    let mut grad = softmax_rows(logits);
-    for (r, &l) in labels.iter().enumerate() {
-        grad.set(r, l, grad.get(r, l) - 1.0);
+    let inv_b = 1.0 / b;
+    for v in d_logits.as_mut_slice() {
+        *v *= inv_b;
     }
-    grad.scale(1.0 / b);
-    (loss, grad)
+    loss
 }
 
 /// Hardening-loss value for a batch of node decision probabilities:
@@ -90,6 +114,17 @@ mod tests {
         let logits = Matrix::from_vec(1, 4, vec![0.3, 0.2, -0.1, 0.9]);
         let (_, grad) = cross_entropy(&logits, &[1]);
         assert!(grad.row(0).iter().sum::<f32>().abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_into_matches_allocating_form_with_dirty_buffer() {
+        let logits = Matrix::from_vec(2, 3, vec![0.5, -0.2, 0.1, 1.0, 0.0, -1.0]);
+        let labels = [2usize, 0];
+        let (loss, grad) = cross_entropy(&logits, &labels);
+        let mut buf = Matrix::full(7, 5, 3.0); // dirty + wrong shape: must resize
+        let loss2 = cross_entropy_into(&logits, &labels, &mut buf);
+        assert_eq!(loss.to_bits(), loss2.to_bits());
+        assert_eq!(grad, buf);
     }
 
     #[test]

@@ -18,11 +18,28 @@ pub trait Model {
     /// transposition, dropout).
     fn forward_train(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix;
 
+    /// [`Model::forward_train`] into a caller-owned logits matrix,
+    /// resized to `B × dim_out`. The training loop retains `y` across
+    /// steps so models that can reuse caller memory (FFF/FF override
+    /// this) run warm steps without allocating; the default just assigns
+    /// the allocating form.
+    fn forward_train_into(&mut self, x: &Matrix, rng: &mut Rng, y: &mut Matrix) {
+        *y = self.forward_train(x, rng);
+    }
+
     /// Backward from `d_logits` (dL/dlogits, already including the 1/B
     /// batch-mean factor); accumulates parameter gradients — including the
     /// model's auxiliary losses (hardening / importance / load) — and
     /// returns dL/dx for composition into deeper architectures.
     fn backward(&mut self, d_logits: &Matrix) -> Matrix;
+
+    /// [`Model::backward`] into a caller-owned `dx` matrix (resized to
+    /// `B × dim_in`). Same retention story as
+    /// [`Model::forward_train_into`]; the default assigns the allocating
+    /// form.
+    fn backward_into(&mut self, d_logits: &Matrix, dx: &mut Matrix) {
+        *dx = self.backward(d_logits);
+    }
 
     /// Inference-mode forward (for FFF the paper's `FORWARD_I`: hard,
     /// single-path decisions; for MoE noiseless top-k).
@@ -59,11 +76,40 @@ pub trait Model {
         Vec::new()
     }
 
+    /// Accumulate the last training forward's entropy monitor into
+    /// `sums` (`sums += report`, adopting the report's group structure
+    /// when `sums` is empty) — what the trainer's epoch-mean
+    /// accumulation calls per batch. The default delegates to
+    /// [`Model::entropy_report`]; models on the zero-allocation training
+    /// path (FFF) override it to add in place from their retained
+    /// monitor, so warm batches allocate nothing here either.
+    fn accumulate_entropies(&self, sums: &mut Vec<Vec<f32>>) {
+        let report = self.entropy_report();
+        if sums.is_empty() {
+            *sums = report;
+        } else {
+            for (sum, rep) in sums.iter_mut().zip(&report) {
+                for (s, &r) in sum.iter_mut().zip(rep) {
+                    *s += r;
+                }
+            }
+        }
+    }
+
     /// Copy all parameter values out (early-stopping snapshot).
     fn snapshot(&mut self) -> Vec<f32> {
         let mut out = Vec::new();
-        self.visit_params(&mut |p, _g| out.extend_from_slice(p));
+        self.snapshot_into(&mut out);
         out
+    }
+
+    /// [`Model::snapshot`] into a caller-retained buffer (cleared and
+    /// refilled, reusing capacity). The trainer holds one snapshot buffer
+    /// across the whole run, so every improved-validation epoch after the
+    /// first rewrites it in place instead of allocating a fresh vector.
+    fn snapshot_into(&mut self, out: &mut Vec<f32>) {
+        out.clear();
+        self.visit_params(&mut |p, _g| out.extend_from_slice(p));
     }
 
     /// Restore parameters from a [`Model::snapshot`].
@@ -104,5 +150,43 @@ mod tests {
         let logits = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 2.0, -1.0]);
         assert_eq!(accuracy(&logits, &[0, 1, 0]), 1.0);
         assert!((accuracy(&logits, &[1, 1, 0]) - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn snapshot_into_reuses_buffer_and_matches_snapshot() {
+        let mut rng = crate::rng::Rng::seed_from_u64(1);
+        let mut ff = crate::nn::Ff::new(&mut rng, 6, 4, 3);
+        let mut buf = Vec::new();
+        ff.snapshot_into(&mut buf);
+        assert_eq!(buf, ff.snapshot());
+        let ptr = buf.as_ptr();
+        let cap = buf.capacity();
+        ff.snapshot_into(&mut buf);
+        assert_eq!(buf.as_ptr(), ptr, "refill must reuse the same allocation");
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf, ff.snapshot());
+        // The buffer still round-trips through restore.
+        ff.restore(&buf);
+    }
+
+    #[test]
+    fn into_defaults_match_allocating_forms() {
+        let mut rng = crate::rng::Rng::seed_from_u64(2);
+        let mut a = crate::nn::Ff::new(&mut rng, 5, 6, 3);
+        let mut b = a.clone();
+        let x = Matrix::from_fn(7, 5, |r, c| ((r * 5 + c) as f32).sin());
+        let mut r1 = crate::rng::Rng::seed_from_u64(9);
+        let mut r2 = crate::rng::Rng::seed_from_u64(9);
+        let y = a.forward_train(&x, &mut r1);
+        let mut y2 = Matrix::zeros(0, 0);
+        b.forward_train_into(&x, &mut r2, &mut y2);
+        assert_eq!(y, y2);
+        let dl = Matrix::from_fn(7, 3, |r, c| ((r + c) as f32) * 0.01);
+        a.zero_grad();
+        b.zero_grad();
+        let dx = a.backward(&dl);
+        let mut dx2 = Matrix::zeros(0, 0);
+        b.backward_into(&dl, &mut dx2);
+        assert_eq!(dx, dx2);
     }
 }

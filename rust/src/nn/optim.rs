@@ -1,5 +1,11 @@
 //! Optimizers: pure SGD (Table 1 recipe: lr 0.2) and Adam (Tables 2–3).
 //! Both program against [`Model::visit_params`]'s stable traversal order.
+//!
+//! Both steps are strictly elementwise over (param, grad) pairs in visit
+//! order, so they are deterministic regardless of pool width, and —
+//! once Adam's lazily-created moment buffers exist (first step) — a warm
+//! step performs zero heap allocations; the training-step case in
+//! tests/alloc_regression.rs pins both properties end to end.
 
 use super::model::Model;
 
@@ -144,6 +150,27 @@ mod tests {
     fn adam_reduces_loss() {
         let final_loss = train_steps(&mut Adam::new(0.02), 250);
         assert!(final_loss < 0.2, "loss={final_loss}");
+    }
+
+    #[test]
+    fn adam_steps_are_bitwise_deterministic() {
+        // Two independent Adam states driven by the same model/grads
+        // must take bit-identical trajectories — the optimizer-side half
+        // of the training determinism story.
+        let run = || {
+            let (mut model, x, labels) = toy();
+            let mut rng = Rng::seed_from_u64(1);
+            let mut opt = Adam::new(0.02);
+            for _ in 0..5 {
+                let logits = model.forward_train(&x, &mut rng);
+                let (_, dl) = crate::nn::loss::cross_entropy(&logits, &labels);
+                model.zero_grad();
+                model.backward(&dl);
+                opt.step(&mut model);
+            }
+            model.snapshot()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

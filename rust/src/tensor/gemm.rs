@@ -1,7 +1,8 @@
-//! GEMM drivers for the native engine (v4: fused store-phase epilogues,
-//! prepacked-B serving path, scratch-arena pack buffers — see
-//! EXPERIMENTS.md §Perf iteration 4; v3 added the explicit-SIMD
-//! microkernel).
+//! GEMM drivers for the native engine (v5: caller-retained `_into` and
+//! accumulating `_acc` forms for the level-batched training engine —
+//! see EXPERIMENTS.md §Perf iteration 5; v4 added fused store-phase
+//! epilogues, the prepacked-B serving path, and scratch-arena pack
+//! buffers; v3 the explicit-SIMD microkernel).
 //!
 //! Layout is row-major everywhere. Execution tiers (see EXPERIMENTS.md
 //! §Perf for the measured iteration log naive → ikj → packed+parallel →
@@ -89,41 +90,64 @@ pub fn gemm_bias_relu(a: &Matrix, b: &Matrix, bias: &[f32]) -> Matrix {
     gemm_epi(a, b, Epilogue::BiasRelu(bias))
 }
 
+/// [`gemm`] into a caller-retained output (`c` is resized — grow-only —
+/// zeroed, and fully overwritten). The level-batched training engine's
+/// form: steady-state steps reuse one output matrix per consumer and
+/// stop allocating (tests/alloc_regression.rs).
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    gemm_epi_into(a, b, Epilogue::None, c)
+}
+
+/// [`gemm_bias`] into a caller-retained output (see [`gemm_into`]).
+pub fn gemm_bias_into(a: &Matrix, b: &Matrix, bias: &[f32], c: &mut Matrix) {
+    gemm_epi_into(a, b, Epilogue::Bias(bias), c)
+}
+
+/// [`gemm_bias_relu`] into a caller-retained output (see
+/// [`gemm_bias_into`]).
+pub fn gemm_bias_relu_into(a: &Matrix, b: &Matrix, bias: &[f32], c: &mut Matrix) {
+    gemm_epi_into(a, b, Epilogue::BiasRelu(bias), c)
+}
+
 /// Shared epilogue-fused driver behind [`gemm_bias`]/[`gemm_bias_relu`]:
 /// the [`gemm_acc`] dispatch (serial seed kernel below the FLOP
 /// threshold, pooled banded/packed above) with `epi` applied exactly
 /// once per element after its full accumulation.
 fn gemm_epi(a: &Matrix, b: &Matrix, epi: Epilogue) -> Matrix {
+    let mut c = Matrix::zeros(0, 0);
+    gemm_epi_into(a, b, epi, &mut c);
+    c
+}
+
+/// [`gemm_epi`] into a caller-retained `c` (resized and zeroed here — the
+/// accumulating kernels require a zero start).
+fn gemm_epi_into(a: &Matrix, b: &Matrix, epi: Epilogue, c: &mut Matrix) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "gemm: inner dims {ka} vs {kb}");
     if let Epilogue::Bias(bb) | Epilogue::BiasRelu(bb) = epi {
         assert_eq!(bb.len(), n, "gemm: bias length mismatch");
     }
-    let mut c = Matrix::zeros(m, n);
+    c.resize(m, n);
+    c.fill_zero();
     let k = ka;
     if k == 0 {
         // No k-panels would run, so apply the epilogue directly.
         epilogue_pass(c.as_mut_slice(), m, n, epi);
-        return c;
+        return;
     }
     let kind = kernels::active();
     if kind == KernelKind::Serial || 2 * m * k * n < parallel_flop_threshold() {
         seed_kernel(a.as_slice(), b.as_slice(), c.as_mut_slice(), m, k, n);
         epilogue_pass(c.as_mut_slice(), m, n, epi);
-        return c;
+        return;
     }
     let p = pool::current();
     match kind {
-        KernelKind::Packed => {
-            packed_parallel_epi(a.as_slice(), b.as_slice(), &mut c, m, k, n, &p, epi)
-        }
-        KernelKind::Banded => {
-            banded_parallel_epi(a.as_slice(), b.as_slice(), &mut c, m, k, n, &p, epi)
-        }
+        KernelKind::Packed => packed_parallel_epi(a.as_slice(), b.as_slice(), c, m, k, n, &p, epi),
+        KernelKind::Banded => banded_parallel_epi(a.as_slice(), b.as_slice(), c, m, k, n, &p, epi),
         KernelKind::Serial => unreachable!("serial handled above"),
     }
-    c
 }
 
 /// Elementwise epilogue over an already-accumulated row-major band — the
@@ -610,40 +634,52 @@ pub(crate) unsafe fn gemm_bias_scatter_raw(
 /// `-0.0 + 0.0` normalizes to `+0.0` (and non-finite `B` rows propagate
 /// NaN where the skip used to mask them).
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    gemm_tn_acc(a, b, &mut c);
+    c
+}
+
+/// `C += Aᵀ·B` into a caller-retained accumulator — the training engine's
+/// weight-gradient form (`gw += Xᵀ·dY` straight into the layer's grad
+/// matrix, no temporary). The sparsity census lives in a thread-local
+/// [`scratch`] buffer, so warm calls make no heap allocations; the
+/// per-element accumulation order is the same as [`gemm_tn`]'s.
+pub fn gemm_tn_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (k, m) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "gemm_tn: inner dims");
-    let mut c = Matrix::zeros(m, n);
+    assert_eq!(c.shape(), (m, n), "gemm_tn_acc: output shape");
     let av = a.as_slice();
     let bv = b.as_slice();
     // Per-row sparsity census: one pass over A decides, row by row,
-    // whether the skip loop or the dense loop runs.
-    let mostly_zero: Vec<bool> = (0..k)
-        .map(|p| {
+    // whether the skip loop or the dense loop runs. Stored as 0.0/1.0 in
+    // a scratch checkout (the stack is f32-typed) to keep warm calls
+    // allocation-free.
+    scratch::with_f32(k, |census| {
+        for (p, flag) in census.iter_mut().enumerate() {
             let zeros = av[p * m..(p + 1) * m].iter().filter(|&&x| x == 0.0).count();
-            2 * zeros >= m
-        })
-        .collect();
-    let p = pool::current();
-    if kernels::active() == KernelKind::Serial
-        || 2 * m * k * n < parallel_flop_threshold()
-        || p.threads() == 1
-    {
-        gemm_tn_band(av, bv, c.as_mut_slice(), 0, m, k, m, n, &mostly_zero);
-        return c;
-    }
-    let band = band_rows(m, p.threads());
-    let n_bands = m.div_ceil(band);
-    let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
-    let mz: &[bool] = &mostly_zero;
-    p.run(n_bands, &|t| {
-        let i0 = t * band;
-        let rows = band.min(m - i0);
-        // SAFETY: disjoint row bands of `c`; `run` blocks until done.
-        let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
-        gemm_tn_band(av, bv, cv, i0, rows, k, m, n, mz);
+            *flag = if 2 * zeros >= m { 1.0 } else { 0.0 };
+        }
+        let mz: &[f32] = census;
+        let p = pool::current();
+        if kernels::active() == KernelKind::Serial
+            || 2 * m * k * n < parallel_flop_threshold()
+            || p.threads() == 1
+        {
+            gemm_tn_band(av, bv, c.as_mut_slice(), 0, m, k, m, n, mz);
+            return;
+        }
+        let band = band_rows(m, p.threads());
+        let n_bands = m.div_ceil(band);
+        let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+        p.run(n_bands, &|t| {
+            let i0 = t * band;
+            let rows = band.min(m - i0);
+            // SAFETY: disjoint row bands of `c`; `run` blocks until done.
+            let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
+            gemm_tn_band(av, bv, cv, i0, rows, k, m, n, mz);
+        });
     });
-    c
 }
 
 /// Rank-1-update band: `C[i0..i0+rows] += Σ_p a_p[i0..] ⊗ b_p`. The `p`
@@ -659,12 +695,12 @@ fn gemm_tn_band(
     k: usize,
     m: usize,
     n: usize,
-    mostly_zero: &[bool],
+    mostly_zero: &[f32],
 ) {
     for p in 0..k {
         let arow = &av[p * m + i0..p * m + i0 + rows];
         let brow = &bv[p * n..(p + 1) * n];
-        if mostly_zero[p] {
+        if mostly_zero[p] != 0.0 {
             for (i, &x) in arow.iter().enumerate() {
                 if x == 0.0 {
                     continue; // skip loop: row is mostly ReLU zeros
@@ -688,6 +724,85 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
     gemm_nt_epi(a, b, Epilogue::None)
 }
 
+/// [`gemm_nt`] into a caller-retained output (`c` resized — grow-only —
+/// and fully overwritten; no zeroing needed, the dot kernel assigns).
+pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    gemm_nt_epi_into(a, b, Epilogue::None, c)
+}
+
+/// `C += A·Bᵀ` into a caller-retained accumulator — the training
+/// engine's input-gradient form (`dX += dZ·Wᵀ` accumulated across leaves
+/// and tree levels without a temporary per term). Each element receives
+/// exactly one `+=` of its fully-reduced dot product, so band dispatch is
+/// bit-identical to the serial loop at every thread count, like
+/// [`gemm_nt`] itself.
+pub fn gemm_nt_acc(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(k, kb, "gemm_nt_acc: inner dims");
+    assert_eq!(c.shape(), (m, n), "gemm_nt_acc: output shape");
+    let av = a.as_slice();
+    let bv = b.as_slice();
+    let p = pool::current();
+    if kernels::active() == KernelKind::Serial
+        || 2 * m * k * n < parallel_flop_threshold()
+        || p.threads() == 1
+    {
+        gemm_nt_band_acc(av, bv, c.as_mut_slice(), 0, m, k, n);
+        return;
+    }
+    let band = band_rows(m, p.threads());
+    let n_bands = m.div_ceil(band);
+    let cptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    p.run(n_bands, &|t| {
+        let i0 = t * band;
+        let rows = band.min(m - i0);
+        // SAFETY: disjoint row bands of `c`; `run` blocks until done.
+        let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
+        gemm_nt_band_acc(av, bv, cv, i0, rows, k, n);
+    });
+}
+
+/// Accumulating twin of [`gemm_nt_band`]: `crow[j] += arow · bv_j`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nt_band_acc(
+    av: &[f32],
+    bv: &[f32],
+    cv: &mut [f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..rows {
+        let arow = &av[(i0 + i) * k..(i0 + i + 1) * k];
+        let crow = &mut cv[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &bv[j * k..(j + 1) * k];
+            let b1 = &bv[(j + 1) * k..(j + 2) * k];
+            let b2 = &bv[(j + 2) * k..(j + 3) * k];
+            let b3 = &bv[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (p, &x) in arow.iter().enumerate() {
+                s0 += x * b0[p];
+                s1 += x * b1[p];
+                s2 += x * b2[p];
+                s3 += x * b3[p];
+            }
+            crow[j] += s0;
+            crow[j + 1] += s1;
+            crow[j + 2] += s2;
+            crow[j + 3] += s3;
+            j += 4;
+        }
+        while j < n {
+            crow[j] += dot(arow, &bv[j * k..(j + 1) * k]);
+            j += 1;
+        }
+    }
+}
+
 /// `C = relu(A·Bᵀ + bias)` with bias and ReLU fused into the dot
 /// kernel's store (`C` is write-only here, so the fusion costs nothing
 /// and deletes two elementwise passes). Same dispatch and band
@@ -698,10 +813,16 @@ pub fn gemm_nt_bias_relu(a: &Matrix, b: &Matrix, bias: &[f32]) -> Matrix {
 }
 
 fn gemm_nt_epi(a: &Matrix, b: &Matrix, epi: Epilogue) -> Matrix {
+    let mut c = Matrix::zeros(0, 0);
+    gemm_nt_epi_into(a, b, epi, &mut c);
+    c
+}
+
+fn gemm_nt_epi_into(a: &Matrix, b: &Matrix, epi: Epilogue, c: &mut Matrix) {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "gemm_nt: inner dims");
-    let mut c = Matrix::zeros(m, n);
+    c.resize(m, n);
     let av = a.as_slice();
     let bv = b.as_slice();
     let p = pool::current();
@@ -710,7 +831,7 @@ fn gemm_nt_epi(a: &Matrix, b: &Matrix, epi: Epilogue) -> Matrix {
         || p.threads() == 1
     {
         gemm_nt_band(av, bv, c.as_mut_slice(), 0, m, k, n, epi);
-        return c;
+        return;
     }
     let band = band_rows(m, p.threads());
     let n_bands = m.div_ceil(band);
@@ -722,7 +843,6 @@ fn gemm_nt_epi(a: &Matrix, b: &Matrix, epi: Epilogue) -> Matrix {
         let cv = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
         gemm_nt_band(av, bv, cv, i0, rows, k, n, epi);
     });
-    c
 }
 
 /// Dot-product band with 4 B-rows per pass over each A row (¼ the A-row
@@ -748,7 +868,16 @@ fn gemm_nt_band(
 }
 
 /// One output row of the `nt` kernel: `crow[j] = epi(arow · bv_j)`.
-fn gemm_nt_row(arow: &[f32], bv: &[f32], crow: &mut [f32], k: usize, n: usize, epi: Epilogue) {
+/// `pub(crate)` so fused row passes (the FFF training engine's backward
+/// mega-pass) can produce exactly the bits [`gemm_nt_into`] would.
+pub(crate) fn gemm_nt_row(
+    arow: &[f32],
+    bv: &[f32],
+    crow: &mut [f32],
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+) {
     let mut j = 0;
     while j + 4 <= n {
         let b0 = &bv[j * k..(j + 1) * k];
@@ -1057,6 +1186,94 @@ mod tests {
         }
         // Untouched rows stay NaN (the kernel writes only `rows`).
         assert!(y.get(1, 0).is_nan());
+    }
+
+    #[test]
+    fn into_forms_match_allocating_forms_bitwise() {
+        // The training engine's retained-buffer forms are pure memory
+        // plumbing: same bits as the allocating wrappers, including when
+        // the retained output arrives dirty and oversized. Kernel lock
+        // held: both sides of each comparison go through dispatch.
+        let _serialize = kernels::force_lock();
+        let _guard = crate::testing::KernelStateGuard::zero_threshold();
+        let mut rng = Rng::seed_from_u64(41);
+        let a = rand_mat(&mut rng, 37, 29);
+        let b = rand_mat(&mut rng, 29, 11);
+        let bt = rand_mat(&mut rng, 11, 29); // n×k layout for the nt forms
+        let mut bias = vec![0.0f32; 11];
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        for kind in KernelKind::ALL {
+            kernels::force(Some(kind));
+            let mut c = Matrix::full(64, 64, 7.0); // dirty + larger than needed
+            gemm_into(&a, &b, &mut c);
+            assert_eq!(c, gemm(&a, &b), "gemm_into under {}", kind.name());
+            gemm_bias_into(&a, &b, &bias, &mut c);
+            assert_eq!(c, gemm_bias(&a, &b, &bias), "gemm_bias_into under {}", kind.name());
+            gemm_bias_relu_into(&a, &b, &bias, &mut c);
+            assert_eq!(
+                c,
+                gemm_bias_relu(&a, &b, &bias),
+                "gemm_bias_relu_into under {}",
+                kind.name()
+            );
+            gemm_nt_into(&a, &bt, &mut c);
+            assert_eq!(c, gemm_nt(&a, &bt), "gemm_nt_into under {}", kind.name());
+            kernels::force(None);
+        }
+    }
+
+    #[test]
+    fn acc_forms_accumulate_on_top_of_existing_contents() {
+        let mut rng = Rng::seed_from_u64(42);
+        let a = rand_mat(&mut rng, 9, 13);
+        let bt = rand_mat(&mut rng, 7, 13); // n×k
+        let mut c = Matrix::full(9, 7, 0.5);
+        gemm_nt_acc(&a, &bt, &mut c);
+        let mut want = gemm_nt(&a, &bt);
+        for v in want.as_mut_slice() {
+            *v += 0.5;
+        }
+        assert!(c.max_abs_diff(&want) < 1e-5, "gemm_nt_acc drifted");
+
+        let at = rand_mat(&mut rng, 13, 9); // k×m
+        let b = rand_mat(&mut rng, 13, 7); // k×n
+        let mut c2 = Matrix::full(9, 7, -0.25);
+        gemm_tn_acc(&at, &b, &mut c2);
+        let mut want2 = gemm_tn(&at, &b);
+        for v in want2.as_mut_slice() {
+            *v += -0.25;
+        }
+        assert!(c2.max_abs_diff(&want2) < 1e-5, "gemm_tn_acc drifted");
+    }
+
+    #[test]
+    fn acc_forms_are_thread_count_invariant() {
+        use crate::tensor::pool::with_threads;
+        let _serialize = kernels::force_lock();
+        let _guard = crate::testing::KernelStateGuard::zero_threshold();
+        let mut rng = Rng::seed_from_u64(43);
+        let a = rand_mat(&mut rng, 61, 90);
+        let bt = rand_mat(&mut rng, 33, 90);
+        let at = rand_mat(&mut rng, 90, 61);
+        let b = rand_mat(&mut rng, 90, 33);
+        let serial = with_threads(1, || {
+            let mut nt = Matrix::zeros(61, 33);
+            gemm_nt_acc(&a, &bt, &mut nt);
+            let mut tn = Matrix::zeros(61, 33);
+            gemm_tn_acc(&at, &b, &mut tn);
+            (nt, tn)
+        });
+        for threads in [2usize, 4, 8] {
+            let got = with_threads(threads, || {
+                let mut nt = Matrix::zeros(61, 33);
+                gemm_nt_acc(&a, &bt, &mut nt);
+                let mut tn = Matrix::zeros(61, 33);
+                gemm_tn_acc(&at, &b, &mut tn);
+                (nt, tn)
+            });
+            assert_eq!(got.0, serial.0, "gemm_nt_acc drifted at {threads} threads");
+            assert_eq!(got.1, serial.1, "gemm_tn_acc drifted at {threads} threads");
+        }
     }
 
     #[test]

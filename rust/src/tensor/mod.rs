@@ -15,11 +15,12 @@ pub mod pool;
 pub mod scratch;
 
 pub use gemm::{
-    gemm, gemm_acc, gemm_bias, gemm_bias_relu, gemm_nt, gemm_nt_bias_relu, gemm_nt_gather_epi,
-    gemm_packed, gemm_packed_gather_epi, gemm_scalar, gemm_tn, parallel_flop_threshold,
+    gemm, gemm_acc, gemm_bias, gemm_bias_into, gemm_bias_relu, gemm_bias_relu_into, gemm_into,
+    gemm_nt, gemm_nt_acc, gemm_nt_bias_relu, gemm_nt_gather_epi, gemm_nt_into, gemm_packed,
+    gemm_packed_gather_epi, gemm_scalar, gemm_tn, gemm_tn_acc, parallel_flop_threshold,
     set_parallel_flop_threshold, PackedB,
 };
-pub(crate) use gemm::gemm_bias_scatter_raw;
+pub(crate) use gemm::{gemm_bias_scatter_raw, gemm_nt_row};
 pub use kernels::{prefetch_slice, relu_store, routing_dot, Epilogue};
 pub use ops::*;
 
@@ -35,6 +36,14 @@ pub struct Matrix {
     rows: usize,
     cols: usize,
     data: Vec<f32>,
+}
+
+impl Default for Matrix {
+    /// The empty `0 × 0` matrix (no backing allocation) — the natural
+    /// initial state for retained grow-only buffers.
+    fn default() -> Matrix {
+        Matrix::zeros(0, 0)
+    }
 }
 
 impl PartialEq for Matrix {

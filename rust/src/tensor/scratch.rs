@@ -3,10 +3,12 @@
 //! Pool workers live for the process (or for a serving worker's
 //! lifetime), so a buffer checked out here warms up to the largest size
 //! its thread has seen and then stops allocating: steady-state batched
-//! inference and packed-GEMM traffic become allocation-free (asserted by
-//! `tests/alloc_regression.rs`). The consumers are the packed GEMM's
-//! panel buffers (`apack`/`bpack`), the leaf-bucket activation tiles in
-//! `nn::fff`, and the per-sample `a1` buffer of `Fff::forward_infer`.
+//! inference, packed-GEMM traffic, and warm training steps become
+//! allocation-free (asserted by `tests/alloc_regression.rs`). The
+//! consumers are the packed GEMM's panel buffers (`apack`/`bpack`), the
+//! leaf-bucket activation tiles in `nn::fff`, the per-sample `a1`
+//! buffer of `Fff::forward_infer`, `gemm_tn_acc`'s sparsity census, and
+//! the per-row `t` scratch of the training backward's fused leaf pass.
 //!
 //! Checkout is stack-like and re-entrant: nested [`with_f32`] calls pop
 //! distinct buffers, and each returns to the thread's free stack on

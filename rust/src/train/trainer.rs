@@ -17,7 +17,9 @@
 
 use crate::config::{ModelKind, OptimizerKind, TrainConfig};
 use crate::data::{generate, BatchIter, Dataset, GenOptions};
-use crate::nn::{loss::cross_entropy, Adam, Fff, FffConfig, Model, Moe, MoeConfig, Optimizer, Sgd};
+use crate::nn::{
+    loss::cross_entropy_into, Adam, Fff, FffConfig, Model, Moe, MoeConfig, Optimizer, Sgd,
+};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
@@ -52,8 +54,10 @@ pub struct EpochRecord {
     pub aux_loss: f32,
     pub train_acc: f32,
     pub val_acc: f32,
-    /// Batch-mean node entropies per FFF layer (the paper's hardening
-    /// monitor); empty for models without FFF components.
+    /// **Epoch-mean** (over batches) of the batch-mean node entropies per
+    /// FFF layer — the paper's hardening monitor (Figures 5–6). Earlier
+    /// revisions silently kept only the last batch's monitor; empty for
+    /// models without FFF components.
     pub entropies: Vec<Vec<f32>>,
 }
 
@@ -69,6 +73,9 @@ pub struct Outcome {
     /// Epochs until the best validation accuracy was reached.
     pub ett_generalization: usize,
     pub epochs_run: usize,
+    /// Mean wall-clock per epoch (training batches + scoring passes) —
+    /// the throughput signal the Table 2 runs report.
+    pub mean_epoch_ms: f64,
     pub history: Vec<EpochRecord>,
 }
 
@@ -128,29 +135,53 @@ impl<'a> Trainer<'a> {
         let mut best_val_acc = f32::NEG_INFINITY;
         let mut ett_mem = 0usize;
         let mut ett_gen = 0usize;
-        let mut best_val_snapshot: Option<Vec<f32>> = None;
         let mut stale_epochs = 0usize;
         let mut plateau_epochs = 0usize;
         let mut history = Vec::new();
         let mut epochs_run = 0;
         // One scoring scratch for every evaluation this run performs.
         let mut eval_scratch = EvalScratch::new();
+        // Step buffers retained for the whole run: batch inputs, logits,
+        // loss gradient, and input gradient each live in exactly one
+        // grow-only buffer, so warm training steps make zero heap
+        // allocations end to end (tests/alloc_regression.rs pins the
+        // model-side step; the batch refill is `next_batch_into`).
+        let mut bx = Matrix::zeros(0, 0);
+        let mut blabels: Vec<usize> = Vec::new();
+        let mut logits = Matrix::zeros(0, 0);
+        let mut dl = Matrix::zeros(0, 0);
+        let mut dx = Matrix::zeros(0, 0);
+        // One snapshot buffer reused across every improved-validation
+        // epoch (Model::snapshot_into), instead of a fresh Vec each time.
+        let mut best_val_snapshot: Vec<f32> = Vec::new();
+        let mut have_snapshot = false;
+        // Running entropy-monitor sums for the epoch mean.
+        let mut ent_sums: Vec<Vec<f32>> = Vec::new();
+        let mut epoch_ms_total = 0.0f64;
 
         for epoch in 1..=cfg.max_epochs {
             epochs_run = epoch;
+            let epoch_start = std::time::Instant::now();
             let mut epoch_loss = 0.0;
             let mut epoch_aux = 0.0;
-            let mut batches = 0;
-            let mut entropies: Vec<Vec<f32>> = Vec::new();
-            for (x, labels) in BatchIter::shuffled(&self.train, cfg.batch_size, &mut rng) {
-                let logits = model.forward_train(&x, &mut rng);
-                let (loss, dl) = cross_entropy(&logits, &labels);
+            let mut batches = 0usize;
+            // Keep the sums' group structure across epochs (zeroed, not
+            // cleared) so the accumulation stays allocation-free.
+            for sum in ent_sums.iter_mut() {
+                sum.iter_mut().for_each(|s| *s = 0.0);
+            }
+            let mut it = BatchIter::shuffled(&self.train, cfg.batch_size, &mut rng);
+            while it.next_batch_into(&mut bx, &mut blabels) {
+                model.forward_train_into(&bx, &mut rng, &mut logits);
+                let loss = cross_entropy_into(&logits, &blabels, &mut dl);
                 model.zero_grad();
-                model.backward(&dl);
+                model.backward_into(&dl, &mut dx);
                 opt.step(model);
                 epoch_loss += loss;
                 epoch_aux += model.aux_loss();
-                entropies = model.entropy_report(); // last batch's monitor
+                // Accumulate the hardening monitor: the epoch record is
+                // the mean over batches, not the last batch's snapshot.
+                model.accumulate_entropies(&mut ent_sums);
                 batches += 1;
             }
 
@@ -169,7 +200,8 @@ impl<'a> Trainer<'a> {
             if improved_val {
                 best_val_acc = val_acc;
                 ett_gen = epoch;
-                best_val_snapshot = Some(model.snapshot());
+                model.snapshot_into(&mut best_val_snapshot);
+                have_snapshot = true;
             }
             if improved_train || improved_val {
                 stale_epochs = 0;
@@ -177,10 +209,16 @@ impl<'a> Trainer<'a> {
                 stale_epochs += 1;
             }
 
+            let inv_batches = 1.0 / batches.max(1) as f32;
+            let entropies: Vec<Vec<f32>> = ent_sums
+                .iter()
+                .map(|sum| sum.iter().map(|&s| s * inv_batches).collect())
+                .collect();
+            epoch_ms_total += epoch_start.elapsed().as_secs_f64() * 1e3;
             history.push(EpochRecord {
                 epoch,
-                train_loss: epoch_loss / batches.max(1) as f32,
-                aux_loss: epoch_aux / batches.max(1) as f32,
+                train_loss: epoch_loss * inv_batches,
+                aux_loss: epoch_aux * inv_batches,
                 train_acc,
                 val_acc,
                 entropies,
@@ -200,15 +238,14 @@ impl<'a> Trainer<'a> {
         }
 
         // G_A: restore the best-validation snapshot, evaluate on test.
-        let generalization_accuracy = match best_val_snapshot {
-            Some(snap) => {
-                let current = model.snapshot();
-                model.restore(&snap);
-                let acc = self.eval_infer_with(model, &self.test, &mut eval_scratch);
-                model.restore(&current);
-                acc
-            }
-            None => self.eval_infer_with(model, &self.test, &mut eval_scratch),
+        let generalization_accuracy = if have_snapshot {
+            let current = model.snapshot();
+            model.restore(&best_val_snapshot);
+            let acc = self.eval_infer_with(model, &self.test, &mut eval_scratch);
+            model.restore(&current);
+            acc
+        } else {
+            self.eval_infer_with(model, &self.test, &mut eval_scratch)
         };
 
         Outcome {
@@ -217,6 +254,7 @@ impl<'a> Trainer<'a> {
             ett_memorization: ett_mem,
             ett_generalization: ett_gen,
             epochs_run,
+            mean_epoch_ms: epoch_ms_total / epochs_run.max(1) as f64,
             history,
         }
     }
@@ -310,5 +348,69 @@ mod tests {
         assert_eq!(a.memorization_accuracy, b.memorization_accuracy);
         assert_eq!(a.generalization_accuracy, b.generalization_accuracy);
         assert_eq!(a.epochs_run, b.epochs_run);
+    }
+
+    #[test]
+    fn mean_epoch_ms_is_populated() {
+        let mut cfg = quick_cfg(ModelKind::Ff);
+        cfg.max_epochs = 3;
+        cfg.patience = 0;
+        let out = run_training(&cfg);
+        assert!(out.mean_epoch_ms > 0.0, "mean_epoch_ms = {}", out.mean_epoch_ms);
+    }
+
+    /// A model whose entropy report is scripted per training batch —
+    /// batch `k` (1-based) reports `[[k]]` — so the epoch record's
+    /// monitor is checkable exactly.
+    struct ScriptedEntropy {
+        calls: usize,
+        classes: usize,
+    }
+
+    impl crate::nn::Model for ScriptedEntropy {
+        fn forward_train(&mut self, x: &Matrix, _rng: &mut crate::rng::Rng) -> Matrix {
+            self.calls += 1;
+            Matrix::zeros(x.rows(), self.classes)
+        }
+
+        fn backward(&mut self, _d_logits: &Matrix) -> Matrix {
+            Matrix::zeros(1, 1)
+        }
+
+        fn forward_infer(&self, x: &Matrix) -> Matrix {
+            Matrix::zeros(x.rows(), self.classes)
+        }
+
+        fn visit_params(&mut self, _f: &mut crate::nn::ParamVisitor) {}
+
+        fn entropy_report(&self) -> Vec<Vec<f32>> {
+            vec![vec![self.calls as f32]]
+        }
+    }
+
+    #[test]
+    fn epoch_record_entropies_are_the_mean_over_batches() {
+        // Regression for the last-batch-only monitor bug: with batch
+        // reports 1, 2, …, k the recorded epoch monitor must be the mean
+        // (k + 1) / 2, not the final k.
+        let mut cfg = quick_cfg(ModelKind::Ff);
+        cfg.max_epochs = 1;
+        cfg.patience = 0;
+        cfg.batch_size = 32;
+        let trainer = Trainer::from_config(&cfg);
+        let mut model =
+            ScriptedEntropy { calls: 0, classes: trainer.train.num_classes };
+        let out = trainer.run(&mut model);
+        let k = trainer.train.len().div_ceil(32);
+        assert!(k > 1, "need multiple batches for the regression to bite (k = {k})");
+        let want = (1..=k).sum::<usize>() as f32 / k as f32;
+        assert_eq!(out.history.len(), 1);
+        assert_eq!(out.history[0].entropies.len(), 1);
+        let got = out.history[0].entropies[0][0];
+        assert!(
+            (got - want).abs() < 1e-5,
+            "epoch monitor {got} is not the batch mean {want} (k = {k})"
+        );
+        assert_ne!(got, k as f32, "monitor must not be the last batch's value");
     }
 }

@@ -1,12 +1,13 @@
-//! Allocation-regression suite: proves the serving hot path is
-//! **zero-allocation in steady state** (ISSUE 4 acceptance).
+//! Allocation-regression suite: proves the serving hot path (ISSUE 4)
+//! **and a warm training step** (ISSUE 5) are zero-allocation in steady
+//! state.
 //!
 //! A counting global allocator wraps `System`; after a warm-up that
-//! grows every retained buffer ([`InferScratch`], the routed-leaf
-//! vector, the output matrix, the thread-local [`tensor::scratch`]
-//! buffers), the measured window re-runs the exact same batch and the
-//! allocation counter must not move — for **every** forced GEMM kernel
-//! kind, via `testing::check_kernels`.
+//! grows every retained buffer ([`InferScratch`], the FFF/FF training
+//! caches, the routed-leaf vector, the output matrix, the thread-local
+//! [`tensor::scratch`] buffers), the measured window re-runs the exact
+//! same batch and the allocation counter must not move — for **every**
+//! forced GEMM kernel kind, via `testing::check_kernels`.
 //!
 //! Everything lives in ONE `#[test]`: the harness runs tests in a single
 //! binary concurrently, and a process-global allocation counter cannot
@@ -18,7 +19,8 @@
 //! dispatch machinery is covered separately with a no-op region, which
 //! is deterministic at any width.
 
-use fastfeedforward::nn::{FffInfer, InferScratch};
+use fastfeedforward::nn::loss::cross_entropy_into;
+use fastfeedforward::nn::{Adam, Ff, Fff, FffConfig, FffInfer, InferScratch, Model, Optimizer};
 use fastfeedforward::rng::Rng;
 use fastfeedforward::tensor::kernels::{self, KernelKind};
 use fastfeedforward::tensor::pool::{with_threads, ThreadPool};
@@ -127,6 +129,94 @@ fn steady_state_hot_paths_are_allocation_free() {
             })
         },
     );
+
+    // --- 1b) A warm training step (ISSUE 5 acceptance): the level-
+    //         batched FFF engine plus loss gradient and optimizer step,
+    //         end to end through retained buffers, per kernel kind. Two
+    //         warm-up steps grow every TrainCache matrix and Adam's
+    //         moment buffers; the measured steps must not allocate. ---
+    check_kernels(
+        "warm level-batched training step allocates nothing",
+        |rng| {
+            (
+                1 + rng.below(3), // depth 1..=3
+                2 + rng.below(3), // leaf width
+                5 + rng.below(8), // dim_in
+                3 + rng.below(4), // dim_out
+                rng.next_u64(),
+            )
+        },
+        |&(depth, leaf, dim_in, dim_out, seed), kind| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut cfg = FffConfig::new(dim_in, dim_out, depth, leaf);
+            cfg.hardening = 3.0;
+            let mut model = Fff::new(&mut rng, cfg);
+            let batch = 48usize;
+            let mut x = Matrix::zeros(batch, dim_in);
+            rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+            let labels: Vec<usize> = (0..batch).map(|r| r % dim_out).collect();
+            with_threads(1, || {
+                let mut opt = Adam::new(1e-3);
+                let mut logits = Matrix::zeros(0, 0);
+                let mut dl = Matrix::zeros(0, 0);
+                let mut dx = Matrix::zeros(0, 0);
+                let mut srng = Rng::seed_from_u64(7);
+                let delta = measure(
+                    || {
+                        model.forward_train_into(&x, &mut srng, &mut logits);
+                        std::hint::black_box(cross_entropy_into(&logits, &labels, &mut dl));
+                        model.zero_grad();
+                        model.backward_into(&dl, &mut dx);
+                        opt.step(&mut model);
+                    },
+                    3,
+                );
+                if delta != 0 {
+                    return Err(format!(
+                        "{delta} heap allocations in a warm training step (kernel {}, \
+                         depth {depth}, leaf {leaf}, dims {dim_in}->{dim_out}, batch {batch})",
+                        kind.name()
+                    ));
+                }
+                if logits.shape() != (batch, dim_out) || dx.shape() != (batch, dim_in) {
+                    return Err(format!(
+                        "step outputs have wrong shapes: {:?} / {:?}",
+                        logits.shape(),
+                        dx.shape()
+                    ));
+                }
+                Ok(())
+            })
+        },
+    );
+
+    // --- 1c) The FF baseline's training step shares the same retained-
+    //         buffer story (fused epilogue forward, gemm_tn_acc grads). ---
+    {
+        let mut rng = Rng::seed_from_u64(11);
+        let mut ff = Ff::new(&mut rng, 12, 16, 4);
+        let mut x = Matrix::zeros(32, 12);
+        rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+        let labels: Vec<usize> = (0..32).map(|r| r % 4).collect();
+        let delta = with_threads(1, || {
+            let mut opt = Adam::new(1e-3);
+            let mut logits = Matrix::zeros(0, 0);
+            let mut dl = Matrix::zeros(0, 0);
+            let mut dx = Matrix::zeros(0, 0);
+            let mut srng = Rng::seed_from_u64(7);
+            measure(
+                || {
+                    ff.forward_train_into(&x, &mut srng, &mut logits);
+                    std::hint::black_box(cross_entropy_into(&logits, &labels, &mut dl));
+                    ff.zero_grad();
+                    ff.backward_into(&dl, &mut dx);
+                    opt.step(&mut ff);
+                },
+                3,
+            )
+        });
+        assert_eq!(delta, 0, "warm FF training step allocated {delta} times");
+    }
 
     // --- 2) The packed/banded/serial GEMM cores into a retained C
     //        (covers the pack-panel scratch buffers). ---

@@ -42,6 +42,142 @@ fn build(case: &FffCase) -> (Fff, Matrix) {
     (fff, x)
 }
 
+#[derive(Debug)]
+struct TrainCase {
+    depth: usize,
+    leaf: usize,
+    dim_in: usize,
+    dim_out: usize,
+    /// Large enough to cross the fixed 128-row training-shard boundary
+    /// in most cases, so the fixed-order partial reductions really run
+    /// multi-shard.
+    batch: usize,
+    hardening: f32,
+    transposition_p: f32,
+    seed: u64,
+}
+
+fn gen_train_case(rng: &mut Rng) -> TrainCase {
+    TrainCase {
+        depth: rng.below(4),
+        leaf: 1 + rng.below(4),
+        dim_in: 4 + rng.below(8),
+        dim_out: 2 + rng.below(4),
+        batch: 33 + rng.below(400),
+        hardening: [0.0f32, 3.0, f32::INFINITY][rng.below(3)],
+        transposition_p: if rng.below(2) == 0 { 0.0 } else { 0.3 },
+        seed: rng.next_u64(),
+    }
+}
+
+fn build_train(case: &TrainCase) -> (Fff, Matrix, Vec<usize>) {
+    let mut rng = Rng::seed_from_u64(case.seed);
+    let mut cfg = FffConfig::new(case.dim_in, case.dim_out, case.depth, case.leaf);
+    cfg.hardening = case.hardening;
+    cfg.transposition_p = case.transposition_p;
+    let fff = Fff::new(&mut rng, cfg);
+    let x = rand_matrix(&mut rng, case.batch, case.dim_in);
+    let labels: Vec<usize> = (0..case.batch).map(|r| r % case.dim_out).collect();
+    (fff, x, labels)
+}
+
+/// One full training step (forward, loss gradient, backward) of a clone
+/// of `base`, on a `threads`-wide pool; returns everything a step
+/// produces, for bitwise comparison.
+fn train_step_outputs(
+    base: &Fff,
+    x: &Matrix,
+    labels: &[usize],
+    seed: u64,
+    threads: usize,
+) -> (Matrix, Matrix, Vec<f32>, Vec<f32>) {
+    use fastfeedforward::tensor::pool::with_threads;
+    with_threads(threads, || {
+        let mut model = base.clone();
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5A5A);
+        let y = model.forward_train(x, &mut rng);
+        let (_, dl) = cross_entropy(&y, labels);
+        model.zero_grad();
+        let dx = model.backward(&dl);
+        let mut grads = Vec::new();
+        model.visit_params(&mut |_p, g| grads.extend_from_slice(g));
+        let entropies = model.last_entropies.clone();
+        (y, dx, grads, entropies)
+    })
+}
+
+#[test]
+fn prop_training_step_bit_identical_across_thread_counts_and_kernels() {
+    // ISSUE 5 acceptance: the level-batched training engine — level
+    // GEMMs, sharded row-band passes, fixed-order partial reductions —
+    // produces bit-identical forward output, input gradients, parameter
+    // gradients, and entropy monitors at FFF_THREADS ∈ {1, 2, 4, 8},
+    // under every forced GEMM kernel kind.
+    check_kernels(
+        "training step is thread-count invariant",
+        gen_train_case,
+        |case, _kind| {
+            let (base, x, labels) = build_train(case);
+            let serial = train_step_outputs(&base, &x, &labels, case.seed, 1);
+            for threads in [2usize, 4, 8] {
+                let got = train_step_outputs(&base, &x, &labels, case.seed, threads);
+                if got.0 != serial.0 {
+                    return Err(format!("forward output drifted at {threads} threads"));
+                }
+                if got.1 != serial.1 {
+                    return Err(format!("input gradient drifted at {threads} threads"));
+                }
+                if got.2 != serial.2 {
+                    return Err(format!("parameter gradients drifted at {threads} threads"));
+                }
+                if got.3 != serial.3 {
+                    return Err(format!("entropy monitor drifted at {threads} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_level_batched_training_matches_per_node_baseline() {
+    // The GEMM rewrite against its per-node oracle, across the same
+    // random architecture/hyperparameter space (shared seed → shared
+    // transposition stream, so stochastic cases align too).
+    let close = |a: f32, b: f32| (a - b).abs() <= 1e-4 + 1e-3 * b.abs();
+    check("level-batched training ≡ per-node baseline", gen_train_case, |case| {
+        let (base, x, labels) = build_train(case);
+        let mut batched = base.clone();
+        let mut baseline = base.clone();
+        let mut ra = Rng::seed_from_u64(case.seed ^ 0x5A5A);
+        let mut rb = Rng::seed_from_u64(case.seed ^ 0x5A5A);
+        let ya = batched.forward_train(&x, &mut ra);
+        let yb = baseline.forward_train_baseline(&x, &mut rb);
+        if ya.max_abs_diff(&yb) > 1e-4 {
+            return Err(format!("forward diff {}", ya.max_abs_diff(&yb)));
+        }
+        let (_, dla) = cross_entropy(&ya, &labels);
+        let (_, dlb) = cross_entropy(&yb, &labels);
+        batched.zero_grad();
+        baseline.zero_grad();
+        let dxa = batched.backward(&dla);
+        let dxb = baseline.backward_baseline(&dlb);
+        if dxa.max_abs_diff(&dxb) > 2e-4 {
+            return Err(format!("dx diff {}", dxa.max_abs_diff(&dxb)));
+        }
+        let mut ga = Vec::new();
+        batched.visit_params(&mut |_p, g| ga.extend_from_slice(g));
+        let mut gb = Vec::new();
+        baseline.visit_params(&mut |_p, g| gb.extend_from_slice(g));
+        for (i, (a, b)) in ga.iter().zip(&gb).enumerate() {
+            if !close(*a, *b) {
+                return Err(format!("grad {i}: batched {a} vs baseline {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_routing_index_in_bounds() {
     check("routing index in [0, 2^d)", gen_case, |case| {

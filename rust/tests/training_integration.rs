@@ -73,6 +73,51 @@ fn moe_trains_but_slower_than_fff() {
 }
 
 #[test]
+fn training_outcome_bit_identical_across_thread_counts() {
+    // The pool-parallel level-batched engine end to end: a full training
+    // run (shuffled batches, optimizer steps, early stopping, scoring)
+    // must produce the exact same trajectory at every pool width — the
+    // CI FFF_THREADS=4 step runs this whole file on a wide pool too.
+    use fastfeedforward::tensor::pool::with_threads;
+    let mut c = cfg(ModelKind::Fff, 32, 8);
+    c.train_n = 400;
+    c.test_n = 100;
+    c.max_epochs = 6;
+    c.patience = 6;
+    let serial = with_threads(1, || run_training(&c));
+    for threads in [2usize, 4] {
+        let got = with_threads(threads, || run_training(&c));
+        assert_eq!(
+            got.epochs_run, serial.epochs_run,
+            "epoch count drifted at {threads} threads"
+        );
+        assert_eq!(
+            got.memorization_accuracy.to_bits(),
+            serial.memorization_accuracy.to_bits(),
+            "M_A drifted at {threads} threads"
+        );
+        assert_eq!(
+            got.generalization_accuracy.to_bits(),
+            serial.generalization_accuracy.to_bits(),
+            "G_A drifted at {threads} threads"
+        );
+        for (a, b) in got.history.iter().zip(&serial.history) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "epoch {} loss drifted at {threads} threads",
+                a.epoch
+            );
+            assert_eq!(a.train_acc.to_bits(), b.train_acc.to_bits(), "train acc drifted");
+            assert_eq!(a.val_acc.to_bits(), b.val_acc.to_bits(), "val acc drifted");
+            for (ea, eb) in a.entropies.iter().flatten().zip(b.entropies.iter().flatten()) {
+                assert_eq!(ea.to_bits(), eb.to_bits(), "entropy monitor drifted");
+            }
+        }
+    }
+}
+
+#[test]
 fn usps_analog_trains_quickly() {
     let mut c = TrainConfig::table1(DatasetKind::Usps, ModelKind::Fff, 32, 8, 1);
     c.train_n = 800;
