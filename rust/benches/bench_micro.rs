@@ -11,15 +11,18 @@
 //! `InferScratch` vs the allocating wrappers at batch 4096, depth 8),
 //! the **routing-descent suite** (depths 4–15, 1/2/4 threads), and the
 //! **training-engine suite** (level-batched GEMM training vs the
-//! per-node baseline on the Table-2-shaped workload, 1/2/4 threads), all
-//! recorded to `BENCH_gemm.json` (schema v5) so the perf trajectory is
-//! tracked PR over PR:
+//! per-node baseline on the Table-2-shaped workload, 1/2/4 threads),
+//! and the **int8 serving suite** (quantized bucket engine vs the f32
+//! packed path at the acceptance shape), all recorded to
+//! `BENCH_gemm.json` (schema v6) so the perf trajectory is tracked PR
+//! over PR:
 //!
 //! ```text
 //! cargo bench --manifest-path rust/Cargo.toml --bench bench_micro          # full, from repo root
 //! cargo bench --bench bench_micro -- --quick                               # CI smoke subset
 //! cargo bench --bench bench_micro -- --quick --routing-only                # descent smoke only
 //! cargo bench --bench bench_micro -- --quick --train-only                  # training smoke only
+//! cargo bench --bench bench_micro -- --quick --quant-only                  # int8 smoke only
 //! ```
 
 use fastfeedforward::bench::{time_budgeted, time_fn, Table};
@@ -295,6 +298,75 @@ fn train_suite(quick: bool) -> Vec<String> {
     rows
 }
 
+/// Int8 serving suite (§Perf iteration 6): the quantized bucket engine
+/// against the f32 packed path at the ISSUE-6 acceptance shape (dim
+/// 256, depth 8, leaf 16, batch 4096) plus the scalar int8 replica for
+/// the record, at 1/2 threads. Both models draw one weight stream from
+/// one seed, so the comparison is served-bits-for-served-bits on
+/// identical routing. The committed `BENCH_gemm.json` rows follow the
+/// C-prototype convention (no in-container Rust toolchain); CI
+/// regenerates the Rust numbers with this suite. Returns the `quant`
+/// rows for `BENCH_gemm.json`.
+fn quant_suite(quick: bool) -> Vec<String> {
+    use fastfeedforward::tensor::Precision;
+    let mut table = Table::new("int8 vs f32 serving", &["name", "time", "derived"]);
+    let mut rows: Vec<String> = Vec::new();
+    let budget = Duration::from_millis(if quick { 150 } else { 600 });
+    let (dim, depth, leaf) = (256usize, 8usize, 16usize);
+    let batch = if quick { 512 } else { 4096 };
+    // Same seed → same weight stream → identical routing; only the
+    // serving arithmetic differs between the two compiles.
+    let mut rng = Rng::seed_from_u64(27);
+    let mf32 =
+        FffInfer::random_with(&mut rng, dim, dim, depth, leaf, 1 << depth, Precision::F32);
+    let mut rng = Rng::seed_from_u64(27);
+    let mi8 =
+        FffInfer::random_with(&mut rng, dim, dim, depth, leaf, 1 << depth, Precision::Int8);
+    let mut x = Matrix::zeros(batch, dim);
+    rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+    let leaf_of = mf32.route_batch(&x);
+    let i8_isa = kernels::active_i8().label;
+    for &threads in &[1usize, 2] {
+        pool::set_global_threads(threads);
+        let mut scratch = InferScratch::new();
+        let mut y = Matrix::zeros(0, 0);
+        let t_f32 = time_budgeted(budget, 3, 1000, || {
+            mf32.infer_batch_routed_into(&x, &leaf_of, &mut scratch, &mut y);
+            std::hint::black_box(&y);
+        });
+        let t_i8 = time_budgeted(budget, 3, 1000, || {
+            mi8.infer_batch_routed_into(&x, &leaf_of, &mut scratch, &mut y);
+            std::hint::black_box(&y);
+        });
+        let speedup = t_f32.mean.as_secs_f64() / t_i8.mean.as_secs_f64();
+        table.row(vec![
+            format!("serve d={depth} dim={dim} b={batch} t={threads} f32-packed"),
+            format!("{:.3} ms", t_f32.mean_ms()),
+            format!("{:.0} samples/ms", batch as f64 / t_f32.mean_ms()),
+        ]);
+        table.row(vec![
+            format!("serve d={depth} dim={dim} b={batch} t={threads} int8[{i8_isa}]"),
+            format!("{:.3} ms", t_i8.mean_ms()),
+            format!("{speedup:.2}x vs f32 packed"),
+        ]);
+        for (precision, isa, t, s) in
+            [("f32", "packed", &t_f32, 1.0), ("int8", i8_isa, &t_i8, speedup)]
+        {
+            rows.push(format!(
+                "{{\"dim\": {dim}, \"depth\": {depth}, \"leaf\": {leaf}, \"batch\": {batch}, \
+                 \"precision\": \"{precision}\", \"kernel\": \"{isa}\", \"threads\": {threads}, \
+                 \"ms\": {}, \"samples_per_ms\": {}, \"speedup_vs_f32\": {}}}",
+                json_num(t.mean_ms()),
+                json_num(batch as f64 / t.mean_ms()),
+                json_num(s),
+            ));
+        }
+    }
+    pool::set_global_threads(pool::default_global_threads());
+    table.print();
+    rows
+}
+
 /// GEMM + FFF-inference thread-scaling suite → `BENCH_gemm.json`.
 fn scaling_suite(quick: bool) {
     let mut table = Table::new("gemm/fff_infer scaling", &["name", "time", "derived"]);
@@ -428,14 +500,15 @@ fn scaling_suite(quick: bool) {
     let scratch_rows = scratch_suite(quick);
     let routing_rows = routing_suite(quick);
     let train_rows = train_suite(quick);
+    let quant_rows = quant_suite(quick);
 
     let out_path = std::env::var("FFF_BENCH_GEMM_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());
     let json = format!(
-        "{{\n  \"schema\": \"fff-bench-gemm/v5\",\n  \"quick\": {quick},\n  \
+        "{{\n  \"schema\": \"fff-bench-gemm/v6\",\n  \"quick\": {quick},\n  \
          \"host_threads\": {},\n  \"isa\": \"{packed_isa}\",\n  \"gemm\": [\n    {}\n  ],\n  \
          \"fff_infer\": [\n    {}\n  ],\n  \"epilogue\": [\n    {}\n  ],\n  \
          \"scratch\": [\n    {}\n  ],\n  \"routing\": [\n    {}\n  ],\n  \
-         \"train\": [\n    {}\n  ]\n}}\n",
+         \"train\": [\n    {}\n  ],\n  \"quant\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         gemm_rows.join(",\n    "),
         fff_rows.join(",\n    "),
@@ -443,6 +516,7 @@ fn scaling_suite(quick: bool) {
         scratch_rows.join(",\n    "),
         routing_rows.join(",\n    "),
         train_rows.join(",\n    "),
+        quant_rows.join(",\n    "),
     );
     match std::fs::write(&out_path, json) {
         Ok(()) => println!("wrote {out_path}"),
@@ -460,6 +534,10 @@ fn main() {
     }
     if std::env::args().any(|a| a == "--train-only") {
         let _ = train_suite(quick);
+        return;
+    }
+    if std::env::args().any(|a| a == "--quant-only") {
+        let _ = quant_suite(quick);
         return;
     }
     scaling_suite(quick);
@@ -552,6 +630,7 @@ fn main() {
                 workers: 1,
                 threads: 0,
                 queue_capacity: 10_000,
+                ..CoordinatorConfig::default()
             },
             move || Box::new(NativeFffBackend::new(model.clone())),
         );

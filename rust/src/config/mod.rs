@@ -7,6 +7,7 @@ mod kv;
 pub use kv::KvFile;
 
 use crate::data::DatasetKind;
+use crate::tensor::Precision;
 
 /// Which architecture a run trains.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,6 +63,12 @@ pub struct ServeConfig {
     pub max_delay_us: u64,
     /// Backpressure bound on in-flight requests.
     pub queue_capacity: usize,
+    /// Serving precision the backend compiles models at (`f32` is the
+    /// default and the oracle; `int8` is §Perf iteration 6's quantized
+    /// mode). The `FFF_PRECISION` env override beats this, and the
+    /// `fff serve --precision` flag beats the config file — resolution
+    /// happens where the model is compiled.
+    pub precision: Precision,
 }
 
 impl Default for ServeConfig {
@@ -72,6 +79,7 @@ impl Default for ServeConfig {
             max_batch: 16,
             max_delay_us: 2000,
             queue_capacity: 4096,
+            precision: Precision::F32,
         }
     }
 }
@@ -104,6 +112,10 @@ impl ServeConfig {
         }
         if let Some(v) = kv.get_parsed::<usize>("serve.queue_capacity")? {
             cfg.queue_capacity = v;
+        }
+        if let Some(v) = kv.get("serve.precision") {
+            cfg.precision = Precision::parse(v)
+                .ok_or_else(|| format!("serve.precision: unknown precision {v:?} (want f32|int8)"))?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -308,5 +320,15 @@ mod tests {
     fn serve_config_rejects_zero_workers() {
         let kv = KvFile::parse("[serve]\nworkers = 0\n").unwrap();
         assert!(ServeConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn serve_config_parses_precision() {
+        let kv = KvFile::parse("[serve]\nprecision = int8\n").unwrap();
+        assert_eq!(ServeConfig::from_kv(&kv).unwrap().precision, Precision::Int8);
+        assert_eq!(ServeConfig::default().precision, Precision::F32);
+        let bad = KvFile::parse("[serve]\nprecision = fp4\n").unwrap();
+        let err = ServeConfig::from_kv(&bad).unwrap_err();
+        assert!(err.contains("precision"), "{err}");
     }
 }

@@ -34,7 +34,7 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{TcpClient, TcpServer};
 pub use worker::{Backend, HloBackend, NativeFffBackend};
 
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Precision};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -71,6 +71,12 @@ pub struct CoordinatorConfig {
     /// Bound on queued requests (backpressure): `submit` fails fast once
     /// this many requests are in flight.
     pub queue_capacity: usize,
+    /// Precision the serving model should be compiled at. The coordinator
+    /// itself never touches weights — the backend factory (which owns
+    /// model compilation) reads this, resolving the `FFF_PRECISION` env
+    /// override via [`crate::tensor::kernels::resolve_precision`] so the
+    /// override beats both config file and CLI flag.
+    pub precision: Precision,
 }
 
 impl Default for CoordinatorConfig {
@@ -80,6 +86,7 @@ impl Default for CoordinatorConfig {
             workers: 1,
             threads: 0,
             queue_capacity: 4096,
+            precision: Precision::F32,
         }
     }
 }
@@ -94,6 +101,7 @@ impl From<crate::config::ServeConfig> for CoordinatorConfig {
             workers: s.workers,
             threads: s.threads,
             queue_capacity: s.queue_capacity,
+            precision: s.precision,
         }
     }
 }
@@ -288,6 +296,7 @@ mod tests {
             workers,
             threads: 0,
             queue_capacity: 64,
+            precision: Precision::F32,
         };
         Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))
     }
@@ -351,6 +360,43 @@ mod tests {
         }
         assert!(max_batch_seen > 1, "no batching observed");
         assert!(max_batch_seen <= 16, "batch exceeded max: {max_batch_seen}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn int8_model_serves_exactly_like_direct_inference() {
+        // An int8 model behind the full coordinator stack (batcher,
+        // worker thread, response channels) answers with exactly the
+        // bits direct per-sample inference produces — the serving-side
+        // face of the int8 bit-identity invariant.
+        let mut rng = Rng::seed_from_u64(9);
+        let model =
+            FffInfer::random_with(&mut rng, 8, 3, 3, 4, 8, crate::tensor::Precision::Int8);
+        let served = model.clone();
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: std::time::Duration::from_millis(2),
+            },
+            precision: crate::tensor::Precision::Int8,
+            ..CoordinatorConfig::default()
+        };
+        let coord =
+            Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(served.clone())));
+        let mut xr = Rng::seed_from_u64(10);
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..8).map(|_| xr.normal_f32(0.0, 1.0)).collect();
+            let mut out = vec![0.0f32; 3];
+            model.infer_one(&x, &mut out);
+            want.push(out);
+            rxs.push(coord.submit(x).unwrap());
+        }
+        for (rx, w) in rxs.into_iter().zip(want) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.output, w, "served int8 bits drifted from direct inference");
+        }
         coord.shutdown();
     }
 

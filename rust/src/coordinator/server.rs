@@ -184,6 +184,7 @@ mod tests {
                 workers: 1,
                 threads: 0,
                 queue_capacity: 128,
+                precision: crate::tensor::Precision::F32,
             },
             move || Box::new(NativeFffBackend::new(model.clone())),
         ))

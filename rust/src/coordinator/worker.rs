@@ -72,8 +72,14 @@ impl Backend for NativeFffBackend {
         self.last_routing
     }
 
+    /// Precision-qualified so serving logs show which arithmetic a
+    /// worker is actually running (the env override can flip it away
+    /// from what the config file says).
     fn name(&self) -> &'static str {
-        "native-fff"
+        match self.model.precision() {
+            crate::tensor::Precision::F32 => "native-fff",
+            crate::tensor::Precision::Int8 => "native-fff-int8",
+        }
     }
 }
 
@@ -252,5 +258,20 @@ mod tests {
         let stats = backend.last_routing().expect("native backend reports routing stats");
         assert_eq!(stats.samples, 4);
         assert!(stats.distinct_leaves >= 1 && stats.max_bucket >= 1);
+        assert_eq!(backend.name(), "native-fff");
+    }
+
+    #[test]
+    fn native_backend_int8_matches_model_exactly() {
+        let mut rng = Rng::seed_from_u64(6);
+        let model =
+            FffInfer::random_with(&mut rng, 6, 2, 2, 3, 4, crate::tensor::Precision::Int8);
+        let mut backend = NativeFffBackend::new(model.clone());
+        assert_eq!(backend.name(), "native-fff-int8");
+        let x = Matrix::from_fn(16, 6, |r, c| ((r + 2 * c) as f32).sin());
+        let got = backend.infer(&x);
+        // Int8 is exact across entry points, so this is equality of
+        // bits, not a tolerance.
+        assert_eq!(got, model.infer_batch(&x));
     }
 }

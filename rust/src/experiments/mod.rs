@@ -11,6 +11,7 @@ pub mod fig2;
 pub mod fig34;
 pub mod fig5;
 pub mod fig6;
+pub mod quant;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -3,8 +3,8 @@
 //! ```text
 //! fff train  --dataset mnist --model fff --width 64 --leaf 8 [--seed 0]
 //! fff serve  --artifact fff_mnist_infer_b16 [--requests 1000] [--tcp 127.0.0.1:7878]
-//!            [--workers N] [--threads N] [--config serve.kv]
-//! fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6> [--scale paper]
+//!            [--workers N] [--threads N] [--precision f32|int8] [--config serve.kv]
+//! fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6|quant> [--scale paper]
 //! fff info                      # artifact manifest summary
 //! ```
 
@@ -36,10 +36,11 @@ fn usage() -> ! {
     eprintln!("usage: fff <train|serve|reproduce|info> [options]");
     eprintln!("  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8");
     eprintln!(
-        "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0"
+        "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0 \
+         --precision f32|int8"
     );
     eprintln!(
-        "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6  (FFF_SCALE=paper for full grid)"
+        "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6|quant  (FFF_SCALE=paper for full grid)"
     );
     eprintln!("  info");
     std::process::exit(2);
@@ -118,13 +119,21 @@ fn cmd_serve(args: &Args) {
     scfg.max_batch = args.get_or("max-batch", scfg.max_batch);
     scfg.max_delay_us = args.get_or("max-delay-us", scfg.max_delay_us);
     scfg.queue_capacity = args.get_or("queue", scfg.queue_capacity);
+    if let Some(p) = args.get("precision") {
+        scfg.precision = fastfeedforward::tensor::Precision::parse(p)
+            .unwrap_or_else(|| panic!("--precision: unknown precision {p:?} (want f32|int8)"));
+    }
     // Re-validate: CLI flags are applied after the config file's checks.
     scfg.validate().unwrap_or_else(|e| panic!("serve options: {e}"));
-    let cfg = CoordinatorConfig::from(scfg);
+    let mut cfg = CoordinatorConfig::from(scfg);
+    // The FFF_PRECISION process override beats file and flag, mirroring
+    // FFF_THREADS / FFF_GEMM_KERNEL (see EXPERIMENTS.md's env-knob table).
+    cfg.precision = fastfeedforward::tensor::kernels::resolve_precision(cfg.precision);
     println!(
-        "serving artifact {artifact} ({} workers, {} pool threads/worker)",
+        "serving artifact {artifact} ({} workers, {} pool threads/worker, {} native precision)",
         cfg.workers,
         if cfg.threads == 0 { "shared".to_string() } else { cfg.threads.to_string() },
+        cfg.precision.name(),
     );
     let coord = Coordinator::start(cfg, HloBackend::factory("artifacts".into(), artifact));
     if let Some(addr) = args.get("tcp") {
@@ -173,6 +182,7 @@ fn cmd_reproduce(args: &Args) {
         Some("fig34") => experiments::fig34::run(scale),
         Some("fig5") => experiments::fig5::run(scale),
         Some("fig6") => experiments::fig6::run(scale),
+        Some("quant") => experiments::quant::run(scale),
         Some("all") => {
             experiments::table1::run(scale);
             experiments::fig2::run(scale);
@@ -181,9 +191,10 @@ fn cmd_reproduce(args: &Args) {
             experiments::table3::run(scale);
             experiments::fig5::run(scale);
             experiments::fig6::run(scale);
+            experiments::quant::run(scale);
         }
         _ => {
-            eprintln!("usage: fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6|all>");
+            eprintln!("usage: fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6|quant|all>");
             std::process::exit(2);
         }
     }

@@ -36,7 +36,7 @@ use crate::tensor::pool::SendPtr;
 use crate::tensor::{
     bernoulli_entropy, dot, gemm_acc, gemm_bias_into, gemm_bias_relu_into, gemm_into, gemm_nt,
     gemm_nt_acc, gemm_nt_into, gemm_tn_acc, prefetch_slice, relu_inplace, routing_dot, scratch,
-    sigmoid, Epilogue, Matrix, PackedB,
+    sigmoid, Epilogue, Matrix, PackedB, Precision, QuantPackedB,
 };
 use std::slice::from_raw_parts_mut;
 
@@ -441,19 +441,44 @@ impl Fff {
         TreeRouter { depth: self.cfg.depth, dim_in: self.cfg.dim_in, levels }
     }
 
-    /// Pack trained weights into the inference-layout model.
+    /// Pack trained weights into the inference-layout model at the
+    /// default serving precision (f32, subject to the `FFF_PRECISION`
+    /// process override — see [`kernels::resolve_precision`]).
     pub fn compile_infer(&self) -> FffInfer {
+        self.compile_infer_with(kernels::resolve_precision(Precision::F32))
+    }
+
+    /// [`Fff::compile_infer`] at an **exact** serving precision — no env
+    /// resolution, so oracles and tests can pin f32 (or int8)
+    /// deliberately. Callers that want the `FFF_PRECISION` override to
+    /// win (the no-arg form, the serving config) resolve first via
+    /// [`kernels::resolve_precision`].
+    ///
+    /// Int8 mode quantizes each leaf's W1 and W2 into
+    /// [`QuantPackedB`] panels (symmetric per-8-column-block scales) and
+    /// skips the f32 `PackedB` panels it would never read; f32 mode
+    /// builds no quantized panels — neither precision pays the other's
+    /// memory tax (the rule `PackedB` has followed since §Perf
+    /// iteration 4).
+    pub fn compile_infer_with(&self, precision: Precision) -> FffInfer {
         assert_eq!(self.cfg.node, 1, "compile_infer supports the paper's n = 1 nodes");
-        let prepack = should_prepack();
+        let quant = precision == Precision::Int8;
+        let prepack = !quant && should_prepack();
         let mut leaf_w1t = Vec::with_capacity(self.cfg.num_leaves());
         let mut leaf_w1p = Vec::with_capacity(self.cfg.num_leaves());
+        let mut leaf_w1q = Vec::new();
         let mut leaf_b1 = Vec::new();
         let mut leaf_w2 = Vec::new();
+        let mut leaf_w2q = Vec::new();
         let mut leaf_b2 = Vec::new();
         for lf in &self.leaves {
             let w1t = lf.l1.w.transpose(); // ℓ × dim_in
             if prepack {
                 leaf_w1p.push(PackedB::pack_nt(&w1t));
+            }
+            if quant {
+                leaf_w1q.push(QuantPackedB::quantize_nt(&w1t));
+                leaf_w2q.push(QuantPackedB::quantize_nt(&lf.l2.w.transpose()));
             }
             leaf_w1t.push(w1t);
             leaf_b1.push(lf.l1.b.clone());
@@ -463,11 +488,14 @@ impl Fff {
         FffInfer {
             dim_out: self.cfg.dim_out,
             leaf: self.cfg.leaf,
+            precision,
             router: self.router(),
             leaf_w1t,
             leaf_w1p,
+            leaf_w1q,
             leaf_b1,
             leaf_w2,
+            leaf_w2q,
             leaf_b2,
         }
     }
@@ -1405,16 +1433,29 @@ impl RoutingStats {
 pub struct FffInfer {
     dim_out: usize,
     leaf: usize,
+    /// Serving precision fixed at compile time. f32 is the default and
+    /// the oracle; int8 (§Perf iteration 6) runs both bucket GEMMs over
+    /// the quantized panels below and is bit-identical across thread
+    /// counts, bucket splits, and kernel kinds — integer accumulation
+    /// plus a fixed dequant statement make that exact, not approximate.
+    precision: Precision,
     router: TreeRouter,
     leaf_w1t: Vec<Matrix>, // per leaf: ℓ × dim_in (per-sample layout)
     /// Per leaf: W1 prepacked into the microkernel's B panels at compile
     /// time, so bucket GEMMs skip `pack_b` and feed the fused-epilogue
     /// microkernel directly (§Perf iteration 4). Empty when the packed
     /// kind was not active at compile time ([`should_prepack`]) — the
-    /// grouped engine then uses the gather-dot kernel.
+    /// grouped engine then uses the gather-dot kernel — and in int8 mode,
+    /// which never reads f32 panels.
     leaf_w1p: Vec<PackedB>,
+    /// Per leaf (int8 mode only, else empty): W1 quantized to int8 with
+    /// symmetric per-panel scales. Weights are quantized once at compile
+    /// time; activations are quantized per row inside the GEMM drivers.
+    leaf_w1q: Vec<QuantPackedB>,
     leaf_b1: Vec<Vec<f32>>,
     leaf_w2: Vec<Matrix>, // per leaf: ℓ × dim_out
+    /// Per leaf (int8 mode only, else empty): W2 quantized like `leaf_w1q`.
+    leaf_w2q: Vec<QuantPackedB>,
     leaf_b2: Vec<Vec<f32>>,
 }
 
@@ -1440,6 +1481,14 @@ pub struct InferScratch {
     /// pool parallelizes even when routing concentrates the whole batch
     /// in a handful of leaves (the skew worst case).
     segments: Vec<(usize, usize, usize)>,
+    /// Fused int8 leaf path only (else never grows): quantized hidden
+    /// rows between the two bucket sweeps, one `seg_pad × ℓ` byte region
+    /// per segment (`seg_pad` = the batch's largest segment rounded up
+    /// to whole row-panels) so concurrent sweep-1 tasks write disjoint
+    /// regions. Grow-only like everything else here.
+    qa1: Vec<u8>,
+    /// Row scales paired with `qa1`, `seg_pad` slots per segment.
+    sa1: Vec<f32>,
 }
 
 impl InferScratch {
@@ -1464,6 +1513,23 @@ impl FffInfer {
         leaf: usize,
         max_alloc_leaves: usize,
     ) -> Self {
+        let precision = kernels::resolve_precision(Precision::F32);
+        Self::random_with(rng, dim_in, dim_out, depth, leaf, max_alloc_leaves, precision)
+    }
+
+    /// [`FffInfer::random`] at an **exact** precision (no `FFF_PRECISION`
+    /// resolution) — the bench and test constructor for the int8 serving
+    /// mode. Draws the same weight stream as the f32 form, so f32 and
+    /// int8 models from one seed quantize identical weights.
+    pub fn random_with(
+        rng: &mut Rng,
+        dim_in: usize,
+        dim_out: usize,
+        depth: usize,
+        leaf: usize,
+        max_alloc_leaves: usize,
+        precision: Precision,
+    ) -> Self {
         let n_leaves = (1usize << depth).min(max_alloc_leaves.max(1));
         let mut levels = Vec::with_capacity(depth);
         for m in 0..depth {
@@ -1475,23 +1541,54 @@ impl FffInfer {
             levels.push(RouteLevel { w, b });
         }
         let router = TreeRouter { depth, dim_in, levels };
-        let prepack = should_prepack();
+        let quant = precision == Precision::Int8;
+        let prepack = !quant && should_prepack();
         let mut leaf_w1t = Vec::with_capacity(n_leaves);
         let mut leaf_w1p = Vec::with_capacity(n_leaves);
+        let mut leaf_w1q = Vec::new();
         let mut leaf_b1 = Vec::with_capacity(n_leaves);
         let mut leaf_w2 = Vec::with_capacity(n_leaves);
+        let mut leaf_w2q = Vec::new();
         let mut leaf_b2 = Vec::with_capacity(n_leaves);
         for _ in 0..n_leaves {
             let w1t = init::normal(rng, leaf, dim_in, 0.05);
             if prepack {
                 leaf_w1p.push(PackedB::pack_nt(&w1t));
             }
+            let w2 = init::normal(rng, leaf, dim_out, 0.05);
+            if quant {
+                leaf_w1q.push(QuantPackedB::quantize_nt(&w1t));
+                leaf_w2q.push(QuantPackedB::quantize_nt(&w2.transpose()));
+            }
             leaf_w1t.push(w1t);
             leaf_b1.push(vec![0.0; leaf]);
-            leaf_w2.push(init::normal(rng, leaf, dim_out, 0.05));
+            leaf_w2.push(w2);
             leaf_b2.push(vec![0.0; dim_out]);
         }
-        FffInfer { dim_out, leaf, router, leaf_w1t, leaf_w1p, leaf_b1, leaf_w2, leaf_b2 }
+        FffInfer {
+            dim_out,
+            leaf,
+            precision,
+            router,
+            leaf_w1t,
+            leaf_w1p,
+            leaf_w1q,
+            leaf_b1,
+            leaf_w2,
+            leaf_w2q,
+            leaf_b2,
+        }
+    }
+
+    /// The serving precision this model was compiled at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Bytes held by the quantized panels — 0 for f32 models (the
+    /// "no memory tax on f32 processes" rule, pinned by tests).
+    pub fn quant_bytes(&self) -> usize {
+        self.leaf_w1q.iter().chain(&self.leaf_w2q).map(QuantPackedB::bytes).sum()
     }
 
     pub fn depth(&self) -> usize {
@@ -1543,6 +1640,12 @@ impl FffInfer {
     fn infer_leaf(&self, leaf: usize, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.router.dim_in());
         debug_assert_eq!(out.len(), self.dim_out);
+        if self.precision == Precision::Int8 {
+            // An int8 model must never silently answer in f32 — the
+            // sparse fallback and `infer_one` take the quantized replica
+            // so mixed-path serving stays bit-identical.
+            return self.infer_leaf_quant(leaf, x, out);
+        }
         let w1t = &self.leaf_w1t[leaf];
         let b1 = &self.leaf_b1[leaf];
         let w2 = &self.leaf_w2[leaf];
@@ -1553,6 +1656,52 @@ impl FffInfer {
                 crate::tensor::axpy_slice(a, w2.row(hn), out);
             }
         }
+    }
+
+    /// Per-sample int8 leaf evaluation — the scalar statement of exactly
+    /// the arithmetic the grouped engine's quantized bucket GEMMs
+    /// perform: the same per-row activation quantization to biased
+    /// bytes ([`kernels::quantize_row_q8_scalar`], unbiased here by
+    /// −[`kernels::QA_ZERO`] — the grouped SIMD kernels unbias
+    /// in-register or via the precomputed correction row, same exact
+    /// integer), the same exact i32 accumulation over the same
+    /// quantized weight bytes ([`QuantPackedB::get_q`]; pad bytes are
+    /// zero and contribute nothing), and the same dequant store
+    /// (`acc as f32 * (sa * sb)` then plain bias add / ReLU). Any
+    /// deviation here would split mixed-path serving into two answers —
+    /// `prop_int8_sparse_equals_grouped` pins the equality bit for bit.
+    fn infer_leaf_quant(&self, leaf: usize, x: &[f32], out: &mut [f32]) {
+        use crate::tensor::kernels::{quantize_row_q8_scalar, relu_store, NR, QA_ZERO};
+        let w1q = &self.leaf_w1q[leaf];
+        let w2q = &self.leaf_w2q[leaf];
+        let b1 = &self.leaf_b1[leaf];
+        let b2 = &self.leaf_b2[leaf];
+        let k = x.len();
+        let ell = self.leaf;
+        scratch::with_u8(k, |qx| {
+            let sa = quantize_row_q8_scalar(x, qx);
+            scratch::with_f32(ell, |a1| {
+                for (hn, a) in a1.iter_mut().enumerate() {
+                    let mut acc = 0i32;
+                    for (p, &q) in qx.iter().enumerate() {
+                        acc += (q as i32 - QA_ZERO as i32) * w1q.get_q(hn, p) as i32;
+                    }
+                    let s = sa * w1q.scale(hn / NR);
+                    *a = relu_store(acc as f32 * s + b1[hn]);
+                }
+                scratch::with_u8(ell, |qh| {
+                    let sh = quantize_row_q8_scalar(a1, qh);
+                    for (j, o) in out.iter_mut().enumerate() {
+                        let mut acc = 0i32;
+                        for (h, &q) in qh.iter().enumerate() {
+                            acc += (q as i32 - QA_ZERO as i32) * w2q.get_q(j, h) as i32;
+                        }
+                        let s = sh * w2q.scale(j / NR);
+                        *o = acc as f32 * s + b2[j];
+                    }
+                });
+            });
+        });
     }
 
     /// Batched `FORWARD_I`.
@@ -1744,10 +1893,23 @@ impl FffInfer {
             }
         }
         // Resolve the GEMM strategy once per batch, not once per segment.
-        // The packed path additionally needs the prepacked panels, which
-        // compile-time skips when a non-packed kind was active (see
-        // `should_prepack`) — fall back to the gather-dot kernel then.
-        let packed = kernels::active() == KernelKind::Packed
+        // Int8 models run both bucket GEMMs through the quantized drivers
+        // (which do their own kernel-kind dispatch and are bit-identical
+        // across kinds). For f32, the packed path additionally needs the
+        // prepacked panels, which compile-time skips when a non-packed
+        // kind was active (see `should_prepack`) — fall back to the
+        // gather-dot kernel then.
+        let quant = self.precision == Precision::Int8;
+        if quant && crate::tensor::fused_leaf_available(leaf) {
+            // The register-fused variant: two barrier-separated sweeps,
+            // hidden activations never stored as f32. Bit-identical to
+            // the unfused branch below (the leaf tile's requantize
+            // epilogue replicates the row quantizer statement), so the
+            // split is purely a memory-traffic optimization.
+            return self.infer_grouped_quant_fused(x, scratch, y, parallel);
+        }
+        let packed = !quant
+            && kernels::active() == KernelKind::Packed
             && self.leaf_w1p.len() == self.leaf_w1t.len();
         let yptr = crate::tensor::pool::SendPtr(y.as_mut_slice().as_mut_ptr());
         let order_ref: &[usize] = &scratch.order;
@@ -1758,7 +1920,15 @@ impl FffInfer {
             let b1 = &self.leaf_b1[l];
             // a1 = relu(x[rows] · w1 + b1), gather fused into the kernel.
             scratch::with_f32(rows.len() * leaf, |a1| {
-                if packed {
+                if quant {
+                    crate::tensor::gemm_quant_gather_epi(
+                        x,
+                        rows,
+                        &self.leaf_w1q[l],
+                        a1,
+                        Epilogue::BiasRelu(b1),
+                    );
+                } else if packed {
                     crate::tensor::gemm_packed_gather_epi(
                         x,
                         rows,
@@ -1781,15 +1951,27 @@ impl FffInfer {
                 // of `y`; `run` blocks until every segment is done; `y`
                 // was resized to b × dim_out above.
                 unsafe {
-                    crate::tensor::gemm_bias_scatter_raw(
-                        a1,
-                        leaf,
-                        self.leaf_w2[l].as_slice(),
-                        dim_out,
-                        &self.leaf_b2[l],
-                        rows,
-                        yptr.0,
-                    );
+                    if quant {
+                        crate::tensor::gemm_quant_scatter_raw(
+                            a1,
+                            leaf,
+                            &self.leaf_w2q[l],
+                            dim_out,
+                            &self.leaf_b2[l],
+                            rows,
+                            yptr.0,
+                        );
+                    } else {
+                        crate::tensor::gemm_bias_scatter_raw(
+                            a1,
+                            leaf,
+                            self.leaf_w2[l].as_slice(),
+                            dim_out,
+                            &self.leaf_b2[l],
+                            rows,
+                            yptr.0,
+                        );
+                    }
                 }
             });
         };
@@ -1799,6 +1981,111 @@ impl FffInfer {
         } else {
             for t in 0..n_segments {
                 run_segment(t);
+            }
+        }
+    }
+
+    /// The fused int8 bucket engine: **two barrier-separated sweeps**
+    /// instead of one fused pass per segment. Sweep 1 runs every
+    /// segment's L1 through the register-fused leaf tile — GEMM, bias,
+    /// ReLU, and requantize without the hidden row ever touching memory
+    /// as f32 — parking the quantized rows and their scales in
+    /// `scratch.qa1`/`sa1` (one padded region per segment, so
+    /// concurrent tasks never share a cache line's worth of ownership).
+    /// After the pool barrier, sweep 2 scatters every segment's L2 from
+    /// those rows. Two sweeps beat the obvious "L1 then L2 inside one
+    /// task": with both layers in one loop the L2 weight panels and the
+    /// L1 panels evict each other and the L2 GEMM ran ~3–5x slower in
+    /// the C prototype (EXPERIMENTS.md §Perf iteration 6); phase-split,
+    /// each sweep streams one panel set.
+    ///
+    /// Numerics: bit-identical to the unfused quant branch of
+    /// [`Self::infer_grouped_counted`] — the leaf tile's requantize
+    /// epilogue replicates the row-quantizer statement, skipping only a
+    /// lossless f32 store/load — so thread count, segment split, and
+    /// fused-vs-unfused all leave the served bits unchanged.
+    fn infer_grouped_quant_fused(
+        &self,
+        x: &Matrix,
+        scratch: &mut InferScratch,
+        y: &mut Matrix,
+        parallel: bool,
+    ) {
+        use crate::tensor::kernels::MR;
+        let leaf = self.leaf;
+        let n_segments = scratch.segments.len();
+        // Uniform per-segment region: the largest segment, whole
+        // row-panels (the leaf tile writes MR rows at a time).
+        let seg_pad = scratch
+            .segments
+            .iter()
+            .map(|&(_, s, e)| (e - s).div_ceil(MR) * MR)
+            .max()
+            .unwrap_or(0);
+        if seg_pad == 0 {
+            return;
+        }
+        if scratch.qa1.len() < n_segments * seg_pad * leaf {
+            scratch.qa1.resize(n_segments * seg_pad * leaf, 0);
+        }
+        if scratch.sa1.len() < n_segments * seg_pad {
+            scratch.sa1.resize(n_segments * seg_pad, 0.0);
+        }
+        let order_ref: &[usize] = &scratch.order;
+        let segments_ref: &[(usize, usize, usize)] = &scratch.segments;
+        let qa1ptr = crate::tensor::pool::SendPtr(scratch.qa1.as_mut_ptr());
+        let sa1ptr = crate::tensor::pool::SendPtr(scratch.sa1.as_mut_ptr());
+        let yptr = crate::tensor::pool::SendPtr(y.as_mut_slice().as_mut_ptr());
+        let sweep1 = |t: usize| {
+            let (l, lo, hi) = segments_ref[t];
+            let rows = &order_ref[lo..hi];
+            let pad_rows = (hi - lo).div_ceil(MR) * MR;
+            // SAFETY: region `t` of qa1/sa1 belongs to this task alone
+            // (regions are seg_pad-strided and sized above; `pad_rows
+            // <= seg_pad`), so concurrent sweep-1 tasks never alias.
+            let (qa1, sa1) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(
+                        qa1ptr.0.add(t * seg_pad * leaf),
+                        pad_rows * leaf,
+                    ),
+                    std::slice::from_raw_parts_mut(sa1ptr.0.add(t * seg_pad), hi - lo),
+                )
+            };
+            crate::tensor::leaf_quant_l1(x, rows, &self.leaf_w1q[l], &self.leaf_b1[l], qa1, sa1);
+        };
+        let sweep2 = |t: usize| {
+            let (l, lo, hi) = segments_ref[t];
+            let rows = &order_ref[lo..hi];
+            let pad_rows = (hi - lo).div_ceil(MR) * MR;
+            // SAFETY: shared reads of region `t` written in sweep 1 —
+            // the pool barrier between the sweeps ordered them; segments
+            // partition `order`, so tasks write disjoint rows of `y`,
+            // which was resized to the batch shape by the caller.
+            unsafe {
+                let qa1 =
+                    std::slice::from_raw_parts(qa1ptr.0.add(t * seg_pad * leaf), pad_rows * leaf);
+                let sa1 = std::slice::from_raw_parts(sa1ptr.0.add(t * seg_pad), hi - lo);
+                crate::tensor::gemm_quant_scatter_prequant(
+                    qa1,
+                    sa1,
+                    &self.leaf_w2q[l],
+                    &self.leaf_b2[l],
+                    rows,
+                    yptr.0,
+                );
+            }
+        };
+        if parallel && n_segments > 1 {
+            let pool = crate::tensor::pool::current();
+            pool.run(n_segments, &sweep1);
+            pool.run(n_segments, &sweep2);
+        } else {
+            for t in 0..n_segments {
+                sweep1(t);
+            }
+            for t in 0..n_segments {
+                sweep2(t);
             }
         }
     }
@@ -2206,11 +2493,70 @@ mod tests {
 
     #[test]
     fn compiled_infer_matches_forward_i() {
+        // Precision pinned: this compares against the f32 training
+        // oracle at f32 tolerance, so it must not flip under the
+        // FFF_PRECISION=int8 full-suite run.
         let (fff, _) = mk(3, 4, 0.0);
         let x = batch(10, 5);
         let a = fff.forward_infer(&x);
-        let b = fff.compile_infer().infer_batch(&x);
+        let b = fff.compile_infer_with(Precision::F32).infer_batch(&x);
         assert!(a.max_abs_diff(&b) < 1e-5, "diff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn int8_compile_builds_quant_panels_only_in_int8_mode() {
+        // The memory rule from the issue: f32 processes pay no quantized
+        // panel tax, int8 processes pay no f32 PackedB tax.
+        let (fff, _) = mk(2, 4, 0.0);
+        let f32_model = fff.compile_infer_with(Precision::F32);
+        assert_eq!(f32_model.precision(), Precision::F32);
+        assert_eq!(f32_model.quant_bytes(), 0);
+        assert!(f32_model.leaf_w1q.is_empty() && f32_model.leaf_w2q.is_empty());
+        let int8_model = fff.compile_infer_with(Precision::Int8);
+        assert_eq!(int8_model.precision(), Precision::Int8);
+        assert!(int8_model.quant_bytes() > 0);
+        assert_eq!(int8_model.leaf_w1q.len(), int8_model.leaf_w1t.len());
+        assert_eq!(int8_model.leaf_w2q.len(), int8_model.leaf_w2.len());
+        assert!(int8_model.leaf_w1p.is_empty(), "int8 never reads f32 panels");
+    }
+
+    #[test]
+    fn int8_grouped_matches_per_sample_bitwise() {
+        // The mixed-path serving invariant at int8: the grouped bucket
+        // engine and the per-sample fallback are the *same* quantized
+        // arithmetic, so they agree exactly — not within tolerance.
+        let _serialize = kernels::force_lock();
+        let (fff, _) = mk(2, 4, 0.0);
+        let inf = fff.compile_infer_with(Precision::Int8);
+        let x = batch(64, 5); // dense: 64 rows over 4 leaves → grouped path
+        let grouped = inf.infer_batch_grouped(&x);
+        let mut per_sample = Matrix::zeros(64, 3);
+        for r in 0..64 {
+            inf.infer_one(x.row(r), per_sample.row_mut(r));
+        }
+        assert_eq!(grouped, per_sample, "int8 grouped != per-sample replica");
+    }
+
+    #[test]
+    fn int8_tracks_f32_within_quant_tolerance() {
+        // Not bit-equal to f32 (that is the trade), but a trained-scale
+        // model must stay close; the serving-accuracy gate in
+        // experiments::quant asserts the end-to-end version of this.
+        let (fff, _) = mk(3, 4, 0.0);
+        let x = batch(48, 5);
+        let yf = fff.compile_infer_with(Precision::F32).infer_batch(&x);
+        let yq = fff.compile_infer_with(Precision::Int8).infer_batch(&x);
+        let scale = yf.as_slice().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let max_diff = yf.max_abs_diff(&yq);
+        assert!(max_diff < 0.1 * (1.0 + scale), "int8 drifted {max_diff} from f32 (scale {scale})");
+        let mean_diff = yf
+            .as_slice()
+            .iter()
+            .zip(yq.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / yf.len() as f32;
+        assert!(mean_diff < 0.02 * (1.0 + scale), "int8 mean drift {mean_diff} (scale {scale})");
     }
 
     #[test]

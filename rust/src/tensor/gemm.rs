@@ -1,8 +1,10 @@
-//! GEMM drivers for the native engine (v5: caller-retained `_into` and
-//! accumulating `_acc` forms for the level-batched training engine —
-//! see EXPERIMENTS.md §Perf iteration 5; v4 added fused store-phase
-//! epilogues, the prepacked-B serving path, and scratch-arena pack
-//! buffers; v3 the explicit-SIMD microkernel).
+//! GEMM drivers for the native engine (v6: the int8 quantized serving
+//! path — [`QuantPackedB`] per-panel-scaled weights, on-the-fly A-row
+//! quantization, i32-tile microkernels with a dequantizing epilogue
+//! store, see EXPERIMENTS.md §Perf iteration 6; v5 added caller-retained
+//! `_into` and accumulating `_acc` forms for the level-batched training
+//! engine; v4 fused store-phase epilogues, the prepacked-B serving path,
+//! and scratch-arena pack buffers; v3 the explicit-SIMD microkernel).
 //!
 //! Layout is row-major everywhere. Execution tiers (see EXPERIMENTS.md
 //! §Perf for the measured iteration log naive → ikj → packed+parallel →
@@ -32,7 +34,7 @@
 //!    microkernel, and the intrinsic tile removed that variance
 //!    (EXPERIMENTS.md §Perf iteration 3).
 
-use super::kernels::{self, Epilogue, KernelKind, MR, NR};
+use super::kernels::{self, Epilogue, KernelKind, MR, NR, QK};
 use super::ops::{axpy_slice, dot};
 use super::pool::{self, SendPtr};
 use super::scratch;
@@ -616,6 +618,552 @@ pub(crate) unsafe fn gemm_bias_scatter_raw(
                 axpy_slice(xv, &bv[p * n..(p + 1) * n], dst);
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized (int8) serving path: per-panel-scaled weights, i32 tiles,
+// dequantizing epilogue store.
+// ---------------------------------------------------------------------------
+
+/// A weight matrix quantized to int8 with symmetric per-panel scales and
+/// packed for the int8 microkernels — the serving-time representation
+/// behind `FFF_PRECISION=int8` / `Precision::Int8`. Built **once** at
+/// model-compile time (and only when the int8 mode is active — an f32
+/// process never pays the extra bytes, the same rule [`PackedB`]
+/// follows); a bucket GEMM then streams a quarter of the f32 panel
+/// traffic, which is the whole win at FFF serving shapes (leaf GEMMs are
+/// weight-bandwidth-bound — EXPERIMENTS.md §Perf iteration 6).
+///
+/// Quantization: each NR-column panel gets one symmetric f32 scale,
+/// `absmax/127` over its `k × NR` block (an all-zero panel pins scale
+/// `1.0` with all-zero bytes — the divide-by-zero guard); elements store
+/// as `round(v/scale)` clamped to ±127, so −128 never appears and the
+/// AVX2 `vpmaddubsw` kernel cannot saturate. B-side bytes stay plain
+/// signed i8; only A-side activation bytes are biased
+/// (see [`kernels::quantize_row_q8_scalar`]).
+///
+/// Layout: `ceil(n/NR)` panels, each `kg = ceil(k/QK)` groups of
+/// `NR` columns × `QK` consecutive k-bytes (32 bytes — one ymm row, one
+/// column's group per 32-bit lane), `k` zero-padded up to `kg*QK`.
+/// Unlike [`PackedB`] there is no KC chunking: the int8 panel is 4x
+/// denser, so even a `k = 1024` panel sits comfortably in L1 next to the
+/// A-panel bytes.
+///
+/// Alongside the bytes, each panel carries a per-column correction row
+/// `corr[c] = 127·Σ_p byte[c][p]` (pad bytes are zero and add nothing).
+/// The VNNI kernel feeds `vpdpbusd` the **biased** A bytes directly and
+/// subtracts `corr` once after the `k` loop — `Σ(q+127)·b − 127·Σb =
+/// Σq·b`, exact in i32 — which is what makes the biased-A trick free at
+/// serving time: the correction is precomputed here, at compile time.
+#[derive(Clone, Debug)]
+pub struct QuantPackedB {
+    k: usize,
+    n: usize,
+    /// `k.div_ceil(QK)` zero-padded k-groups per column.
+    kg: usize,
+    /// `[ceil(n/NR) panels][kg groups][NR columns][QK k-bytes]`.
+    data: Vec<i8>,
+    /// One symmetric scale per NR-column panel.
+    scales: Vec<f32>,
+    /// `[ceil(n/NR) panels][NR columns]` of `127·Σ_p byte[c][p]` — the
+    /// biased-A correction the VNNI kernel subtracts.
+    corr: Vec<i32>,
+}
+
+impl QuantPackedB {
+    /// Quantize + pack from the transposed (`n × k`) layout the FFF leaf
+    /// storage uses (same orientation as [`PackedB::pack_nt`]).
+    pub fn quantize_nt(bt: &Matrix) -> QuantPackedB {
+        let (n, k) = bt.shape();
+        let kg = k.div_ceil(QK);
+        let n_panels = n.div_ceil(NR);
+        let mut data = vec![0i8; n_panels * kg * NR * QK];
+        let mut scales = Vec::with_capacity(n_panels);
+        let mut corr = vec![0i32; n_panels * NR];
+        for jp in 0..n_panels {
+            let j0 = jp * NR;
+            let nc = NR.min(n - j0);
+            let mut absmax = 0.0f32;
+            for c in 0..nc {
+                for &v in bt.row(j0 + c) {
+                    absmax = absmax.max(v.abs());
+                }
+            }
+            let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+            // Same rounding statement as the A-side quantizer
+            // (`kernels::quantize_row_q8_scalar`, minus the bias:
+            // reciprocal multiply, float-domain clamp, copysign
+            // round-half-away-from-zero) so A- and B-side bytes follow
+            // one spec.
+            let inv = 1.0 / scale;
+            let panel = &mut data[jp * kg * NR * QK..(jp + 1) * kg * NR * QK];
+            for c in 0..nc {
+                for (p, &v) in bt.row(j0 + c).iter().enumerate() {
+                    let t = (v * inv).clamp(-127.0, 127.0);
+                    panel[(p / QK) * NR * QK + c * QK + (p % QK)] =
+                        (t + 0.5f32.copysign(t)) as i8;
+                }
+            }
+            // The biased-A correction row, summed over the packed bytes
+            // themselves (zero pads included — they add nothing), so it
+            // is consistent with the panel by construction.
+            for (c, slot) in corr[jp * NR..(jp + 1) * NR].iter_mut().enumerate() {
+                let mut sum = 0i32;
+                for g in 0..kg {
+                    for q in 0..QK {
+                        sum += panel[g * NR * QK + c * QK + q] as i32;
+                    }
+                }
+                *slot = 127 * sum;
+            }
+            scales.push(scale);
+        }
+        QuantPackedB { k, n, kg, data, scales, corr }
+    }
+
+    /// Inner dimension (rows of the packed operand).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The symmetric scale of column panel `jp` (columns `jp*NR..`).
+    pub fn scale(&self, jp: usize) -> f32 {
+        self.scales[jp]
+    }
+
+    /// The quantized byte of (column `j`, inner index `p`) — the scalar
+    /// accessor the per-sample int8 fallback and the golden/property
+    /// tests read the packed layout through. Pad positions (`p ≥ k` never
+    /// stored) hold zero.
+    pub fn get_q(&self, j: usize, p: usize) -> i8 {
+        let jp = j / NR;
+        let c = j % NR;
+        self.data[jp * self.kg * NR * QK + (p / QK) * NR * QK + c * QK + (p % QK)]
+    }
+
+    /// The biased-A correction of (column `j`, i.e. `127·Σ_p byte[j][p]`)
+    /// — the scalar accessor the property tests pin the table through.
+    pub fn corr_of(&self, j: usize) -> i32 {
+        self.corr[(j / NR) * NR + (j % NR)]
+    }
+
+    /// Quantized payload size in bytes (diagnostics: the f32 panel is
+    /// ~4x this).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+            + self.scales.len() * std::mem::size_of::<f32>()
+            + self.corr.len() * std::mem::size_of::<i32>()
+    }
+
+    /// The packed byte panel of columns `jp*NR..`.
+    fn panel(&self, jp: usize) -> &[i8] {
+        &self.data[jp * self.kg * NR * QK..(jp + 1) * self.kg * NR * QK]
+    }
+
+    /// The correction row of panel `jp` (NR i32 values).
+    fn corr_panel(&self, jp: usize) -> &[i32] {
+        &self.corr[jp * NR..(jp + 1) * NR]
+    }
+}
+
+/// Quantize gathered rows `x.row(rows[i])` contiguously into biased-u8
+/// A rows — `astride = kg·QK` bytes per row, the layout the fused tiles
+/// broadcast from ([`kernels::TileI8`]). Each row's ragged `k` tail is
+/// filled with the biased zero [`kernels::QA_ZERO`] (unbiased 0, and the
+/// matching B pad bytes are 0 — either way the pads contribute nothing),
+/// and each row's symmetric scale lands in `sa[i]`. Pad rows `m..` of
+/// `qa` are biased-zero-filled too: the tiles read them (the store is
+/// `mr`-guarded, the reads are not), so the fill only keeps scratch
+/// reuse deterministic — its value never reaches an output.
+fn quantize_gather_rows(
+    x: &Matrix,
+    rows: &[usize],
+    ks: &kernels::I8Kernels,
+    qa: &mut [u8],
+    sa: &mut [f32],
+) {
+    let k = x.cols();
+    let astride = k.div_ceil(QK) * QK;
+    for (r, &row) in rows.iter().enumerate() {
+        let dst = &mut qa[r * astride..(r + 1) * astride];
+        if k % QK != 0 {
+            dst[k..].fill(kernels::QA_ZERO);
+        }
+        sa[r] = (ks.quant_row)(x.row(row), dst);
+    }
+    let used = rows.len() * astride;
+    if used < qa.len() {
+        qa[used..].fill(kernels::QA_ZERO);
+    }
+}
+
+/// Contiguous-A twin of [`quantize_gather_rows`] for the bucket's second
+/// GEMM (the post-ReLU `a1` activations are already a dense `m × k`
+/// scratch block).
+fn quantize_contig_rows(
+    av: &[f32],
+    k: usize,
+    m: usize,
+    ks: &kernels::I8Kernels,
+    qa: &mut [u8],
+    sa: &mut [f32],
+) {
+    let astride = k.div_ceil(QK) * QK;
+    for r in 0..m {
+        let dst = &mut qa[r * astride..(r + 1) * astride];
+        if k % QK != 0 {
+            dst[k..].fill(kernels::QA_ZERO);
+        }
+        sa[r] = (ks.quant_row)(&av[r * k..(r + 1) * k], dst);
+    }
+    let used = m * astride;
+    if used < qa.len() {
+        qa[used..].fill(kernels::QA_ZERO);
+    }
+}
+
+/// The shared int8 GEMM core over pre-quantized A rows: fused tiles
+/// (kernel + dequant/bias/ReLU store in one pass, i32 accumulators held
+/// in registers), two-panel pairing where the kernel set has an x2 tile
+/// (shares each A broadcast across 16 output columns), the scalar
+/// narrow tile for the ragged column tail (bit-identical: exact i32 +
+/// the same store statement), and per-row output offsets so one core
+/// serves contiguous output (`rows_out = None` → row `i` at `c + i*n`)
+/// and scatter-row output (`rows_out = Some(rows)` → row `i` at
+/// `c + rows[i]*n`). `Epilogue::None` runs the tiles against a zero
+/// bias array — the int8 store contract is *overwrite with bias add*,
+/// so "no epilogue" is defined as `bias ≡ 0.0`, `relu` off.
+///
+/// # Safety
+/// `c` must point to a row-major f32 buffer with row stride `n = b.n()`
+/// such that every output row named by `rows_out` (or `0..m` when
+/// contiguous) is in bounds, outlives the call, and is touched by no
+/// other thread; `qa` must hold `ceil(m/MR)·MR` rows of `b.kg·QK`
+/// biased bytes and `sa` the `m` row scales (as the quantize fronts
+/// produce).
+unsafe fn gemm_quant_core(
+    qa: &[u8],
+    sa: &[f32],
+    m: usize,
+    b: &QuantPackedB,
+    epi: Epilogue,
+    ks: &kernels::I8Kernels,
+    c: *mut f32,
+    rows_out: Option<&[usize]>,
+) {
+    static ZB: [f32; 2 * NR] = [0.0; 2 * NR];
+    if m == 0 {
+        return;
+    }
+    let n = b.n;
+    let kg = b.kg;
+    let astride = kg * QK;
+    let n_panels = b.scales.len();
+    let relu = matches!(epi, Epilogue::BiasRelu(_));
+    let bias_base: *const f32 = match epi {
+        Epilogue::None => ZB.as_ptr(),
+        Epilogue::Bias(bb) | Epilogue::BiasRelu(bb) => bb.as_ptr(),
+    };
+    let zero_bias = matches!(epi, Epilogue::None);
+    debug_assert!(qa.len() >= m.div_ceil(MR) * MR * astride, "gemm_quant_core: short qa");
+    debug_assert!(sa.len() >= m, "gemm_quant_core: short sa");
+    let mp = m.div_ceil(MR);
+    for ip in 0..mp {
+        let r0 = ip * MR;
+        let mr = MR.min(m - r0);
+        let ap = qa.as_ptr().add(r0 * astride);
+        let sp = sa.as_ptr().add(r0);
+        // Per-row output offsets; pad slots clamp to the last real row
+        // (the tiles never store them, but SIMD stores are emitted for
+        // all MR slots before the `mr` guard prunes — the clamped
+        // offset keeps the dead slots pointing at valid memory).
+        let mut roff = [0usize; MR];
+        for (r, slot) in roff.iter_mut().enumerate() {
+            let rr = (r0 + r).min(m - 1);
+            *slot = match rows_out {
+                Some(ro) => ro[rr] * n,
+                None => rr * n,
+            };
+        }
+        let mut jp = 0usize;
+        if let Some(tx2) = ks.tile_x2 {
+            while jp + 2 <= n_panels && n - jp * NR >= 2 * NR {
+                let j0 = jp * NR;
+                let bj = if zero_bias { ZB.as_ptr() } else { bias_base.add(j0) };
+                tx2(
+                    kg,
+                    ap,
+                    astride,
+                    b.panel(jp).as_ptr(),
+                    b.panel(jp + 1).as_ptr(),
+                    b.corr_panel(jp).as_ptr(),
+                    b.corr_panel(jp + 1).as_ptr(),
+                    sp,
+                    b.scales[jp],
+                    b.scales[jp + 1],
+                    bj,
+                    relu,
+                    c.add(j0),
+                    roff.as_ptr(),
+                    mr,
+                );
+                jp += 2;
+            }
+        }
+        while jp < n_panels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let bj = if zero_bias { ZB.as_ptr() } else { bias_base.add(j0) };
+            if nr == NR {
+                (ks.tile)(
+                    kg,
+                    ap,
+                    astride,
+                    b.panel(jp).as_ptr(),
+                    b.corr_panel(jp).as_ptr(),
+                    sp,
+                    b.scales[jp],
+                    bj,
+                    relu,
+                    c.add(j0),
+                    roff.as_ptr(),
+                    mr,
+                );
+            } else {
+                kernels::tile_i8_scalar(
+                    kg,
+                    ap,
+                    astride,
+                    b.panel(jp).as_ptr(),
+                    b.corr_panel(jp).as_ptr(),
+                    sp,
+                    b.scales[jp],
+                    bj,
+                    relu,
+                    c.add(j0),
+                    roff.as_ptr(),
+                    mr,
+                    nr,
+                );
+            }
+            jp += 1;
+        }
+    }
+}
+
+/// `C = epi(quant(Xrows) · Bq)` — the int8 twin of
+/// [`gemm_packed_gather_epi`]: left-operand row `i` is `x.row(rows[i])`,
+/// quantized on the fly to biased-u8 (per-row absmax scale) into
+/// contiguous A rows, then the fused-tile core stores each dequantized
+/// element `(acc as f32)·(sa·sb) + bias[j]` (+ReLU) in the same pass —
+/// an overwrite, so `c` needs no zeroing. Single-threaded by design
+/// (the leaf-bucket callers are pool tasks); A bytes and row scales
+/// come from [`scratch`], so steady state allocates nothing.
+///
+/// Results are bit-identical across thread counts, bucket splits, and
+/// forced kernel kinds: the quantized bytes per row depend only on that
+/// row (and every quantizer matches the scalar statement), i32
+/// accumulation is exact, and the dequant store is one fixed scalar
+/// statement. `k == 0` degenerates naturally: `kg = 0` tiles store
+/// `epi(0.0)` per element.
+pub fn gemm_quant_gather_epi(
+    x: &Matrix,
+    rows: &[usize],
+    b: &QuantPackedB,
+    c: &mut [f32],
+    epi: Epilogue,
+) {
+    let m = rows.len();
+    let k = x.cols();
+    let n = b.n;
+    assert_eq!(k, b.k, "gemm_quant_gather: inner dims");
+    assert!(c.len() >= m * n, "gemm_quant_gather: short output");
+    if let Epilogue::Bias(bb) | Epilogue::BiasRelu(bb) = epi {
+        assert!(bb.len() >= n, "gemm_quant_gather: short bias");
+    }
+    if m == 0 {
+        return;
+    }
+    let ks = kernels::active_i8();
+    let astride = b.kg * QK;
+    let mp = m.div_ceil(MR);
+    scratch::with_u8(mp * MR * astride, |qa| {
+        scratch::with_f32(m, |sa| {
+            quantize_gather_rows(x, rows, ks, qa, sa);
+            // SAFETY: `c` covers m rows of n (asserted), qa/sa filled
+            // above with the contracted shapes.
+            unsafe { gemm_quant_core(qa, sa, m, b, epi, ks, c.as_mut_ptr(), None) }
+        });
+    });
+}
+
+/// Scatter-row int8 output GEMM — the quantized twin of
+/// [`gemm_bias_scatter_raw`]: quantizes the post-ReLU `a1` block per
+/// row, then the fused-tile core writes each dequantized `bias`-epilogue
+/// row **directly into its final row of the output matrix**:
+/// `y[rows[i]][j] = (acc_ij as f32)·(sa_i·sb_jp) + bias[j]`. Every named
+/// row is fully overwritten (each output column belongs to exactly one
+/// panel tile); other rows are never touched. Scattered and contiguous
+/// int8 results carry identical bits — same quantize statement, same
+/// core, only the per-row output offsets differ.
+///
+/// # Safety
+/// Same contract as [`gemm_bias_scatter_raw`]: `y` must point to a
+/// row-major buffer with row stride `n` large enough that every
+/// `rows[i]` row is in bounds, the buffer must outlive the call, and no
+/// other thread may touch the rows named by `rows` while it runs.
+pub(crate) unsafe fn gemm_quant_scatter_raw(
+    av: &[f32],
+    k: usize,
+    b: &QuantPackedB,
+    n: usize,
+    bias: &[f32],
+    rows: &[usize],
+    y: *mut f32,
+) {
+    debug_assert!(av.len() >= rows.len() * k, "gemm_quant_scatter: short A");
+    assert_eq!(k, b.k, "gemm_quant_scatter: inner dims");
+    assert_eq!(n, b.n, "gemm_quant_scatter: output width");
+    debug_assert_eq!(bias.len(), n, "gemm_quant_scatter: bias length");
+    let m = rows.len();
+    if m == 0 {
+        return;
+    }
+    let ks = kernels::active_i8();
+    let astride = b.kg * QK;
+    let mp = m.div_ceil(MR);
+    scratch::with_u8(mp * MR * astride, |qa| {
+        scratch::with_f32(m, |sa| {
+            quantize_contig_rows(av, k, m, ks, qa, sa);
+            // SAFETY: output rows are in bounds and exclusively ours per
+            // this function's contract; qa/sa filled just above.
+            unsafe { gemm_quant_core(qa, sa, m, b, Epilogue::Bias(bias), ks, y, Some(rows)) }
+        });
+    });
+}
+
+/// L2 over pre-quantized hidden rows — the second sweep of the fused
+/// leaf path: the shared core with scatter-row output and `Bias`
+/// epilogue, i.e. [`gemm_quant_scatter_raw`] minus the quantize front
+/// (sweep 1's [`leaf_quant_l1`] already produced `qa1`/`sa1`). The two
+/// entry points are bit-identical because the fused leaf tile's
+/// requantize epilogue replicates the row quantizer statement.
+///
+/// # Safety
+/// Same output contract as [`gemm_quant_scatter_raw`]; `qa1` must hold
+/// `ceil(rows.len()/MR)·MR` rows of `b.kg()·QK` biased bytes and `sa1`
+/// `rows.len()` scales, as [`leaf_quant_l1`] produces.
+pub(crate) unsafe fn gemm_quant_scatter_prequant(
+    qa1: &[u8],
+    sa1: &[f32],
+    b: &QuantPackedB,
+    bias: &[f32],
+    rows: &[usize],
+    y: *mut f32,
+) {
+    debug_assert_eq!(bias.len(), b.n, "gemm_quant_scatter_prequant: bias length");
+    if rows.is_empty() {
+        return;
+    }
+    gemm_quant_core(
+        qa1,
+        sa1,
+        rows.len(),
+        b,
+        Epilogue::Bias(bias),
+        kernels::active_i8(),
+        y,
+        Some(rows),
+    );
+}
+
+/// Whether the register-fused leaf path can serve leaf width `ell`:
+/// `ell == 2·NR` (one L1 output row is exactly two SIMD registers, the
+/// shape the leaf tile requantizes in-register) and the active int8
+/// kernel set has a leaf tile (the SIMD `packed` kind; the scalar set
+/// takes the unfused store-then-requantize route instead).
+pub(crate) fn fused_leaf_available(ell: usize) -> bool {
+    ell == 2 * NR && kernels::active_i8().tile_leaf.is_some()
+}
+
+/// Fused leaf L1 over gathered rows: quantize `rows` of `x`, then run
+/// the register-fused leaf tile — L1 GEMM, bias, ReLU, and requantize
+/// of the hidden row, all without leaving registers — writing the
+/// quantized hidden rows straight into `qa1` (`q1.n()` bytes per row)
+/// and their scales into `sa1`. Pad rows `rows.len()..ceil(m/MR)·MR`
+/// of `qa1` are biased-zero-filled, matching the quantize fronts.
+///
+/// Bit-identical to `gemm_quant_gather_epi(BiasRelu)` followed by
+/// per-row [`kernels::quantize_row_q8_scalar`]: the epilogue replicates
+/// the dequant store and row-quantizer statements and skips only a
+/// lossless f32 store/load round trip. Caller must have checked
+/// [`fused_leaf_available`] (`q1.n() == 2·NR`, leaf tile present).
+pub(crate) fn leaf_quant_l1(
+    x: &Matrix,
+    rows: &[usize],
+    q1: &QuantPackedB,
+    b1: &[f32],
+    qa1: &mut [u8],
+    sa1: &mut [f32],
+) {
+    let m = rows.len();
+    let k = x.cols();
+    let ell = q1.n;
+    assert_eq!(k, q1.k, "leaf_quant_l1: inner dims");
+    assert_eq!(ell, 2 * NR, "leaf_quant_l1: leaf width");
+    assert!(b1.len() >= ell, "leaf_quant_l1: short bias");
+    if m == 0 {
+        return;
+    }
+    let ks = kernels::active_i8();
+    let tleaf = ks
+        .tile_leaf
+        .expect("leaf_quant_l1: active kernel set has no leaf tile");
+    let kg = q1.kg;
+    let astride = kg * QK;
+    let mp = m.div_ceil(MR);
+    assert!(qa1.len() >= mp * MR * ell, "leaf_quant_l1: short qa1");
+    assert!(sa1.len() >= m, "leaf_quant_l1: short sa1");
+    scratch::with_u8(mp * MR * astride, |qa| {
+        scratch::with_f32(m, |sa| {
+            quantize_gather_rows(x, rows, ks, qa, sa);
+            for ip in 0..mp {
+                let r0 = ip * MR;
+                let mr = MR.min(m - r0);
+                // SAFETY: `qa` holds `mp·MR` rows of `astride` bytes;
+                // `q1` has exactly two panels (`ell == 2·NR` asserted);
+                // `qa1`/`sa1` bounds asserted above and each tile's
+                // output rows are disjoint.
+                unsafe {
+                    tleaf(
+                        kg,
+                        qa.as_ptr().add(r0 * astride),
+                        astride,
+                        q1.panel(0).as_ptr(),
+                        q1.panel(1).as_ptr(),
+                        q1.corr_panel(0).as_ptr(),
+                        q1.corr_panel(1).as_ptr(),
+                        sa.as_ptr().add(r0),
+                        q1.scales[0],
+                        q1.scales[1],
+                        b1.as_ptr(),
+                        qa1.as_mut_ptr().add(r0 * ell),
+                        ell,
+                        sa1.as_mut_ptr().add(r0),
+                        mr,
+                    );
+                }
+            }
+        });
+    });
+    if m * ell < mp * MR * ell {
+        qa1[m * ell..mp * MR * ell].fill(kernels::QA_ZERO);
     }
 }
 
@@ -1328,6 +1876,255 @@ mod tests {
         let mut c2 = gemm(&a, &b);
         c2.scale(2.0);
         assert!(c.max_abs_diff(&c2) < 1e-4);
+    }
+
+    /// Scalar statement of the whole int8 bucket GEMM, built from the
+    /// same public pieces the per-sample fallback uses
+    /// (`quantize_row_q8_scalar` biased bytes, unbiased by −127, +
+    /// `get_q` + the fixed dequant formula) — the packed driver must
+    /// match it bit for bit.
+    fn naive_quant(
+        x: &Matrix,
+        rows: &[usize],
+        bq: &QuantPackedB,
+        bias: &[f32],
+        relu: bool,
+    ) -> Vec<f32> {
+        use crate::tensor::kernels::{quantize_row_q8_scalar, relu_store, QA_ZERO};
+        let (k, n) = (bq.k(), bq.n());
+        let mut out = vec![0.0f32; rows.len() * n];
+        let mut qrow = vec![0u8; k];
+        for (i, &r) in rows.iter().enumerate() {
+            let sa = quantize_row_q8_scalar(x.row(r), &mut qrow);
+            for j in 0..n {
+                let mut acc = 0i32;
+                for (p, &q) in qrow.iter().enumerate() {
+                    acc += (q as i32 - QA_ZERO as i32) * bq.get_q(j, p) as i32;
+                }
+                let s = sa * bq.scale(j / NR);
+                let t = acc as f32 * s + bias[j];
+                out[i * n + j] = if relu { relu_store(t) } else { t };
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn quantize_nt_pins_layout_scales_corr_and_zero_panels() {
+        // 10 columns → 2 panels; panel 1 (cols 8..10) all zeros.
+        let mut bt = Matrix::zeros(10, 7); // n×k
+        for j in 0..8 {
+            for p in 0..7 {
+                bt.set(j, p, ((j * 7 + p) as f32 - 20.0) * 0.125);
+            }
+        }
+        let bq = QuantPackedB::quantize_nt(&bt);
+        assert_eq!((bq.k(), bq.n()), (7, 10));
+        // Zero panel: scale 1.0, all-zero bytes (divide-by-zero guard),
+        // zero bias-correction terms.
+        assert_eq!(bq.scale(1), 1.0);
+        for j in 8..10 {
+            for p in 0..7 {
+                assert_eq!(bq.get_q(j, p), 0, "zero panel byte ({j},{p})");
+            }
+            assert_eq!(bq.corr_of(j), 0, "zero panel corr ({j})");
+        }
+        // Correction terms are 127·Σ_p q[j][p] — what the VNNI kernel
+        // subtracts to unbias the biased-u8 A side. Zero k-pad bytes in
+        // the packed panels must not perturb the sum.
+        for j in 0..10 {
+            let want: i32 = (0..7).map(|p| bq.get_q(j, p) as i32).sum::<i32>() * 127;
+            assert_eq!(bq.corr_of(j), want, "corr ({j})");
+        }
+        // Panel 0: absmax element quantizes to ±127 exactly; round-trip
+        // error ≤ scale/2 (plus float slop) per element.
+        let mut absmax = 0.0f32;
+        for j in 0..8 {
+            for p in 0..7 {
+                absmax = absmax.max(bt.get(j, p).abs());
+            }
+        }
+        let s = bq.scale(0);
+        assert_eq!(s, absmax / 127.0);
+        let mut hit_extreme = false;
+        for j in 0..8 {
+            for p in 0..7 {
+                let q = bq.get_q(j, p);
+                assert!((bt.get(j, p) - q as f32 * s).abs() <= 0.5001 * s, "({j},{p})");
+                hit_extreme |= q.unsigned_abs() == 127;
+            }
+        }
+        assert!(hit_extreme, "absmax element should land on ±127");
+        // Memory: quantized payload is ~a quarter of the f32 panel.
+        assert!(bq.bytes() < 10 * 7 * 4 / 2);
+    }
+
+    #[test]
+    fn quant_gather_matches_scalar_statement_bitwise_per_kind() {
+        // The packed int8 driver vs the written-out scalar statement,
+        // under every forced kernel kind — integer accumulation plus the
+        // fixed dequant store make these exactly equal, which is the
+        // invariant the int8 serving mode's determinism rides on.
+        let mut rng = Rng::seed_from_u64(61);
+        for &(m_src, k, n) in &[(9usize, 5usize, 3usize), (40, 33, 13), (24, 64, 16), (7, 1, 9)] {
+            let x = rand_mat(&mut rng, m_src, k);
+            let bt = rand_mat(&mut rng, n, k);
+            let mut bias = vec![0.0f32; n];
+            rng.fill_normal(&mut bias, 0.0, 1.0);
+            let bq = QuantPackedB::quantize_nt(&bt);
+            let rows: Vec<usize> = (0..(m_src * 2 / 3).max(1)).map(|i| (i * 5) % m_src).collect();
+            let want = naive_quant(&x, &rows, &bq, &bias, true);
+            let _serialize = kernels::force_lock();
+            let _guard = crate::testing::KernelStateGuard::zero_threshold();
+            for kind in KernelKind::ALL {
+                kernels::force(Some(kind));
+                let mut got = vec![f32::NAN; rows.len() * n]; // stale: must be overwritten
+                gemm_quant_gather_epi(&x, &rows, &bq, &mut got, Epilogue::BiasRelu(&bias));
+                kernels::force(None);
+                let (gb, wb): (Vec<u32>, Vec<u32>) = (
+                    got.iter().map(|v| v.to_bits()).collect(),
+                    want.iter().map(|v| v.to_bits()).collect(),
+                );
+                assert_eq!(gb, wb, "int8 gather drifted under {} at ({k},{n})", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn quant_gather_tracks_f32_oracle_loosely() {
+        // Not bit-exact against f32 (that's the point of quantizing) but
+        // the two must stay close on well-conditioned inputs.
+        let mut rng = Rng::seed_from_u64(62);
+        let x = rand_mat(&mut rng, 20, 64);
+        let bt = rand_mat(&mut rng, 16, 64);
+        let bias = vec![0.1f32; 16];
+        let bq = QuantPackedB::quantize_nt(&bt);
+        let rows: Vec<usize> = (0..20).collect();
+        let mut got = vec![0.0f32; 20 * 16];
+        gemm_quant_gather_epi(&x, &rows, &bq, &mut got, Epilogue::Bias(&bias));
+        let mut want = vec![0.0f32; 20 * 16];
+        gemm_nt_gather_epi(&x, &rows, &bt, &mut want, Epilogue::Bias(&bias));
+        let max_diff = got
+            .iter()
+            .zip(&want)
+            .map(|(g, w)| (g - w).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2.0, "int8 drifted {max_diff} from f32 at k=64");
+        let mean_diff: f32 =
+            got.iter().zip(&want).map(|(g, w)| (g - w).abs()).sum::<f32>() / got.len() as f32;
+        assert!(mean_diff < 0.3, "int8 mean drift {mean_diff} too large");
+    }
+
+    #[test]
+    fn quant_scatter_matches_quant_gather_plus_copy() {
+        let mut rng = Rng::seed_from_u64(63);
+        let m = 6;
+        let k = 9;
+        let n = 10;
+        let mut a = rand_mat(&mut rng, m, k);
+        for v in a.as_mut_slice().iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0; // post-ReLU-shaped input, like the real caller
+            }
+        }
+        let bt = rand_mat(&mut rng, n, k);
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        let bq = QuantPackedB::quantize_nt(&bt);
+        let rows = vec![11usize, 2, 7, 0, 13, 4];
+        let mut y = Matrix::full(14, n, f32::NAN);
+        let yptr = y.as_mut_slice().as_mut_ptr();
+        // SAFETY: rows are in bounds of y and the call is single-threaded.
+        unsafe {
+            gemm_quant_scatter_raw(a.as_slice(), k, &bq, n, &bias, &rows, yptr);
+        }
+        // Oracle: the contiguous int8 driver over an identity gather.
+        let idx: Vec<usize> = (0..m).collect();
+        let mut want = vec![0.0f32; m * n];
+        gemm_quant_gather_epi(&a, &idx, &bq, &mut want, Epilogue::Bias(&bias));
+        for (i, &r) in rows.iter().enumerate() {
+            for j in 0..n {
+                assert_eq!(
+                    y.get(r, j).to_bits(),
+                    want[i * n + j].to_bits(),
+                    "row {r} col {j} drifted from contiguous int8 driver"
+                );
+            }
+        }
+        // Untouched rows stay NaN (the kernel writes only `rows`).
+        assert!(y.get(1, 0).is_nan());
+    }
+
+    #[test]
+    fn fused_leaf_matches_unfused_store_then_requantize_bitwise() {
+        // The register-fused leaf path (leaf_quant_l1 + prequant scatter)
+        // vs the unfused statement: gather-GEMM the L1 with BiasRelu,
+        // requantize each stored f32 row with the scalar row quantizer,
+        // then scatter-GEMM the L2 from the same quantized rows. The f32
+        // store/load the fused path skips is lossless, so bytes, scales,
+        // and final outputs must all carry identical bits. Runs only
+        // where the SIMD leaf tile exists (ell == 2·NR and AVX2 kernels
+        // active); on other hosts the serving path uses the unfused
+        // route this test treats as the oracle.
+        use crate::tensor::kernels::quantize_row_q8_scalar;
+        let ell = 2 * NR;
+        if !fused_leaf_available(ell) {
+            return;
+        }
+        let mut rng = Rng::seed_from_u64(64);
+        let (m_src, k) = (13usize, 37usize);
+        let n_out = 10usize;
+        let x = rand_mat(&mut rng, m_src, k);
+        let w1t = rand_mat(&mut rng, ell, k); // leaf L1, n×k
+        let w2t = rand_mat(&mut rng, n_out, ell); // leaf L2, n×k
+        let mut b1 = vec![0.0f32; ell];
+        let mut b2 = vec![0.0f32; n_out];
+        rng.fill_normal(&mut b1, 0.0, 1.0);
+        rng.fill_normal(&mut b2, 0.0, 1.0);
+        let q1 = QuantPackedB::quantize_nt(&w1t);
+        let q2 = QuantPackedB::quantize_nt(&w2t);
+        let rows = vec![4usize, 0, 11, 7, 2, 9, 12, 1, 5];
+        let m = rows.len();
+        let mp = m.div_ceil(MR);
+
+        // Fused path.
+        let mut qa1 = vec![0u8; mp * MR * ell];
+        let mut sa1 = vec![0.0f32; m];
+        leaf_quant_l1(&x, &rows, &q1, &b1, &mut qa1, &mut sa1);
+        let mut y = Matrix::full(m_src, n_out, f32::NAN);
+        // SAFETY: scatter rows are in bounds of y; single-threaded call.
+        unsafe {
+            gemm_quant_scatter_prequant(&qa1, &sa1, &q2, &b2, &rows, y.as_mut_slice().as_mut_ptr());
+        }
+
+        // Unfused oracle: store the ReLU'd hidden block, requantize rows.
+        let mut h = vec![f32::NAN; m * ell];
+        gemm_quant_gather_epi(&x, &rows, &q1, &mut h, Epilogue::BiasRelu(&b1));
+        let mut qa_want = vec![kernels::QA_ZERO; mp * MR * ell];
+        let mut sa_want = vec![0.0f32; m];
+        for r in 0..m {
+            let row = &h[r * ell..(r + 1) * ell];
+            sa_want[r] = quantize_row_q8_scalar(row, &mut qa_want[r * ell..(r + 1) * ell]);
+        }
+        assert_eq!(qa1, qa_want, "fused leaf bytes drifted");
+        let sb: Vec<u32> = sa1.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = sa_want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sb, wb, "fused leaf scales drifted");
+        let mut y_want = Matrix::full(m_src, n_out, f32::NAN);
+        // SAFETY: same contract as above.
+        unsafe {
+            let yp = y_want.as_mut_slice().as_mut_ptr();
+            gemm_quant_scatter_raw(&h, ell, &q2, n_out, &b2, &rows, yp);
+        }
+        for &r in &rows {
+            for j in 0..n_out {
+                assert_eq!(
+                    y.get(r, j).to_bits(),
+                    y_want.get(r, j).to_bits(),
+                    "fused L2 row {r} col {j} drifted"
+                );
+            }
+        }
     }
 
     #[test]

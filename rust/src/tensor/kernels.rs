@@ -48,6 +48,22 @@
 //!   aarch64, and the scalar fallback — the invariant tree descent rides
 //!   on (a logit on the wrong side of zero would route to a different
 //!   leaf on different hardware).
+//! * The int8 tile kernels ([`tile_i8_scalar`] and its SIMD twins in
+//!   [`I8Kernels`]) accumulate quantized products in i32 — *exact*
+//!   integer arithmetic, so unlike the f32 tiles every implementation
+//!   and every accumulation order produces identical bits. A-side bytes
+//!   are stored **biased**: `byte = q + 127` (u8 in `0..=254`, see
+//!   [`quantize_row_q8_scalar`]), which lets AVX-VNNI's `vpdpbusd`
+//!   consume them directly (u8×i8) and subtract the per-column
+//!   correction `127·Σb` (the `corr` table `QuantPackedB` precomputes at
+//!   quantize time) — still exact in i32. The maddubs kernel unbiases in-register
+//!   (`psubb 127`) instead; the scalar replica unbiases per element.
+//!   The one float stage is the fused dequantizing store:
+//!   `(acc as f32) * (sa*sb) + bias[j]` (then the ReLU select), all
+//!   plain mul/add (never `mul_add`), one written-out scalar statement
+//!   every tile replicates — which is why int8 serving results are
+//!   bit-identical across thread counts, bucket splits, and forced
+//!   kernel kinds.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -55,6 +71,12 @@ use std::sync::OnceLock;
 /// Microkernel tile: MR rows of `A` × NR columns of `B`.
 pub const MR: usize = 4;
 pub const NR: usize = 8;
+
+/// Int8 packing group: QK consecutive `k` bytes per row/column — the
+/// unit one 32-bit SIMD lane consumes (`vpmaddubsw`+`vpmaddwd`, or
+/// `vpdpbusd` on AVX-VNNI). Packed int8 panels zero-pad `k` up to a
+/// multiple of QK.
+pub const QK: usize = 4;
 
 /// Store-phase epilogue of the `_epi` microkernels and the band kernels'
 /// write-back: each output element is stored as `C = epi(C + acc)`.
@@ -195,6 +217,65 @@ fn env_default() -> KernelKind {
     })
 }
 
+/// Serving precision of a compiled inference engine.
+///
+/// `F32` is the default and the accuracy oracle; `Int8` runs the leaf
+/// GEMMs over symmetric per-panel-quantized weights with i32
+/// accumulation — a weight-bandwidth play (EXPERIMENTS.md §Perf
+/// iteration 6). Routing and training stay f32 regardless: only the
+/// bucketed leaf GEMMs change representation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// f32 weights and arithmetic — the default and the oracle.
+    F32,
+    /// int8 symmetric per-panel weights, i32 accumulation, dequantizing
+    /// epilogue store.
+    Int8,
+}
+
+impl Precision {
+    /// Every precision, in sweep order.
+    pub const ALL: [Precision; 2] = [Precision::F32, Precision::Int8];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// The `FFF_PRECISION` process override (read once): `Some(p)` forces
+/// every subsequent inference compile to precision `p`, overriding the
+/// compile option and serve config alike; unset leaves them alone.
+pub fn precision_override() -> Option<Precision> {
+    static ENV: OnceLock<Option<Precision>> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("FFF_PRECISION") {
+        Ok(v) => {
+            let p = Precision::parse(&v);
+            if p.is_none() {
+                eprintln!("FFF_PRECISION: unknown precision {v:?} (want f32|int8); ignoring");
+            }
+            p
+        }
+        Err(_) => None,
+    })
+}
+
+/// The precision a compile requesting `requested` actually gets:
+/// [`precision_override`] wins, otherwise the request stands.
+pub fn resolve_precision(requested: Precision) -> Precision {
+    precision_override().unwrap_or(requested)
+}
+
 /// `C[mr×nr] += A-panel · B-panel` over packed panels: `ap` is `kc`
 /// MR-groups (zero-padded), `bp` is `kc` NR-groups (zero-padded), `cv`
 /// starts at the tile's top-left element with row stride `n`.
@@ -216,6 +297,138 @@ pub type Micro4x8Epi = for<'a> fn(
     epi: Epilogue<'a>,
 );
 
+/// The biased-zero A-side byte: A rows quantize as `byte = q + 127`
+/// (u8 in `0..=254`), so a quantized zero — including every `k`-tail pad
+/// byte — stores as 127. B-side panel bytes stay plain signed i8.
+pub const QA_ZERO: u8 = 127;
+
+/// Per-row A-side quantization into biased-u8 bytes; returns the row's
+/// symmetric scale. Every entry is bit-identical to
+/// [`quantize_row_q8_scalar`] (same statement per element, and the
+/// absmax reduction is a pure `max` tree — order-insensitive).
+pub type QuantRowQ8 = fn(v: &[f32], q: &mut [u8]) -> f32;
+
+/// Fused int8 tile: MR×NR i32 kernel over one B panel plus the
+/// dequantizing epilogue store, scattered by per-row output offsets.
+///
+/// `ap` points at MR contiguous biased-u8 A rows (`astride` bytes apart,
+/// the first `kg*QK` of each used — pad rows beyond `mr` are read but
+/// never stored); `bp`/`corr`/`sb` are one `QuantPackedB` panel, its
+/// `127·Σb` correction row, and its scale; `sa` holds the `mr` row
+/// scales; `bias` points at ≥ NR floats for this panel's columns (the
+/// drivers substitute a zero array for [`Epilogue::None`]); row `r < mr`
+/// stores `NR` floats at `cp + roff[r]`.
+///
+/// # Safety
+/// All pointers must cover the extents above; `cp + roff[r] .. + NR`
+/// must be in bounds and unaliased for each stored row; SIMD entries
+/// additionally require their detected ISA (guaranteed by dispatch).
+pub type TileI8 = unsafe fn(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp: *const i8,
+    corr: *const i32,
+    sa: *const f32,
+    sb: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+);
+
+/// Two-panel fused int8 tile (MR × 2·NR): shares each A broadcast
+/// across both B panels; the two panels keep independent accumulators,
+/// so the i32 order — and therefore every bit — matches two single-panel
+/// tiles. `bias` points at ≥ 2·NR floats; row `r` stores `2·NR` floats
+/// at `cp + roff[r]`. Safety as [`TileI8`].
+pub type TileI8X2 = unsafe fn(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp0: *const i8,
+    bp1: *const i8,
+    corr0: *const i32,
+    corr1: *const i32,
+    sa: *const f32,
+    sb0: f32,
+    sb1: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+);
+
+/// Register-fused leaf tile (`ell == 2·NR` only): the two-panel kernel
+/// plus an in-register bias+ReLU **requantize** epilogue. A finished L1
+/// output row is exactly two ymm registers, so each row is dequantized,
+/// biased, ReLU'd, and requantized to biased-u8 (16 bytes stored at
+/// `qdst + r*qstride`, scale at `sa_out[r]`) without ever touching
+/// memory as f32. The requantize replicates the [`QuantRowQ8`]
+/// statement exactly (the absmax is the true row max — a pure `max`
+/// reduction — and the f32 store/load it skips is lossless), so bytes
+/// and scale bits equal the unfused store-then-requantize path.
+/// Safety as [`TileI8`], with `qdst`/`sa_out` in place of `cp`.
+pub type TileI8Leaf = unsafe fn(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp0: *const i8,
+    bp1: *const i8,
+    corr0: *const i32,
+    corr1: *const i32,
+    sa: *const f32,
+    sb0: f32,
+    sb1: f32,
+    bias: *const f32,
+    qdst: *mut u8,
+    qstride: usize,
+    sa_out: *mut f32,
+    mr: usize,
+);
+
+/// One int8 kernel set — the quantized serving path's dispatch unit.
+/// Every set produces bit-identical results (exact i32 accumulation +
+/// one shared store statement); they differ only in speed.
+pub struct I8Kernels {
+    /// `avx-vnni`, `avx2-maddubs`, or `scalar-i32` (bench labels).
+    pub label: &'static str,
+    /// The A-row quantizer (SIMD where detected).
+    pub quant_row: QuantRowQ8,
+    /// Full-width fused tile.
+    pub tile: TileI8,
+    /// Two-panel fused tile; `None` makes the drivers loop singles.
+    pub tile_x2: Option<TileI8X2>,
+    /// Register-fused leaf tile; `None` makes the leaf engine take the
+    /// unfused two-GEMM path.
+    pub tile_leaf: Option<TileI8Leaf>,
+}
+
+/// The scalar int8 kernel set — the written-out statement of the
+/// quantized numerics and the fallback everywhere SIMD isn't detected
+/// (or a non-`packed` kind is forced).
+pub static I8_SCALAR: I8Kernels = I8Kernels {
+    label: "scalar-i32",
+    quant_row: quantize_row_q8_scalar,
+    tile: tile_i8_scalar_entry,
+    tile_x2: None,
+    tile_leaf: None,
+};
+
+/// The int8 kernel set the current GEMM kind dispatches to: the detected
+/// SIMD set for `packed`, the scalar replica for `banded`/`serial` —
+/// bit-identical either way, so forcing a kind changes speed, never
+/// results.
+pub fn active_i8() -> &'static I8Kernels {
+    if active() == KernelKind::Packed {
+        table().i8k
+    } else {
+        &I8_SCALAR
+    }
+}
+
 /// The boundary-logit dot product (lane-striped, fixed reduction).
 pub type RoutingDotFn = fn(&[f32], &[f32]) -> f32;
 
@@ -236,6 +449,12 @@ pub struct KernelTable {
     pub micro_4x8_epi: Micro4x8Epi,
     /// The tree-descent dot kernel (always ≡ [`routing_dot_scalar`]).
     pub routing_dot: RoutingDotFn,
+    /// The detected int8 kernel set (`maddubs`+`madd` on AVX2,
+    /// `vpdpbusd` where AVX-VNNI is detected, the scalar i32 replica
+    /// elsewhere); always bit-identical to [`I8_SCALAR`]. Dispatch goes
+    /// through [`active_i8`], which falls back to the scalar set when a
+    /// non-`packed` kind is forced.
+    pub i8k: &'static I8Kernels,
 }
 
 /// The detected kernel table (runs CPU feature detection on first call).
@@ -249,23 +468,34 @@ fn detect() -> KernelTable {
     {
         if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
         {
+            // The int8 kernels need only avx2; vpdpbusd consumes the
+            // biased-u8 A bytes directly (corr-subtracted) where
+            // AVX-VNNI is present.
+            let i8k: &'static I8Kernels = if std::arch::is_x86_feature_detected!("avxvnni") {
+                &I8_VNNI
+            } else {
+                &I8_MADDUBS
+            };
             return KernelTable {
                 isa: "avx2-fma",
                 fused_tile: true,
                 micro_4x8: micro_4x8_avx2fma_entry,
                 micro_4x8_epi: micro_4x8_epi_avx2fma_entry,
                 routing_dot: routing_dot_avx_entry,
+                i8k,
             };
         }
         if std::arch::is_x86_feature_detected!("avx") {
             // AVX without FMA: the routing dot still gets its two 8-wide
-            // chains; the GEMM tile stays on the portable (unfused) form.
+            // chains; the GEMM tile stays on the portable (unfused) form
+            // and the int8 path on the scalar replica (maddubs is avx2).
             return KernelTable {
                 isa: "avx",
                 fused_tile: false,
                 micro_4x8: micro_4x8_portable,
                 micro_4x8_epi: micro_4x8_portable_epi,
                 routing_dot: routing_dot_avx_entry,
+                i8k: &I8_SCALAR,
             };
         }
     }
@@ -278,6 +508,7 @@ fn detect() -> KernelTable {
                 micro_4x8: micro_4x8_neon_entry,
                 micro_4x8_epi: micro_4x8_epi_neon_entry,
                 routing_dot: routing_dot_neon_entry,
+                i8k: &I8_SCALAR,
             };
         }
     }
@@ -287,6 +518,7 @@ fn detect() -> KernelTable {
         micro_4x8: micro_4x8_portable,
         micro_4x8_epi: micro_4x8_portable_epi,
         routing_dot: routing_dot_scalar,
+        i8k: &I8_SCALAR,
     }
 }
 
@@ -729,6 +961,805 @@ unsafe fn micro_4x8_neon(
 }
 
 // ---------------------------------------------------------------------------
+// Int8 kernels (the quantized serving path): per-row quantize, fused
+// dequantizing tiles, and the register-fused leaf tile.
+// ---------------------------------------------------------------------------
+
+/// Symmetric per-row quantization into **biased** u8 bytes: returns the
+/// row's scale (`absmax / 127`, or `1.0` for an all-zero row — the
+/// divide-by-zero guard the zero-row golden vectors pin) and writes
+/// `byte = q + 127` into `q`, where the signed quantized value is
+/// clamped to ±127. The biased range is `0..=254` (255 never appears),
+/// a quantized zero is [`QA_ZERO`] = 127, and the underlying signed
+/// value never reaches −128 — which is what keeps `vpmaddubsw`'s i16
+/// pair sums saturation-free after unbiasing (2·127² = 32258 < 32767)
+/// and lets `vpdpbusd` consume the biased bytes as its u8 operand.
+///
+/// The per-element statement is `trunc(clamp(x * (1/scale)) ± 0.5) + 127`
+/// — multiply by the reciprocal, clamp in the float domain, then
+/// round-half-away-from-zero spelled as `t + copysign(0.5, t)` followed
+/// by a truncating cast. This is deliberate: `f32::round` is a libm
+/// call per element that the autovectorizer cannot touch, and A-rows
+/// are quantized on every serving pass (batch × dim elements), so the
+/// naive `(x / scale).round()` form dominates the whole int8 pass
+/// (measured ~3x slower end to end at dim 256). The copysign form is
+/// branchless mul/min/max/add/cvtt and vectorizes cleanly. It agrees
+/// with `round()` everywhere except the carry edge `t = k + (0.5 - ε)`
+/// where `t + 0.5` rounds up — the quantizer's spec is this statement,
+/// not libm's.
+///
+/// The one written-out statement of A-side quantization. The absmax
+/// pass is a pure `max` reduction (no adds), so it is order-insensitive
+/// and the SIMD variant's 4-accumulator sweep produces the same scale
+/// bits; the per-element statement is elementwise IEEE, so the bytes
+/// match too — every quantize path (scalar, AVX2, the register-fused
+/// leaf epilogue) agrees exactly.
+pub fn quantize_row_q8_scalar(v: &[f32], q: &mut [u8]) -> f32 {
+    assert!(q.len() >= v.len(), "quantize_row_q8: short byte row");
+    let mut absmax = 0.0f32;
+    for &x in v {
+        absmax = absmax.max(x.abs());
+    }
+    let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    for (qi, &x) in q.iter_mut().zip(v.iter()) {
+        let t = (x * inv).clamp(-127.0, 127.0);
+        *qi = (((t + 0.5f32.copysign(t)) as i32) + 127) as u8;
+    }
+    scale
+}
+
+/// [`QuantRowQ8`] entry for the AVX2 quantizer.
+#[cfg(target_arch = "x86_64")]
+fn quantize_row_q8_avx2_entry(v: &[f32], q: &mut [u8]) -> f32 {
+    assert!(q.len() >= v.len(), "quantize_row_q8: short byte row");
+    // SAFETY: installed in a kernel set only after runtime avx2
+    // detection; byte bounds asserted above.
+    unsafe { quantize_row_q8_avx2(v, q) }
+}
+
+/// AVX2 per-row quantizer: 4-accumulator absmax sweep (32 floats/iter),
+/// then an 8-wide quantize loop packing 32/16/8 bytes per store.
+///
+/// Bit-identical to [`quantize_row_q8_scalar`]: the absmax is a pure
+/// `max` reduction (order-insensitive), and mul / min / max /
+/// copysign-add (`or(0.5, and(t, -0.0))`) / truncating convert are all
+/// elementwise IEEE ops. When `absmax >= 1e-35` the wide loops skip the
+/// ±127 clamp: a normal absmax bounds `|x|·inv ≤ 127·(1+2ε) < 127.5`,
+/// so the clamp can never change a byte — the clamped loops below
+/// remain the authoritative statement and guard denormal absmax, where
+/// `inv` overflows to inf. The 16-byte packer is
+/// `packs_epi32` (in-lane i16) → `packs_epi16` (in-lane i8) → bias
+/// `+127` → `permutevar8x32(0,4,1,5,·)` to undo the lane interleave;
+/// the 32-byte variant uses the full `(0,4,1,5,2,6,3,7)` permute.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn quantize_row_q8_avx2(v: &[f32], q: &mut [u8]) -> f32 {
+    use std::arch::x86_64::{
+        __m128i, _mm256_add_epi8, _mm256_andnot_ps, _mm256_castps256_ps128,
+        _mm256_castsi256_si128, _mm256_extractf128_ps, _mm256_extracti128_si256,
+        _mm256_loadu_ps, _mm256_max_ps, _mm256_min_ps, _mm256_mul_ps, _mm256_packs_epi16,
+        _mm256_packs_epi32, _mm256_permutevar8x32_epi32, _mm256_set1_epi8, _mm256_set1_ps,
+        _mm256_setr_epi32, _mm256_setzero_ps, _mm256_storeu_si256, _mm_add_epi8, _mm_cvtss_f32,
+        _mm_max_ps, _mm_max_ss, _mm_movehl_ps, _mm_packs_epi16, _mm_packs_epi32, _mm_set1_epi8,
+        _mm_shuffle_ps, _mm_storel_epi64, _mm_storeu_si128,
+    };
+    let k = v.len();
+    let vp = v.as_ptr();
+    let dst = q.as_mut_ptr();
+    let vsign = _mm256_set1_ps(-0.0);
+    let mut am0 = _mm256_setzero_ps();
+    let mut am1 = am0;
+    let mut am2 = am0;
+    let mut am3 = am0;
+    let mut p = 0usize;
+    while p + 32 <= k {
+        am0 = _mm256_max_ps(am0, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p))));
+        am1 = _mm256_max_ps(am1, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 8))));
+        am2 = _mm256_max_ps(am2, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 16))));
+        am3 = _mm256_max_ps(am3, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 24))));
+        p += 32;
+    }
+    while p + 8 <= k {
+        am0 = _mm256_max_ps(am0, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p))));
+        p += 8;
+    }
+    let am = _mm256_max_ps(_mm256_max_ps(am0, am1), _mm256_max_ps(am2, am3));
+    let mut m1 = _mm_max_ps(_mm256_castps256_ps128(am), _mm256_extractf128_ps::<1>(am));
+    m1 = _mm_max_ps(m1, _mm_movehl_ps(m1, m1));
+    m1 = _mm_max_ss(m1, _mm_shuffle_ps::<1>(m1, m1));
+    let mut absmax = _mm_cvtss_f32(m1);
+    while p < k {
+        absmax = absmax.max((*vp.add(p)).abs());
+        p += 1;
+    }
+    let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    let vinv = _mm256_set1_ps(inv);
+    let vhi = _mm256_set1_ps(127.0);
+    let vlo = _mm256_set1_ps(-127.0);
+    let vhalf = _mm256_set1_ps(0.5);
+    let vb127 = _mm256_set1_epi8(127);
+    let perm = _mm256_setr_epi32(0, 4, 1, 5, 0, 0, 0, 0);
+    p = 0;
+    if absmax >= 1e-35 {
+        let perm8 = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+        while p + 32 <= k {
+            let t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
+            let t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
+            let t2 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 16)), vinv);
+            let t3 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 24)), vinv);
+            let q0 = q8_round(t0, vhalf, vsign);
+            let q1 = q8_round(t1, vhalf, vsign);
+            let q2 = q8_round(t2, vhalf, vsign);
+            let q3 = q8_round(t3, vhalf, vsign);
+            let w0 = _mm256_packs_epi32(q0, q1);
+            let w1 = _mm256_packs_epi32(q2, q3);
+            let b = _mm256_add_epi8(_mm256_packs_epi16(w0, w1), vb127);
+            _mm256_storeu_si256(
+                dst.add(p) as *mut __m256i,
+                _mm256_permutevar8x32_epi32(b, perm8),
+            );
+            p += 32;
+        }
+        while p + 16 <= k {
+            let t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
+            let t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
+            let q0 = q8_round(t0, vhalf, vsign);
+            let q1 = q8_round(t1, vhalf, vsign);
+            let w = _mm256_packs_epi32(q0, q1);
+            let b = _mm256_add_epi8(_mm256_packs_epi16(w, w), vb127);
+            let o = _mm256_permutevar8x32_epi32(b, perm);
+            _mm_storeu_si128(dst.add(p) as *mut __m128i, _mm256_castsi256_si128(o));
+            p += 16;
+        }
+    }
+    while p + 16 <= k {
+        let mut t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
+        let mut t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
+        t0 = _mm256_max_ps(_mm256_min_ps(t0, vhi), vlo);
+        t1 = _mm256_max_ps(_mm256_min_ps(t1, vhi), vlo);
+        let q0 = q8_round(t0, vhalf, vsign);
+        let q1 = q8_round(t1, vhalf, vsign);
+        let w = _mm256_packs_epi32(q0, q1);
+        let b = _mm256_add_epi8(_mm256_packs_epi16(w, w), vb127);
+        let o = _mm256_permutevar8x32_epi32(b, perm);
+        _mm_storeu_si128(dst.add(p) as *mut __m128i, _mm256_castsi256_si128(o));
+        p += 16;
+    }
+    while p + 8 <= k {
+        let mut t = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
+        t = _mm256_max_ps(_mm256_min_ps(t, vhi), vlo);
+        let qv = q8_round(t, vhalf, vsign);
+        let w = _mm_packs_epi32(_mm256_castsi256_si128(qv), _mm256_extracti128_si256::<1>(qv));
+        _mm_storel_epi64(
+            dst.add(p) as *mut __m128i,
+            _mm_add_epi8(_mm_packs_epi16(w, w), _mm_set1_epi8(127)),
+        );
+        p += 8;
+    }
+    while p < k {
+        let t = (*vp.add(p) * inv).clamp(-127.0, 127.0);
+        *dst.add(p) = (((t + 0.5f32.copysign(t)) as i32) + 127) as u8;
+        p += 1;
+    }
+    scale
+}
+
+/// Scalar replica of the fused int8 tile — the single written-out
+/// statement of the quantized tile numerics, the dispatch fallback
+/// where no SIMD int8 kernel is installed, and (unlike the SIMD tiles)
+/// narrow-capable via `nr`. Because i32 accumulation of the unbiased
+/// i8×i8 products is exact, the SIMD tiles are bit-identical to this
+/// replica (not merely close) regardless of group order or the
+/// corr-subtraction trick.
+///
+/// The kernel accumulates all `MR` rows (pad rows are quantize-front
+/// zero-filled and cost nothing to read) but stores only `mr`; each
+/// stored element is the overwrite
+/// `C[roff[r] + j] = relu?((acc as f32) * (sa[r]*sb) + bias[j])` —
+/// combined scale first (one rounding), dequant multiply, plain bias
+/// add, never `mul_add`, then the [`relu_store`] select. This single
+/// statement is the store every SIMD tile replicates, which together
+/// with exact i32 accumulation makes int8 results bit-identical
+/// everywhere.
+///
+/// # Safety
+/// `ap` must cover `MR` rows of `astride` bytes with `kg*QK` readable
+/// per row; `bp` one packed panel (`kg*NR*QK` bytes); `sa` `mr` scales;
+/// `bias` `nr` floats; `cp + roff[r] .. + nr` in bounds per stored row.
+pub unsafe fn tile_i8_scalar(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp: *const i8,
+    _corr: *const i32,
+    sa: *const f32,
+    sb: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0i32; NR]; MR];
+    for g in 0..kg {
+        let b = bp.add(g * NR * QK);
+        for (r, row) in acc.iter_mut().enumerate() {
+            let a = ap.add(r * astride + g * QK);
+            for (j, slot) in row.iter_mut().enumerate() {
+                let mut s = 0i32;
+                for qi in 0..QK {
+                    s += (*a.add(qi) as i32 - 127) * (*b.add(j * QK + qi) as i32);
+                }
+                *slot += s;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate().take(mr) {
+        let sc = *sa.add(r) * sb;
+        let out = cp.add(*roff.add(r));
+        for (j, &v) in row.iter().enumerate().take(nr) {
+            let mut t = v as f32 * sc + *bias.add(j);
+            if relu {
+                t = relu_store(t);
+            }
+            *out.add(j) = t;
+        }
+    }
+}
+
+/// [`TileI8`] entry of [`I8_SCALAR`]: [`tile_i8_scalar`] at the fixed
+/// full width `nr = NR`.
+///
+/// # Safety
+/// The [`TileI8`] contract.
+unsafe fn tile_i8_scalar_entry(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp: *const i8,
+    corr: *const i32,
+    sa: *const f32,
+    sb: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+) {
+    // SAFETY: the TileI8 contract is the tile_i8_scalar contract at
+    // nr = NR.
+    unsafe { tile_i8_scalar(kg, ap, astride, bp, corr, sa, sb, bias, relu, cp, roff, mr, NR) }
+}
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::__m256i;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::__m256;
+
+/// `trunc(t + copysign(0.5, t))` per f32 lane, as packed i32 — the
+/// vector form of the round-half-away-from-zero statement in
+/// [`quantize_row_q8_scalar`], shared by every AVX2 quantize and
+/// requantize path so the rounding can never drift between them.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn q8_round(t: __m256, vhalf: __m256, vsign: __m256) -> __m256i {
+    use std::arch::x86_64::{_mm256_add_ps, _mm256_and_ps, _mm256_cvttps_epi32, _mm256_or_ps};
+    _mm256_cvttps_epi32(_mm256_add_ps(t, _mm256_or_ps(vhalf, _mm256_and_ps(t, vsign))))
+}
+
+/// Accumulate one packed B panel against MR biased-u8 A rows with
+/// `vpmaddubsw`+`vpmaddwd`: per group, one 32-byte load of the B group
+/// (8 columns × QK k-bytes, one column per 32-bit lane) and one
+/// 4-byte broadcast per row, unbiased in-register (`psubb 127` —
+/// exact: biased bytes are `0..=254`, so `byte − 127 ∈ −127..=127`
+/// never wraps). `vpmaddubsw` multiplies u8×i8, so the broadcast is
+/// rewritten as `|a| × sign(b, a)` — products keep their
+/// signed×signed values (an `a` of 0 zeroes the `b` lane, so that
+/// product is 0 either way). Quantization clamps to ±127 (never −128),
+/// so i16 pair sums are ≤ 2·127² = 32258 < i16::MAX and `vpmaddubsw`
+/// cannot saturate; `vpmaddwd` against 1s widens exactly to the
+/// group's i32 sum. Bit-identical to the [`tile_i8_scalar`]
+/// accumulator by i32 exactness.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn i8_acc_maddubs(kg: usize, ap: *const u8, astride: usize, bp: *const i8) -> [__m256i; MR] {
+    use std::arch::x86_64::{
+        _mm256_abs_epi8, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16,
+        _mm256_maddubs_epi16, _mm256_set1_epi16, _mm256_set1_epi32, _mm256_set1_epi8,
+        _mm256_setzero_si256, _mm256_sign_epi8, _mm256_sub_epi8,
+    };
+    let ones = _mm256_set1_epi16(1);
+    let v127 = _mm256_set1_epi8(127);
+    let mut acc = [_mm256_setzero_si256(); MR];
+    for g in 0..kg {
+        let b = _mm256_loadu_si256(bp.add(g * NR * QK) as *const __m256i);
+        for (r, slot) in acc.iter_mut().enumerate() {
+            let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
+            let av = _mm256_sub_epi8(_mm256_set1_epi32(w), v127);
+            let prod = _mm256_madd_epi16(
+                _mm256_maddubs_epi16(_mm256_abs_epi8(av), _mm256_sign_epi8(b, av)),
+                ones,
+            );
+            *slot = _mm256_add_epi32(*slot, prod);
+        }
+    }
+    acc
+}
+
+/// Two-panel [`i8_acc_maddubs`]: one A broadcast + unbias feeds both B
+/// panels; each panel keeps its own accumulators, so the i32 order —
+/// and every bit — matches two single-panel runs.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn i8_acc2_maddubs(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp0: *const i8,
+    bp1: *const i8,
+) -> ([__m256i; MR], [__m256i; MR]) {
+    use std::arch::x86_64::{
+        _mm256_abs_epi8, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16,
+        _mm256_maddubs_epi16, _mm256_set1_epi16, _mm256_set1_epi32, _mm256_set1_epi8,
+        _mm256_setzero_si256, _mm256_sign_epi8, _mm256_sub_epi8,
+    };
+    let ones = _mm256_set1_epi16(1);
+    let v127 = _mm256_set1_epi8(127);
+    let mut acc0 = [_mm256_setzero_si256(); MR];
+    let mut acc1 = [_mm256_setzero_si256(); MR];
+    for g in 0..kg {
+        let b0 = _mm256_loadu_si256(bp0.add(g * NR * QK) as *const __m256i);
+        let b1 = _mm256_loadu_si256(bp1.add(g * NR * QK) as *const __m256i);
+        for r in 0..MR {
+            let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
+            let av = _mm256_sub_epi8(_mm256_set1_epi32(w), v127);
+            let ua = _mm256_abs_epi8(av);
+            acc0[r] = _mm256_add_epi32(
+                acc0[r],
+                _mm256_madd_epi16(_mm256_maddubs_epi16(ua, _mm256_sign_epi8(b0, av)), ones),
+            );
+            acc1[r] = _mm256_add_epi32(
+                acc1[r],
+                _mm256_madd_epi16(_mm256_maddubs_epi16(ua, _mm256_sign_epi8(b1, av)), ones),
+            );
+        }
+    }
+    (acc0, acc1)
+}
+
+/// AVX-VNNI accumulator: `vpdpbusd` consumes the **biased** A bytes
+/// directly as its u8 operand — no unbias, no sign trick — then the
+/// panel's precomputed correction row `corr[c] = 127·Σ_p b[c][p]`
+/// (`QuantPackedB::corr`) is subtracted once after the `k` loop:
+/// `Σ(q+127)·b − 127·Σb = Σq·b`, all in exact i32 (k ≤ a few thousand
+/// keeps `Σ` far from overflow), so still bit-identical to
+/// [`tile_i8_scalar`]. One fused dot-accumulate per row per group
+/// instead of maddubs' four-op chain.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "avxvnni")]
+#[inline]
+unsafe fn i8_acc_vnni(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp: *const i8,
+    corr: *const i32,
+) -> [__m256i; MR] {
+    use std::arch::x86_64::{
+        _mm256_dpbusd_avx_epi32, _mm256_loadu_si256, _mm256_set1_epi32, _mm256_setzero_si256,
+        _mm256_sub_epi32,
+    };
+    let mut acc = [_mm256_setzero_si256(); MR];
+    for g in 0..kg {
+        let b = _mm256_loadu_si256(bp.add(g * NR * QK) as *const __m256i);
+        for (r, slot) in acc.iter_mut().enumerate() {
+            let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
+            *slot = _mm256_dpbusd_avx_epi32(*slot, _mm256_set1_epi32(w), b);
+        }
+    }
+    let vc = _mm256_loadu_si256(corr as *const __m256i);
+    for slot in acc.iter_mut() {
+        *slot = _mm256_sub_epi32(*slot, vc);
+    }
+    acc
+}
+
+/// Two-panel [`i8_acc_vnni`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "avxvnni")]
+#[inline]
+unsafe fn i8_acc2_vnni(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp0: *const i8,
+    bp1: *const i8,
+    corr0: *const i32,
+    corr1: *const i32,
+) -> ([__m256i; MR], [__m256i; MR]) {
+    use std::arch::x86_64::{
+        _mm256_dpbusd_avx_epi32, _mm256_loadu_si256, _mm256_set1_epi32, _mm256_setzero_si256,
+        _mm256_sub_epi32,
+    };
+    let mut acc0 = [_mm256_setzero_si256(); MR];
+    let mut acc1 = [_mm256_setzero_si256(); MR];
+    for g in 0..kg {
+        let b0 = _mm256_loadu_si256(bp0.add(g * NR * QK) as *const __m256i);
+        let b1 = _mm256_loadu_si256(bp1.add(g * NR * QK) as *const __m256i);
+        for r in 0..MR {
+            let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
+            let av = _mm256_set1_epi32(w);
+            acc0[r] = _mm256_dpbusd_avx_epi32(acc0[r], av, b0);
+            acc1[r] = _mm256_dpbusd_avx_epi32(acc1[r], av, b1);
+        }
+    }
+    let vc0 = _mm256_loadu_si256(corr0 as *const __m256i);
+    let vc1 = _mm256_loadu_si256(corr1 as *const __m256i);
+    for r in 0..MR {
+        acc0[r] = _mm256_sub_epi32(acc0[r], vc0);
+        acc1[r] = _mm256_sub_epi32(acc1[r], vc1);
+    }
+    (acc0, acc1)
+}
+
+/// Shared dequantizing store of the SIMD tiles: per stored row,
+/// `cvtdq2ps` the accumulator, multiply by the broadcast combined scale
+/// `sa[r]*sb` (scalar product first — same single rounding as the
+/// scalar statement), add the bias vector, `maxps` against zero for
+/// ReLU (±0.0 and NaN normalize to `+0.0`, identical to
+/// [`relu_store`]), and store 8 floats at `cp + roff[r]`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn i8_store_rows(
+    acc: [__m256i; MR],
+    sa: *const f32,
+    sb: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_cvtepi32_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
+        _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+    let vb = _mm256_loadu_ps(bias);
+    let vz = _mm256_setzero_ps();
+    for (r, &a) in acc.iter().enumerate().take(mr) {
+        let mut t = _mm256_mul_ps(_mm256_cvtepi32_ps(a), _mm256_set1_ps(*sa.add(r) * sb));
+        t = _mm256_add_ps(t, vb);
+        if relu {
+            t = _mm256_max_ps(t, vz);
+        }
+        _mm256_storeu_ps(cp.add(*roff.add(r)), t);
+    }
+}
+
+/// Two-panel [`i8_store_rows`]: 16 floats per row (`roff[r]` and
+/// `roff[r] + NR`). The combined scale is formed as
+/// `set1(sa[r]) * set1(sb)` — elementwise the same single-rounded
+/// product `sa[r]*sb` as the scalar statement.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn i8_store_rows_x2(
+    acc0: [__m256i; MR],
+    acc1: [__m256i; MR],
+    sa: *const f32,
+    sb0: f32,
+    sb1: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_cvtepi32_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
+        _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+    let vb0 = _mm256_loadu_ps(bias);
+    let vb1 = _mm256_loadu_ps(bias.add(NR));
+    let vz = _mm256_setzero_ps();
+    for r in 0..mr {
+        let sc = _mm256_set1_ps(*sa.add(r));
+        let mut t0 =
+            _mm256_mul_ps(_mm256_cvtepi32_ps(acc0[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb0)));
+        let mut t1 =
+            _mm256_mul_ps(_mm256_cvtepi32_ps(acc1[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb1)));
+        t0 = _mm256_add_ps(t0, vb0);
+        t1 = _mm256_add_ps(t1, vb1);
+        if relu {
+            t0 = _mm256_max_ps(t0, vz);
+            t1 = _mm256_max_ps(t1, vz);
+        }
+        let out = cp.add(*roff.add(r));
+        _mm256_storeu_ps(out, t0);
+        _mm256_storeu_ps(out.add(NR), t1);
+    }
+}
+
+/// The register-fused leaf epilogue: dequant + bias + ReLU as in
+/// [`i8_store_rows_x2`], then **requantize** the 16-float row in
+/// registers — absmax via `maxps` of the two (post-ReLU, hence
+/// non-negative) halves and the same horizontal max tree as
+/// [`quantize_row_q8_avx2`], the clamped quantize statement, then
+/// `packs_epi32`/`packs_epi16`/bias `+127`/`permutevar(0,4,1,5,·)`
+/// into one 16-byte store. Bit-identical to storing the f32 row and
+/// calling the row quantizer on it: the absmax is a pure max tree
+/// (order-insensitive), f32 store/load is lossless, and the clamp
+/// never fires for normal absmax (the row quantizer's clamp-free
+/// fast-path proof) while matching the clamped statement for the
+/// degenerate rest.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn i8_leaf_requant_rows(
+    acc0: [__m256i; MR],
+    acc1: [__m256i; MR],
+    sa: *const f32,
+    sb0: f32,
+    sb1: f32,
+    bias: *const f32,
+    qdst: *mut u8,
+    qstride: usize,
+    sa_out: *mut f32,
+    mr: usize,
+) {
+    use std::arch::x86_64::{
+        __m128i, _mm256_add_epi8, _mm256_add_ps, _mm256_castps256_ps128, _mm256_castsi256_si128,
+        _mm256_cvtepi32_ps, _mm256_extractf128_ps, _mm256_loadu_ps, _mm256_max_ps,
+        _mm256_min_ps, _mm256_mul_ps, _mm256_packs_epi16, _mm256_packs_epi32,
+        _mm256_permutevar8x32_epi32, _mm256_set1_epi8, _mm256_set1_ps, _mm256_setr_epi32,
+        _mm256_setzero_ps, _mm_cvtss_f32, _mm_max_ps, _mm_max_ss, _mm_movehl_ps, _mm_shuffle_ps,
+        _mm_storeu_si128,
+    };
+    let vb0 = _mm256_loadu_ps(bias);
+    let vb1 = _mm256_loadu_ps(bias.add(NR));
+    let vz = _mm256_setzero_ps();
+    let vsign = _mm256_set1_ps(-0.0);
+    let vhi = _mm256_set1_ps(127.0);
+    let vlo = _mm256_set1_ps(-127.0);
+    let vhalf = _mm256_set1_ps(0.5);
+    let vb127 = _mm256_set1_epi8(127);
+    let perm = _mm256_setr_epi32(0, 4, 1, 5, 0, 0, 0, 0);
+    for r in 0..mr {
+        let sc = _mm256_set1_ps(*sa.add(r));
+        let t0 = _mm256_mul_ps(_mm256_cvtepi32_ps(acc0[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb0)));
+        let t1 = _mm256_mul_ps(_mm256_cvtepi32_ps(acc1[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb1)));
+        let t0 = _mm256_max_ps(_mm256_add_ps(t0, vb0), vz);
+        let t1 = _mm256_max_ps(_mm256_add_ps(t1, vb1), vz);
+        let am = _mm256_max_ps(t0, t1);
+        let mut m1 = _mm_max_ps(_mm256_castps256_ps128(am), _mm256_extractf128_ps::<1>(am));
+        m1 = _mm_max_ps(m1, _mm_movehl_ps(m1, m1));
+        m1 = _mm_max_ss(m1, _mm_shuffle_ps::<1>(m1, m1));
+        let absmax = _mm_cvtss_f32(m1);
+        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        let vinv = _mm256_set1_ps(1.0 / scale);
+        let u0 = _mm256_max_ps(_mm256_min_ps(_mm256_mul_ps(t0, vinv), vhi), vlo);
+        let u1 = _mm256_max_ps(_mm256_min_ps(_mm256_mul_ps(t1, vinv), vhi), vlo);
+        let q0 = q8_round(u0, vhalf, vsign);
+        let q1 = q8_round(u1, vhalf, vsign);
+        let w = _mm256_packs_epi32(q0, q1);
+        let bb = _mm256_add_epi8(_mm256_packs_epi16(w, w), vb127);
+        let o = _mm256_permutevar8x32_epi32(bb, perm);
+        _mm_storeu_si128(qdst.add(r * qstride) as *mut __m128i, _mm256_castsi256_si128(o));
+        *sa_out.add(r) = scale;
+    }
+}
+
+/// [`TileI8`] entry of [`I8_MADDUBS`].
+///
+/// # Safety
+/// The [`TileI8`] contract; installed only behind runtime avx2
+/// detection.
+#[cfg(target_arch = "x86_64")]
+unsafe fn tile_i8_maddubs_entry(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp: *const i8,
+    _corr: *const i32,
+    sa: *const f32,
+    sb: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+) {
+    // SAFETY: caller upholds the TileI8 contract; avx2 is detected
+    // before this entry is installed in a kernel set.
+    unsafe {
+        let acc = i8_acc_maddubs(kg, ap, astride, bp);
+        i8_store_rows(acc, sa, sb, bias, relu, cp, roff, mr);
+    }
+}
+
+/// [`TileI8X2`] entry of [`I8_MADDUBS`].
+///
+/// # Safety
+/// The [`TileI8X2`] contract; installed only behind runtime avx2
+/// detection.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_i8_x2_maddubs_entry(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp0: *const i8,
+    bp1: *const i8,
+    _corr0: *const i32,
+    _corr1: *const i32,
+    sa: *const f32,
+    sb0: f32,
+    sb1: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+) {
+    // SAFETY: caller upholds the TileI8X2 contract; avx2 detected.
+    unsafe {
+        let (acc0, acc1) = i8_acc2_maddubs(kg, ap, astride, bp0, bp1);
+        i8_store_rows_x2(acc0, acc1, sa, sb0, sb1, bias, relu, cp, roff, mr);
+    }
+}
+
+/// [`TileI8Leaf`] entry of [`I8_MADDUBS`].
+///
+/// # Safety
+/// The [`TileI8Leaf`] contract; installed only behind runtime avx2
+/// detection.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_i8_leaf_maddubs_entry(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp0: *const i8,
+    bp1: *const i8,
+    _corr0: *const i32,
+    _corr1: *const i32,
+    sa: *const f32,
+    sb0: f32,
+    sb1: f32,
+    bias: *const f32,
+    qdst: *mut u8,
+    qstride: usize,
+    sa_out: *mut f32,
+    mr: usize,
+) {
+    // SAFETY: caller upholds the TileI8Leaf contract; avx2 detected.
+    unsafe {
+        let (acc0, acc1) = i8_acc2_maddubs(kg, ap, astride, bp0, bp1);
+        i8_leaf_requant_rows(acc0, acc1, sa, sb0, sb1, bias, qdst, qstride, sa_out, mr);
+    }
+}
+
+/// [`TileI8`] entry of [`I8_VNNI`].
+///
+/// # Safety
+/// The [`TileI8`] contract; installed only behind runtime avx2+avxvnni
+/// detection.
+#[cfg(target_arch = "x86_64")]
+unsafe fn tile_i8_vnni_entry(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp: *const i8,
+    corr: *const i32,
+    sa: *const f32,
+    sb: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+) {
+    // SAFETY: caller upholds the TileI8 contract; avx2+avxvnni are
+    // detected before this entry is installed in a kernel set.
+    unsafe {
+        let acc = i8_acc_vnni(kg, ap, astride, bp, corr);
+        i8_store_rows(acc, sa, sb, bias, relu, cp, roff, mr);
+    }
+}
+
+/// [`TileI8X2`] entry of [`I8_VNNI`].
+///
+/// # Safety
+/// The [`TileI8X2`] contract; installed only behind runtime
+/// avx2+avxvnni detection.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_i8_x2_vnni_entry(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp0: *const i8,
+    bp1: *const i8,
+    corr0: *const i32,
+    corr1: *const i32,
+    sa: *const f32,
+    sb0: f32,
+    sb1: f32,
+    bias: *const f32,
+    relu: bool,
+    cp: *mut f32,
+    roff: *const usize,
+    mr: usize,
+) {
+    // SAFETY: caller upholds the TileI8X2 contract; avx2+avxvnni
+    // detected.
+    unsafe {
+        let (acc0, acc1) = i8_acc2_vnni(kg, ap, astride, bp0, bp1, corr0, corr1);
+        i8_store_rows_x2(acc0, acc1, sa, sb0, sb1, bias, relu, cp, roff, mr);
+    }
+}
+
+/// [`TileI8Leaf`] entry of [`I8_VNNI`].
+///
+/// # Safety
+/// The [`TileI8Leaf`] contract; installed only behind runtime
+/// avx2+avxvnni detection.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_i8_leaf_vnni_entry(
+    kg: usize,
+    ap: *const u8,
+    astride: usize,
+    bp0: *const i8,
+    bp1: *const i8,
+    corr0: *const i32,
+    corr1: *const i32,
+    sa: *const f32,
+    sb0: f32,
+    sb1: f32,
+    bias: *const f32,
+    qdst: *mut u8,
+    qstride: usize,
+    sa_out: *mut f32,
+    mr: usize,
+) {
+    // SAFETY: caller upholds the TileI8Leaf contract; avx2+avxvnni
+    // detected.
+    unsafe {
+        let (acc0, acc1) = i8_acc2_vnni(kg, ap, astride, bp0, bp1, corr0, corr1);
+        i8_leaf_requant_rows(acc0, acc1, sa, sb0, sb1, bias, qdst, qstride, sa_out, mr);
+    }
+}
+
+/// The AVX2 int8 kernel set (`vpmaddubsw`+`vpmaddwd` accumulate).
+#[cfg(target_arch = "x86_64")]
+pub static I8_MADDUBS: I8Kernels = I8Kernels {
+    label: "avx2-maddubs",
+    quant_row: quantize_row_q8_avx2_entry,
+    tile: tile_i8_maddubs_entry,
+    tile_x2: Some(tile_i8_x2_maddubs_entry),
+    tile_leaf: Some(tile_i8_leaf_maddubs_entry),
+};
+
+/// The AVX-VNNI int8 kernel set (`vpdpbusd` accumulate over the biased
+/// bytes, corr-subtracted).
+#[cfg(target_arch = "x86_64")]
+pub static I8_VNNI: I8Kernels = I8Kernels {
+    label: "avx-vnni",
+    quant_row: quantize_row_q8_avx2_entry,
+    tile: tile_i8_vnni_entry,
+    tile_x2: Some(tile_i8_x2_vnni_entry),
+    tile_leaf: Some(tile_i8_leaf_vnni_entry),
+};
+
+// ---------------------------------------------------------------------------
 // Routing dot product (the tree-descent kernel).
 // ---------------------------------------------------------------------------
 
@@ -1056,6 +2087,313 @@ mod tests {
         micro_4x8_ref(kc, &ap, &bp, &mut c1, 10, 3, 7);
         micro_4x8_portable(kc, &ap, &bp, &mut c2, 10, 3, 7);
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("f16"), None);
+    }
+
+    /// `corr[c] = 127·Σ_p bp[c][p]` derived directly from packed panel
+    /// bytes — the statement `QuantPackedB` precomputes at quantize time.
+    fn derive_corr(bp: &[i8], kg: usize) -> [i32; NR] {
+        let mut corr = [0i32; NR];
+        for g in 0..kg {
+            for (c, slot) in corr.iter_mut().enumerate() {
+                for qb in 0..QK {
+                    *slot += bp[g * NR * QK + c * QK + qb] as i32;
+                }
+            }
+        }
+        for slot in corr.iter_mut() {
+            *slot *= 127;
+        }
+        corr
+    }
+
+    #[test]
+    fn i8_tiles_match_scalar_replica_bitwise() {
+        // Integer accumulation is exact and the dequantizing store is
+        // one shared statement, so the dispatched tile — and the
+        // two-panel tile against two singles — must equal the scalar
+        // replica bit for bit. Byte extremes included: biased 0/254
+        // (= ∓127, where vpmaddubsw would saturate if quantization ever
+        // emitted −128, and where vpdpbusd's corr subtraction is
+        // largest), B at ±127, and an all-zero B column (corr = 0).
+        let mut rng = Rng::seed_from_u64(11);
+        let ks = table().i8k;
+        for kg in [1usize, 2, 7, 64] {
+            let astride = kg * QK;
+            let mut ap = vec![0u8; MR * astride];
+            for v in ap.iter_mut() {
+                *v = rng.below(255) as u8; // 0..=254 — 255 never occurs
+            }
+            ap[0] = 0;
+            ap[1] = 254;
+            let mut bp0 = vec![0i8; kg * NR * QK];
+            let mut bp1 = vec![0i8; kg * NR * QK];
+            for v in bp0.iter_mut().chain(bp1.iter_mut()) {
+                *v = (rng.below(255) as i32 - 127) as i8;
+            }
+            bp0[0] = 127;
+            bp0[1] = -127;
+            for g in 0..kg {
+                for qb in 0..QK {
+                    bp1[g * NR * QK + 3 * QK + qb] = 0;
+                }
+            }
+            let corr0 = derive_corr(&bp0, kg);
+            let corr1 = derive_corr(&bp1, kg);
+            let sa = [0.5f32, 0.25, 1.5, 2.0];
+            let (sb0, sb1) = (0.125f32, 0.75f32);
+            let mut bias = [0.0f32; 2 * NR];
+            rng.fill_normal(&mut bias, 0.0, 1.0);
+            let roff: [usize; MR] = [0, NR, 2 * NR, 3 * NR];
+            let roff2: [usize; MR] = [0, 2 * NR, 4 * NR, 6 * NR];
+            for relu in [false, true] {
+                for mr in [1usize, MR] {
+                    let mut want = vec![f32::NAN; MR * NR];
+                    let mut got = vec![f32::NAN; MR * NR];
+                    // SAFETY: buffers cover MR rows × NR columns, roff
+                    // stays in bounds, panels/corr/sa sized above.
+                    unsafe {
+                        tile_i8_scalar(
+                            kg,
+                            ap.as_ptr(),
+                            astride,
+                            bp0.as_ptr(),
+                            corr0.as_ptr(),
+                            sa.as_ptr(),
+                            sb0,
+                            bias.as_ptr(),
+                            relu,
+                            want.as_mut_ptr(),
+                            roff.as_ptr(),
+                            mr,
+                            NR,
+                        );
+                        (ks.tile)(
+                            kg,
+                            ap.as_ptr(),
+                            astride,
+                            bp0.as_ptr(),
+                            corr0.as_ptr(),
+                            sa.as_ptr(),
+                            sb0,
+                            bias.as_ptr(),
+                            relu,
+                            got.as_mut_ptr(),
+                            roff.as_ptr(),
+                            mr,
+                        );
+                    }
+                    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                        if i < mr * NR {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "({}) kg={kg} relu={relu} mr={mr} elem {i}",
+                                ks.label
+                            );
+                        } else {
+                            assert!(g.is_nan() && w.is_nan(), "row past mr was stored");
+                        }
+                    }
+                    if let Some(tx2) = ks.tile_x2 {
+                        // Two singles (second panel offset by NR in C
+                        // and bias) are the bitwise reference.
+                        let mut want2 = vec![f32::NAN; MR * 2 * NR];
+                        let mut got2 = vec![f32::NAN; MR * 2 * NR];
+                        // SAFETY: as above; the x2 tile stores 2·NR
+                        // floats per row at roff2[r].
+                        unsafe {
+                            tile_i8_scalar(
+                                kg,
+                                ap.as_ptr(),
+                                astride,
+                                bp0.as_ptr(),
+                                corr0.as_ptr(),
+                                sa.as_ptr(),
+                                sb0,
+                                bias.as_ptr(),
+                                relu,
+                                want2.as_mut_ptr(),
+                                roff2.as_ptr(),
+                                mr,
+                                NR,
+                            );
+                            tile_i8_scalar(
+                                kg,
+                                ap.as_ptr(),
+                                astride,
+                                bp1.as_ptr(),
+                                corr1.as_ptr(),
+                                sa.as_ptr(),
+                                sb1,
+                                bias.as_ptr().add(NR),
+                                relu,
+                                want2.as_mut_ptr().add(NR),
+                                roff2.as_ptr(),
+                                mr,
+                                NR,
+                            );
+                            tx2(
+                                kg,
+                                ap.as_ptr(),
+                                astride,
+                                bp0.as_ptr(),
+                                bp1.as_ptr(),
+                                corr0.as_ptr(),
+                                corr1.as_ptr(),
+                                sa.as_ptr(),
+                                sb0,
+                                sb1,
+                                bias.as_ptr(),
+                                relu,
+                                got2.as_mut_ptr(),
+                                roff2.as_ptr(),
+                                mr,
+                            );
+                        }
+                        for (i, (g, w)) in got2.iter().zip(want2.iter()).enumerate() {
+                            if i < mr * 2 * NR {
+                                assert_eq!(
+                                    g.to_bits(),
+                                    w.to_bits(),
+                                    "x2 ({}) kg={kg} relu={relu} mr={mr} elem {i}",
+                                    ks.label
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            if let (Some(tleaf), Some(tx2)) = (ks.tile_leaf, ks.tile_x2) {
+                // The register-fused leaf tile must equal the unfused
+                // reference — x2 store with ReLU, then the row
+                // quantizer over each stored 16-float row — in bytes
+                // AND scale bits (f32 store/load is lossless, absmax
+                // is a pure max tree).
+                let ell = 2 * NR;
+                let mut a1 = vec![f32::NAN; MR * ell];
+                // SAFETY: as above.
+                unsafe {
+                    tx2(
+                        kg,
+                        ap.as_ptr(),
+                        astride,
+                        bp0.as_ptr(),
+                        bp1.as_ptr(),
+                        corr0.as_ptr(),
+                        corr1.as_ptr(),
+                        sa.as_ptr(),
+                        sb0,
+                        sb1,
+                        bias.as_ptr(),
+                        true,
+                        a1.as_mut_ptr(),
+                        roff2.as_ptr(),
+                        MR,
+                    );
+                }
+                let mut wantq = vec![0u8; MR * ell];
+                let mut wants = [0f32; MR];
+                for r in 0..MR {
+                    let row = &a1[r * ell..(r + 1) * ell];
+                    wants[r] = (ks.quant_row)(row, &mut wantq[r * ell..(r + 1) * ell]);
+                    // The scalar quantizer agrees too.
+                    let mut q2 = vec![0u8; ell];
+                    let s2 = quantize_row_q8_scalar(&a1[r * ell..(r + 1) * ell], &mut q2);
+                    assert_eq!(s2.to_bits(), wants[r].to_bits());
+                    assert_eq!(q2, wantq[r * ell..(r + 1) * ell]);
+                }
+                let mut gotq = vec![0u8; MR * ell];
+                let mut gots = [0f32; MR];
+                // SAFETY: qdst covers MR rows of ell bytes at stride ell.
+                unsafe {
+                    tleaf(
+                        kg,
+                        ap.as_ptr(),
+                        astride,
+                        bp0.as_ptr(),
+                        bp1.as_ptr(),
+                        corr0.as_ptr(),
+                        corr1.as_ptr(),
+                        sa.as_ptr(),
+                        sb0,
+                        sb1,
+                        bias.as_ptr(),
+                        gotq.as_mut_ptr(),
+                        ell,
+                        gots.as_mut_ptr(),
+                        MR,
+                    );
+                }
+                assert_eq!(gotq, wantq, "leaf tile bytes drifted ({}) kg={kg}", ks.label);
+                for r in 0..MR {
+                    assert_eq!(
+                        gots[r].to_bits(),
+                        wants[r].to_bits(),
+                        "leaf tile scale drifted ({}) kg={kg} row {r}",
+                        ks.label
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_row_q8_matches_scalar_and_guards_zero() {
+        let ks = table().i8k;
+        let mut rng = Rng::seed_from_u64(12);
+        // The dispatched quantizer must match the scalar statement in
+        // bytes and scale bits on every length class its loops carve
+        // (32/16/8-wide plus ragged tails).
+        for n in [1usize, 4, 7, 8, 15, 16, 31, 32, 33, 64, 70, 256] {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.0, 2.0);
+            let mut qs = vec![0u8; n];
+            let mut qd = vec![0u8; n];
+            let ss = quantize_row_q8_scalar(&v, &mut qs);
+            let sd = (ks.quant_row)(&v, &mut qd);
+            assert_eq!(ss.to_bits(), sd.to_bits(), "scale drift at n={n} ({})", ks.label);
+            assert_eq!(qs, qd, "byte drift at n={n} ({})", ks.label);
+            // Round-trip error ≤ scale/2 per element (plus float slop).
+            for (&x, &b) in v.iter().zip(qs.iter()) {
+                let deq = (b as i32 - 127) as f32 * ss;
+                assert!((x - deq).abs() <= 0.5001 * ss, "round-trip off for {x}");
+            }
+        }
+        // All-zero row: scale 1.0, every byte the biased zero — the
+        // divide-by-zero guard.
+        let zeros = [0.0f32, -0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let mut q = vec![0u8; 9];
+        let s = quantize_row_q8_scalar(&zeros, &mut q);
+        assert_eq!(s, 1.0);
+        assert!(q.iter().all(|&b| b == QA_ZERO));
+        let sd = (ks.quant_row)(&zeros, &mut q);
+        assert_eq!(sd, 1.0);
+        assert!(q.iter().all(|&b| b == QA_ZERO));
+        // The absmax element lands exactly on the biased extremes 0/254;
+        // 255 (signed +128) is never produced.
+        let s = quantize_row_q8_scalar(&[-2.0, 1.0, 0.5, 2.0], &mut q);
+        assert_eq!(s, 2.0 / 127.0);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[3], 254);
+        // Denormal absmax: inv overflows to inf, the clamp catches the
+        // resulting ±inf — SIMD must take its clamped path here too.
+        let tiny = f32::from_bits(1);
+        let vts = [tiny, -tiny];
+        let ss = quantize_row_q8_scalar(&vts, &mut q);
+        let mut qd = vec![0u8; 2];
+        let sd = (ks.quant_row)(&vts, &mut qd);
+        assert_eq!(ss.to_bits(), sd.to_bits());
+        assert_eq!(&q[..2], &qd[..]);
+        assert_eq!(qd[0], 254);
+        assert_eq!(qd[1], 0);
     }
 
     #[test]

@@ -17,11 +17,14 @@ pub mod scratch;
 pub use gemm::{
     gemm, gemm_acc, gemm_bias, gemm_bias_into, gemm_bias_relu, gemm_bias_relu_into, gemm_into,
     gemm_nt, gemm_nt_acc, gemm_nt_bias_relu, gemm_nt_gather_epi, gemm_nt_into, gemm_packed,
-    gemm_packed_gather_epi, gemm_scalar, gemm_tn, gemm_tn_acc, parallel_flop_threshold,
-    set_parallel_flop_threshold, PackedB,
+    gemm_packed_gather_epi, gemm_quant_gather_epi, gemm_scalar, gemm_tn, gemm_tn_acc,
+    parallel_flop_threshold, set_parallel_flop_threshold, PackedB, QuantPackedB,
 };
-pub(crate) use gemm::{gemm_bias_scatter_raw, gemm_nt_row};
-pub use kernels::{prefetch_slice, relu_store, routing_dot, Epilogue};
+pub(crate) use gemm::{
+    fused_leaf_available, gemm_bias_scatter_raw, gemm_nt_row, gemm_quant_scatter_prequant,
+    gemm_quant_scatter_raw, leaf_quant_l1,
+};
+pub use kernels::{prefetch_slice, relu_store, routing_dot, Epilogue, Precision};
 pub use ops::*;
 
 /// Row-major 2-D `f32` tensor. Rows index samples in all batched code.

@@ -29,6 +29,7 @@ use std::cell::RefCell;
 
 thread_local! {
     static F32_STACK: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static U8_STACK: RefCell<Vec<Vec<u8>>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Run `f` with a reusable thread-local scratch slice of exactly `len`
@@ -41,6 +42,22 @@ pub fn with_f32<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
     }
     let out = f(&mut buf[..len]);
     F32_STACK.with(|s| s.borrow_mut().push(buf));
+    out
+}
+
+/// [`with_f32`] for biased-u8 quantized activation rows (the int8
+/// serving path stores A-side bytes as `q + 127` — see
+/// `kernels::quantize_row_q8_scalar`). Same stack-like checkout, same
+/// staleness
+/// contract: the quantize front fully overwrites every row it packs and
+/// explicitly pads the `k` tail with the biased zero byte (127).
+pub fn with_u8<R>(len: usize, f: impl FnOnce(&mut [u8]) -> R) -> R {
+    let mut buf = U8_STACK.with(|s| s.borrow_mut().pop()).unwrap_or_default();
+    if buf.len() < len {
+        buf.resize(len, 0);
+    }
+    let out = f(&mut buf[..len]);
+    U8_STACK.with(|s| s.borrow_mut().push(buf));
     out
 }
 
@@ -91,6 +108,22 @@ mod tests {
         })
         .join()
         .unwrap();
+    }
+
+    #[test]
+    fn u8_stack_mirrors_f32_semantics() {
+        // Distinct nested buffers, reuse with stale contents, exact len.
+        with_u8(8, |outer| {
+            outer.fill(1);
+            with_u8(8, |inner| inner.fill(2));
+            assert!(outer.iter().all(|&v| v == 1));
+        });
+        with_u8(21, |buf| {
+            assert_eq!(buf.len(), 21);
+            buf.fill(200)
+        });
+        let stale = with_u8(21, |buf| buf[20]);
+        assert_eq!(stale, 200);
     }
 
     #[test]

@@ -16,6 +16,7 @@ fn native_coord(workers: usize, queue: usize) -> Coordinator {
         workers,
         threads: 0,
         queue_capacity: queue,
+        ..CoordinatorConfig::default()
     };
     Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))
 }
@@ -89,6 +90,7 @@ fn hlo_backend_serves_mnist_artifact() {
         workers: 1,
         threads: 0,
         queue_capacity: 1024,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::start(
         cfg,
@@ -137,6 +139,7 @@ fn worker_panic_fails_requests_instead_of_hanging() {
         workers: 1,
         threads: 0,
         queue_capacity: 16,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::start(cfg, || Box::new(PanickyBackend));
     let rx = coord.submit(vec![0.0; 4]).unwrap();

@@ -312,9 +312,12 @@ fn prop_snapshot_restore_identity() {
 
 #[test]
 fn prop_compiled_infer_matches_model() {
+    // Pinned to f32: this is a tight-tolerance oracle comparison, which
+    // must hold even when the suite runs under FFF_PRECISION=int8 (the
+    // quantized engine has its own exact properties below).
     check("FffInfer::compile == Fff::forward_infer", gen_case, |case| {
         let (fff, x) = build(case);
-        let compiled = fff.compile_infer();
+        let compiled = fff.compile_infer_with(fastfeedforward::tensor::Precision::F32);
         let a = fff.forward_infer(&x);
         let b = compiled.infer_batch(&x);
         let diff = a.max_abs_diff(&b);
@@ -868,6 +871,164 @@ fn prop_grouped_parallel_infer_matches_infer_one_depths_1_to_8() {
                      kernel {}",
                     kind.name()
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Int8 quantized serving properties (§Perf iteration 6). The quantized
+// engine is EXACT — per-row scales depend only on the row, i32
+// accumulation has no rounding, and the dequant store is one fixed f32
+// statement — so every invariant below is bit equality, not a tolerance.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_int8_sparse_equals_grouped() {
+    use fastfeedforward::tensor::kernels::KernelKind;
+    use fastfeedforward::tensor::pool::with_threads;
+    use fastfeedforward::tensor::Precision;
+    // The ISSUE 6 acceptance invariant: one int8 model must produce the
+    // same bits from the per-sample sparse path, the grouped bucket
+    // engine at 1/2/4/8 threads, and EVERY forced kernel kind (the AVX2
+    // maddubs/VNNI microkernel vs its scalar replica). The first kind's
+    // grouped output is the reference the other kinds must reproduce
+    // exactly — forcing a kind changes speed, never bits.
+    let mut per_case: Option<(FffInfer, Matrix, Matrix, Matrix)> = None;
+    check_kernels(
+        "int8: sparse ≡ grouped ≡ every kind/thread count (bitwise)",
+        |rng| {
+            // Leaf width 16 every third case: that is the register-fused
+            // leaf shape (2·NR), so the fused two-sweep engine gets
+            // compared against the per-sample statement too, not just
+            // the unfused tail widths.
+            let leaf = if rng.below(3) == 0 { 16 } else { 1 + rng.below(8) };
+            (
+                1 + rng.below(6),   // depth 1..=6
+                leaf,               // leaf width: spans QK/NR tails + fused shape
+                2 + rng.below(18),  // dim_in: spans QK tails
+                1 + rng.below(9),   // dim_out: spans NR tails
+                1 + rng.below(140), // batch: spans sparse gate + bucket splits
+                rng.next_u64(),
+            )
+        },
+        |&(depth, leaf, dim_in, dim_out, batch, seed), kind| {
+            if kind == KernelKind::ALL[0] {
+                let mut rng = Rng::seed_from_u64(seed);
+                let model = FffInfer::random_with(
+                    &mut rng,
+                    dim_in,
+                    dim_out,
+                    depth,
+                    leaf,
+                    1 << depth.min(5),
+                    Precision::Int8,
+                );
+                if model.precision() != Precision::Int8 || model.quant_bytes() == 0 {
+                    return Err("random_with(Int8) did not build quant panels".into());
+                }
+                let x = rand_matrix(&mut rng, batch, dim_in);
+                let mut sparse = Matrix::zeros(batch, dim_out);
+                for r in 0..batch {
+                    model.infer_one(x.row(r), sparse.row_mut(r));
+                }
+                let grouped = with_threads(1, || model.infer_batch_grouped(&x));
+                per_case = Some((model, x, sparse, grouped));
+            }
+            let (model, x, sparse, reference) =
+                per_case.as_ref().expect("per-case state set on first kind");
+            for threads in [1usize, 2, 4, 8] {
+                let grouped = with_threads(threads, || model.infer_batch_grouped(x));
+                if &grouped != reference {
+                    return Err(format!(
+                        "int8 grouped bits drifted (kernel {}, {threads} threads, depth {depth}, \
+                         batch {batch})",
+                        kind.name()
+                    ));
+                }
+            }
+            if reference != sparse {
+                return Err(format!(
+                    "int8 grouped ≠ per-sample sparse path (kernel {}, depth {depth}, \
+                     leaf {leaf}, dims {dim_in}→{dim_out}, batch {batch})",
+                    kind.name()
+                ));
+            }
+            // The auto dispatcher (sparse gate or grouped) lands on the
+            // same bits too.
+            if &model.infer_batch(x) != reference {
+                return Err("int8 infer_batch ≠ grouped/sparse bits".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int8_quant_round_trip_bounded() {
+    use fastfeedforward::tensor::kernels::NR;
+    use fastfeedforward::tensor::QuantPackedB;
+    // Symmetric per-panel quantization: dequantized weights sit within
+    // half a quantization step of the original, and the panel absmax
+    // maps to exactly ±127 (so the maddubs pair-sum bound holds).
+    check(
+        "int8 weight round-trip ≤ scale/2 per element",
+        |rng| (1 + rng.below(24), 1 + rng.below(40), rng.next_u64()),
+        |&(n, k, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let bt = rand_matrix(&mut rng, n, k);
+            let q = QuantPackedB::quantize_nt(&bt);
+            if (q.k(), q.n()) != (k, n) {
+                return Err(format!("dims: got {}x{}, want {k}x{n}", q.k(), q.n()));
+            }
+            for j in 0..n {
+                let s = q.scale(j / NR);
+                if !(s > 0.0) {
+                    return Err(format!("panel {} scale {s} not positive", j / NR));
+                }
+                for p in 0..k {
+                    let (v, r) = (bt.get(j, p), q.get_q(j, p) as f32 * s);
+                    if (v - r).abs() > 0.5001 * s {
+                        return Err(format!(
+                            "({j},{p}): {v} → {r}, err {} > s/2 = {}",
+                            (v - r).abs(),
+                            0.5 * s
+                        ));
+                    }
+                    if q.get_q(j, p).abs() > 127 {
+                        return Err(format!("({j},{p}): byte {} outside ±127", q.get_q(j, p)));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int8_panels_built_only_when_quantized() {
+    use fastfeedforward::tensor::Precision;
+    // Storage rule: f32 models carry zero quantized bytes; int8 models
+    // carry int8 panels for every allocated leaf's W1 and W2. (No size
+    // comparison here: at degenerate dims the NR×QK zero padding can
+    // outweigh the 4×-per-element saving that holds at serving dims.)
+    check(
+        "quant panels exist iff precision is int8",
+        |rng| {
+            let mut c = gen_case(rng);
+            c.depth = 1 + c.depth.min(4);
+            c
+        },
+        |case| {
+            let (fff, _) = build(case);
+            let f = fff.compile_infer_with(Precision::F32);
+            if f.precision() != Precision::F32 || f.quant_bytes() != 0 {
+                return Err(format!("f32 compile holds {} quant bytes", f.quant_bytes()));
+            }
+            let q = fff.compile_infer_with(Precision::Int8);
+            if q.precision() != Precision::Int8 || q.quant_bytes() == 0 {
+                return Err("int8 compile built no quant panels".into());
             }
             Ok(())
         },

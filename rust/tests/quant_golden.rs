@@ -1,0 +1,218 @@
+//! C-generated golden vectors for the int8 quantization pipeline
+//! (§Perf iteration 6). The fixtures were produced by the validated C
+//! prototype of the int8 microkernels — the numerics oracle this PR's
+//! Rust port was written against — and pin, bit for bit:
+//!
+//! * `QuantPackedB::quantize_nt`: panel bytes, per-panel scales, and
+//!   the biased-A correction row — including an all-zero column panel
+//!   (the divide-by-zero guard: scale 1.0, zero bytes, zero corr) and
+//!   a ±127 saturation edge (the panel absmax element).
+//! * The A-row quantizer: biased bytes and scale bits per row —
+//!   including an all-zero row (scale 1.0, all bytes = `QA_ZERO`) and
+//!   saturation at both byte rails.
+//! * `gemm_quant_gather_epi` end to end under **every forced kernel
+//!   kind**, bias and bias+ReLU epilogues: the dequantized f32 output
+//!   bits must equal the C prototype's exactly. `k = 7` exercises the
+//!   ragged QK tail, `n = 10` the ragged NR tail (narrow scalar tile).
+//!
+//! All comparisons go through `to_bits`/byte equality — the quantized
+//! engine is exact, so tolerances would only hide bugs.
+
+use fastfeedforward::tensor::kernels::{self, KernelKind, NR, QA_ZERO};
+use fastfeedforward::tensor::{Epilogue, Matrix, QuantPackedB};
+
+const GK: usize = 7;
+const GN: usize = 10;
+const GM: usize = 5;
+
+/// Weight matrix, n×k orientation (f32 bits). Columns 8..10 all zero.
+const B_T: [u32; 70] = [
+    0x41180000, 0xBEE44340, 0x40553368, 0x40E3779A, 0xC0A3AA80, 0xBFAB3260, 0x401C229C,
+    0x40C6EF36, 0xC0C032E4, 0xC00EA9FC, 0x3FC623A8, 0x40AA66D0, 0xC0DCBB4A, 0xC047BAC4,
+    0x3F280420, 0x408DDE6C, 0xC0F943AE, 0xC08065C8, 0xBE70FC00, 0x4062AC0C, 0x40EA33EE,
+    0xC09CEE2C, 0xBF904118, 0x40299B44, 0x80000000, 0xC0B97692, 0xC0013154, 0x3FE114F0,
+    0x40B12324, 0xC0D5FEF6, 0xC03A4220, 0x3F5DE6C0, 0x40949ABE, 0xC0F2875A, 0xC07352E8,
+    0xBCCB8E00, 0x407024B4, 0x40F0F040, 0xC09631DA, 0xBF6A9F90, 0x403713E8, 0x40D467DC,
+    0xC0B2BA3E, 0xBFE77160, 0x3FFC0640, 0x40B7DF76, 0xC0CF42A4, 0xC02CC978, 0x3F89E4A8,
+    0x409B5712, 0xC0EBCB08, 0xC065DA44, 0x3E3E18C0, 0x407D9D58, 0x40F7AC94, 0xC08F7586,
+    0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000,
+    0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000,
+];
+
+/// Activation rows, m×k (f32 bits). Row 3 all zero.
+const A_X: [u32; 35] = [
+    0xC0C80000, 0xC048A958, 0x3F2449D0, 0x408D6720, 0xC0F9BAF8, 0xC080DD12, 0xBE7FE540,
+    0x4061BD78, 0x40E9BCA2, 0xC09D6576, 0xBF921E40, 0x4028ACB0, 0x40CD343E, 0xC0B9EDDC,
+    0xC0021FE8, 0x3FDF37C8, 0x40B0ABD8, 0xC0D67640, 0xC03B30B4, 0x3F5A2C70, 0x40942374,
+    0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000, 0x00000000,
+    0x40362554, 0x40D3F090, 0xC0B33188, 0xBFE94E88, 0x3FFA2918, 0x40B7682C, 0xC0CFB9EE,
+];
+
+const BIAS: [u32; 10] = [
+    0xC0BA6526, 0xC0030E7C, 0x3FDD5AA0, 0x40B0348E, 0xC0D6ED8A, 0xC03C1F48, 0x3F567210,
+    0x4093AC2A, 0xC0F375F0, 0xC0753010,
+];
+
+/// Per-panel weight scales (f32 bits): real panel, then the zero
+/// panel's guard value 1.0.
+const B_SCALES: [u32; 2] = [0x3D993265, 0x3F800000];
+
+/// Expected signed weight bytes, `[column][k]` order. `b[0][0]` is the
+/// panel absmax → exactly 127; columns 8..10 are the zero panel.
+const B_Q: [i8; 70] = [
+    127, -6, 45, 95, -68, -18, 33,
+    83, -80, -30, 21, 71, -92, -42,
+    9, 59, -104, -54, -3, 47, 98,
+    -66, -15, 35, 0, -77, -27, 24,
+    74, -89, -39, 12, 62, -101, -51,
+    0, 50, 101, -63, -12, 38, 89,
+    -75, -24, 26, 77, -87, -36, 14,
+    65, -99, -48, 2, 53, 103, -60,
+    0, 0, 0, 0, 0, 0, 0,
+    0, 0, 0, 0, 0, 0, 0,
+];
+
+/// Expected **biased** activation bytes, `[row][k]` order, printed by
+/// the C prototype as i8 (re-interpret as u8: a biased 137 prints as
+/// −119). Row 3 (all-zero input) is all `QA_ZERO` = 127.
+const A_Q: [i8; 35] = [
+    25, 76, -119, -57, 0, 61, 123,
+    -68, -2, 41, 107, -83, -18, 26,
+    88, -96, -24, 0, 72, -113, -41,
+    127, 127, 127, 127, 127, 127, 127,
+    -74, -2, 20, 92, -92, -19, 3,
+];
+
+/// Per-row activation scales (f32 bits); row 3 pins the zero-row guard.
+const A_SCALES: [u32; 5] = [0x3D7BB25D, 0x3D6B93CA, 0x3D58268D, 0x3F800000, 0x3D559BC8];
+
+/// `gemm_quant_gather_epi` output bits, `Bias` epilogue. The zero
+/// panel's columns (8, 9) collapse to the bias values.
+const C_BIAS: [u32; 50] = [
+    0x41618CB7, 0xC1EB37A8, 0xC25521AD, 0x42BC8D60, 0xC1B7DF04, 0xC2141C88, 0x4301C23E,
+    0xC2829002, 0xC0F375F0, 0xC0753010,
+    0xC213F5F3, 0xC1D28874, 0x426AE23E, 0xC28F0A95, 0xC211509F, 0xC1F3C143, 0xC2B16458,
+    0x428DD533, 0xC0F375F0, 0xC0753010,
+    0xC1F056EA, 0xC2A80C7F, 0x41ED429A, 0x424E46D7, 0xC2B2E0E0, 0x42E1E23C, 0x403A3EE1,
+    0xC2820F62, 0xC0F375F0, 0xC0753010,
+    0xC0BA6526, 0xC0030E7C, 0x3FDD5AA0, 0x40B0348E, 0xC0D6ED8A, 0xC03C1F48, 0x3F567210,
+    0x4093AC2A, 0xC0F375F0, 0xC0753010,
+    0xC23B386B, 0xC1B90FF4, 0x4260045D, 0xC2820257, 0xC1F01B74, 0xC220CED4, 0xC2A69365,
+    0x428C4BCE, 0xC0F375F0, 0xC0753010,
+];
+
+/// Same product, `BiasRelu` epilogue.
+const C_BIAS_RELU: [u32; 50] = [
+    0x41618CB7, 0x00000000, 0x00000000, 0x42BC8D60, 0x00000000, 0x00000000, 0x4301C23E,
+    0x00000000, 0x00000000, 0x00000000,
+    0x00000000, 0x00000000, 0x426AE23E, 0x00000000, 0x00000000, 0x00000000, 0x00000000,
+    0x428DD533, 0x00000000, 0x00000000,
+    0x00000000, 0x00000000, 0x41ED429A, 0x424E46D7, 0x00000000, 0x42E1E23C, 0x403A3EE1,
+    0x00000000, 0x00000000, 0x00000000,
+    0x00000000, 0x00000000, 0x3FDD5AA0, 0x40B0348E, 0x00000000, 0x00000000, 0x3F567210,
+    0x4093AC2A, 0x00000000, 0x00000000,
+    0x00000000, 0x00000000, 0x4260045D, 0x00000000, 0x00000000, 0x00000000, 0x00000000,
+    0x428C4BCE, 0x00000000, 0x00000000,
+];
+
+fn fixture_matrix(bits: &[u32], rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            m.set(r, c, f32::from_bits(bits[r * cols + c]));
+        }
+    }
+    m
+}
+
+#[test]
+fn weight_quantization_matches_c_prototype() {
+    let bt = fixture_matrix(&B_T, GN, GK);
+    let q = QuantPackedB::quantize_nt(&bt);
+    assert_eq!((q.k(), q.n()), (GK, GN));
+    for (jp, &want) in B_SCALES.iter().enumerate() {
+        assert_eq!(q.scale(jp).to_bits(), want, "panel {jp} scale bits");
+    }
+    for j in 0..GN {
+        for p in 0..GK {
+            assert_eq!(q.get_q(j, p), B_Q[j * GK + p], "weight byte ({j},{p})");
+        }
+        // The correction row the VNNI kernel subtracts: 127·Σ_p bytes,
+        // derived here from the pinned bytes themselves (so the zero
+        // panel's corr is pinned to 0 too).
+        let want: i32 = (0..GK).map(|p| B_Q[j * GK + p] as i32).sum::<i32>() * 127;
+        assert_eq!(q.corr_of(j), want, "corr ({j})");
+    }
+    // Saturation edge: the absmax element must land exactly on ±127.
+    assert_eq!(q.get_q(0, 0), 127);
+}
+
+#[test]
+fn activation_quantization_matches_c_prototype() {
+    // Scalar statement and every dispatched quantizer produce the same
+    // biased bytes and scale bits the C prototype recorded.
+    let x = fixture_matrix(&A_X, GM, GK);
+    let _serialize = kernels::force_lock();
+    let _guard = fastfeedforward::testing::KernelStateGuard::zero_threshold();
+    for kind in KernelKind::ALL {
+        kernels::force(Some(kind));
+        let quant_row = kernels::active_i8().quant_row;
+        for r in 0..GM {
+            let mut q = vec![0u8; GK];
+            let s = quant_row(x.row(r), &mut q);
+            assert_eq!(
+                s.to_bits(),
+                A_SCALES[r],
+                "row {r} scale bits under {}",
+                kind.name()
+            );
+            for p in 0..GK {
+                assert_eq!(
+                    q[p],
+                    A_Q[r * GK + p] as u8,
+                    "biased byte ({r},{p}) under {}",
+                    kind.name()
+                );
+            }
+        }
+        kernels::force(None);
+    }
+    // The zero-row guard, spelled out: scale 1.0, every byte QA_ZERO.
+    assert_eq!(A_SCALES[3], 1.0f32.to_bits());
+    assert!(A_Q[3 * GK..4 * GK].iter().all(|&b| b as u8 == QA_ZERO));
+}
+
+#[test]
+fn quant_gather_output_bits_match_c_prototype_per_kind() {
+    let x = fixture_matrix(&A_X, GM, GK);
+    let bt = fixture_matrix(&B_T, GN, GK);
+    let bias: Vec<f32> = BIAS.iter().map(|&b| f32::from_bits(b)).collect();
+    let q = QuantPackedB::quantize_nt(&bt);
+    let rows: Vec<usize> = (0..GM).collect();
+    let _serialize = kernels::force_lock();
+    let _guard = fastfeedforward::testing::KernelStateGuard::zero_threshold();
+    for kind in KernelKind::ALL {
+        kernels::force(Some(kind));
+        for (golden, epi, label) in [
+            (&C_BIAS, Epilogue::Bias(&bias), "bias"),
+            (&C_BIAS_RELU, Epilogue::BiasRelu(&bias), "bias_relu"),
+        ] {
+            let mut got = vec![f32::NAN; GM * GN];
+            fastfeedforward::tensor::gemm_quant_gather_epi(&x, &rows, &q, &mut got, epi);
+            for (i, (g, &w)) in got.iter().zip(golden.iter()).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w,
+                    "{label} output ({},{}) under {}",
+                    i / GN,
+                    i % GN,
+                    kind.name()
+                );
+            }
+        }
+        kernels::force(None);
+    }
+    // NR sanity: the fixtures assume the 8-column panel layout; a future
+    // NR change must regenerate them from the C prototype.
+    assert_eq!(NR, 8);
+}
