@@ -1,0 +1,256 @@
+//! Rule family 3: determinism lints.
+//!
+//! The repo's bit-identity contract (results independent of
+//! `FFF_THREADS` and of allocator/hash state) has two known failure
+//! shapes, and each gets a lint:
+//!
+//! * **Rule A — `hashmap-order-float-accumulation`**: iterating a
+//!   `HashMap`/`HashSet` and folding floats with `+=` inside the loop.
+//!   Iteration order is randomized per process, so the float sum is not
+//!   reproducible. Fix: collect-and-sort keys, or use an index-ordered
+//!   `Vec`.
+//! * **Rule B — `pool-reduction-thread-dependent`**: a
+//!   `ThreadPool::run(tasks, ..)` region whose task count derives from
+//!   `.threads()` / `available_parallelism` *and* whose inline closure
+//!   accumulates with `+=`. Per-thread partials folded in thread order
+//!   change with the thread count. Fix: route reductions through the
+//!   fixed-shard helpers (`n_shards` / `TRAIN_SHARD_ROWS`-derived
+//!   counts), which shard by *batch* geometry.
+//!
+//! Both lints are narrow by design: they key on the accumulation
+//! operator actually appearing inside the traced region, so
+//! thread-count-sized *tiling* (no cross-task arithmetic) stays legal.
+
+use super::source::{ident_positions, matching_brace, SourceFile};
+use super::Finding;
+
+const RULE_HASH_ORDER: &str = "hashmap-order-float-accumulation";
+const RULE_POOL_REDUCTION: &str = "pool-reduction-thread-dependent";
+
+/// How many `let`-binding hops Rule B follows from a `.run()` argument
+/// back toward `.threads()`.
+const TRACE_DEPTH: usize = 4;
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in files {
+        check_hash_order(f, &mut findings);
+        check_pool_reduction(f, &mut findings);
+    }
+    findings
+}
+
+// ---------------------------------------------------------------- Rule A
+
+fn check_hash_order(f: &SourceFile, findings: &mut Vec<Finding>) {
+    // Names bound to hash containers anywhere in the file (`let [mut] x
+    // : HashMap<..>` / `= HashMap::new()` / `HashSet`). File-scoped:
+    // shadowing across functions can over-approximate, which for a lint
+    // that demands *ordered* iteration is the safe direction.
+    let mut hash_names: Vec<String> = Vec::new();
+    for line in &f.code {
+        if !(line.contains("HashMap") || line.contains("HashSet")) {
+            continue;
+        }
+        if let Some(name) = let_binding_name(line) {
+            hash_names.push(name);
+        }
+    }
+    if hash_names.is_empty() {
+        return;
+    }
+    for (i, line) in f.code.iter().enumerate() {
+        let Some(for_col) = ident_positions(line, "for").first().copied() else {
+            continue;
+        };
+        let Some(in_rel) = line[for_col..].find(" in ") else {
+            continue;
+        };
+        let iterated = &line[for_col + in_rel + 4..];
+        if !hash_names.iter().any(|n| !ident_positions(iterated, n).is_empty()) {
+            continue;
+        }
+        // Loop body: brace-match from the `{` opening this `for`.
+        let Some(open) = line.rfind('{') else { continue };
+        let Some((end_line, _)) = matching_brace(&f.code, i, open) else {
+            continue;
+        };
+        let body_accumulates = f.code[i..=end_line]
+            .iter()
+            .any(|l| l.contains("+=") || l.contains("-=") || l.contains("*="));
+        if body_accumulates {
+            findings.push(Finding::new(
+                RULE_HASH_ORDER,
+                &f.path,
+                i + 1,
+                "float accumulation over HashMap/HashSet iteration order; \
+                 sort the keys (or use an index-ordered Vec) before folding",
+            ));
+        }
+    }
+}
+
+/// `let [mut] name` pattern → the bound identifier.
+fn let_binding_name(code_line: &str) -> Option<String> {
+    let at = ident_positions(code_line, "let").first().copied()?;
+    let mut rest = code_line[at + 3..].trim_start();
+    if let Some(r) = rest.strip_prefix("mut ") {
+        rest = r.trim_start();
+    }
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+// ---------------------------------------------------------------- Rule B
+
+fn check_pool_reduction(f: &SourceFile, findings: &mut Vec<Finding>) {
+    let bindings = collect_let_bindings(f);
+    for (i, line) in f.code.iter().enumerate() {
+        let mut from = 0usize;
+        while let Some(rel) = line[from..].find(".run(") {
+            let open = from + rel + ".run".len();
+            from = open + 1;
+            let Some(args) = paren_args(&f.code, i, open) else {
+                continue;
+            };
+            // Pool regions are `.run(n_tasks, &closure)`; one-argument
+            // `run` calls (trainer.run(model), exe.run(&inputs)) are
+            // different APIs and skipped.
+            if args.len() != 2 {
+                continue;
+            }
+            let task_count = args[0].trim();
+            let body = args[1].trim();
+            if !body.starts_with('&') {
+                continue;
+            }
+            if !body.contains('|') {
+                // `&task_fn` by name: not an inline closure, the lint
+                // cannot see the body — out of scope by design.
+                continue;
+            }
+            let accumulates =
+                body.contains("+=") || body.contains("-=") || body.contains("*=");
+            if !accumulates {
+                continue;
+            }
+            if traces_to_thread_count(task_count, &bindings, TRACE_DEPTH) {
+                findings.push(Finding::new(
+                    RULE_POOL_REDUCTION,
+                    &f.path,
+                    i + 1,
+                    "pool reduction whose task count derives from the thread \
+                     count; shard by batch geometry (fixed-shard helpers) so \
+                     results are FFF_THREADS-invariant",
+                ));
+            }
+        }
+    }
+}
+
+/// Does `expr` (transitively through `let` bindings, up to `depth`
+/// hops) reach `.threads()` or `available_parallelism`?
+fn traces_to_thread_count(expr: &str, bindings: &[(String, String)], depth: usize) -> bool {
+    if expr.contains(".threads()") || expr.contains("available_parallelism") {
+        return true;
+    }
+    if depth == 0 {
+        return false;
+    }
+    for (name, rhs) in bindings {
+        if !ident_positions(expr, name).is_empty()
+            && traces_to_thread_count(rhs, bindings, depth - 1)
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// All `let name = rhs;` bindings in the file's code view. The rhs is
+/// captured until the terminating `;` (up to a few lines), enough for
+/// the arithmetic chains the trace follows.
+fn collect_let_bindings(f: &SourceFile) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for (i, line) in f.code.iter().enumerate() {
+        if ident_positions(line, "let").is_empty() {
+            continue;
+        }
+        let Some(name) = let_binding_name(line) else { continue };
+        let Some(eq) = line.find('=') else { continue };
+        let mut rhs = line[eq + 1..].to_string();
+        let mut j = i;
+        while !rhs.contains(';') && j + 1 < f.code.len() && j < i + 4 {
+            j += 1;
+            rhs.push(' ');
+            rhs.push_str(&f.code[j]);
+        }
+        if let Some(semi) = rhs.find(';') {
+            rhs.truncate(semi);
+        }
+        // Guard against `name` appearing in its own rhs (`let x = x+1;`
+        // shadowing) which would loop the trace; depth bounds it anyway,
+        // but dropping self-references keeps traces meaningful.
+        if ident_positions(&rhs, &name).is_empty() {
+            out.push((name, rhs));
+        }
+    }
+    out
+}
+
+/// Split the parenthesized argument list opening at (`line`, `col`)
+/// into top-level (depth-1) comma-separated pieces. Spans lines.
+fn paren_args(code: &[String], line: usize, col: usize) -> Option<Vec<String>> {
+    let mut depth = 0i64;
+    let mut brace = 0i64;
+    let mut args: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    for (li, l) in code.iter().enumerate().skip(line) {
+        let start = if li == line { col } else { 0 };
+        for ch in l.bytes().skip(start) {
+            match ch {
+                b'(' | b'[' => {
+                    depth += 1;
+                    if depth > 1 {
+                        cur.push(ch as char);
+                    }
+                }
+                b')' | b']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        args.push(cur);
+                        return Some(args);
+                    }
+                    cur.push(ch as char);
+                }
+                b'{' => {
+                    brace += 1;
+                    cur.push('{');
+                }
+                b'}' => {
+                    brace -= 1;
+                    cur.push('}');
+                }
+                b',' if depth == 1 && brace == 0 => {
+                    args.push(std::mem::take(&mut cur));
+                }
+                _ => {
+                    if depth >= 1 {
+                        cur.push(ch as char);
+                    }
+                }
+            }
+        }
+        if depth >= 1 {
+            cur.push('\n');
+        }
+    }
+    None
+}

@@ -1,0 +1,365 @@
+//! `fff analyze` — std-only static analysis for the SIMD/pool core.
+//!
+//! Three rule families, all hard errors in CI:
+//!
+//! 1. [`unsafe_audit`] — `unsafe` containment (allowlisted modules
+//!    only), `// SAFETY:` documentation on every site, and the
+//!    crate-wide `#![deny(unsafe_op_in_unsafe_fn)]` lint.
+//! 2. [`parity`] — every SIMD kernel registered in the dispatch tables
+//!    (`KernelTable`, `I8Kernels`) has a scalar replica and a test that
+//!    references it by name.
+//! 3. [`determinism`] — no float accumulation over `HashMap`/`HashSet`
+//!    iteration order; no pool reductions whose task count derives from
+//!    the thread count.
+//!
+//! The scanner ([`source`]) is lexical, not syntactic: it blanks
+//! comments and string contents so rules cannot be fooled by literals,
+//! then pattern-matches on the code view. That makes the analyzer
+//! cheap, dependency-free, and — because the rules are narrow — low on
+//! false positives; the repo tree must come back clean
+//! (`tests/analyze_repo.rs` pins that).
+
+pub mod determinism;
+pub mod parity;
+pub mod source;
+pub mod unsafe_audit;
+
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// One rule violation: rule id, repo-relative file, 1-based line,
+/// human-oriented message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &str, file: &str, line: usize, message: &str) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            line,
+            message: message.to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, out: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(out, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Run every rule family over an in-memory file set (fixtures or a
+/// loaded tree). Findings come back sorted by file, line, rule.
+pub fn analyze_sources(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    findings.extend(unsafe_audit::check(files));
+    findings.extend(parity::check(files));
+    findings.extend(determinism::check(files));
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+    });
+    findings
+}
+
+/// Load `src/`, `tests/`, and `benches/` `.rs` files under the crate
+/// root and analyze them. Accepts either the crate root itself or a
+/// repo root with a `rust/` crate inside.
+pub fn analyze_tree(root: &Path) -> std::io::Result<(Vec<Finding>, usize)> {
+    let crate_root = resolve_crate_root(root)?;
+    let mut files = Vec::new();
+    for dir in ["src", "tests", "benches"] {
+        let base = crate_root.join(dir);
+        if base.is_dir() {
+            collect_rs(&base, &mut files)?;
+        }
+    }
+    // Deterministic order (directory iteration order is OS-dependent).
+    files.sort();
+    let sources: Vec<SourceFile> = files
+        .iter()
+        .map(|p| {
+            let text = std::fs::read_to_string(p)?;
+            let rel = p
+                .strip_prefix(&crate_root)
+                .unwrap_or(p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            Ok(SourceFile::from_text(&rel, &text))
+        })
+        .collect::<std::io::Result<_>>()?;
+    Ok((analyze_sources(&sources), sources.len()))
+}
+
+fn resolve_crate_root(root: &Path) -> std::io::Result<PathBuf> {
+    if root.join("src").is_dir() {
+        return Ok(root.to_path_buf());
+    }
+    if root.join("rust").join("src").is_dir() {
+        return Ok(root.join("rust"));
+    }
+    Err(std::io::Error::new(
+        std::io::ErrorKind::NotFound,
+        format!("no crate root (src/) at or under {}", root.display()),
+    ))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// CLI entry for `fff analyze [--root PATH]`. Prints findings and a
+/// summary; returns the process exit code (0 clean, 1 findings, 2
+/// usage/io error).
+pub fn run_cli(root: Option<&str>) -> i32 {
+    let root = PathBuf::from(root.unwrap_or("."));
+    match analyze_tree(&root) {
+        Ok((findings, scanned)) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                println!("fff analyze: clean ({scanned} files scanned)");
+                0
+            } else {
+                println!(
+                    "fff analyze: {} finding(s) in {scanned} files — fix or \
+                     extend the allowlist (see EXPERIMENTS.md §Analysis)",
+                    findings.len()
+                );
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("fff analyze: {e}");
+            2
+        }
+    }
+}
+
+// ------------------------------------------------------------------------
+// Fixture self-tests: every rule must fire on a seeded violation and
+// stay silent on the clean twin.
+// ------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn files(specs: &[(&str, &str)]) -> Vec<SourceFile> {
+        specs.iter().map(|(p, t)| SourceFile::from_text(p, t)).collect()
+    }
+
+    fn rules(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn undocumented_unsafe_fires_and_documented_is_clean() {
+        let dirty = files(&[(
+            "src/tensor/pool.rs",
+            "fn f(p: *mut f32) {\n    unsafe { *p = 1.0; }\n}\n",
+        )]);
+        assert_eq!(rules(&analyze_sources(&dirty)), ["undocumented-unsafe"]);
+
+        let clean = files(&[(
+            "src/tensor/pool.rs",
+            "fn f(p: *mut f32) {\n    // SAFETY: p is valid per caller contract.\n    \
+             unsafe { *p = 1.0; }\n}\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_above_wrapped_statement_is_accepted() {
+        let clean = files(&[(
+            "src/tensor/pool.rs",
+            "fn f(p: *const f32) -> f32 {\n    // SAFETY: p valid for reads.\n    \
+             let v =\n        unsafe { *p };\n    v\n}\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_accepts_safety_doc_section() {
+        let clean = files(&[(
+            "src/tensor/pool.rs",
+            "/// # Safety\n/// `p` must be valid for writes.\nunsafe fn poke(p: *mut f32) {\n    \
+             // SAFETY: per the fn contract above.\n    unsafe { *p = 0.0; }\n}\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn unsafe_outside_allowlist_fires() {
+        let dirty = files(&[(
+            "src/data/loader.rs",
+            "fn f(p: *mut u8) {\n    // SAFETY: documented but still misplaced.\n    \
+             unsafe { *p = 0; }\n}\n",
+        )]);
+        assert_eq!(rules(&analyze_sources(&dirty)), ["unsafe-outside-allowlist"]);
+    }
+
+    #[test]
+    fn unsafe_fn_pointer_types_are_exempt() {
+        let clean = files(&[(
+            "src/runtime/exec.rs",
+            "type Kernel = unsafe fn(*const f32, usize);\nstruct T { k: unsafe fn(usize) }\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn missing_crate_lint_fires() {
+        let dirty = files(&[("src/lib.rs", "pub mod tensor;\n")]);
+        assert_eq!(rules(&analyze_sources(&dirty)), ["missing-unsafe-op-lint"]);
+
+        let clean =
+            files(&[("src/lib.rs", "#![deny(unsafe_op_in_unsafe_fn)]\npub mod tensor;\n")]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    /// A minimal kernels.rs fixture: one dispatch table registering one
+    /// SIMD entry, with the replica and test reference controllable.
+    fn kernels_fixture(with_replica: bool, with_test: bool) -> Vec<SourceFile> {
+        let mut kernels = String::from(
+            "pub struct KernelTable { pub micro_4x8: fn(usize) }\n\
+             fn micro_4x8_fast_entry(_: usize) {}\n",
+        );
+        if with_replica {
+            kernels.push_str("fn micro_4x8_ref(_: usize) {}\nfn micro_4x8_portable(_: usize) {}\n");
+        }
+        kernels.push_str(
+            "pub fn detect() -> KernelTable {\n    KernelTable { micro_4x8: micro_4x8_fast_entry }\n}\n",
+        );
+        let test = if with_test {
+            "#[test]\nfn fast_matches_ref() { crate::k::micro_4x8_fast_entry(1); }\n"
+        } else {
+            "#[test]\nfn unrelated() {}\n"
+        };
+        files(&[
+            ("src/tensor/kernels.rs", kernels.as_str()),
+            ("tests/golden_vectors.rs", test),
+        ])
+    }
+
+    #[test]
+    fn kernel_without_replica_fires() {
+        let got = analyze_sources(&kernels_fixture(false, true));
+        assert!(rules(&got).contains(&"kernel-missing-scalar-replica"), "{got:?}");
+    }
+
+    #[test]
+    fn kernel_without_test_reference_fires() {
+        let got = analyze_sources(&kernels_fixture(true, false));
+        assert_eq!(rules(&got), ["kernel-missing-test-reference"]);
+    }
+
+    #[test]
+    fn kernel_with_replica_and_test_is_clean() {
+        assert!(analyze_sources(&kernels_fixture(true, true)).is_empty());
+    }
+
+    #[test]
+    fn hashmap_order_float_accumulation_fires() {
+        let dirty = files(&[(
+            "src/train/stats.rs",
+            "use std::collections::HashMap;\nfn f() -> f32 {\n    \
+             let mut m: HashMap<u32, f32> = HashMap::new();\n    m.insert(1, 2.0);\n    \
+             let mut acc = 0.0f32;\n    for (_, v) in &m {\n        acc += v;\n    }\n    \
+             acc\n}\n",
+        )]);
+        assert_eq!(rules(&analyze_sources(&dirty)), ["hashmap-order-float-accumulation"]);
+    }
+
+    #[test]
+    fn vec_accumulation_is_clean() {
+        let clean = files(&[(
+            "src/train/stats.rs",
+            "fn f(xs: &[f32]) -> f32 {\n    let mut acc = 0.0f32;\n    \
+             for v in xs {\n        acc += v;\n    }\n    acc\n}\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn hashmap_iteration_without_accumulation_is_clean() {
+        let clean = files(&[(
+            "src/train/stats.rs",
+            "use std::collections::HashMap;\nfn f() {\n    \
+             let m: HashMap<u32, f32> = HashMap::new();\n    \
+             for (k, _) in &m {\n        println!(\"{k}\");\n    }\n}\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn thread_derived_pool_reduction_fires() {
+        let dirty = files(&[(
+            "src/train/engine.rs",
+            "fn f(pool: &Pool, acc: &mut [f32]) {\n    \
+             let bands = pool.threads() * 4;\n    \
+             let n = bands + 1;\n    \
+             pool.run(n, &|t| {\n        acc[t] += 1.0;\n    });\n}\n",
+        )]);
+        assert_eq!(rules(&analyze_sources(&dirty)), ["pool-reduction-thread-dependent"]);
+    }
+
+    #[test]
+    fn batch_derived_pool_reduction_is_clean() {
+        let clean = files(&[(
+            "src/train/engine.rs",
+            "fn f(pool: &Pool, rows: usize, acc: &mut [f32]) {\n    \
+             let n = rows.div_ceil(128);\n    \
+             pool.run(n, &|t| {\n        acc[t] += 1.0;\n    });\n}\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn thread_derived_tiling_without_accumulation_is_clean() {
+        let clean = files(&[(
+            "src/train/engine.rs",
+            "fn f(pool: &Pool, out: &mut [f32]) {\n    \
+             let n = pool.threads() * 4;\n    \
+             pool.run(n, &|t| {\n        out[t] = t as f32;\n    });\n}\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn string_literals_do_not_fool_rules() {
+        let clean = files(&[(
+            "src/cli.rs",
+            "fn f() {\n    let msg = \"unsafe { } for x in map += .threads()\";\n    \
+             println!(\"{msg}\");\n}\n",
+        )]);
+        assert!(analyze_sources(&clean).is_empty());
+    }
+
+    #[test]
+    fn findings_are_sorted_and_display_cleanly() {
+        let dirty = files(&[
+            ("src/b.rs", "fn f(p: *mut u8) {\n    unsafe { *p = 0; }\n}\n"),
+            ("src/a.rs", "fn f(p: *mut u8) {\n    unsafe { *p = 0; }\n}\n"),
+        ]);
+        let got = analyze_sources(&dirty);
+        assert_eq!(got.len(), 4); // allowlist + undocumented, per file
+        assert!(got[0].file <= got[2].file);
+        let shown = format!("{}", got[0]);
+        assert!(shown.contains("src/a.rs:2:"), "{shown}");
+    }
+}

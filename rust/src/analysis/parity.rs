@@ -1,0 +1,172 @@
+//! Rule family 2: kernel parity.
+//!
+//! The bit-identity guarantee rests on every SIMD kernel having (a) a
+//! scalar replica that states the numerics in plain Rust and (b) a test
+//! that exercises the kernel *by name* against golden vectors or the
+//! forced-kernel matrix. This rule machine-checks both by parsing the
+//! dispatch-table registrations out of `src/tensor/kernels.rs`:
+//!
+//! * every `KernelTable { .. }` literal's `micro_4x8` / `micro_4x8_epi` /
+//!   `routing_dot` fields, and
+//! * every `I8Kernels { .. }` literal's `quant_row` / `tile` / `tile_x2`
+//!   / `tile_leaf` fields,
+//!
+//! then requiring, per registered entry: the field's scalar replica
+//! (see [`replicas_for`]) is defined in the kernels module, and the
+//! entry's base name (minus a trailing `_entry`) appears in the test
+//! corpus — `tests/*.rs` (golden vectors, quant goldens, the
+//! `check_kernels` property call sites) plus the `#[cfg(test)]` regions
+//! of `src/` files.
+
+use super::source::{contains_ident, SourceFile};
+use super::Finding;
+
+const RULE_REPLICA: &str = "kernel-missing-scalar-replica";
+const RULE_TEST_REF: &str = "kernel-missing-test-reference";
+
+/// Dispatch-table fields the rule audits, per table type.
+const TABLE_FIELDS: &[&str] = &["micro_4x8", "micro_4x8_epi", "routing_dot"];
+const I8_FIELDS: &[&str] = &["quant_row", "tile", "tile_x2", "tile_leaf"];
+
+/// The scalar replicas each field's registered kernels must match.
+/// At least one replica per field must be defined in the kernels file.
+fn replicas_for(field: &str) -> &'static [&'static str] {
+    match field {
+        "micro_4x8" => &["micro_4x8_ref", "micro_4x8_portable"],
+        "micro_4x8_epi" => &["micro_4x8_ref_epi", "micro_4x8_portable_epi"],
+        "routing_dot" => &["routing_dot_scalar"],
+        "quant_row" => &["quantize_row_q8_scalar"],
+        "tile" | "tile_x2" | "tile_leaf" => &["tile_i8_scalar"],
+        _ => &[],
+    }
+}
+
+/// A registered dispatch entry: table field + function identifier.
+struct Registration {
+    field: String,
+    func: String,
+    line: usize,
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(kernels) = files.iter().find(|f| f.path.ends_with("tensor/kernels.rs")) else {
+        // Fixture sets without a kernels file have nothing to audit.
+        return findings;
+    };
+    let kernels_code = kernels.code_text();
+    let corpus = test_corpus(files);
+    for reg in registrations(kernels) {
+        for replica in replicas_for(&reg.field) {
+            if !contains_ident(&kernels_code, replica) {
+                findings.push(Finding::new(
+                    RULE_REPLICA,
+                    &kernels.path,
+                    reg.line,
+                    &format!(
+                        "dispatch field `{}` registers `{}` but its scalar replica \
+                         `{replica}` is not defined in the kernels module",
+                        reg.field, reg.func
+                    ),
+                ));
+            }
+        }
+        let base = reg.func.strip_suffix("_entry").unwrap_or(&reg.func);
+        if !contains_ident(&corpus, base) && !contains_ident(&corpus, &reg.func) {
+            findings.push(Finding::new(
+                RULE_TEST_REF,
+                &kernels.path,
+                reg.line,
+                &format!(
+                    "dispatch field `{}` registers `{}` but no test references \
+                     `{base}` by name (tests/*.rs or a #[cfg(test)] region)",
+                    reg.field, reg.func
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+/// Every `field: func` pair inside `KernelTable { .. }` / `I8Kernels
+/// { .. }` literals (skipping `I8Kernels` type ascriptions etc. by
+/// requiring the literal-brace form).
+fn registrations(kernels: &SourceFile) -> Vec<Registration> {
+    let mut out = Vec::new();
+    for (kind, fields) in [("KernelTable", TABLE_FIELDS), ("I8Kernels", I8_FIELDS)] {
+        for (i, line) in kernels.code.iter().enumerate() {
+            for at in super::source::ident_positions(line, kind) {
+                let after = line[at + kind.len()..].trim_start();
+                if !after.starts_with('{') {
+                    continue;
+                }
+                // `struct KernelTable {`, `impl KernelTable {`, and
+                // `-> KernelTable {` (a fn signature whose *body* brace
+                // follows) are not literals.
+                let before = line[..at].trim_end();
+                if before.ends_with("struct")
+                    || before.ends_with("impl")
+                    || before.ends_with("->")
+                    || before.ends_with("dyn")
+                {
+                    continue;
+                }
+                let col = line[at..].find('{').map(|o| at + o).unwrap();
+                let Some((end_line, _)) = super::source::matching_brace(&kernels.code, i, col)
+                else {
+                    continue;
+                };
+                for (j, body_line) in
+                    kernels.code.iter().enumerate().take(end_line + 1).skip(i)
+                {
+                    for &field in fields {
+                        if let Some(func) = field_value(body_line, field) {
+                            out.push(Registration { field: field.into(), func, line: j + 1 });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse `field: ident`, `field: Some(ident)`, or `field: &ident` from a
+/// struct-literal line; `None` for `field: None` and non-identifier
+/// values.
+fn field_value(line: &str, field: &str) -> Option<String> {
+    let t = line.trim_start();
+    let rest = t.strip_prefix(field)?;
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let rest = rest.strip_prefix("Some(").unwrap_or(rest);
+    let rest = rest.strip_prefix('&').unwrap_or(rest);
+    let ident: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if ident.is_empty() || ident == "None" {
+        return None;
+    }
+    Some(ident)
+}
+
+/// Concatenated test text: all of `tests/` plus everything from the
+/// first `#[cfg(test)]` marker to EOF in each `src/` file (test mods sit
+/// at file end by repo convention).
+fn test_corpus(files: &[SourceFile]) -> String {
+    let mut corpus = String::new();
+    for f in files {
+        if f.path.starts_with("tests/") {
+            corpus.push_str(&f.code_text());
+            corpus.push('\n');
+        } else if f.path.starts_with("src/") {
+            if let Some(at) = f.lines.iter().position(|l| l.contains("#[cfg(test)]")) {
+                for l in &f.code[at..] {
+                    corpus.push_str(l);
+                    corpus.push('\n');
+                }
+            }
+        }
+    }
+    corpus
+}

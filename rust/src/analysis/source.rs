@@ -1,0 +1,290 @@
+//! Lightweight Rust source scanner for the audit rules (std-only).
+//!
+//! The rules need just enough lexical structure to be trustworthy:
+//! which bytes are *code* versus comment/string, and where braces
+//! balance. This module produces, per file, the original lines plus a
+//! parallel `code` view in which comments and literal *contents* are
+//! blanked out (replaced by spaces, structure preserved), so rule
+//! regexes can match `unsafe`, `for`, `.run(` etc. without being fooled
+//! by a string literal or a doc comment that merely mentions them. The
+//! original lines stay available for the one thing comments are
+//! load-bearing for: `// SAFETY:` detection.
+
+/// One scanned source file: original text and the code-only view.
+pub struct SourceFile {
+    /// Repo-relative, `/`-separated path (e.g. `src/tensor/pool.rs`).
+    pub path: String,
+    /// Original lines, verbatim.
+    pub lines: Vec<String>,
+    /// Lines with comments and string/char contents blanked to spaces.
+    /// Same line count and per-line byte length as `lines`.
+    pub code: Vec<String>,
+}
+
+/// Lexer state carried across lines.
+enum Mode {
+    Code,
+    Block(u32),
+    Str,
+    RawStr(u32),
+}
+
+impl SourceFile {
+    pub fn from_text(path: &str, text: &str) -> SourceFile {
+        let lines: Vec<String> = text.split('\n').map(str::to_string).collect();
+        let code = blank_noise(&lines);
+        SourceFile { path: path.replace('\\', "/"), lines, code }
+    }
+
+    /// Whole code view joined with `\n` (for multi-line regex-ish scans).
+    pub fn code_text(&self) -> String {
+        self.code.join("\n")
+    }
+
+    /// True if the original line `i` is a comment line (`//` or `///`).
+    pub fn is_comment_line(&self, i: usize) -> bool {
+        let t = self.lines[i].trim_start();
+        t.starts_with("//")
+    }
+
+    /// True if the original line `i` is an attribute line (`#[...]` /
+    /// `#![...]`).
+    pub fn is_attr_line(&self, i: usize) -> bool {
+        let t = self.lines[i].trim_start();
+        t.starts_with("#[") || t.starts_with("#![")
+    }
+}
+
+/// Blank comments and literal contents out of `lines`, preserving line
+/// structure and byte offsets. Handles `//` comments, nested `/* */`,
+/// plain and raw strings, and simple char literals; that is the full
+/// lexical surface this crate uses.
+fn blank_noise(lines: &[String]) -> Vec<String> {
+    let mut out = Vec::with_capacity(lines.len());
+    let mut mode = Mode::Code;
+    for line in lines {
+        let b = line.as_bytes();
+        let mut o: Vec<u8> = Vec::with_capacity(b.len());
+        let mut i = 0usize;
+        while i < b.len() {
+            match mode {
+                Mode::Block(depth) => {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        mode = Mode::Block(depth + 1);
+                        o.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                        o.extend_from_slice(b"  ");
+                        i += 2;
+                    } else {
+                        o.push(b' ');
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if b[i] == b'\\' && i + 1 < b.len() {
+                        o.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        mode = Mode::Code;
+                        o.push(b'"');
+                        i += 1;
+                    } else {
+                        o.push(b' ');
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if b[i] == b'"' {
+                        let h = hashes as usize;
+                        if i + 1 + h <= b.len() && b[i + 1..i + 1 + h].iter().all(|&c| c == b'#') {
+                            mode = Mode::Code;
+                            o.push(b'"');
+                            o.extend(std::iter::repeat_n(b'#', h));
+                            i += 1 + h;
+                        } else {
+                            o.push(b' ');
+                            i += 1;
+                        }
+                    } else {
+                        o.push(b' ');
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        // Line comment: blank the rest of the line.
+                        o.extend(std::iter::repeat_n(b' ', b.len() - i));
+                        i = b.len();
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        mode = Mode::Block(1);
+                        o.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        mode = Mode::Str;
+                        o.push(b'"');
+                        i += 1;
+                    } else if b[i] == b'r'
+                        && i + 1 < b.len()
+                        && (b[i + 1] == b'"' || b[i + 1] == b'#')
+                        && !prev_is_ident(&o)
+                    {
+                        let mut h = 0usize;
+                        while i + 1 + h < b.len() && b[i + 1 + h] == b'#' {
+                            h += 1;
+                        }
+                        if i + 1 + h < b.len() && b[i + 1 + h] == b'"' {
+                            mode = Mode::RawStr(h as u32);
+                            o.push(b'r');
+                            o.extend(std::iter::repeat_n(b'#', h));
+                            o.push(b'"');
+                            i += 2 + h;
+                        } else {
+                            o.push(b[i]);
+                            i += 1;
+                        }
+                    } else if b[i] == b'\'' {
+                        // Char literal vs lifetime: a literal closes with
+                        // `'` within a few bytes (`'x'`, `'\n'`, `'\u{..}'`).
+                        if let Some(close) = char_literal_end(b, i) {
+                            o.push(b'\'');
+                            o.extend(std::iter::repeat_n(b' ', close - i - 1));
+                            o.push(b'\'');
+                            i = close + 1;
+                        } else {
+                            o.push(b'\'');
+                            i += 1;
+                        }
+                    } else {
+                        o.push(b[i]);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // A line comment never spans lines; `Mode::Str` legitimately can
+        // (multi-line string literals) and the state carries over.
+        out.push(String::from_utf8(o).expect("blanking preserves UTF-8 boundaries"));
+    }
+    out
+}
+
+fn prev_is_ident(o: &[u8]) -> bool {
+    o.last().is_some_and(|&c| c == b'_' || c.is_ascii_alphanumeric())
+}
+
+/// If `b[start]` opens a char literal, return the index of its closing
+/// quote; `None` for lifetimes like `'static`.
+fn char_literal_end(b: &[u8], start: usize) -> Option<usize> {
+    let mut j = start + 1;
+    if j < b.len() && b[j] == b'\\' {
+        // Escape: find the next `'`, bounded (covers `\u{1F600}`).
+        let lim = (start + 12).min(b.len());
+        while j < lim {
+            j += 1;
+            if j < b.len() && b[j] == b'\'' {
+                return Some(j);
+            }
+        }
+        return None;
+    }
+    // Plain char: exactly one scalar then `'`. Multi-byte UTF-8 ok.
+    let mut k = j;
+    while k < b.len() && k < j + 4 && (b[k] & 0xC0) == 0x80 || k == j {
+        k += 1;
+    }
+    if k < b.len() && b[k] == b'\'' && k > j {
+        return Some(k);
+    }
+    None
+}
+
+/// Find the matching `}` for the `{` at (`line`, `col`) in `code`.
+/// Returns `(line, col)` of the closing brace, or `None` if unbalanced.
+pub fn matching_brace(code: &[String], line: usize, col: usize) -> Option<(usize, usize)> {
+    let mut depth = 0i64;
+    for (li, l) in code.iter().enumerate().skip(line) {
+        let start = if li == line { col } else { 0 };
+        for (ci, ch) in l.bytes().enumerate().skip(start) {
+            match ch {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((li, ci));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Byte offsets of every match of identifier `word` in `text`, matched
+/// on identifier boundaries (`[A-Za-z0-9_]`).
+pub fn ident_positions(text: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let tb = text.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = text[from..].find(word) {
+        let at = from + rel;
+        let before_ok =
+            at == 0 || !(tb[at - 1] == b'_' || tb[at - 1].is_ascii_alphanumeric());
+        let after = at + word.len();
+        let after_ok =
+            after >= tb.len() || !(tb[after] == b'_' || tb[after].is_ascii_alphanumeric());
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+/// True if identifier `word` occurs anywhere in `text`.
+pub fn contains_ident(text: &str, word: &str) -> bool {
+    !ident_positions(text, word).is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let f = SourceFile::from_text(
+            "src/x.rs",
+            "let s = \"unsafe { }\"; // unsafe here too\nlet c = '{';\n/* unsafe\n spans */ let x = 1;",
+        );
+        assert!(!f.code[0].contains("unsafe"));
+        assert!(f.code[0].contains("let s ="));
+        assert!(!f.code[1].contains('{'));
+        assert!(!f.code[2].contains("unsafe"));
+        assert!(f.code[3].contains("let x = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let f = SourceFile::from_text(
+            "src/x.rs",
+            "let r = r#\"for x in map { }\"#;\nfn f<'a>(x: &'a str) {}",
+        );
+        assert!(!f.code[0].contains("for"));
+        assert!(f.code[1].contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn brace_matching() {
+        let f = SourceFile::from_text("src/x.rs", "fn f() {\n  if x { y(); }\n}");
+        let open = f.code[0].find('{').unwrap();
+        assert_eq!(matching_brace(&f.code, 0, open), Some((2, 0)));
+    }
+
+    #[test]
+    fn ident_boundaries() {
+        assert!(contains_ident("call(micro_4x8_ref)", "micro_4x8_ref"));
+        assert!(!contains_ident("micro_4x8_ref_epi", "micro_4x8_ref"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Rule family 1: the unsafe audit.
+//!
+//! Three hard errors, mirroring the repo's safety story:
+//!
+//! 1. **Containment** — `unsafe` may appear only in the allowlisted
+//!    modules ([`UNSAFE_ALLOWLIST`]): the SIMD kernels, the packed GEMM
+//!    drivers, the pool, the scratch arenas, the `nn::fff` gather/shard
+//!    paths, and the counting allocator of the alloc-regression harness.
+//!    Anything else must be written in safe Rust (and historically is).
+//! 2. **Documentation** — every `unsafe` block / `unsafe impl` carries a
+//!    `// SAFETY:` comment directly above it (attributes and further
+//!    comment lines may intervene); every `unsafe fn` carries either a
+//!    `/// # Safety` doc section or a `// SAFETY:` comment. The comment
+//!    must state the pointer/aliasing/ISA precondition — the analyzer
+//!    can only check presence, but clippy's
+//!    `undocumented_unsafe_blocks` backs this same contract in CI.
+//! 3. **Crate lint** — `src/lib.rs` must carry
+//!    `#![deny(unsafe_op_in_unsafe_fn)]`, so an `unsafe fn` body gets no
+//!    implicit blanket permission: each unsafe operation needs its own
+//!    commented block.
+//!
+//! `unsafe fn` *types* (`type T = unsafe fn(..)`, fn-pointer fields,
+//! `-> unsafe fn`) declare contracts rather than perform operations and
+//! are exempt.
+
+use super::source::SourceFile;
+use super::Finding;
+
+/// Files allowed to contain `unsafe` (repo-relative, `/`-separated).
+/// Extending it is a deliberate act: add the path here *and* document
+/// the module's aliasing model in EXPERIMENTS.md §Analysis.
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "src/tensor/kernels.rs",
+    "src/tensor/gemm.rs",
+    "src/tensor/pool.rs",
+    "src/tensor/scratch.rs",
+    "src/nn/fff.rs",
+    "tests/alloc_regression.rs",
+];
+
+const RULE_ALLOWLIST: &str = "unsafe-outside-allowlist";
+const RULE_UNDOCUMENTED: &str = "undocumented-unsafe";
+const RULE_CRATE_LINT: &str = "missing-unsafe-op-lint";
+
+/// Kinds of `unsafe` occurrence the scanner distinguishes.
+#[derive(PartialEq)]
+enum Site {
+    Block,
+    Fn,
+    Impl,
+    TypePosition,
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut saw_lib = false;
+    for f in files {
+        if f.path == "src/lib.rs" {
+            saw_lib = true;
+            let has_lint = f
+                .code
+                .iter()
+                .zip(&f.lines)
+                .any(|(_, l)| l.contains("#![deny(unsafe_op_in_unsafe_fn)]"));
+            if !has_lint {
+                findings.push(Finding::new(
+                    RULE_CRATE_LINT,
+                    &f.path,
+                    1,
+                    "src/lib.rs must carry #![deny(unsafe_op_in_unsafe_fn)]",
+                ));
+            }
+        }
+        for (i, code_line) in f.code.iter().enumerate() {
+            for col in super::source::ident_positions(code_line, "unsafe") {
+                let site = classify(f, i, col);
+                if site == Site::TypePosition {
+                    continue;
+                }
+                if !UNSAFE_ALLOWLIST.contains(&f.path.as_str()) {
+                    findings.push(Finding::new(
+                        RULE_ALLOWLIST,
+                        &f.path,
+                        i + 1,
+                        "unsafe outside the allowlisted modules (see \
+                         analysis::unsafe_audit::UNSAFE_ALLOWLIST)",
+                    ));
+                }
+                let documented = match site {
+                    Site::Fn => has_safety_comment(f, i) || has_safety_doc(f, i),
+                    _ => has_safety_comment(f, i),
+                };
+                if !documented {
+                    findings.push(Finding::new(
+                        RULE_UNDOCUMENTED,
+                        &f.path,
+                        i + 1,
+                        "unsafe without a // SAFETY: comment (unsafe fn \
+                         alternatively takes a /// # Safety doc section)",
+                    ));
+                }
+            }
+        }
+    }
+    let _ = saw_lib; // fixture sets may omit lib.rs entirely; that's fine
+    findings
+}
+
+/// Classify the `unsafe` token at (`line`, `col`) of the code view by
+/// what *follows* it: `impl`/`trait`, `fn name` (a declaration),
+/// `fn(` (a fn-pointer type), or anything else (an unsafe block —
+/// including `= unsafe {` expression positions).
+fn classify(f: &SourceFile, line: usize, col: usize) -> Site {
+    let mut after = f.code[line][col + "unsafe".len()..].trim_start().to_string();
+    let mut li = line;
+    while after.is_empty() && li + 1 < f.code.len() {
+        li += 1;
+        after = f.code[li].trim_start().to_string();
+    }
+    if after.starts_with("impl") || after.starts_with("trait") {
+        return Site::Impl;
+    }
+    if let Some(rest) = after.strip_prefix("fn") {
+        if rest.trim_start().starts_with('(') {
+            return Site::TypePosition;
+        }
+        return Site::Fn;
+    }
+    Site::Block
+}
+
+/// Walk upward from the unsafe site looking for `needle` in a comment.
+/// Skips comment lines, attribute lines, and statement-continuation
+/// heads (a code line ending in `=`, `(`, `,`, or an operator — the
+/// comment legitimately sits above the whole wrapped statement, which
+/// is also where clippy's `undocumented_unsafe_blocks` accepts it).
+fn comment_above_contains(f: &SourceFile, line: usize, needle: &str) -> bool {
+    let mut i = line;
+    while i > 0 {
+        i -= 1;
+        if f.is_comment_line(i) {
+            if f.lines[i].contains(needle) {
+                return true;
+            }
+            continue;
+        }
+        if f.is_attr_line(i) {
+            continue;
+        }
+        let code = f.code[i].trim_end();
+        let continuation = code.ends_with('=')
+            || code.ends_with('(')
+            || code.ends_with(',')
+            || code.ends_with("&&")
+            || code.ends_with("||")
+            || code.ends_with('+');
+        if !continuation {
+            return false;
+        }
+    }
+    false
+}
+
+/// `// SAFETY:` comment above an unsafe block/impl.
+fn has_safety_comment(f: &SourceFile, line: usize) -> bool {
+    comment_above_contains(f, line, "SAFETY:")
+}
+
+/// `/// # Safety` doc section above an `unsafe fn`.
+fn has_safety_doc(f: &SourceFile, line: usize) -> bool {
+    comment_above_contains(f, line, "# Safety")
+}

@@ -27,6 +27,12 @@
 //! println!("G_A = {:.1}%", outcome.generalization_accuracy * 100.0);
 //! ```
 
+// Every unsafe operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own `// SAFETY:` comment — the audit unit
+// `fff analyze` (and CI clippy's `undocumented_unsafe_blocks`) key off.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -6,6 +6,7 @@
 //!            [--workers N] [--threads N] [--precision f32|int8] [--config serve.kv]
 //! fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6|quant> [--scale paper]
 //! fff info                      # artifact manifest summary
+//! fff analyze [--root PATH]     # unsafe audit + kernel parity + determinism lints
 //! ```
 
 use fastfeedforward::bench::Scale;
@@ -28,12 +29,16 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("info") => cmd_info(),
+        Some("analyze") => {
+            let code = fastfeedforward::analysis::run_cli(args.get("root"));
+            std::process::exit(code);
+        }
         _ => usage(),
     }
 }
 
 fn usage() -> ! {
-    eprintln!("usage: fff <train|serve|reproduce|info> [options]");
+    eprintln!("usage: fff <train|serve|reproduce|info|analyze> [options]");
     eprintln!("  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8");
     eprintln!(
         "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0 \
@@ -43,6 +48,7 @@ fn usage() -> ! {
         "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6|quant  (FFF_SCALE=paper for full grid)"
     );
     eprintln!("  info");
+    eprintln!("  analyze    [--root PATH]  (unsafe audit + kernel parity + determinism lints)");
     std::process::exit(2);
 }
 

@@ -625,7 +625,10 @@ impl Fff {
                     for r in r0..r1 {
                         let zrow = z.row(r);
                         let wrow = cur.row(r);
+                        // SAFETY: row `r` of probs lies in this shard's
+                        // exclusive r0..r1 band (see above).
                         let prow = unsafe { from_raw_parts_mut(pptr.0.add(r * width), width) };
+                        // SAFETY: row `r` of next, same exclusive band.
                         let nrow =
                             unsafe { from_raw_parts_mut(nptr.0.add(r * 2 * width), 2 * width) };
                         for i in 0..width {
@@ -791,8 +794,11 @@ impl Fff {
                                 wall,
                                 Epilogue::None,
                             );
+                            // SAFETY: row `r` of g lies in this shard's
+                            // exclusive r0..r1 band (see above).
                             let grow =
                                 unsafe { from_raw_parts_mut(gptr.0.add(r * n_leaves), n_leaves) };
+                            // SAFETY: row `r` of da1_all, same band.
                             let darow = unsafe { from_raw_parts_mut(daptr.0.add(r * wall), wall) };
                             for j in 0..n_leaves {
                                 let w = crow[j];
@@ -887,6 +893,7 @@ impl Fff {
                         let grow = g.row(r);
                         // SAFETY: shards own disjoint rows of g_up/dz.
                         let gup = unsafe { from_raw_parts_mut(guptr.0.add(r * width), width) };
+                        // SAFETY: row `r` of dz, same exclusive band.
                         let dzrow = unsafe { from_raw_parts_mut(dzptr.0.add(r * width), width) };
                         for i in 0..width {
                             let gl = grow[2 * i];

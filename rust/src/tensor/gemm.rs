@@ -611,7 +611,9 @@ pub(crate) unsafe fn gemm_bias_scatter_raw(
     debug_assert!(bv.len() >= k * n, "gemm_bias_scatter: short B");
     debug_assert_eq!(bias.len(), n, "gemm_bias_scatter: bias length");
     for (i, &r) in rows.iter().enumerate() {
-        let dst = std::slice::from_raw_parts_mut(y.add(r * n), n);
+        // SAFETY: row `r` is in bounds of the `y` buffer and exclusively
+        // ours while this runs, per this function's `# Safety` contract.
+        let dst = unsafe { std::slice::from_raw_parts_mut(y.add(r * n), n) };
         dst.copy_from_slice(bias);
         for (p, &xv) in av[i * k..(i + 1) * k].iter().enumerate() {
             if xv != 0.0 {
@@ -857,102 +859,108 @@ unsafe fn gemm_quant_core(
     c: *mut f32,
     rows_out: Option<&[usize]>,
 ) {
-    static ZB: [f32; 2 * NR] = [0.0; 2 * NR];
-    if m == 0 {
-        return;
-    }
-    let n = b.n;
-    let kg = b.kg;
-    let astride = kg * QK;
-    let n_panels = b.scales.len();
-    let relu = matches!(epi, Epilogue::BiasRelu(_));
-    let bias_base: *const f32 = match epi {
-        Epilogue::None => ZB.as_ptr(),
-        Epilogue::Bias(bb) | Epilogue::BiasRelu(bb) => bb.as_ptr(),
-    };
-    let zero_bias = matches!(epi, Epilogue::None);
-    debug_assert!(qa.len() >= m.div_ceil(MR) * MR * astride, "gemm_quant_core: short qa");
-    debug_assert!(sa.len() >= m, "gemm_quant_core: short sa");
-    let mp = m.div_ceil(MR);
-    for ip in 0..mp {
-        let r0 = ip * MR;
-        let mr = MR.min(m - r0);
-        let ap = qa.as_ptr().add(r0 * astride);
-        let sp = sa.as_ptr().add(r0);
-        // Per-row output offsets; pad slots clamp to the last real row
-        // (the tiles never store them, but SIMD stores are emitted for
-        // all MR slots before the `mr` guard prunes — the clamped
-        // offset keeps the dead slots pointing at valid memory).
-        let mut roff = [0usize; MR];
-        for (r, slot) in roff.iter_mut().enumerate() {
-            let rr = (r0 + r).min(m - 1);
-            *slot = match rows_out {
-                Some(ro) => ro[rr] * n,
-                None => rr * n,
-            };
+    // SAFETY: caller contract (`# Safety` above): `qa`/`sa` cover the padded
+    // `m` rows (debug-asserted), each `roff` slot points at an in-bounds
+    // output row that no other thread touches, and the tiles' own
+    // contracts are met by the packed shapes `b` carries.
+    unsafe {
+        static ZB: [f32; 2 * NR] = [0.0; 2 * NR];
+        if m == 0 {
+            return;
         }
-        let mut jp = 0usize;
-        if let Some(tx2) = ks.tile_x2 {
-            while jp + 2 <= n_panels && n - jp * NR >= 2 * NR {
+        let n = b.n;
+        let kg = b.kg;
+        let astride = kg * QK;
+        let n_panels = b.scales.len();
+        let relu = matches!(epi, Epilogue::BiasRelu(_));
+        let bias_base: *const f32 = match epi {
+            Epilogue::None => ZB.as_ptr(),
+            Epilogue::Bias(bb) | Epilogue::BiasRelu(bb) => bb.as_ptr(),
+        };
+        let zero_bias = matches!(epi, Epilogue::None);
+        debug_assert!(qa.len() >= m.div_ceil(MR) * MR * astride, "gemm_quant_core: short qa");
+        debug_assert!(sa.len() >= m, "gemm_quant_core: short sa");
+        let mp = m.div_ceil(MR);
+        for ip in 0..mp {
+            let r0 = ip * MR;
+            let mr = MR.min(m - r0);
+            let ap = qa.as_ptr().add(r0 * astride);
+            let sp = sa.as_ptr().add(r0);
+            // Per-row output offsets; pad slots clamp to the last real row
+            // (the tiles never store them, but SIMD stores are emitted for
+            // all MR slots before the `mr` guard prunes — the clamped
+            // offset keeps the dead slots pointing at valid memory).
+            let mut roff = [0usize; MR];
+            for (r, slot) in roff.iter_mut().enumerate() {
+                let rr = (r0 + r).min(m - 1);
+                *slot = match rows_out {
+                    Some(ro) => ro[rr] * n,
+                    None => rr * n,
+                };
+            }
+            let mut jp = 0usize;
+            if let Some(tx2) = ks.tile_x2 {
+                while jp + 2 <= n_panels && n - jp * NR >= 2 * NR {
+                    let j0 = jp * NR;
+                    let bj = if zero_bias { ZB.as_ptr() } else { bias_base.add(j0) };
+                    tx2(
+                        kg,
+                        ap,
+                        astride,
+                        b.panel(jp).as_ptr(),
+                        b.panel(jp + 1).as_ptr(),
+                        b.corr_panel(jp).as_ptr(),
+                        b.corr_panel(jp + 1).as_ptr(),
+                        sp,
+                        b.scales[jp],
+                        b.scales[jp + 1],
+                        bj,
+                        relu,
+                        c.add(j0),
+                        roff.as_ptr(),
+                        mr,
+                    );
+                    jp += 2;
+                }
+            }
+            while jp < n_panels {
                 let j0 = jp * NR;
+                let nr = NR.min(n - j0);
                 let bj = if zero_bias { ZB.as_ptr() } else { bias_base.add(j0) };
-                tx2(
-                    kg,
-                    ap,
-                    astride,
-                    b.panel(jp).as_ptr(),
-                    b.panel(jp + 1).as_ptr(),
-                    b.corr_panel(jp).as_ptr(),
-                    b.corr_panel(jp + 1).as_ptr(),
-                    sp,
-                    b.scales[jp],
-                    b.scales[jp + 1],
-                    bj,
-                    relu,
-                    c.add(j0),
-                    roff.as_ptr(),
-                    mr,
-                );
-                jp += 2;
+                if nr == NR {
+                    (ks.tile)(
+                        kg,
+                        ap,
+                        astride,
+                        b.panel(jp).as_ptr(),
+                        b.corr_panel(jp).as_ptr(),
+                        sp,
+                        b.scales[jp],
+                        bj,
+                        relu,
+                        c.add(j0),
+                        roff.as_ptr(),
+                        mr,
+                    );
+                } else {
+                    kernels::tile_i8_scalar(
+                        kg,
+                        ap,
+                        astride,
+                        b.panel(jp).as_ptr(),
+                        b.corr_panel(jp).as_ptr(),
+                        sp,
+                        b.scales[jp],
+                        bj,
+                        relu,
+                        c.add(j0),
+                        roff.as_ptr(),
+                        mr,
+                        nr,
+                    );
+                }
+                jp += 1;
             }
-        }
-        while jp < n_panels {
-            let j0 = jp * NR;
-            let nr = NR.min(n - j0);
-            let bj = if zero_bias { ZB.as_ptr() } else { bias_base.add(j0) };
-            if nr == NR {
-                (ks.tile)(
-                    kg,
-                    ap,
-                    astride,
-                    b.panel(jp).as_ptr(),
-                    b.corr_panel(jp).as_ptr(),
-                    sp,
-                    b.scales[jp],
-                    bj,
-                    relu,
-                    c.add(j0),
-                    roff.as_ptr(),
-                    mr,
-                );
-            } else {
-                kernels::tile_i8_scalar(
-                    kg,
-                    ap,
-                    astride,
-                    b.panel(jp).as_ptr(),
-                    b.corr_panel(jp).as_ptr(),
-                    sp,
-                    b.scales[jp],
-                    bj,
-                    relu,
-                    c.add(j0),
-                    roff.as_ptr(),
-                    mr,
-                    nr,
-                );
-            }
-            jp += 1;
         }
     }
 }
@@ -1071,16 +1079,20 @@ pub(crate) unsafe fn gemm_quant_scatter_prequant(
     if rows.is_empty() {
         return;
     }
-    gemm_quant_core(
-        qa1,
-        sa1,
-        rows.len(),
-        b,
-        Epilogue::Bias(bias),
-        kernels::active_i8(),
-        y,
-        Some(rows),
-    );
+    // SAFETY: the output-row and qa1/sa1 shape obligations are exactly
+    // this function's `# Safety` contract, forwarded to the core.
+    unsafe {
+        gemm_quant_core(
+            qa1,
+            sa1,
+            rows.len(),
+            b,
+            Epilogue::Bias(bias),
+            kernels::active_i8(),
+            y,
+            Some(rows),
+        );
+    }
 }
 
 /// Whether the register-fused leaf path can serve leaf width `ell`:

@@ -213,6 +213,10 @@ fn env_default() -> KernelKind {
             eprintln!("FFF_GEMM_KERNEL: unknown kernel {v:?} (want packed|banded|serial); using packed");
             KernelKind::Packed
         }),
+        // Under Miri the default kind is the scalar serial path (the
+        // cfg(miri) shim — EXPERIMENTS.md §Analysis); forced-kernel
+        // tests still exercise the packed drivers explicitly.
+        Err(_) if cfg!(miri) => KernelKind::Serial,
         Err(_) => KernelKind::Packed,
     })
 }
@@ -464,6 +468,20 @@ pub fn table() -> &'static KernelTable {
 }
 
 fn detect() -> KernelTable {
+    // Miri cannot execute `target_feature` intrinsics, so detection
+    // short-circuits to the portable table there — every kernel the
+    // interpreter runs is plain safe-or-audited Rust, while the
+    // dispatch/packing drivers above the table stay fully exercised.
+    if cfg!(miri) {
+        return KernelTable {
+            isa: "portable",
+            fused_tile: false,
+            micro_4x8: micro_4x8_portable,
+            micro_4x8_epi: micro_4x8_portable_epi,
+            routing_dot: routing_dot_scalar,
+            i8k: &I8_SCALAR,
+        };
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
@@ -724,6 +742,12 @@ fn micro_4x8_epi_avx2fma_entry(
 /// [`micro_4x8_ref`]. Measured 62.8/65.6 GF/s serial at 256³/512³ under
 /// the compiler whose auto-vectorized tile ran at 11.7 GF/s
 /// (EXPERIMENTS.md §Perf iteration 3).
+///
+/// # Safety
+///
+/// avx2+fma must be runtime-verified by the caller, `ap`/`bp` must hold
+/// `kc` full MR-/NR-groups, and `cv` must cover the `mr`-row tile at
+/// stride `n` — the `_entry` wrapper asserts all of this.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn micro_4x8_avx2fma(
@@ -736,73 +760,79 @@ unsafe fn micro_4x8_avx2fma(
     nr: usize,
     epi: Epilogue,
 ) {
-    use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_and_ps, _mm256_broadcast_ss, _mm256_cmp_ps, _mm256_fmadd_ps,
-        _mm256_loadu_ps, _mm256_setzero_ps, _mm256_storeu_ps, _CMP_GT_OQ,
-    };
-    let apt = ap.as_ptr();
-    let bpt = bp.as_ptr();
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
-    let mut acc2 = _mm256_setzero_ps();
-    let mut acc3 = _mm256_setzero_ps();
-    for p in 0..kc {
-        let b = _mm256_loadu_ps(bpt.add(p * NR));
-        let a = apt.add(p * MR);
-        acc0 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a), b, acc0);
-        acc1 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(1)), b, acc1);
-        acc2 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(2)), b, acc2);
-        acc3 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(3)), b, acc3);
-    }
-    if nr == NR {
-        // Full-width tile: vector read-modify-write per C row, with the
-        // epilogue fused into the same store. The ReLU select is
-        // `and(t, t > 0)` — bit-identical to [`relu_store`] (NaN and
-        // -0.0 both mask to +0.0).
-        let c = cv.as_mut_ptr();
-        let zero = _mm256_setzero_ps();
-        let (bias, relu, fused) = match epi {
-            Epilogue::None => (zero, false, false),
-            Epilogue::Bias(b) => (_mm256_loadu_ps(b.as_ptr()), false, true),
-            Epilogue::BiasRelu(b) => (_mm256_loadu_ps(b.as_ptr()), true, true),
+    // SAFETY: caller contract: avx2+fma are present and `ap`/`bp` hold `kc`
+    // full MR-/NR-groups while `cv` covers the `mr`-row tile at stride
+    // `n` — the `*_entry` wrapper asserts all of this before delegating.
+    // Every pointer formed below stays inside those slices.
+    unsafe {
+        use std::arch::x86_64::{
+            _mm256_add_ps, _mm256_and_ps, _mm256_broadcast_ss, _mm256_cmp_ps, _mm256_fmadd_ps,
+            _mm256_loadu_ps, _mm256_setzero_ps, _mm256_storeu_ps, _CMP_GT_OQ,
         };
-        macro_rules! store_row {
-            ($off:expr, $acc:expr) => {{
-                let cr = c.add($off);
-                let mut t = _mm256_add_ps(_mm256_loadu_ps(cr), $acc);
-                if fused {
-                    t = _mm256_add_ps(t, bias);
+        let apt = ap.as_ptr();
+        let bpt = bp.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        for p in 0..kc {
+            let b = _mm256_loadu_ps(bpt.add(p * NR));
+            let a = apt.add(p * MR);
+            acc0 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a), b, acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(1)), b, acc1);
+            acc2 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(2)), b, acc2);
+            acc3 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(3)), b, acc3);
+        }
+        if nr == NR {
+            // Full-width tile: vector read-modify-write per C row, with the
+            // epilogue fused into the same store. The ReLU select is
+            // `and(t, t > 0)` — bit-identical to [`relu_store`] (NaN and
+            // -0.0 both mask to +0.0).
+            let c = cv.as_mut_ptr();
+            let zero = _mm256_setzero_ps();
+            let (bias, relu, fused) = match epi {
+                Epilogue::None => (zero, false, false),
+                Epilogue::Bias(b) => (_mm256_loadu_ps(b.as_ptr()), false, true),
+                Epilogue::BiasRelu(b) => (_mm256_loadu_ps(b.as_ptr()), true, true),
+            };
+            macro_rules! store_row {
+                ($off:expr, $acc:expr) => {{
+                    let cr = c.add($off);
+                    let mut t = _mm256_add_ps(_mm256_loadu_ps(cr), $acc);
+                    if fused {
+                        t = _mm256_add_ps(t, bias);
+                    }
+                    if relu {
+                        t = _mm256_and_ps(t, _mm256_cmp_ps::<_CMP_GT_OQ>(t, zero));
+                    }
+                    _mm256_storeu_ps(cr, t);
+                }};
+            }
+            if mr > 0 {
+                store_row!(0, acc0);
+            }
+            if mr > 1 {
+                store_row!(n, acc1);
+            }
+            if mr > 2 {
+                store_row!(2 * n, acc2);
+            }
+            if mr > 3 {
+                store_row!(3 * n, acc3);
+            }
+        } else {
+            // Edge tile: spill the accumulators once, then masked scalar
+            // writeback through the epilogue (the loop above never took
+            // their address).
+            let mut t = [[0.0f32; NR]; MR];
+            _mm256_storeu_ps(t[0].as_mut_ptr(), acc0);
+            _mm256_storeu_ps(t[1].as_mut_ptr(), acc1);
+            _mm256_storeu_ps(t[2].as_mut_ptr(), acc2);
+            _mm256_storeu_ps(t[3].as_mut_ptr(), acc3);
+            for (r, row) in t.iter().enumerate().take(mr) {
+                for (j, &s) in row.iter().enumerate().take(nr) {
+                    cv[r * n + j] = epi.apply(j, cv[r * n + j] + s);
                 }
-                if relu {
-                    t = _mm256_and_ps(t, _mm256_cmp_ps::<_CMP_GT_OQ>(t, zero));
-                }
-                _mm256_storeu_ps(cr, t);
-            }};
-        }
-        if mr > 0 {
-            store_row!(0, acc0);
-        }
-        if mr > 1 {
-            store_row!(n, acc1);
-        }
-        if mr > 2 {
-            store_row!(2 * n, acc2);
-        }
-        if mr > 3 {
-            store_row!(3 * n, acc3);
-        }
-    } else {
-        // Edge tile: spill the accumulators once, then masked scalar
-        // writeback through the epilogue (the loop above never took
-        // their address).
-        let mut t = [[0.0f32; NR]; MR];
-        _mm256_storeu_ps(t[0].as_mut_ptr(), acc0);
-        _mm256_storeu_ps(t[1].as_mut_ptr(), acc1);
-        _mm256_storeu_ps(t[2].as_mut_ptr(), acc2);
-        _mm256_storeu_ps(t[3].as_mut_ptr(), acc3);
-        for (r, row) in t.iter().enumerate().take(mr) {
-            for (j, &s) in row.iter().enumerate().take(nr) {
-                cv[r * n + j] = epi.apply(j, cv[r * n + j] + s);
             }
         }
     }
@@ -849,6 +879,12 @@ fn micro_4x8_epi_neon_entry(
 /// `j` accumulates `fma(a_r, b_j, acc)` with `p` ascending — the same
 /// per-lane order as the AVX2 kernel — so NEON output is bit-identical
 /// to [`micro_4x8_ref`] too.
+///
+/// # Safety
+///
+/// neon must be runtime-verified by the caller, `ap`/`bp` must hold
+/// `kc` full MR-/NR-groups, and `cv` must cover the `mr`-row tile at
+/// stride `n` — the `_entry` wrapper asserts all of this.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn micro_4x8_neon(
@@ -861,100 +897,108 @@ unsafe fn micro_4x8_neon(
     nr: usize,
     epi: Epilogue,
 ) {
-    use std::arch::aarch64::{
-        vaddq_f32, vandq_u32, vcgtq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32,
-        vreinterpretq_f32_u32, vreinterpretq_u32_f32, vst1q_f32,
-    };
-    let apt = ap.as_ptr();
-    let bpt = bp.as_ptr();
-    // acc{r}l = lanes 0..4 of row r, acc{r}h = lanes 4..8.
-    let mut acc0l = vdupq_n_f32(0.0);
-    let mut acc0h = vdupq_n_f32(0.0);
-    let mut acc1l = vdupq_n_f32(0.0);
-    let mut acc1h = vdupq_n_f32(0.0);
-    let mut acc2l = vdupq_n_f32(0.0);
-    let mut acc2h = vdupq_n_f32(0.0);
-    let mut acc3l = vdupq_n_f32(0.0);
-    let mut acc3h = vdupq_n_f32(0.0);
-    for p in 0..kc {
-        let bl = vld1q_f32(bpt.add(p * NR));
-        let bh = vld1q_f32(bpt.add(p * NR + 4));
-        let a = apt.add(p * MR);
-        let a0 = vdupq_n_f32(*a);
-        let a1 = vdupq_n_f32(*a.add(1));
-        let a2 = vdupq_n_f32(*a.add(2));
-        let a3 = vdupq_n_f32(*a.add(3));
-        acc0l = vfmaq_f32(acc0l, a0, bl);
-        acc0h = vfmaq_f32(acc0h, a0, bh);
-        acc1l = vfmaq_f32(acc1l, a1, bl);
-        acc1h = vfmaq_f32(acc1h, a1, bh);
-        acc2l = vfmaq_f32(acc2l, a2, bl);
-        acc2h = vfmaq_f32(acc2h, a2, bh);
-        acc3l = vfmaq_f32(acc3l, a3, bl);
-        acc3h = vfmaq_f32(acc3h, a3, bh);
-    }
-    if nr == NR {
-        let c = cv.as_mut_ptr();
-        let zero = vdupq_n_f32(0.0);
-        let (biasl, biash, relu, fused) = match epi {
-            Epilogue::None => (zero, zero, false, false),
-            Epilogue::Bias(b) => (vld1q_f32(b.as_ptr()), vld1q_f32(b.as_ptr().add(4)), false, true),
-            Epilogue::BiasRelu(b) => {
-                (vld1q_f32(b.as_ptr()), vld1q_f32(b.as_ptr().add(4)), true, true)
-            }
+    // SAFETY: caller contract: neon is present and `ap`/`bp` hold `kc` full
+    // MR-/NR-groups while `cv` covers the `mr`-row tile at stride `n` —
+    // the `*_entry` wrapper asserts all of this before delegating. Every
+    // pointer formed below stays inside those slices.
+    unsafe {
+        use std::arch::aarch64::{
+            vaddq_f32, vandq_u32, vcgtq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32,
+            vreinterpretq_f32_u32, vreinterpretq_u32_f32, vst1q_f32,
         };
-        // The ReLU select is `and(t, t > 0)` (vcgtq mask), bit-identical
-        // to [`relu_store`] — NEON's vmaxq would propagate NaN where x86
-        // maxps and the scalar replica return +0.0, so the masked form is
-        // the one that matches across ISAs.
-        macro_rules! store_row {
-            ($off:expr, $accl:expr, $acch:expr) => {{
-                let cr = c.add($off);
-                let mut tl = vaddq_f32(vld1q_f32(cr), $accl);
-                let mut th = vaddq_f32(vld1q_f32(cr.add(4)), $acch);
-                if fused {
-                    tl = vaddq_f32(tl, biasl);
-                    th = vaddq_f32(th, biash);
+        let apt = ap.as_ptr();
+        let bpt = bp.as_ptr();
+        // acc{r}l = lanes 0..4 of row r, acc{r}h = lanes 4..8.
+        let mut acc0l = vdupq_n_f32(0.0);
+        let mut acc0h = vdupq_n_f32(0.0);
+        let mut acc1l = vdupq_n_f32(0.0);
+        let mut acc1h = vdupq_n_f32(0.0);
+        let mut acc2l = vdupq_n_f32(0.0);
+        let mut acc2h = vdupq_n_f32(0.0);
+        let mut acc3l = vdupq_n_f32(0.0);
+        let mut acc3h = vdupq_n_f32(0.0);
+        for p in 0..kc {
+            let bl = vld1q_f32(bpt.add(p * NR));
+            let bh = vld1q_f32(bpt.add(p * NR + 4));
+            let a = apt.add(p * MR);
+            let a0 = vdupq_n_f32(*a);
+            let a1 = vdupq_n_f32(*a.add(1));
+            let a2 = vdupq_n_f32(*a.add(2));
+            let a3 = vdupq_n_f32(*a.add(3));
+            acc0l = vfmaq_f32(acc0l, a0, bl);
+            acc0h = vfmaq_f32(acc0h, a0, bh);
+            acc1l = vfmaq_f32(acc1l, a1, bl);
+            acc1h = vfmaq_f32(acc1h, a1, bh);
+            acc2l = vfmaq_f32(acc2l, a2, bl);
+            acc2h = vfmaq_f32(acc2h, a2, bh);
+            acc3l = vfmaq_f32(acc3l, a3, bl);
+            acc3h = vfmaq_f32(acc3h, a3, bh);
+        }
+        if nr == NR {
+            let c = cv.as_mut_ptr();
+            let zero = vdupq_n_f32(0.0);
+            let (biasl, biash, relu, fused) = match epi {
+                Epilogue::None => (zero, zero, false, false),
+                Epilogue::Bias(b) => {
+                    (vld1q_f32(b.as_ptr()), vld1q_f32(b.as_ptr().add(4)), false, true)
                 }
-                if relu {
-                    tl = vreinterpretq_f32_u32(vandq_u32(
-                        vreinterpretq_u32_f32(tl),
-                        vcgtq_f32(tl, zero),
-                    ));
-                    th = vreinterpretq_f32_u32(vandq_u32(
-                        vreinterpretq_u32_f32(th),
-                        vcgtq_f32(th, zero),
-                    ));
+                Epilogue::BiasRelu(b) => {
+                    (vld1q_f32(b.as_ptr()), vld1q_f32(b.as_ptr().add(4)), true, true)
                 }
-                vst1q_f32(cr, tl);
-                vst1q_f32(cr.add(4), th);
-            }};
-        }
-        if mr > 0 {
-            store_row!(0, acc0l, acc0h);
-        }
-        if mr > 1 {
-            store_row!(n, acc1l, acc1h);
-        }
-        if mr > 2 {
-            store_row!(2 * n, acc2l, acc2h);
-        }
-        if mr > 3 {
-            store_row!(3 * n, acc3l, acc3h);
-        }
-    } else {
-        let mut t = [[0.0f32; NR]; MR];
-        vst1q_f32(t[0].as_mut_ptr(), acc0l);
-        vst1q_f32(t[0].as_mut_ptr().add(4), acc0h);
-        vst1q_f32(t[1].as_mut_ptr(), acc1l);
-        vst1q_f32(t[1].as_mut_ptr().add(4), acc1h);
-        vst1q_f32(t[2].as_mut_ptr(), acc2l);
-        vst1q_f32(t[2].as_mut_ptr().add(4), acc2h);
-        vst1q_f32(t[3].as_mut_ptr(), acc3l);
-        vst1q_f32(t[3].as_mut_ptr().add(4), acc3h);
-        for (r, row) in t.iter().enumerate().take(mr) {
-            for (j, &s) in row.iter().enumerate().take(nr) {
-                cv[r * n + j] = epi.apply(j, cv[r * n + j] + s);
+            };
+            // The ReLU select is `and(t, t > 0)` (vcgtq mask), bit-identical
+            // to [`relu_store`] — NEON's vmaxq would propagate NaN where x86
+            // maxps and the scalar replica return +0.0, so the masked form is
+            // the one that matches across ISAs.
+            macro_rules! store_row {
+                ($off:expr, $accl:expr, $acch:expr) => {{
+                    let cr = c.add($off);
+                    let mut tl = vaddq_f32(vld1q_f32(cr), $accl);
+                    let mut th = vaddq_f32(vld1q_f32(cr.add(4)), $acch);
+                    if fused {
+                        tl = vaddq_f32(tl, biasl);
+                        th = vaddq_f32(th, biash);
+                    }
+                    if relu {
+                        tl = vreinterpretq_f32_u32(vandq_u32(
+                            vreinterpretq_u32_f32(tl),
+                            vcgtq_f32(tl, zero),
+                        ));
+                        th = vreinterpretq_f32_u32(vandq_u32(
+                            vreinterpretq_u32_f32(th),
+                            vcgtq_f32(th, zero),
+                        ));
+                    }
+                    vst1q_f32(cr, tl);
+                    vst1q_f32(cr.add(4), th);
+                }};
+            }
+            if mr > 0 {
+                store_row!(0, acc0l, acc0h);
+            }
+            if mr > 1 {
+                store_row!(n, acc1l, acc1h);
+            }
+            if mr > 2 {
+                store_row!(2 * n, acc2l, acc2h);
+            }
+            if mr > 3 {
+                store_row!(3 * n, acc3l, acc3h);
+            }
+        } else {
+            let mut t = [[0.0f32; NR]; MR];
+            vst1q_f32(t[0].as_mut_ptr(), acc0l);
+            vst1q_f32(t[0].as_mut_ptr().add(4), acc0h);
+            vst1q_f32(t[1].as_mut_ptr(), acc1l);
+            vst1q_f32(t[1].as_mut_ptr().add(4), acc1h);
+            vst1q_f32(t[2].as_mut_ptr(), acc2l);
+            vst1q_f32(t[2].as_mut_ptr().add(4), acc2h);
+            vst1q_f32(t[3].as_mut_ptr(), acc3l);
+            vst1q_f32(t[3].as_mut_ptr().add(4), acc3h);
+            for (r, row) in t.iter().enumerate().take(mr) {
+                for (j, &s) in row.iter().enumerate().take(nr) {
+                    cv[r * n + j] = epi.apply(j, cv[r * n + j] + s);
+                }
             }
         }
     }
@@ -1032,79 +1076,103 @@ fn quantize_row_q8_avx2_entry(v: &[f32], q: &mut [u8]) -> f32 {
 /// `packs_epi32` (in-lane i16) → `packs_epi16` (in-lane i8) → bias
 /// `+127` → `permutevar8x32(0,4,1,5,·)` to undo the lane interleave;
 /// the 32-byte variant uses the full `(0,4,1,5,2,6,3,7)` permute.
+///
+/// # Safety
+///
+/// avx2 must be runtime-verified by the caller and `q` must hold at
+/// least `v.len()` bytes — the `_entry` wrapper asserts both.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn quantize_row_q8_avx2(v: &[f32], q: &mut [u8]) -> f32 {
-    use std::arch::x86_64::{
-        __m128i, _mm256_add_epi8, _mm256_andnot_ps, _mm256_castps256_ps128,
-        _mm256_castsi256_si128, _mm256_extractf128_ps, _mm256_extracti128_si256,
-        _mm256_loadu_ps, _mm256_max_ps, _mm256_min_ps, _mm256_mul_ps, _mm256_packs_epi16,
-        _mm256_packs_epi32, _mm256_permutevar8x32_epi32, _mm256_set1_epi8, _mm256_set1_ps,
-        _mm256_setr_epi32, _mm256_setzero_ps, _mm256_storeu_si256, _mm_add_epi8, _mm_cvtss_f32,
-        _mm_max_ps, _mm_max_ss, _mm_movehl_ps, _mm_packs_epi16, _mm_packs_epi32, _mm_set1_epi8,
-        _mm_shuffle_ps, _mm_storel_epi64, _mm_storeu_si128,
-    };
-    let k = v.len();
-    let vp = v.as_ptr();
-    let dst = q.as_mut_ptr();
-    let vsign = _mm256_set1_ps(-0.0);
-    let mut am0 = _mm256_setzero_ps();
-    let mut am1 = am0;
-    let mut am2 = am0;
-    let mut am3 = am0;
-    let mut p = 0usize;
-    while p + 32 <= k {
-        am0 = _mm256_max_ps(am0, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p))));
-        am1 = _mm256_max_ps(am1, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 8))));
-        am2 = _mm256_max_ps(am2, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 16))));
-        am3 = _mm256_max_ps(am3, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 24))));
-        p += 32;
-    }
-    while p + 8 <= k {
-        am0 = _mm256_max_ps(am0, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p))));
-        p += 8;
-    }
-    let am = _mm256_max_ps(_mm256_max_ps(am0, am1), _mm256_max_ps(am2, am3));
-    let mut m1 = _mm_max_ps(_mm256_castps256_ps128(am), _mm256_extractf128_ps::<1>(am));
-    m1 = _mm_max_ps(m1, _mm_movehl_ps(m1, m1));
-    m1 = _mm_max_ss(m1, _mm_shuffle_ps::<1>(m1, m1));
-    let mut absmax = _mm_cvtss_f32(m1);
-    while p < k {
-        absmax = absmax.max((*vp.add(p)).abs());
-        p += 1;
-    }
-    let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
-    let inv = 1.0 / scale;
-    let vinv = _mm256_set1_ps(inv);
-    let vhi = _mm256_set1_ps(127.0);
-    let vlo = _mm256_set1_ps(-127.0);
-    let vhalf = _mm256_set1_ps(0.5);
-    let vb127 = _mm256_set1_epi8(127);
-    let perm = _mm256_setr_epi32(0, 4, 1, 5, 0, 0, 0, 0);
-    p = 0;
-    if absmax >= 1e-35 {
-        let perm8 = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+    // SAFETY: caller contract: avx2 is present and `q` holds at least `v.len()`
+    // bytes (the entry asserts it); every load stays inside `v` and
+    // every store inside `q` — the wide loops stop 32/16/8 short of `k`
+    // and the scalar tail finishes element-wise.
+    unsafe {
+        use std::arch::x86_64::{
+            __m128i, _mm256_add_epi8, _mm256_andnot_ps, _mm256_castps256_ps128,
+            _mm256_castsi256_si128, _mm256_extractf128_ps, _mm256_extracti128_si256,
+            _mm256_loadu_ps, _mm256_max_ps, _mm256_min_ps, _mm256_mul_ps, _mm256_packs_epi16,
+            _mm256_packs_epi32, _mm256_permutevar8x32_epi32, _mm256_set1_epi8, _mm256_set1_ps,
+            _mm256_setr_epi32, _mm256_setzero_ps, _mm256_storeu_si256, _mm_add_epi8, _mm_cvtss_f32,
+            _mm_max_ps, _mm_max_ss, _mm_movehl_ps, _mm_packs_epi16, _mm_packs_epi32, _mm_set1_epi8,
+            _mm_shuffle_ps, _mm_storel_epi64, _mm_storeu_si128,
+        };
+        let k = v.len();
+        let vp = v.as_ptr();
+        let dst = q.as_mut_ptr();
+        let vsign = _mm256_set1_ps(-0.0);
+        let mut am0 = _mm256_setzero_ps();
+        let mut am1 = am0;
+        let mut am2 = am0;
+        let mut am3 = am0;
+        let mut p = 0usize;
         while p + 32 <= k {
-            let t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
-            let t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
-            let t2 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 16)), vinv);
-            let t3 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 24)), vinv);
-            let q0 = q8_round(t0, vhalf, vsign);
-            let q1 = q8_round(t1, vhalf, vsign);
-            let q2 = q8_round(t2, vhalf, vsign);
-            let q3 = q8_round(t3, vhalf, vsign);
-            let w0 = _mm256_packs_epi32(q0, q1);
-            let w1 = _mm256_packs_epi32(q2, q3);
-            let b = _mm256_add_epi8(_mm256_packs_epi16(w0, w1), vb127);
-            _mm256_storeu_si256(
-                dst.add(p) as *mut __m256i,
-                _mm256_permutevar8x32_epi32(b, perm8),
-            );
+            am0 = _mm256_max_ps(am0, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p))));
+            am1 = _mm256_max_ps(am1, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 8))));
+            am2 = _mm256_max_ps(am2, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 16))));
+            am3 = _mm256_max_ps(am3, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p + 24))));
             p += 32;
         }
+        while p + 8 <= k {
+            am0 = _mm256_max_ps(am0, _mm256_andnot_ps(vsign, _mm256_loadu_ps(vp.add(p))));
+            p += 8;
+        }
+        let am = _mm256_max_ps(_mm256_max_ps(am0, am1), _mm256_max_ps(am2, am3));
+        let mut m1 = _mm_max_ps(_mm256_castps256_ps128(am), _mm256_extractf128_ps::<1>(am));
+        m1 = _mm_max_ps(m1, _mm_movehl_ps(m1, m1));
+        m1 = _mm_max_ss(m1, _mm_shuffle_ps::<1>(m1, m1));
+        let mut absmax = _mm_cvtss_f32(m1);
+        while p < k {
+            absmax = absmax.max((*vp.add(p)).abs());
+            p += 1;
+        }
+        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        let inv = 1.0 / scale;
+        let vinv = _mm256_set1_ps(inv);
+        let vhi = _mm256_set1_ps(127.0);
+        let vlo = _mm256_set1_ps(-127.0);
+        let vhalf = _mm256_set1_ps(0.5);
+        let vb127 = _mm256_set1_epi8(127);
+        let perm = _mm256_setr_epi32(0, 4, 1, 5, 0, 0, 0, 0);
+        p = 0;
+        if absmax >= 1e-35 {
+            let perm8 = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+            while p + 32 <= k {
+                let t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
+                let t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
+                let t2 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 16)), vinv);
+                let t3 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 24)), vinv);
+                let q0 = q8_round(t0, vhalf, vsign);
+                let q1 = q8_round(t1, vhalf, vsign);
+                let q2 = q8_round(t2, vhalf, vsign);
+                let q3 = q8_round(t3, vhalf, vsign);
+                let w0 = _mm256_packs_epi32(q0, q1);
+                let w1 = _mm256_packs_epi32(q2, q3);
+                let b = _mm256_add_epi8(_mm256_packs_epi16(w0, w1), vb127);
+                _mm256_storeu_si256(
+                    dst.add(p) as *mut __m256i,
+                    _mm256_permutevar8x32_epi32(b, perm8),
+                );
+                p += 32;
+            }
+            while p + 16 <= k {
+                let t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
+                let t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
+                let q0 = q8_round(t0, vhalf, vsign);
+                let q1 = q8_round(t1, vhalf, vsign);
+                let w = _mm256_packs_epi32(q0, q1);
+                let b = _mm256_add_epi8(_mm256_packs_epi16(w, w), vb127);
+                let o = _mm256_permutevar8x32_epi32(b, perm);
+                _mm_storeu_si128(dst.add(p) as *mut __m128i, _mm256_castsi256_si128(o));
+                p += 16;
+            }
+        }
         while p + 16 <= k {
-            let t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
-            let t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
+            let mut t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
+            let mut t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
+            t0 = _mm256_max_ps(_mm256_min_ps(t0, vhi), vlo);
+            t1 = _mm256_max_ps(_mm256_min_ps(t1, vhi), vlo);
             let q0 = q8_round(t0, vhalf, vsign);
             let q1 = q8_round(t1, vhalf, vsign);
             let w = _mm256_packs_epi32(q0, q1);
@@ -1113,37 +1181,24 @@ unsafe fn quantize_row_q8_avx2(v: &[f32], q: &mut [u8]) -> f32 {
             _mm_storeu_si128(dst.add(p) as *mut __m128i, _mm256_castsi256_si128(o));
             p += 16;
         }
+        while p + 8 <= k {
+            let mut t = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
+            t = _mm256_max_ps(_mm256_min_ps(t, vhi), vlo);
+            let qv = q8_round(t, vhalf, vsign);
+            let w = _mm_packs_epi32(_mm256_castsi256_si128(qv), _mm256_extracti128_si256::<1>(qv));
+            _mm_storel_epi64(
+                dst.add(p) as *mut __m128i,
+                _mm_add_epi8(_mm_packs_epi16(w, w), _mm_set1_epi8(127)),
+            );
+            p += 8;
+        }
+        while p < k {
+            let t = (*vp.add(p) * inv).clamp(-127.0, 127.0);
+            *dst.add(p) = (((t + 0.5f32.copysign(t)) as i32) + 127) as u8;
+            p += 1;
+        }
+        scale
     }
-    while p + 16 <= k {
-        let mut t0 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
-        let mut t1 = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p + 8)), vinv);
-        t0 = _mm256_max_ps(_mm256_min_ps(t0, vhi), vlo);
-        t1 = _mm256_max_ps(_mm256_min_ps(t1, vhi), vlo);
-        let q0 = q8_round(t0, vhalf, vsign);
-        let q1 = q8_round(t1, vhalf, vsign);
-        let w = _mm256_packs_epi32(q0, q1);
-        let b = _mm256_add_epi8(_mm256_packs_epi16(w, w), vb127);
-        let o = _mm256_permutevar8x32_epi32(b, perm);
-        _mm_storeu_si128(dst.add(p) as *mut __m128i, _mm256_castsi256_si128(o));
-        p += 16;
-    }
-    while p + 8 <= k {
-        let mut t = _mm256_mul_ps(_mm256_loadu_ps(vp.add(p)), vinv);
-        t = _mm256_max_ps(_mm256_min_ps(t, vhi), vlo);
-        let qv = q8_round(t, vhalf, vsign);
-        let w = _mm_packs_epi32(_mm256_castsi256_si128(qv), _mm256_extracti128_si256::<1>(qv));
-        _mm_storel_epi64(
-            dst.add(p) as *mut __m128i,
-            _mm_add_epi8(_mm_packs_epi16(w, w), _mm_set1_epi8(127)),
-        );
-        p += 8;
-    }
-    while p < k {
-        let t = (*vp.add(p) * inv).clamp(-127.0, 127.0);
-        *dst.add(p) = (((t + 0.5f32.copysign(t)) as i32) + 127) as u8;
-        p += 1;
-    }
-    scale
 }
 
 /// Scalar replica of the fused int8 tile — the single written-out
@@ -1183,29 +1238,35 @@ pub unsafe fn tile_i8_scalar(
     mr: usize,
     nr: usize,
 ) {
-    let mut acc = [[0i32; NR]; MR];
-    for g in 0..kg {
-        let b = bp.add(g * NR * QK);
-        for (r, row) in acc.iter_mut().enumerate() {
-            let a = ap.add(r * astride + g * QK);
-            for (j, slot) in row.iter_mut().enumerate() {
-                let mut s = 0i32;
-                for qi in 0..QK {
-                    s += (*a.add(qi) as i32 - 127) * (*b.add(j * QK + qi) as i32);
+    // SAFETY: caller contract (`# Safety` above): reads stay inside the
+    // `MR×astride` A block, the `kg·NR·QK`-byte B panel, and the
+    // `sa`/`bias` arrays; stores stay inside `cp + roff[r] .. + nr` per
+    // stored row.
+    unsafe {
+        let mut acc = [[0i32; NR]; MR];
+        for g in 0..kg {
+            let b = bp.add(g * NR * QK);
+            for (r, row) in acc.iter_mut().enumerate() {
+                let a = ap.add(r * astride + g * QK);
+                for (j, slot) in row.iter_mut().enumerate() {
+                    let mut s = 0i32;
+                    for qi in 0..QK {
+                        s += (*a.add(qi) as i32 - 127) * (*b.add(j * QK + qi) as i32);
+                    }
+                    *slot += s;
                 }
-                *slot += s;
             }
         }
-    }
-    for (r, row) in acc.iter().enumerate().take(mr) {
-        let sc = *sa.add(r) * sb;
-        let out = cp.add(*roff.add(r));
-        for (j, &v) in row.iter().enumerate().take(nr) {
-            let mut t = v as f32 * sc + *bias.add(j);
-            if relu {
-                t = relu_store(t);
+        for (r, row) in acc.iter().enumerate().take(mr) {
+            let sc = *sa.add(r) * sb;
+            let out = cp.add(*roff.add(r));
+            for (j, &v) in row.iter().enumerate().take(nr) {
+                let mut t = v as f32 * sc + *bias.add(j);
+                if relu {
+                    t = relu_store(t);
+                }
+                *out.add(j) = t;
             }
-            *out.add(j) = t;
         }
     }
 }
@@ -1243,12 +1304,21 @@ use std::arch::x86_64::__m256;
 /// vector form of the round-half-away-from-zero statement in
 /// [`quantize_row_q8_scalar`], shared by every AVX2 quantize and
 /// requantize path so the rounding can never drift between them.
+///
+/// # Safety
+///
+/// avx2 must be runtime-verified; pure register math otherwise (every
+/// caller is itself an avx2 `#[target_feature]` fn).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
 unsafe fn q8_round(t: __m256, vhalf: __m256, vsign: __m256) -> __m256i {
-    use std::arch::x86_64::{_mm256_add_ps, _mm256_and_ps, _mm256_cvttps_epi32, _mm256_or_ps};
-    _mm256_cvttps_epi32(_mm256_add_ps(t, _mm256_or_ps(vhalf, _mm256_and_ps(t, vsign))))
+    // SAFETY: caller contract: avx2 is present (every caller is itself an avx2
+    // `target_feature` fn); the intrinsics touch registers only.
+    unsafe {
+        use std::arch::x86_64::{_mm256_add_ps, _mm256_and_ps, _mm256_cvttps_epi32, _mm256_or_ps};
+        _mm256_cvttps_epi32(_mm256_add_ps(t, _mm256_or_ps(vhalf, _mm256_and_ps(t, vsign))))
+    }
 }
 
 /// Accumulate one packed B panel against MR biased-u8 A rows with
@@ -1264,36 +1334,51 @@ unsafe fn q8_round(t: __m256, vhalf: __m256, vsign: __m256) -> __m256i {
 /// cannot saturate; `vpmaddwd` against 1s widens exactly to the
 /// group's i32 sum. Bit-identical to the [`tile_i8_scalar`]
 /// accumulator by i32 exactness.
+///
+/// # Safety
+///
+/// avx2 must be runtime-verified; `ap` must hold MR rows of
+/// `astride >= kg*QK` bytes and `bp` one `kg*NR*QK`-byte packed panel.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
 unsafe fn i8_acc_maddubs(kg: usize, ap: *const u8, astride: usize, bp: *const i8) -> [__m256i; MR] {
-    use std::arch::x86_64::{
-        _mm256_abs_epi8, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16,
-        _mm256_maddubs_epi16, _mm256_set1_epi16, _mm256_set1_epi32, _mm256_set1_epi8,
-        _mm256_setzero_si256, _mm256_sign_epi8, _mm256_sub_epi8,
-    };
-    let ones = _mm256_set1_epi16(1);
-    let v127 = _mm256_set1_epi8(127);
-    let mut acc = [_mm256_setzero_si256(); MR];
-    for g in 0..kg {
-        let b = _mm256_loadu_si256(bp.add(g * NR * QK) as *const __m256i);
-        for (r, slot) in acc.iter_mut().enumerate() {
-            let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
-            let av = _mm256_sub_epi8(_mm256_set1_epi32(w), v127);
-            let prod = _mm256_madd_epi16(
-                _mm256_maddubs_epi16(_mm256_abs_epi8(av), _mm256_sign_epi8(b, av)),
-                ones,
-            );
-            *slot = _mm256_add_epi32(*slot, prod);
+    // SAFETY: caller contract: avx2 is present; `ap` holds MR rows of
+    // `astride ≥ kg·QK` bytes and `bp` one `kg·NR·QK`-byte packed panel,
+    // so the group loads and the 4-byte row broadcasts never leave them.
+    unsafe {
+        use std::arch::x86_64::{
+            _mm256_abs_epi8, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16,
+            _mm256_maddubs_epi16, _mm256_set1_epi16, _mm256_set1_epi32, _mm256_set1_epi8,
+            _mm256_setzero_si256, _mm256_sign_epi8, _mm256_sub_epi8,
+        };
+        let ones = _mm256_set1_epi16(1);
+        let v127 = _mm256_set1_epi8(127);
+        let mut acc = [_mm256_setzero_si256(); MR];
+        for g in 0..kg {
+            let b = _mm256_loadu_si256(bp.add(g * NR * QK) as *const __m256i);
+            for (r, slot) in acc.iter_mut().enumerate() {
+                let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
+                let av = _mm256_sub_epi8(_mm256_set1_epi32(w), v127);
+                let prod = _mm256_madd_epi16(
+                    _mm256_maddubs_epi16(_mm256_abs_epi8(av), _mm256_sign_epi8(b, av)),
+                    ones,
+                );
+                *slot = _mm256_add_epi32(*slot, prod);
+            }
         }
+        acc
     }
-    acc
 }
 
 /// Two-panel [`i8_acc_maddubs`]: one A broadcast + unbias feeds both B
 /// panels; each panel keeps its own accumulators, so the i32 order —
 /// and every bit — matches two single-panel runs.
+///
+/// # Safety
+///
+/// avx2 must be runtime-verified; `ap` must hold MR rows of
+/// `astride >= kg*QK` bytes and `bp0`/`bp1` one packed panel each.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
@@ -1304,33 +1389,38 @@ unsafe fn i8_acc2_maddubs(
     bp0: *const i8,
     bp1: *const i8,
 ) -> ([__m256i; MR], [__m256i; MR]) {
-    use std::arch::x86_64::{
-        _mm256_abs_epi8, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16,
-        _mm256_maddubs_epi16, _mm256_set1_epi16, _mm256_set1_epi32, _mm256_set1_epi8,
-        _mm256_setzero_si256, _mm256_sign_epi8, _mm256_sub_epi8,
-    };
-    let ones = _mm256_set1_epi16(1);
-    let v127 = _mm256_set1_epi8(127);
-    let mut acc0 = [_mm256_setzero_si256(); MR];
-    let mut acc1 = [_mm256_setzero_si256(); MR];
-    for g in 0..kg {
-        let b0 = _mm256_loadu_si256(bp0.add(g * NR * QK) as *const __m256i);
-        let b1 = _mm256_loadu_si256(bp1.add(g * NR * QK) as *const __m256i);
-        for r in 0..MR {
-            let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
-            let av = _mm256_sub_epi8(_mm256_set1_epi32(w), v127);
-            let ua = _mm256_abs_epi8(av);
-            acc0[r] = _mm256_add_epi32(
-                acc0[r],
-                _mm256_madd_epi16(_mm256_maddubs_epi16(ua, _mm256_sign_epi8(b0, av)), ones),
-            );
-            acc1[r] = _mm256_add_epi32(
-                acc1[r],
-                _mm256_madd_epi16(_mm256_maddubs_epi16(ua, _mm256_sign_epi8(b1, av)), ones),
-            );
+    // SAFETY: caller contract: avx2 is present; `ap` holds MR rows of
+    // `astride ≥ kg·QK` bytes and `bp0`/`bp1` each one `kg·NR·QK`-byte
+    // packed panel — the loads never leave them.
+    unsafe {
+        use std::arch::x86_64::{
+            _mm256_abs_epi8, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16,
+            _mm256_maddubs_epi16, _mm256_set1_epi16, _mm256_set1_epi32, _mm256_set1_epi8,
+            _mm256_setzero_si256, _mm256_sign_epi8, _mm256_sub_epi8,
+        };
+        let ones = _mm256_set1_epi16(1);
+        let v127 = _mm256_set1_epi8(127);
+        let mut acc0 = [_mm256_setzero_si256(); MR];
+        let mut acc1 = [_mm256_setzero_si256(); MR];
+        for g in 0..kg {
+            let b0 = _mm256_loadu_si256(bp0.add(g * NR * QK) as *const __m256i);
+            let b1 = _mm256_loadu_si256(bp1.add(g * NR * QK) as *const __m256i);
+            for r in 0..MR {
+                let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
+                let av = _mm256_sub_epi8(_mm256_set1_epi32(w), v127);
+                let ua = _mm256_abs_epi8(av);
+                acc0[r] = _mm256_add_epi32(
+                    acc0[r],
+                    _mm256_madd_epi16(_mm256_maddubs_epi16(ua, _mm256_sign_epi8(b0, av)), ones),
+                );
+                acc1[r] = _mm256_add_epi32(
+                    acc1[r],
+                    _mm256_madd_epi16(_mm256_maddubs_epi16(ua, _mm256_sign_epi8(b1, av)), ones),
+                );
+            }
         }
+        (acc0, acc1)
     }
-    (acc0, acc1)
 }
 
 /// AVX-VNNI accumulator: `vpdpbusd` consumes the **biased** A bytes
@@ -1341,6 +1431,12 @@ unsafe fn i8_acc2_maddubs(
 /// keeps `Σ` far from overflow), so still bit-identical to
 /// [`tile_i8_scalar`]. One fused dot-accumulate per row per group
 /// instead of maddubs' four-op chain.
+///
+/// # Safety
+///
+/// avx2+avxvnni must be runtime-verified; `ap` must hold MR rows of
+/// `astride >= kg*QK` bytes, `bp` one packed panel, and `corr` that
+/// panel's NR-lane i32 correction row.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "avxvnni")]
 #[inline]
@@ -1351,26 +1447,37 @@ unsafe fn i8_acc_vnni(
     bp: *const i8,
     corr: *const i32,
 ) -> [__m256i; MR] {
-    use std::arch::x86_64::{
-        _mm256_dpbusd_avx_epi32, _mm256_loadu_si256, _mm256_set1_epi32, _mm256_setzero_si256,
-        _mm256_sub_epi32,
-    };
-    let mut acc = [_mm256_setzero_si256(); MR];
-    for g in 0..kg {
-        let b = _mm256_loadu_si256(bp.add(g * NR * QK) as *const __m256i);
-        for (r, slot) in acc.iter_mut().enumerate() {
-            let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
-            *slot = _mm256_dpbusd_avx_epi32(*slot, _mm256_set1_epi32(w), b);
+    // SAFETY: caller contract: avx2+avxvnni are present; `ap` holds MR rows of
+    // `astride ≥ kg·QK` bytes, `bp` one `kg·NR·QK`-byte panel, and
+    // `corr` that panel's NR-lane i32 correction row.
+    unsafe {
+        use std::arch::x86_64::{
+            _mm256_dpbusd_avx_epi32, _mm256_loadu_si256, _mm256_set1_epi32, _mm256_setzero_si256,
+            _mm256_sub_epi32,
+        };
+        let mut acc = [_mm256_setzero_si256(); MR];
+        for g in 0..kg {
+            let b = _mm256_loadu_si256(bp.add(g * NR * QK) as *const __m256i);
+            for (r, slot) in acc.iter_mut().enumerate() {
+                let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
+                *slot = _mm256_dpbusd_avx_epi32(*slot, _mm256_set1_epi32(w), b);
+            }
         }
+        let vc = _mm256_loadu_si256(corr as *const __m256i);
+        for slot in acc.iter_mut() {
+            *slot = _mm256_sub_epi32(*slot, vc);
+        }
+        acc
     }
-    let vc = _mm256_loadu_si256(corr as *const __m256i);
-    for slot in acc.iter_mut() {
-        *slot = _mm256_sub_epi32(*slot, vc);
-    }
-    acc
 }
 
 /// Two-panel [`i8_acc_vnni`].
+///
+/// # Safety
+///
+/// avx2+avxvnni must be runtime-verified; `ap` must hold MR rows of
+/// `astride >= kg*QK` bytes, `bp0`/`bp1` one packed panel each, and
+/// `corr0`/`corr1` their NR-lane i32 correction rows.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "avxvnni")]
 #[inline]
@@ -1383,29 +1490,34 @@ unsafe fn i8_acc2_vnni(
     corr0: *const i32,
     corr1: *const i32,
 ) -> ([__m256i; MR], [__m256i; MR]) {
-    use std::arch::x86_64::{
-        _mm256_dpbusd_avx_epi32, _mm256_loadu_si256, _mm256_set1_epi32, _mm256_setzero_si256,
-        _mm256_sub_epi32,
-    };
-    let mut acc0 = [_mm256_setzero_si256(); MR];
-    let mut acc1 = [_mm256_setzero_si256(); MR];
-    for g in 0..kg {
-        let b0 = _mm256_loadu_si256(bp0.add(g * NR * QK) as *const __m256i);
-        let b1 = _mm256_loadu_si256(bp1.add(g * NR * QK) as *const __m256i);
-        for r in 0..MR {
-            let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
-            let av = _mm256_set1_epi32(w);
-            acc0[r] = _mm256_dpbusd_avx_epi32(acc0[r], av, b0);
-            acc1[r] = _mm256_dpbusd_avx_epi32(acc1[r], av, b1);
+    // SAFETY: caller contract: avx2+avxvnni are present; `ap` holds MR rows of
+    // `astride ≥ kg·QK` bytes, `bp0`/`bp1` one packed panel each, and
+    // `corr0`/`corr1` their NR-lane i32 correction rows.
+    unsafe {
+        use std::arch::x86_64::{
+            _mm256_dpbusd_avx_epi32, _mm256_loadu_si256, _mm256_set1_epi32, _mm256_setzero_si256,
+            _mm256_sub_epi32,
+        };
+        let mut acc0 = [_mm256_setzero_si256(); MR];
+        let mut acc1 = [_mm256_setzero_si256(); MR];
+        for g in 0..kg {
+            let b0 = _mm256_loadu_si256(bp0.add(g * NR * QK) as *const __m256i);
+            let b1 = _mm256_loadu_si256(bp1.add(g * NR * QK) as *const __m256i);
+            for r in 0..MR {
+                let w = (ap.add(r * astride + g * QK) as *const i32).read_unaligned();
+                let av = _mm256_set1_epi32(w);
+                acc0[r] = _mm256_dpbusd_avx_epi32(acc0[r], av, b0);
+                acc1[r] = _mm256_dpbusd_avx_epi32(acc1[r], av, b1);
+            }
         }
+        let vc0 = _mm256_loadu_si256(corr0 as *const __m256i);
+        let vc1 = _mm256_loadu_si256(corr1 as *const __m256i);
+        for r in 0..MR {
+            acc0[r] = _mm256_sub_epi32(acc0[r], vc0);
+            acc1[r] = _mm256_sub_epi32(acc1[r], vc1);
+        }
+        (acc0, acc1)
     }
-    let vc0 = _mm256_loadu_si256(corr0 as *const __m256i);
-    let vc1 = _mm256_loadu_si256(corr1 as *const __m256i);
-    for r in 0..MR {
-        acc0[r] = _mm256_sub_epi32(acc0[r], vc0);
-        acc1[r] = _mm256_sub_epi32(acc1[r], vc1);
-    }
-    (acc0, acc1)
 }
 
 /// Shared dequantizing store of the SIMD tiles: per stored row,
@@ -1414,6 +1526,12 @@ unsafe fn i8_acc2_vnni(
 /// scalar statement), add the bias vector, `maxps` against zero for
 /// ReLU (±0.0 and NaN normalize to `+0.0`, identical to
 /// [`relu_store`]), and store 8 floats at `cp + roff[r]`.
+///
+/// # Safety
+///
+/// avx2 must be runtime-verified; `bias` must hold NR floats, `sa` `mr`
+/// row scales, `roff` MR offsets, and `cp + roff[r] .. + NR` must be in
+/// bounds for each of the `mr` rows (the TileI8 contract).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
@@ -1427,19 +1545,24 @@ unsafe fn i8_store_rows(
     roff: *const usize,
     mr: usize,
 ) {
-    use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_cvtepi32_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
-        _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
-    };
-    let vb = _mm256_loadu_ps(bias);
-    let vz = _mm256_setzero_ps();
-    for (r, &a) in acc.iter().enumerate().take(mr) {
-        let mut t = _mm256_mul_ps(_mm256_cvtepi32_ps(a), _mm256_set1_ps(*sa.add(r) * sb));
-        t = _mm256_add_ps(t, vb);
-        if relu {
-            t = _mm256_max_ps(t, vz);
+    // SAFETY: caller contract: avx2 is present; `bias` holds NR floats, `sa`
+    // `mr` row scales, `roff` MR offsets, and each 8-float store lands
+    // in `cp + roff[r] .. + NR`, in bounds per the TileI8 contract.
+    unsafe {
+        use std::arch::x86_64::{
+            _mm256_add_ps, _mm256_cvtepi32_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
+            _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+        };
+        let vb = _mm256_loadu_ps(bias);
+        let vz = _mm256_setzero_ps();
+        for (r, &a) in acc.iter().enumerate().take(mr) {
+            let mut t = _mm256_mul_ps(_mm256_cvtepi32_ps(a), _mm256_set1_ps(*sa.add(r) * sb));
+            t = _mm256_add_ps(t, vb);
+            if relu {
+                t = _mm256_max_ps(t, vz);
+            }
+            _mm256_storeu_ps(cp.add(*roff.add(r)), t);
         }
-        _mm256_storeu_ps(cp.add(*roff.add(r)), t);
     }
 }
 
@@ -1447,6 +1570,12 @@ unsafe fn i8_store_rows(
 /// `roff[r] + NR`). The combined scale is formed as
 /// `set1(sa[r]) * set1(sb)` — elementwise the same single-rounded
 /// product `sa[r]*sb` as the scalar statement.
+///
+/// # Safety
+///
+/// avx2 must be runtime-verified; `bias` must hold 2*NR floats, `sa`
+/// `mr` row scales, `roff` MR offsets, and `cp + roff[r] .. + 2*NR`
+/// must be in bounds for each of the `mr` rows (the TileI8X2 contract).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
@@ -1462,28 +1591,34 @@ unsafe fn i8_store_rows_x2(
     roff: *const usize,
     mr: usize,
 ) {
-    use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_cvtepi32_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
-        _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
-    };
-    let vb0 = _mm256_loadu_ps(bias);
-    let vb1 = _mm256_loadu_ps(bias.add(NR));
-    let vz = _mm256_setzero_ps();
-    for r in 0..mr {
-        let sc = _mm256_set1_ps(*sa.add(r));
-        let mut t0 =
-            _mm256_mul_ps(_mm256_cvtepi32_ps(acc0[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb0)));
-        let mut t1 =
-            _mm256_mul_ps(_mm256_cvtepi32_ps(acc1[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb1)));
-        t0 = _mm256_add_ps(t0, vb0);
-        t1 = _mm256_add_ps(t1, vb1);
-        if relu {
-            t0 = _mm256_max_ps(t0, vz);
-            t1 = _mm256_max_ps(t1, vz);
+    // SAFETY: caller contract: avx2 is present; `bias` holds 2·NR floats, `sa`
+    // `mr` row scales, `roff` MR offsets, and each pair of 8-float
+    // stores lands in `cp + roff[r] .. + 2·NR`, in bounds per the
+    // TileI8X2 contract.
+    unsafe {
+        use std::arch::x86_64::{
+            _mm256_add_ps, _mm256_cvtepi32_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
+            _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+        };
+        let vb0 = _mm256_loadu_ps(bias);
+        let vb1 = _mm256_loadu_ps(bias.add(NR));
+        let vz = _mm256_setzero_ps();
+        for r in 0..mr {
+            let sc = _mm256_set1_ps(*sa.add(r));
+            let mut t0 =
+                _mm256_mul_ps(_mm256_cvtepi32_ps(acc0[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb0)));
+            let mut t1 =
+                _mm256_mul_ps(_mm256_cvtepi32_ps(acc1[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb1)));
+            t0 = _mm256_add_ps(t0, vb0);
+            t1 = _mm256_add_ps(t1, vb1);
+            if relu {
+                t0 = _mm256_max_ps(t0, vz);
+                t1 = _mm256_max_ps(t1, vz);
+            }
+            let out = cp.add(*roff.add(r));
+            _mm256_storeu_ps(out, t0);
+            _mm256_storeu_ps(out.add(NR), t1);
         }
-        let out = cp.add(*roff.add(r));
-        _mm256_storeu_ps(out, t0);
-        _mm256_storeu_ps(out.add(NR), t1);
     }
 }
 
@@ -1499,6 +1634,12 @@ unsafe fn i8_store_rows_x2(
 /// never fires for normal absmax (the row quantizer's clamp-free
 /// fast-path proof) while matching the clamped statement for the
 /// degenerate rest.
+///
+/// # Safety
+///
+/// avx2 must be runtime-verified; `bias` must hold 2*NR floats,
+/// `qdst + r*qstride ..` must admit a 16-byte store per row, and
+/// `sa_out` must hold `mr` slots (the TileI8Leaf contract).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
@@ -1514,45 +1655,52 @@ unsafe fn i8_leaf_requant_rows(
     sa_out: *mut f32,
     mr: usize,
 ) {
-    use std::arch::x86_64::{
-        __m128i, _mm256_add_epi8, _mm256_add_ps, _mm256_castps256_ps128, _mm256_castsi256_si128,
-        _mm256_cvtepi32_ps, _mm256_extractf128_ps, _mm256_loadu_ps, _mm256_max_ps,
-        _mm256_min_ps, _mm256_mul_ps, _mm256_packs_epi16, _mm256_packs_epi32,
-        _mm256_permutevar8x32_epi32, _mm256_set1_epi8, _mm256_set1_ps, _mm256_setr_epi32,
-        _mm256_setzero_ps, _mm_cvtss_f32, _mm_max_ps, _mm_max_ss, _mm_movehl_ps, _mm_shuffle_ps,
-        _mm_storeu_si128,
-    };
-    let vb0 = _mm256_loadu_ps(bias);
-    let vb1 = _mm256_loadu_ps(bias.add(NR));
-    let vz = _mm256_setzero_ps();
-    let vsign = _mm256_set1_ps(-0.0);
-    let vhi = _mm256_set1_ps(127.0);
-    let vlo = _mm256_set1_ps(-127.0);
-    let vhalf = _mm256_set1_ps(0.5);
-    let vb127 = _mm256_set1_epi8(127);
-    let perm = _mm256_setr_epi32(0, 4, 1, 5, 0, 0, 0, 0);
-    for r in 0..mr {
-        let sc = _mm256_set1_ps(*sa.add(r));
-        let t0 = _mm256_mul_ps(_mm256_cvtepi32_ps(acc0[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb0)));
-        let t1 = _mm256_mul_ps(_mm256_cvtepi32_ps(acc1[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb1)));
-        let t0 = _mm256_max_ps(_mm256_add_ps(t0, vb0), vz);
-        let t1 = _mm256_max_ps(_mm256_add_ps(t1, vb1), vz);
-        let am = _mm256_max_ps(t0, t1);
-        let mut m1 = _mm_max_ps(_mm256_castps256_ps128(am), _mm256_extractf128_ps::<1>(am));
-        m1 = _mm_max_ps(m1, _mm_movehl_ps(m1, m1));
-        m1 = _mm_max_ss(m1, _mm_shuffle_ps::<1>(m1, m1));
-        let absmax = _mm_cvtss_f32(m1);
-        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
-        let vinv = _mm256_set1_ps(1.0 / scale);
-        let u0 = _mm256_max_ps(_mm256_min_ps(_mm256_mul_ps(t0, vinv), vhi), vlo);
-        let u1 = _mm256_max_ps(_mm256_min_ps(_mm256_mul_ps(t1, vinv), vhi), vlo);
-        let q0 = q8_round(u0, vhalf, vsign);
-        let q1 = q8_round(u1, vhalf, vsign);
-        let w = _mm256_packs_epi32(q0, q1);
-        let bb = _mm256_add_epi8(_mm256_packs_epi16(w, w), vb127);
-        let o = _mm256_permutevar8x32_epi32(bb, perm);
-        _mm_storeu_si128(qdst.add(r * qstride) as *mut __m128i, _mm256_castsi256_si128(o));
-        *sa_out.add(r) = scale;
+    // SAFETY: caller contract: avx2 is present; `bias` holds 2·NR floats, each
+    // 16-byte store lands in `qdst + r·qstride ..`, and `sa_out` holds
+    // `mr` slots, per the TileI8Leaf contract.
+    unsafe {
+        use std::arch::x86_64::{
+            __m128i, _mm256_add_epi8, _mm256_add_ps, _mm256_castps256_ps128, _mm256_castsi256_si128,
+            _mm256_cvtepi32_ps, _mm256_extractf128_ps, _mm256_loadu_ps, _mm256_max_ps,
+            _mm256_min_ps, _mm256_mul_ps, _mm256_packs_epi16, _mm256_packs_epi32,
+            _mm256_permutevar8x32_epi32, _mm256_set1_epi8, _mm256_set1_ps, _mm256_setr_epi32,
+            _mm256_setzero_ps, _mm_cvtss_f32, _mm_max_ps, _mm_max_ss, _mm_movehl_ps, _mm_shuffle_ps,
+            _mm_storeu_si128,
+        };
+        let vb0 = _mm256_loadu_ps(bias);
+        let vb1 = _mm256_loadu_ps(bias.add(NR));
+        let vz = _mm256_setzero_ps();
+        let vsign = _mm256_set1_ps(-0.0);
+        let vhi = _mm256_set1_ps(127.0);
+        let vlo = _mm256_set1_ps(-127.0);
+        let vhalf = _mm256_set1_ps(0.5);
+        let vb127 = _mm256_set1_epi8(127);
+        let perm = _mm256_setr_epi32(0, 4, 1, 5, 0, 0, 0, 0);
+        for r in 0..mr {
+            let sc = _mm256_set1_ps(*sa.add(r));
+            let t0 =
+                _mm256_mul_ps(_mm256_cvtepi32_ps(acc0[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb0)));
+            let t1 =
+                _mm256_mul_ps(_mm256_cvtepi32_ps(acc1[r]), _mm256_mul_ps(sc, _mm256_set1_ps(sb1)));
+            let t0 = _mm256_max_ps(_mm256_add_ps(t0, vb0), vz);
+            let t1 = _mm256_max_ps(_mm256_add_ps(t1, vb1), vz);
+            let am = _mm256_max_ps(t0, t1);
+            let mut m1 = _mm_max_ps(_mm256_castps256_ps128(am), _mm256_extractf128_ps::<1>(am));
+            m1 = _mm_max_ps(m1, _mm_movehl_ps(m1, m1));
+            m1 = _mm_max_ss(m1, _mm_shuffle_ps::<1>(m1, m1));
+            let absmax = _mm_cvtss_f32(m1);
+            let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+            let vinv = _mm256_set1_ps(1.0 / scale);
+            let u0 = _mm256_max_ps(_mm256_min_ps(_mm256_mul_ps(t0, vinv), vhi), vlo);
+            let u1 = _mm256_max_ps(_mm256_min_ps(_mm256_mul_ps(t1, vinv), vhi), vlo);
+            let q0 = q8_round(u0, vhalf, vsign);
+            let q1 = q8_round(u1, vhalf, vsign);
+            let w = _mm256_packs_epi32(q0, q1);
+            let bb = _mm256_add_epi8(_mm256_packs_epi16(w, w), vb127);
+            let o = _mm256_permutevar8x32_epi32(bb, perm);
+            _mm_storeu_si128(qdst.add(r * qstride) as *mut __m128i, _mm256_castsi256_si128(o));
+            *sa_out.add(r) = scale;
+        }
     }
 }
 
@@ -1828,34 +1976,45 @@ fn routing_dot_avx_entry(a: &[f32], b: &[f32]) -> f32 {
 /// Two 8-wide mul+add chains; bit-identical to [`routing_dot_scalar`]
 /// because each SIMD lane is an independent IEEE add chain and the
 /// writeback feeds the same fixed reduction tree.
+///
+/// # Safety
+///
+/// avx must be runtime-verified by the caller and `a.len() == b.len()`
+/// must hold — the `_entry` wrapper asserts both.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx")]
 unsafe fn routing_dot_avx(a: &[f32], b: &[f32]) -> f32 {
-    use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps,
-    };
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
-    let mut p = 0usize;
-    while p + RDOT_LANES <= n {
-        let prod0 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(p)), _mm256_loadu_ps(bp.add(p)));
-        let prod1 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(p + 8)), _mm256_loadu_ps(bp.add(p + 8)));
-        acc0 = _mm256_add_ps(acc0, prod0);
-        acc1 = _mm256_add_ps(acc1, prod1);
-        p += RDOT_LANES;
+    // SAFETY: caller contract: avx is present and `a.len() == b.len()` (the
+    // entry asserts it); the 16-lane loads stop at `n - RDOT_LANES` and
+    // the tail uses safe indexing.
+    unsafe {
+        use std::arch::x86_64::{
+            _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+        };
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut p = 0usize;
+        while p + RDOT_LANES <= n {
+            let prod0 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(p)), _mm256_loadu_ps(bp.add(p)));
+            let prod1 =
+                _mm256_mul_ps(_mm256_loadu_ps(ap.add(p + 8)), _mm256_loadu_ps(bp.add(p + 8)));
+            acc0 = _mm256_add_ps(acc0, prod0);
+            acc1 = _mm256_add_ps(acc1, prod1);
+            p += RDOT_LANES;
+        }
+        let mut acc = [0.0f32; RDOT_LANES];
+        _mm256_storeu_ps(acc.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(8), acc1);
+        while p < n {
+            acc[p % RDOT_LANES] += a[p] * b[p];
+            p += 1;
+        }
+        rdot_reduce(&acc)
     }
-    let mut acc = [0.0f32; RDOT_LANES];
-    _mm256_storeu_ps(acc.as_mut_ptr(), acc0);
-    _mm256_storeu_ps(acc.as_mut_ptr().add(8), acc1);
-    while p < n {
-        acc[p % RDOT_LANES] += a[p] * b[p];
-        p += 1;
-    }
-    rdot_reduce(&acc)
 }
 
 /// Table entry for the NEON routing dot.
@@ -1872,36 +2031,46 @@ fn routing_dot_neon_entry(a: &[f32], b: &[f32]) -> f32 {
 /// 12..16 map exactly onto the scalar replica's 16 stripe lanes, so the
 /// aarch64 descent is bit-identical to x86 and to the scalar fallback
 /// (this replaces the scalar stripe-16 replica as the aarch64 path).
+///
+/// # Safety
+///
+/// neon must be runtime-verified by the caller and `a.len() == b.len()`
+/// must hold — the `_entry` wrapper asserts both.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn routing_dot_neon(a: &[f32], b: &[f32]) -> f32 {
-    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let mut acc0 = vdupq_n_f32(0.0);
-    let mut acc1 = vdupq_n_f32(0.0);
-    let mut acc2 = vdupq_n_f32(0.0);
-    let mut acc3 = vdupq_n_f32(0.0);
-    let mut p = 0usize;
-    while p + RDOT_LANES <= n {
-        acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(ap.add(p)), vld1q_f32(bp.add(p))));
-        acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(ap.add(p + 4)), vld1q_f32(bp.add(p + 4))));
-        acc2 = vaddq_f32(acc2, vmulq_f32(vld1q_f32(ap.add(p + 8)), vld1q_f32(bp.add(p + 8))));
-        acc3 = vaddq_f32(acc3, vmulq_f32(vld1q_f32(ap.add(p + 12)), vld1q_f32(bp.add(p + 12))));
-        p += RDOT_LANES;
+    // SAFETY: caller contract: neon is present and `a.len() == b.len()` (the
+    // entry asserts it); the 16-lane loads stop at `n - RDOT_LANES` and
+    // the tail uses safe indexing.
+    unsafe {
+        use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut acc2 = vdupq_n_f32(0.0);
+        let mut acc3 = vdupq_n_f32(0.0);
+        let mut p = 0usize;
+        while p + RDOT_LANES <= n {
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(ap.add(p)), vld1q_f32(bp.add(p))));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(ap.add(p + 4)), vld1q_f32(bp.add(p + 4))));
+            acc2 = vaddq_f32(acc2, vmulq_f32(vld1q_f32(ap.add(p + 8)), vld1q_f32(bp.add(p + 8))));
+            acc3 = vaddq_f32(acc3, vmulq_f32(vld1q_f32(ap.add(p + 12)), vld1q_f32(bp.add(p + 12))));
+            p += RDOT_LANES;
+        }
+        let mut acc = [0.0f32; RDOT_LANES];
+        vst1q_f32(acc.as_mut_ptr(), acc0);
+        vst1q_f32(acc.as_mut_ptr().add(4), acc1);
+        vst1q_f32(acc.as_mut_ptr().add(8), acc2);
+        vst1q_f32(acc.as_mut_ptr().add(12), acc3);
+        while p < n {
+            acc[p % RDOT_LANES] += a[p] * b[p];
+            p += 1;
+        }
+        rdot_reduce(&acc)
     }
-    let mut acc = [0.0f32; RDOT_LANES];
-    vst1q_f32(acc.as_mut_ptr(), acc0);
-    vst1q_f32(acc.as_mut_ptr().add(4), acc1);
-    vst1q_f32(acc.as_mut_ptr().add(8), acc2);
-    vst1q_f32(acc.as_mut_ptr().add(12), acc3);
-    while p < n {
-        acc[p % RDOT_LANES] += a[p] * b[p];
-        p += 1;
-    }
-    rdot_reduce(&acc)
 }
 
 /// Prefetch a weight row the descent will need a few samples from now.
@@ -1913,7 +2082,9 @@ unsafe fn routing_dot_neon(a: &[f32], b: &[f32]) -> f32 {
 /// wired up.
 #[inline]
 pub fn prefetch_slice(row: &[f32]) {
-    #[cfg(target_arch = "x86_64")]
+    // Gated off under Miri: `_mm_prefetch` is a hint intrinsic the
+    // interpreter has no reason to support, and a no-op loses nothing.
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T1};
         let ptr = row.as_ptr();
@@ -1925,7 +2096,7 @@ pub fn prefetch_slice(row: &[f32]) {
             p += 16;
         }
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
     {
         let _ = row;
     }
@@ -2404,5 +2575,303 @@ mod tests {
         prefetch_slice(&v);
         prefetch_slice(&v[..1]);
         prefetch_slice(&[]);
+    }
+
+    // ------------------------------------------------------------------
+    // By-name entry parity: every SIMD entry registered in `detect`'s
+    // tables, exercised under its own name against its scalar replica
+    // on one probe shape. The `fff analyze` kernel-parity rule keys on
+    // these references; the broad shape/epilogue sweeps live in the
+    // table-driven tests above and in tests/golden_vectors.rs. Gated on
+    // runtime ISA detection (skip, don't fail, on older hardware) and
+    // off under Miri, which cannot execute vendor intrinsics.
+    // ------------------------------------------------------------------
+
+    /// One probe tile through a micro-kernel entry and its replica, all
+    /// three epilogues, compared bit for bit.
+    #[cfg(all(any(target_arch = "x86_64", target_arch = "aarch64"), not(miri)))]
+    fn check_micro_entry_pair(
+        label: &str,
+        entry: Micro4x8,
+        entry_epi: Micro4x8Epi,
+        replica: Micro4x8,
+        replica_epi: Micro4x8Epi,
+    ) {
+        let mut rng = Rng::seed_from_u64(21);
+        let kc = 19;
+        let mut ap = vec![0.0f32; kc * MR];
+        let mut bp = vec![0.0f32; kc * NR];
+        rng.fill_normal(&mut ap, 0.0, 1.0);
+        rng.fill_normal(&mut bp, 0.0, 1.0);
+        let mut bias = vec![0.0f32; NR];
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        let mut got = vec![0.5f32; MR * NR];
+        let mut want = vec![0.5f32; MR * NR];
+        entry(kc, &ap, &bp, &mut got, NR, MR, NR);
+        replica(kc, &ap, &bp, &mut want, NR, MR, NR);
+        assert_eq!(bits(&got), bits(&want), "{label}: base entry drifted");
+        for epi in [Epilogue::None, Epilogue::Bias(&bias), Epilogue::BiasRelu(&bias)] {
+            let mut got = vec![-0.25f32; MR * NR];
+            let mut want = vec![-0.25f32; MR * NR];
+            entry_epi(kc, &ap, &bp, &mut got, NR, MR, NR, epi);
+            replica_epi(kc, &ap, &bp, &mut want, NR, MR, NR, epi);
+            assert_eq!(bits(&got), bits(&want), "{label}: epi entry drifted");
+        }
+    }
+
+    #[cfg(all(any(target_arch = "x86_64", target_arch = "aarch64"), not(miri)))]
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// One probe panel through an int8 tile-entry trio against the
+    /// scalar replica (single tile), two singles (x2 tile), and the
+    /// x2+row-quantizer composition (leaf tile).
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    fn check_i8_entry_trio(label: &str, tile: TileI8, tx2: TileI8X2, tleaf: TileI8Leaf) {
+        let mut rng = Rng::seed_from_u64(23);
+        let kg = 7usize;
+        let astride = kg * QK;
+        let mut ap = vec![0u8; MR * astride];
+        for v in ap.iter_mut() {
+            *v = rng.below(255) as u8;
+        }
+        let mut bp0 = vec![0i8; kg * NR * QK];
+        let mut bp1 = vec![0i8; kg * NR * QK];
+        for v in bp0.iter_mut().chain(bp1.iter_mut()) {
+            *v = (rng.below(255) as i32 - 127) as i8;
+        }
+        let corr0 = derive_corr(&bp0, kg);
+        let corr1 = derive_corr(&bp1, kg);
+        let sa = [0.5f32, 0.25, 1.5, 2.0];
+        let (sb0, sb1) = (0.125f32, 0.75f32);
+        let mut bias = [0.0f32; 2 * NR];
+        rng.fill_normal(&mut bias, 0.0, 1.0);
+        let roff: [usize; MR] = [0, NR, 2 * NR, 3 * NR];
+        let roff2: [usize; MR] = [0, 2 * NR, 4 * NR, 6 * NR];
+        for relu in [false, true] {
+            let mut want = vec![f32::NAN; MR * NR];
+            let mut got = vec![f32::NAN; MR * NR];
+            // SAFETY: buffers cover MR rows × NR (resp. 2·NR) columns,
+            // roff/roff2 stay in bounds, panels/corr/sa sized above; the
+            // caller verified the entry's ISA at runtime.
+            unsafe {
+                tile_i8_scalar(
+                    kg,
+                    ap.as_ptr(),
+                    astride,
+                    bp0.as_ptr(),
+                    corr0.as_ptr(),
+                    sa.as_ptr(),
+                    sb0,
+                    bias.as_ptr(),
+                    relu,
+                    want.as_mut_ptr(),
+                    roff.as_ptr(),
+                    MR,
+                    NR,
+                );
+                tile(
+                    kg,
+                    ap.as_ptr(),
+                    astride,
+                    bp0.as_ptr(),
+                    corr0.as_ptr(),
+                    sa.as_ptr(),
+                    sb0,
+                    bias.as_ptr(),
+                    relu,
+                    got.as_mut_ptr(),
+                    roff.as_ptr(),
+                    MR,
+                );
+            }
+            assert_eq!(bits(&got), bits(&want), "{label}: tile entry drifted relu={relu}");
+            let mut want2 = vec![f32::NAN; MR * 2 * NR];
+            let mut got2 = vec![f32::NAN; MR * 2 * NR];
+            // SAFETY: as above; the x2 tile stores 2·NR floats per row
+            // at roff2[r], and the two reference singles cover the same
+            // split (second panel offset by NR in C and bias).
+            unsafe {
+                tile_i8_scalar(
+                    kg,
+                    ap.as_ptr(),
+                    astride,
+                    bp0.as_ptr(),
+                    corr0.as_ptr(),
+                    sa.as_ptr(),
+                    sb0,
+                    bias.as_ptr(),
+                    relu,
+                    want2.as_mut_ptr(),
+                    roff2.as_ptr(),
+                    MR,
+                    NR,
+                );
+                tile_i8_scalar(
+                    kg,
+                    ap.as_ptr(),
+                    astride,
+                    bp1.as_ptr(),
+                    corr1.as_ptr(),
+                    sa.as_ptr(),
+                    sb1,
+                    bias.as_ptr().add(NR),
+                    relu,
+                    want2.as_mut_ptr().add(NR),
+                    roff2.as_ptr(),
+                    MR,
+                    NR,
+                );
+                tx2(
+                    kg,
+                    ap.as_ptr(),
+                    astride,
+                    bp0.as_ptr(),
+                    bp1.as_ptr(),
+                    corr0.as_ptr(),
+                    corr1.as_ptr(),
+                    sa.as_ptr(),
+                    sb0,
+                    sb1,
+                    bias.as_ptr(),
+                    relu,
+                    got2.as_mut_ptr(),
+                    roff2.as_ptr(),
+                    MR,
+                );
+            }
+            assert_eq!(bits(&got2), bits(&want2), "{label}: x2 entry drifted relu={relu}");
+        }
+        // Leaf: x2 store with ReLU, then the scalar row quantizer.
+        let ell = 2 * NR;
+        let mut a1 = vec![f32::NAN; MR * ell];
+        // SAFETY: same buffer contracts as the x2 call above.
+        unsafe {
+            tx2(
+                kg,
+                ap.as_ptr(),
+                astride,
+                bp0.as_ptr(),
+                bp1.as_ptr(),
+                corr0.as_ptr(),
+                corr1.as_ptr(),
+                sa.as_ptr(),
+                sb0,
+                sb1,
+                bias.as_ptr(),
+                true,
+                a1.as_mut_ptr(),
+                roff2.as_ptr(),
+                MR,
+            );
+        }
+        let mut wantq = vec![0u8; MR * ell];
+        let mut wants = [0f32; MR];
+        for r in 0..MR {
+            let (row, qrow) = (&a1[r * ell..(r + 1) * ell], &mut wantq[r * ell..(r + 1) * ell]);
+            wants[r] = quantize_row_q8_scalar(row, qrow);
+        }
+        let mut gotq = vec![0u8; MR * ell];
+        let mut gots = [0f32; MR];
+        // SAFETY: qdst covers MR rows of ell bytes at stride ell and
+        // sa_out holds MR slots.
+        unsafe {
+            tleaf(
+                kg,
+                ap.as_ptr(),
+                astride,
+                bp0.as_ptr(),
+                bp1.as_ptr(),
+                corr0.as_ptr(),
+                corr1.as_ptr(),
+                sa.as_ptr(),
+                sb0,
+                sb1,
+                bias.as_ptr(),
+                gotq.as_mut_ptr(),
+                ell,
+                gots.as_mut_ptr(),
+                MR,
+            );
+        }
+        assert_eq!(gotq, wantq, "{label}: leaf entry bytes drifted");
+        assert_eq!(bits(&gots), bits(&wants), "{label}: leaf entry scales drifted");
+    }
+
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    #[test]
+    fn x86_entries_match_replicas_by_name() {
+        if std::arch::is_x86_feature_detected!("avx") {
+            let mut rng = Rng::seed_from_u64(22);
+            let mut a = vec![0.0f32; 67];
+            let mut b = vec![0.0f32; 67];
+            rng.fill_normal(&mut a, 0.0, 1.0);
+            rng.fill_normal(&mut b, 0.0, 1.0);
+            let got = routing_dot_avx_entry(&a, &b);
+            let want = routing_dot_scalar(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "routing_dot_avx_entry drifted");
+        }
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            check_micro_entry_pair(
+                "avx2fma",
+                micro_4x8_avx2fma_entry,
+                micro_4x8_epi_avx2fma_entry,
+                micro_4x8_ref,
+                micro_4x8_ref_epi,
+            );
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            let mut rng = Rng::seed_from_u64(24);
+            for n in [1usize, 8, 31, 70] {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, 0.0, 2.0);
+                let mut qs = vec![0u8; n];
+                let mut qd = vec![0u8; n];
+                let ss = quantize_row_q8_scalar(&v, &mut qs);
+                let sd = quantize_row_q8_avx2_entry(&v, &mut qd);
+                assert_eq!(ss.to_bits(), sd.to_bits(), "quantize_row_q8_avx2_entry scale n={n}");
+                assert_eq!(qs, qd, "quantize_row_q8_avx2_entry bytes n={n}");
+            }
+            check_i8_entry_trio(
+                "maddubs",
+                tile_i8_maddubs_entry,
+                tile_i8_x2_maddubs_entry,
+                tile_i8_leaf_maddubs_entry,
+            );
+        }
+        if std::arch::is_x86_feature_detected!("avxvnni") {
+            check_i8_entry_trio(
+                "vnni",
+                tile_i8_vnni_entry,
+                tile_i8_x2_vnni_entry,
+                tile_i8_leaf_vnni_entry,
+            );
+        }
+    }
+
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
+    #[test]
+    fn neon_entries_match_replicas_by_name() {
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            return;
+        }
+        check_micro_entry_pair(
+            "neon",
+            micro_4x8_neon_entry,
+            micro_4x8_epi_neon_entry,
+            micro_4x8_ref,
+            micro_4x8_ref_epi,
+        );
+        let mut rng = Rng::seed_from_u64(25);
+        let mut a = vec![0.0f32; 67];
+        let mut b = vec![0.0f32; 67];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let got = routing_dot_neon_entry(&a, &b);
+        let want = routing_dot_scalar(&a, &b);
+        assert_eq!(got.to_bits(), want.to_bits(), "routing_dot_neon_entry drifted");
     }
 }

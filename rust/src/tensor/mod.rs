@@ -144,17 +144,21 @@ impl Matrix {
         &mut self.as_mut_slice()[r * cols..(r + 1) * cols]
     }
 
-    /// Element access (window-checked like [`Matrix::row`]).
+    /// Element access. Real asserts, not debug: the flattened index
+    /// `r * cols + c` can land inside the window even when `c >= cols`
+    /// (it aliases an element of the next row), so unlike [`Matrix::row`]
+    /// the slice indexing alone would NOT catch the misuse in release.
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
-        debug_assert!(r < self.rows && c < self.cols);
+        assert!(r < self.rows && c < self.cols, "Matrix::get out of range");
         self.as_slice()[r * self.cols + c]
     }
 
-    /// Element assignment (window-checked like [`Matrix::row`]).
+    /// Element assignment (range-checked like [`Matrix::get`] — a column
+    /// overflow would otherwise silently write the next row's element).
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
-        debug_assert!(r < self.rows && c < self.cols);
+        assert!(r < self.rows && c < self.cols, "Matrix::set out of range");
         let idx = r * self.cols + c;
         self.as_mut_slice()[idx] = v;
     }

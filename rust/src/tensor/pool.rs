@@ -31,7 +31,14 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 /// output — but is generic so integer-typed buffers can band-dispatch too.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr<T = f32>(pub(crate) *mut T);
+// SAFETY: SendPtr is a plain address; sending it to another thread moves
+// no data. Each holder derives only its own task's disjoint slice from
+// it (the type's usage contract above), so no two threads ever form
+// aliasing references through a copy.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: sharing `&SendPtr` exposes only the raw address (Copy, no
+// interior mutability); dereferencing is the holder's separately
+// documented unsafe act, bound by the same disjoint-slice contract.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 /// One parallel region, shared with the workers. Deliberately tiny and
@@ -72,6 +79,11 @@ struct Shared {
     /// Set when any task of the current region panicked; `run` re-panics
     /// after the barrier.
     panicked: std::sync::atomic::AtomicBool,
+    /// First caught panic payload of the current region; `run` resumes
+    /// the unwind with it after the barrier so the original message (and
+    /// any typed payload) survives the pool crossing instead of being
+    /// replaced by a generic string.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
 }
 
 /// The pool. Dropping it shuts the workers down and joins them.
@@ -96,13 +108,18 @@ impl ThreadPool {
     /// submitting thread plus `threads - 1` workers. `threads <= 1` spawns
     /// nothing and `run` degenerates to a serial loop.
     pub fn new(threads: usize) -> ThreadPool {
-        let threads = threads.max(1);
+        // Miri interprets every thread serially, so real workers only
+        // multiply runtime without adding interleavings it can check;
+        // under cfg(miri) every pool is the serial degenerate (the
+        // documented shim — EXPERIMENTS.md §Analysis).
+        let threads = if cfg!(miri) { 1 } else { threads.max(1) };
         let shared = Arc::new(Shared {
             state: Mutex::new(State { job: None, generation: 0, active: 0, shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             next: AtomicUsize::new(0),
             panicked: std::sync::atomic::AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
         });
         let mut handles = Vec::with_capacity(threads - 1);
         for w in 0..threads - 1 {
@@ -153,6 +170,7 @@ impl ThreadPool {
         // guaranteed every worker retired before `run` last returned.
         self.shared.next.store(0, Ordering::Relaxed);
         self.shared.panicked.store(false, Ordering::Relaxed);
+        *self.shared.panic_payload.lock().unwrap_or_else(|p| p.into_inner()) = None;
         {
             let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
             st.job = Some(Job { func, n_tasks });
@@ -167,8 +185,8 @@ impl ThreadPool {
             if t >= n_tasks {
                 break;
             }
-            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(t))).is_err() {
-                self.shared.panicked.store(true, Ordering::Relaxed);
+            if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(t))) {
+                store_panic(&self.shared, payload);
                 break;
             }
         }
@@ -181,9 +199,28 @@ impl ThreadPool {
             st.job = None;
         }
         if self.shared.panicked.load(Ordering::Relaxed) {
-            panic!("ThreadPool::run: a pool task panicked");
+            // Re-raise with the first caught payload so the caller sees
+            // the task's own message; the pool itself is already back in
+            // its idle state (barrier done, job cleared) and stays fully
+            // usable for the next region.
+            match self.shared.panic_payload.lock().unwrap_or_else(|p| p.into_inner()).take() {
+                Some(payload) => std::panic::resume_unwind(payload),
+                None => panic!("ThreadPool::run: a pool task panicked"),
+            }
         }
     }
+}
+
+/// Record a caught task panic: first payload wins (later ones from
+/// sibling tasks of the same region are dropped), flag set last so `run`
+/// never re-raises before the payload is parked.
+fn store_panic(shared: &Shared, payload: Box<dyn std::any::Any + Send>) {
+    let mut slot = shared.panic_payload.lock().unwrap_or_else(|p| p.into_inner());
+    if slot.is_none() {
+        *slot = Some(payload);
+    }
+    drop(slot);
+    shared.panicked.store(true, Ordering::Relaxed);
 }
 
 impl Drop for ThreadPool {
@@ -222,9 +259,10 @@ fn worker_loop(shared: &Shared) {
                 break;
             }
             // Catch task panics so the region barrier always completes;
-            // `run` re-panics on the submitting thread.
-            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.func)(t))).is_err() {
-                shared.panicked.store(true, Ordering::Relaxed);
+            // `run` resumes the unwind on the submitting thread.
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.func)(t)));
+            if let Err(payload) = r {
+                store_panic(shared, payload);
                 break;
             }
         }
@@ -408,13 +446,53 @@ mod tests {
                 }
             });
         }));
-        assert!(result.is_err(), "panic should propagate out of run");
+        let payload = result.expect_err("panic should propagate out of run");
+        // The task's own payload must survive the pool crossing, not a
+        // generic "a pool task panicked" replacement.
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
         // The pool must remain fully usable after a panicked region.
         let count = AtomicUsize::new(0);
         pool.run(8, &|_| {
             count.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn global_pool_survives_task_panic_bit_identically() {
+        // The process-global pool — the one every kernel dispatch shares —
+        // must not be wedged by a panicking region: the next region on the
+        // same pool completes and produces the same bits as a serial run.
+        let data: Vec<f32> = (0..512).map(|i| (i as f32 * 0.37).sin()).collect();
+        let chunk = 32usize;
+        let n_tasks = data.len() / chunk;
+        let serial: Vec<f32> = (0..n_tasks)
+            .map(|t| data[t * chunk..(t + 1) * chunk].iter().fold(0.0f32, |a, &v| a + v * v))
+            .collect();
+        let pool = global();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(n_tasks, &|t| {
+                if t == 2 {
+                    panic!("wedge attempt");
+                }
+            });
+        }));
+        let payload = result.expect_err("panic should propagate out of the global pool");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"wedge attempt"));
+        // Next region on the same global pool: disjoint slots, fixed
+        // per-slot arithmetic — must complete and match serial bitwise.
+        let out: Vec<AtomicU64> = (0..n_tasks).map(|_| AtomicU64::new(0)).collect();
+        pool.run(n_tasks, &|t| {
+            let s = data[t * chunk..(t + 1) * chunk].iter().fold(0.0f32, |a, &v| a + v * v);
+            out[t].store(s.to_bits() as u64, Ordering::Relaxed);
+        });
+        for (t, o) in out.iter().enumerate() {
+            assert_eq!(
+                o.load(Ordering::Relaxed) as u32,
+                serial[t].to_bits(),
+                "task {t} drifted after the panicked region"
+            );
+        }
     }
 
     #[test]
@@ -429,11 +507,14 @@ mod tests {
 
     #[test]
     fn with_threads_scopes_and_restores_pinning() {
+        // Under Miri every pool is serial (the cfg(miri) shim in `new`),
+        // so expected widths clamp to 1 there.
+        let w = |n: usize| if cfg!(miri) { 1 } else { n };
         let outer = Arc::new(ThreadPool::new(3));
         set_current(Some(outer.clone()));
         let inner = with_threads(2, || current().threads());
-        assert_eq!(inner, 2);
-        assert_eq!(current().threads(), 3, "previous pinning must be restored");
+        assert_eq!(inner, w(2));
+        assert_eq!(current().threads(), w(3), "previous pinning must be restored");
         set_current(None);
     }
 }

@@ -19,6 +19,10 @@
 //! dispatch machinery is covered separately with a no-op region, which
 //! is deterministic at any width.
 
+// Match the library crate's unsafe hygiene (`fff analyze` audits this
+// file too): each unsafe operation gets its own commented block.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use fastfeedforward::nn::loss::cross_entropy_into;
 use fastfeedforward::nn::{Adam, Ff, Fff, FffConfig, FffInfer, InferScratch, Model, Optimizer};
 use fastfeedforward::rng::Rng;
@@ -34,25 +38,40 @@ static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
 struct CountingAllocator;
 
 // SAFETY: pure delegation to `System`, plus a relaxed counter bump on
-// every acquiring call (alloc, alloc_zeroed, realloc).
+// every acquiring call (alloc, alloc_zeroed, realloc). The counter bump
+// itself never allocates, so delegation preserves `GlobalAlloc`'s
+// reentrancy requirements.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: caller upholds the `GlobalAlloc::alloc` contract
+    // (non-zero-sized `layout`); we forward it to `System` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: same `layout`, same contract, delegated to `System`.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc::alloc_zeroed` contract;
+    // forwarded to `System` unchanged.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: same `layout`, same contract, delegated to `System`.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc::realloc` contract (`ptr`
+    // came from this allocator with `layout`); `System` is the allocator
+    // every path here actually used.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: `ptr`/`layout` pair is the one `System` handed out.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc::dealloc` contract; every
+    // allocation this type hands out comes from `System`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr`/`layout` pair is the one `System` handed out.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

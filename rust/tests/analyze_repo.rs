@@ -1,0 +1,24 @@
+//! The analyzer must come back clean on this repository — the same
+//! invariant CI's blocking `fff analyze` step enforces, pinned here so
+//! `cargo test` alone catches a violation (an undocumented unsafe
+//! block, a kernel registered without a by-name test, a HashMap-order
+//! float fold) before the CI step does.
+
+use fastfeedforward::analysis;
+use std::path::Path;
+
+#[test]
+fn repo_tree_has_no_analysis_findings() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let (findings, scanned) = analysis::analyze_tree(root).expect("walk the crate tree");
+    assert!(
+        scanned > 50,
+        "walker saw only {scanned} files — wrong root?"
+    );
+    assert!(
+        findings.is_empty(),
+        "fff analyze found {} violation(s):\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}

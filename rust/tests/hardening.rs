@@ -1,0 +1,129 @@
+//! Hardening regressions for the unsafe-adjacent plumbing: scratch-
+//! stack re-entrancy, release-mode bounds panics on the `Matrix`
+//! windowed accessors, and dirty-scratch reuse across precision
+//! switches. These pin the invariants the `// SAFETY:` comments and
+//! `fff analyze` lean on.
+
+use fastfeedforward::nn::{Fff, FffConfig, InferScratch};
+use fastfeedforward::rng::Rng;
+use fastfeedforward::tensor::pool::with_threads;
+use fastfeedforward::tensor::{scratch, Matrix, Precision};
+
+/// Nested checkouts must hand out distinct buffers (stack-like), and a
+/// sibling checkout after an inner one must not alias either: the GEMM
+/// panel buffers check out underneath a leaf-bucket activation tile and
+/// both are written concurrently with reads of the outer slice.
+#[test]
+fn scratch_checkout_is_reentrant_and_stack_like() {
+    scratch::with_f32(64, |outer| {
+        outer.fill(1.0);
+        scratch::with_f32(32, |inner| {
+            inner.fill(2.0);
+            // A u8 checkout nested below both (the quantized-A path).
+            scratch::with_u8(48, |bytes| {
+                bytes.fill(3);
+                assert!(inner.iter().all(|&v| v == 2.0));
+            });
+            assert!(inner.iter().all(|&v| v == 2.0));
+        });
+        // Sibling checkout after the inner one returned: it may REUSE
+        // the popped buffer (that is the point of the free stack) but
+        // must never alias the still-live outer slice.
+        scratch::with_f32(64, |sibling| {
+            sibling.fill(4.0);
+            assert!(outer.iter().all(|&v| v == 1.0));
+        });
+        assert!(outer.iter().all(|&v| v == 1.0));
+    });
+}
+
+/// Dirty reuse: a buffer returned by one caller comes back stale to the
+/// next (documented contract — only capacity growth zero-fills). The
+/// test proves reuse actually happens at equal length, because the
+/// zero-allocation guarantee depends on it.
+#[test]
+fn scratch_reuses_returned_buffers_dirty() {
+    // Writes, returns, re-checks-out on the same thread: same length →
+    // the free stack must serve the same capacity back.
+    let stamp = scratch::with_f32(96, |buf| {
+        buf.fill(7.5);
+        buf.as_ptr() as usize
+    });
+    scratch::with_f32(96, |buf| {
+        assert_eq!(buf.len(), 96);
+        // Same allocation back (single-threaded stack discipline).
+        assert_eq!(buf.as_ptr() as usize, stamp, "scratch did not reuse the returned buffer");
+    });
+}
+
+/// `Matrix::get` must panic out of range in release builds too — the
+/// accessor feeds windowed views whose offsets reach raw-pointer paths,
+/// so a silent wrap in release would read the wrong row instead of
+/// aborting (see the aliasing note on the accessor docs).
+#[test]
+#[should_panic(expected = "Matrix::get out of range")]
+fn matrix_get_panics_out_of_range_in_release() {
+    let m = Matrix::zeros(3, 4);
+    let _ = m.get(1, 4); // column past the row window: 1*4+4 aliases row 2
+}
+
+#[test]
+#[should_panic(expected = "Matrix::set out of range")]
+fn matrix_set_panics_out_of_range_in_release() {
+    let mut m = Matrix::zeros(3, 4);
+    m.set(3, 0, 1.0);
+}
+
+#[test]
+#[should_panic]
+fn matrix_row_panics_out_of_range_in_release() {
+    let m = Matrix::zeros(2, 8);
+    let _ = m.row(2);
+}
+
+/// f32 → int8 → f32 through ONE `InferScratch` and the shared
+/// thread-local scratch stacks: the int8 pass dirties every buffer with
+/// quantized bytes and different lengths, and the second f32 pass must
+/// still be bit-identical to the first. This is the precision-switch
+/// story a serving worker lives through when `FFF_PRECISION` flips
+/// between deploys (same process, warm scratch).
+#[test]
+fn dirty_scratch_is_bit_stable_across_precision_switches() {
+    let mut rng = Rng::seed_from_u64(77);
+    let (depth, leaf, dim_in, dim_out) = (3usize, 4usize, 12usize, 5usize);
+    let cfg = FffConfig::new(dim_in, dim_out, depth, leaf);
+    let fff = Fff::new(&mut rng, cfg);
+    let f32_model = fff.compile_infer_with(Precision::F32);
+    let int8_model = fff.compile_infer_with(Precision::Int8);
+    assert_eq!(int8_model.precision(), Precision::Int8);
+    let batch = 4 << depth;
+    let mut x = Matrix::zeros(batch, dim_in);
+    rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+    for threads in [1usize, 2] {
+        with_threads(threads, || {
+            let mut scratch = InferScratch::new();
+            let mut y = Matrix::zeros(0, 0);
+            let run = |m: &fastfeedforward::nn::FffInfer,
+                       scratch: &mut InferScratch,
+                       y: &mut Matrix| {
+                let mut leaf_of: Vec<usize> = Vec::new();
+                m.route_batch_into(&x, &mut leaf_of);
+                m.infer_batch_routed_into(&x, &leaf_of, scratch, y);
+            };
+            run(&f32_model, &mut scratch, &mut y);
+            let first: Vec<u32> = y.as_slice().iter().map(|v| v.to_bits()).collect();
+            // Interleave int8 passes: different scratch lengths, int8
+            // panel bytes, fused dequant epilogues — maximal dirt.
+            for _ in 0..2 {
+                run(&int8_model, &mut scratch, &mut y);
+            }
+            assert_eq!(y.shape(), (batch, dim_out));
+            run(&f32_model, &mut scratch, &mut y);
+            let third: Vec<u32> = y.as_slice().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                first, third,
+                "f32 inference drifted after int8 interleave (threads={threads})"
+            );
+        });
+    }
+}
