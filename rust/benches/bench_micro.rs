@@ -12,10 +12,11 @@
 //! the **routing-descent suite** (depths 4–15, 1/2/4 threads), and the
 //! **training-engine suite** (level-batched GEMM training vs the
 //! per-node baseline on the Table-2-shaped workload, 1/2/4 threads),
-//! and the **int8 serving suite** (quantized bucket engine vs the f32
-//! packed path at the acceptance shape), all recorded to
-//! `BENCH_gemm.json` (schema v6) so the perf trajectory is tracked PR
-//! over PR:
+//! the **int8 serving suite** (quantized bucket engine vs the f32
+//! packed path at the acceptance shape), and the **parallel-tree
+//! suite** (P trees at depth d − log2 P vs the single tree at depth d),
+//! all recorded to `BENCH_gemm.json` (schema v7) so the perf trajectory
+//! is tracked PR over PR:
 //!
 //! ```text
 //! cargo bench --manifest-path rust/Cargo.toml --bench bench_micro          # full, from repo root
@@ -23,6 +24,7 @@
 //! cargo bench --bench bench_micro -- --quick --routing-only                # descent smoke only
 //! cargo bench --bench bench_micro -- --quick --train-only                  # training smoke only
 //! cargo bench --bench bench_micro -- --quick --quant-only                  # int8 smoke only
+//! cargo bench --bench bench_micro -- --quick --parallel-only               # P-tree smoke only
 //! ```
 
 use fastfeedforward::bench::{time_budgeted, time_fn, Table};
@@ -367,6 +369,73 @@ fn quant_suite(quick: bool) -> Vec<String> {
     rows
 }
 
+/// Parallel-tree suite (§Perf iteration 8): `P` trees at depth
+/// `d − log2(P)` and leaf width `ℓ/P` against the single tree at depth
+/// `d`, leaf `ℓ` — same total bank count (`P·2^(d−log2 P) = 2^d`) and
+/// same summed active width, so the row measures what the multi-tree
+/// machinery itself (P shorter descents, (tree, leaf) buckets,
+/// scatter-add accumulation) costs over one scatter at the ISSUE-8
+/// acceptance shape (dim 256, ℓ 16, batch 4096; P=2 must stay within
+/// 1.3x of the single tree).
+/// The committed `BENCH_gemm.json` rows follow the C-prototype
+/// convention (no in-container Rust toolchain); CI regenerates the
+/// Rust numbers with this suite. Returns the `parallel` rows for
+/// `BENCH_gemm.json`.
+fn parallel_suite(quick: bool) -> Vec<String> {
+    use fastfeedforward::tensor::Precision;
+    let mut table = Table::new("parallel trees vs single tree", &["name", "time", "derived"]);
+    let mut rows: Vec<String> = Vec::new();
+    let budget = Duration::from_millis(if quick { 150 } else { 600 });
+    let (dim, leaf) = (256usize, 16usize);
+    let depth = if quick { 6usize } else { 8 };
+    let batch = if quick { 512 } else { 4096 };
+    let mut x = Matrix::zeros(batch, dim);
+    let mut xrng = Rng::seed_from_u64(82);
+    xrng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+    for &threads in &[1usize, 2] {
+        pool::set_global_threads(threads);
+        let mut scratch = InferScratch::new();
+        let mut y = Matrix::zeros(0, 0);
+        let mut t_single = 0.0f64;
+        // P=1 at depth d, then each P at depth d − log2(P) with leaf
+        // width ℓ/P: every configuration serves 2^d banks and ℓ summed
+        // active neurons per sample, so the delta is the multi-tree
+        // machinery itself.
+        for p in [1usize, 2, 4] {
+            let d = depth - p.trailing_zeros() as usize;
+            let lf = leaf / p;
+            let mut rng = Rng::seed_from_u64(81);
+            let model =
+                FffInfer::random_p(&mut rng, dim, dim, d, lf, 1 << d, Precision::F32, p);
+            let leaf_of = model.route_batch(&x);
+            let t = time_budgeted(budget, 3, 1000, || {
+                model.infer_batch_routed_into(&x, &leaf_of, &mut scratch, &mut y);
+                std::hint::black_box(&y);
+            });
+            if p == 1 {
+                t_single = t.mean.as_secs_f64();
+            }
+            let cost = t.mean.as_secs_f64() / t_single;
+            table.row(vec![
+                format!("serve P={p} d={d} l={lf} dim={dim} b={batch} t={threads}"),
+                format!("{:.3} ms", t.mean_ms()),
+                format!("{cost:.2}x vs P=1 d={depth} l={leaf}"),
+            ]);
+            rows.push(format!(
+                "{{\"dim\": {dim}, \"depth\": {d}, \"leaf\": {lf}, \"batch\": {batch}, \
+                 \"trees\": {p}, \"threads\": {threads}, \"ms\": {}, \
+                 \"samples_per_ms\": {}, \"cost_vs_single\": {}}}",
+                json_num(t.mean_ms()),
+                json_num(batch as f64 / t.mean_ms()),
+                json_num(cost),
+            ));
+        }
+    }
+    pool::set_global_threads(pool::default_global_threads());
+    table.print();
+    rows
+}
+
 /// GEMM + FFF-inference thread-scaling suite → `BENCH_gemm.json`.
 fn scaling_suite(quick: bool) {
     let mut table = Table::new("gemm/fff_infer scaling", &["name", "time", "derived"]);
@@ -501,14 +570,16 @@ fn scaling_suite(quick: bool) {
     let routing_rows = routing_suite(quick);
     let train_rows = train_suite(quick);
     let quant_rows = quant_suite(quick);
+    let parallel_rows = parallel_suite(quick);
 
     let out_path = std::env::var("FFF_BENCH_GEMM_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());
     let json = format!(
-        "{{\n  \"schema\": \"fff-bench-gemm/v6\",\n  \"quick\": {quick},\n  \
+        "{{\n  \"schema\": \"fff-bench-gemm/v7\",\n  \"quick\": {quick},\n  \
          \"host_threads\": {},\n  \"isa\": \"{packed_isa}\",\n  \"gemm\": [\n    {}\n  ],\n  \
          \"fff_infer\": [\n    {}\n  ],\n  \"epilogue\": [\n    {}\n  ],\n  \
          \"scratch\": [\n    {}\n  ],\n  \"routing\": [\n    {}\n  ],\n  \
-         \"train\": [\n    {}\n  ],\n  \"quant\": [\n    {}\n  ]\n}}\n",
+         \"train\": [\n    {}\n  ],\n  \"quant\": [\n    {}\n  ],\n  \
+         \"parallel\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         gemm_rows.join(",\n    "),
         fff_rows.join(",\n    "),
@@ -517,6 +588,7 @@ fn scaling_suite(quick: bool) {
         routing_rows.join(",\n    "),
         train_rows.join(",\n    "),
         quant_rows.join(",\n    "),
+        parallel_rows.join(",\n    "),
     );
     match std::fs::write(&out_path, json) {
         Ok(()) => println!("wrote {out_path}"),
@@ -538,6 +610,10 @@ fn main() {
     }
     if std::env::args().any(|a| a == "--quant-only") {
         let _ = quant_suite(quick);
+        return;
+    }
+    if std::env::args().any(|a| a == "--parallel-only") {
+        let _ = parallel_suite(quick);
         return;
     }
     scaling_suite(quick);

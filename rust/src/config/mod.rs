@@ -69,6 +69,13 @@ pub struct ServeConfig {
     /// `fff serve --precision` flag beats the config file — resolution
     /// happens where the model is compiled.
     pub precision: Precision,
+    /// Parallel trees per FFF layer (UltraFastBERT `parallel_size`;
+    /// 1 = the paper's single tree). File key `fff.parallel_size` (it
+    /// describes the model, not the coordinator); the `FFF_PARALLEL`
+    /// env override beats this and the `fff serve --parallel-size`
+    /// flag beats the config file — resolution via
+    /// `kernels::resolve_parallel` where models are built.
+    pub parallel_size: usize,
 }
 
 impl Default for ServeConfig {
@@ -80,6 +87,7 @@ impl Default for ServeConfig {
             max_delay_us: 2000,
             queue_capacity: 4096,
             precision: Precision::F32,
+            parallel_size: 1,
         }
     }
 }
@@ -117,6 +125,9 @@ impl ServeConfig {
             cfg.precision = Precision::parse(v)
                 .ok_or_else(|| format!("serve.precision: unknown precision {v:?} (want f32|int8)"))?;
         }
+        if let Some(v) = kv.get_parsed::<usize>("fff.parallel_size")? {
+            cfg.parallel_size = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -128,6 +139,9 @@ impl ServeConfig {
         }
         if self.max_batch == 0 {
             return Err("serve.max_batch must be >= 1".into());
+        }
+        if self.parallel_size == 0 {
+            return Err("fff.parallel_size must be >= 1".into());
         }
         Ok(())
     }
@@ -161,6 +175,11 @@ pub struct TrainConfig {
     pub lr_plateau: usize,
     /// Randomized child transposition probability (overfitting mitigation).
     pub transposition_p: f32,
+    /// Parallel trees per FFF layer (UltraFastBERT `parallel_size`;
+    /// 1 = the paper's single tree, every preset's default). Multiplies
+    /// the training width: the model trains `P·2^d` leaves whose outputs
+    /// sum.
+    pub parallel_size: usize,
     pub seed: u64,
     /// Dataset size (train split, before 9:1 val split).
     pub train_n: usize,
@@ -214,6 +233,7 @@ impl TrainConfig {
             patience: 25,
             lr_plateau: 0,
             transposition_p: 0.0,
+            parallel_size: 1,
             seed,
             train_n: 8000,
             test_n: 2000,
@@ -243,6 +263,7 @@ impl TrainConfig {
             patience: 350,
             lr_plateau: 250,
             transposition_p: 0.0,
+            parallel_size: 1,
             seed,
             train_n: 8000,
             test_n: 2000,
@@ -320,6 +341,16 @@ mod tests {
     fn serve_config_rejects_zero_workers() {
         let kv = KvFile::parse("[serve]\nworkers = 0\n").unwrap();
         assert!(ServeConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn serve_config_parses_parallel_size() {
+        let kv = KvFile::parse("[fff]\nparallel_size = 4\n").unwrap();
+        assert_eq!(ServeConfig::from_kv(&kv).unwrap().parallel_size, 4);
+        assert_eq!(ServeConfig::default().parallel_size, 1);
+        let zero = KvFile::parse("[fff]\nparallel_size = 0\n").unwrap();
+        let err = ServeConfig::from_kv(&zero).unwrap_err();
+        assert!(err.contains("parallel_size"), "{err}");
     }
 
     #[test]

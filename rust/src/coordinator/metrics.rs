@@ -137,11 +137,26 @@ mod tests {
     fn routing_stats_are_averaged() {
         let m = Metrics::new();
         // Batch 1: 8 samples over 4 leaves, max bucket 4 (skew 2.0).
-        m.record_routing(&RoutingStats { samples: 8, distinct_leaves: 4, max_bucket: 4 });
+        m.record_routing(&RoutingStats {
+            samples: 8,
+            trees: 1,
+            distinct_leaves: 4,
+            max_bucket: 4,
+        });
         // Batch 2: 6 samples over 2 leaves, max bucket 3 (skew 1.0).
-        m.record_routing(&RoutingStats { samples: 6, distinct_leaves: 2, max_bucket: 3 });
+        m.record_routing(&RoutingStats {
+            samples: 6,
+            trees: 1,
+            distinct_leaves: 2,
+            max_bucket: 3,
+        });
         // Empty batches are ignored.
-        m.record_routing(&RoutingStats { samples: 0, distinct_leaves: 0, max_bucket: 0 });
+        m.record_routing(&RoutingStats {
+            samples: 0,
+            trees: 1,
+            distinct_leaves: 0,
+            max_bucket: 0,
+        });
         let s = m.snapshot();
         assert!((s.mean_leaf_occupancy - 2.5).abs() < 1e-9, "{}", s.mean_leaf_occupancy);
         assert!((s.mean_leaf_skew - 1.5).abs() < 1e-9, "{}", s.mean_leaf_skew);

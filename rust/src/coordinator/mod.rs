@@ -77,6 +77,12 @@ pub struct CoordinatorConfig {
     /// override via [`crate::tensor::kernels::resolve_precision`] so the
     /// override beats both config file and CLI flag.
     pub precision: Precision,
+    /// Parallel trees (P) the serving model should be compiled with. Like
+    /// `precision`, the coordinator only carries the value — the backend
+    /// factory that compiles the model reads it, after the CLI has folded
+    /// in the `FFF_PARALLEL` env override via
+    /// [`crate::tensor::kernels::resolve_parallel`].
+    pub parallel: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -87,6 +93,7 @@ impl Default for CoordinatorConfig {
             threads: 0,
             queue_capacity: 4096,
             precision: Precision::F32,
+            parallel: 1,
         }
     }
 }
@@ -102,6 +109,7 @@ impl From<crate::config::ServeConfig> for CoordinatorConfig {
             threads: s.threads,
             queue_capacity: s.queue_capacity,
             precision: s.precision,
+            parallel: s.parallel_size,
         }
     }
 }
@@ -297,6 +305,7 @@ mod tests {
             threads: 0,
             queue_capacity: 64,
             precision: Precision::F32,
+            parallel: 1,
         };
         Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))
     }

@@ -185,6 +185,7 @@ mod tests {
                 threads: 0,
                 queue_capacity: 128,
                 precision: crate::tensor::Precision::F32,
+                parallel: 1,
             },
             move || Box::new(NativeFffBackend::new(model.clone())),
         ))

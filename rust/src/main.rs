@@ -3,7 +3,8 @@
 //! ```text
 //! fff train  --dataset mnist --model fff --width 64 --leaf 8 [--seed 0]
 //! fff serve  --artifact fff_mnist_infer_b16 [--requests 1000] [--tcp 127.0.0.1:7878]
-//!            [--workers N] [--threads N] [--precision f32|int8] [--config serve.kv]
+//!            [--workers N] [--threads N] [--precision f32|int8] [--parallel-size P]
+//!            [--config serve.kv]
 //! fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6|quant> [--scale paper]
 //! fff info                      # artifact manifest summary
 //! fff analyze [--root PATH]     # unsafe audit + kernel parity + determinism lints
@@ -39,10 +40,12 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!("usage: fff <train|serve|reproduce|info|analyze> [options]");
-    eprintln!("  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8");
+    eprintln!(
+        "  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8 --parallel-size 1"
+    );
     eprintln!(
         "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0 \
-         --precision f32|int8"
+         --precision f32|int8 --parallel-size 1"
     );
     eprintln!(
         "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6|quant  (FFF_SCALE=paper for full grid)"
@@ -67,12 +70,18 @@ fn cmd_train(args: &Args) {
     cfg.patience = args.get_or("patience", 20);
     cfg.hardening = args.get_or("hardening", cfg.hardening);
     cfg.lr = args.get_or("lr", cfg.lr);
+    // Layering mirrors precision: preset default < --parallel-size flag
+    // < FFF_PARALLEL env (resolved here, where the run is specified).
+    cfg.parallel_size = fastfeedforward::tensor::kernels::resolve_parallel(
+        args.get_or("parallel-size", cfg.parallel_size),
+    );
     println!(
-        "training {} on {} (width {}, leaf {}, seed {seed})",
+        "training {} on {} (width {}, leaf {}, parallel {}, seed {seed})",
         model.name(),
         dataset.name(),
         width,
-        leaf
+        leaf,
+        cfg.parallel_size
     );
     if let Some(path) = args.get("save") {
         // Train with model access so the checkpoint can be written.
@@ -129,17 +138,22 @@ fn cmd_serve(args: &Args) {
         scfg.precision = fastfeedforward::tensor::Precision::parse(p)
             .unwrap_or_else(|| panic!("--precision: unknown precision {p:?} (want f32|int8)"));
     }
+    scfg.parallel_size = args.get_or("parallel-size", scfg.parallel_size);
     // Re-validate: CLI flags are applied after the config file's checks.
     scfg.validate().unwrap_or_else(|e| panic!("serve options: {e}"));
     let mut cfg = CoordinatorConfig::from(scfg);
-    // The FFF_PRECISION process override beats file and flag, mirroring
-    // FFF_THREADS / FFF_GEMM_KERNEL (see EXPERIMENTS.md's env-knob table).
+    // The FFF_PRECISION / FFF_PARALLEL process overrides beat file and
+    // flag, mirroring FFF_THREADS / FFF_GEMM_KERNEL (see EXPERIMENTS.md's
+    // env-knob table).
     cfg.precision = fastfeedforward::tensor::kernels::resolve_precision(cfg.precision);
+    cfg.parallel = fastfeedforward::tensor::kernels::resolve_parallel(cfg.parallel);
     println!(
-        "serving artifact {artifact} ({} workers, {} pool threads/worker, {} native precision)",
+        "serving artifact {artifact} ({} workers, {} pool threads/worker, {} native precision, \
+         {} parallel trees)",
         cfg.workers,
         if cfg.threads == 0 { "shared".to_string() } else { cfg.threads.to_string() },
         cfg.precision.name(),
+        cfg.parallel,
     );
     let coord = Coordinator::start(cfg, HloBackend::factory("artifacts".into(), artifact));
     if let Some(addr) = args.get("tcp") {

@@ -49,6 +49,18 @@ fn masked_leaf(raw: usize, n_alloc: usize) -> usize {
     raw % n_alloc
 }
 
+/// Global leaf-bank index of one routed slot value under parallel
+/// trees: [`TreeRouter::route_batch`] encodes slot values as
+/// `t·2^d + leaf`, leaf banks are stored tree-major
+/// (`t·n_alloc + masked leaf`), and the per-tree index folds through
+/// [`masked_leaf`]. With one tree every value stays below
+/// `leaves_per_tree`, so this collapses to exactly `masked_leaf` — the
+/// single-tree arithmetic is unchanged bit for bit.
+#[inline]
+fn bank_of(raw: usize, leaves_per_tree: usize, n_alloc: usize) -> usize {
+    (raw / leaves_per_tree) * n_alloc + masked_leaf(raw % leaves_per_tree, n_alloc)
+}
+
 /// Masked-leaf histogram over `n_alloc` banks, into a retained buffer
 /// (cleared and refilled). One pass serves both the bucket engine's
 /// counting sort and the routing telemetry — the serving path builds it
@@ -58,6 +70,24 @@ fn bucket_counts(leaf_of: &[usize], n_alloc: usize, counts: &mut Vec<usize>) {
     counts.resize(n_alloc, 0);
     for &raw in leaf_of {
         counts[masked_leaf(raw, n_alloc)] += 1;
+    }
+}
+
+/// [`bucket_counts`] under `trees` parallel trees: the histogram spans
+/// the `trees·n_alloc` tree-major banks and every routed slot lands in
+/// its [`bank_of`] bucket. `trees = 1` reproduces the single-tree
+/// histogram bit for bit (the bank formula collapses to `masked_leaf`).
+fn bucket_counts_banked(
+    leaf_of: &[usize],
+    leaves_per_tree: usize,
+    n_alloc: usize,
+    trees: usize,
+    counts: &mut Vec<usize>,
+) {
+    counts.clear();
+    counts.resize(trees * n_alloc, 0);
+    for &raw in leaf_of {
+        counts[bank_of(raw, leaves_per_tree, n_alloc)] += 1;
     }
 }
 
@@ -164,40 +194,75 @@ pub struct FffConfig {
     /// Per-node, per-batch probability of transposing the soft decision
     /// ⟨1−p, p⟩ → ⟨p, 1−p⟩ (localized-overfitting mitigation).
     pub transposition_p: f32,
+    /// Parallel trees per layer `P ≥ 1` (UltraFastBERT's
+    /// `parallel_size`, arXiv 2311.10770): `P` independent trees route
+    /// every sample and their leaf outputs **sum**. `P = 1` is the
+    /// paper's single tree; every formula below reduces to its
+    /// pre-parallel value there. Not env-resolved here — callers that
+    /// want the `FFF_PARALLEL` process override to win resolve through
+    /// [`kernels::resolve_parallel`] first (the trainer and serve
+    /// configs do).
+    pub parallel_size: usize,
 }
 
 impl FffConfig {
-    /// Paper defaults: n = 1, h = 3.0, no transposition.
+    /// Paper defaults: n = 1, h = 3.0, no transposition, one tree.
     pub fn new(dim_in: usize, dim_out: usize, depth: usize, leaf: usize) -> Self {
-        FffConfig { dim_in, dim_out, depth, leaf, node: 1, hardening: 3.0, transposition_p: 0.0 }
+        FffConfig {
+            dim_in,
+            dim_out,
+            depth,
+            leaf,
+            node: 1,
+            hardening: 3.0,
+            transposition_p: 0.0,
+            parallel_size: 1,
+        }
     }
 
-    pub fn num_leaves(&self) -> usize {
+    /// Parallel trees `P` (a zero config counts as one tree).
+    pub fn trees(&self) -> usize {
+        self.parallel_size.max(1)
+    }
+
+    /// Leaves of one tree: `2^d`.
+    pub fn leaves_per_tree(&self) -> usize {
         1 << self.depth
     }
 
-    pub fn num_nodes(&self) -> usize {
+    /// Nodes of one tree: `2^d − 1`.
+    pub fn nodes_per_tree(&self) -> usize {
         (1 << self.depth) - 1
     }
 
-    /// Paper §Size-and-width: training width `2^d · ℓ`.
+    /// Total leaves across the `P` trees: `P·2^d`.
+    pub fn num_leaves(&self) -> usize {
+        self.trees() * self.leaves_per_tree()
+    }
+
+    /// Total nodes across the `P` trees: `P·(2^d − 1)`.
+    pub fn num_nodes(&self) -> usize {
+        self.trees() * self.nodes_per_tree()
+    }
+
+    /// Paper §Size-and-width: training width `P·2^d · ℓ`.
     pub fn training_width(&self) -> usize {
         self.num_leaves() * self.leaf
     }
 
-    /// Inference width ℓ (only leaf neurons produce output).
+    /// Inference width `P·ℓ` (only engaged leaf neurons produce output).
     pub fn inference_width(&self) -> usize {
-        self.leaf
+        self.trees() * self.leaf
     }
 
-    /// Training size `(2^d − 1)·n + 2^d·ℓ` (all neurons).
+    /// Training size `P·((2^d − 1)·n + 2^d·ℓ)` (all neurons).
     pub fn training_size(&self) -> usize {
         self.num_nodes() * self.node + self.training_width()
     }
 
-    /// Inference size `d·n + ℓ` (neurons engaged by `FORWARD_I`).
+    /// Inference size `P·(d·n + ℓ)` (neurons engaged by `FORWARD_I`).
     pub fn inference_size(&self) -> usize {
-        self.depth * self.node + self.leaf
+        self.trees() * (self.depth * self.node + self.leaf)
     }
 }
 
@@ -350,8 +415,11 @@ impl TrainCache {
 }
 
 impl Fff {
+    /// Tree-major storage: tree `t`'s node `(m, i)` lives at
+    /// `t·(2^d − 1) + node_at(m, i)` and its leaf `j` at `t·2^d + j`;
+    /// `P = 1` is exactly the pre-parallel layout (and rng stream).
     pub fn new(rng: &mut Rng, cfg: FffConfig) -> Self {
-        assert!(cfg.leaf >= 1 && cfg.node >= 1);
+        assert!(cfg.leaf >= 1 && cfg.node >= 1 && cfg.parallel_size >= 1);
         let nodes = (0..cfg.num_nodes()).map(|_| Node::new(rng, cfg.dim_in, cfg.node)).collect();
         let leaves = (0..cfg.num_leaves())
             .map(|_| Leaf {
@@ -370,10 +438,16 @@ impl Fff {
         }
     }
 
-    /// Node `(level m, index i)` position in the BFS array.
+    /// Node `(level m, index i)` position in one tree's BFS array.
     #[inline]
     fn node_at(m: usize, i: usize) -> usize {
         (1 << m) - 1 + i
+    }
+
+    /// Node `(tree t, level m, index i)` in the tree-major node array.
+    #[inline]
+    fn node_id(&self, t: usize, m: usize, i: usize) -> usize {
+        t * self.cfg.nodes_per_tree() + Self::node_at(m, i)
     }
 
     /// Raw node probabilities for a batch: (logits, probs, hidden).
@@ -399,8 +473,14 @@ impl Fff {
     /// reads, so this training-side diagnostic always agrees with the
     /// serving engine on the leaf, bit for bit.
     pub fn leaf_index(&self, x: &[f32]) -> usize {
+        self.leaf_index_tree(0, x)
+    }
+
+    /// [`Fff::leaf_index`] for tree `t` of a parallel-tree model: the
+    /// per-tree leaf index in `[0, 2^d)`. Tree 0 is `leaf_index`.
+    pub fn leaf_index_tree(&self, t: usize, x: &[f32]) -> usize {
         descend(self.cfg.depth, |m, i| {
-            let nd = &self.nodes[Self::node_at(m, i)];
+            let nd = &self.nodes[self.node_id(t, m, i)];
             if let Some(l2) = &nd.l2 {
                 let mut acc = l2.b[0];
                 for h in 0..nd.l1.dim_out() {
@@ -425,20 +505,27 @@ impl Fff {
     /// diagnostics, and benches.
     pub fn router(&self) -> TreeRouter {
         assert_eq!(self.cfg.node, 1, "router supports the paper's n = 1 nodes");
+        let trees = self.cfg.trees();
         let mut levels = Vec::with_capacity(self.cfg.depth);
         for m in 0..self.cfg.depth {
             let width = 1usize << m;
-            let mut w = Matrix::zeros(width, self.cfg.dim_in);
-            let mut b = Vec::with_capacity(width);
-            for i in 0..width {
-                let nd = &self.nodes[Self::node_at(m, i)];
-                // n = 1: the dim_in×1 weight column is already contiguous.
-                w.row_mut(i).copy_from_slice(nd.l1.w.as_slice());
-                b.push(nd.l1.b[0]);
+            // Tree-major level block: row `t·2^m + i` is tree `t`'s node
+            // `(m, i)` — one tree's rows are contiguous, and the descent
+            // state-doubling (`s → 2s + bit`) maps tree `t` level `m`
+            // onto tree `t` level `m + 1` automatically.
+            let mut w = Matrix::zeros(trees * width, self.cfg.dim_in);
+            let mut b = Vec::with_capacity(trees * width);
+            for t in 0..trees {
+                for i in 0..width {
+                    let nd = &self.nodes[self.node_id(t, m, i)];
+                    // n = 1: the dim_in×1 weight column is already contiguous.
+                    w.row_mut(t * width + i).copy_from_slice(nd.l1.w.as_slice());
+                    b.push(nd.l1.b[0]);
+                }
             }
             levels.push(RouteLevel { w, b });
         }
-        TreeRouter { depth: self.cfg.depth, dim_in: self.cfg.dim_in, levels }
+        TreeRouter { depth: self.cfg.depth, dim_in: self.cfg.dim_in, trees, levels }
     }
 
     /// Pack trained weights into the inference-layout model at the
@@ -489,6 +576,7 @@ impl Fff {
             dim_out: self.cfg.dim_out,
             leaf: self.cfg.leaf,
             precision,
+            trees: self.cfg.trees(),
             router: self.router(),
             leaf_w1t,
             leaf_w1p,
@@ -508,14 +596,19 @@ impl Fff {
     /// the counts are identical either way.
     pub fn region_histogram(&self, x: &Matrix) -> Vec<usize> {
         let mut hist = vec![0usize; self.cfg.num_leaves()];
-        let amortized = x.rows() * self.cfg.depth.max(1) >= self.cfg.num_nodes();
+        let amortized = x.rows() * self.cfg.trees() * self.cfg.depth.max(1) >= self.cfg.num_nodes();
         if self.cfg.node == 1 && amortized {
+            // Batched slot values are already `t·2^d + leaf` — the
+            // tree-major histogram index.
             for leaf in self.router().route_batch(x) {
                 hist[leaf] += 1;
             }
         } else {
+            let lpt = self.cfg.leaves_per_tree();
             for r in 0..x.rows() {
-                hist[self.leaf_index(x.row(r))] += 1;
+                for t in 0..self.cfg.trees() {
+                    hist[t * lpt + self.leaf_index_tree(t, x.row(r))] += 1;
+                }
             }
         }
         hist
@@ -524,10 +617,11 @@ impl Fff {
     /// The pre-PR-5 per-node training forward, kept as (a) the engine for
     /// `node > 1` architectures the level-batched path does not cover,
     /// (b) the benches' baseline, and (c) the oracle the level-batched
-    /// engine is property-tested against. Pairs with
-    /// [`Fff::backward_baseline`]; draws the same transposition stream
-    /// (node BFS order) as the batched path, so the two engines agree on
-    /// a shared seed.
+    /// engine is property-tested against (including `parallel_size > 1`
+    /// banks). Pairs with [`Fff::backward_baseline`]; draws the same
+    /// transposition stream (level-major, trees then nodes within a
+    /// level — single-tree BFS order at P = 1) as the batched path, so
+    /// the two engines agree on a shared seed.
     pub fn forward_train_baseline(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
         self.forward_train_per_node(x, rng)
     }
@@ -552,6 +646,8 @@ impl Fff {
     fn forward_train_batched(&mut self, x: &Matrix, rng: &mut Rng, y: &mut Matrix) {
         let b = x.rows();
         let d = self.cfg.depth;
+        let trees = self.cfg.trees();
+        let npt = self.cfg.nodes_per_tree();
         let dim_in = self.cfg.dim_in;
         let dim_out = self.cfg.dim_out;
         assert_eq!(x.cols(), dim_in, "forward_train: input dim mismatch");
@@ -565,34 +661,43 @@ impl Fff {
         self.train.x.resize(b, dim_in);
         self.train.x.as_mut_slice().copy_from_slice(x.as_slice());
 
-        // Root prefix weight: every sample starts at 1.
-        self.train.prefix[0].resize(b, 1);
+        // Root prefix weight: every sample starts every tree at 1.
+        self.train.prefix[0].resize(b, trees);
         self.train.prefix[0].as_mut_slice().fill(1.0);
 
         for m in 0..d {
             let width = 1usize << m;
+            // All `P` trees' level-`m` nodes concatenated tree-major:
+            // column `s = t·2^m + i` is tree `t`'s node `(m, i)`, so one
+            // GEMM covers the whole level of every tree, and the
+            // child-doubling `s → 2s, 2s+1` lands inside tree `t`'s
+            // block of the next level automatically.
+            let w_all = trees * width;
             // Gather the level's boundaries into GEMM layout
-            // (dim_in × width) and draw this batch's transpositions, in
-            // the same node order as the per-node engine (shared rng
-            // stream → identical flips on a shared seed).
+            // (dim_in × P·width) and draw this batch's transpositions,
+            // in the same (level, tree, node) order as the per-node
+            // engine (shared rng stream → identical flips on a shared
+            // seed).
             {
                 let lw = &mut self.train.level_w[m];
-                lw.resize(dim_in, width);
+                lw.resize(dim_in, w_all);
                 let lb = &mut self.train.level_b[m];
                 lb.clear();
                 let flips = &mut self.train.flips[m];
                 flips.clear();
-                for i in 0..width {
-                    let nd = &self.nodes[Self::node_at(m, i)];
-                    // n = 1: the dim_in×1 weight column is contiguous.
-                    for (j, &wj) in nd.l1.w.as_slice().iter().enumerate() {
-                        lw.set(j, i, wj);
+                for t in 0..trees {
+                    for i in 0..width {
+                        let nd = &self.nodes[self.node_id(t, m, i)];
+                        // n = 1: the dim_in×1 weight column is contiguous.
+                        for (j, &wj) in nd.l1.w.as_slice().iter().enumerate() {
+                            lw.set(j, t * width + i, wj);
+                        }
+                        lb.push(nd.l1.b[0]);
+                        flips.push(
+                            self.cfg.transposition_p > 0.0
+                                && rng.bernoulli(self.cfg.transposition_p as f64),
+                        );
                     }
-                    lb.push(nd.l1.b[0]);
-                    flips.push(
-                        self.cfg.transposition_p > 0.0
-                            && rng.bernoulli(self.cfg.transposition_p as f64),
-                    );
                 }
             }
             // Every node logit of the level in one GEMM, bias fused.
@@ -601,15 +706,15 @@ impl Fff {
                 gemm_bias_into(x, &tc.level_w[m], &tc.level_b[m], &mut tc.logits[m]);
             }
             // Sigmoid → probs, prefix-weight update, entropy partials:
-            // one sharded row-band pass.
+            // one sharded row-band pass over the concatenated level.
             {
                 let tc = &mut self.train;
-                tc.probs[m].resize(b, width);
-                tc.partials.resize(ns, width);
+                tc.probs[m].resize(b, w_all);
+                tc.partials.resize(ns, w_all);
                 let (lower, upper) = tc.prefix.split_at_mut(m + 1);
                 let cur: &Matrix = &lower[m];
                 let next = &mut upper[0];
-                next.resize(b, 2 * width);
+                next.resize(b, 2 * w_all);
                 let z: &Matrix = &tc.logits[m];
                 let flips: &[bool] = &tc.flips[m];
                 let pptr = SendPtr(tc.probs[m].as_mut_slice().as_mut_ptr());
@@ -620,18 +725,18 @@ impl Fff {
                     // SAFETY: shard `s` exclusively owns rows r0..r1 of
                     // probs/next and row `s` of partials; `run` blocks
                     // until every shard retires.
-                    let part = unsafe { from_raw_parts_mut(partptr.0.add(s * width), width) };
+                    let part = unsafe { from_raw_parts_mut(partptr.0.add(s * w_all), w_all) };
                     part.fill(0.0);
                     for r in r0..r1 {
                         let zrow = z.row(r);
                         let wrow = cur.row(r);
                         // SAFETY: row `r` of probs lies in this shard's
                         // exclusive r0..r1 band (see above).
-                        let prow = unsafe { from_raw_parts_mut(pptr.0.add(r * width), width) };
+                        let prow = unsafe { from_raw_parts_mut(pptr.0.add(r * w_all), w_all) };
                         // SAFETY: row `r` of next, same exclusive band.
                         let nrow =
-                            unsafe { from_raw_parts_mut(nptr.0.add(r * 2 * width), 2 * width) };
-                        for i in 0..width {
+                            unsafe { from_raw_parts_mut(nptr.0.add(r * 2 * w_all), 2 * w_all) };
+                        for i in 0..w_all {
                             let p = sigmoid(zrow[i]);
                             prow[i] = p;
                             part[i] += bernoulli_entropy(p);
@@ -643,13 +748,15 @@ impl Fff {
                     }
                 });
                 // Hardening monitor: partials reduced in shard order.
-                let base = width - 1; // node_at(m, 0)
-                for i in 0..width {
+                // Column `s = t·2^m + i` of the concatenated level is
+                // node `(t, m, i)` in the tree-major entropy array.
+                for s in 0..w_all {
+                    let (t, i) = (s / width, s % width);
                     let mut acc = 0.0f32;
-                    for s in 0..ns {
-                        acc += tc.partials.get(s, i);
+                    for sh in 0..ns {
+                        acc += tc.partials.get(sh, s);
                     }
-                    self.last_entropies[base + i] = acc / b as f32;
+                    self.last_entropies[t * npt + (width - 1) + i] = acc / b as f32;
                 }
             }
         }
@@ -732,6 +839,8 @@ impl Fff {
         assert!(self.train.valid, "backward before forward_train");
         self.train.valid = false;
         let d = self.cfg.depth;
+        let trees = self.cfg.trees();
+        let npt = self.cfg.nodes_per_tree();
         let dim_in = self.cfg.dim_in;
         let dim_out = self.cfg.dim_out;
         let leaf = self.cfg.leaf;
@@ -872,12 +981,15 @@ impl Fff {
             }
         }
 
-        // ---- Tree upsweep: from g = dc at level d up to the root ----
+        // ---- Tree upsweep: from g = dc at level d up to the root, all
+        //      `P` trees side by side in the concatenated level layout
+        //      (column `s = t·2^m + i`; children at `2s`, `2s+1`). ----
         for m in (0..d).rev() {
             let width = 1usize << m;
+            let w_all = trees * width;
             let tc = &mut self.train;
-            tc.g_up.resize(b, width);
-            tc.dz.resize(b, width);
+            tc.g_up.resize(b, w_all);
+            tc.dz.resize(b, w_all);
             {
                 let g: &Matrix = &tc.g;
                 let probs: &Matrix = &tc.probs[m];
@@ -892,10 +1004,10 @@ impl Fff {
                     for r in r0..r1 {
                         let grow = g.row(r);
                         // SAFETY: shards own disjoint rows of g_up/dz.
-                        let gup = unsafe { from_raw_parts_mut(guptr.0.add(r * width), width) };
+                        let gup = unsafe { from_raw_parts_mut(guptr.0.add(r * w_all), w_all) };
                         // SAFETY: row `r` of dz, same exclusive band.
-                        let dzrow = unsafe { from_raw_parts_mut(dzptr.0.add(r * width), width) };
-                        for i in 0..width {
+                        let dzrow = unsafe { from_raw_parts_mut(dzptr.0.add(r * w_all), w_all) };
+                        for i in 0..w_all {
                             let gl = grow[2 * i];
                             let gr = grow[2 * i + 1];
                             let p = probs.get(r, i);
@@ -925,19 +1037,21 @@ impl Fff {
                 });
             }
             if !frozen {
-                // dW_m = dZᵀ·X (row i = node i's contiguous gradient).
-                tc.dw.resize(width, dim_in);
+                // dW_m = dZᵀ·X (row s = node (t, m, i)'s contiguous
+                // gradient, s = t·2^m + i).
+                tc.dw.resize(w_all, dim_in);
                 tc.dw.fill_zero();
                 gemm_tn_acc(&tc.dz, &tc.x, &mut tc.dw);
                 tc.level_gb.clear();
-                tc.level_gb.resize(width, 0.0);
+                tc.level_gb.resize(w_all, 0.0);
                 col_sums_sharded(&tc.dz, &mut tc.partials, &mut tc.level_gb);
-                for i in 0..width {
-                    let nd = &mut self.nodes[Self::node_at(m, i)];
-                    for (gj, &dj) in nd.l1.gw.as_mut_slice().iter_mut().zip(tc.dw.row(i)) {
+                for s in 0..w_all {
+                    let (t, i) = (s / width, s % width);
+                    let nd = &mut self.nodes[t * npt + Self::node_at(m, i)];
+                    for (gj, &dj) in nd.l1.gw.as_mut_slice().iter_mut().zip(tc.dw.row(s)) {
                         *gj += dj;
                     }
-                    nd.l1.gb[0] += tc.level_gb[i];
+                    nd.l1.gb[0] += tc.level_gb[s];
                 }
                 // dx += dZ·W_mᵀ — one product for the whole level.
                 gemm_nt_acc(&tc.dz, &tc.level_w[m], dx);
@@ -986,25 +1100,37 @@ impl Model for Fff {
 
     fn forward_infer_into(&self, x: &Matrix, y: &mut Matrix) {
         y.resize(x.rows(), self.cfg.dim_out);
+        let trees = self.cfg.trees();
+        let lpt = self.cfg.leaves_per_tree();
         // One thread-local hidden buffer for the whole batch (it is
-        // fully rewritten per sample) — trainer scoring passes that
-        // retain `y` run this allocation-free once warm.
+        // fully rewritten per sample and tree) — trainer scoring passes
+        // that retain `y` run this allocation-free once warm.
         scratch::with_f32(self.cfg.leaf, |a1| {
             for r in 0..x.rows() {
                 let xr = x.row(r);
-                let leaf = &self.leaves[self.leaf_index(xr)];
-                for (hn, a) in a1.iter_mut().enumerate() {
-                    let mut acc = leaf.l1.b[hn];
-                    for (j, &xv) in xr.iter().enumerate() {
-                        acc += xv * leaf.l1.w.get(j, hn);
-                    }
-                    *a = acc.max(0.0);
-                }
                 let out = y.row_mut(r);
-                out.copy_from_slice(&leaf.l2.b);
-                for (hn, &a) in a1.iter().enumerate() {
-                    if a > 0.0 {
-                        crate::tensor::axpy_slice(a, leaf.l2.w.row(hn), out);
+                // Parallel trees sum in ascending tree order; tree 0
+                // writes, the rest accumulate in place.
+                for t in 0..trees {
+                    let leaf = &self.leaves[t * lpt + self.leaf_index_tree(t, xr)];
+                    for (hn, a) in a1.iter_mut().enumerate() {
+                        let mut acc = leaf.l1.b[hn];
+                        for (j, &xv) in xr.iter().enumerate() {
+                            acc += xv * leaf.l1.w.get(j, hn);
+                        }
+                        *a = acc.max(0.0);
+                    }
+                    if t == 0 {
+                        out.copy_from_slice(&leaf.l2.b);
+                    } else {
+                        for (o, &bv) in out.iter_mut().zip(&leaf.l2.b) {
+                            *o += bv;
+                        }
+                    }
+                    for (hn, &a) in a1.iter().enumerate() {
+                        if a > 0.0 {
+                            crate::tensor::axpy_slice(a, leaf.l2.w.row(hn), out);
+                        }
                     }
                 }
             }
@@ -1051,43 +1177,55 @@ impl Fff {
         self.train.valid = false; // invalidate the level-batched cache
         let b = x.rows();
         let d = self.cfg.depth;
+        let trees = self.cfg.trees();
+        let npt = self.cfg.nodes_per_tree();
         let num_nodes = self.cfg.num_nodes();
-        let mut probs = Vec::with_capacity(num_nodes);
-        let mut logits = Vec::with_capacity(num_nodes);
-        let mut hidden = Vec::with_capacity(num_nodes);
-        let mut transposed = Vec::with_capacity(num_nodes);
-        // Prefix path weights, level by level.
+        // Caches are index-assigned (not pushed): the walk below visits
+        // nodes in (level, tree, index) order — matching the batched
+        // engine's transposition-draw stream — while the cache arrays
+        // stay in tree-major node-id order.
+        let mut probs = vec![Vec::new(); num_nodes];
+        let mut logits = vec![Vec::new(); num_nodes];
+        let mut hidden: Vec<Option<Matrix>> = vec![None; num_nodes];
+        let mut transposed = vec![false; num_nodes];
+        // Prefix path weights, level by level. Columns are tree-major
+        // (`t·2^m + i`), so child columns are `2·col + bit` exactly as in
+        // the single-tree layout and the leaf mixture below reads
+        // `prefix[d]` with the tree-major leaf index unchanged.
         let mut prefix: Vec<Matrix> = Vec::with_capacity(d + 1);
-        prefix.push(Matrix::full(b, 1, 1.0));
+        prefix.push(Matrix::full(b, trees, 1.0));
         for m in 0..d {
-            let mut next = Matrix::zeros(b, 1 << (m + 1));
-            for i in 0..(1 << m) {
-                let node = Self::node_at(m, i);
-                let (lg, mut pr, hd) = self.node_forward(node, x);
-                let flip = self.cfg.transposition_p > 0.0
-                    && rng.bernoulli(self.cfg.transposition_p as f64);
-                if flip {
-                    for p in pr.iter_mut() {
-                        *p = 1.0 - *p;
+            let width = 1usize << m;
+            let mut next = Matrix::zeros(b, trees * width * 2);
+            for t in 0..trees {
+                for i in 0..width {
+                    let node = t * npt + Self::node_at(m, i);
+                    let col = t * width + i;
+                    let (lg, mut pr, hd) = self.node_forward(node, x);
+                    let flip = self.cfg.transposition_p > 0.0
+                        && rng.bernoulli(self.cfg.transposition_p as f64);
+                    if flip {
+                        for p in pr.iter_mut() {
+                            *p = 1.0 - *p;
+                        }
                     }
-                }
-                for r in 0..b {
-                    let w = prefix[m].get(r, i);
-                    let p = pr[r];
-                    next.set(r, 2 * i, w * (1.0 - p));
-                    next.set(r, 2 * i + 1, w * p);
-                }
-                // Cache raw (pre-transposition) probabilities.
-                if flip {
-                    for p in pr.iter_mut() {
-                        *p = 1.0 - *p;
+                    for r in 0..b {
+                        let w = prefix[m].get(r, col);
+                        let p = pr[r];
+                        next.set(r, 2 * col, w * (1.0 - p));
+                        next.set(r, 2 * col + 1, w * p);
                     }
+                    // Cache raw (pre-transposition) probabilities.
+                    if flip {
+                        for p in pr.iter_mut() {
+                            *p = 1.0 - *p;
+                        }
+                    }
+                    probs[node] = pr;
+                    logits[node] = lg;
+                    hidden[node] = hd;
+                    transposed[node] = flip;
                 }
-                debug_assert_eq!(probs.len(), node);
-                probs.push(pr);
-                logits.push(lg);
-                hidden.push(hd);
-                transposed.push(flip);
             }
             prefix.push(next);
         }
@@ -1165,53 +1303,61 @@ impl Fff {
         }
 
         // ---- Tree backward: from dc up to the root ----
-        // g[m] holds dL/d(prefix weight) at level m.
+        // g[m] holds dL/d(prefix weight) at level m, columns tree-major
+        // (`t·2^m + i`) like the forward's prefix matrices, so child
+        // columns are `2·col + bit` for any tree count.
+        let trees = self.cfg.trees();
+        let npt = self.cfg.nodes_per_tree();
         let h = self.cfg.hardening;
         let frozen = h.is_infinite();
         let mut g = dc; // level d
         for m in (0..d).rev() {
-            let mut g_up = Matrix::zeros(b, 1 << m);
-            for i in 0..(1 << m) {
-                let node = Self::node_at(m, i);
-                let raw_p = &cache.probs[node];
-                let flip = cache.transposed[node];
-                let mut dlogit = vec![0.0f32; b];
-                for r in 0..b {
-                    let gl = g.get(r, 2 * i);
-                    let gr = g.get(r, 2 * i + 1);
-                    let p_eff = if flip { 1.0 - raw_p[r] } else { raw_p[r] };
-                    g_up.set(r, i, (1.0 - p_eff) * gl + p_eff * gr);
-                    if !frozen {
-                        // dL/dp_eff = w_parent · (g_right − g_left); chain
-                        // through transposition (dp_eff/dp_raw = ±1) and
-                        // the sigmoid.
-                        let mut dp = cache.prefix[m].get(r, i) * (gr - gl);
-                        if flip {
-                            dp = -dp;
-                        }
-                        let p = raw_p[r];
-                        let mut dz = dp * p * (1.0 - p);
-                        if h > 0.0 {
-                            dz += h / b as f32
-                                * super::loss::hardening_grad_logit(cache.logits[node][r], p);
-                        }
-                        dlogit[r] = dz;
-                    }
-                }
-                if !frozen {
-                    let dz = Matrix::from_vec(b, 1, dlogit);
-                    let nd = &mut self.nodes[node];
-                    if let Some(l2) = &mut nd.l2 {
-                        let hidden = cache.hidden[node].as_ref().unwrap();
-                        let mut dh = l2.backward(hidden, &dz);
-                        for (v, &a) in dh.as_mut_slice().iter_mut().zip(hidden.as_slice()) {
-                            if a <= 0.0 {
-                                *v = 0.0;
+            let width = 1usize << m;
+            let mut g_up = Matrix::zeros(b, trees * width);
+            for t in 0..trees {
+                for i in 0..width {
+                    let node = t * npt + Self::node_at(m, i);
+                    let col = t * width + i;
+                    let raw_p = &cache.probs[node];
+                    let flip = cache.transposed[node];
+                    let mut dlogit = vec![0.0f32; b];
+                    for r in 0..b {
+                        let gl = g.get(r, 2 * col);
+                        let gr = g.get(r, 2 * col + 1);
+                        let p_eff = if flip { 1.0 - raw_p[r] } else { raw_p[r] };
+                        g_up.set(r, col, (1.0 - p_eff) * gl + p_eff * gr);
+                        if !frozen {
+                            // dL/dp_eff = w_parent · (g_right − g_left); chain
+                            // through transposition (dp_eff/dp_raw = ±1) and
+                            // the sigmoid.
+                            let mut dp = cache.prefix[m].get(r, col) * (gr - gl);
+                            if flip {
+                                dp = -dp;
                             }
+                            let p = raw_p[r];
+                            let mut dz = dp * p * (1.0 - p);
+                            if h > 0.0 {
+                                dz += h / b as f32
+                                    * super::loss::hardening_grad_logit(cache.logits[node][r], p);
+                            }
+                            dlogit[r] = dz;
                         }
-                        dx.add_assign(&nd.l1.backward(&cache.x, &dh));
-                    } else {
-                        dx.add_assign(&nd.l1.backward(&cache.x, &dz));
+                    }
+                    if !frozen {
+                        let dz = Matrix::from_vec(b, 1, dlogit);
+                        let nd = &mut self.nodes[node];
+                        if let Some(l2) = &mut nd.l2 {
+                            let hidden = cache.hidden[node].as_ref().unwrap();
+                            let mut dh = l2.backward(hidden, &dz);
+                            for (v, &a) in dh.as_mut_slice().iter_mut().zip(hidden.as_slice()) {
+                                if a <= 0.0 {
+                                    *v = 0.0;
+                                }
+                            }
+                            dx.add_assign(&nd.l1.backward(&cache.x, &dh));
+                        } else {
+                            dx.add_assign(&nd.l1.backward(&cache.x, &dz));
+                        }
                     }
                 }
             }
@@ -1268,6 +1414,12 @@ const ROUTE_PAR_MIN_ROWS: usize = 128;
 pub struct TreeRouter {
     depth: usize,
     dim_in: usize,
+    /// Parallel trees sharing the level blocks (UltraFastBERT
+    /// `parallel_size`): level `m` holds `trees · 2^m` rows, tree-major,
+    /// so tree `t`'s node `(m, i)` is row `t·2^m + i` and the descent
+    /// doubling `s → 2s + bit` stays tree-local. 1 = the paper's single
+    /// tree, in exactly the pre-parallel layout.
+    trees: usize,
     levels: Vec<RouteLevel>,
 }
 
@@ -1280,19 +1432,43 @@ impl TreeRouter {
         self.dim_in
     }
 
-    /// Single-sample descent: the leaf index for `x` (O(d · dim_in)).
-    #[inline]
-    pub fn route(&self, x: &[f32]) -> usize {
-        debug_assert_eq!(x.len(), self.dim_in);
-        descend(self.depth, |m, i| {
-            let level = &self.levels[m];
-            routing_dot(level.w.row(i), x) + level.b[i]
-        })
+    /// Parallel trees this router descends per sample (`P ≥ 1`).
+    pub fn trees(&self) -> usize {
+        self.trees
     }
 
-    /// Batched descent: the raw leaf index in `[0, 2^depth)` for every
-    /// row of `x`, bit-identical to per-sample [`TreeRouter::route`] at
-    /// any batch shape and thread count.
+    /// Single-sample descent of **tree 0**: the leaf index for `x`
+    /// (O(d · dim_in)). Tree 0 occupies rows `0..2^m` of every level, so
+    /// this is the whole model at `trees == 1`.
+    #[inline]
+    pub fn route(&self, x: &[f32]) -> usize {
+        self.route_tree(0, x)
+    }
+
+    /// Single-sample descent of tree `t`: the per-tree leaf index in
+    /// `[0, 2^depth)` for `x`. Seeding the level-0 state with `t` (tree
+    /// `t`'s root row) keeps every subsequent `2s + bit` doubling inside
+    /// tree `t`'s row band — the same arithmetic the batched slots use.
+    #[inline]
+    pub fn route_tree(&self, t: usize, x: &[f32]) -> usize {
+        debug_assert_eq!(x.len(), self.dim_in);
+        debug_assert!(t < self.trees);
+        let mut s = t;
+        for level in &self.levels {
+            let logit = routing_dot(level.w.row(s), x) + level.b[s];
+            s = 2 * s + usize::from(logit >= 0.0);
+        }
+        s - (t << self.depth)
+    }
+
+    /// Batched descent: one routed **slot value** per (sample, tree),
+    /// sample-major — slot `r·P + t` holds `t·2^depth + leaf`, where
+    /// `leaf` is tree `t`'s per-tree leaf index in `[0, 2^depth)` for
+    /// row `r` ([`bank_of`] folds a slot value to its leaf bank). With
+    /// one tree this is exactly the pre-parallel contract — one raw leaf
+    /// index per row — and every path is bit-identical to per-sample
+    /// [`TreeRouter::route`]/[`TreeRouter::route_tree`] at any batch
+    /// shape and thread count.
     pub fn route_batch(&self, x: &Matrix) -> Vec<usize> {
         let mut idx = Vec::new();
         self.route_batch_into(x, &mut idx);
@@ -1300,65 +1476,77 @@ impl TreeRouter {
     }
 
     /// [`TreeRouter::route_batch`] into a caller-retained buffer: `idx`
-    /// is cleared and resized to `x.rows()`, reusing its capacity — a
-    /// serving worker that keeps the vector across batches stops
-    /// allocating once it has seen its largest batch.
+    /// is cleared and resized to `x.rows() · trees`, reusing its
+    /// capacity — a serving worker that keeps the vector across batches
+    /// stops allocating once it has seen its largest batch.
     pub fn route_batch_into(&self, x: &Matrix, idx: &mut Vec<usize>) {
         assert_eq!(x.cols(), self.dim_in, "route_batch: input dim mismatch");
         let b = x.rows();
-        // The descent uses `idx` as its per-level node state starting at
-        // the root, so the reset to zero is load-bearing, not just init.
+        let trees = self.trees;
+        let n = b * trees;
+        // The descent uses `idx` as its per-level node state: slot
+        // `r·trees + t` starts at tree `t`'s root row — which is `t`, so
+        // the single-tree reset to zero is the `t = 0` case of the same
+        // seeding, and the doubling below keeps each slot inside its
+        // tree's row band. The reset is load-bearing, not just init.
         idx.clear();
-        idx.resize(b, 0);
-        if self.depth == 0 || b == 0 {
+        idx.resize(n, 0);
+        if trees > 1 {
+            for (s, ix) in idx.iter_mut().enumerate() {
+                *ix = s % trees;
+            }
+        }
+        if self.depth == 0 || n == 0 {
             return;
         }
         let pool = crate::tensor::pool::current();
-        let flops = 2 * b * self.depth * self.dim_in;
+        let flops = 2 * n * self.depth * self.dim_in;
         if pool.threads() > 1
-            && b >= 2 * ROUTE_PAR_MIN_ROWS
+            && n >= 2 * ROUTE_PAR_MIN_ROWS
             && flops >= crate::tensor::parallel_flop_threshold()
         {
-            let band = b.div_ceil(pool.threads() * 4).clamp(ROUTE_PAR_MIN_ROWS, 4 * ROUTE_BLOCK);
-            let n_bands = b.div_ceil(band);
+            let band = n.div_ceil(pool.threads() * 4).clamp(ROUTE_PAR_MIN_ROWS, 4 * ROUTE_BLOCK);
+            let n_bands = n.div_ceil(band);
             let iptr = crate::tensor::pool::SendPtr(idx.as_mut_ptr());
             pool.run(n_bands, &|t| {
-                let r0 = t * band;
-                let rows = band.min(b - r0);
-                // SAFETY: bands are disjoint row ranges of `idx`, and
+                let s0 = t * band;
+                let slots = band.min(n - s0);
+                // SAFETY: bands are disjoint slot ranges of `idx`, and
                 // `run` blocks until every task has retired.
-                let band_idx = unsafe { std::slice::from_raw_parts_mut(iptr.0.add(r0), rows) };
-                self.route_rows(x, r0, band_idx);
+                let band_idx = unsafe { std::slice::from_raw_parts_mut(iptr.0.add(s0), slots) };
+                self.route_slots(x, s0, band_idx);
             });
         } else {
-            self.route_rows(x, 0, idx);
+            self.route_slots(x, 0, idx);
         }
     }
 
-    /// Descend `idx.len()` samples starting at row `r0`, block by block.
-    fn route_rows(&self, x: &Matrix, r0: usize, idx: &mut [usize]) {
+    /// Descend `idx.len()` routing slots starting at slot `s0`, block by
+    /// block (slot `s` reads sample row `s / trees`).
+    fn route_slots(&self, x: &Matrix, s0: usize, idx: &mut [usize]) {
         let mut i0 = 0;
         while i0 < idx.len() {
-            let rows = ROUTE_BLOCK.min(idx.len() - i0);
-            self.route_block(x, r0 + i0, &mut idx[i0..i0 + rows]);
-            i0 += rows;
+            let slots = ROUTE_BLOCK.min(idx.len() - i0);
+            self.route_block(x, s0 + i0, &mut idx[i0..i0 + slots]);
+            i0 += slots;
         }
     }
 
-    /// Level-synchronous descent of one row block. `idx[i]` holds sample
-    /// `r0 + i`'s node index within the current level; after the last
-    /// level it is the leaf index.
-    fn route_block(&self, x: &Matrix, r0: usize, idx: &mut [usize]) {
+    /// Level-synchronous descent of one slot block. `idx[i]` holds slot
+    /// `s0 + i`'s tree-major node row within the current level; after
+    /// the last level it is the slot value `t·2^depth + leaf`.
+    fn route_block(&self, x: &Matrix, s0: usize, idx: &mut [usize]) {
         // Resolve the ISA-dispatched dot once per block instead of once
         // per logit (the hookup into `tensor::kernels`; same function
         // `routing_dot` resolves to, so numerics are unchanged).
         let rdot = crate::tensor::kernels::table().routing_dot;
+        let trees = self.trees;
         for level in &self.levels {
             if level.w.len() * std::mem::size_of::<f32>() <= ROUTE_RESIDENT_BYTES {
                 // Resident kernel: the level block stays cached across the
                 // whole block, so a plain pass is compute-bound.
                 for (i, ix) in idx.iter_mut().enumerate() {
-                    let logit = rdot(level.w.row(*ix), x.row(r0 + i)) + level.b[*ix];
+                    let logit = rdot(level.w.row(*ix), x.row((s0 + i) / trees)) + level.b[*ix];
                     *ix = 2 * *ix + usize::from(logit >= 0.0);
                 }
             } else {
@@ -1372,7 +1560,7 @@ impl TreeRouter {
                         prefetch_slice(level.w.row(idx[i + ROUTE_PREFETCH_AHEAD]));
                     }
                     let ix = idx[i];
-                    let logit = rdot(level.w.row(ix), x.row(r0 + i)) + level.b[ix];
+                    let logit = rdot(level.w.row(ix), x.row((s0 + i) / trees)) + level.b[ix];
                     idx[i] = 2 * ix + usize::from(logit >= 0.0);
                 }
             }
@@ -1387,15 +1575,20 @@ impl TreeRouter {
 pub struct RoutingStats {
     /// Rows in the batch.
     pub samples: usize,
-    /// Leaf buckets holding at least one sample.
+    /// Parallel trees routed per row (`P ≥ 1`): the batch occupies
+    /// `samples · trees` (tree, leaf) bucket slots in total, and the
+    /// bucket histogram spans every tree's banks.
+    pub trees: usize,
+    /// Leaf buckets holding at least one sample (across all trees).
     pub distinct_leaves: usize,
     /// Size of the largest bucket.
     pub max_bucket: usize,
 }
 
 impl RoutingStats {
-    /// Summarize raw leaf indices (as returned by `route_batch`) under an
-    /// allocation of `n_alloc` leaf banks (aliased models fold indices).
+    /// Summarize raw leaf indices (as returned by `route_batch` of a
+    /// single-tree model) under an allocation of `n_alloc` leaf banks
+    /// (aliased models fold indices).
     pub fn from_leaf_ids(leaf_of: &[usize], n_alloc: usize) -> RoutingStats {
         let mut counts = Vec::new();
         bucket_counts(leaf_of, n_alloc.max(1), &mut counts);
@@ -1407,19 +1600,29 @@ impl RoutingStats {
     /// from the single histogram pass it performs anyway
     /// ([`FffInfer::infer_batch_stats_into`]).
     pub fn from_counts(counts: &[usize], samples: usize) -> RoutingStats {
+        RoutingStats::from_counts_parallel(counts, samples, 1)
+    }
+
+    /// [`RoutingStats::from_counts`] over a parallel-tree bank histogram
+    /// ([`bucket_counts_banked`]): `counts` spans the `trees · n_alloc`
+    /// tree-major banks of a `rows`-row batch. `trees = 1` is exactly
+    /// `from_counts`.
+    pub fn from_counts_parallel(counts: &[usize], rows: usize, trees: usize) -> RoutingStats {
         RoutingStats {
-            samples,
+            samples: rows,
+            trees: trees.max(1),
             distinct_leaves: counts.iter().filter(|&&c| c > 0).count(),
             max_bucket: counts.iter().copied().max().unwrap_or(0),
         }
     }
 
-    /// Mean samples per non-empty leaf bucket.
+    /// Mean routed slots per non-empty leaf bucket (`samples · trees`
+    /// slots total — each row lands in one bucket per tree).
     pub fn mean_occupancy(&self) -> f64 {
         if self.distinct_leaves == 0 {
             return 0.0;
         }
-        self.samples as f64 / self.distinct_leaves as f64
+        (self.samples * self.trees) as f64 / self.distinct_leaves as f64
     }
 
     /// Largest bucket relative to the mean (1.0 = perfectly balanced).
@@ -1446,6 +1649,12 @@ pub struct FffInfer {
     /// counts, bucket splits, and kernel kinds — integer accumulation
     /// plus a fixed dequant statement make that exact, not approximate.
     precision: Precision,
+    /// Parallel trees (UltraFastBERT `parallel_size`): the model's
+    /// output is the **sum** of one leaf evaluation per tree. Every
+    /// per-leaf vector below is tree-major — bank `t·alloc_leaves + j`
+    /// is tree `t`'s leaf `j` — and 1 is the paper's single tree with
+    /// the storage layout (and all served bits) unchanged.
+    trees: usize,
     router: TreeRouter,
     leaf_w1t: Vec<Matrix>, // per leaf: ℓ × dim_in (per-sample layout)
     /// Per leaf: W1 prepacked into the microkernel's B panels at compile
@@ -1494,8 +1703,15 @@ pub struct InferScratch {
     /// to whole row-panels) so concurrent sweep-1 tasks write disjoint
     /// regions. Grow-only like everything else here.
     qa1: Vec<u8>,
-    /// Row scales paired with `qa1`, `seg_pad` slots per segment.
+    /// Row scales paired with `qa1`, `sa1` slots per segment.
     sa1: Vec<f32>,
+    /// Parallel trees only (never grows at P = 1): sample row per
+    /// bucket-sorted slot (`order[i] / trees`), so segment GEMMs gather
+    /// input rows while scattering into per-slot stage rows.
+    xrows: Vec<usize>,
+    /// Parallel trees only: per-slot leaf outputs (`b·trees × dim_out`)
+    /// staged before the fixed-order per-row tree sum into `y`.
+    stage: Matrix,
 }
 
 impl InferScratch {
@@ -1527,7 +1743,10 @@ impl FffInfer {
     /// [`FffInfer::random`] at an **exact** precision (no `FFF_PRECISION`
     /// resolution) — the bench and test constructor for the int8 serving
     /// mode. Draws the same weight stream as the f32 form, so f32 and
-    /// int8 models from one seed quantize identical weights.
+    /// int8 models from one seed quantize identical weights. The tree
+    /// count is still resolved from the process `FFF_PARALLEL` override
+    /// ([`kernels::resolve_parallel`], default 1); pin it exactly with
+    /// [`FffInfer::random_p`].
     pub fn random_with(
         rng: &mut Rng,
         dim_in: usize,
@@ -1537,27 +1756,51 @@ impl FffInfer {
         max_alloc_leaves: usize,
         precision: Precision,
     ) -> Self {
-        let n_leaves = (1usize << depth).min(max_alloc_leaves.max(1));
+        let trees = kernels::resolve_parallel(1);
+        Self::random_p(rng, dim_in, dim_out, depth, leaf, max_alloc_leaves, precision, trees)
+    }
+
+    /// [`FffInfer::random_with`] at an **exact** tree count (no
+    /// `FFF_PARALLEL` resolution) — the fully-pinned constructor behind
+    /// both env-resolving forms. `trees = 1` draws exactly the
+    /// pre-parallel weight stream, so existing seeds reproduce their
+    /// models bit for bit; each extra tree appends its own level rows
+    /// and leaf banks to the same stream (levels first, tree-major
+    /// within a level, then the `trees·n_alloc` leaf banks).
+    #[allow(clippy::too_many_arguments)]
+    pub fn random_p(
+        rng: &mut Rng,
+        dim_in: usize,
+        dim_out: usize,
+        depth: usize,
+        leaf: usize,
+        max_alloc_leaves: usize,
+        precision: Precision,
+        trees: usize,
+    ) -> Self {
+        let trees = trees.max(1);
+        let n_alloc = (1usize << depth).min(max_alloc_leaves.max(1));
+        let n_banks = trees * n_alloc;
         let mut levels = Vec::with_capacity(depth);
         for m in 0..depth {
-            let width = 1usize << m;
+            let width = trees << m;
             let mut w = Matrix::zeros(width, dim_in);
             rng.fill_normal(w.as_mut_slice(), 0.0, 0.05);
             let mut b = vec![0.0; width];
             rng.fill_normal(&mut b, 0.0, 0.05);
             levels.push(RouteLevel { w, b });
         }
-        let router = TreeRouter { depth, dim_in, levels };
+        let router = TreeRouter { depth, dim_in, trees, levels };
         let quant = precision == Precision::Int8;
         let prepack = !quant && should_prepack();
-        let mut leaf_w1t = Vec::with_capacity(n_leaves);
-        let mut leaf_w1p = Vec::with_capacity(n_leaves);
+        let mut leaf_w1t = Vec::with_capacity(n_banks);
+        let mut leaf_w1p = Vec::with_capacity(n_banks);
         let mut leaf_w1q = Vec::new();
-        let mut leaf_b1 = Vec::with_capacity(n_leaves);
-        let mut leaf_w2 = Vec::with_capacity(n_leaves);
+        let mut leaf_b1 = Vec::with_capacity(n_banks);
+        let mut leaf_w2 = Vec::with_capacity(n_banks);
         let mut leaf_w2q = Vec::new();
-        let mut leaf_b2 = Vec::with_capacity(n_leaves);
-        for _ in 0..n_leaves {
+        let mut leaf_b2 = Vec::with_capacity(n_banks);
+        for _ in 0..n_banks {
             let w1t = init::normal(rng, leaf, dim_in, 0.05);
             if prepack {
                 leaf_w1p.push(PackedB::pack_nt(&w1t));
@@ -1576,6 +1819,7 @@ impl FffInfer {
             dim_out,
             leaf,
             precision,
+            trees,
             router,
             leaf_w1t,
             leaf_w1p,
@@ -1615,12 +1859,68 @@ impl FffInfer {
         &self.router
     }
 
-    /// Number of allocated leaf banks (< `2^depth` when aliased).
-    pub fn alloc_leaves(&self) -> usize {
-        self.leaf_w1t.len()
+    /// Parallel trees this model sums per sample (`P ≥ 1`).
+    pub fn trees(&self) -> usize {
+        self.trees
     }
 
-    /// Tree descent only: the leaf index for `x` (O(d · dim_in)).
+    /// Number of allocated leaf banks **per tree** (< `2^depth` when
+    /// aliased); total storage is `trees() · alloc_leaves()` banks.
+    pub fn alloc_leaves(&self) -> usize {
+        self.leaf_w1t.len() / self.trees
+    }
+
+    /// Clone tree `t` out as a standalone single-tree model — rows
+    /// `t·2^m..(t+1)·2^m` of every level block plus leaf banks
+    /// `t·alloc..(t+1)·alloc`. A diagnostic/test helper (it allocates):
+    /// the parallel model's output is definitionally the sum of its
+    /// tree slices' outputs, which is what the `check_parallel` property
+    /// harness pins bit for bit.
+    pub fn tree_slice(&self, t: usize) -> FffInfer {
+        assert!(t < self.trees, "tree_slice: tree {t} of {}", self.trees);
+        let n_alloc = self.alloc_leaves();
+        let depth = self.router.depth;
+        let mut levels = Vec::with_capacity(depth);
+        for (m, level) in self.router.levels.iter().enumerate() {
+            let width = 1usize << m;
+            let mut w = Matrix::zeros(width, self.router.dim_in);
+            for i in 0..width {
+                w.row_mut(i).copy_from_slice(level.w.row(t * width + i));
+            }
+            let b = level.b[t * width..(t + 1) * width].to_vec();
+            levels.push(RouteLevel { w, b });
+        }
+        let router = TreeRouter { depth, dim_in: self.router.dim_in, trees: 1, levels };
+        let bank = t * n_alloc..(t + 1) * n_alloc;
+        FffInfer {
+            dim_out: self.dim_out,
+            leaf: self.leaf,
+            precision: self.precision,
+            trees: 1,
+            router,
+            leaf_w1t: self.leaf_w1t[bank.clone()].to_vec(),
+            leaf_w1p: if self.leaf_w1p.is_empty() {
+                Vec::new()
+            } else {
+                self.leaf_w1p[bank.clone()].to_vec()
+            },
+            leaf_w1q: if self.leaf_w1q.is_empty() {
+                Vec::new()
+            } else {
+                self.leaf_w1q[bank.clone()].to_vec()
+            },
+            leaf_b1: self.leaf_b1[bank.clone()].to_vec(),
+            leaf_w2: self.leaf_w2[bank.clone()].to_vec(),
+            leaf_w2q: if self.leaf_w2q.is_empty() {
+                Vec::new()
+            } else {
+                self.leaf_w2q[bank.clone()].to_vec()
+            },
+            leaf_b2: self.leaf_b2[bank].to_vec(),
+        }
+    }
+
+    /// Tree descent only: tree 0's leaf index for `x` (O(d · dim_in)).
     #[inline]
     pub fn route(&self, x: &[f32]) -> usize {
         self.router.route(x)
@@ -1637,10 +1937,44 @@ impl FffInfer {
         self.router.route_batch_into(x, idx)
     }
 
-    /// Single-sample `FORWARD_I` into a caller buffer (serving hot path).
+    /// Single-sample `FORWARD_I` into a caller buffer (serving hot
+    /// path). Parallel trees accumulate in **ascending tree order** —
+    /// the same left-fold the grouped engine's staged reduction uses, so
+    /// per-sample and batched serving agree bit for bit at every P.
     pub fn infer_one(&self, x: &[f32], out: &mut [f32]) {
-        let leaf = masked_leaf(self.router.route(x), self.leaf_w1t.len());
-        self.infer_leaf(leaf, x, out);
+        let n_alloc = self.alloc_leaves();
+        self.infer_leaf(masked_leaf(self.router.route(x), n_alloc), x, out);
+        if self.trees > 1 {
+            scratch::with_f32(self.dim_out, |tmp| {
+                for t in 1..self.trees {
+                    let leaf = t * n_alloc + masked_leaf(self.router.route_tree(t, x), n_alloc);
+                    self.infer_leaf(leaf, x, tmp);
+                    for (o, &v) in out.iter_mut().zip(tmp.iter()) {
+                        *o += v;
+                    }
+                }
+            });
+        }
+    }
+
+    /// One sample's `FORWARD_I` from its pre-routed slot values
+    /// (`slots` = this row's `trees` entries of a
+    /// [`TreeRouter::route_batch`] buffer), summing leaf banks in the
+    /// same ascending tree order as [`FffInfer::infer_one`].
+    fn infer_row_sparse(&self, slots: &[usize], x: &[f32], out: &mut [f32]) {
+        let n_alloc = self.alloc_leaves();
+        let lpt = 1usize << self.router.depth;
+        self.infer_leaf(bank_of(slots[0], lpt, n_alloc), x, out);
+        if slots.len() > 1 {
+            scratch::with_f32(self.dim_out, |tmp| {
+                for &slot in &slots[1..] {
+                    self.infer_leaf(bank_of(slot, lpt, n_alloc), x, tmp);
+                    for (o, &v) in out.iter_mut().zip(tmp.iter()) {
+                        *o += v;
+                    }
+                }
+            });
+        }
     }
 
     /// Evaluate leaf `leaf` on `x` into `out` (post-descent hot path).
@@ -1747,15 +2081,25 @@ impl FffInfer {
     ) -> RoutingStats {
         let mut leaf_of = std::mem::take(&mut scratch.leaf_of);
         self.router.route_batch_into(x, &mut leaf_of);
-        let n_alloc = self.leaf_w1t.len();
-        bucket_counts(&leaf_of, n_alloc, &mut scratch.counts);
-        let stats = RoutingStats::from_counts(&scratch.counts, leaf_of.len());
+        let n_alloc = self.alloc_leaves();
+        bucket_counts_banked(
+            &leaf_of,
+            1 << self.router.depth,
+            n_alloc,
+            self.trees,
+            &mut scratch.counts,
+        );
+        let stats = RoutingStats::from_counts_parallel(&scratch.counts, x.rows(), self.trees);
         y.resize(x.rows(), self.dim_out);
         if x.rows() < 2 * n_alloc {
             // Sparse: per-sample leaf evaluation (the histogram was
             // needed for the stats regardless, so nothing is wasted).
             for r in 0..x.rows() {
-                self.infer_leaf(masked_leaf(leaf_of[r], n_alloc), x.row(r), y.row_mut(r));
+                self.infer_row_sparse(
+                    &leaf_of[r * self.trees..(r + 1) * self.trees],
+                    x.row(r),
+                    y.row_mut(r),
+                );
             }
         } else {
             self.infer_grouped_counted(x, &leaf_of, scratch, y);
@@ -1786,13 +2130,17 @@ impl FffInfer {
         scratch: &mut InferScratch,
         y: &mut Matrix,
     ) {
-        assert_eq!(leaf_of.len(), x.rows(), "infer_batch_routed: leaf index count");
-        let n_alloc = self.leaf_w1t.len();
+        assert_eq!(leaf_of.len(), x.rows() * self.trees, "infer_batch_routed: slot count");
+        let n_alloc = self.alloc_leaves();
         y.resize(x.rows(), self.dim_out);
         if x.rows() < 2 * n_alloc {
             // Sparse: per-sample leaf evaluation.
             for r in 0..x.rows() {
-                self.infer_leaf(masked_leaf(leaf_of[r], n_alloc), x.row(r), y.row_mut(r));
+                self.infer_row_sparse(
+                    &leaf_of[r * self.trees..(r + 1) * self.trees],
+                    x.row(r),
+                    y.row_mut(r),
+                );
             }
             return;
         }
@@ -1833,7 +2181,13 @@ impl FffInfer {
         y: &mut Matrix,
     ) {
         // 1) Bucket counts from the (batched) descent.
-        bucket_counts(leaf_of, self.leaf_w1t.len(), &mut scratch.counts);
+        bucket_counts_banked(
+            leaf_of,
+            1 << self.router.depth,
+            self.alloc_leaves(),
+            self.trees,
+            &mut scratch.counts,
+        );
         self.infer_grouped_counted(x, leaf_of, scratch, y);
     }
 
@@ -1848,28 +2202,44 @@ impl FffInfer {
         scratch: &mut InferScratch,
         y: &mut Matrix,
     ) {
-        let n_alloc = self.leaf_w1t.len();
+        let n_alloc = self.alloc_leaves();
+        let trees = self.trees;
+        let lpt = 1usize << self.router.depth;
+        let n_banks = trees * n_alloc;
         let b = x.rows();
-        debug_assert_eq!(scratch.counts.len(), n_alloc);
-        debug_assert_eq!(scratch.counts.iter().sum::<usize>(), b);
+        let slots = leaf_of.len();
+        debug_assert_eq!(slots, b * trees);
+        debug_assert_eq!(scratch.counts.len(), n_banks);
+        debug_assert_eq!(scratch.counts.iter().sum::<usize>(), slots);
         y.resize(b, self.dim_out);
-        // 2) Group rows by leaf (counting sort).
+        // 2) Group routed slots by (tree, leaf) bank (counting sort).
+        //    With one tree a slot IS a sample row and the sort is the
+        //    pre-parallel row sort, bit for bit.
         scratch.offsets.clear();
-        scratch.offsets.resize(n_alloc + 1, 0);
-        for l in 0..n_alloc {
+        scratch.offsets.resize(n_banks + 1, 0);
+        for l in 0..n_banks {
             scratch.offsets[l + 1] = scratch.offsets[l] + scratch.counts[l];
         }
         scratch.order.clear();
-        scratch.order.resize(b, 0);
+        scratch.order.resize(slots, 0);
         scratch.cursor.clear();
-        scratch.cursor.extend_from_slice(&scratch.offsets[..n_alloc]);
-        for (r, &raw) in leaf_of.iter().enumerate() {
-            let l = masked_leaf(raw, n_alloc);
-            scratch.order[scratch.cursor[l]] = r;
+        scratch.cursor.extend_from_slice(&scratch.offsets[..n_banks]);
+        for (s, &raw) in leaf_of.iter().enumerate() {
+            let l = bank_of(raw, lpt, n_alloc);
+            scratch.order[scratch.cursor[l]] = s;
             scratch.cursor[l] += 1;
         }
+        // Parallel trees stage per-slot outputs before the tree sum;
+        // segment GEMMs then gather input row `slot / trees` while
+        // scattering into stage row `slot`. One tree writes `y` rows
+        // directly and never touches the stage/gather buffers.
+        let staged = trees > 1;
+        if staged {
+            scratch.xrows.clear();
+            scratch.xrows.extend(scratch.order.iter().map(|&s| s / trees));
+        }
         // 3) Build the segment work list: one task per non-empty bucket,
-        //    with buckets larger than `seg` rows split so the pool has
+        //    with buckets larger than `seg` slots split so the pool has
         //    work for every thread even when one leaf holds most of the
         //    batch (the old per-bucket dispatch serialized exactly that
         //    worst case). Splitting never changes numerics: both bucket
@@ -1879,18 +2249,18 @@ impl FffInfer {
         let dim_out = self.dim_out;
         let leaf = self.leaf;
         let pool = crate::tensor::pool::current();
-        let flops = 2 * b * leaf * (dim_in + dim_out);
+        let flops = 2 * slots * leaf * (dim_in + dim_out);
         let parallel =
             pool.threads() > 1 && flops >= crate::tensor::parallel_flop_threshold();
         let seg = if parallel {
             // ~4 tasks per thread; segments stay at least two row-panels
             // tall so per-segment setup cannot dominate.
-            b.div_ceil(pool.threads() * 4).max(8)
+            slots.div_ceil(pool.threads() * 4).max(8)
         } else {
             usize::MAX
         };
         scratch.segments.clear();
-        for l in 0..n_alloc {
+        for l in 0..n_banks {
             let (lo, hi) = (scratch.offsets[l], scratch.offsets[l + 1]);
             let mut s = lo;
             while s < hi {
@@ -1898,6 +2268,10 @@ impl FffInfer {
                 scratch.segments.push((l, s, e));
                 s = e;
             }
+        }
+        let mut stage = std::mem::take(&mut scratch.stage);
+        if staged {
+            stage.resize(slots, dim_out);
         }
         // Resolve the GEMM strategy once per batch, not once per segment.
         // Int8 models run both bucket GEMMs through the quantized drivers
@@ -1907,89 +2281,129 @@ impl FffInfer {
         // kind was active (see `should_prepack`) — fall back to the
         // gather-dot kernel then.
         let quant = self.precision == Precision::Int8;
-        if quant && crate::tensor::fused_leaf_available(leaf) {
-            // The register-fused variant: two barrier-separated sweeps,
-            // hidden activations never stored as f32. Bit-identical to
-            // the unfused branch below (the leaf tile's requantize
-            // epilogue replicates the row quantizer statement), so the
-            // split is purely a memory-traffic optimization.
-            return self.infer_grouped_quant_fused(x, scratch, y, parallel);
-        }
-        let packed = !quant
-            && kernels::active() == KernelKind::Packed
-            && self.leaf_w1p.len() == self.leaf_w1t.len();
-        let yptr = crate::tensor::pool::SendPtr(y.as_mut_slice().as_mut_ptr());
-        let order_ref: &[usize] = &scratch.order;
-        let segments_ref: &[(usize, usize, usize)] = &scratch.segments;
-        let run_segment = |t: usize| {
-            let (l, lo, hi) = segments_ref[t];
-            let rows = &order_ref[lo..hi];
-            let b1 = &self.leaf_b1[l];
-            // a1 = relu(x[rows] · w1 + b1), gather fused into the kernel.
-            scratch::with_f32(rows.len() * leaf, |a1| {
-                if quant {
-                    crate::tensor::gemm_quant_gather_epi(
-                        x,
-                        rows,
-                        &self.leaf_w1q[l],
-                        a1,
-                        Epilogue::BiasRelu(b1),
-                    );
-                } else if packed {
-                    crate::tensor::gemm_packed_gather_epi(
-                        x,
-                        rows,
-                        &self.leaf_w1p[l],
-                        a1,
-                        Epilogue::BiasRelu(b1),
-                    );
+        {
+            let target: &mut Matrix = if staged { &mut stage } else { &mut *y };
+            if quant && crate::tensor::fused_leaf_available(leaf) {
+                // The register-fused variant: two barrier-separated sweeps,
+                // hidden activations never stored as f32. Bit-identical to
+                // the unfused branch below (the leaf tile's requantize
+                // epilogue replicates the row quantizer statement), so the
+                // split is purely a memory-traffic optimization.
+                self.infer_grouped_quant_fused(x, scratch, target, parallel);
+            } else {
+                let packed = !quant
+                    && kernels::active() == KernelKind::Packed
+                    && self.leaf_w1p.len() == self.leaf_w1t.len();
+                let tptr = crate::tensor::pool::SendPtr(target.as_mut_slice().as_mut_ptr());
+                let order_ref: &[usize] = &scratch.order;
+                // Gather list: the x row feeding each sorted slot. With
+                // one tree a slot is its own x row, so the sort order
+                // doubles as the gather list, exactly as before.
+                let gather_ref: &[usize] = if staged { &scratch.xrows } else { &scratch.order };
+                let segments_ref: &[(usize, usize, usize)] = &scratch.segments;
+                let run_segment = |t: usize| {
+                    let (l, lo, hi) = segments_ref[t];
+                    let grows = &gather_ref[lo..hi];
+                    let srows = &order_ref[lo..hi];
+                    let b1 = &self.leaf_b1[l];
+                    // a1 = relu(x[grows] · w1 + b1), gather fused into
+                    // the kernel.
+                    scratch::with_f32(grows.len() * leaf, |a1| {
+                        if quant {
+                            crate::tensor::gemm_quant_gather_epi(
+                                x,
+                                grows,
+                                &self.leaf_w1q[l],
+                                a1,
+                                Epilogue::BiasRelu(b1),
+                            );
+                        } else if packed {
+                            crate::tensor::gemm_packed_gather_epi(
+                                x,
+                                grows,
+                                &self.leaf_w1p[l],
+                                a1,
+                                Epilogue::BiasRelu(b1),
+                            );
+                        } else {
+                            crate::tensor::gemm_nt_gather_epi(
+                                x,
+                                grows,
+                                &self.leaf_w1t[l],
+                                a1,
+                                Epilogue::BiasRelu(b1),
+                            );
+                        }
+                        // target[srows] = a1 · w2 + b2, scattered directly
+                        // into place.
+                        // SAFETY: segments partition `order`, which holds
+                        // each routing slot exactly once, so tasks write
+                        // disjoint rows of the target (`y` rows at one
+                        // tree, per-slot `stage` rows otherwise); `run`
+                        // blocks until every segment is done; the target
+                        // was resized to hold every scatter row above.
+                        unsafe {
+                            if quant {
+                                crate::tensor::gemm_quant_scatter_raw(
+                                    a1,
+                                    leaf,
+                                    &self.leaf_w2q[l],
+                                    dim_out,
+                                    &self.leaf_b2[l],
+                                    srows,
+                                    tptr.0,
+                                );
+                            } else {
+                                crate::tensor::gemm_bias_scatter_raw(
+                                    a1,
+                                    leaf,
+                                    self.leaf_w2[l].as_slice(),
+                                    dim_out,
+                                    &self.leaf_b2[l],
+                                    srows,
+                                    tptr.0,
+                                );
+                            }
+                        }
+                    });
+                };
+                let n_segments = segments_ref.len();
+                if parallel && n_segments > 1 {
+                    pool.run(n_segments, &run_segment);
                 } else {
-                    crate::tensor::gemm_nt_gather_epi(
-                        x,
-                        rows,
-                        &self.leaf_w1t[l],
-                        a1,
-                        Epilogue::BiasRelu(b1),
-                    );
+                    for t in 0..n_segments {
+                        run_segment(t);
+                    }
                 }
-                // y[rows] = a1 · w2 + b2, scattered directly into place.
-                // SAFETY: segments partition `order`, which holds each
-                // sample row exactly once, so tasks write disjoint rows
-                // of `y`; `run` blocks until every segment is done; `y`
-                // was resized to b × dim_out above.
-                unsafe {
-                    if quant {
-                        crate::tensor::gemm_quant_scatter_raw(
-                            a1,
-                            leaf,
-                            &self.leaf_w2q[l],
-                            dim_out,
-                            &self.leaf_b2[l],
-                            rows,
-                            yptr.0,
-                        );
-                    } else {
-                        crate::tensor::gemm_bias_scatter_raw(
-                            a1,
-                            leaf,
-                            self.leaf_w2[l].as_slice(),
-                            dim_out,
-                            &self.leaf_b2[l],
-                            rows,
-                            yptr.0,
-                        );
+            }
+        }
+        if staged {
+            // 4) Tree reduction: y[r] = Σ_t stage[r·trees + t], ascending
+            //    t — the same left-fold as `infer_one`, over the fixed
+            //    128-row shard partition (a function of batch geometry,
+            //    never pool width), so the served bits are identical at
+            //    every thread count and bucket split.
+            let ns = n_shards(b);
+            let yptr = SendPtr(y.as_mut_slice().as_mut_ptr());
+            let stage_ref: &Matrix = &stage;
+            run_shards(ns, &|s| {
+                let (r0, r1) = shard_range(s, b);
+                for r in r0..r1 {
+                    // SAFETY: shards own disjoint row bands of `y`
+                    // (shard_range partitions `0..b`), `y` was resized to
+                    // b × dim_out above, and `run` blocks until every
+                    // shard has retired.
+                    let yrow = unsafe { from_raw_parts_mut(yptr.0.add(r * dim_out), dim_out) };
+                    yrow.copy_from_slice(stage_ref.row(r * trees));
+                    for t in 1..trees {
+                        for (o, &v) in yrow.iter_mut().zip(stage_ref.row(r * trees + t)) {
+                            *o += v;
+                        }
                     }
                 }
             });
-        };
-        let n_segments = segments_ref.len();
-        if parallel && n_segments > 1 {
-            pool.run(n_segments, &run_segment);
-        } else {
-            for t in 0..n_segments {
-                run_segment(t);
-            }
         }
+        scratch.stage = stage;
     }
 
     /// The fused int8 bucket engine: **two barrier-separated sweeps**
@@ -2011,11 +2425,15 @@ impl FffInfer {
     /// epilogue replicates the row-quantizer statement, skipping only a
     /// lossless f32 store/load — so thread count, segment split, and
     /// fused-vs-unfused all leave the served bits unchanged.
+    ///
+    /// `target` is the scatter destination: `y` itself at one tree, the
+    /// per-slot stage matrix under parallel trees (the caller reduces
+    /// stage rows into `y` afterwards).
     fn infer_grouped_quant_fused(
         &self,
         x: &Matrix,
         scratch: &mut InferScratch,
-        y: &mut Matrix,
+        target: &mut Matrix,
         parallel: bool,
     ) {
         use crate::tensor::kernels::MR;
@@ -2039,13 +2457,16 @@ impl FffInfer {
             scratch.sa1.resize(n_segments * seg_pad, 0.0);
         }
         let order_ref: &[usize] = &scratch.order;
+        // Gather list for sweep 1 (the x row feeding each sorted slot);
+        // identical to `order` at one tree — see `infer_grouped_counted`.
+        let gather_ref: &[usize] = if self.trees > 1 { &scratch.xrows } else { &scratch.order };
         let segments_ref: &[(usize, usize, usize)] = &scratch.segments;
         let qa1ptr = crate::tensor::pool::SendPtr(scratch.qa1.as_mut_ptr());
         let sa1ptr = crate::tensor::pool::SendPtr(scratch.sa1.as_mut_ptr());
-        let yptr = crate::tensor::pool::SendPtr(y.as_mut_slice().as_mut_ptr());
+        let tptr = crate::tensor::pool::SendPtr(target.as_mut_slice().as_mut_ptr());
         let sweep1 = |t: usize| {
             let (l, lo, hi) = segments_ref[t];
-            let rows = &order_ref[lo..hi];
+            let rows = &gather_ref[lo..hi];
             let pad_rows = (hi - lo).div_ceil(MR) * MR;
             // SAFETY: region `t` of qa1/sa1 belongs to this task alone
             // (regions are seg_pad-strided and sized above; `pad_rows
@@ -2067,8 +2488,10 @@ impl FffInfer {
             let pad_rows = (hi - lo).div_ceil(MR) * MR;
             // SAFETY: shared reads of region `t` written in sweep 1 —
             // the pool barrier between the sweeps ordered them; segments
-            // partition `order`, so tasks write disjoint rows of `y`,
-            // which was resized to the batch shape by the caller.
+            // partition `order`, which holds each routing slot exactly
+            // once, so tasks write disjoint rows of the target (`y` rows
+            // at one tree, per-slot stage rows otherwise), which the
+            // caller resized to hold every scatter row.
             unsafe {
                 let qa1 =
                     std::slice::from_raw_parts(qa1ptr.0.add(t * seg_pad * leaf), pad_rows * leaf);
@@ -2079,7 +2502,7 @@ impl FffInfer {
                     &self.leaf_w2q[l],
                     &self.leaf_b2[l],
                     rows,
-                    yptr.0,
+                    tptr.0,
                 );
             }
         };
@@ -2683,6 +3106,185 @@ mod tests {
         let empty = RoutingStats::from_leaf_ids(&[], 4);
         assert_eq!(empty.mean_occupancy(), 0.0);
         assert_eq!(empty.skew(), 0.0);
+    }
+
+    fn mkp(depth: usize, leaf: usize, p: usize) -> (Fff, Rng) {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut cfg = FffConfig::new(5, 3, depth, leaf);
+        cfg.hardening = 0.0;
+        cfg.parallel_size = p;
+        let fff = Fff::new(&mut rng, cfg);
+        (fff, rng)
+    }
+
+    #[test]
+    fn parallel_size_accounting() {
+        // The Table-1 formulas scale linearly in P (UltraFastBERT's
+        // width-for-depth trade: P·2^(d-1) leaves at one less level).
+        let mut cfg = FffConfig::new(768, 768, 4, 8);
+        cfg.parallel_size = 3;
+        assert_eq!(cfg.trees(), 3);
+        assert_eq!(cfg.num_leaves(), 48);
+        assert_eq!(cfg.num_nodes(), 45);
+        assert_eq!(cfg.training_width(), 3 * 128);
+        assert_eq!(cfg.inference_width(), 24);
+        assert_eq!(cfg.inference_size(), 3 * 12);
+    }
+
+    #[test]
+    fn bank_of_folds_tree_major_slots() {
+        // Slot value t·2^d + leaf → bank t·n_alloc + masked leaf.
+        assert_eq!(bank_of(0, 8, 8), 0);
+        assert_eq!(bank_of(8 + 3, 8, 8), 8 + 3);
+        assert_eq!(bank_of(2 * 8 + 5, 8, 4), 2 * 4 + 1); // aliased: leaf 5 folds to 1
+        assert_eq!(bank_of(7, 8, 4), 3);
+    }
+
+    #[test]
+    fn parallel_route_batch_slot_encoding() {
+        // b·P slots, sample-major: slot r·P + t holds t·2^d + leaf, and
+        // the leaf agrees with the per-tree descent of both the compiled
+        // router and the training model — exactly, at every P.
+        for &p in &[1usize, 2, 3] {
+            let (fff, _) = mkp(3, 2, p);
+            let inf = fff.compile_infer_with(Precision::F32);
+            assert_eq!(inf.trees(), p);
+            let x = batch(21, 5);
+            let slots = inf.route_batch(&x);
+            assert_eq!(slots.len(), 21 * p);
+            for r in 0..21 {
+                for t in 0..p {
+                    let leaf = inf.router().route_tree(t, x.row(r));
+                    assert_eq!(slots[r * p + t], (t << 3) + leaf, "r={r} t={t} p={p}");
+                    assert_eq!(leaf, fff.leaf_index_tree(t, x.row(r)), "r={r} t={t} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_infer_one_is_ascending_tree_slice_sum() {
+        // The model's definition: y = Σ_t slice_t(x), accumulated in
+        // ascending tree order — reproducible bit for bit from the
+        // tree_slice models, f32 and int8 alike.
+        for &precision in &[Precision::F32, Precision::Int8] {
+            let (fff, _) = mkp(2, 4, 3);
+            let inf = fff.compile_infer_with(precision);
+            let slices: Vec<FffInfer> = (0..3).map(|t| inf.tree_slice(t)).collect();
+            let x = batch(9, 5);
+            for r in 0..9 {
+                let mut got = vec![0.0f32; 3];
+                inf.infer_one(x.row(r), &mut got);
+                let mut want = vec![0.0f32; 3];
+                slices[0].infer_one(x.row(r), &mut want);
+                let mut tmp = vec![0.0f32; 3];
+                for s in &slices[1..] {
+                    s.infer_one(x.row(r), &mut tmp);
+                    for (w, &v) in want.iter_mut().zip(&tmp) {
+                        *w += v;
+                    }
+                }
+                assert_eq!(got, want, "row {r} precision {precision:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_grouped_matches_per_sample() {
+        // Dense P=2 batch through the staged bucket engine vs the
+        // per-sample tree fold: int8 exactly (same quantized arithmetic,
+        // same fold order), f32 within GEMM tolerance.
+        let _serialize = kernels::force_lock();
+        let (fff, _) = mkp(2, 4, 2);
+        for &precision in &[Precision::F32, Precision::Int8] {
+            let inf = fff.compile_infer_with(precision);
+            let x = batch(64, 5);
+            let grouped = inf.infer_batch_grouped(&x);
+            let mut per_sample = Matrix::zeros(64, 3);
+            for r in 0..64 {
+                inf.infer_one(x.row(r), per_sample.row_mut(r));
+            }
+            match precision {
+                Precision::Int8 => assert_eq!(grouped, per_sample, "int8 grouped != per-sample"),
+                Precision::F32 => assert!(grouped.max_abs_diff(&per_sample) < 1e-5),
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_routed_and_direct_batched_agree() {
+        let _serialize = kernels::force_lock();
+        let (fff, _) = mkp(3, 4, 2);
+        let inf = fff.compile_infer_with(Precision::F32);
+        let x = batch(40, 5);
+        let slots = inf.route_batch(&x);
+        assert_eq!(inf.infer_batch_routed(&x, &slots), inf.infer_batch(&x));
+    }
+
+    #[test]
+    fn parallel_region_histogram_counts_every_tree() {
+        let (fff, _) = mkp(3, 2, 2);
+        let x = batch(32, 5);
+        let hist = fff.region_histogram(&x);
+        assert_eq!(hist.len(), 16);
+        assert_eq!(hist.iter().sum::<usize>(), 64);
+        // Tree-major halves: each tree routes the full batch once.
+        assert_eq!(hist[..8].iter().sum::<usize>(), 32);
+        assert_eq!(hist[8..].iter().sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn parallel_level_batched_engine_matches_per_node_baseline() {
+        // The P=2 face of the engine-equivalence anchor: same mixture,
+        // entropies, aux loss, and gradients on a shared transposition
+        // seed (both engines draw flips in (m, t, i) order).
+        let close = |a: f32, b: f32| (a - b).abs() <= 1e-4 + 1e-3 * b.abs();
+        let mut rng = Rng::seed_from_u64(77);
+        let mut cfg = FffConfig::new(5, 3, 2, 2);
+        cfg.hardening = 3.0;
+        cfg.transposition_p = 0.5;
+        cfg.parallel_size = 2;
+        let mut batched = Fff::new(&mut rng, cfg);
+        let mut baseline = batched.clone();
+        let x = batch(70, 5);
+        let labels: Vec<usize> = (0..70).map(|i| i % 3).collect();
+        let mut ra = Rng::seed_from_u64(9);
+        let mut rb = Rng::seed_from_u64(9);
+        let ya = batched.forward_train(&x, &mut ra);
+        let yb = baseline.forward_train_baseline(&x, &mut rb);
+        assert!(ya.max_abs_diff(&yb) < 1e-4, "P=2 forward diff {}", ya.max_abs_diff(&yb));
+        for (i, (ea, eb)) in
+            batched.last_entropies.iter().zip(&baseline.last_entropies).enumerate()
+        {
+            assert!(close(*ea, *eb), "entropy {i}: {ea} vs {eb}");
+        }
+        assert!(close(batched.aux_loss(), baseline.aux_loss()), "aux loss");
+        let (_, dla) = cross_entropy(&ya, &labels);
+        let (_, dlb) = cross_entropy(&yb, &labels);
+        batched.zero_grad();
+        baseline.zero_grad();
+        let dxa = batched.backward(&dla);
+        let dxb = baseline.backward_baseline(&dlb);
+        assert!(dxa.max_abs_diff(&dxb) < 2e-4, "P=2 dx diff {}", dxa.max_abs_diff(&dxb));
+        let mut ga = Vec::new();
+        batched.visit_params(&mut |_p, g| ga.extend_from_slice(g));
+        let mut gb = Vec::new();
+        baseline.visit_params(&mut |_p, g| gb.extend_from_slice(g));
+        for (i, (a, b)) in ga.iter().zip(&gb).enumerate() {
+            assert!(close(*a, *b), "P=2 grad {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn routing_stats_parallel_occupancy() {
+        // 2 rows × 2 trees → 4 routed slots over tree-major banks.
+        let stats = RoutingStats::from_counts_parallel(&[2, 0, 1, 1], 2, 2);
+        assert_eq!(
+            (stats.samples, stats.trees, stats.distinct_leaves, stats.max_bucket),
+            (2, 2, 3, 2)
+        );
+        assert!((stats.mean_occupancy() - 4.0 / 3.0).abs() < 1e-12);
+        assert!((stats.skew() - 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -280,6 +280,31 @@ pub fn resolve_precision(requested: Precision) -> Precision {
     precision_override().unwrap_or(requested)
 }
 
+/// The `FFF_PARALLEL` process override (read once): `Some(p)` forces
+/// every subsequent env-resolving model construction to `p` parallel
+/// trees (UltraFastBERT-style `parallel_size`), overriding config and
+/// CLI alike; unset leaves them alone. `p` must be ≥ 1.
+pub fn parallel_override() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("FFF_PARALLEL") {
+        Ok(v) => {
+            let p = v.parse::<usize>().ok().filter(|&p| p >= 1);
+            if p.is_none() {
+                eprintln!("FFF_PARALLEL: invalid tree count {v:?} (want an integer >= 1); ignored");
+            }
+            p
+        }
+        Err(_) => None,
+    })
+}
+
+/// The parallel-tree count a construction requesting `requested` trees
+/// actually gets: [`parallel_override`] wins, otherwise the request
+/// stands (mirrors [`resolve_precision`]).
+pub fn resolve_parallel(requested: usize) -> usize {
+    parallel_override().unwrap_or(requested.max(1))
+}
+
 /// `C[mr×nr] += A-panel · B-panel` over packed panels: `ap` is `kc`
 /// MR-groups (zero-padded), `bp` is `kc` NR-groups (zero-padded), `cv`
 /// starts at the tile's top-left element with row stride `n`.

@@ -9,4 +9,6 @@
 
 pub mod prop;
 
-pub use prop::{check, check_kernels, check_with, Config, KernelStateGuard};
+pub use prop::{
+    check, check_kernels, check_parallel, check_with, Config, KernelStateGuard, PARALLEL_SIZES,
+};

@@ -131,6 +131,50 @@ pub fn check_kernels<T: std::fmt::Debug>(
     }
 }
 
+/// Parallel-tree widths [`check_parallel`] sweeps: the single-tree
+/// oracle plus the small P values the paper-scale configurations use.
+pub const PARALLEL_SIZES: [usize; 4] = [1, 2, 3, 4];
+
+/// The parallel-tree test matrix: [`check_kernels`] with an extra inner
+/// axis over `P ∈ {1, 2, 3, 4}` — `prop` runs against every generated
+/// input × every [`KernelKind`] × every parallel width, so one property
+/// pins the P=1 bitwise oracle *and* the P>1 accumulation paths across
+/// all three GEMM kernels. Kernel forcing, the force lock, and the
+/// zeroed parallel-FLOP threshold behave exactly as in [`check_kernels`]
+/// (restored on exit, panic included).
+pub fn check_parallel<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T, KernelKind, usize) -> Result<(), String>,
+) {
+    let _serialize = kernels::force_lock();
+    let _guard = KernelStateGuard::zero_threshold();
+    let config = Config::default();
+    let mut rng = Rng::seed_from_u64(config.seed);
+    for case in 0..config.cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        for kind in KernelKind::ALL {
+            for p in PARALLEL_SIZES {
+                kernels::force(Some(kind));
+                let result = prop(&input, kind, p);
+                kernels::force(None);
+                if let Err(msg) = result {
+                    panic!(
+                        "property '{name}' [kernel {} | P={p}] failed at case {case}/{} \
+                         (seed {:#x}):\n  input: {input:?}\n  error: {msg}\n  reproduce with \
+                         FFF_PROP_SEED={}",
+                        kind.name(),
+                        config.cases,
+                        config.seed,
+                        config.seed
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +227,32 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn check_parallel_visits_every_width_per_kind() {
+        let mut seen: Vec<(KernelKind, usize)> = Vec::new();
+        check_parallel("p sweep", |rng| rng.below(1000), |_, kind, p| {
+            assert_eq!(kernels::active(), kind, "dispatch not re-entered for {kind:?}");
+            seen.push((kind, p));
+            Ok(())
+        });
+        let per_case = KernelKind::ALL.len() * PARALLEL_SIZES.len();
+        assert_eq!(seen.len() % per_case, 0);
+        let widths: Vec<usize> = seen[..PARALLEL_SIZES.len()].iter().map(|&(_, p)| p).collect();
+        assert_eq!(widths, PARALLEL_SIZES.to_vec());
+    }
+
+    #[test]
+    #[should_panic(expected = "P=3]")]
+    fn check_parallel_reports_failing_width() {
+        check_parallel("p fails", |rng| rng.below(10), |_, _, p| {
+            if p == 3 {
+                Err("nope".into())
+            } else {
+                Ok(())
+            }
+        });
     }
 
     #[test]

@@ -92,6 +92,7 @@ pub fn build_model(
             let mut fc = FffConfig::new(dim_in, dim_out, cfg.fff_depth(), cfg.leaf);
             fc.hardening = cfg.hardening;
             fc.transposition_p = cfg.transposition_p;
+            fc.parallel_size = cfg.parallel_size;
             Box::new(Fff::new(rng, fc))
         }
         ModelKind::Moe => {

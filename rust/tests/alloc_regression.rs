@@ -149,6 +149,63 @@ fn steady_state_hot_paths_are_allocation_free() {
         },
     );
 
+    // --- 1p) Parallel-tree serving (ISSUE 8): the (tree, leaf) bucket
+    //         engine reuses the same retained buffers per tree, and the
+    //         P>1 scatter-add epilogue works in place — so a warm
+    //         multi-tree batch must allocate exactly as much as a
+    //         single-tree one: nothing. Deterministic shapes, every
+    //         kernel kind, P ∈ {2, 3} (even/odd accumulation orders). ---
+    {
+        let _serialize = kernels::force_lock();
+        let _guard = KernelStateGuard::zero_threshold();
+        for trees in [2usize, 3] {
+            let mut rng = Rng::seed_from_u64(0x9A + trees as u64);
+            let depth = 3usize;
+            let (dim_in, dim_out, leaf) = (12, 5, 4);
+            let model = FffInfer::random_p(
+                &mut rng,
+                dim_in,
+                dim_out,
+                depth,
+                leaf,
+                1 << depth,
+                kernels::Precision::F32,
+                trees,
+            );
+            let batch = 4 << depth;
+            let mut x = Matrix::zeros(batch, dim_in);
+            rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+            for kind in KernelKind::ALL {
+                kernels::force(Some(kind));
+                let delta = with_threads(1, || {
+                    let mut scratch = InferScratch::new();
+                    let mut leaf_of: Vec<usize> = Vec::new();
+                    let mut y = Matrix::zeros(0, 0);
+                    measure(
+                        || {
+                            model.route_batch_into(&x, &mut leaf_of);
+                            model.infer_batch_routed_into(&x, &leaf_of, &mut scratch, &mut y);
+                            std::hint::black_box(model.infer_batch_stats_into(
+                                &x,
+                                &mut scratch,
+                                &mut y,
+                            ));
+                        },
+                        3,
+                    )
+                });
+                kernels::force(None);
+                assert_eq!(
+                    delta,
+                    0,
+                    "warm P={trees} infer_batch_routed_into allocated {delta} times \
+                     under kernel {}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
     // --- 1b) A warm training step (ISSUE 5 acceptance): the level-
     //         batched FFF engine plus loss gradient and optimizer step,
     //         end to end through retained buffers, per kernel kind. Two
@@ -208,6 +265,53 @@ fn steady_state_hot_paths_are_allocation_free() {
             })
         },
     );
+
+    // --- 1bp) A warm P=2 training step (ISSUE 8): one router GEMM per
+    //          (tree, level) and the P·2^d-wide concatenated leaf bank
+    //          all flow through the same retained TrainCache buffers, so
+    //          the parallel width must not reintroduce steady-state
+    //          allocations. Deterministic shapes, every kernel kind. ---
+    {
+        let _serialize = kernels::force_lock();
+        let _guard = KernelStateGuard::zero_threshold();
+        let mut rng = Rng::seed_from_u64(0xB2);
+        let (depth, leaf, dim_in, dim_out) = (2usize, 3usize, 9usize, 4usize);
+        let mut cfg = FffConfig::new(dim_in, dim_out, depth, leaf);
+        cfg.parallel_size = 2;
+        cfg.hardening = 3.0;
+        let mut model = Fff::new(&mut rng, cfg);
+        let batch = 48usize;
+        let mut x = Matrix::zeros(batch, dim_in);
+        rng.fill_normal(x.as_mut_slice(), 0.0, 1.0);
+        let labels: Vec<usize> = (0..batch).map(|r| r % dim_out).collect();
+        for kind in KernelKind::ALL {
+            kernels::force(Some(kind));
+            let delta = with_threads(1, || {
+                let mut opt = Adam::new(1e-3);
+                let mut logits = Matrix::zeros(0, 0);
+                let mut dl = Matrix::zeros(0, 0);
+                let mut dx = Matrix::zeros(0, 0);
+                let mut srng = Rng::seed_from_u64(7);
+                measure(
+                    || {
+                        model.forward_train_into(&x, &mut srng, &mut logits);
+                        std::hint::black_box(cross_entropy_into(&logits, &labels, &mut dl));
+                        model.zero_grad();
+                        model.backward_into(&dl, &mut dx);
+                        opt.step(&mut model);
+                    },
+                    3,
+                )
+            });
+            kernels::force(None);
+            assert_eq!(
+                delta,
+                0,
+                "warm P=2 training step allocated {delta} times under kernel {}",
+                kind.name()
+            );
+        }
+    }
 
     // --- 1c) The FF baseline's training step shares the same retained-
     //         buffer story (fused epilogue forward, gemm_tn_acc grads). ---

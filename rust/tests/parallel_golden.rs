@@ -1,0 +1,240 @@
+//! C-generated golden vectors for the parallel-tree (P = 2) serving
+//! paths (ISSUE 8). The fixtures were produced by a strict-FP C replica
+//! (`gcc -O2 -ffp-contract=off`) of the exact per-sample statements the
+//! Rust engine commits to:
+//!
+//! * routing: `routing_dot` (16-lane striped lanes, fixed pairwise
+//!   reduction tree, strict mul+add) per tree-major node, descent bit
+//!   `logit >= 0`, slot value `t·2^depth + leaf`;
+//! * f32 leaf banks: `tensor::ops::dot` (4 independent accumulators,
+//!   tail into lane 0) + gated axpy, trees summed in **ascending**
+//!   order — the shared left-fold of `infer_one`, the sparse rows path,
+//!   and the grouped engine's staged reduction;
+//! * int8 leaf banks: the biased-byte row quantizer and per-NR-panel
+//!   weight quantization (round half away from zero), exact i32
+//!   accumulation, dequant store `acc·(sa·sb) + bias` — so the grouped
+//!   bucket engine must land on the same bits as the per-sample C
+//!   statement under every forced kernel kind.
+//!
+//! The C harness self-checks its `gv` and `routing_dot` replicas
+//! against `tests/golden_vectors.rs`'s committed RDOT_GOLD bits before
+//! emitting, so the two fixture sets share one provenance chain.
+//!
+//! Model: dim_in 9 (RDOT/QK tails), dim_out 9 (NR tail, two W2 scale
+//! panels), depth 2, leaf 10 (two W1 scale panels, QK tail), P = 2,
+//! full leaf allocation. Parameters are the `gv` stream in
+//! `Fff::visit_params` order; inputs are `gv(100000 + r·dim_in + c)`.
+
+use fastfeedforward::nn::{Fff, FffConfig, FffInfer, Model};
+use fastfeedforward::tensor::kernels::{self, KernelKind};
+use fastfeedforward::tensor::{Matrix, Precision, QuantPackedB};
+
+const DIM_IN: usize = 9;
+const DIM_OUT: usize = 9;
+const DEPTH: usize = 2;
+const LEAF: usize = 10;
+const TREES: usize = 2;
+const BATCH: usize = 6;
+
+/// The shared deterministic generator (mirrored in the C harness).
+fn gv(i: u32) -> f32 {
+    let h = i.wrapping_mul(2654435761);
+    let v = ((h >> 7) & 0xFF_FFFF) as i32 - 0x80_0000;
+    if v % 23 == 5 {
+        -0.0
+    } else {
+        v as f32 / 1048576.0
+    }
+}
+
+/// `route_batch` slot values, sample-major: row r's slots are
+/// `[leaf_tree0, 4 + leaf_tree1]`.
+const SLOTS: [usize; 12] = [
+    3, 4, //
+    3, 4, //
+    2, 7, //
+    0, 6, //
+    1, 6, //
+    1, 5, //
+];
+
+/// Summed two-tree f32 outputs (bit patterns), row-major 6×9.
+const Y_F32: [u32; 54] = [
+    0xC306BB4D, 0x4486F43C, 0xC4A573A6, 0xC29A7FFA, 0x43B81D9A, 0x444459F6, 0xC3E30C32,
+    0xC4342FB8, 0x445AB8CA, //
+    0x439997D8, 0x43E6CDFC, 0xC46C64BA, 0xC38C7D04, 0x43EEB0DA, 0x43F8A709, 0xC3006576,
+    0xC445FA1C, 0x442ADF14, //
+    0x440E6943, 0x43FC451A, 0xC352D0B4, 0xC412FC75, 0x431E37C4, 0x42BA39E0, 0xC41B8F7E,
+    0xC479D7C7, 0xC37D3579, //
+    0x43E7BE53, 0x43BF8750, 0x42A318FE, 0x4332BECA, 0x4404965A, 0x44479C33, 0xC3B059EB,
+    0xC37F817C, 0x4379C912, //
+    0x44DB1768, 0x45167D0B, 0xC4AAAAAA, 0x440BDF74, 0x4481A85E, 0x44D272D5, 0xC50298F6,
+    0xC324BC26, 0x43D235FC, //
+    0x44AD6E0F, 0x40870800, 0xC3984986, 0x433121E2, 0x44712BB8, 0x441858D4, 0xC3C6C316,
+    0xC3717B6E, 0x441717EE, //
+];
+
+/// Summed two-tree int8 outputs (bit patterns), row-major 6×9.
+const Y_INT8: [u32; 54] = [
+    0xC30D3613, 0x4486715D, 0xC4A4E604, 0xC2931F9D, 0x43B632EE, 0x44440BF8, 0xC3E0C4A4,
+    0xC4341B28, 0x445A681E, //
+    0x43960C15, 0x43E2B7AC, 0xC46A3CCF, 0xC38AC3AA, 0x43EEB590, 0x43FA4692, 0xC3026265,
+    0xC4466B53, 0x442A9E42, //
+    0x440F001F, 0x43FD1353, 0xC34F0BF2, 0xC41331CA, 0x431BE5A0, 0x42BDD500, 0xC41AA551,
+    0xC4799A12, 0xC381725C, //
+    0x43E54DDB, 0x43C0056A, 0x42AD0D9E, 0x4333EDB8, 0x4402A923, 0x44481D22, 0xC3ADA75C,
+    0xC3803BAA, 0x43732C0E, //
+    0x44DB1FB8, 0x45166E3F, 0xC4AAE276, 0x440C4DB8, 0x44820F67, 0x44D2852F, 0xC503616E,
+    0xC317E4B9, 0x43D97ED2, //
+    0x44AEF218, 0xC09825C0, 0xC3992A9A, 0x43332CC8, 0x4473FF37, 0x44179B28, 0xC3CB8890,
+    0xC3733940, 0x441978AF, //
+];
+
+/// W1 panel scale bits of bank 4 (tree 1's first leaf bank) — pins the
+/// per-NR-panel split of the weight quantizer at leaf = 10 (panel 0:
+/// rows 0..8, panel 1: rows 8..10).
+const BANK4_W1_SCALES: [u32; 2] = [0x3D7C5C32, 0x3D8070FB];
+
+/// The fixture model: every parameter overwritten with the `gv` stream
+/// in `visit_params` order (tree-major BFS nodes, then leaf banks).
+fn fixture_model() -> Fff {
+    let mut rng = fastfeedforward::rng::Rng::seed_from_u64(0);
+    let mut cfg = FffConfig::new(DIM_IN, DIM_OUT, DEPTH, LEAF);
+    cfg.parallel_size = TREES;
+    let mut fff = Fff::new(&mut rng, cfg);
+    let mut ctr = 0u32;
+    fff.visit_params(&mut |p, _| {
+        for v in p.iter_mut() {
+            *v = gv(ctr);
+            ctr += 1;
+        }
+    });
+    // Stream-length guard: nodes 2·3·(9+1), banks 8·(90+10+90+9).
+    assert_eq!(ctr, 60 + 8 * 199, "visit_params stream drifted from the C layout");
+    fff
+}
+
+fn fixture_input() -> Matrix {
+    let mut x = Matrix::zeros(BATCH, DIM_IN);
+    for r in 0..BATCH {
+        for c in 0..DIM_IN {
+            x.set(r, c, gv(100_000 + (r * DIM_IN + c) as u32));
+        }
+    }
+    x
+}
+
+fn assert_bits(got: &Matrix, want: &[u32], what: &str) {
+    assert_eq!(got.rows() * got.cols(), want.len(), "{what}: shape");
+    for r in 0..got.rows() {
+        for (j, &w) in want[r * got.cols()..(r + 1) * got.cols()].iter().enumerate() {
+            let g = got.get(r, j);
+            assert_eq!(
+                g.to_bits(),
+                w,
+                "{what}: bit drift at ({r},{j}) (got {g} = {:#010x}, want {:#010x})",
+                g.to_bits(),
+                w
+            );
+        }
+    }
+}
+
+#[test]
+fn p2_routing_slots_match_c_prototype() {
+    let fff = fixture_model();
+    let inf = fff.compile_infer_with(Precision::F32);
+    assert_eq!(inf.trees(), TREES);
+    let x = fixture_input();
+    let slots = inf.route_batch(&x);
+    assert_eq!(slots, SLOTS.to_vec(), "batched slot values");
+    // Per-sample descents and the training model's per-tree index make
+    // the same decisions, tree by tree.
+    for r in 0..BATCH {
+        for t in 0..TREES {
+            let leaf = SLOTS[r * TREES + t] - (t << DEPTH);
+            assert_eq!(inf.router().route_tree(t, x.row(r)), leaf, "route_tree ({r},{t})");
+            assert_eq!(fff.leaf_index_tree(t, x.row(r)), leaf, "leaf_index_tree ({r},{t})");
+        }
+    }
+}
+
+#[test]
+fn p2_f32_summed_outputs_match_c_prototype() {
+    let fff = fixture_model();
+    let inf = fff.compile_infer_with(Precision::F32);
+    let x = fixture_input();
+    // Per-sample serving: the ascending-tree fold of gated leaf axpys.
+    let mut y = Matrix::zeros(BATCH, DIM_OUT);
+    for r in 0..BATCH {
+        inf.infer_one(x.row(r), y.row_mut(r));
+    }
+    assert_bits(&y, &Y_F32, "f32 infer_one");
+    // The batched sparse path shares the per-sample statement bitwise;
+    // hold the kernel lock so a concurrent forced matrix cannot flip
+    // the dispatch mid-comparison.
+    let _serialize = kernels::force_lock();
+    let routed = inf.infer_batch_routed(&x, &SLOTS);
+    assert_eq!(routed, inf.infer_batch(&x), "pre-routed ≠ auto-dispatched");
+    assert!(
+        routed.max_abs_diff(&y) <= 1e-5,
+        "batched f32 drifted {} from the per-sample fixture",
+        routed.max_abs_diff(&y)
+    );
+}
+
+#[test]
+fn p2_int8_summed_outputs_match_c_prototype_per_kind() {
+    let fff = fixture_model();
+    let inf = fff.compile_infer_with(Precision::Int8);
+    assert!(inf.quant_bytes() > 0, "int8 compile built no quant panels");
+    let x = fixture_input();
+    let mut y = Matrix::zeros(BATCH, DIM_OUT);
+    for r in 0..BATCH {
+        inf.infer_one(x.row(r), y.row_mut(r));
+    }
+    assert_bits(&y, &Y_INT8, "int8 infer_one");
+    // The quantized engine is exact: the grouped bucket path must land
+    // on the C prototype's bits under every forced kernel kind.
+    let _serialize = kernels::force_lock();
+    let _guard = fastfeedforward::testing::KernelStateGuard::zero_threshold();
+    for kind in KernelKind::ALL {
+        kernels::force(Some(kind));
+        let grouped = inf.infer_batch_grouped(&x);
+        kernels::force(None);
+        assert_bits(&grouped, &Y_INT8, &format!("int8 grouped under {}", kind.name()));
+    }
+}
+
+#[test]
+fn p2_weight_quantizer_panel_scales_match_c_prototype() {
+    // Bank 4 is tree 1's first leaf bank: its transposed W1 (leaf 10 ×
+    // dim_in 9) starts at gv offset 60 + 4·199 in the visit stream,
+    // with w1t[hn][p] = gv(base + p·leaf + hn).
+    let base = 60 + 4 * 199;
+    let mut w1t = Matrix::zeros(LEAF, DIM_IN);
+    for p in 0..DIM_IN {
+        for hn in 0..LEAF {
+            w1t.set(hn, p, gv((base + p * LEAF + hn) as u32));
+        }
+    }
+    let q = QuantPackedB::quantize_nt(&w1t);
+    for (jp, &want) in BANK4_W1_SCALES.iter().enumerate() {
+        assert_eq!(q.scale(jp).to_bits(), want, "bank 4 W1 panel {jp} scale bits");
+    }
+}
+
+/// A P = 2 model compiled from `Fff` and one built by `random_p` share
+/// the serving code; the fixture only pins the former. This guard pins
+/// the latter's shape accounting so the fixtures cannot silently rot
+/// against a constructor change.
+#[test]
+fn p2_random_constructor_shape_accounting() {
+    let mut rng = fastfeedforward::rng::Rng::seed_from_u64(9);
+    let m = FffInfer::random_p(&mut rng, DIM_IN, DIM_OUT, DEPTH, LEAF, 1 << DEPTH,
+        Precision::F32, TREES);
+    assert_eq!(m.trees(), TREES);
+    assert_eq!(m.alloc_leaves(), 1 << DEPTH);
+    let x = fixture_input();
+    assert_eq!(m.route_batch(&x).len(), BATCH * TREES);
+}

@@ -5,7 +5,7 @@ use fastfeedforward::nn::loss::cross_entropy;
 use fastfeedforward::nn::{Fff, FffConfig, FffInfer, Model};
 use fastfeedforward::rng::Rng;
 use fastfeedforward::tensor::Matrix;
-use fastfeedforward::testing::{check, check_kernels};
+use fastfeedforward::testing::{check, check_kernels, check_parallel};
 
 fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
     let mut m = Matrix::zeros(rows, cols);
@@ -54,6 +54,10 @@ struct TrainCase {
     batch: usize,
     hardening: f32,
     transposition_p: f32,
+    /// Parallel trees `P` (ISSUE 8): both training properties below
+    /// sweep the multi-tree engine — thread-count invariance and the
+    /// per-node baseline oracle must hold at `P > 1` too.
+    parallel: usize,
     seed: u64,
 }
 
@@ -66,6 +70,7 @@ fn gen_train_case(rng: &mut Rng) -> TrainCase {
         batch: 33 + rng.below(400),
         hardening: [0.0f32, 3.0, f32::INFINITY][rng.below(3)],
         transposition_p: if rng.below(2) == 0 { 0.0 } else { 0.3 },
+        parallel: 1 + rng.below(3),
         seed: rng.next_u64(),
     }
 }
@@ -75,6 +80,7 @@ fn build_train(case: &TrainCase) -> (Fff, Matrix, Vec<usize>) {
     let mut cfg = FffConfig::new(case.dim_in, case.dim_out, case.depth, case.leaf);
     cfg.hardening = case.hardening;
     cfg.transposition_p = case.transposition_p;
+    cfg.parallel_size = case.parallel;
     let fff = Fff::new(&mut rng, cfg);
     let x = rand_matrix(&mut rng, case.batch, case.dim_in);
     let labels: Vec<usize> = (0..case.batch).map(|r| r % case.dim_out).collect();
@@ -339,20 +345,31 @@ fn prop_aliased_routing_matches_full_model() {
             let full = FffInfer::random(&mut r1, 8, 3, depth, 2, usize::MAX);
             let mut r2 = Rng::seed_from_u64(seed);
             let aliased = FffInfer::random(&mut r2, 8, 3, depth, 2, 2);
+            // `random` resolves FFF_PARALLEL, so under a parallel-forced
+            // suite run both models carry P > 1 trees and route_batch
+            // returns P sample-major slot values per row.
+            let trees = full.trees();
+            if aliased.trees() != trees {
+                return Err("full and aliased models resolved different tree counts".into());
+            }
             let mut xr = Rng::seed_from_u64(seed ^ 1);
             let x = rand_matrix(&mut xr, 8, 8);
             let full_batch = full.route_batch(&x);
             let aliased_batch = aliased.route_batch(&x);
             for r in 0..x.rows() {
-                let want = full.route(x.row(r));
-                if want != aliased.route(x.row(r)) {
-                    return Err("routing differs between full and aliased models".into());
-                }
-                if full_batch[r] != want || aliased_batch[r] != want {
-                    return Err(format!(
-                        "route_batch differs from per-sample route at row {r} \
-                         (depth {depth}, aliased storage)"
-                    ));
+                for t in 0..trees {
+                    let want = full.router().route_tree(t, x.row(r));
+                    if want != aliased.router().route_tree(t, x.row(r)) {
+                        return Err("routing differs between full and aliased models".into());
+                    }
+                    let slot = (t << depth) + want;
+                    let i = r * trees + t;
+                    if full_batch[i] != slot || aliased_batch[i] != slot {
+                        return Err(format!(
+                            "route_batch differs from per-sample route at row {r} tree {t} \
+                             (depth {depth}, aliased storage)"
+                        ));
+                    }
                 }
             }
             Ok(())
@@ -441,10 +458,16 @@ fn prop_route_batch_thread_count_invariant() {
                     ));
                 }
             }
-            // And the pooled batched result equals the per-sample walk.
+            // And the pooled batched result equals the per-sample walk,
+            // one slot per (row, tree) — `trees` is 1 unless the suite
+            // runs under FFF_PARALLEL.
+            let trees = model.trees();
             for r in 0..x.rows() {
-                if results[0][r] != model.route(x.row(r)) {
-                    return Err(format!("row {r}: batched ≠ per-sample"));
+                for t in 0..trees {
+                    let want = (t << depth) + model.router().route_tree(t, x.row(r));
+                    if results[0][r * trees + t] != want {
+                        return Err(format!("row {r} tree {t}: batched ≠ per-sample"));
+                    }
                 }
             }
             Ok(())
@@ -1029,6 +1052,129 @@ fn prop_int8_panels_built_only_when_quantized() {
             let q = fff.compile_infer_with(Precision::Int8);
             if q.precision() != Precision::Int8 || q.quant_bytes() == 0 {
                 return Err("int8 compile built no quant panels".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Parallel-tree (P > 1) serving properties (ISSUE 8). One property run
+// through the full `check_parallel` matrix — every KernelKind × every
+// P ∈ {1, 2, 3, 4} — so the P = 1 column exercises the pre-parallel
+// single-tree paths and the P > 1 columns pin the summed-bank
+// accumulation against a per-sample tree-slice reference.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_parallel_serving_matches_per_sample_tree_sum() {
+    use fastfeedforward::tensor::pool::with_threads;
+    use fastfeedforward::tensor::Precision;
+    check_parallel(
+        "P-tree serving: routing slots, grouped/routed ≡ per-sample tree sum",
+        |rng| {
+            (
+                1 + rng.below(4),  // depth 1..=4
+                1 + rng.below(5),  // leaf width
+                2 + rng.below(10), // dim_in
+                1 + rng.below(5),  // dim_out
+                1 + rng.below(96), // batch: spans the sparse gate and bucket splits
+                rng.next_u64(),
+            )
+        },
+        |&(depth, leaf, dim_in, dim_out, batch, seed), kind, p| {
+            for precision in [Precision::F32, Precision::Int8] {
+                let mut rng = Rng::seed_from_u64(seed);
+                let model = FffInfer::random_p(
+                    &mut rng,
+                    dim_in,
+                    dim_out,
+                    depth,
+                    leaf,
+                    1 << depth.min(3), // depth 4 cases run with aliased storage
+                    precision,
+                    p,
+                );
+                if model.trees() != p {
+                    return Err(format!("random_p built {} trees, wanted {p}", model.trees()));
+                }
+                let x = rand_matrix(&mut rng, batch, dim_in);
+
+                // Routing: P sample-major slots per row; slot r·P+t holds
+                // tree t's leaf, offset into the tree's 2^d block.
+                let slots = model.route_batch(&x);
+                if slots.len() != batch * p {
+                    return Err(format!("route_batch returned {} slots", slots.len()));
+                }
+                for r in 0..batch {
+                    for t in 0..p {
+                        let want = (t << depth) + model.router().route_tree(t, x.row(r));
+                        if slots[r * p + t] != want {
+                            return Err(format!("slot ({r},{t}): {} ≠ {want}", slots[r * p + t]));
+                        }
+                    }
+                }
+
+                // Per-sample reference sum: the ascending-tree left fold of
+                // the single-tree slices — the definition of a P-tree bank.
+                let slices: Vec<FffInfer> = (0..p).map(|t| model.tree_slice(t)).collect();
+                let mut reference = Matrix::zeros(batch, dim_out);
+                let mut tmp = vec![0.0f32; dim_out];
+                for r in 0..batch {
+                    let out = reference.row_mut(r);
+                    slices[0].infer_one(x.row(r), out);
+                    for s in &slices[1..] {
+                        s.infer_one(x.row(r), &mut tmp);
+                        for (o, v) in out.iter_mut().zip(&tmp) {
+                            *o += *v;
+                        }
+                    }
+                }
+                let mut per_sample = Matrix::zeros(batch, dim_out);
+                for r in 0..batch {
+                    model.infer_one(x.row(r), per_sample.row_mut(r));
+                }
+                if per_sample != reference {
+                    return Err(format!(
+                        "infer_one ≠ tree-slice fold ({precision:?}, P={p}, depth {depth})"
+                    ));
+                }
+
+                // Pre-routed ≡ auto-dispatched, bitwise at every P.
+                let routed = model.infer_batch_routed(&x, &slots);
+                if routed != model.infer_batch(&x) {
+                    return Err(format!("routed ≠ auto infer_batch ({precision:?}, P={p})"));
+                }
+
+                // Grouped bucket engine vs the reference sum: the int8
+                // engine is exact (bit equality); f32 grouped runs the bank
+                // GEMM in a different accumulation order than the
+                // per-sample statement, so it carries the serving tolerance
+                // — the same contract the P = 1 properties pin.
+                let grouped = with_threads(1, || model.infer_batch_grouped(&x));
+                if precision == Precision::Int8 {
+                    if grouped != reference {
+                        return Err(format!("int8 grouped ≠ tree sum (P={p}, depth {depth})"));
+                    }
+                } else {
+                    let diff = grouped.max_abs_diff(&reference);
+                    if diff > 1e-5 {
+                        return Err(format!("f32 grouped diff {diff} (P={p}, depth {depth})"));
+                    }
+                }
+
+                // The grouped engine is thread-count invariant: the shard
+                // partition is fixed, so bucket splits never move bits.
+                for threads in [2usize, 4] {
+                    let pooled = with_threads(threads, || model.infer_batch_grouped(&x));
+                    if pooled != grouped {
+                        return Err(format!(
+                            "grouped bits drifted at {threads} threads \
+                             ({precision:?}, kernel {}, P={p})",
+                            kind.name()
+                        ));
+                    }
+                }
             }
             Ok(())
         },

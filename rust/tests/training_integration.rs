@@ -118,6 +118,52 @@ fn training_outcome_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn parallel_training_outcome_bit_identical_across_thread_counts() {
+    // ISSUE 8: the multi-tree engine's per-(tree, level) GEMMs and the
+    // P·2^d-wide concatenated leaf bank reduce over the same fixed
+    // 128-row shard partition as the single tree, so a full P=2 training
+    // run must also be one trajectory at every pool width.
+    use fastfeedforward::tensor::pool::with_threads;
+    let mut c = cfg(ModelKind::Fff, 32, 8);
+    c.parallel_size = 2;
+    c.train_n = 400;
+    c.test_n = 100;
+    c.max_epochs = 6;
+    c.patience = 6;
+    let serial = with_threads(1, || run_training(&c));
+    for threads in [2usize, 4, 8] {
+        let got = with_threads(threads, || run_training(&c));
+        assert_eq!(
+            got.epochs_run, serial.epochs_run,
+            "P=2 epoch count drifted at {threads} threads"
+        );
+        assert_eq!(
+            got.memorization_accuracy.to_bits(),
+            serial.memorization_accuracy.to_bits(),
+            "P=2 M_A drifted at {threads} threads"
+        );
+        assert_eq!(
+            got.generalization_accuracy.to_bits(),
+            serial.generalization_accuracy.to_bits(),
+            "P=2 G_A drifted at {threads} threads"
+        );
+        for (a, b) in got.history.iter().zip(&serial.history) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "P=2 epoch {} loss drifted at {threads} threads",
+                a.epoch
+            );
+            assert_eq!(a.train_acc.to_bits(), b.train_acc.to_bits(), "P=2 train acc drifted");
+            assert_eq!(a.val_acc.to_bits(), b.val_acc.to_bits(), "P=2 val acc drifted");
+            for (ea, eb) in a.entropies.iter().flatten().zip(b.entropies.iter().flatten()) {
+                assert_eq!(ea.to_bits(), eb.to_bits(), "P=2 entropy monitor drifted");
+            }
+        }
+    }
+}
+
+#[test]
 fn usps_analog_trains_quickly() {
     let mut c = TrainConfig::table1(DatasetKind::Usps, ModelKind::Fff, 32, 8, 1);
     c.train_n = 800;
