@@ -6,13 +6,18 @@
 //! `cargo run --release --example serve_fff [-- --requests 2000 --clients 4]`
 
 use fastfeedforward::cli::Args;
-use fastfeedforward::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, HloBackend};
+use fastfeedforward::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, HloBackend, Outcome,
+};
 use fastfeedforward::rng::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
-    let args = Args::from_env();
+    let args = Args::from_env().unwrap_or_else(|e| {
+        eprintln!("serve_fff: {e}");
+        std::process::exit(2);
+    });
     let total_requests: usize = args.get_or("requests", 2000);
     let clients: usize = args.get_or("clients", 4);
 
@@ -24,14 +29,19 @@ fn main() {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(2) },
         workers: 1,
-        threads: 0,
         queue_capacity: 4096,
+        ..CoordinatorConfig::default()
     };
     println!("starting coordinator: 1 PJRT worker, max_batch=16, deadline=2ms");
-    let coord = Arc::new(Coordinator::start(
+    let coord = Coordinator::start(
         cfg,
         HloBackend::factory("artifacts".into(), "fff_mnist_infer_b16".into()),
-    ));
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("serve_fff: {e}");
+        std::process::exit(1);
+    });
+    let coord = Arc::new(coord);
     println!("model input dim: {}", coord.dim_in());
 
     let t0 = Instant::now();
@@ -46,9 +56,14 @@ fn main() {
                 let x: Vec<f32> = (0..784).map(|_| rng.uniform_f32() - 0.5).collect();
                 match coord.submit(x) {
                     Ok(rx) => {
-                        let resp = rx.recv().expect("response");
-                        assert_eq!(resp.output.len(), 10);
-                        served += 1;
+                        let resp = rx.recv().expect("exactly one terminal response");
+                        match resp.outcome {
+                            Outcome::Ok => {
+                                assert_eq!(resp.output.len(), 10);
+                                served += 1;
+                            }
+                            other => eprintln!("client {c}: request terminated {other}"),
+                        }
                     }
                     Err(e) => eprintln!("client {c}: {e}"),
                 }

@@ -709,7 +709,8 @@ fn main() {
                 ..CoordinatorConfig::default()
             },
             move || Box::new(NativeFffBackend::new(model.clone())),
-        );
+        )
+        .expect("native backend start");
         let t = time_budgeted(Duration::from_millis(500), 20, 50_000, || {
             let rx = coord.submit(vec![0.1; 16]).unwrap();
             std::hint::black_box(rx.recv().unwrap());

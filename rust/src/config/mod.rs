@@ -76,6 +76,24 @@ pub struct ServeConfig {
     /// flag beats the config file — resolution via
     /// `kernels::resolve_parallel` where models are built.
     pub parallel_size: usize,
+    /// Per-request serving deadline in microseconds, measured from
+    /// submit; expired requests are shed with a typed
+    /// `DeadlineExceeded` outcome instead of served late. `0` (default)
+    /// disables shedding. The `FFF_DEADLINE_US` env override beats this
+    /// and the `fff serve --request-deadline-us` flag beats the config
+    /// file — resolution via `coordinator::resolve_deadline_us` where
+    /// the coordinator is started.
+    pub request_deadline_us: u64,
+    /// Backend rebuild budget per worker (supervision): how many times
+    /// a worker may reconstruct a panicking backend before it
+    /// tombstones and the tier degrades to the survivors.
+    pub worker_restarts: u32,
+    /// Base back-off between backend rebuild attempts, in microseconds
+    /// (doubles per consecutive attempt, capped at 100 ms).
+    pub restart_backoff_us: u64,
+    /// Re-dispatch budget per request after worker failures; past it
+    /// the request terminates with `WorkerFailed`.
+    pub max_retries: u32,
 }
 
 impl Default for ServeConfig {
@@ -88,6 +106,10 @@ impl Default for ServeConfig {
             queue_capacity: 4096,
             precision: Precision::F32,
             parallel_size: 1,
+            request_deadline_us: 0,
+            worker_restarts: 2,
+            restart_backoff_us: 500,
+            max_retries: 2,
         }
     }
 }
@@ -122,14 +144,85 @@ impl ServeConfig {
             cfg.queue_capacity = v;
         }
         if let Some(v) = kv.get("serve.precision") {
-            cfg.precision = Precision::parse(v)
-                .ok_or_else(|| format!("serve.precision: unknown precision {v:?} (want f32|int8)"))?;
+            cfg.precision = Precision::parse(v).ok_or_else(|| {
+                format!("serve.precision: unknown precision {v:?} (want f32|int8)")
+            })?;
         }
         if let Some(v) = kv.get_parsed::<usize>("fff.parallel_size")? {
             cfg.parallel_size = v;
         }
+        if let Some(v) = kv.get_parsed::<u64>("serve.request_deadline_us")? {
+            cfg.request_deadline_us = v;
+        }
+        if let Some(v) = kv.get_parsed::<u32>("serve.worker_restarts")? {
+            cfg.worker_restarts = v;
+        }
+        if let Some(v) = kv.get_parsed::<u64>("serve.restart_backoff_us")? {
+            cfg.restart_backoff_us = v;
+        }
+        if let Some(v) = kv.get_parsed::<u32>("serve.max_retries")? {
+            cfg.max_retries = v;
+        }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Apply `fff serve` CLI flags over this config — the flag layer of
+    /// the preset < config file < flag < env precedence contract (env
+    /// overrides like `FFF_PRECISION` and `FFF_DEADLINE_US` are folded
+    /// in later, where the values are consumed). Fallible so the CLI
+    /// and the tests share one parse-and-validate path.
+    pub fn apply_args(&mut self, args: &crate::cli::Args) -> Result<(), String> {
+        fn opt<T: std::str::FromStr>(
+            args: &crate::cli::Args,
+            key: &str,
+        ) -> Result<Option<T>, String>
+        where
+            T::Err: std::fmt::Display,
+        {
+            match args.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .parse::<T>()
+                    .map(Some)
+                    .map_err(|e| format!("--{key}: invalid value {v:?} ({e})")),
+            }
+        }
+        if let Some(v) = opt::<usize>(args, "workers")? {
+            self.workers = v;
+        }
+        if let Some(v) = opt::<usize>(args, "threads")? {
+            self.threads = v;
+        }
+        if let Some(v) = opt::<usize>(args, "max-batch")? {
+            self.max_batch = v;
+        }
+        if let Some(v) = opt::<u64>(args, "max-delay-us")? {
+            self.max_delay_us = v;
+        }
+        if let Some(v) = opt::<usize>(args, "queue")? {
+            self.queue_capacity = v;
+        }
+        if let Some(v) = args.get("precision") {
+            self.precision = Precision::parse(v)
+                .ok_or_else(|| format!("--precision: unknown precision {v:?} (want f32|int8)"))?;
+        }
+        if let Some(v) = opt::<usize>(args, "parallel-size")? {
+            self.parallel_size = v;
+        }
+        if let Some(v) = opt::<u64>(args, "request-deadline-us")? {
+            self.request_deadline_us = v;
+        }
+        if let Some(v) = opt::<u32>(args, "worker-restarts")? {
+            self.worker_restarts = v;
+        }
+        if let Some(v) = opt::<u64>(args, "restart-backoff-us")? {
+            self.restart_backoff_us = v;
+        }
+        if let Some(v) = opt::<u32>(args, "max-retries")? {
+            self.max_retries = v;
+        }
+        self.validate()
     }
 
     /// Bounds checks shared by file loading and CLI-flag overrides.
@@ -351,6 +444,61 @@ mod tests {
         let zero = KvFile::parse("[fff]\nparallel_size = 0\n").unwrap();
         let err = ServeConfig::from_kv(&zero).unwrap_err();
         assert!(err.contains("parallel_size"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_parses_robustness_keys() {
+        let kv = KvFile::parse(
+            "[serve]\nrequest_deadline_us = 5000\nworker_restarts = 7\n\
+             restart_backoff_us = 250\nmax_retries = 9\n",
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.request_deadline_us, 5000);
+        assert_eq!(cfg.worker_restarts, 7);
+        assert_eq!(cfg.restart_backoff_us, 250);
+        assert_eq!(cfg.max_retries, 9);
+        // Defaults: deadlines off, a small restart/retry budget on.
+        let d = ServeConfig::default();
+        assert_eq!(d.request_deadline_us, 0);
+        assert_eq!(d.worker_restarts, 2);
+        assert_eq!(d.restart_backoff_us, 500);
+        assert_eq!(d.max_retries, 2);
+    }
+
+    #[test]
+    fn serve_flags_layer_over_file_then_env_wins() {
+        // The full precedence chain for the deadline knob:
+        // default (0) < config file < CLI flag < FFF_DEADLINE_US.
+        let kv = KvFile::parse("[serve]\nworkers = 2\nrequest_deadline_us = 5000\n").unwrap();
+        let mut cfg = ServeConfig::from_kv(&kv).unwrap();
+        assert_eq!(cfg.request_deadline_us, 5000, "file layer");
+        let args = crate::cli::Args::parse(
+            ["--request-deadline-us", "7000", "--max-retries", "4"].map(String::from),
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.request_deadline_us, 7000, "flag beats file");
+        assert_eq!(cfg.max_retries, 4);
+        assert_eq!(cfg.workers, 2, "untouched flags keep the file layer");
+        // Env layer (pure parser — the process-global OnceLock is
+        // unusable in tests): set beats flag, unset keeps flag, garbage
+        // is ignored.
+        use crate::coordinator::parse_deadline_env;
+        assert_eq!(parse_deadline_env(Some("9000")).unwrap_or(cfg.request_deadline_us), 9000);
+        assert_eq!(parse_deadline_env(None).unwrap_or(cfg.request_deadline_us), 7000);
+        assert_eq!(parse_deadline_env(Some("soon")).unwrap_or(cfg.request_deadline_us), 7000);
+    }
+
+    #[test]
+    fn serve_apply_args_rejects_garbage_and_invalid() {
+        let mut cfg = ServeConfig::default();
+        let bad = crate::cli::Args::parse(["--worker-restarts", "many"].map(String::from)).unwrap();
+        let err = cfg.apply_args(&bad).unwrap_err();
+        assert!(err.contains("worker-restarts"), "{err}");
+        let zero = crate::cli::Args::parse(["--workers", "0"].map(String::from)).unwrap();
+        let err = cfg.apply_args(&zero).unwrap_err();
+        assert!(err.contains("workers"), "{err}");
     }
 
     #[test]

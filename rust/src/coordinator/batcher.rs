@@ -1,16 +1,32 @@
-//! Deadline-based dynamic batching.
+//! Deadline-based dynamic batching with failure-aware dispatch.
 //!
-//! The batcher drains the global request queue into batches, closing a
-//! batch when it reaches `max_batch` or when the *oldest* queued request
-//! has waited `max_delay` — the standard latency/throughput knob of
-//! serving systems. Batches go to the **least-loaded** worker (fewest
-//! dispatched-but-uncompleted requests, round-robin on ties): FFF batch
-//! service times are uneven because routing skews leaf buckets (arXiv
-//! 2405.16836), and blind round-robin queues batches behind whichever
-//! worker drew the slow ones.
+//! The batcher drains the coordinator's message queue into batches,
+//! closing a batch when it reaches `max_batch` or when the *oldest*
+//! queued request has waited `max_delay` — the standard
+//! latency/throughput knob of serving systems. Batches go to the
+//! **least-loaded live** worker (fewest dispatched-but-uncompleted
+//! requests, round-robin on ties): FFF batch service times are uneven
+//! because routing skews leaf buckets (arXiv 2405.16836), and blind
+//! round-robin queues batches behind whichever worker drew the slow
+//! ones.
+//!
+//! Robustness contract (the typed-outcome half of the serving tier):
+//!
+//! * Requests already past their deadline are **shed at batch close**
+//!   with [`Outcome::DeadlineExceeded`] instead of wasting worker time.
+//! * Batches bounced back by a failing worker ([`BatcherMsg::Retry`])
+//!   re-dispatch immediately, in order, to the surviving workers.
+//! * A worker whose channel is gone is marked dead **persistently**
+//!   (its [`WorkerSlot::alive`] flag) and its `outstanding` counter is
+//!   rolled back, so one crash cannot poison the load accounting.
+//! * When no live worker remains, requests get a terminal
+//!   [`Outcome::WorkerFailed`] — never a silently dropped channel.
+//! * After [`BatcherMsg::Shutdown`] everything still in the pipe is
+//!   answered [`Outcome::ShuttingDown`].
 
-use super::InferRequest;
-use std::sync::atomic::{AtomicU64, Ordering};
+use super::metrics::Metrics;
+use super::{InferRequest, Outcome};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -34,49 +50,112 @@ pub struct Batch {
     pub requests: Vec<InferRequest>,
 }
 
-/// A worker endpoint as the batcher sees it: its batch queue plus the
-/// number of requests dispatched to it and not yet completed (the worker
-/// decrements after responding).
+/// Everything that can arrive at the batcher: fresh submissions, failed
+/// batches bounced back by workers for re-dispatch, and the shutdown
+/// signal (which beats dropping the channel because worker retry
+/// senders keep it open).
+pub(crate) enum BatcherMsg {
+    Request(InferRequest),
+    Retry(Vec<InferRequest>),
+    Shutdown,
+}
+
+/// A worker endpoint as the batcher sees it: its batch queue, the
+/// number of requests dispatched to it and not yet completed (the
+/// worker decrements after responding), and whether it still accepts
+/// work (`false` once it exhausted its restart budget or its channel
+/// died).
 pub(crate) struct WorkerSlot {
     pub(crate) tx: mpsc::Sender<Batch>,
     pub(crate) outstanding: Arc<AtomicU64>,
+    pub(crate) alive: Arc<AtomicBool>,
 }
 
-/// The batcher loop. Exits when the request channel closes.
+/// Shared state the batcher needs to answer requests terminally on its
+/// own (shedding, dead-tier failure, shutdown drain).
+pub(crate) struct BatcherCtx {
+    pub(crate) workers: Vec<WorkerSlot>,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) in_flight: Arc<AtomicU64>,
+}
+
+/// The batcher loop. Exits when the message channel closes; on
+/// [`BatcherMsg::Shutdown`] it flushes pending work, releases the
+/// worker channels (letting workers drain and exit), then answers
+/// everything still arriving with [`Outcome::ShuttingDown`] until the
+/// last sender is gone.
 pub(crate) fn run_batcher(
-    rx: mpsc::Receiver<InferRequest>,
-    workers: Vec<WorkerSlot>,
+    rx: mpsc::Receiver<BatcherMsg>,
+    mut ctx: BatcherCtx,
     cfg: BatcherConfig,
 ) {
     assert!(cfg.max_batch >= 1);
-    let mut next_worker = 0usize;
+    let mut next = 0usize;
     let mut pending: Vec<InferRequest> = Vec::with_capacity(cfg.max_batch);
     let mut deadline: Option<Instant> = None;
+    let mut shutting_down = false;
     loop {
         let timeout = match deadline {
             Some(d) => d.saturating_duration_since(Instant::now()),
             None => Duration::from_secs(3600),
         };
         match rx.recv_timeout(timeout) {
-            Ok(req) => {
+            Ok(BatcherMsg::Request(req)) => {
+                if shutting_down {
+                    super::respond_terminal(
+                        req,
+                        Outcome::ShuttingDown,
+                        &ctx.metrics,
+                        &ctx.in_flight,
+                    );
+                    continue;
+                }
                 if pending.is_empty() {
                     deadline = Some(req.submitted + cfg.max_delay);
                 }
                 pending.push(req);
                 if pending.len() >= cfg.max_batch {
-                    dispatch(&mut pending, &workers, &mut next_worker);
+                    dispatch(&mut pending, &ctx, &mut next);
                     deadline = None;
                 }
             }
+            Ok(BatcherMsg::Retry(mut reqs)) => {
+                if shutting_down {
+                    for req in reqs {
+                        super::respond_terminal(
+                            req,
+                            Outcome::ShuttingDown,
+                            &ctx.metrics,
+                            &ctx.in_flight,
+                        );
+                    }
+                    continue;
+                }
+                // A failed batch re-dispatches immediately (its requests
+                // already waited a full batching delay once); order within
+                // the batch is preserved.
+                dispatch(&mut reqs, &ctx, &mut next);
+            }
+            Ok(BatcherMsg::Shutdown) => {
+                if !pending.is_empty() {
+                    dispatch(&mut pending, &ctx, &mut next);
+                }
+                deadline = None;
+                shutting_down = true;
+                // Dropping the batch senders lets every worker drain its
+                // queue and exit; their retry senders then close this
+                // channel and the drain loop above ends the thread.
+                ctx.workers.clear();
+            }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if !pending.is_empty() {
-                    dispatch(&mut pending, &workers, &mut next_worker);
+                    dispatch(&mut pending, &ctx, &mut next);
                 }
                 deadline = None;
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 if !pending.is_empty() {
-                    dispatch(&mut pending, &workers, &mut next_worker);
+                    dispatch(&mut pending, &ctx, &mut next);
                 }
                 return;
             }
@@ -84,20 +163,36 @@ pub(crate) fn run_batcher(
     }
 }
 
-fn dispatch(pending: &mut Vec<InferRequest>, workers: &[WorkerSlot], next: &mut usize) {
-    let mut batch = Batch { requests: std::mem::take(pending) };
-    let n = workers.len();
-    let mut dead = vec![false; n];
+/// Close `pending` into a batch and hand it to the least-loaded live
+/// worker. Expired requests are shed here (typed, counted) before any
+/// worker sees them; if every worker is dead the remainder gets a
+/// terminal [`Outcome::WorkerFailed`].
+pub(crate) fn dispatch(pending: &mut Vec<InferRequest>, ctx: &BatcherCtx, next: &mut usize) {
+    // Deadline shedding at batch close: computing an answer nobody is
+    // waiting for anymore only slows the requests behind it.
+    let now = Instant::now();
+    let mut batch = Batch { requests: Vec::with_capacity(pending.len()) };
+    for req in pending.drain(..) {
+        if super::expired(&req, now) {
+            super::respond_terminal(req, Outcome::DeadlineExceeded, &ctx.metrics, &ctx.in_flight);
+        } else {
+            batch.requests.push(req);
+        }
+    }
+    if batch.requests.is_empty() {
+        return;
+    }
+    let n = ctx.workers.len();
     loop {
         // Least-loaded live worker; the scan starts at the round-robin
         // cursor so ties rotate instead of pinning worker 0.
         let mut best: Option<(usize, u64)> = None;
         for off in 0..n {
             let w = (*next + off) % n;
-            if dead[w] {
+            if !ctx.workers[w].alive.load(Ordering::Acquire) {
                 continue;
             }
-            let load = workers[w].outstanding.load(Ordering::Acquire);
+            let load = ctx.workers[w].outstanding.load(Ordering::Acquire);
             let better = match best {
                 None => true,
                 Some((_, l)) => load < l,
@@ -107,18 +202,23 @@ fn dispatch(pending: &mut Vec<InferRequest>, workers: &[WorkerSlot], next: &mut 
             }
         }
         let Some((w, _)) = best else {
-            // All workers gone; drop the batch (responses' channels close).
+            // The whole tier is down: answer typed instead of dropping
+            // the response channels.
+            for req in batch.requests {
+                super::respond_terminal(req, Outcome::WorkerFailed, &ctx.metrics, &ctx.in_flight);
+            }
             return;
         };
         *next = (w + 1) % n;
         let len = batch.requests.len() as u64;
-        workers[w].outstanding.fetch_add(len, Ordering::AcqRel);
-        match workers[w].tx.send(batch) {
+        ctx.workers[w].outstanding.fetch_add(len, Ordering::AcqRel);
+        match ctx.workers[w].tx.send(batch) {
             Ok(()) => return,
             Err(mpsc::SendError(b)) => {
-                // Worker gone: roll back its counter and try another.
-                workers[w].outstanding.fetch_sub(len, Ordering::AcqRel);
-                dead[w] = true;
+                // Worker gone: roll back its counter, remember the dead
+                // slot permanently, and try another.
+                ctx.workers[w].outstanding.fetch_sub(len, Ordering::AcqRel);
+                ctx.workers[w].alive.store(false, Ordering::Release);
                 batch = b;
             }
         }
@@ -128,15 +228,36 @@ fn dispatch(pending: &mut Vec<InferRequest>, workers: &[WorkerSlot], next: &mut 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::InferResponse;
     use std::time::Instant;
 
-    fn req(id: u64) -> InferRequest {
-        let (tx, _rx) = mpsc::channel();
-        InferRequest { id, input: vec![0.0; 4], submitted: Instant::now(), resp: tx }
+    fn req(id: u64) -> (InferRequest, mpsc::Receiver<InferResponse>) {
+        let (tx, rx) = mpsc::channel();
+        let r = InferRequest {
+            id,
+            input: vec![0.0; 4],
+            submitted: Instant::now(),
+            deadline: None,
+            retries: 0,
+            resp: tx,
+        };
+        (r, rx)
     }
 
     fn slot(tx: mpsc::Sender<Batch>) -> WorkerSlot {
-        WorkerSlot { tx, outstanding: Arc::new(AtomicU64::new(0)) }
+        WorkerSlot {
+            tx,
+            outstanding: Arc::new(AtomicU64::new(0)),
+            alive: Arc::new(AtomicBool::new(true)),
+        }
+    }
+
+    fn ctx(workers: Vec<WorkerSlot>) -> BatcherCtx {
+        BatcherCtx {
+            workers,
+            metrics: Arc::new(Metrics::new()),
+            in_flight: Arc::new(AtomicU64::new(0)),
+        }
     }
 
     #[test]
@@ -144,9 +265,9 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let (wtx, wrx) = mpsc::channel();
         let cfg = BatcherConfig { max_batch: 4, max_delay: Duration::from_secs(10) };
-        let h = std::thread::spawn(move || run_batcher(rx, vec![slot(wtx)], cfg));
+        let h = std::thread::spawn(move || run_batcher(rx, ctx(vec![slot(wtx)]), cfg));
         for i in 0..8 {
-            tx.send(req(i)).unwrap();
+            tx.send(BatcherMsg::Request(req(i).0)).unwrap();
         }
         let mut sizes = Vec::new();
         for _ in 0..2 {
@@ -162,9 +283,9 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let (wtx, wrx) = mpsc::channel();
         let cfg = BatcherConfig { max_batch: 100, max_delay: Duration::from_millis(5) };
-        let h = std::thread::spawn(move || run_batcher(rx, vec![slot(wtx)], cfg));
-        tx.send(req(0)).unwrap();
-        tx.send(req(1)).unwrap();
+        let h = std::thread::spawn(move || run_batcher(rx, ctx(vec![slot(wtx)]), cfg));
+        tx.send(BatcherMsg::Request(req(0).0)).unwrap();
+        tx.send(BatcherMsg::Request(req(1).0)).unwrap();
         let t0 = Instant::now();
         let batch = wrx.recv().unwrap();
         assert_eq!(batch.requests.len(), 2);
@@ -178,8 +299,8 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let (wtx, wrx) = mpsc::channel();
         let cfg = BatcherConfig { max_batch: 100, max_delay: Duration::from_secs(100) };
-        let h = std::thread::spawn(move || run_batcher(rx, vec![slot(wtx)], cfg));
-        tx.send(req(7)).unwrap();
+        let h = std::thread::spawn(move || run_batcher(rx, ctx(vec![slot(wtx)]), cfg));
+        tx.send(BatcherMsg::Request(req(7).0)).unwrap();
         drop(tx);
         let batch = wrx.recv().unwrap();
         assert_eq!(batch.requests[0].id, 7);
@@ -192,47 +313,132 @@ mod tests {
         // the idle worker 1 even though round-robin would pick 0.
         let (w0tx, w0rx) = mpsc::channel();
         let (w1tx, w1rx) = mpsc::channel();
-        let workers = vec![slot(w0tx), slot(w1tx)];
-        workers[0].outstanding.store(5, Ordering::Release);
-        let mut pending = vec![req(0), req(1)];
+        let c = ctx(vec![slot(w0tx), slot(w1tx)]);
+        c.workers[0].outstanding.store(5, Ordering::Release);
+        let mut pending = vec![req(0).0, req(1).0];
         let mut next = 0usize;
-        dispatch(&mut pending, &workers, &mut next);
+        dispatch(&mut pending, &c, &mut next);
         assert_eq!(w1rx.recv().unwrap().requests.len(), 2);
         assert!(w0rx.try_recv().is_err(), "busy worker should not receive");
-        assert_eq!(workers[1].outstanding.load(Ordering::Acquire), 2);
+        assert_eq!(c.workers[1].outstanding.load(Ordering::Acquire), 2);
     }
 
     #[test]
-    fn dispatch_rolls_back_and_skips_dead_worker() {
+    fn dispatch_rolls_back_and_marks_dead_worker() {
         // Worker 0 idle but dead (receiver dropped): the batch must fall
-        // through to worker 1 and worker 0's counter must roll back.
+        // through to worker 1, worker 0's counter must roll back, and
+        // worker 0 must be remembered dead for future dispatches.
         let (w0tx, w0rx) = mpsc::channel();
         let (w1tx, w1rx) = mpsc::channel();
         drop(w0rx);
-        let workers = vec![slot(w0tx), slot(w1tx)];
+        let c = ctx(vec![slot(w0tx), slot(w1tx)]);
         // Bias worker 1 so the least-loaded pick is the dead worker 0.
-        workers[1].outstanding.store(3, Ordering::Release);
-        let mut pending = vec![req(9)];
+        c.workers[1].outstanding.store(3, Ordering::Release);
+        let mut pending = vec![req(9).0];
         let mut next = 0usize;
-        dispatch(&mut pending, &workers, &mut next);
+        dispatch(&mut pending, &c, &mut next);
         assert_eq!(w1rx.recv().unwrap().requests[0].id, 9);
-        assert_eq!(workers[0].outstanding.load(Ordering::Acquire), 0, "no rollback");
-        assert_eq!(workers[1].outstanding.load(Ordering::Acquire), 4);
+        assert_eq!(c.workers[0].outstanding.load(Ordering::Acquire), 0, "no rollback");
+        assert_eq!(c.workers[1].outstanding.load(Ordering::Acquire), 4);
+        assert!(!c.workers[0].alive.load(Ordering::Acquire), "dead slot not remembered");
     }
 
     #[test]
     fn dispatch_rotates_on_ties() {
         let (w0tx, w0rx) = mpsc::channel();
         let (w1tx, w1rx) = mpsc::channel();
-        let workers = vec![slot(w0tx), slot(w1tx)];
+        let c = ctx(vec![slot(w0tx), slot(w1tx)]);
         let mut next = 0usize;
-        let mut pending = vec![req(0)];
-        dispatch(&mut pending, &workers, &mut next);
+        let mut pending = vec![req(0).0];
+        dispatch(&mut pending, &c, &mut next);
         // Drain and reset so the second dispatch sees a tie again.
         assert_eq!(w0rx.recv().unwrap().requests.len(), 1);
-        workers[0].outstanding.store(0, Ordering::Release);
-        let mut pending = vec![req(1)];
-        dispatch(&mut pending, &workers, &mut next);
+        c.workers[0].outstanding.store(0, Ordering::Release);
+        let mut pending = vec![req(1).0];
+        dispatch(&mut pending, &c, &mut next);
         assert_eq!(w1rx.recv().unwrap().requests.len(), 1, "tie should rotate to worker 1");
+    }
+
+    #[test]
+    fn dispatch_with_all_workers_dead_answers_worker_failed() {
+        // Both slots tombstoned: requests must get a terminal typed
+        // outcome, not a dropped channel, and in_flight must come down.
+        let (w0tx, _w0rx) = mpsc::channel();
+        let (w1tx, _w1rx) = mpsc::channel();
+        let c = ctx(vec![slot(w0tx), slot(w1tx)]);
+        c.workers[0].alive.store(false, Ordering::Release);
+        c.workers[1].alive.store(false, Ordering::Release);
+        c.in_flight.store(2, Ordering::Release);
+        let (r0, rx0) = req(0);
+        let (r1, rx1) = req(1);
+        let mut pending = vec![r0, r1];
+        let mut next = 0usize;
+        dispatch(&mut pending, &c, &mut next);
+        assert_eq!(rx0.recv().unwrap().outcome, Outcome::WorkerFailed);
+        assert_eq!(rx1.recv().unwrap().outcome, Outcome::WorkerFailed);
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 2);
+        assert_eq!(c.in_flight.load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn dispatch_sheds_expired_requests_at_batch_close() {
+        let (wtx, wrx) = mpsc::channel();
+        let c = ctx(vec![slot(wtx)]);
+        c.in_flight.store(2, Ordering::Release);
+        let (mut late, late_rx) = req(0);
+        late.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (fresh, _fresh_rx) = req(1);
+        let mut pending = vec![late, fresh];
+        let mut next = 0usize;
+        dispatch(&mut pending, &c, &mut next);
+        let resp = late_rx.recv().unwrap();
+        assert_eq!(resp.outcome, Outcome::DeadlineExceeded);
+        assert!(resp.output.is_empty());
+        // Only the fresh request reaches the worker.
+        let batch = wrx.recv().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.requests[0].id, 1);
+        assert_eq!(c.metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(c.in_flight.load(Ordering::Acquire), 1);
+        assert_eq!(c.workers[0].outstanding.load(Ordering::Acquire), 1);
+    }
+
+    #[test]
+    fn retry_redispatches_in_order_to_live_worker() {
+        let (tx, rx) = mpsc::channel();
+        let (wtx, wrx) = mpsc::channel();
+        let cfg = BatcherConfig { max_batch: 100, max_delay: Duration::from_secs(100) };
+        let h = std::thread::spawn(move || run_batcher(rx, ctx(vec![slot(wtx)]), cfg));
+        tx.send(BatcherMsg::Retry(vec![req(5).0, req(6).0])).unwrap();
+        // Retries bypass the batching delay: the batch arrives at once,
+        // in the bounced order.
+        let batch = wrx.recv().unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![5, 6]);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_answers_late_messages_with_shutting_down() {
+        let (tx, rx) = mpsc::channel();
+        let (wtx, wrx) = mpsc::channel();
+        let cfg = BatcherConfig { max_batch: 100, max_delay: Duration::from_secs(100) };
+        let c = ctx(vec![slot(wtx)]);
+        let in_flight = c.in_flight.clone();
+        in_flight.store(2, Ordering::Release);
+        let h = std::thread::spawn(move || run_batcher(rx, c, cfg));
+        tx.send(BatcherMsg::Shutdown).unwrap();
+        let (r0, rx0) = req(0);
+        tx.send(BatcherMsg::Request(r0)).unwrap();
+        assert_eq!(rx0.recv().unwrap().outcome, Outcome::ShuttingDown);
+        let (r1, rx1) = req(1);
+        tx.send(BatcherMsg::Retry(vec![r1])).unwrap();
+        assert_eq!(rx1.recv().unwrap().outcome, Outcome::ShuttingDown);
+        assert_eq!(in_flight.load(Ordering::Acquire), 0);
+        // The worker channel was released at shutdown.
+        assert!(wrx.recv().is_err(), "worker channel should be closed");
+        drop(tx);
+        h.join().unwrap();
     }
 }

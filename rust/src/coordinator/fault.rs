@@ -1,0 +1,172 @@
+//! Fault injection for the serving tier — the chaos harness's probe.
+//!
+//! [`FaultyBackend`] wraps any [`Backend`] and injects failures on a
+//! scripted, deterministic schedule: panics (exercising worker
+//! supervision and restart), stalls (exercising deadline shedding), and
+//! slow batches (exercising least-loaded dispatch under uneven service
+//! times). The [`FaultScript`] is shared via `Arc` so it survives
+//! backend rebuilds — the schedule indexes *inference calls across the
+//! worker's lifetime*, not calls on one backend instance.
+//!
+//! Test/bench-only surface: nothing in the serving path constructs
+//! these; `tests/chaos.rs` is the consumer.
+
+use super::worker::Backend;
+use crate::nn::RoutingStats;
+use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One scheduled fault, applied to one `infer` call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Serve normally.
+    None,
+    /// Panic before touching the inner backend (a crashed worker; its
+    /// batch must be re-dispatched, its backend rebuilt).
+    Panic,
+    /// Sleep, then serve — long enough to blow request deadlines.
+    Stall(Duration),
+    /// Sleep briefly, then serve — uneven service time, not failure.
+    Slow(Duration),
+}
+
+/// A deterministic schedule of faults, consumed one entry per inference
+/// call (across all holders of the `Arc`: rebuilds and sibling workers
+/// advance the same cursor). Calls beyond the script get the `tail`
+/// fault — [`Fault::None`] by default, so a finite script means
+/// "chaotic warm-up, then healthy".
+pub struct FaultScript {
+    faults: Vec<Fault>,
+    tail: Fault,
+    cursor: AtomicUsize,
+}
+
+impl FaultScript {
+    /// Script that runs `faults` in order, then serves cleanly forever.
+    pub fn new(faults: Vec<Fault>) -> Self {
+        FaultScript::with_tail(faults, Fault::None)
+    }
+
+    /// Script that runs `faults` in order, then repeats `tail` forever.
+    pub fn with_tail(faults: Vec<Fault>, tail: Fault) -> Self {
+        FaultScript { faults, tail, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Every call gets `fault` — e.g. a backend that always panics.
+    pub fn always(fault: Fault) -> Self {
+        FaultScript::with_tail(Vec::new(), fault)
+    }
+
+    /// Next scheduled fault (advances the shared cursor).
+    pub fn next_fault(&self) -> Fault {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.faults.get(i).copied().unwrap_or(self.tail)
+    }
+
+    /// Inference calls that have drawn from the schedule so far.
+    pub fn injected(&self) -> usize {
+        self.cursor.load(Ordering::Relaxed)
+    }
+}
+
+/// A [`Backend`] decorator that injects the scripted faults around an
+/// inner backend. Construction is clean — faults fire on inference —
+/// unless paired with a factory that panics on its own (see
+/// `tests/chaos.rs` for both styles).
+pub struct FaultyBackend {
+    inner: Box<dyn Backend>,
+    script: Arc<FaultScript>,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: Box<dyn Backend>, script: Arc<FaultScript>) -> Self {
+        FaultyBackend { inner, script }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn dim_in(&self) -> usize {
+        self.inner.dim_in()
+    }
+
+    fn dim_out(&self) -> usize {
+        self.inner.dim_out()
+    }
+
+    fn infer(&mut self, batch: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(0, 0);
+        self.infer_into(batch, &mut y);
+        y
+    }
+
+    fn infer_into(&mut self, batch: &Matrix, out: &mut Matrix) {
+        match self.script.next_fault() {
+            Fault::None => {}
+            Fault::Panic => panic!("injected fault: backend panic"),
+            Fault::Stall(d) | Fault::Slow(d) => std::thread::sleep(d),
+        }
+        self.inner.infer_into(batch, out);
+    }
+
+    fn last_routing(&self) -> Option<RoutingStats> {
+        self.inner.last_routing()
+    }
+
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeFffBackend;
+    use crate::nn::FffInfer;
+    use crate::rng::Rng;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn native() -> (FffInfer, Box<dyn Backend>) {
+        let mut rng = Rng::seed_from_u64(11);
+        let model = FffInfer::random(&mut rng, 6, 2, 2, 3, 4);
+        let backend = Box::new(NativeFffBackend::new(model.clone()));
+        (model, backend)
+    }
+
+    #[test]
+    fn script_sequences_then_tail() {
+        let s = FaultScript::new(vec![Fault::Panic, Fault::Slow(Duration::from_micros(1))]);
+        assert_eq!(s.next_fault(), Fault::Panic);
+        assert_eq!(s.next_fault(), Fault::Slow(Duration::from_micros(1)));
+        assert_eq!(s.next_fault(), Fault::None, "past the script means healthy");
+        assert_eq!(s.next_fault(), Fault::None);
+        assert_eq!(s.injected(), 4);
+        let always = FaultScript::always(Fault::Panic);
+        assert_eq!(always.next_fault(), Fault::Panic);
+        assert_eq!(always.next_fault(), Fault::Panic);
+    }
+
+    #[test]
+    fn healthy_steps_are_bit_transparent() {
+        let (model, inner) = native();
+        let mut faulty = FaultyBackend::new(inner, Arc::new(FaultScript::new(Vec::new())));
+        let x = Matrix::from_fn(3, 6, |r, c| ((r + c) as f32).cos());
+        let got = faulty.infer(&x);
+        assert_eq!(got, model.infer_batch(&x), "decorator must not perturb outputs");
+        assert!(faulty.last_routing().is_some(), "routing stats must pass through");
+    }
+
+    #[test]
+    fn panic_fires_on_schedule_only() {
+        let (_, inner) = native();
+        let script = Arc::new(FaultScript::new(vec![Fault::None, Fault::Panic]));
+        let mut faulty = FaultyBackend::new(inner, script.clone());
+        let x = Matrix::from_fn(2, 6, |r, c| (r as f32) - (c as f32));
+        let ok = catch_unwind(AssertUnwindSafe(|| faulty.infer(&x)));
+        assert!(ok.is_ok(), "step 1 is scheduled clean");
+        let boom = catch_unwind(AssertUnwindSafe(|| faulty.infer(&x)));
+        assert!(boom.is_err(), "step 2 is the scheduled panic");
+        assert_eq!(script.injected(), 2);
+    }
+}

@@ -1,27 +1,90 @@
-//! Serving metrics: completed/rejected counters, latency percentiles,
-//! batch-size distribution, and per-batch routing occupancy/skew (the
-//! load-balance signal of arXiv 2405.16836, reported by routing backends).
+//! Serving metrics: completed/rejected/shed/failed counters, latency
+//! percentiles, batch-size distribution, and per-batch routing
+//! occupancy/skew (the load-balance signal of arXiv 2405.16836,
+//! reported by routing backends).
+//!
+//! Distribution streams are held in fixed-capacity reservoirs (Vitter's
+//! Algorithm R), so a long-lived server's metrics memory is bounded no
+//! matter how many requests it serves; the reservoir is a uniform
+//! sample of the whole stream, seeded from [`crate::rng`] so two runs
+//! recording the same sequence snapshot identically.
 
 use crate::nn::RoutingStats;
+use crate::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Shared metrics sink (lock only on record of the sample vectors).
+/// Per-stream reservoir capacity. 4096 doubles (32 KiB) per stream
+/// bounds a server's metrics memory at ~128 KiB total while keeping
+/// p99 estimates stable (~40 samples above the 99th percentile).
+pub(crate) const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-capacity uniform sample of an unbounded stream (Algorithm R).
+/// Deterministic: replacement choices depend only on the seed and the
+/// record sequence, never on wall-clock or thread interleaving of other
+/// streams.
+struct Reservoir {
+    values: Vec<f64>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Reservoir {
+    fn new(seed: u64) -> Self {
+        Reservoir { values: Vec::new(), seen: 0, rng: Rng::seed_from_u64(seed) }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.values.len() < RESERVOIR_CAP {
+            self.values.push(v);
+            return;
+        }
+        let j = self.rng.below(self.seen as usize);
+        if j < RESERVOIR_CAP {
+            self.values[j] = v;
+        }
+    }
+}
+
+/// Shared metrics sink (lock only on record of the sample streams).
 pub struct Metrics {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests shed past their deadline (`Outcome::DeadlineExceeded`).
+    pub shed: AtomicU64,
+    /// Requests terminated by worker failure or shutdown
+    /// (`Outcome::WorkerFailed` / `Outcome::ShuttingDown`).
+    pub failed: AtomicU64,
+    /// Re-dispatches of requests whose batch hit a worker failure.
+    pub retried: AtomicU64,
+    /// Backend rebuild attempts across all workers.
+    pub restarts: AtomicU64,
     samples: Mutex<Samples>,
 }
 
-#[derive(Default)]
 struct Samples {
-    latencies_us: Vec<f64>,
-    batch_sizes: Vec<f64>,
+    latencies_us: Reservoir,
+    batch_sizes: Reservoir,
     /// Per routed batch: mean samples per non-empty leaf.
-    leaf_occupancy: Vec<f64>,
+    leaf_occupancy: Reservoir,
     /// Per routed batch: largest bucket over mean bucket (1.0 balanced).
-    leaf_skew: Vec<f64>,
+    leaf_skew: Reservoir,
+}
+
+impl Samples {
+    fn new() -> Self {
+        // Distinct fixed seeds per stream: streams fill at different
+        // rates, so sharing one generator would couple their sampling
+        // decisions across runs with different batch shapes.
+        Samples {
+            latencies_us: Reservoir::new(1),
+            batch_sizes: Reservoir::new(2),
+            leaf_occupancy: Reservoir::new(3),
+            leaf_skew: Reservoir::new(4),
+        }
+    }
 }
 
 /// Point-in-time view of the metrics.
@@ -29,6 +92,14 @@ struct Samples {
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
+    /// Requests shed past their deadline.
+    pub shed: u64,
+    /// Requests terminated by worker failure or shutdown.
+    pub failed: u64,
+    /// Re-dispatches after worker failures.
+    pub retried: u64,
+    /// Backend rebuild attempts across all workers.
+    pub restarts: u64,
     pub latency_p50: Duration,
     pub latency_p99: Duration,
     pub latency_mean: Duration,
@@ -44,7 +115,11 @@ impl Metrics {
         Metrics {
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
-            samples: Mutex::new(Samples::default()),
+            shed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            samples: Mutex::new(Samples::new()),
         }
     }
 
@@ -67,13 +142,17 @@ impl Metrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let s = self.samples.lock().unwrap();
-        let lat = crate::bench::summarize(&s.latencies_us);
-        let batch = crate::bench::summarize(&s.batch_sizes);
-        let occupancy = crate::bench::summarize(&s.leaf_occupancy);
-        let skew = crate::bench::summarize(&s.leaf_skew);
+        let lat = crate::bench::summarize(&s.latencies_us.values);
+        let batch = crate::bench::summarize(&s.batch_sizes.values);
+        let occupancy = crate::bench::summarize(&s.leaf_occupancy.values);
+        let skew = crate::bench::summarize(&s.leaf_skew.values);
         MetricsSnapshot {
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
             latency_p50: Duration::from_secs_f64(lat.p50 / 1e6),
             latency_p99: Duration::from_secs_f64(lat.p99 / 1e6),
             latency_mean: Duration::from_secs_f64(lat.mean / 1e6),
@@ -94,10 +173,14 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "completed={} rejected={} p50={:.1}us p99={:.1}us mean={:.1}us mean_batch={:.1} \
-             leaf_occupancy={:.2} leaf_skew={:.2}",
+            "completed={} rejected={} shed={} failed={} retried={} restarts={} p50={:.1}us \
+             p99={:.1}us mean={:.1}us mean_batch={:.1} leaf_occupancy={:.2} leaf_skew={:.2}",
             self.completed,
             self.rejected,
+            self.shed,
+            self.failed,
+            self.retried,
+            self.restarts,
             self.latency_p50.as_secs_f64() * 1e6,
             self.latency_p99.as_secs_f64() * 1e6,
             self.latency_mean.as_secs_f64() * 1e6,
@@ -120,6 +203,8 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
         assert_eq!(s.rejected, 0);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.failed, 0);
         assert!((s.latency_mean.as_micros() as i64 - 200).abs() <= 1);
         assert!((s.mean_batch - 6.0).abs() < 1e-9);
     }
@@ -131,6 +216,7 @@ mod tests {
         assert_eq!(s.latency_p99, Duration::ZERO);
         assert_eq!(s.mean_leaf_occupancy, 0.0);
         assert_eq!(s.mean_leaf_skew, 0.0);
+        assert_eq!(s.restarts, 0);
     }
 
     #[test]
@@ -160,5 +246,35 @@ mod tests {
         let s = m.snapshot();
         assert!((s.mean_leaf_occupancy - 2.5).abs() < 1e-9, "{}", s.mean_leaf_occupancy);
         assert!((s.mean_leaf_skew - 1.5).abs() < 1e-9, "{}", s.mean_leaf_skew);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_deterministic() {
+        // 100k records: memory stays at RESERVOIR_CAP, and two reservoirs
+        // fed the same stream hold the same sample, element for element.
+        let mut a = Reservoir::new(9);
+        let mut b = Reservoir::new(9);
+        for i in 0..100_000u64 {
+            let v = (i as f64).sin();
+            a.push(v);
+            b.push(v);
+        }
+        assert_eq!(a.values.len(), RESERVOIR_CAP);
+        assert_eq!(a.values, b.values, "reservoir must be deterministic");
+        assert_eq!(a.seen, 100_000);
+        assert!(a.values.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn metrics_memory_is_bounded_under_load() {
+        let m = Metrics::new();
+        for i in 0..20_000u64 {
+            m.record(Duration::from_micros(50 + (i % 7)), 8);
+        }
+        let s = m.samples.lock().unwrap();
+        assert_eq!(s.latencies_us.values.len(), RESERVOIR_CAP);
+        assert_eq!(s.batch_sizes.values.len(), RESERVOIR_CAP);
+        drop(s);
+        assert_eq!(m.snapshot().completed, 20_000);
     }
 }

@@ -1,5 +1,5 @@
 //! The L3 serving coordinator: a request router with deadline-based
-//! dynamic batching over a pool of inference workers.
+//! dynamic batching over a supervised pool of inference workers.
 //!
 //! The paper's contribution is an inference-acceleration primitive, so the
 //! system built around it is a serving stack: callers submit single
@@ -9,8 +9,16 @@
 //! executable compiled from `artifacts/` (constructed *inside* the worker
 //! thread: PJRT handles are not `Send`).
 //!
+//! Failure contract: every request accepted by [`Coordinator::submit`]
+//! receives **exactly one** terminal [`Outcome`]. Workers are supervised
+//! (panicking backends are rebuilt with capped exponential backoff, the
+//! failed batch re-dispatched within `max_retries`); requests past their
+//! `request_deadline_us` are shed typed rather than served late; and
+//! shutdown drains instead of dropping. The [`fault`] module provides
+//! the injection harness that `tests/chaos.rs` uses to prove all of it.
+//!
 //! ```no_run
-//! use fastfeedforward::coordinator::{Coordinator, CoordinatorConfig, NativeFffBackend};
+//! use fastfeedforward::coordinator::{Coordinator, CoordinatorConfig, NativeFffBackend, Outcome};
 //! use fastfeedforward::nn::FffInfer;
 //! use fastfeedforward::rng::Rng;
 //!
@@ -18,13 +26,16 @@
 //! let model = FffInfer::random(&mut rng, 784, 10, 4, 8, 1 << 4);
 //! let coord = Coordinator::start(CoordinatorConfig::default(), move || {
 //!     Box::new(NativeFffBackend::new(model.clone()))
-//! });
+//! })
+//! .expect("backend init");
 //! let rx = coord.submit(vec![0.0; 784]).unwrap();
 //! let resp = rx.recv().unwrap();
+//! assert_eq!(resp.outcome, Outcome::Ok);
 //! assert_eq!(resp.output.len(), 10);
 //! ```
 
 mod batcher;
+pub mod fault;
 mod metrics;
 mod server;
 mod worker;
@@ -36,26 +47,64 @@ pub use worker::{Backend, HloBackend, NativeFffBackend};
 
 use crate::tensor::{Matrix, Precision};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Terminal outcome of an accepted request. Every request admitted by
+/// [`Coordinator::submit`] receives exactly one response carrying one
+/// of these — a failure is an answer, never a silently dropped channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served; `output` holds the result.
+    Ok,
+    /// Worker failure: the re-dispatch budget (`max_retries`) is spent,
+    /// or no live worker remains.
+    WorkerFailed,
+    /// The request's deadline (`request_deadline_us`) passed before a
+    /// result could be delivered.
+    DeadlineExceeded,
+    /// The coordinator shut down after accepting the request.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for Outcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Outcome::Ok => write!(f, "ok"),
+            Outcome::WorkerFailed => write!(f, "worker-failed"),
+            Outcome::DeadlineExceeded => write!(f, "deadline-exceeded"),
+            Outcome::ShuttingDown => write!(f, "shutting-down"),
+        }
+    }
+}
 
 /// A single inference request travelling through the coordinator.
 pub struct InferRequest {
     pub id: u64,
     pub input: Vec<f32>,
     pub submitted: Instant,
+    /// Absolute shed deadline (stamped at submit from
+    /// `request_deadline_us`); `None` = serve no matter how late.
+    pub deadline: Option<Instant>,
+    /// Times this request has been re-dispatched after worker failures.
+    pub retries: u32,
     pub resp: mpsc::Sender<InferResponse>,
 }
 
-/// The reply delivered to the caller's channel.
+/// The reply delivered to the caller's channel — exactly one per
+/// accepted request.
 #[derive(Clone, Debug)]
 pub struct InferResponse {
     pub id: u64,
+    /// Result row; empty unless `outcome` is [`Outcome::Ok`].
     pub output: Vec<f32>,
     /// End-to-end latency (submit → response ready).
     pub latency: std::time::Duration,
-    /// Size of the batch this request rode in (observability).
+    /// Size of the batch this request rode in (observability; 0 for
+    /// non-`Ok` outcomes).
     pub batch_size: usize,
+    /// How the request terminated.
+    pub outcome: Outcome,
 }
 
 /// Coordinator configuration.
@@ -83,6 +132,21 @@ pub struct CoordinatorConfig {
     /// in the `FFF_PARALLEL` env override via
     /// [`crate::tensor::kernels::resolve_parallel`].
     pub parallel: usize,
+    /// Per-request service deadline in microseconds, measured from
+    /// `submit`; expired requests are shed with
+    /// [`Outcome::DeadlineExceeded`] at batch close and re-checked after
+    /// inference. `0` (default) disables shedding. The CLI folds in the
+    /// `FFF_DEADLINE_US` env override via [`resolve_deadline_us`].
+    pub request_deadline_us: u64,
+    /// Backend rebuild budget per worker over its lifetime. A worker
+    /// that spends it tombstones and the tier degrades to the survivors.
+    pub worker_restarts: u32,
+    /// Base back-off between backend rebuild attempts, in microseconds;
+    /// doubles per consecutive attempt, capped at 100 ms.
+    pub restart_backoff_us: u64,
+    /// Re-dispatch budget per request after worker failures; past it
+    /// the request terminates with [`Outcome::WorkerFailed`].
+    pub max_retries: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -94,6 +158,10 @@ impl Default for CoordinatorConfig {
             queue_capacity: 4096,
             precision: Precision::F32,
             parallel: 1,
+            request_deadline_us: 0,
+            worker_restarts: 2,
+            restart_backoff_us: 500,
+            max_retries: 2,
         }
     }
 }
@@ -110,6 +178,10 @@ impl From<crate::config::ServeConfig> for CoordinatorConfig {
             queue_capacity: s.queue_capacity,
             precision: s.precision,
             parallel: s.parallel_size,
+            request_deadline_us: s.request_deadline_us,
+            worker_restarts: s.worker_restarts,
+            restart_backoff_us: s.restart_backoff_us,
+            max_retries: s.max_retries,
         }
     }
 }
@@ -139,23 +211,117 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Startup error: [`Coordinator::start`] fails typed instead of
+/// panicking when no worker can produce a working backend.
+#[derive(Clone, Debug)]
+pub enum StartError {
+    /// Every worker exhausted its restart budget during construction;
+    /// carries the first worker's build error.
+    BackendInit(String),
+}
+
+impl std::fmt::Display for StartError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StartError::BackendInit(e) => write!(f, "backend initialization failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StartError {}
+
+/// The `FFF_DEADLINE_US` process override, read once. Like
+/// `FFF_PRECISION`, the env var is the outermost layer of the
+/// preset < config file < CLI flag < env precedence chain; `0` forces
+/// deadlines off.
+pub fn deadline_override() -> Option<u64> {
+    static ENV: OnceLock<Option<u64>> = OnceLock::new();
+    *ENV.get_or_init(|| parse_deadline_env(std::env::var("FFF_DEADLINE_US").ok().as_deref()))
+}
+
+/// Pure parser behind [`deadline_override`], split out so the
+/// precedence contract is testable without process-global env state.
+/// Invalid values are ignored with a warning, matching the other
+/// `FFF_*` knobs.
+pub fn parse_deadline_env(v: Option<&str>) -> Option<u64> {
+    let v = v?;
+    match v.trim().parse::<u64>() {
+        Ok(us) => Some(us),
+        Err(_) => {
+            eprintln!("FFF_DEADLINE_US: invalid microsecond count {v:?}; ignoring");
+            None
+        }
+    }
+}
+
+/// Fold the `FFF_DEADLINE_US` override over the configured deadline.
+pub fn resolve_deadline_us(requested: u64) -> u64 {
+    deadline_override().unwrap_or(requested)
+}
+
+/// Answer a request terminally with a non-`Ok` outcome, keeping the
+/// failure counters and the `in_flight` gauge consistent. The single
+/// funnel for every shed/failed/shutdown answer — responding any other
+/// way risks double-answering or leaking `in_flight`.
+pub(crate) fn respond_terminal(
+    req: InferRequest,
+    outcome: Outcome,
+    metrics: &Metrics,
+    in_flight: &AtomicU64,
+) {
+    debug_assert!(outcome != Outcome::Ok, "Ok responses carry outputs; use the worker path");
+    match outcome {
+        Outcome::DeadlineExceeded => {
+            metrics.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        Outcome::WorkerFailed | Outcome::ShuttingDown => {
+            metrics.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        Outcome::Ok => {}
+    }
+    in_flight.fetch_sub(1, Ordering::AcqRel);
+    let latency = req.submitted.elapsed();
+    let _ = req.resp.send(InferResponse {
+        id: req.id,
+        output: Vec::new(),
+        latency,
+        batch_size: 0,
+        outcome,
+    });
+}
+
+/// Whether a request's deadline has passed as of `now`.
+pub(crate) fn expired(req: &InferRequest, now: Instant) -> bool {
+    req.deadline.is_some_and(|d| now > d)
+}
+
 /// The serving coordinator handle.
 pub struct Coordinator {
-    tx: Option<mpsc::Sender<InferRequest>>,
+    tx: Option<mpsc::Sender<batcher::BatcherMsg>>,
     next_id: AtomicU64,
     in_flight: Arc<AtomicU64>,
     queue_capacity: u64,
     dim_in: usize,
+    request_deadline_us: u64,
     metrics: Arc<Metrics>,
     closed: AtomicBool,
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     worker_handles: Vec<std::thread::JoinHandle<()>>,
+    /// Per-worker (outstanding, alive) shared with batcher and workers,
+    /// kept for the observability accessors.
+    worker_state: Vec<(Arc<AtomicU64>, Arc<AtomicBool>)>,
 }
 
 impl Coordinator {
     /// Start the batcher + worker threads. `backend_factory` is invoked
-    /// once per worker, inside that worker's thread.
-    pub fn start<F>(config: CoordinatorConfig, backend_factory: F) -> Coordinator
+    /// once per worker (plus once per restart), inside that worker's
+    /// thread. Returns `Err` — not a panic — if every worker exhausts
+    /// its restart budget without producing a working backend; a partial
+    /// failure (some workers up) starts degraded instead.
+    pub fn start<F>(
+        config: CoordinatorConfig,
+        backend_factory: F,
+    ) -> Result<Coordinator, StartError>
     where
         F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
     {
@@ -163,56 +329,113 @@ impl Coordinator {
         let factory = Arc::new(backend_factory);
         let metrics = Arc::new(Metrics::new());
         let in_flight = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel::<batcher::BatcherMsg>();
 
         // Per-worker batch queues; the batcher dispatches to the
-        // least-loaded worker using the shared outstanding counters.
+        // least-loaded live worker using the shared counters.
         let mut worker_slots = Vec::new();
         let mut worker_handles = Vec::new();
-        // The probe worker reports dim_in back so submit() can validate.
-        let (dim_tx, dim_rx) = mpsc::channel::<usize>();
+        let mut worker_state = Vec::new();
+        // Workers report Ok(dim_in) or Err(build failure) here.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
         for w in 0..config.workers {
             let (btx, brx) = mpsc::channel::<Batch>();
             let outstanding = Arc::new(AtomicU64::new(0));
-            worker_slots.push(batcher::WorkerSlot { tx: btx, outstanding: outstanding.clone() });
+            let alive = Arc::new(AtomicBool::new(true));
+            worker_slots.push(batcher::WorkerSlot {
+                tx: btx,
+                outstanding: outstanding.clone(),
+                alive: alive.clone(),
+            });
+            worker_state.push((outstanding.clone(), alive.clone()));
+            let ctx = worker::WorkerCtx {
+                rx: brx,
+                retry_tx: tx.clone(),
+                metrics: metrics.clone(),
+                in_flight: in_flight.clone(),
+                outstanding,
+                alive,
+                threads: config.threads,
+                restarts: config.worker_restarts,
+                backoff: Duration::from_micros(config.restart_backoff_us),
+                max_retries: config.max_retries,
+            };
             let factory = factory.clone();
-            let metrics = metrics.clone();
-            let in_flight = in_flight.clone();
-            let dim_tx = dim_tx.clone();
-            let threads = config.threads;
+            let ready_tx = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("fff-worker-{w}"))
-                .spawn(move || {
-                    worker::run_worker(
-                        brx, factory, metrics, in_flight, outstanding, dim_tx, threads,
-                    )
-                })
+                .spawn(move || worker::run_worker(ctx, factory, ready_tx))
                 .expect("spawn worker");
             worker_handles.push(handle);
         }
-        drop(dim_tx);
-        let dim_in = dim_rx.recv().expect("worker failed to report input dim");
+        drop(ready_tx);
 
-        let (tx, rx) = mpsc::channel::<InferRequest>();
+        // Wait for the first working backend; every worker failing is a
+        // typed startup error (failed workers have already tombstoned,
+        // so dropping their batch channels below lets them join).
+        let mut failures = 0usize;
+        let mut first_err: Option<String> = None;
+        let dim_in = loop {
+            match ready_rx.recv() {
+                Ok(Ok(dim)) => break dim,
+                Ok(Err(e)) => {
+                    failures += 1;
+                    first_err.get_or_insert(e);
+                    if failures == config.workers {
+                        drop(worker_slots);
+                        drop(tx);
+                        for h in worker_handles {
+                            let _ = h.join();
+                        }
+                        return Err(StartError::BackendInit(
+                            first_err.unwrap_or_else(|| "backend construction failed".into()),
+                        ));
+                    }
+                }
+                Err(_) => {
+                    // Readiness channel closed without a verdict: a
+                    // worker thread died outside the supervised path.
+                    drop(worker_slots);
+                    drop(tx);
+                    for h in worker_handles {
+                        let _ = h.join();
+                    }
+                    return Err(StartError::BackendInit(first_err.unwrap_or_else(|| {
+                        "worker exited before reporting readiness".into()
+                    })));
+                }
+            }
+        };
+
         let bcfg = config.batcher;
+        let bctx = batcher::BatcherCtx {
+            workers: worker_slots,
+            metrics: metrics.clone(),
+            in_flight: in_flight.clone(),
+        };
         let batcher_handle = std::thread::Builder::new()
             .name("fff-batcher".into())
-            .spawn(move || batcher::run_batcher(rx, worker_slots, bcfg))
+            .spawn(move || batcher::run_batcher(rx, bctx, bcfg))
             .expect("spawn batcher");
 
-        Coordinator {
+        Ok(Coordinator {
             tx: Some(tx),
             next_id: AtomicU64::new(0),
             in_flight,
             queue_capacity: config.queue_capacity as u64,
             dim_in,
+            request_deadline_us: config.request_deadline_us,
             metrics,
             closed: AtomicBool::new(false),
             batcher_handle: Some(batcher_handle),
             worker_handles,
-        }
+            worker_state,
+        })
     }
 
     /// Submit one sample; returns the channel the response arrives on.
+    /// Every accepted submission is answered exactly once — check
+    /// [`InferResponse::outcome`] for how it terminated.
     pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<InferResponse>, SubmitError> {
         if self.closed.load(Ordering::Acquire) {
             return Err(SubmitError::Closed);
@@ -227,18 +450,30 @@ impl Coordinator {
         }
         self.in_flight.fetch_add(1, Ordering::AcqRel);
         let (rtx, rrx) = mpsc::channel();
+        let now = Instant::now();
+        let deadline = (self.request_deadline_us > 0)
+            .then(|| now + Duration::from_micros(self.request_deadline_us));
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             input,
-            submitted: Instant::now(),
+            submitted: now,
+            deadline,
+            retries: 0,
             resp: rtx,
         };
-        self.tx
-            .as_ref()
-            .ok_or(SubmitError::Closed)?
-            .send(req)
-            .map_err(|_| SubmitError::Closed)?;
-        Ok(rrx)
+        let Some(tx) = self.tx.as_ref() else {
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            return Err(SubmitError::Closed);
+        };
+        match tx.send(batcher::BatcherMsg::Request(req)) {
+            Ok(()) => Ok(rrx),
+            Err(_) => {
+                // The request never entered the pipeline; undo the
+                // admission so the gauge cannot leak.
+                self.in_flight.fetch_sub(1, Ordering::AcqRel);
+                Err(SubmitError::Closed)
+            }
+        }
     }
 
     /// Expected input dimensionality.
@@ -246,12 +481,29 @@ impl Coordinator {
         self.dim_in
     }
 
-    /// Metrics snapshot (latency percentiles, throughput, batch sizes).
+    /// Metrics snapshot (latency percentiles, throughput, batch sizes,
+    /// failure counters).
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
-    /// Stop accepting requests and join all threads.
+    /// Requests accepted and not yet terminally answered.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Sum of dispatched-but-unserviced request counts across workers.
+    pub fn outstanding_total(&self) -> u64 {
+        self.worker_state.iter().map(|(o, _)| o.load(Ordering::Acquire)).sum()
+    }
+
+    /// Workers still accepting dispatches (restart budget not spent).
+    pub fn live_workers(&self) -> usize {
+        self.worker_state.iter().filter(|(_, a)| a.load(Ordering::Acquire)).count()
+    }
+
+    /// Stop accepting requests, drain with typed answers, join all
+    /// threads.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
@@ -260,7 +512,13 @@ impl Coordinator {
         if self.closed.swap(true, Ordering::AcqRel) {
             return;
         }
-        drop(self.tx.take());
+        if let Some(tx) = self.tx.take() {
+            // Explicit signal rather than a bare channel drop: worker
+            // retry senders keep the channel open, so the batcher needs
+            // the message to release worker channels and start answering
+            // stragglers with `ShuttingDown`.
+            let _ = tx.send(batcher::BatcherMsg::Shutdown);
+        }
         if let Some(h) = self.batcher_handle.take() {
             let _ = h.join();
         }
@@ -302,12 +560,11 @@ mod tests {
                 max_delay: std::time::Duration::from_millis(2),
             },
             workers,
-            threads: 0,
             queue_capacity: 64,
-            precision: Precision::F32,
-            parallel: 1,
+            ..CoordinatorConfig::default()
         };
         Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))
+            .expect("healthy factory must start")
     }
 
     #[test]
@@ -315,6 +572,7 @@ mod tests {
         let coord = start(1, 4);
         let rx = coord.submit(vec![0.5; 8]).unwrap();
         let resp = rx.recv().unwrap();
+        assert_eq!(resp.outcome, Outcome::Ok);
         assert_eq!(resp.output.len(), 3);
         assert!(resp.output.iter().all(|v| v.is_finite()));
         coord.shutdown();
@@ -338,6 +596,7 @@ mod tests {
         }
         for (rx, want) in rxs.into_iter().zip(expected) {
             let resp = rx.recv().unwrap();
+            assert_eq!(resp.outcome, Outcome::Ok);
             for (a, b) in resp.output.iter().zip(&want) {
                 assert!((a - b).abs() < 1e-6, "{a} vs {b}");
             }
@@ -345,6 +604,9 @@ mod tests {
         let snap = coord.metrics();
         assert_eq!(snap.completed, 50);
         assert_eq!(snap.rejected, 0);
+        assert_eq!(coord.in_flight(), 0);
+        assert_eq!(coord.outstanding_total(), 0);
+        assert_eq!(coord.live_workers(), 2);
         coord.shutdown();
     }
 
@@ -390,8 +652,8 @@ mod tests {
             precision: crate::tensor::Precision::Int8,
             ..CoordinatorConfig::default()
         };
-        let coord =
-            Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(served.clone())));
+        let coord = Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(served.clone())))
+            .expect("start");
         let mut xr = Rng::seed_from_u64(10);
         let mut rxs = Vec::new();
         let mut want = Vec::new();
@@ -404,9 +666,69 @@ mod tests {
         }
         for (rx, w) in rxs.into_iter().zip(want) {
             let resp = rx.recv().unwrap();
+            assert_eq!(resp.outcome, Outcome::Ok);
             assert_eq!(resp.output, w, "served int8 bits drifted from direct inference");
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn expired_requests_get_typed_deadline_outcome() {
+        // A 1 µs deadline with a 2 ms batching delay: every request is
+        // already expired when its batch closes, so the batcher sheds it
+        // typed and the shed counter matches.
+        let mut rng = Rng::seed_from_u64(1);
+        let model = FffInfer::random(&mut rng, 8, 3, 3, 4, 8);
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 100,
+                max_delay: std::time::Duration::from_millis(2),
+            },
+            request_deadline_us: 1,
+            queue_capacity: 64,
+            ..CoordinatorConfig::default()
+        };
+        let coord = Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))
+            .expect("start");
+        let rxs: Vec<_> = (0..10).map(|_| coord.submit(vec![0.2; 8]).unwrap()).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.outcome, Outcome::DeadlineExceeded);
+            assert!(resp.output.is_empty());
+        }
+        let snap = coord.metrics();
+        assert_eq!(snap.shed, 10);
+        assert_eq!(snap.completed, 0);
+        assert_eq!(coord.in_flight(), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failing_factory_start_returns_err() {
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            worker_restarts: 1,
+            restart_backoff_us: 10,
+            ..CoordinatorConfig::default()
+        };
+        let r = Coordinator::start(cfg, || -> Box<dyn Backend> {
+            panic!("backend artifacts unavailable")
+        });
+        match r {
+            Err(StartError::BackendInit(msg)) => {
+                assert!(msg.contains("artifacts unavailable"), "lost cause: {msg}");
+            }
+            Ok(_) => panic!("start must fail typed when every factory call panics"),
+        }
+    }
+
+    #[test]
+    fn deadline_env_parse_contract() {
+        assert_eq!(parse_deadline_env(None), None);
+        assert_eq!(parse_deadline_env(Some("2500")), Some(2500));
+        assert_eq!(parse_deadline_env(Some(" 0 ")), Some(0));
+        assert_eq!(parse_deadline_env(Some("fast")), None, "garbage ignored");
+        assert_eq!(parse_deadline_env(Some("-5")), None);
     }
 
     #[test]

@@ -4,21 +4,32 @@
 //! Wire format (little-endian):
 //!   request:  u32 n_floats, then n_floats × f32  (one sample)
 //!   response: u32 status (0 = ok), u32 n_floats, then n_floats × f32
-//!             status 1 = bad input length, 2 = overloaded, 3 = internal
+//!             status 1 = bad input length,
+//!                    2 = overloaded (queue full, or the request was
+//!                        shed past its deadline — retry-later class),
+//!                    3 = internal (worker failure or shutdown)
 //!
-//! One request per connection round is supported (clients may pipeline
-//! sequentially on a kept-alive connection).
+//! Every accepted connection request gets a status — typed coordinator
+//! outcomes map onto the wire instead of leaving the client hanging on
+//! a dead channel. One request per connection round is supported
+//! (clients may pipeline sequentially on a kept-alive connection).
 
-use super::{Coordinator, SubmitError};
+use super::{Coordinator, Outcome, SubmitError};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+
+pub(crate) const STATUS_OK: u32 = 0;
+pub(crate) const STATUS_BAD_INPUT: u32 = 1;
+pub(crate) const STATUS_OVERLOADED: u32 = 2;
+pub(crate) const STATUS_INTERNAL: u32 = 3;
 
 /// Handle to a running TCP server.
 pub struct TcpServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -30,9 +41,17 @@ impl TcpServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let active = Arc::new(AtomicUsize::new(0));
+        let active2 = active.clone();
         let handle = std::thread::Builder::new().name("fff-tcp".into()).spawn(move || {
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !stop2.load(Ordering::Acquire) {
+                // Reap finished connection threads on every accept-loop
+                // turn: under sustained traffic the old
+                // push-and-join-at-shutdown scheme grew a JoinHandle per
+                // connection for the server's whole lifetime.
+                conns.retain(|c| !c.is_finished());
+                active2.store(conns.len(), Ordering::Release);
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let coord = coord.clone();
@@ -40,6 +59,7 @@ impl TcpServer {
                         conns.push(std::thread::spawn(move || {
                             let _ = handle_conn(stream, coord, stop3);
                         }));
+                        active2.store(conns.len(), Ordering::Release);
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(2));
@@ -50,13 +70,20 @@ impl TcpServer {
             for c in conns {
                 let _ = c.join();
             }
+            active2.store(0, Ordering::Release);
         })?;
-        Ok(TcpServer { addr, stop, handle: Some(handle) })
+        Ok(TcpServer { addr, stop, active, handle: Some(handle) })
     }
 
     /// The bound address (useful with port 0).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// Connection threads currently tracked (reaped gauge; lags actual
+    /// socket state by at most one accept-loop turn).
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::Acquire)
     }
 
     /// Stop accepting and join the acceptor thread.
@@ -101,7 +128,7 @@ fn handle_conn(
         }
         let n = u32::from_le_bytes(lenbuf) as usize;
         if n > 1 << 22 {
-            write_response(&mut stream, 1, &[])?;
+            write_response(&mut stream, STATUS_BAD_INPUT, &[])?;
             return Ok(());
         }
         let mut data = vec![0u8; n * 4];
@@ -112,12 +139,24 @@ fn handle_conn(
             .collect();
         match coord.submit(input) {
             Ok(rx) => match rx.recv() {
-                Ok(resp) => write_response(&mut stream, 0, &resp.output)?,
-                Err(_) => write_response(&mut stream, 3, &[])?,
+                Ok(resp) => match resp.outcome {
+                    Outcome::Ok => write_response(&mut stream, STATUS_OK, &resp.output)?,
+                    // Shed requests are the server protecting its SLO,
+                    // same retry-later class as queue-full.
+                    Outcome::DeadlineExceeded => {
+                        write_response(&mut stream, STATUS_OVERLOADED, &[])?
+                    }
+                    Outcome::WorkerFailed | Outcome::ShuttingDown => {
+                        write_response(&mut stream, STATUS_INTERNAL, &[])?
+                    }
+                },
+                Err(_) => write_response(&mut stream, STATUS_INTERNAL, &[])?,
             },
-            Err(SubmitError::BadInput { .. }) => write_response(&mut stream, 1, &[])?,
-            Err(SubmitError::QueueFull) => write_response(&mut stream, 2, &[])?,
-            Err(SubmitError::Closed) => write_response(&mut stream, 3, &[])?,
+            Err(SubmitError::BadInput { .. }) => {
+                write_response(&mut stream, STATUS_BAD_INPUT, &[])?
+            }
+            Err(SubmitError::QueueFull) => write_response(&mut stream, STATUS_OVERLOADED, &[])?,
+            Err(SubmitError::Closed) => write_response(&mut stream, STATUS_INTERNAL, &[])?,
         }
     }
 }
@@ -175,20 +214,25 @@ mod tests {
     use crate::rng::Rng;
     use std::time::Duration;
 
-    fn coord() -> Arc<Coordinator> {
+    fn coord_with(deadline_us: u64) -> Arc<Coordinator> {
         let mut rng = Rng::seed_from_u64(1);
         let model = FffInfer::random(&mut rng, 8, 3, 2, 4, 4);
-        Arc::new(Coordinator::start(
-            CoordinatorConfig {
-                batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
-                workers: 1,
-                threads: 0,
-                queue_capacity: 128,
-                precision: crate::tensor::Precision::F32,
-                parallel: 1,
-            },
-            move || Box::new(NativeFffBackend::new(model.clone())),
-        ))
+        Arc::new(
+            Coordinator::start(
+                CoordinatorConfig {
+                    batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+                    queue_capacity: 128,
+                    request_deadline_us: deadline_us,
+                    ..CoordinatorConfig::default()
+                },
+                move || Box::new(NativeFffBackend::new(model.clone())),
+            )
+            .expect("start"),
+        )
+    }
+
+    fn coord() -> Arc<Coordinator> {
+        coord_with(0)
     }
 
     #[test]
@@ -215,6 +259,20 @@ mod tests {
     }
 
     #[test]
+    fn tcp_deadline_shed_maps_to_overloaded_status() {
+        // A 1 µs deadline under a 1 ms batching delay: the request is
+        // expired at batch close, and the wire must say "overloaded"
+        // (retry-later) rather than leaving the client on a dead read.
+        let c = coord_with(1);
+        let server = TcpServer::start(c.clone(), "127.0.0.1:0").unwrap();
+        let mut client = TcpClient::connect(server.addr()).unwrap();
+        let err = client.infer(&[0.1; 8]).unwrap_err();
+        assert!(err.to_string().contains("status 2"), "{err}");
+        assert!(c.metrics().shed >= 1);
+        server.shutdown();
+    }
+
+    #[test]
     fn tcp_concurrent_clients() {
         let c = coord();
         let server = TcpServer::start(c.clone(), "127.0.0.1:0").unwrap();
@@ -233,6 +291,29 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.metrics().completed, 80);
+        server.shutdown();
+    }
+
+    #[test]
+    fn finished_connections_are_reaped() {
+        let c = coord();
+        let server = TcpServer::start(c.clone(), "127.0.0.1:0").unwrap();
+        for _ in 0..6 {
+            let mut client = TcpClient::connect(server.addr()).unwrap();
+            assert_eq!(client.infer(&[0.1; 8]).unwrap().len(), 3);
+            drop(client); // connection thread exits on the closed socket
+        }
+        // The accept loop reaps finished handles as it polls; without
+        // reaping this gauge could only ever grow.
+        let mut reaped = false;
+        for _ in 0..500 {
+            if server.active_connections() == 0 {
+                reaped = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(reaped, "finished connection handles were never reaped");
         server.shutdown();
     }
 }

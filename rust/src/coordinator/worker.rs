@@ -1,11 +1,27 @@
-//! Inference workers and their backends.
+//! Inference workers, their backends, and the supervision loop.
+//!
+//! A worker owns one backend instance, constructed *in its own thread*
+//! via the factory (PJRT handles are not `Send`). The serve loop is
+//! supervised: backend construction and batch inference both run under
+//! `catch_unwind`, so a panicking backend never kills the thread or
+//! leaks counters. On a service panic the worker bounces the batch's
+//! requests back to the batcher for re-dispatch (bounded per-request
+//! `max_retries`) and rebuilds its backend with capped exponential
+//! backoff; when the restart budget (`worker_restarts`) is spent the
+//! worker *tombstones* — it publishes `alive = false`, keeps draining
+//! its queue so no dispatched batch is ever stranded in a dropped
+//! channel, and bounces everything back until shutdown closes the
+//! channel. The tier degrades to the surviving workers.
 
-use super::batcher::Batch;
+use super::batcher::{Batch, BatcherMsg};
 use super::metrics::Metrics;
+use super::{InferRequest, Outcome};
 use crate::nn::{FffInfer, InferScratch, RoutingStats};
 use crate::tensor::Matrix;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 /// What a worker executes: native engine or PJRT executable.
 pub trait Backend {
@@ -119,16 +135,17 @@ impl HloBackend {
         })
     }
 
-    /// A `Coordinator::start`-compatible factory.
+    /// A `Coordinator::start`-compatible factory. A build failure panics
+    /// with the underlying error; the worker's supervised construction
+    /// catches it, retries within the restart budget, and surfaces it as
+    /// a typed [`super::StartError`] instead of a process abort.
     pub fn factory(
         artifact_dir: String,
         artifact: String,
     ) -> impl Fn() -> Box<dyn Backend> + Send + Sync + 'static {
-        move || {
-            Box::new(
-                HloBackend::new(&artifact_dir, &artifact)
-                    .expect("failed to build HLO backend in worker thread"),
-            )
+        move || match HloBackend::new(&artifact_dir, &artifact) {
+            Ok(b) => Box::new(b),
+            Err(e) => panic!("failed to build HLO backend ({artifact_dir}/{artifact}): {e}"),
         }
     }
 
@@ -181,61 +198,268 @@ impl Backend for HloBackend {
     }
 }
 
-/// Worker loop: construct the backend, report its input dim, serve batches.
+/// Everything a worker thread needs; bundled because the supervised
+/// loop threads it through construction, service, and tombstone.
+pub(crate) struct WorkerCtx {
+    pub(crate) rx: mpsc::Receiver<Batch>,
+    /// Route back to the batcher for failed-batch re-dispatch.
+    pub(crate) retry_tx: mpsc::Sender<BatcherMsg>,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) in_flight: Arc<AtomicU64>,
+    /// This worker's dispatched-but-uncompleted request count,
+    /// decremented here so least-loaded dispatch sees service
+    /// completion, not just queue handoff.
+    pub(crate) outstanding: Arc<AtomicU64>,
+    /// Published health: flipped to `false` (permanently) when the
+    /// restart budget is spent, steering dispatch away.
+    pub(crate) alive: Arc<AtomicBool>,
+    /// `> 0` pins a private compute pool this wide to the worker thread
+    /// so its GEMM/FFF traffic cannot oversubscribe cores shared with
+    /// sibling workers; `0` shares the process-global pool.
+    pub(crate) threads: usize,
+    /// Backend rebuild budget over the worker's lifetime.
+    pub(crate) restarts: u32,
+    /// Base rebuild backoff; doubles per consecutive attempt, capped.
+    pub(crate) backoff: Duration,
+    /// Per-request re-dispatch budget after worker failures.
+    pub(crate) max_retries: u32,
+}
+
+/// Decrements an atomic counter by `n` on drop — the guard that keeps
+/// `outstanding` truthful on every path out of batch service, including
+/// a panic unwinding through code outside the `catch_unwind` below.
+struct Decrement<'a> {
+    ctr: &'a AtomicU64,
+    n: u64,
+}
+
+impl Drop for Decrement<'_> {
+    fn drop(&mut self) {
+        self.ctr.fetch_sub(self.n, Ordering::AcqRel);
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One supervised construction attempt.
+fn build_backend<F>(factory: &F) -> Result<Box<dyn Backend>, String>
+where
+    F: Fn() -> Box<dyn Backend>,
+{
+    catch_unwind(AssertUnwindSafe(factory)).map_err(panic_message)
+}
+
+/// Backoff before rebuild attempt `attempt` (0-based): base doubled per
+/// consecutive attempt, capped at 100 ms so a flapping backend cannot
+/// park the worker for long with large budgets.
+fn backoff_delay(base: Duration, attempt: u32) -> Duration {
+    base.saturating_mul(1u32 << attempt.min(10)).min(Duration::from_millis(100))
+}
+
+/// Rebuild the backend after a failure, charging `budget` one restart
+/// per attempt (successful or not) with capped exponential backoff.
+/// `None` means the budget is spent and the worker must tombstone.
+fn restart_backend<F>(
+    factory: &F,
+    budget: &mut u32,
+    base: Duration,
+    metrics: &Metrics,
+) -> Option<Box<dyn Backend>>
+where
+    F: Fn() -> Box<dyn Backend>,
+{
+    let mut attempt = 0u32;
+    while *budget > 0 {
+        *budget -= 1;
+        metrics.restarts.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(backoff_delay(base, attempt));
+        attempt += 1;
+        if let Ok(b) = build_backend(factory) {
+            return Some(b);
+        }
+    }
+    None
+}
+
+/// Hand a failed batch's requests back for re-dispatch. Requests whose
+/// retry budget is spent get a terminal [`Outcome::WorkerFailed`] here;
+/// the rest go to the batcher (or, if it is already gone at shutdown,
+/// get [`Outcome::ShuttingDown`]) — nothing is dropped.
+fn requeue_failed(reqs: &mut Vec<InferRequest>, ctx: &WorkerCtx) {
+    let mut retry: Vec<InferRequest> = Vec::with_capacity(reqs.len());
+    for mut req in reqs.drain(..) {
+        if req.retries >= ctx.max_retries {
+            super::respond_terminal(req, Outcome::WorkerFailed, &ctx.metrics, &ctx.in_flight);
+        } else {
+            req.retries += 1;
+            ctx.metrics.retried.fetch_add(1, Ordering::Relaxed);
+            retry.push(req);
+        }
+    }
+    if retry.is_empty() {
+        return;
+    }
+    if let Err(mpsc::SendError(msg)) = ctx.retry_tx.send(BatcherMsg::Retry(retry)) {
+        if let BatcherMsg::Retry(rest) = msg {
+            for req in rest {
+                super::respond_terminal(req, Outcome::ShuttingDown, &ctx.metrics, &ctx.in_flight);
+            }
+        }
+    }
+}
+
+/// Terminal state once the restart budget is spent: keep draining the
+/// batch queue — never strand a dispatched batch in a dropped channel —
+/// and bounce every batch straight back to the batcher, which re-routes
+/// it to live workers. The bounce does **not** consume request retry
+/// budgets: no inference was attempted here, and the `alive` flag this
+/// worker already published keeps new dispatches away. Exits when
+/// shutdown closes the batch channel.
+fn tombstone(ctx: &WorkerCtx) {
+    while let Ok(mut batch) = ctx.rx.recv() {
+        let n = batch.requests.len() as u64;
+        let reqs = std::mem::take(&mut batch.requests);
+        if !reqs.is_empty() {
+            if let Err(mpsc::SendError(msg)) = ctx.retry_tx.send(BatcherMsg::Retry(reqs)) {
+                if let BatcherMsg::Retry(rest) = msg {
+                    for req in rest {
+                        super::respond_terminal(
+                            req,
+                            Outcome::ShuttingDown,
+                            &ctx.metrics,
+                            &ctx.in_flight,
+                        );
+                    }
+                }
+            }
+        }
+        ctx.outstanding.fetch_sub(n, Ordering::AcqRel);
+    }
+}
+
+/// Supervised worker loop: construct the backend (with restart budget),
+/// report readiness, serve batches under `catch_unwind`.
 ///
-/// `threads > 0` pins a private `threads`-wide compute pool to this worker
-/// thread, so its GEMM/FFF traffic cannot oversubscribe the cores shared
-/// with sibling workers; `0` shares the process-global pool.
-/// `outstanding` is this worker's dispatched-but-uncompleted request
-/// count, decremented here so the batcher's least-loaded dispatch sees
-/// service completion, not just queue handoff.
+/// `ready_tx` gets exactly one message: `Ok(dim_in)` once a backend is
+/// built, or `Err(reason)` if construction exhausted the restart budget
+/// (the worker then tombstones so already-created channels stay valid).
 pub(crate) fn run_worker<F>(
-    rx: mpsc::Receiver<Batch>,
+    ctx: WorkerCtx,
     factory: Arc<F>,
-    metrics: Arc<Metrics>,
-    in_flight: Arc<AtomicU64>,
-    outstanding: Arc<AtomicU64>,
-    dim_tx: mpsc::Sender<usize>,
-    threads: usize,
+    ready_tx: mpsc::Sender<Result<usize, String>>,
 ) where
     F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
 {
-    if threads > 0 {
+    if ctx.threads > 0 {
         crate::tensor::pool::set_current(Some(Arc::new(
-            crate::tensor::pool::ThreadPool::new(threads),
+            crate::tensor::pool::ThreadPool::new(ctx.threads),
         )));
     }
-    let mut backend = factory();
-    let _ = dim_tx.send(backend.dim_in());
-    drop(dim_tx);
-    // Input/output matrices retained across batches: with the native
-    // backend's internal scratch, a warm worker's per-batch work is
-    // allocation-free up to the per-request response copies.
+    let mut budget = ctx.restarts;
+    let mut backend = match build_backend(&*factory) {
+        Ok(b) => b,
+        Err(first_err) => {
+            match restart_backend(&*factory, &mut budget, ctx.backoff, &ctx.metrics) {
+                Some(b) => b,
+                None => {
+                    ctx.alive.store(false, Ordering::Release);
+                    let _ = ready_tx.send(Err(first_err));
+                    drop(ready_tx);
+                    tombstone(&ctx);
+                    return;
+                }
+            }
+        }
+    };
+    let _ = ready_tx.send(Ok(backend.dim_in()));
+    drop(ready_tx);
+    // Input/output matrices and the live-request buffer are retained
+    // across batches: with the native backend's internal scratch, a warm
+    // worker's per-batch work is allocation-free up to the per-request
+    // response copies.
     let mut x = Matrix::zeros(0, 0);
     let mut y = Matrix::zeros(0, 0);
-    while let Ok(batch) = rx.recv() {
-        if batch.requests.is_empty() {
+    let mut live: Vec<InferRequest> = Vec::new();
+    while let Ok(mut batch) = ctx.rx.recv() {
+        let dispatched = batch.requests.len() as u64;
+        let _outstanding_guard = Decrement { ctr: &ctx.outstanding, n: dispatched };
+        // Shed requests that expired while queued here; inference on
+        // them is pure waste for the requests behind them.
+        let now = Instant::now();
+        for req in batch.requests.drain(..) {
+            if super::expired(&req, now) {
+                super::respond_terminal(
+                    req,
+                    Outcome::DeadlineExceeded,
+                    &ctx.metrics,
+                    &ctx.in_flight,
+                );
+            } else {
+                live.push(req);
+            }
+        }
+        if live.is_empty() {
             continue;
         }
-        let n = batch.requests.len();
-        super::stack_inputs_into(&batch.requests, &mut x);
-        backend.infer_into(&x, &mut y);
-        if let Some(stats) = backend.last_routing() {
-            metrics.record_routing(&stats);
+        super::stack_inputs_into(&live, &mut x);
+        let served = catch_unwind(AssertUnwindSafe(|| backend.infer_into(&x, &mut y)));
+        match served {
+            Ok(()) => {
+                if let Some(stats) = backend.last_routing() {
+                    ctx.metrics.record_routing(&stats);
+                }
+                let done = Instant::now();
+                let n = live.len();
+                for (i, req) in live.drain(..).enumerate() {
+                    // Deadline re-check after service: a typed shed
+                    // beats delivering an answer the caller already
+                    // timed out on.
+                    if req.deadline.is_some_and(|d| done > d) {
+                        super::respond_terminal(
+                            req,
+                            Outcome::DeadlineExceeded,
+                            &ctx.metrics,
+                            &ctx.in_flight,
+                        );
+                        continue;
+                    }
+                    let latency = done.duration_since(req.submitted);
+                    ctx.metrics.record(latency, n);
+                    ctx.in_flight.fetch_sub(1, Ordering::AcqRel);
+                    let _ = req.resp.send(super::InferResponse {
+                        id: req.id,
+                        output: y.row(i).to_vec(),
+                        latency,
+                        batch_size: n,
+                        outcome: Outcome::Ok,
+                    });
+                }
+            }
+            Err(_) => {
+                // The backend panicked mid-batch: its internal state is
+                // unknowable, so the instance is discarded. The batch's
+                // requests go back for bounded re-dispatch — never
+                // dropped, never answered twice.
+                requeue_failed(&mut live, &ctx);
+                match restart_backend(&*factory, &mut budget, ctx.backoff, &ctx.metrics) {
+                    Some(b) => backend = b,
+                    None => {
+                        ctx.alive.store(false, Ordering::Release);
+                        drop(_outstanding_guard);
+                        tombstone(&ctx);
+                        return;
+                    }
+                }
+            }
         }
-        let done = std::time::Instant::now();
-        for (i, req) in batch.requests.into_iter().enumerate() {
-            let latency = done.duration_since(req.submitted);
-            metrics.record(latency, n);
-            let _ = req.resp.send(super::InferResponse {
-                id: req.id,
-                output: y.row(i).to_vec(),
-                latency,
-                batch_size: n,
-            });
-        }
-        outstanding.fetch_sub(n as u64, Ordering::AcqRel);
-        in_flight.fetch_sub(n as u64, Ordering::AcqRel);
     }
 }
 
@@ -273,5 +497,37 @@ mod tests {
         // Int8 is exact across entry points, so this is equality of
         // bits, not a tolerance.
         assert_eq!(got, model.infer_batch(&x));
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let base = Duration::from_micros(500);
+        assert_eq!(backoff_delay(base, 0), Duration::from_micros(500));
+        assert_eq!(backoff_delay(base, 1), Duration::from_millis(1));
+        assert_eq!(backoff_delay(base, 2), Duration::from_millis(2));
+        assert_eq!(backoff_delay(base, 30), Duration::from_millis(100), "cap");
+    }
+
+    #[test]
+    fn build_backend_catches_factory_panic() {
+        let mut rng = Rng::seed_from_u64(7);
+        let model = FffInfer::random(&mut rng, 6, 2, 2, 3, 4);
+        let ok = build_backend(&move || {
+            Box::new(NativeFffBackend::new(model.clone())) as Box<dyn Backend>
+        });
+        assert!(ok.is_ok());
+        let err = build_backend(&|| -> Box<dyn Backend> { panic!("no artifacts here") });
+        assert_eq!(err.err().as_deref(), Some("no artifacts here"));
+    }
+
+    #[test]
+    fn decrement_guard_fires_on_unwind() {
+        let ctr = AtomicU64::new(5);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = Decrement { ctr: &ctr, n: 3 };
+            panic!("boom");
+        }));
+        assert!(r.is_err());
+        assert_eq!(ctr.load(Ordering::Acquire), 2, "guard must decrement on unwind");
     }
 }

@@ -4,7 +4,8 @@
 //! fff train  --dataset mnist --model fff --width 64 --leaf 8 [--seed 0]
 //! fff serve  --artifact fff_mnist_infer_b16 [--requests 1000] [--tcp 127.0.0.1:7878]
 //!            [--workers N] [--threads N] [--precision f32|int8] [--parallel-size P]
-//!            [--config serve.kv]
+//!            [--request-deadline-us N] [--worker-restarts N] [--restart-backoff-us N]
+//!            [--max-retries N] [--config serve.kv]
 //! fff reproduce <table1|table2|table3|fig2|fig34|fig5|fig6|quant> [--scale paper]
 //! fff info                      # artifact manifest summary
 //! fff analyze [--root PATH]     # unsafe audit + kernel parity + determinism lints
@@ -45,10 +46,12 @@ fn usage() -> ! {
     );
     eprintln!(
         "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0 \
-         --precision f32|int8 --parallel-size 1"
+         --precision f32|int8 --parallel-size 1 --request-deadline-us 0 \
+         --worker-restarts 2 --max-retries 2"
     );
     eprintln!(
-        "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6|quant  (FFF_SCALE=paper for full grid)"
+        "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6|quant  \
+         (FFF_SCALE=paper for full grid)"
     );
     eprintln!("  info");
     eprintln!("  analyze    [--root PATH]  (unsafe audit + kernel parity + determinism lints)");
@@ -129,33 +132,37 @@ fn cmd_serve(args: &Args) {
         }
         None => ServeConfig::default(),
     };
-    scfg.workers = args.get_or("workers", scfg.workers);
-    scfg.threads = args.get_or("threads", scfg.threads);
-    scfg.max_batch = args.get_or("max-batch", scfg.max_batch);
-    scfg.max_delay_us = args.get_or("max-delay-us", scfg.max_delay_us);
-    scfg.queue_capacity = args.get_or("queue", scfg.queue_capacity);
-    if let Some(p) = args.get("precision") {
-        scfg.precision = fastfeedforward::tensor::Precision::parse(p)
-            .unwrap_or_else(|| panic!("--precision: unknown precision {p:?} (want f32|int8)"));
-    }
-    scfg.parallel_size = args.get_or("parallel-size", scfg.parallel_size);
-    // Re-validate: CLI flags are applied after the config file's checks.
-    scfg.validate().unwrap_or_else(|e| panic!("serve options: {e}"));
+    // Flag layer, shared with the parsing tests (re-validates after the
+    // config file's checks).
+    scfg.apply_args(args).unwrap_or_else(|e| panic!("serve options: {e}"));
     let mut cfg = CoordinatorConfig::from(scfg);
-    // The FFF_PRECISION / FFF_PARALLEL process overrides beat file and
-    // flag, mirroring FFF_THREADS / FFF_GEMM_KERNEL (see EXPERIMENTS.md's
-    // env-knob table).
+    // The FFF_PRECISION / FFF_PARALLEL / FFF_DEADLINE_US process
+    // overrides beat file and flag, mirroring FFF_THREADS /
+    // FFF_GEMM_KERNEL (see EXPERIMENTS.md's env-knob table).
     cfg.precision = fastfeedforward::tensor::kernels::resolve_precision(cfg.precision);
     cfg.parallel = fastfeedforward::tensor::kernels::resolve_parallel(cfg.parallel);
+    cfg.request_deadline_us =
+        fastfeedforward::coordinator::resolve_deadline_us(cfg.request_deadline_us);
     println!(
         "serving artifact {artifact} ({} workers, {} pool threads/worker, {} native precision, \
-         {} parallel trees)",
+         {} parallel trees, deadline {}, {} restarts/worker, {} retries/request)",
         cfg.workers,
         if cfg.threads == 0 { "shared".to_string() } else { cfg.threads.to_string() },
         cfg.precision.name(),
         cfg.parallel,
+        if cfg.request_deadline_us == 0 {
+            "off".to_string()
+        } else {
+            format!("{}us", cfg.request_deadline_us)
+        },
+        cfg.worker_restarts,
+        cfg.max_retries,
     );
-    let coord = Coordinator::start(cfg, HloBackend::factory("artifacts".into(), artifact));
+    let coord = Coordinator::start(cfg, HloBackend::factory("artifacts".into(), artifact))
+        .unwrap_or_else(|e| {
+            eprintln!("fff serve: {e}");
+            std::process::exit(1);
+        });
     if let Some(addr) = args.get("tcp") {
         // Network mode: expose the coordinator over TCP until Ctrl-C.
         let coord = std::sync::Arc::new(coord);

@@ -1,0 +1,314 @@
+//! Chaos harness: the serving tier's failure contract under injected
+//! faults (`coordinator::fault`).
+//!
+//! Invariants pinned here (the acceptance criteria of the robustness
+//! tier):
+//! * every accepted request receives exactly one terminal `Outcome`;
+//! * `in_flight` and all `outstanding` counters return to 0;
+//! * every `Ok` output is bit-identical to direct `infer_one`;
+//! * `shutdown()` joins cleanly, including mid-chaos;
+//! * `Coordinator::start` fails typed (never panics) when no worker
+//!   can build a backend, and a worker that exhausts restarts leaves an
+//!   (N−1)-worker tier serving correct responses.
+//!
+//! Bit-identity oracle: every model here has `2^depth = 8` allocated
+//! leaves and every config caps batches at ≤ 8 rows, so batched serving
+//! always takes the per-sample sparse path (`rows < 2·n_alloc`), which
+//! is bit-identical to `infer_one` at f32 *and* int8 — CI re-runs this
+//! file under `FFF_THREADS=4` and `FFF_PRECISION=int8` to pin that the
+//! fault paths preserve it.
+
+use fastfeedforward::coordinator::fault::{Fault, FaultScript, FaultyBackend};
+use fastfeedforward::coordinator::{
+    Backend, BatcherConfig, Coordinator, CoordinatorConfig, NativeFffBackend, Outcome, StartError,
+};
+use fastfeedforward::nn::FffInfer;
+use fastfeedforward::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serving model: depth 3 → 8 allocated leaves (see module docs).
+fn model() -> FffInfer {
+    let mut rng = Rng::seed_from_u64(77);
+    FffInfer::random(&mut rng, 16, 4, 3, 4, 8)
+}
+
+fn chaos_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_micros(300) },
+        workers: 2,
+        queue_capacity: 10_000,
+        worker_restarts: 100,
+        restart_backoff_us: 50,
+        max_retries: 4,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Distinct inputs plus their direct-inference oracle outputs.
+fn inputs_with_oracle(m: &FffInfer, n: usize, seed: u64) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut out = vec![0.0f32; 4];
+            m.infer_one(&x, &mut out);
+            (x, out)
+        })
+        .collect()
+}
+
+/// Counters must drain to zero once every response is delivered; the
+/// last `outstanding` decrement races the response send, so poll.
+fn wait_for_drained(coord: &Coordinator) {
+    for _ in 0..2500 {
+        if coord.in_flight() == 0 && coord.outstanding_total() == 0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!(
+        "counters never drained: in_flight={} outstanding={}",
+        coord.in_flight(),
+        coord.outstanding_total()
+    );
+}
+
+#[test]
+fn chaos_every_request_terminates_exactly_once() {
+    let m = model();
+    let served = m.clone();
+    // ~40 faulty inference calls interleaving panics, SLO-busting
+    // stalls, and merely-slow batches across both workers, then healthy.
+    let mut faults = Vec::new();
+    for i in 0..40 {
+        faults.push(match i % 5 {
+            0 => Fault::Panic,
+            1 => Fault::Slow(Duration::from_micros(200)),
+            2 => Fault::None,
+            3 => Fault::Stall(Duration::from_millis(3)),
+            _ => Fault::None,
+        });
+    }
+    let script = Arc::new(FaultScript::new(faults));
+    let s2 = script.clone();
+    let coord = Coordinator::start(chaos_config(), move || {
+        Box::new(FaultyBackend::new(
+            Box::new(NativeFffBackend::new(served.clone())),
+            s2.clone(),
+        ))
+    })
+    .expect("chaos coordinator start");
+
+    let cases = inputs_with_oracle(&m, 150, 1);
+    let mut rxs = Vec::new();
+    for (x, _) in &cases {
+        rxs.push(coord.submit(x.clone()).expect("submit"));
+    }
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for (rx, (_, want)) in rxs.into_iter().zip(&cases) {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every accepted request must get a terminal response");
+        match resp.outcome {
+            Outcome::Ok => {
+                assert_eq!(&resp.output, want, "Ok bits drifted from direct infer_one");
+                ok += 1;
+            }
+            Outcome::WorkerFailed => failed += 1,
+            other => panic!("unexpected outcome {other:?}: no deadline set, no shutdown issued"),
+        }
+        assert!(rx.try_recv().is_err(), "request answered more than once");
+    }
+    assert!(ok > 0, "no request survived the chaos run");
+    wait_for_drained(&coord);
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, ok);
+    assert_eq!(snap.failed, failed);
+    assert!(snap.restarts >= 1, "panics were injected but no backend restart recorded");
+    assert!(script.injected() >= 40, "script not fully consumed: {}", script.injected());
+    // Shutdown after chaos must join, not hang.
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_mid_chaos_terminates_every_request() {
+    let m = model();
+    let served = m.clone();
+    let mut faults = Vec::new();
+    for i in 0..20 {
+        let f = if i % 2 == 0 { Fault::Stall(Duration::from_millis(5)) } else { Fault::Panic };
+        faults.push(f);
+    }
+    let script = Arc::new(FaultScript::new(faults));
+    let coord = Coordinator::start(chaos_config(), move || {
+        Box::new(FaultyBackend::new(
+            Box::new(NativeFffBackend::new(served.clone())),
+            script.clone(),
+        ))
+    })
+    .expect("start");
+    let cases = inputs_with_oracle(&m, 60, 2);
+    let mut rxs = Vec::new();
+    for (x, _) in &cases {
+        rxs.push(coord.submit(x.clone()).expect("submit"));
+    }
+    // Shut down while batches are stalled/panicking in service: the
+    // drain must still answer every single request.
+    coord.shutdown();
+    for (rx, (_, want)) in rxs.into_iter().zip(&cases) {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("shutdown must answer accepted requests, not strand them");
+        match resp.outcome {
+            Outcome::Ok => assert_eq!(&resp.output, want, "Ok bits drifted during shutdown"),
+            Outcome::WorkerFailed | Outcome::ShuttingDown => {
+                assert!(resp.output.is_empty());
+            }
+            Outcome::DeadlineExceeded => panic!("no deadline was configured"),
+        }
+        assert!(rx.try_recv().is_err(), "request answered more than once");
+    }
+}
+
+#[test]
+fn exhausted_worker_leaves_surviving_tier_serving() {
+    let m = model();
+    let served = m.clone();
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 4, max_delay: Duration::from_micros(200) },
+        workers: 2,
+        queue_capacity: 10_000,
+        worker_restarts: 1,
+        restart_backoff_us: 50,
+        max_retries: 6,
+        ..CoordinatorConfig::default()
+    };
+    // Worker 0's backend panics on every batch (the factory keys on the
+    // worker thread's name, which restarts preserve); worker 1 is
+    // healthy. Worker 0 must burn its restart budget, tombstone, and
+    // leave a 1-worker tier that still serves exact answers.
+    let coord = Coordinator::start(cfg, move || -> Box<dyn Backend> {
+        let native = Box::new(NativeFffBackend::new(served.clone()));
+        if std::thread::current().name() == Some("fff-worker-0") {
+            Box::new(FaultyBackend::new(native, Arc::new(FaultScript::always(Fault::Panic))))
+        } else {
+            native
+        }
+    })
+    .expect("start");
+
+    // Phase 1: traffic until worker 0 dies. Every request must still
+    // terminate Ok (re-dispatched to worker 1 well within max_retries).
+    let cases = inputs_with_oracle(&m, 40, 3);
+    let mut rxs = Vec::new();
+    for (x, _) in &cases {
+        rxs.push(coord.submit(x.clone()).expect("submit"));
+    }
+    for (rx, (_, want)) in rxs.into_iter().zip(&cases) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("terminal response");
+        assert_eq!(resp.outcome, Outcome::Ok, "healthy worker must absorb the failover");
+        assert_eq!(&resp.output, want);
+    }
+    // Worker 0 tombstones after its budget (1 restart) is spent.
+    let mut live = coord.live_workers();
+    for _ in 0..2500 {
+        if live == 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        live = coord.live_workers();
+    }
+    assert_eq!(live, 1, "always-panicking worker never tombstoned");
+
+    // Phase 2: the degraded (N−1) tier keeps serving exact answers.
+    let cases = inputs_with_oracle(&m, 30, 4);
+    let mut rxs = Vec::new();
+    for (x, _) in &cases {
+        rxs.push(coord.submit(x.clone()).expect("submit"));
+    }
+    for (rx, (_, want)) in rxs.into_iter().zip(&cases) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("terminal response");
+        assert_eq!(resp.outcome, Outcome::Ok);
+        assert_eq!(&resp.output, want, "degraded-tier bits drifted");
+    }
+    wait_for_drained(&coord);
+    let snap = coord.metrics();
+    assert_eq!(snap.failed, 0, "no request may be lost to the dead worker");
+    assert_eq!(snap.restarts, 1, "worker 0 had exactly one rebuild in its budget");
+    assert!(snap.retried >= 1, "failover implies re-dispatches");
+    coord.shutdown();
+}
+
+#[test]
+fn stalled_batches_shed_expired_requests_post_inference() {
+    // Deadline generous enough to survive batching (3 ms) but not an
+    // 8 ms injected stall: the worker-side re-check after inference
+    // must shed every request typed.
+    let m = model();
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_micros(100) },
+        workers: 1,
+        queue_capacity: 64,
+        request_deadline_us: 3000,
+        ..CoordinatorConfig::default()
+    };
+    let script = Arc::new(FaultScript::always(Fault::Stall(Duration::from_millis(8))));
+    let coord = Coordinator::start(cfg, move || {
+        Box::new(FaultyBackend::new(
+            Box::new(NativeFffBackend::new(m.clone())),
+            script.clone(),
+        ))
+    })
+    .expect("start");
+    let rxs: Vec<_> = (0..5).map(|_| coord.submit(vec![0.3; 16]).expect("submit")).collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("terminal response");
+        assert_eq!(resp.outcome, Outcome::DeadlineExceeded);
+        assert!(resp.output.is_empty());
+    }
+    wait_for_drained(&coord);
+    let snap = coord.metrics();
+    assert_eq!(snap.shed, 5);
+    assert_eq!(snap.completed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn start_with_panicking_factory_returns_err() {
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        worker_restarts: 1,
+        restart_backoff_us: 10,
+        ..CoordinatorConfig::default()
+    };
+    let r = Coordinator::start(cfg, || -> Box<dyn Backend> {
+        panic!("backend artifacts unavailable")
+    });
+    match r {
+        Err(StartError::BackendInit(msg)) => {
+            assert!(msg.contains("artifacts unavailable"), "error cause lost: {msg}")
+        }
+        Ok(_) => panic!("start must return Err when every worker's factory fails"),
+    }
+}
+
+#[test]
+fn start_with_missing_hlo_artifacts_returns_err() {
+    // The old path panicked inside the worker thread via
+    // `HloBackend::factory(...).expect(...)` and then again in start's
+    // dim_rx recv; now it is a typed error the caller can handle.
+    use fastfeedforward::coordinator::HloBackend;
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        worker_restarts: 0,
+        restart_backoff_us: 10,
+        ..CoordinatorConfig::default()
+    };
+    let r = Coordinator::start(
+        cfg,
+        HloBackend::factory("definitely/not/an/artifact/dir".into(), "missing".into()),
+    );
+    assert!(r.is_err(), "missing artifacts must be a typed start error");
+}

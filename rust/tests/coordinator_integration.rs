@@ -3,7 +3,9 @@
 //! (HLO backend) when artifacts are present.
 
 use fastfeedforward::coordinator::BatcherConfig;
-use fastfeedforward::coordinator::{Coordinator, CoordinatorConfig, HloBackend, NativeFffBackend};
+use fastfeedforward::coordinator::{
+    Coordinator, CoordinatorConfig, HloBackend, NativeFffBackend, Outcome,
+};
 use fastfeedforward::nn::FffInfer;
 use fastfeedforward::rng::Rng;
 use std::time::Duration;
@@ -19,6 +21,7 @@ fn native_coord(workers: usize, queue: usize) -> Coordinator {
         ..CoordinatorConfig::default()
     };
     Coordinator::start(cfg, move || Box::new(NativeFffBackend::new(model.clone())))
+        .expect("healthy native factory")
 }
 
 #[test]
@@ -95,7 +98,8 @@ fn hlo_backend_serves_mnist_artifact() {
     let coord = Coordinator::start(
         cfg,
         HloBackend::factory("artifacts".into(), "fff_mnist_infer_b16".into()),
-    );
+    )
+    .expect("artifacts present but backend failed to build");
     assert_eq!(coord.dim_in(), 784);
     let mut rng = Rng::seed_from_u64(8);
     let mut rxs = Vec::new();
@@ -114,7 +118,8 @@ fn hlo_backend_serves_mnist_artifact() {
 }
 
 /// Failure injection: a backend that panics must not hang clients — the
-/// response channel drops and `recv` errors instead of blocking forever.
+/// request is retried within budget and then answered with a typed
+/// [`Outcome::WorkerFailed`], never a dropped channel.
 struct PanickyBackend;
 
 impl fastfeedforward::coordinator::Backend for PanickyBackend {
@@ -133,17 +138,36 @@ impl fastfeedforward::coordinator::Backend for PanickyBackend {
 }
 
 #[test]
-fn worker_panic_fails_requests_instead_of_hanging() {
+fn worker_panic_fails_requests_typed_instead_of_hanging() {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
         workers: 1,
         threads: 0,
         queue_capacity: 16,
+        worker_restarts: 1,
+        restart_backoff_us: 50,
+        max_retries: 1,
         ..CoordinatorConfig::default()
     };
-    let coord = Coordinator::start(cfg, || Box::new(PanickyBackend));
+    let coord =
+        Coordinator::start(cfg, || Box::new(PanickyBackend)).expect("construction is clean");
     let rx = coord.submit(vec![0.0; 4]).unwrap();
-    // The worker thread dies; the request's response sender is dropped.
-    let got = rx.recv_timeout(Duration::from_secs(5));
-    assert!(got.is_err(), "expected a dropped-channel error, got a response");
+    // Panic #1 spends the retry; the rebuilt backend's panic #2 exhausts
+    // it — the request must terminate typed, not on a dropped channel.
+    let resp = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("panicking worker must answer, not strand the client");
+    assert_eq!(resp.outcome, Outcome::WorkerFailed);
+    assert!(resp.output.is_empty());
+    let snap = coord.metrics();
+    assert_eq!(snap.failed, 1);
+    assert!(snap.retried >= 1, "the panic-then-retry path never fired");
+    assert_eq!(snap.restarts, 1, "one rebuild in the budget");
+    // The lone worker has tombstoned; later submissions still get a
+    // typed answer from the degraded (empty) tier.
+    let rx2 = coord.submit(vec![0.0; 4]).unwrap();
+    let resp2 = rx2.recv_timeout(Duration::from_secs(10)).expect("typed answer from empty tier");
+    assert_eq!(resp2.outcome, Outcome::WorkerFailed);
+    assert_eq!(coord.in_flight(), 0);
+    coord.shutdown();
 }
