@@ -277,6 +277,10 @@ pub struct TrainConfig {
     /// Dataset size (train split, before 9:1 val split).
     pub train_n: usize,
     pub test_n: usize,
+    /// Save a full-resume checkpoint every N completed epochs (0 = off).
+    /// Layered like precision: preset default < `train.checkpoint_every`
+    /// config key < `--checkpoint-every` flag < `FFF_CKPT_EVERY` env.
+    pub checkpoint_every: usize,
 }
 
 impl TrainConfig {
@@ -330,6 +334,7 @@ impl TrainConfig {
             seed,
             train_n: 8000,
             test_n: 2000,
+            checkpoint_every: 0,
         }
     }
 
@@ -360,7 +365,18 @@ impl TrainConfig {
             seed,
             train_n: 8000,
             test_n: 2000,
+            checkpoint_every: 0,
         }
+    }
+
+    /// Read `train.*` keys from a parsed config file over this config —
+    /// the file layer of the checkpoint-cadence precedence chain
+    /// (preset < file < `--checkpoint-every` flag < `FFF_CKPT_EVERY`).
+    pub fn apply_kv(&mut self, kv: &KvFile) -> Result<(), String> {
+        if let Some(v) = kv.get_parsed::<usize>("train.checkpoint_every")? {
+            self.checkpoint_every = v;
+        }
+        Ok(())
     }
 
     /// The paper's Figure 2 recipe (inference-size counterparts; h=0).
@@ -395,6 +411,20 @@ mod tests {
     fn depth_derivation_rejects_non_pow2() {
         let c = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Fff, 96, 5, 0);
         let _ = c.fff_depth();
+    }
+
+    #[test]
+    fn train_kv_layers_checkpoint_every() {
+        let mut c = TrainConfig::table1(DatasetKind::Mnist, ModelKind::Fff, 64, 8, 0);
+        assert_eq!(c.checkpoint_every, 0, "presets default to no checkpointing");
+        let kv = KvFile::parse("[train]\ncheckpoint_every = 25\n").unwrap();
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(c.checkpoint_every, 25);
+        // Absent key keeps the current value; garbage is a typed error.
+        c.apply_kv(&KvFile::parse("").unwrap()).unwrap();
+        assert_eq!(c.checkpoint_every, 25);
+        let bad = KvFile::parse("[train]\ncheckpoint_every = often\n").unwrap();
+        assert!(c.apply_kv(&bad).is_err());
     }
 
     #[test]

@@ -71,6 +71,48 @@ impl FaultScript {
     }
 }
 
+/// Scripted *construction* failures, complementing [`FaultScript`]'s
+/// inference failures: a factory calls [`BuildScript::gate`] before
+/// building, and the first `n` calls panic. Shared via `Arc` across
+/// workers and restarts, so "the first build of the new model fails on
+/// one worker, the retry succeeds" is expressible deterministically.
+pub struct BuildScript {
+    remaining: AtomicUsize,
+    attempts: AtomicUsize,
+}
+
+impl BuildScript {
+    /// The first `n` gated build attempts panic; the rest succeed.
+    pub fn panic_first(n: usize) -> Arc<Self> {
+        Arc::new(BuildScript { remaining: AtomicUsize::new(n), attempts: AtomicUsize::new(0) })
+    }
+
+    /// Call at the top of a factory: panics while scripted failures
+    /// remain, returns normally after.
+    pub fn gate(&self) {
+        self.attempts.fetch_add(1, Ordering::Relaxed);
+        // Decrement-if-positive without blocking: claim one scripted
+        // failure or fall through.
+        let mut left = self.remaining.load(Ordering::Relaxed);
+        while left > 0 {
+            match self.remaining.compare_exchange(
+                left,
+                left - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => panic!("injected fault: backend build failure"),
+                Err(now) => left = now,
+            }
+        }
+    }
+
+    /// Build attempts gated so far (failing and succeeding).
+    pub fn attempts(&self) -> usize {
+        self.attempts.load(Ordering::Relaxed)
+    }
+}
+
 /// A [`Backend`] decorator that injects the scripted faults around an
 /// inner backend. Construction is clean — faults fire on inference —
 /// unless paired with a factory that panics on its own (see
@@ -145,6 +187,18 @@ mod tests {
         let always = FaultScript::always(Fault::Panic);
         assert_eq!(always.next_fault(), Fault::Panic);
         assert_eq!(always.next_fault(), Fault::Panic);
+    }
+
+    #[test]
+    fn build_script_panics_exactly_n_times() {
+        let s = BuildScript::panic_first(2);
+        for i in 0..2 {
+            let r = catch_unwind(AssertUnwindSafe(|| s.gate()));
+            assert!(r.is_err(), "gated call {i} must panic");
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| s.gate()));
+        assert!(r.is_ok(), "script exhausted, builds succeed");
+        assert_eq!(s.attempts(), 3);
     }
 
     #[test]

@@ -61,6 +61,11 @@ pub struct Metrics {
     pub retried: AtomicU64,
     /// Backend rebuild attempts across all workers.
     pub restarts: AtomicU64,
+    /// Hot model reloads published to the workers (validated swaps).
+    pub reloads: AtomicU64,
+    /// Reload attempts rejected by validation (or failed worker-side
+    /// rebuilds); the tier keeps serving the previous model.
+    pub reload_failures: AtomicU64,
     samples: Mutex<Samples>,
 }
 
@@ -100,6 +105,10 @@ pub struct MetricsSnapshot {
     pub retried: u64,
     /// Backend rebuild attempts across all workers.
     pub restarts: u64,
+    /// Validated hot model reloads published to the workers.
+    pub reloads: u64,
+    /// Reload attempts rejected by validation or failed worker-side.
+    pub reload_failures: u64,
     pub latency_p50: Duration,
     pub latency_p99: Duration,
     pub latency_mean: Duration,
@@ -119,6 +128,8 @@ impl Metrics {
             failed: AtomicU64::new(0),
             retried: AtomicU64::new(0),
             restarts: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            reload_failures: AtomicU64::new(0),
             samples: Mutex::new(Samples::new()),
         }
     }
@@ -153,6 +164,8 @@ impl Metrics {
             failed: self.failed.load(Ordering::Relaxed),
             retried: self.retried.load(Ordering::Relaxed),
             restarts: self.restarts.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            reload_failures: self.reload_failures.load(Ordering::Relaxed),
             latency_p50: Duration::from_secs_f64(lat.p50 / 1e6),
             latency_p99: Duration::from_secs_f64(lat.p99 / 1e6),
             latency_mean: Duration::from_secs_f64(lat.mean / 1e6),
@@ -173,14 +186,17 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "completed={} rejected={} shed={} failed={} retried={} restarts={} p50={:.1}us \
-             p99={:.1}us mean={:.1}us mean_batch={:.1} leaf_occupancy={:.2} leaf_skew={:.2}",
+            "completed={} rejected={} shed={} failed={} retried={} restarts={} reloads={} \
+             reload_failures={} p50={:.1}us p99={:.1}us mean={:.1}us mean_batch={:.1} \
+             leaf_occupancy={:.2} leaf_skew={:.2}",
             self.completed,
             self.rejected,
             self.shed,
             self.failed,
             self.retried,
             self.restarts,
+            self.reloads,
+            self.reload_failures,
             self.latency_p50.as_secs_f64() * 1e6,
             self.latency_p99.as_secs_f64() * 1e6,
             self.latency_mean.as_secs_f64() * 1e6,
@@ -217,6 +233,21 @@ mod tests {
         assert_eq!(s.mean_leaf_occupancy, 0.0);
         assert_eq!(s.mean_leaf_skew, 0.0);
         assert_eq!(s.restarts, 0);
+        assert_eq!(s.reloads, 0);
+        assert_eq!(s.reload_failures, 0);
+    }
+
+    #[test]
+    fn reload_counters_flow_to_snapshot_and_display() {
+        let m = Metrics::new();
+        m.reloads.fetch_add(2, Ordering::Relaxed);
+        m.reload_failures.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.reloads, 2);
+        assert_eq!(s.reload_failures, 1);
+        let line = s.to_string();
+        assert!(line.contains("reloads=2"), "{line}");
+        assert!(line.contains("reload_failures=1"), "{line}");
     }
 
     #[test]

@@ -14,8 +14,12 @@
 //! (panicking backends are rebuilt with capped exponential backoff, the
 //! failed batch re-dispatched within `max_retries`); requests past their
 //! `request_deadline_us` are shed typed rather than served late; and
-//! shutdown drains instead of dropping. The [`fault`] module provides
-//! the injection harness that `tests/chaos.rs` uses to prove all of it.
+//! shutdown drains instead of dropping. [`Coordinator::reload`] extends
+//! the contract across model swaps: a validated new model replaces the
+//! old one worker-by-worker *between* batches, so a hot reload drops
+//! zero in-flight requests and a failed validation rolls back to the
+//! old model. The [`fault`] module provides the injection harness that
+//! `tests/chaos.rs` uses to prove all of it.
 //!
 //! ```no_run
 //! use fastfeedforward::coordinator::{Coordinator, CoordinatorConfig, NativeFffBackend, Outcome};
@@ -43,7 +47,7 @@ mod worker;
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{TcpClient, TcpServer};
-pub use worker::{Backend, HloBackend, NativeFffBackend};
+pub use worker::{Backend, BackendFactory, HloBackend, NativeFffBackend};
 
 use crate::tensor::{Matrix, Precision};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -259,6 +263,81 @@ pub fn resolve_deadline_us(requested: u64) -> u64 {
     deadline_override().unwrap_or(requested)
 }
 
+/// The `FFF_MODEL_WATCH_MS` process override (model-watch poll period),
+/// read once. Outermost layer of the preset < config file < CLI flag <
+/// env precedence chain, like `FFF_DEADLINE_US`.
+pub fn model_watch_ms_override() -> Option<u64> {
+    static ENV: OnceLock<Option<u64>> = OnceLock::new();
+    *ENV.get_or_init(|| parse_watch_ms_env(std::env::var("FFF_MODEL_WATCH_MS").ok().as_deref()))
+}
+
+/// Pure parser behind [`model_watch_ms_override`]; invalid values are
+/// ignored with a warning, matching the other `FFF_*` knobs.
+pub fn parse_watch_ms_env(v: Option<&str>) -> Option<u64> {
+    let v = v?;
+    match v.trim().parse::<u64>() {
+        Ok(ms) => Some(ms),
+        Err(_) => {
+            eprintln!("FFF_MODEL_WATCH_MS: invalid millisecond count {v:?}; ignoring");
+            None
+        }
+    }
+}
+
+/// Fold the `FFF_MODEL_WATCH_MS` override over the configured period.
+pub fn resolve_model_watch_ms(requested: u64) -> u64 {
+    model_watch_ms_override().unwrap_or(requested)
+}
+
+fn file_mtime(path: &std::path::Path) -> Option<std::time::SystemTime> {
+    std::fs::metadata(path).and_then(|m| m.modified()).ok()
+}
+
+/// Poll `path` every `period` and hot-reload the coordinator whenever
+/// its mtime changes. Because checkpoint saves are atomic
+/// (write-temp + rename), the watcher can never observe a torn file —
+/// and if it races a slow writer some other way, validation rejects the
+/// candidate and the next mtime change retries. Holds only a `Weak`
+/// handle: the thread exits on its own once the coordinator is dropped
+/// or shut down, so callers may discard the `JoinHandle`.
+pub fn spawn_model_watch(
+    coord: &Arc<Coordinator>,
+    path: std::path::PathBuf,
+    period: Duration,
+) -> std::thread::JoinHandle<()> {
+    let weak = Arc::downgrade(coord);
+    // Baseline is whatever is on disk at spawn: that is the model the
+    // tier already serves (or an absent file); only a change reloads.
+    let mut last = file_mtime(&path);
+    std::thread::Builder::new()
+        .name("fff-model-watch".into())
+        .spawn(move || loop {
+            std::thread::sleep(period);
+            let Some(coord) = weak.upgrade() else { return };
+            if coord.is_closed() {
+                return;
+            }
+            let now = file_mtime(&path);
+            if now.is_some() && now != last {
+                // Advance the baseline even when the reload is rejected:
+                // a bad file stays bad until it changes again, and
+                // re-validating it every tick would just spam failures.
+                last = now;
+                match coord.reload_from_checkpoint(&path) {
+                    Ok(generation) => eprintln!(
+                        "fff serve: hot-reloaded model from {} (generation {generation})",
+                        path.display()
+                    ),
+                    Err(e) => eprintln!(
+                        "fff serve: rejected model reload from {}: {e}",
+                        path.display()
+                    ),
+                }
+            }
+        })
+        .expect("spawn model watcher")
+}
+
 /// Answer a request terminally with a non-`Ok` outcome, keeping the
 /// failure counters and the `in_flight` gauge consistent. The single
 /// funnel for every shed/failed/shutdown answer — responding any other
@@ -295,6 +374,69 @@ pub(crate) fn expired(req: &InferRequest, now: Instant) -> bool {
     req.deadline.is_some_and(|d| now > d)
 }
 
+/// Hot-reload error: [`Coordinator::reload`] rejects a candidate
+/// instead of letting a bad model reach the workers.
+#[derive(Debug)]
+pub enum ReloadError {
+    /// The candidate failed validation — construction panicked, its
+    /// shape disagrees with the serving tier, or the smoke inference
+    /// produced non-finite output. The serving model is unchanged.
+    Validation(String),
+    /// The coordinator is shut down.
+    Closed,
+}
+
+impl std::fmt::Display for ReloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReloadError::Validation(e) => write!(f, "candidate model rejected: {e}"),
+            ReloadError::Closed => write!(f, "coordinator closed"),
+        }
+    }
+}
+
+impl std::error::Error for ReloadError {}
+
+/// Validate a reload candidate off to the side, touching no serving
+/// worker: build it in a scratch thread (backends need not be `Send`,
+/// and construction may panic), check its shape against the serving
+/// tier, and smoke-infer one zero sample. Only candidates that pass
+/// are published to the workers.
+fn validate_candidate(
+    factory: &BackendFactory,
+    dim_in: usize,
+    dim_out: usize,
+) -> Result<(), String> {
+    let factory = factory.clone();
+    let probe = std::thread::Builder::new()
+        .name("fff-reload-probe".into())
+        .spawn(move || -> Result<(), String> {
+            let mut backend = std::panic::catch_unwind(std::panic::AssertUnwindSafe(&*factory))
+                .map_err(|p| format!("construction panicked: {}", worker::panic_message(p)))?;
+            if backend.dim_in() != dim_in || backend.dim_out() != dim_out {
+                return Err(format!(
+                    "shape mismatch: tier serves {dim_in}->{dim_out}, candidate is {}->{}",
+                    backend.dim_in(),
+                    backend.dim_out()
+                ));
+            }
+            let x = Matrix::zeros(1, dim_in);
+            let y = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                let y = backend.infer(&x);
+                (y.rows(), y.cols(), y.row(0).iter().all(|v| v.is_finite()))
+            }))
+            .map_err(|p| format!("smoke inference panicked: {}", worker::panic_message(p)))?;
+            match y {
+                (1, cols, true) if cols == dim_out => Ok(()),
+                (rows, cols, _) => {
+                    Err(format!("smoke inference returned a bad {rows}x{cols} result"))
+                }
+            }
+        })
+        .map_err(|e| format!("could not spawn validation probe: {e}"))?;
+    probe.join().unwrap_or_else(|_| Err("validation probe died".into()))
+}
+
 /// The serving coordinator handle.
 pub struct Coordinator {
     tx: Option<mpsc::Sender<batcher::BatcherMsg>>,
@@ -302,14 +444,22 @@ pub struct Coordinator {
     in_flight: Arc<AtomicU64>,
     queue_capacity: u64,
     dim_in: usize,
+    dim_out: usize,
+    /// Serving precision, carried so checkpoint reloads compile the
+    /// candidate the same way the original factory did.
+    precision: Precision,
     request_deadline_us: u64,
     metrics: Arc<Metrics>,
     closed: AtomicBool,
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     worker_handles: Vec<std::thread::JoinHandle<()>>,
-    /// Per-worker (outstanding, alive) shared with batcher and workers,
-    /// kept for the observability accessors.
-    worker_state: Vec<(Arc<AtomicU64>, Arc<AtomicBool>)>,
+    /// Per-worker (outstanding, alive, applied reload generation)
+    /// shared with batcher and workers, kept for the observability
+    /// accessors.
+    worker_state: Vec<(Arc<AtomicU64>, Arc<AtomicBool>, Arc<AtomicU64>)>,
+    /// Current backend factory + generation, shared with the workers;
+    /// [`Coordinator::reload`] publishes validated candidates here.
+    reload: Arc<worker::ReloadCell>,
 }
 
 impl Coordinator {
@@ -326,7 +476,8 @@ impl Coordinator {
         F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
     {
         assert!(config.workers >= 1);
-        let factory = Arc::new(backend_factory);
+        let factory: BackendFactory = Arc::new(backend_factory);
+        let reload = Arc::new(worker::ReloadCell::new(factory));
         let metrics = Arc::new(Metrics::new());
         let in_flight = Arc::new(AtomicU64::new(0));
         let (tx, rx) = mpsc::channel::<batcher::BatcherMsg>();
@@ -336,18 +487,19 @@ impl Coordinator {
         let mut worker_slots = Vec::new();
         let mut worker_handles = Vec::new();
         let mut worker_state = Vec::new();
-        // Workers report Ok(dim_in) or Err(build failure) here.
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+        // Workers report Ok((dim_in, dim_out)) or Err(build failure).
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
         for w in 0..config.workers {
             let (btx, brx) = mpsc::channel::<Batch>();
             let outstanding = Arc::new(AtomicU64::new(0));
             let alive = Arc::new(AtomicBool::new(true));
+            let applied_gen = Arc::new(AtomicU64::new(0));
             worker_slots.push(batcher::WorkerSlot {
                 tx: btx,
                 outstanding: outstanding.clone(),
                 alive: alive.clone(),
             });
-            worker_state.push((outstanding.clone(), alive.clone()));
+            worker_state.push((outstanding.clone(), alive.clone(), applied_gen.clone()));
             let ctx = worker::WorkerCtx {
                 rx: brx,
                 retry_tx: tx.clone(),
@@ -355,16 +507,17 @@ impl Coordinator {
                 in_flight: in_flight.clone(),
                 outstanding,
                 alive,
+                applied_gen,
                 threads: config.threads,
                 restarts: config.worker_restarts,
                 backoff: Duration::from_micros(config.restart_backoff_us),
                 max_retries: config.max_retries,
             };
-            let factory = factory.clone();
+            let cell = reload.clone();
             let ready_tx = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("fff-worker-{w}"))
-                .spawn(move || worker::run_worker(ctx, factory, ready_tx))
+                .spawn(move || worker::run_worker(ctx, cell, ready_tx))
                 .expect("spawn worker");
             worker_handles.push(handle);
         }
@@ -375,9 +528,9 @@ impl Coordinator {
         // so dropping their batch channels below lets them join).
         let mut failures = 0usize;
         let mut first_err: Option<String> = None;
-        let dim_in = loop {
+        let (dim_in, dim_out) = loop {
             match ready_rx.recv() {
-                Ok(Ok(dim)) => break dim,
+                Ok(Ok(dims)) => break dims,
                 Ok(Err(e)) => {
                     failures += 1;
                     first_err.get_or_insert(e);
@@ -424,13 +577,74 @@ impl Coordinator {
             in_flight,
             queue_capacity: config.queue_capacity as u64,
             dim_in,
+            dim_out,
+            precision: config.precision,
             request_deadline_us: config.request_deadline_us,
             metrics,
             closed: AtomicBool::new(false),
             batcher_handle: Some(batcher_handle),
             worker_handles,
             worker_state,
+            reload,
         })
+    }
+
+    /// Hot-swap the serving model with **zero dropped requests**. The
+    /// candidate factory is validated off to the side first (build under
+    /// `catch_unwind`, shape check against the tier, smoke inference);
+    /// only a passing candidate is published, after which each worker
+    /// rebuilds its backend *between* batches — every in-flight request
+    /// is answered by the model that was serving when its batch was cut.
+    /// A failing candidate leaves the old model serving (rollback is the
+    /// absence of a publish) and is counted in `reload_failures`.
+    /// Returns the new generation on success.
+    pub fn reload<F>(&self, backend_factory: F) -> Result<u64, ReloadError>
+    where
+        F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
+    {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(ReloadError::Closed);
+        }
+        let factory: BackendFactory = Arc::new(backend_factory);
+        if let Err(e) = validate_candidate(&factory, self.dim_in, self.dim_out) {
+            self.metrics.reload_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(ReloadError::Validation(e));
+        }
+        let generation = self.reload.publish(factory);
+        self.metrics.reloads.fetch_add(1, Ordering::Relaxed);
+        Ok(generation)
+    }
+
+    /// [`Coordinator::reload`] from an on-disk FFF checkpoint: the file
+    /// is read and CRC-verified once, compiled at the tier's serving
+    /// precision, and the resulting engine cloned per worker. An
+    /// unreadable, corrupt, or config-less checkpoint is a validation
+    /// failure — the old model keeps serving.
+    pub fn reload_from_checkpoint(&self, path: &std::path::Path) -> Result<u64, ReloadError> {
+        match NativeFffBackend::factory_from_checkpoint(path, self.precision) {
+            Ok(factory) => self.reload(factory),
+            Err(e) => {
+                self.metrics.reload_failures.fetch_add(1, Ordering::Relaxed);
+                Err(ReloadError::Validation(format!("{e:#}")))
+            }
+        }
+    }
+
+    /// Whether every live worker has acted on the latest published
+    /// reload generation (tombstoned workers are exempt — they serve
+    /// nothing). Useful for tests and drain-then-verify operations;
+    /// requests keep flowing during the transition either way.
+    pub fn reload_synced(&self) -> bool {
+        let generation = self.reload.generation();
+        self.worker_state
+            .iter()
+            .filter(|(_, alive, _)| alive.load(Ordering::Acquire))
+            .all(|(_, _, applied)| applied.load(Ordering::Acquire) == generation)
+    }
+
+    /// Whether shutdown has begun (used by the model watcher to exit).
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
     }
 
     /// Submit one sample; returns the channel the response arrives on.
@@ -481,6 +695,12 @@ impl Coordinator {
         self.dim_in
     }
 
+    /// Output dimensionality of the serving model (reload candidates
+    /// must match it).
+    pub fn dim_out(&self) -> usize {
+        self.dim_out
+    }
+
     /// Metrics snapshot (latency percentiles, throughput, batch sizes,
     /// failure counters).
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -494,12 +714,12 @@ impl Coordinator {
 
     /// Sum of dispatched-but-unserviced request counts across workers.
     pub fn outstanding_total(&self) -> u64 {
-        self.worker_state.iter().map(|(o, _)| o.load(Ordering::Acquire)).sum()
+        self.worker_state.iter().map(|(o, _, _)| o.load(Ordering::Acquire)).sum()
     }
 
     /// Workers still accepting dispatches (restart budget not spent).
     pub fn live_workers(&self) -> usize {
-        self.worker_state.iter().filter(|(_, a)| a.load(Ordering::Acquire)).count()
+        self.worker_state.iter().filter(|(_, a, _)| a.load(Ordering::Acquire)).count()
     }
 
     /// Stop accepting requests, drain with typed answers, join all
@@ -729,6 +949,81 @@ mod tests {
         assert_eq!(parse_deadline_env(Some(" 0 ")), Some(0));
         assert_eq!(parse_deadline_env(Some("fast")), None, "garbage ignored");
         assert_eq!(parse_deadline_env(Some("-5")), None);
+    }
+
+    #[test]
+    fn watch_ms_env_parse_contract() {
+        assert_eq!(parse_watch_ms_env(None), None);
+        assert_eq!(parse_watch_ms_env(Some("250")), Some(250));
+        assert_eq!(parse_watch_ms_env(Some(" 0 ")), Some(0));
+        assert_eq!(parse_watch_ms_env(Some("soon")), None, "garbage ignored");
+        assert_eq!(parse_watch_ms_env(Some("-1")), None);
+    }
+
+    #[test]
+    fn hot_reload_swaps_model_bitwise() {
+        let coord = start(2, 4);
+        let old = FffInfer::random(&mut Rng::seed_from_u64(1), 8, 3, 3, 4, 8);
+        let new = FffInfer::random(&mut Rng::seed_from_u64(2), 8, 3, 3, 4, 8);
+        let x = vec![0.3f32; 8];
+        let mut want_old = vec![0.0f32; 3];
+        old.infer_one(&x, &mut want_old);
+        let mut want_new = vec![0.0f32; 3];
+        new.infer_one(&x, &mut want_new);
+        assert_ne!(want_old, want_new, "probe input must distinguish the models");
+        let r = coord.submit(x.clone()).unwrap().recv().unwrap();
+        assert_eq!(r.output, want_old);
+        let served = new.clone();
+        let generation = coord
+            .reload(move || Box::new(NativeFffBackend::new(served.clone())))
+            .expect("matching-shape candidate must pass validation");
+        assert_eq!(generation, 1);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !coord.reload_synced() {
+            assert!(Instant::now() < deadline, "workers did not apply the reload");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let r = coord.submit(x).unwrap().recv().unwrap();
+        assert_eq!(r.outcome, Outcome::Ok);
+        assert_eq!(r.output, want_new, "post-reload output must be the new model's bits");
+        let snap = coord.metrics();
+        assert_eq!(snap.reloads, 1);
+        assert_eq!(snap.reload_failures, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_reload_candidates_are_rejected_and_old_model_serves() {
+        let coord = start(1, 4);
+        let old = FffInfer::random(&mut Rng::seed_from_u64(1), 8, 3, 3, 4, 8);
+        // Wrong input dimensionality: caught by the shape check.
+        let wrong = FffInfer::random(&mut Rng::seed_from_u64(3), 6, 3, 3, 4, 8);
+        match coord.reload(move || Box::new(NativeFffBackend::new(wrong.clone()))) {
+            Err(ReloadError::Validation(e)) => {
+                assert!(e.contains("shape mismatch"), "lost cause: {e}");
+            }
+            other => panic!("want shape-validation rejection, got {other:?}"),
+        }
+        // Construction panic: caught by the probe's catch_unwind.
+        match coord.reload(|| -> Box<dyn Backend> { panic!("no such artifact") }) {
+            Err(ReloadError::Validation(e)) => {
+                assert!(e.contains("no such artifact"), "lost cause: {e}");
+            }
+            other => panic!("want construction rejection, got {other:?}"),
+        }
+        // Rollback is the absence of a publish: the old model serves
+        // bit-identically and the tier is trivially synced.
+        assert!(coord.reload_synced());
+        let x = vec![0.25f32; 8];
+        let mut want = vec![0.0f32; 3];
+        old.infer_one(&x, &mut want);
+        let r = coord.submit(x).unwrap().recv().unwrap();
+        assert_eq!(r.outcome, Outcome::Ok);
+        assert_eq!(r.output, want, "rejected reloads must not perturb serving");
+        let snap = coord.metrics();
+        assert_eq!(snap.reloads, 0);
+        assert_eq!(snap.reload_failures, 2);
+        coord.shutdown();
     }
 
     #[test]

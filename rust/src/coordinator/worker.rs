@@ -12,6 +12,16 @@
 //! its queue so no dispatched batch is ever stranded in a dropped
 //! channel, and bounces everything back until shutdown closes the
 //! channel. The tier degrades to the surviving workers.
+//!
+//! Workers also participate in **hot model reload**: the shared
+//! [`ReloadCell`] holds the current backend factory plus a generation
+//! counter. Between batches (never mid-batch — an in-flight batch is
+//! always finished on the backend that started it) each worker polls
+//! the generation and, on a bump, rebuilds its backend from the new
+//! factory. The coordinator validates a candidate *before* publishing,
+//! so a worker-side rebuild failure is an anomaly: the worker keeps its
+//! old backend serving and counts a `reload_failure` rather than
+//! dropping traffic.
 
 use super::batcher::{Batch, BatcherMsg};
 use super::metrics::Metrics;
@@ -20,8 +30,57 @@ use crate::nn::{FffInfer, InferScratch, RoutingStats};
 use crate::tensor::Matrix;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Type-erased, shareable backend constructor. Hot reload swaps the
+/// factory at runtime, so the coordinator stores it erased rather than
+/// as the generic parameter [`super::Coordinator::start`] accepts.
+pub type BackendFactory = Arc<dyn Fn() -> Box<dyn Backend> + Send + Sync>;
+
+/// How often an idle worker re-checks the reload generation. Also the
+/// upper bound on extra shutdown latency, so it is kept small.
+const RELOAD_POLL: Duration = Duration::from_millis(20);
+
+/// The shared factory + generation cell behind hot reload. Publishing
+/// stores the new factory first and bumps the generation second; a
+/// reader that races the two fetches at worst rebuilds once more than
+/// necessary, never serves a stale factory under a new generation
+/// forever.
+pub(crate) struct ReloadCell {
+    generation: AtomicU64,
+    factory: Mutex<BackendFactory>,
+}
+
+impl ReloadCell {
+    pub(crate) fn new(factory: BackendFactory) -> Self {
+        ReloadCell { generation: AtomicU64::new(0), factory: Mutex::new(factory) }
+    }
+
+    /// Current published generation (0 = the factory `start` was given).
+    pub(crate) fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Snapshot (generation, factory). Generation is read *before* the
+    /// factory, so a concurrent publish can only make the pair "newer
+    /// factory under older generation" — the follow-up poll then sees
+    /// the bumped generation and re-applies, which is redundant but
+    /// correct.
+    pub(crate) fn current(&self) -> (u64, BackendFactory) {
+        let gen = self.generation.load(Ordering::Acquire);
+        let factory = self.factory.lock().unwrap().clone();
+        (gen, factory)
+    }
+
+    /// Swap the factory and bump the generation; returns the new
+    /// generation. Callers validate the candidate first — everything
+    /// published here is picked up by the workers.
+    pub(crate) fn publish(&self, factory: BackendFactory) -> u64 {
+        *self.factory.lock().unwrap() = factory;
+        self.generation.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
 
 /// What a worker executes: native engine or PJRT executable.
 pub trait Backend {
@@ -58,6 +117,21 @@ pub struct NativeFffBackend {
 impl NativeFffBackend {
     pub fn new(model: FffInfer) -> Self {
         NativeFffBackend { model, scratch: InferScratch::new(), last_routing: None }
+    }
+
+    /// A `Coordinator::start` / `Coordinator::reload`-compatible factory
+    /// serving an FFF checkpoint. The checkpoint is read, CRC-verified,
+    /// and compiled **once, here** — the factory then clones the
+    /// compiled engine per worker, so a reload never re-parses the file
+    /// per worker and a file swapped mid-reload cannot give two workers
+    /// different weights.
+    pub fn factory_from_checkpoint(
+        path: &std::path::Path,
+        precision: crate::tensor::Precision,
+    ) -> anyhow::Result<impl Fn() -> Box<dyn Backend> + Send + Sync + 'static> {
+        let model = crate::nn::checkpoint::load_fff(path)?;
+        let infer = model.compile_infer_with(precision);
+        Ok(move || Box::new(NativeFffBackend::new(infer.clone())) as Box<dyn Backend>)
     }
 }
 
@@ -213,6 +287,9 @@ pub(crate) struct WorkerCtx {
     /// Published health: flipped to `false` (permanently) when the
     /// restart budget is spent, steering dispatch away.
     pub(crate) alive: Arc<AtomicBool>,
+    /// Reload generation this worker last acted on, shared with the
+    /// coordinator's `reload_synced` observability.
+    pub(crate) applied_gen: Arc<AtomicU64>,
     /// `> 0` pins a private compute pool this wide to the worker thread
     /// so its GEMM/FFF traffic cannot oversubscribe cores shared with
     /// sibling workers; `0` shares the process-global pool.
@@ -239,7 +316,7 @@ impl Drop for Decrement<'_> {
     }
 }
 
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -252,7 +329,7 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// One supervised construction attempt.
 fn build_backend<F>(factory: &F) -> Result<Box<dyn Backend>, String>
 where
-    F: Fn() -> Box<dyn Backend>,
+    F: Fn() -> Box<dyn Backend> + ?Sized,
 {
     catch_unwind(AssertUnwindSafe(factory)).map_err(panic_message)
 }
@@ -274,7 +351,7 @@ fn restart_backend<F>(
     metrics: &Metrics,
 ) -> Option<Box<dyn Backend>>
 where
-    F: Fn() -> Box<dyn Backend>,
+    F: Fn() -> Box<dyn Backend> + ?Sized,
 {
     let mut attempt = 0u32;
     while *budget > 0 {
@@ -346,24 +423,25 @@ fn tombstone(ctx: &WorkerCtx) {
 }
 
 /// Supervised worker loop: construct the backend (with restart budget),
-/// report readiness, serve batches under `catch_unwind`.
+/// report readiness, serve batches under `catch_unwind`, apply hot
+/// reloads strictly *between* batches.
 ///
-/// `ready_tx` gets exactly one message: `Ok(dim_in)` once a backend is
-/// built, or `Err(reason)` if construction exhausted the restart budget
-/// (the worker then tombstones so already-created channels stay valid).
-pub(crate) fn run_worker<F>(
+/// `ready_tx` gets exactly one message: `Ok((dim_in, dim_out))` once a
+/// backend is built, or `Err(reason)` if construction exhausted the
+/// restart budget (the worker then tombstones so already-created
+/// channels stay valid).
+pub(crate) fn run_worker(
     ctx: WorkerCtx,
-    factory: Arc<F>,
-    ready_tx: mpsc::Sender<Result<usize, String>>,
-) where
-    F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
-{
+    cell: Arc<ReloadCell>,
+    ready_tx: mpsc::Sender<Result<(usize, usize), String>>,
+) {
     if ctx.threads > 0 {
         crate::tensor::pool::set_current(Some(Arc::new(
             crate::tensor::pool::ThreadPool::new(ctx.threads),
         )));
     }
     let mut budget = ctx.restarts;
+    let (mut applied, mut factory) = cell.current();
     let mut backend = match build_backend(&*factory) {
         Ok(b) => b,
         Err(first_err) => {
@@ -379,7 +457,8 @@ pub(crate) fn run_worker<F>(
             }
         }
     };
-    let _ = ready_tx.send(Ok(backend.dim_in()));
+    ctx.applied_gen.store(applied, Ordering::Release);
+    let _ = ready_tx.send(Ok((backend.dim_in(), backend.dim_out())));
     drop(ready_tx);
     // Input/output matrices and the live-request buffer are retained
     // across batches: with the native backend's internal scratch, a warm
@@ -388,7 +467,38 @@ pub(crate) fn run_worker<F>(
     let mut x = Matrix::zeros(0, 0);
     let mut y = Matrix::zeros(0, 0);
     let mut live: Vec<InferRequest> = Vec::new();
-    while let Ok(mut batch) = ctx.rx.recv() {
+    loop {
+        // Hot reload, strictly between batches: a batch in flight is
+        // always finished on the backend that started it, so no request
+        // ever straddles two models.
+        if cell.generation() != applied {
+            let (gen, next) = cell.current();
+            match build_backend(&*next) {
+                Ok(b) => backend = b,
+                Err(_) => {
+                    // The coordinator validated this candidate before
+                    // publishing, so a build failure here is an anomaly
+                    // (e.g. an artifact dir going flaky). Availability
+                    // first: keep the old backend serving, surface the
+                    // miss in the metrics.
+                    ctx.metrics.reload_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Either way future panic-restarts use the newest factory,
+            // and the generation is acknowledged so `reload_synced`
+            // cannot hang on one flaky worker.
+            factory = next;
+            applied = gen;
+            ctx.applied_gen.store(gen, Ordering::Release);
+            continue; // re-check: a publish may have raced this apply
+        }
+        let mut batch = match ctx.rx.recv_timeout(RELOAD_POLL) {
+            Ok(b) => b,
+            // Idle: fall through to the reload check above.
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            // Shutdown closed the batch channel.
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
         let dispatched = batch.requests.len() as u64;
         let _outstanding_guard = Decrement { ctr: &ctx.outstanding, n: dispatched };
         // Shed requests that expired while queued here; inference on
@@ -518,6 +628,27 @@ mod tests {
         assert!(ok.is_ok());
         let err = build_backend(&|| -> Box<dyn Backend> { panic!("no artifacts here") });
         assert_eq!(err.err().as_deref(), Some("no artifacts here"));
+    }
+
+    #[test]
+    fn reload_cell_publish_bumps_generation_and_swaps_factory() {
+        let mut rng = Rng::seed_from_u64(8);
+        let a = FffInfer::random(&mut rng, 6, 2, 2, 3, 4);
+        let b = FffInfer::random(&mut rng, 6, 2, 2, 3, 4);
+        let fa: BackendFactory = Arc::new(move || Box::new(NativeFffBackend::new(a.clone())));
+        let fb: BackendFactory = Arc::new(move || Box::new(NativeFffBackend::new(b.clone())));
+        let cell = ReloadCell::new(fa);
+        assert_eq!(cell.generation(), 0);
+        let (g0, f0) = cell.current();
+        assert_eq!(g0, 0);
+        let x = Matrix::from_fn(2, 6, |r, c| ((r + c) as f32).sin());
+        let before = f0().infer(&x);
+        assert_eq!(cell.publish(fb), 1);
+        assert_eq!(cell.generation(), 1);
+        let (g1, f1) = cell.current();
+        assert_eq!(g1, 1);
+        let after = f1().infer(&x);
+        assert_ne!(before, after, "published factory must build the new model");
     }
 
     #[test]

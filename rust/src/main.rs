@@ -42,12 +42,14 @@ fn main() {
 fn usage() -> ! {
     eprintln!("usage: fff <train|serve|reproduce|info|analyze> [options]");
     eprintln!(
-        "  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8 --parallel-size 1"
+        "  train      --dataset mnist --model fff|ff|moe --width 64 --leaf 8 --parallel-size 1 \
+         --save ckpt.fff --checkpoint-every 0 --resume --config train.kv"
     );
     eprintln!(
         "  serve      --artifact fff_mnist_infer_b16 --requests 1000 --workers 1 --threads 0 \
          --precision f32|int8 --parallel-size 1 --request-deadline-us 0 \
-         --worker-restarts 2 --max-retries 2"
+         --worker-restarts 2 --max-retries 2 \
+         --model ckpt.fff --model-watch ckpt.fff --model-watch-ms 2000"
     );
     eprintln!(
         "  reproduce  table1|table2|table3|fig2|fig34|fig5|fig6|quant  \
@@ -67,6 +69,16 @@ fn cmd_train(args: &Args) {
     let leaf: usize = args.get_or("leaf", 8);
     let seed: u64 = args.get_or("seed", 0);
     let mut cfg = TrainConfig::table1(dataset, model, width, leaf, seed);
+    // Config-file layer between the preset and the explicit flags,
+    // mirroring `fff serve --config`.
+    if let Some(path) = args.get("config") {
+        let apply = fastfeedforward::config::KvFile::load(std::path::Path::new(path))
+            .and_then(|kv| cfg.apply_kv(&kv));
+        if let Err(e) = apply {
+            eprintln!("fff train: --config: {e}");
+            std::process::exit(2);
+        }
+    }
     cfg.train_n = args.get_or("train-n", 8000);
     cfg.test_n = args.get_or("test-n", 2000);
     cfg.max_epochs = args.get_or("epochs", 100);
@@ -78,6 +90,12 @@ fn cmd_train(args: &Args) {
     cfg.parallel_size = fastfeedforward::tensor::kernels::resolve_parallel(
         args.get_or("parallel-size", cfg.parallel_size),
     );
+    // Same chain for the checkpoint cadence: preset (0 = off) <
+    // train.checkpoint_every in --config < --checkpoint-every flag <
+    // FFF_CKPT_EVERY env.
+    cfg.checkpoint_every = fastfeedforward::train::resolve_checkpoint_every(
+        args.get_or("checkpoint-every", cfg.checkpoint_every),
+    );
     println!(
         "training {} on {} (width {}, leaf {}, parallel {}, seed {seed})",
         model.name(),
@@ -87,6 +105,23 @@ fn cmd_train(args: &Args) {
         cfg.parallel_size
     );
     if let Some(path) = args.get("save") {
+        let ckpt_path = std::path::Path::new(path);
+        let resume = args.flag("resume");
+        if resume && ckpt_path.exists() {
+            // A finished run's final checkpoint carries no training
+            // cursor. Resuming one is a no-op, not a retrain — which
+            // also makes a kill that lands *after* completion benign:
+            // `--resume` converges on the same final file either way.
+            if let Ok(ckpt) = fastfeedforward::nn::checkpoint::read(ckpt_path) {
+                if ckpt.cursor.is_none() {
+                    println!(
+                        "checkpoint {path} is a completed run (no training cursor); \
+                         nothing to resume"
+                    );
+                    return;
+                }
+            }
+        }
         // Train with model access so the checkpoint can be written.
         let trainer = fastfeedforward::train::Trainer::from_config(&cfg);
         let mut rng = fastfeedforward::rng::Rng::seed_from_u64(cfg.seed);
@@ -96,9 +131,21 @@ fn cmd_train(args: &Args) {
             trainer.train.num_classes,
             &mut rng,
         );
-        let out = trainer.run(m.as_mut());
-        fastfeedforward::nn::checkpoint::save(m.as_mut(), std::path::Path::new(path))
-            .expect("write checkpoint");
+        let policy = fastfeedforward::train::CheckpointPolicy {
+            every: cfg.checkpoint_every,
+            path: Some(ckpt_path),
+            resume,
+        };
+        let out = trainer.run_checkpointed(m.as_mut(), policy).unwrap_or_else(|e| {
+            eprintln!("fff train: {e:#}");
+            std::process::exit(1);
+        });
+        // The final checkpoint is params + config only (no cursor):
+        // the durable artifact of a *finished* run.
+        if let Err(e) = fastfeedforward::nn::checkpoint::save(m.as_mut(), ckpt_path) {
+            eprintln!("fff train: write checkpoint {path}: {e:#}");
+            std::process::exit(1);
+        }
         println!(
             "M_A {:.2}%  G_A {:.2}%  (epochs {}); checkpoint: {path}",
             out.memorization_accuracy * 100.0,
@@ -124,12 +171,11 @@ fn cmd_serve(args: &Args) {
     let artifact = args.get("artifact").unwrap_or("fff_mnist_infer_b16").to_string();
     let requests: usize = args.get_or("requests", 1000);
     // Layering: built-in defaults < --config file < explicit CLI flags.
-    let mut scfg = match args.get("config") {
-        Some(path) => {
-            let kv = KvFile::load(std::path::Path::new(path))
-                .unwrap_or_else(|e| panic!("--config: {e}"));
-            ServeConfig::from_kv(&kv).unwrap_or_else(|e| panic!("--config: {e}"))
-        }
+    let kv = args.get("config").map(|path| {
+        KvFile::load(std::path::Path::new(path)).unwrap_or_else(|e| panic!("--config: {e}"))
+    });
+    let mut scfg = match &kv {
+        Some(kv) => ServeConfig::from_kv(kv).unwrap_or_else(|e| panic!("--config: {e}")),
         None => ServeConfig::default(),
     };
     // Flag layer, shared with the parsing tests (re-validates after the
@@ -143,9 +189,19 @@ fn cmd_serve(args: &Args) {
     cfg.parallel = fastfeedforward::tensor::kernels::resolve_parallel(cfg.parallel);
     cfg.request_deadline_us =
         fastfeedforward::coordinator::resolve_deadline_us(cfg.request_deadline_us);
+    // Model source: PJRT artifact by default; `--model` (or `serve.model`
+    // in the config file) serves a native FFF checkpoint instead.
+    let model_path = args
+        .get("model")
+        .map(str::to_string)
+        .or_else(|| kv.as_ref().and_then(|k| k.get("serve.model").map(str::to_string)));
     println!(
-        "serving artifact {artifact} ({} workers, {} pool threads/worker, {} native precision, \
+        "serving {} ({} workers, {} pool threads/worker, {} native precision, \
          {} parallel trees, deadline {}, {} restarts/worker, {} retries/request)",
+        match &model_path {
+            Some(p) => format!("checkpoint {p}"),
+            None => format!("artifact {artifact}"),
+        },
         cfg.workers,
         if cfg.threads == 0 { "shared".to_string() } else { cfg.threads.to_string() },
         cfg.precision.name(),
@@ -158,14 +214,55 @@ fn cmd_serve(args: &Args) {
         cfg.worker_restarts,
         cfg.max_retries,
     );
-    let coord = Coordinator::start(cfg, HloBackend::factory("artifacts".into(), artifact))
-        .unwrap_or_else(|e| {
-            eprintln!("fff serve: {e}");
-            std::process::exit(1);
-        });
+    let coord = match &model_path {
+        Some(p) => {
+            let factory = fastfeedforward::coordinator::NativeFffBackend::factory_from_checkpoint(
+                std::path::Path::new(p),
+                cfg.precision,
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("fff serve: --model {p}: {e:#}");
+                std::process::exit(1);
+            });
+            Coordinator::start(cfg, factory)
+        }
+        None => Coordinator::start(cfg, HloBackend::factory("artifacts".into(), artifact)),
+    }
+    .unwrap_or_else(|e| {
+        eprintln!("fff serve: {e}");
+        std::process::exit(1);
+    });
     if let Some(addr) = args.get("tcp") {
         // Network mode: expose the coordinator over TCP until Ctrl-C.
         let coord = std::sync::Arc::new(coord);
+        // Hot reload: watch a checkpoint path for mtime changes and swap
+        // the serving model in place (validated; zero dropped requests).
+        // Opt-in via `--model-watch PATH` or `serve.model_watch`; the
+        // poll period layers serve.model_watch_ms < --model-watch-ms <
+        // FFF_MODEL_WATCH_MS.
+        let watch_path = args.get("model-watch").map(str::to_string).or_else(|| {
+            kv.as_ref().and_then(|k| k.get("serve.model_watch").map(str::to_string))
+        });
+        if let Some(watch) = watch_path {
+            let kv_ms = kv
+                .as_ref()
+                .and_then(|k| {
+                    k.get_parsed::<u64>("serve.model_watch_ms")
+                        .unwrap_or_else(|e| panic!("--config: {e}"))
+                })
+                .unwrap_or(2000);
+            let period_ms =
+                fastfeedforward::coordinator::resolve_model_watch_ms(args.get_or(
+                    "model-watch-ms",
+                    kv_ms,
+                ));
+            println!("watching {watch} for model updates every {period_ms}ms");
+            let _ = fastfeedforward::coordinator::spawn_model_watch(
+                &coord,
+                std::path::PathBuf::from(watch),
+                std::time::Duration::from_millis(period_ms.max(1)),
+            );
+        }
         let server = fastfeedforward::coordinator::TcpServer::start(coord.clone(), addr)
             .expect("bind TCP listener");
         println!("listening on {} (length-prefixed f32 protocol; Ctrl-C to stop)", server.addr());

@@ -110,6 +110,14 @@ impl Model for Ff {
         self.l1.visit(f);
         self.l2.visit(f);
     }
+
+    fn spec(&self) -> Option<crate::nn::checkpoint::ModelSpec> {
+        Some(crate::nn::checkpoint::ModelSpec::Ff {
+            dim_in: self.dim_in(),
+            width: self.width(),
+            dim_out: self.dim_out(),
+        })
+    }
 }
 
 /// Inference-optimized FF. Batched inference uses the blocked GEMM — the

@@ -177,7 +177,7 @@ fn col_sums_sharded(m: &Matrix, partials: &mut Matrix, out: &mut [f32]) {
 }
 
 /// FFF architecture + training hyperparameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FffConfig {
     pub dim_in: usize,
     pub dim_out: usize,
@@ -1062,6 +1062,10 @@ impl Fff {
 }
 
 impl Model for Fff {
+    fn spec(&self) -> Option<crate::nn::checkpoint::ModelSpec> {
+        Some(crate::nn::checkpoint::ModelSpec::Fff(self.cfg))
+    }
+
     fn forward_train(&mut self, x: &Matrix, rng: &mut Rng) -> Matrix {
         let mut y = Matrix::zeros(0, 0);
         self.forward_train_into(x, rng, &mut y);

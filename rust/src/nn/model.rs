@@ -122,6 +122,16 @@ pub trait Model {
         assert_eq!(pos, snap.len(), "restore: snapshot length mismatch");
     }
 
+    /// The architecture record checkpoint v2 stores in its config
+    /// section ([`crate::nn::checkpoint::ModelSpec`]) — enough to
+    /// rebuild the model without the code path that first constructed
+    /// it, which is what serving hot-reload needs. `None` (the default)
+    /// marks the model opaque: its checkpoints carry parameters only
+    /// and cannot be rebuilt from the file alone.
+    fn spec(&self) -> Option<crate::nn::checkpoint::ModelSpec> {
+        None
+    }
+
     /// Total number of trainable scalars.
     fn num_params(&mut self) -> usize {
         let mut n = 0;

@@ -21,6 +21,38 @@ pub trait Optimizer {
 
     /// Set the learning rate (plateau halving).
     fn set_lr(&mut self, lr: f32);
+
+    /// Append the optimizer's full internal state (learning rate, step
+    /// count, moment buffers) to `out` as an opaque tagged blob —
+    /// what checkpoint v2 stores in its OPTIM section. A state restored
+    /// with [`Optimizer::load_state`] continues the update trajectory
+    /// bit-identically.
+    fn save_state(&self, out: &mut Vec<u8>);
+
+    /// Restore state written by [`Optimizer::save_state`]. Fails on a
+    /// tag from a different optimizer kind, a shape mismatch, or a
+    /// truncated blob; the optimizer is unchanged on failure.
+    fn load_state(&mut self, bytes: &[u8]) -> Result<(), String>;
+}
+
+const TAG_SGD: u8 = 1;
+const TAG_ADAM: u8 = 2;
+
+fn take<'a>(bytes: &mut &'a [u8], n: usize) -> Result<&'a [u8], String> {
+    if bytes.len() < n {
+        return Err("truncated optimizer state".to_string());
+    }
+    let (head, rest) = bytes.split_at(n);
+    *bytes = rest;
+    Ok(head)
+}
+
+fn take_f32(bytes: &mut &[u8]) -> Result<f32, String> {
+    Ok(f32::from_le_bytes(take(bytes, 4)?.try_into().unwrap()))
+}
+
+fn take_u64(bytes: &mut &[u8]) -> Result<u64, String> {
+    Ok(u64::from_le_bytes(take(bytes, 8)?.try_into().unwrap()))
 }
 
 /// Plain SGD: `p -= lr · g`.
@@ -51,6 +83,24 @@ impl Optimizer for Sgd {
 
     fn set_lr(&mut self, lr: f32) {
         self.lr = lr;
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        out.push(TAG_SGD);
+        out.extend_from_slice(&self.lr.to_le_bytes());
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut b = bytes;
+        if take(&mut b, 1)?[0] != TAG_SGD {
+            return Err("optimizer state is not SGD".to_string());
+        }
+        let lr = take_f32(&mut b)?;
+        if !b.is_empty() {
+            return Err("trailing bytes in SGD state".to_string());
+        }
+        self.lr = lr;
+        Ok(())
     }
 }
 
@@ -106,6 +156,65 @@ impl Optimizer for Adam {
 
     fn set_lr(&mut self, lr: f32) {
         self.lr = lr;
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        out.push(TAG_ADAM);
+        out.extend_from_slice(&self.lr.to_le_bytes());
+        out.extend_from_slice(&self.beta1.to_le_bytes());
+        out.extend_from_slice(&self.beta2.to_le_bytes());
+        out.extend_from_slice(&self.eps.to_le_bytes());
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out.extend_from_slice(&(self.m.len() as u64).to_le_bytes());
+        for (ms, vs) in self.m.iter().zip(&self.v) {
+            out.extend_from_slice(&(ms.len() as u64).to_le_bytes());
+            for x in ms {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            for x in vs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut b = bytes;
+        if take(&mut b, 1)?[0] != TAG_ADAM {
+            return Err("optimizer state is not Adam".to_string());
+        }
+        let lr = take_f32(&mut b)?;
+        let beta1 = take_f32(&mut b)?;
+        let beta2 = take_f32(&mut b)?;
+        let eps = take_f32(&mut b)?;
+        let t = take_u64(&mut b)?;
+        let n_slots = take_u64(&mut b)? as usize;
+        if n_slots.saturating_mul(8) > b.len() {
+            return Err("implausible slot count in Adam state".to_string());
+        }
+        let mut m = Vec::with_capacity(n_slots);
+        let mut v = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            let len = take_u64(&mut b)? as usize;
+            if len.saturating_mul(8) > b.len() {
+                return Err("implausible buffer length in Adam state".to_string());
+            }
+            let to_f32s = |raw: &[u8]| -> Vec<f32> {
+                raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+            };
+            m.push(to_f32s(take(&mut b, len * 4)?));
+            v.push(to_f32s(take(&mut b, len * 4)?));
+        }
+        if !b.is_empty() {
+            return Err("trailing bytes in Adam state".to_string());
+        }
+        self.lr = lr;
+        self.beta1 = beta1;
+        self.beta2 = beta2;
+        self.eps = eps;
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
     }
 }
 
@@ -178,5 +287,78 @@ mod tests {
         let mut opt = Adam::new(0.01);
         opt.set_lr(opt.lr() / 2.0);
         assert!((opt.lr() - 0.005).abs() < 1e-9);
+    }
+
+    /// Drive `opt` for `steps` on the toy task starting from a fresh
+    /// model, returning the final parameter snapshot.
+    fn drive(opt: &mut dyn Optimizer, model: &mut Ff, rng: &mut Rng, x: &Matrix, labels: &[usize], steps: usize) {
+        for _ in 0..steps {
+            let logits = model.forward_train(x, rng);
+            let (_, dl) = crate::nn::loss::cross_entropy(&logits, labels);
+            model.zero_grad();
+            model.backward(&dl);
+            opt.step(model);
+        }
+    }
+
+    #[test]
+    fn adam_state_roundtrip_continues_bit_identically() {
+        // Uninterrupted: 10 steps straight through.
+        let (mut model_a, x, labels) = toy();
+        let mut rng_a = Rng::seed_from_u64(1);
+        let mut opt_a = Adam::new(0.02);
+        drive(&mut opt_a, &mut model_a, &mut rng_a, &x, &labels, 10);
+
+        // Interrupted: 5 steps, state round-trip into a *fresh* Adam,
+        // then 5 more — the optimizer half of crash-resume.
+        let (mut model_b, _, _) = toy();
+        let mut rng_b = Rng::seed_from_u64(1);
+        let mut opt_b = Adam::new(0.02);
+        drive(&mut opt_b, &mut model_b, &mut rng_b, &x, &labels, 5);
+        let mut blob = Vec::new();
+        opt_b.save_state(&mut blob);
+        let mut opt_b2 = Adam::new(0.999); // wrong lr, overwritten by load
+        opt_b2.load_state(&blob).unwrap();
+        drive(&mut opt_b2, &mut model_b, &mut rng_b, &x, &labels, 5);
+
+        assert_eq!(model_a.snapshot(), model_b.snapshot(), "resumed Adam must be bitwise identical");
+    }
+
+    #[test]
+    fn sgd_state_roundtrip() {
+        let mut opt = Sgd::new(0.125);
+        let mut blob = Vec::new();
+        opt.save_state(&mut blob);
+        let mut fresh = Sgd::new(9.0);
+        fresh.load_state(&blob).unwrap();
+        assert_eq!(fresh.lr, 0.125);
+        // Cross-kind blobs are refused, state unchanged.
+        let err = opt.load_state(&{
+            let mut b = Vec::new();
+            Adam::new(0.5).save_state(&mut b);
+            b
+        });
+        assert!(err.is_err());
+        assert_eq!(opt.lr, 0.125);
+    }
+
+    #[test]
+    fn truncated_or_oversized_state_rejected() {
+        let mut opt = Adam::new(0.02);
+        let (mut model, x, labels) = toy();
+        let mut rng = Rng::seed_from_u64(2);
+        drive(&mut opt, &mut model, &mut rng, &x, &labels, 2);
+        let mut blob = Vec::new();
+        opt.save_state(&mut blob);
+        // Every truncation point fails cleanly.
+        for cut in [0, 1, 5, blob.len() / 2, blob.len() - 1] {
+            assert!(Adam::new(0.02).load_state(&blob[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage fails too.
+        let mut padded = blob.clone();
+        padded.push(0);
+        assert!(Adam::new(0.02).load_state(&padded).is_err());
+        // The intact blob still loads.
+        assert!(Adam::new(0.02).load_state(&blob).is_ok());
     }
 }

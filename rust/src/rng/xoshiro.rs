@@ -38,6 +38,23 @@ impl Xoshiro256PlusPlus {
         Xoshiro256PlusPlus { s }
     }
 
+    /// Raw 256-bit state, for checkpointing. Restoring via
+    /// [`Xoshiro256PlusPlus::from_state`] resumes the stream exactly
+    /// where it left off.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Xoshiro256PlusPlus::state`] dump.
+    /// `None` for the invalid all-zero state (a fixed point of the
+    /// transition function), which a valid generator can never reach.
+    pub fn from_state(s: [u64; 4]) -> Option<Self> {
+        if s == [0, 0, 0, 0] {
+            return None;
+        }
+        Some(Xoshiro256PlusPlus { s })
+    }
+
     /// Next 64 random bits.
     #[inline(always)]
     pub fn next_u64(&mut self) -> u64 {

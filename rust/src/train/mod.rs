@@ -5,4 +5,7 @@
 
 mod trainer;
 
-pub use trainer::{build_model, run_training, EpochRecord, EvalScratch, Outcome, Trainer};
+pub use trainer::{
+    build_model, ckpt_every_override, parse_ckpt_every_env, resolve_checkpoint_every,
+    run_training, CheckpointPolicy, EpochRecord, EvalScratch, Outcome, Trainer,
+};

@@ -18,10 +18,62 @@
 use crate::config::{ModelKind, OptimizerKind, TrainConfig};
 use crate::data::{generate, BatchIter, Dataset, GenOptions};
 use crate::nn::{
-    loss::cross_entropy_into, Adam, Fff, FffConfig, Model, Moe, MoeConfig, Optimizer, Sgd,
+    checkpoint, loss::cross_entropy_into, Adam, Fff, FffConfig, Model, Moe, MoeConfig, Optimizer,
+    Sgd,
 };
 use crate::rng::Rng;
 use crate::tensor::Matrix;
+use anyhow::Context;
+use std::sync::OnceLock;
+
+/// Checkpoint cadence and resume options for
+/// [`Trainer::run_checkpointed`]. The default (no path) performs no
+/// checkpoint I/O at all — [`Trainer::run`]'s behavior.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CheckpointPolicy<'p> {
+    /// Save a full-resume checkpoint every `every` completed epochs
+    /// (0 disables periodic saves).
+    pub every: usize,
+    /// Where the checkpoint lives; `None` disables checkpointing.
+    pub path: Option<&'p std::path::Path>,
+    /// Load `path` before training (if it exists) and continue from its
+    /// cursor. A resumed run is bit-identical to an uninterrupted one:
+    /// parameters, optimizer moments, RNG stream, and every protocol
+    /// counter are restored exactly. A missing file is a fresh start.
+    pub resume: bool,
+}
+
+/// Parse an `FFF_CKPT_EVERY` value: `None` on unset/empty/garbage
+/// (garbage warned, never fatal — same contract as the
+/// `FFF_DEADLINE_US` parser).
+pub fn parse_ckpt_every_env(raw: Option<&str>) -> Option<usize> {
+    let t = raw?.trim();
+    if t.is_empty() {
+        return None;
+    }
+    match t.parse::<usize>() {
+        Ok(n) => Some(n),
+        Err(_) => {
+            eprintln!("fff: ignoring invalid FFF_CKPT_EVERY={t:?} (want a non-negative integer)");
+            None
+        }
+    }
+}
+
+/// The `FFF_CKPT_EVERY` process override, read once. `Some(n)` forces a
+/// checkpoint every `n` epochs regardless of config/flag (0 disables).
+pub fn ckpt_every_override() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| parse_ckpt_every_env(std::env::var("FFF_CKPT_EVERY").ok().as_deref()))
+}
+
+/// Layer the checkpoint cadence: preset default < `train.checkpoint_every`
+/// config key < `--checkpoint-every` flag (the caller passes the
+/// flag-resolved value in) < `FFF_CKPT_EVERY` env — the same precedence
+/// chain as FFF_PRECISION / FFF_DEADLINE_US.
+pub fn resolve_checkpoint_every(requested: usize) -> usize {
+    ckpt_every_override().unwrap_or(requested)
+}
 
 /// Reusable buffers for the `FORWARD_I` scoring passes: `run` holds one
 /// of these across **all** epochs, so the per-epoch train/val evaluations
@@ -123,8 +175,23 @@ impl<'a> Trainer<'a> {
         Trainer { cfg, train, val, test }
     }
 
-    /// Run the full protocol on `model`.
+    /// Run the full protocol on `model` (no checkpointing).
     pub fn run(&self, model: &mut dyn Model) -> Outcome {
+        self.run_checkpointed(model, CheckpointPolicy::default())
+            .expect("a checkpoint-free run performs no I/O and cannot fail")
+    }
+
+    /// [`Trainer::run`] with durable state: saves a full-resume
+    /// checkpoint (parameters + optimizer + RNG + training cursor)
+    /// every `policy.every` epochs, and — with `policy.resume` — picks
+    /// an interrupted run back up bit-identically. Checkpoint I/O
+    /// errors (full disk, bad path, corrupt resume file) surface as
+    /// typed errors instead of panics.
+    pub fn run_checkpointed(
+        &self,
+        model: &mut dyn Model,
+        policy: CheckpointPolicy,
+    ) -> anyhow::Result<Outcome> {
         let cfg = self.cfg;
         let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xABCD_EF01);
         let mut opt: Box<dyn Optimizer> = match cfg.optimizer {
@@ -140,6 +207,7 @@ impl<'a> Trainer<'a> {
         let mut plateau_epochs = 0usize;
         let mut history = Vec::new();
         let mut epochs_run = 0;
+        let mut start_epoch = 1usize;
         // One scoring scratch for every evaluation this run performs.
         let mut eval_scratch = EvalScratch::new();
         // Step buffers retained for the whole run: batch inputs, logits,
@@ -160,7 +228,53 @@ impl<'a> Trainer<'a> {
         let mut ent_sums: Vec<Vec<f32>> = Vec::new();
         let mut epoch_ms_total = 0.0f64;
 
-        for epoch in 1..=cfg.max_epochs {
+        if policy.resume {
+            if let Some(path) = policy.path.filter(|p| p.exists()) {
+                let ckpt = checkpoint::read(path)?;
+                let cursor = ckpt.cursor.clone().with_context(|| {
+                    format!("{path:?}: checkpoint has no training cursor (not a resumable run)")
+                })?;
+                checkpoint::apply(model, &ckpt).with_context(|| format!("{path:?}"))?;
+                let blob = ckpt
+                    .optimizer
+                    .as_ref()
+                    .with_context(|| format!("{path:?}: checkpoint has no optimizer state"))?;
+                opt.load_state(blob)
+                    .map_err(|e| anyhow::anyhow!("{path:?}: optimizer state: {e}"))?;
+                let state = ckpt
+                    .rng
+                    .with_context(|| format!("{path:?}: checkpoint has no RNG state"))?;
+                rng = Rng::from_state(state)
+                    .with_context(|| format!("{path:?}: invalid RNG state"))?;
+                best_train_acc = cursor.best_train_acc;
+                best_val_acc = cursor.best_val_acc;
+                ett_mem = cursor.ett_memorization as usize;
+                ett_gen = cursor.ett_generalization as usize;
+                stale_epochs = cursor.stale_epochs as usize;
+                plateau_epochs = cursor.plateau_epochs as usize;
+                epoch_ms_total = cursor.epoch_ms_total;
+                if let Some(snap) = cursor.best_val_snapshot {
+                    best_val_snapshot = snap;
+                    have_snapshot = true;
+                }
+                history = cursor
+                    .history
+                    .iter()
+                    .map(|h| EpochRecord {
+                        epoch: h.epoch as usize,
+                        train_loss: h.train_loss,
+                        aux_loss: h.aux_loss,
+                        train_acc: h.train_acc,
+                        val_acc: h.val_acc,
+                        entropies: h.entropies.clone(),
+                    })
+                    .collect();
+                epochs_run = cursor.epoch as usize;
+                start_epoch = cursor.epoch as usize + 1;
+            }
+        }
+
+        for epoch in start_epoch..=cfg.max_epochs {
             epochs_run = epoch;
             let epoch_start = std::time::Instant::now();
             let mut epoch_loss = 0.0;
@@ -236,6 +350,49 @@ impl<'a> Trainer<'a> {
             if best_train_acc >= 1.0 - 1e-6 && best_val_acc >= 1.0 - 1e-6 {
                 break;
             }
+            // Periodic resume checkpoint — placed *after* the stop
+            // checks, so a checkpoint is only ever cut at a point the
+            // run would continue from; resume can therefore re-enter
+            // the loop unconditionally at `cursor.epoch + 1` and any
+            // stop condition replays deterministically.
+            if policy.every > 0 && epoch % policy.every == 0 {
+                if let Some(path) = policy.path {
+                    let mut ckpt = checkpoint::capture(model);
+                    let mut blob = Vec::new();
+                    opt.save_state(&mut blob);
+                    ckpt.optimizer = Some(blob);
+                    ckpt.rng = Some(rng.state());
+                    ckpt.cursor = Some(checkpoint::TrainCursor {
+                        epoch: epoch as u64,
+                        batch: 0,
+                        best_train_acc,
+                        best_val_acc,
+                        ett_memorization: ett_mem as u64,
+                        ett_generalization: ett_gen as u64,
+                        stale_epochs: stale_epochs as u64,
+                        plateau_epochs: plateau_epochs as u64,
+                        epoch_ms_total,
+                        best_val_snapshot: if have_snapshot {
+                            Some(best_val_snapshot.clone())
+                        } else {
+                            None
+                        },
+                        history: history
+                            .iter()
+                            .map(|h| checkpoint::CursorEpoch {
+                                epoch: h.epoch as u64,
+                                train_loss: h.train_loss,
+                                aux_loss: h.aux_loss,
+                                train_acc: h.train_acc,
+                                val_acc: h.val_acc,
+                                entropies: h.entropies.clone(),
+                            })
+                            .collect(),
+                    });
+                    checkpoint::save_checkpoint(&ckpt, path)
+                        .with_context(|| format!("periodic checkpoint at epoch {epoch}"))?;
+                }
+            }
         }
 
         // G_A: restore the best-validation snapshot, evaluate on test.
@@ -249,7 +406,7 @@ impl<'a> Trainer<'a> {
             self.eval_infer_with(model, &self.test, &mut eval_scratch)
         };
 
-        Outcome {
+        Ok(Outcome {
             memorization_accuracy: best_train_acc.max(0.0),
             generalization_accuracy,
             ett_memorization: ett_mem,
@@ -257,7 +414,7 @@ impl<'a> Trainer<'a> {
             epochs_run,
             mean_epoch_ms: epoch_ms_total / epochs_run.max(1) as f64,
             history,
-        }
+        })
     }
 
     /// Evaluate hard-inference accuracy on a dataset, in batches.
@@ -358,6 +515,94 @@ mod tests {
         cfg.patience = 0;
         let out = run_training(&cfg);
         assert!(out.mean_epoch_ms > 0.0, "mean_epoch_ms = {}", out.mean_epoch_ms);
+    }
+
+    #[test]
+    fn parse_ckpt_every_env_contract() {
+        assert_eq!(parse_ckpt_every_env(None), None);
+        assert_eq!(parse_ckpt_every_env(Some("")), None);
+        assert_eq!(parse_ckpt_every_env(Some("  ")), None);
+        assert_eq!(parse_ckpt_every_env(Some("5")), Some(5));
+        assert_eq!(parse_ckpt_every_env(Some(" 12 ")), Some(12));
+        assert_eq!(parse_ckpt_every_env(Some("0")), Some(0), "0 explicitly disables");
+        assert_eq!(parse_ckpt_every_env(Some("-3")), None, "garbage warns, never fatal");
+        assert_eq!(parse_ckpt_every_env(Some("abc")), None);
+    }
+
+    #[test]
+    fn resumed_run_is_bit_identical_to_uninterrupted() {
+        let mut cfg = quick_cfg(ModelKind::Ff);
+        cfg.max_epochs = 6;
+        cfg.patience = 0;
+        let path = std::env::temp_dir()
+            .join(format!("fff-trainer-resume-{}.ckpt", std::process::id()));
+        std::fs::remove_file(&path).ok();
+
+        // Control: 6 epochs straight through.
+        let trainer = Trainer::from_config(&cfg);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let mut control =
+            build_model(&cfg, trainer.train.dim(), trainer.train.num_classes, &mut rng);
+        let control_out = trainer.run(control.as_mut());
+
+        // Interrupted: stop after 3 epochs (checkpointing every epoch),
+        // then resume in a *fresh process-equivalent* — new model, new
+        // trainer — and run to completion.
+        let mut cfg_cut = cfg.clone();
+        cfg_cut.max_epochs = 3;
+        let trainer_cut = Trainer::from_config(&cfg_cut);
+        let mut rng2 = Rng::seed_from_u64(cfg.seed);
+        let mut victim =
+            build_model(&cfg, trainer_cut.train.dim(), trainer_cut.train.num_classes, &mut rng2);
+        trainer_cut
+            .run_checkpointed(
+                victim.as_mut(),
+                CheckpointPolicy { every: 1, path: Some(&path), resume: false },
+            )
+            .unwrap();
+
+        let trainer_resume = Trainer::from_config(&cfg);
+        let mut rng3 = Rng::seed_from_u64(cfg.seed);
+        let mut resumed = build_model(
+            &cfg,
+            trainer_resume.train.dim(),
+            trainer_resume.train.num_classes,
+            &mut rng3,
+        );
+        let resumed_out = trainer_resume
+            .run_checkpointed(
+                resumed.as_mut(),
+                CheckpointPolicy { every: 1, path: Some(&path), resume: true },
+            )
+            .unwrap();
+
+        assert_eq!(control.snapshot(), resumed.snapshot(), "weights must be bit-identical");
+        assert_eq!(control_out.memorization_accuracy, resumed_out.memorization_accuracy);
+        assert_eq!(control_out.generalization_accuracy, resumed_out.generalization_accuracy);
+        assert_eq!(control_out.ett_memorization, resumed_out.ett_memorization);
+        assert_eq!(control_out.ett_generalization, resumed_out.ett_generalization);
+        assert_eq!(control_out.epochs_run, resumed_out.epochs_run);
+        assert_eq!(control_out.history.len(), resumed_out.history.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_from_params_only_checkpoint_is_refused() {
+        let cfg = quick_cfg(ModelKind::Ff);
+        let trainer = Trainer::from_config(&cfg);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let mut model = build_model(&cfg, trainer.train.dim(), trainer.train.num_classes, &mut rng);
+        let path = std::env::temp_dir()
+            .join(format!("fff-trainer-paramsonly-{}.ckpt", std::process::id()));
+        checkpoint::save(model.as_mut(), &path).unwrap();
+        let err = trainer
+            .run_checkpointed(
+                model.as_mut(),
+                CheckpointPolicy { every: 0, path: Some(&path), resume: true },
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cursor"), "{err:#}");
+        std::fs::remove_file(&path).ok();
     }
 
     /// A model whose entropy report is scripted per training batch —

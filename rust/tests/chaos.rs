@@ -18,9 +18,10 @@
 //! file under `FFF_THREADS=4` and `FFF_PRECISION=int8` to pin that the
 //! fault paths preserve it.
 
-use fastfeedforward::coordinator::fault::{Fault, FaultScript, FaultyBackend};
+use fastfeedforward::coordinator::fault::{BuildScript, Fault, FaultScript, FaultyBackend};
 use fastfeedforward::coordinator::{
-    Backend, BatcherConfig, Coordinator, CoordinatorConfig, NativeFffBackend, Outcome, StartError,
+    Backend, BatcherConfig, Coordinator, CoordinatorConfig, NativeFffBackend, Outcome,
+    ReloadError, StartError,
 };
 use fastfeedforward::nn::FffInfer;
 use fastfeedforward::rng::Rng;
@@ -272,6 +273,183 @@ fn stalled_batches_shed_expired_requests_post_inference() {
     let snap = coord.metrics();
     assert_eq!(snap.shed, 5);
     assert_eq!(snap.completed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn hot_reload_under_traffic_drops_nothing_and_converges() {
+    let old = model();
+    let mut rng = Rng::seed_from_u64(78);
+    let new = FffInfer::random(&mut rng, 16, 4, 3, 4, 8);
+    let served = old.clone();
+    let coord = Coordinator::start(chaos_config(), move || {
+        Box::new(NativeFffBackend::new(served.clone())) as Box<dyn Backend>
+    })
+    .expect("start");
+
+    // Oracles for both models over the same input stream: during the
+    // swap window a request may be served by either generation, but its
+    // bits must match one of the two exactly — never a hybrid.
+    let cases = inputs_with_oracle(&old, 200, 7);
+    let new_oracle: Vec<Vec<f32>> = cases
+        .iter()
+        .map(|(x, _)| {
+            let mut out = vec![0.0f32; 4];
+            new.infer_one(x, &mut out);
+            out
+        })
+        .collect();
+
+    let mut rxs = Vec::new();
+    for (i, (x, _)) in cases.iter().enumerate() {
+        rxs.push(coord.submit(x.clone()).expect("submit"));
+        if i == 100 {
+            let swapped = new.clone();
+            let generation = coord
+                .reload(move || {
+                    Box::new(NativeFffBackend::new(swapped.clone())) as Box<dyn Backend>
+                })
+                .expect("validated reload");
+            assert_eq!(generation, 1, "first reload publishes generation 1");
+        }
+    }
+    let (mut old_bits, mut new_bits) = (0u64, 0u64);
+    for (rx, ((_, want_old), want_new)) in rxs.into_iter().zip(cases.iter().zip(&new_oracle)) {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("a reload must not strand a single in-flight request");
+        assert_eq!(resp.outcome, Outcome::Ok, "a reload must not fail a request");
+        if &resp.output == want_old {
+            old_bits += 1;
+        } else if &resp.output == want_new {
+            new_bits += 1;
+        } else {
+            panic!("output matches neither generation bit-exactly");
+        }
+        assert!(rx.try_recv().is_err(), "request answered more than once");
+    }
+    assert_eq!(old_bits + new_bits, 200, "every request answered from one generation");
+
+    // Convergence: once every live worker acknowledges the generation,
+    // traffic is served by the new model only, bit-exactly.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while !coord.reload_synced() {
+        assert!(std::time::Instant::now() < deadline, "workers never acknowledged the reload");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for (x, _) in cases.iter().take(20) {
+        let resp = coord
+            .submit(x.clone())
+            .expect("submit post-sync")
+            .recv_timeout(Duration::from_secs(30))
+            .expect("post-sync response");
+        assert_eq!(resp.outcome, Outcome::Ok);
+        let mut want = vec![0.0f32; 4];
+        new.infer_one(x, &mut want);
+        assert_eq!(resp.output, want, "post-sync bits must come from the new model");
+    }
+    wait_for_drained(&coord);
+    let snap = coord.metrics();
+    assert_eq!(snap.reloads, 1);
+    assert_eq!(snap.reload_failures, 0);
+    assert_eq!(snap.failed, 0, "hot reload dropped a request");
+    assert_eq!(snap.shed, 0, "no deadline was configured");
+    coord.shutdown();
+}
+
+#[test]
+fn failed_reload_rolls_back_and_old_model_keeps_serving_under_chaos() {
+    let m = model();
+    let served = m.clone();
+    // Chaos on the serving backend while reloads are being rejected:
+    // rollback must hold even with workers panicking and restarting.
+    let mut faults = Vec::new();
+    for i in 0..12 {
+        faults.push(if i % 4 == 0 { Fault::Panic } else { Fault::None });
+    }
+    let script = Arc::new(FaultScript::new(faults));
+    let s2 = script.clone();
+    let coord = Coordinator::start(chaos_config(), move || {
+        Box::new(FaultyBackend::new(
+            Box::new(NativeFffBackend::new(served.clone())),
+            s2.clone(),
+        ))
+    })
+    .expect("start");
+
+    let cases = inputs_with_oracle(&m, 60, 8);
+    let mut rxs = Vec::new();
+    for (x, _) in &cases {
+        rxs.push(coord.submit(x.clone()).expect("submit"));
+    }
+
+    // Candidate 1: constructor panics. Validation absorbs the panic and
+    // rejects; the factory must never reach a worker thread.
+    let gate = BuildScript::panic_first(1);
+    let g2 = gate.clone();
+    let m2 = m.clone();
+    let err = coord
+        .reload(move || {
+            g2.gate();
+            Box::new(NativeFffBackend::new(m2.clone())) as Box<dyn Backend>
+        })
+        .expect_err("panicking candidate must be rejected");
+    match err {
+        ReloadError::Validation(msg) => {
+            assert!(msg.contains("construction panicked"), "cause lost: {msg}")
+        }
+        other => panic!("wrong rejection: {other:?}"),
+    }
+    assert_eq!(gate.attempts(), 1, "a rejected candidate must only ever see the probe");
+
+    // Candidate 2: wrong shape (dim_in 8 against a 16-wide tier).
+    let mut rng = Rng::seed_from_u64(5);
+    let narrow = FffInfer::random(&mut rng, 8, 4, 3, 4, 8);
+    let err = coord
+        .reload(move || Box::new(NativeFffBackend::new(narrow.clone())) as Box<dyn Backend>)
+        .expect_err("mis-shaped candidate must be rejected");
+    match err {
+        ReloadError::Validation(msg) => assert!(msg.contains("shape mismatch"), "{msg}"),
+        other => panic!("wrong rejection: {other:?}"),
+    }
+
+    // Candidate 3: a corrupt checkpoint file through the file-reload
+    // entry point (the admin/watcher path).
+    let path = std::env::temp_dir()
+        .join(format!("fff-chaos-badreload-{}.fff", std::process::id()));
+    std::fs::write(&path, b"FFFCKPT2 this is not a valid section table").unwrap();
+    let err = coord.reload_from_checkpoint(&path).expect_err("corrupt file must be rejected");
+    assert!(matches!(err, ReloadError::Validation(_)), "wrong rejection: {err:?}");
+    std::fs::remove_file(&path).ok();
+
+    // Every accepted request terminates exactly once — Ok answers carry
+    // old-model bits (chaos may fail some; none may carry candidate bits).
+    for (rx, (_, want)) in rxs.into_iter().zip(&cases) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("terminal response");
+        match resp.outcome {
+            Outcome::Ok => assert_eq!(&resp.output, want, "bits drifted from the old model"),
+            Outcome::WorkerFailed => {}
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        assert!(rx.try_recv().is_err(), "request answered more than once");
+    }
+
+    // Rollback is the absence of a publish: generation never moved, so
+    // the tier is trivially synced and still serves the old model.
+    assert!(coord.reload_synced(), "no publish happened, generation must be unmoved");
+    for (x, want) in inputs_with_oracle(&m, 10, 9) {
+        let resp = coord
+            .submit(x)
+            .expect("submit post-rollback")
+            .recv_timeout(Duration::from_secs(30))
+            .expect("post-rollback response");
+        assert_eq!(resp.outcome, Outcome::Ok);
+        assert_eq!(resp.output, want, "rollback must leave the old model serving, bit-exact");
+    }
+    wait_for_drained(&coord);
+    let snap = coord.metrics();
+    assert_eq!(snap.reloads, 0, "no rejected candidate may count as a reload");
+    assert_eq!(snap.reload_failures, 3);
     coord.shutdown();
 }
 

@@ -1,0 +1,497 @@
+//! Durability suite: the `FFFCKPT2` checkpoint contract under damage,
+//! across architectures, and across process death.
+//!
+//! What is pinned here (the acceptance criteria of the durable-state
+//! tier):
+//! * **Corruption fault injection** — truncation at every section
+//!   boundary, single-bit flips in the magic, section count, length
+//!   table, header CRC, every payload, and every section CRC, plus
+//!   trailing garbage and torn temp-file residue: every damage case is
+//!   rejected loudly by `read`/`load`, and a failed load never mutates
+//!   the destination model (no partial state ever loads).
+//! * **Round-trip matrix** — Ff and FFF models across depths, parallel
+//!   tree counts, and both serving precisions reproduce their outputs
+//!   bit for bit after save → load → recompile.
+//! * **Bit-identical resume** — an interrupted-then-resumed training run
+//!   equals an uninterrupted one exactly, at `FFF_THREADS` 1 and 4; a
+//!   subprocess variant SIGKILLs `fff train` mid-run and proves the
+//!   resumed final checkpoint is byte-identical to the control's.
+//! * **Legacy v1 gaps** — `FFFCKPT1`'s documented holes (unchecksummed
+//!   header, no end-of-file accounting) are pinned as-is, next to the
+//!   v2 behavior that closes each one.
+
+use fastfeedforward::config::{ModelKind, TrainConfig};
+use fastfeedforward::data::DatasetKind;
+use fastfeedforward::nn::checkpoint::{
+    capture, layout, load, load_fff, read, save, save_checkpoint, save_v1, Checkpoint,
+    CursorEpoch, TrainCursor, SEC_TENSORS,
+};
+use fastfeedforward::nn::{Ff, Fff, FffConfig, Model};
+use fastfeedforward::rng::Rng;
+use fastfeedforward::tensor::{pool, Matrix, Precision};
+use fastfeedforward::train::{build_model, CheckpointPolicy, Trainer};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fff-durability-{}-{name}", std::process::id()))
+}
+
+/// A five-section resumable checkpoint (config, tensors, optimizer,
+/// RNG, cursor) over a small FFF — the richest file shape the format
+/// can produce, so the fault matrix covers every section kind.
+fn full_checkpoint() -> (Fff, Checkpoint) {
+    let mut rng = Rng::seed_from_u64(41);
+    let mut fff = Fff::new(&mut rng, FffConfig::new(6, 3, 2, 4));
+    let mut ckpt = capture(&mut fff);
+    ckpt.optimizer = Some((0u8..32).collect());
+    ckpt.rng = Some([9, 8, 7, 6]);
+    ckpt.cursor = Some(TrainCursor {
+        epoch: 3,
+        batch: 0,
+        best_train_acc: 0.8,
+        best_val_acc: 0.7,
+        ett_memorization: 2,
+        ett_generalization: 3,
+        stale_epochs: 0,
+        plateau_epochs: 1,
+        epoch_ms_total: 42.0,
+        best_val_snapshot: Some(vec![0.1, -0.2, 0.3]),
+        history: vec![CursorEpoch {
+            epoch: 1,
+            train_loss: 0.9,
+            aux_loss: 0.05,
+            train_acc: 0.5,
+            val_acc: 0.45,
+            entropies: vec![vec![0.69, 0.68]],
+        }],
+    });
+    (fff, ckpt)
+}
+
+/// Write `bytes` at `path` and assert the damage is rejected by both
+/// readers, with the destination model left bit-untouched.
+fn check_rejected(bytes: &[u8], path: &Path, model: &mut Fff, what: &str) {
+    std::fs::write(path, bytes).unwrap();
+    let before = model.snapshot();
+    assert!(read(path).is_err(), "{what}: read() accepted corrupt bytes");
+    assert!(load(model, path).is_err(), "{what}: load() accepted corrupt bytes");
+    assert_eq!(model.snapshot(), before, "{what}: failed load mutated the model");
+}
+
+#[test]
+fn every_injected_corruption_is_rejected_and_loads_nothing() {
+    let (mut fff, ckpt) = full_checkpoint();
+    let path = tmp("matrix");
+    save_checkpoint(&ckpt, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Precondition: all five sections present, ascending, verified.
+    let sections = layout(&good).unwrap();
+    assert_eq!(sections.iter().map(|s| s.kind).collect::<Vec<_>>(), vec![1, 2, 3, 4, 5]);
+    assert!(read(&path).is_ok(), "the uncorrupted file must verify");
+    let header_len = 12 + 12 * sections.len();
+
+    // Truncation: header prefixes, then every section's payload start,
+    // mid-payload, CRC start, and mid-CRC.
+    let mut cuts: Vec<usize> = vec![0, 4, 8, 11, 12, header_len - 1, header_len, header_len + 2];
+    for s in &sections {
+        cuts.extend([s.offset, s.offset + s.len / 2, s.offset + s.len, s.offset + s.len + 2]);
+    }
+    for cut in cuts {
+        assert!(cut < good.len(), "cut {cut} out of range");
+        check_rejected(&good[..cut], &path, &mut fff, &format!("truncated at byte {cut}"));
+    }
+
+    // Single-bit flips: magic, section count, every table entry's kind
+    // and length, the header CRC, every payload, every section CRC.
+    let mut flips: Vec<(usize, String)> = vec![
+        (0, "magic".into()),
+        (8, "section count".into()),
+        (header_len, "header CRC".into()),
+    ];
+    for (i, s) in sections.iter().enumerate() {
+        flips.push((12 + 12 * i, format!("table kind of section {}", s.kind)));
+        flips.push((12 + 12 * i + 4, format!("table length of section {}", s.kind)));
+        flips.push((s.offset + s.len / 2, format!("payload of section {}", s.kind)));
+        flips.push((s.offset + s.len, format!("CRC of section {}", s.kind)));
+    }
+    for (at, what) in flips {
+        let mut bad = good.clone();
+        bad[at] ^= 0x01;
+        check_rejected(&bad, &path, &mut fff, &format!("bit flip in {what}"));
+    }
+
+    // Trailing garbage after a fully-valid file.
+    for extra in [1usize, 4, 64] {
+        let mut bad = good.clone();
+        bad.resize(bad.len() + extra, 0xAB);
+        check_rejected(&bad, &path, &mut fff, &format!("{extra} trailing bytes"));
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn corruption_diagnostics_name_the_damage() {
+    let (_fff, ckpt) = full_checkpoint();
+    let path = tmp("diagnostics");
+    save_checkpoint(&ckpt, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let sections = layout(&good).unwrap();
+    let msg = |bytes: &[u8]| -> String {
+        std::fs::write(&path, bytes).unwrap();
+        format!("{:#}", read(&path).unwrap_err())
+    };
+
+    assert!(msg(&good[..10]).contains("truncated header"), "{}", msg(&good[..10]));
+    // A flipped length-table byte is diagnosed as header damage, not
+    // blamed downstream (byte 16 is the first entry's length field).
+    let mut bad = good.clone();
+    bad[16] ^= 0x01;
+    assert!(msg(&bad).contains("header CRC mismatch"), "{}", msg(&bad));
+    // A flipped parameter byte names the tensors section.
+    let tensors = sections.iter().find(|s| s.kind == SEC_TENSORS).unwrap();
+    let mut bad = good.clone();
+    bad[tensors.offset + tensors.len / 2] ^= 0x01;
+    assert!(msg(&bad).contains("section 2 CRC mismatch"), "{}", msg(&bad));
+    // Unconsumed bytes are an error, not a shrug.
+    let mut bad = good.clone();
+    bad.push(0);
+    assert!(msg(&bad).contains("trailing bytes after last section"), "{}", msg(&bad));
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn torn_temp_residue_never_publishes_and_never_loads() {
+    let (mut fff, ckpt) = full_checkpoint();
+    let path = tmp("torn");
+    save_checkpoint(&ckpt, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    // Simulate a crash mid-write by another process: a half-written
+    // temp file beside the target, named like the atomic writer's.
+    let torn = path.parent().unwrap().join(format!(
+        ".{}.tmp.{}",
+        path.file_name().unwrap().to_string_lossy(),
+        std::process::id() + 1
+    ));
+    std::fs::write(&torn, &good[..good.len() / 2]).unwrap();
+    // The published checkpoint is untouched by the residue...
+    assert_eq!(std::fs::read(&path).unwrap(), good);
+    read(&path).expect("published file must still verify");
+    // ...and the residue itself never verifies as a checkpoint.
+    assert!(read(&torn).is_err(), "a torn temp file must not verify");
+    assert!(load(&mut fff, &torn).is_err());
+    // A fresh save still lands atomically next to the foreign residue.
+    save_checkpoint(&ckpt, &path).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), good);
+    assert!(torn.exists(), "another pid's residue is not ours to delete");
+    std::fs::remove_file(&torn).ok();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn roundtrip_matrix_across_architectures_and_precisions() {
+    // Ff baselines: outputs must be reproduced bit for bit.
+    for (i, (dim_in, width, dim_out)) in
+        [(5usize, 8usize, 3usize), (7, 16, 4)].into_iter().enumerate()
+    {
+        let mut rng = Rng::seed_from_u64(100 + i as u64);
+        let mut ff = Ff::new(&mut rng, dim_in, width, dim_out);
+        let x = Matrix::from_fn(3, dim_in, |r, c| ((r * 7 + c) as f32).sin());
+        let y0 = ff.forward_infer(&x);
+        let path = tmp(&format!("rt-ff-{i}"));
+        save(&mut ff, &path).unwrap();
+        let mut fresh = Ff::new(&mut Rng::seed_from_u64(999), dim_in, width, dim_out);
+        load(&mut fresh, &path).unwrap();
+        assert_eq!(fresh.forward_infer(&x).as_slice(), y0.as_slice(), "Ff case {i} bits drifted");
+        std::fs::remove_file(path).ok();
+    }
+
+    // FFF: depth × parallel trees × serving precision, through the
+    // serving reload path (load_fff + compile) — the compiled inference
+    // of the reloaded model must match the original bit for bit.
+    for depth in [2usize, 3] {
+        for parallel in [1usize, 2] {
+            let mut cfg = FffConfig::new(6, 4, depth, 3);
+            cfg.parallel_size = parallel;
+            let mut rng = Rng::seed_from_u64(200 + (depth * 10 + parallel) as u64);
+            let mut fff = Fff::new(&mut rng, cfg);
+            let path = tmp(&format!("rt-fff-d{depth}-p{parallel}"));
+            save(&mut fff, &path).unwrap();
+            let mut back = load_fff(&path).unwrap();
+            assert_eq!(back.cfg.parallel_size, parallel);
+            assert_eq!(back.snapshot(), fff.snapshot(), "d{depth} p{parallel} params drifted");
+            let x: Vec<f32> = (0..6).map(|i| ((i as f32) * 0.37).sin()).collect();
+            for precision in [Precision::F32, Precision::Int8] {
+                let a = fff.compile_infer_with(precision);
+                let b = back.compile_infer_with(precision);
+                let (mut ya, mut yb) = (vec![0.0f32; 4], vec![0.0f32; 4]);
+                a.infer_one(&x, &mut ya);
+                b.infer_one(&x, &mut yb);
+                assert_eq!(
+                    ya.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    yb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "d{depth} p{parallel} {precision:?}: reloaded inference bits drifted"
+                );
+            }
+            std::fs::remove_file(path).ok();
+        }
+    }
+}
+
+/// Interrupted-then-resumed training equals an uninterrupted run
+/// bit for bit, under a pinned thread-pool width.
+fn resume_matches_control(threads: usize) {
+    pool::with_threads(threads, || {
+        let mut cfg = TrainConfig::table1(DatasetKind::Usps, ModelKind::Fff, 16, 4, 9);
+        cfg.train_n = 400;
+        cfg.test_n = 100;
+        cfg.max_epochs = 5;
+        cfg.patience = 0;
+        let path = tmp(&format!("resume-t{threads}"));
+        std::fs::remove_file(&path).ok();
+
+        // Control: five epochs straight through.
+        let trainer = Trainer::from_config(&cfg);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let mut control =
+            build_model(&cfg, trainer.train.dim(), trainer.train.num_classes, &mut rng);
+        let control_out = trainer.run(control.as_mut());
+
+        // Victim: stop after two epochs (checkpointing every epoch),
+        // then resume in fresh state and run to completion.
+        let mut cfg_cut = cfg.clone();
+        cfg_cut.max_epochs = 2;
+        let trainer_cut = Trainer::from_config(&cfg_cut);
+        let mut rng2 = Rng::seed_from_u64(cfg.seed);
+        let mut victim =
+            build_model(&cfg, trainer_cut.train.dim(), trainer_cut.train.num_classes, &mut rng2);
+        trainer_cut
+            .run_checkpointed(
+                victim.as_mut(),
+                CheckpointPolicy { every: 1, path: Some(&path), resume: false },
+            )
+            .unwrap();
+
+        let trainer_res = Trainer::from_config(&cfg);
+        let mut rng3 = Rng::seed_from_u64(cfg.seed);
+        let mut resumed =
+            build_model(&cfg, trainer_res.train.dim(), trainer_res.train.num_classes, &mut rng3);
+        let resumed_out = trainer_res
+            .run_checkpointed(
+                resumed.as_mut(),
+                CheckpointPolicy { every: 1, path: Some(&path), resume: true },
+            )
+            .unwrap();
+
+        assert_eq!(
+            control.snapshot(),
+            resumed.snapshot(),
+            "threads={threads}: resumed weights must be bit-identical"
+        );
+        assert_eq!(control_out.memorization_accuracy, resumed_out.memorization_accuracy);
+        assert_eq!(control_out.generalization_accuracy, resumed_out.generalization_accuracy);
+        assert_eq!(control_out.epochs_run, resumed_out.epochs_run);
+        std::fs::remove_file(path).ok();
+    })
+}
+
+#[test]
+fn resume_is_bit_identical_single_thread() {
+    resume_matches_control(1);
+}
+
+#[test]
+fn resume_is_bit_identical_four_threads() {
+    resume_matches_control(4);
+}
+
+#[test]
+fn v1_accepts_trailing_garbage_v2_rejects_it() {
+    let mut rng = Rng::seed_from_u64(21);
+    let mut ff = Ff::new(&mut rng, 4, 8, 3);
+    let x = Matrix::from_fn(2, 4, |r, c| ((r + 2 * c) as f32).cos());
+    let y0 = ff.forward_infer(&x);
+
+    // Pinned v1 gap: no end-of-file accounting, so residue of a torn
+    // append/rewrite loads silently.
+    let p1 = tmp("v1-trailing");
+    save_v1(&mut ff, &p1).unwrap();
+    let mut bytes = std::fs::read(&p1).unwrap();
+    bytes.extend_from_slice(b"TORN-REWRITE-RESIDUE");
+    std::fs::write(&p1, &bytes).unwrap();
+    let mut fresh = Ff::new(&mut Rng::seed_from_u64(22), 4, 8, 3);
+    load(&mut fresh, &p1).expect("pinned v1 gap: trailing garbage loads silently");
+    assert_eq!(fresh.forward_infer(&x).as_slice(), y0.as_slice());
+    std::fs::remove_file(p1).ok();
+
+    // v2 closes the hole: the identical damage is a loud error.
+    let p2 = tmp("v2-trailing");
+    save(&mut ff, &p2).unwrap();
+    let mut bytes = std::fs::read(&p2).unwrap();
+    bytes.extend_from_slice(b"TORN-REWRITE-RESIDUE");
+    std::fs::write(&p2, &bytes).unwrap();
+    let err = load(&mut fresh, &p2).unwrap_err();
+    assert!(format!("{err:#}").contains("trailing bytes after last section"), "{err:#}");
+    std::fs::remove_file(p2).ok();
+}
+
+#[test]
+fn v1_misdiagnoses_header_corruption_v2_names_it() {
+    let mut rng = Rng::seed_from_u64(23);
+    let mut ff = Ff::new(&mut rng, 4, 8, 3);
+
+    // Pinned v1 gap: the header (magic, count, lengths) is outside the
+    // rolling checksum, so corrupting the tensor count is caught only
+    // indirectly — the error talks about truncation or mismatch, never
+    // about a damaged header.
+    let p1 = tmp("v1-header");
+    save_v1(&mut ff, &p1).unwrap();
+    let mut bytes = std::fs::read(&p1).unwrap();
+    bytes[8] = bytes[8].wrapping_add(1); // tensor-count low byte
+    std::fs::write(&p1, &bytes).unwrap();
+    let mut fresh = Ff::new(&mut Rng::seed_from_u64(24), 4, 8, 3);
+    let before = fresh.snapshot();
+    let err = load(&mut fresh, &p1).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(!msg.contains("header CRC"), "v1 cannot diagnose header damage: {msg}");
+    assert_eq!(fresh.snapshot(), before, "failed v1 load must not mutate the model");
+    std::fs::remove_file(p1).ok();
+
+    // v2 names the damage at the source: any header-byte flip is a
+    // header CRC mismatch before a single payload byte is believed.
+    let p2 = tmp("v2-header");
+    save(&mut ff, &p2).unwrap();
+    let mut bytes = std::fs::read(&p2).unwrap();
+    bytes[8] = bytes[8].wrapping_add(1); // section-count low byte
+    std::fs::write(&p2, &bytes).unwrap();
+    let err = load(&mut fresh, &p2).unwrap_err();
+    assert!(format!("{err:#}").contains("header CRC mismatch"), "{err:#}");
+    std::fs::remove_file(p2).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Subprocess tests: the CLI's durability story end to end.
+// ---------------------------------------------------------------------------
+
+fn train_args(save: &Path) -> Vec<String> {
+    [
+        "train",
+        "--dataset",
+        "usps",
+        "--model",
+        "fff",
+        "--width",
+        "16",
+        "--leaf",
+        "4",
+        "--train-n",
+        "400",
+        "--test-n",
+        "100",
+        "--epochs",
+        "6",
+        "--patience",
+        "0",
+        "--seed",
+        "5",
+        "--checkpoint-every",
+        "1",
+        "--save",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([save.to_string_lossy().into_owned()])
+    .collect()
+}
+
+#[test]
+fn killed_training_run_resumes_to_identical_final_checkpoint() {
+    let bin = env!("CARGO_BIN_EXE_fff");
+    let control = tmp("kill-control.fff");
+    let victim = tmp("kill-victim.fff");
+    std::fs::remove_file(&control).ok();
+    std::fs::remove_file(&victim).ok();
+
+    // Control: the same run, uninterrupted.
+    let status = Command::new(bin)
+        .args(train_args(&control))
+        .stdout(Stdio::null())
+        .status()
+        .expect("spawn control run");
+    assert!(status.success(), "control run failed");
+
+    // Victim: SIGKILL once a resumable checkpoint with >= 2 completed
+    // epochs exists (no graceful shutdown — the crash-safe write is the
+    // only thing standing between the run and a torn file).
+    let mut child = Command::new(bin)
+        .args(train_args(&victim))
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn victim run");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut killed_mid_run = false;
+    loop {
+        if let Ok(ckpt) = read(&victim) {
+            if ckpt.cursor.as_ref().is_some_and(|c| c.epoch >= 2) {
+                child.kill().expect("SIGKILL the victim");
+                killed_mid_run = true;
+                break;
+            }
+        }
+        if child.try_wait().expect("poll victim").is_some() {
+            break; // finished before the kill could land — still a valid resume case
+        }
+        assert!(Instant::now() < deadline, "victim never produced a resumable checkpoint");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    child.wait().expect("reap victim");
+
+    // Resume. If the victim actually completed, the final checkpoint
+    // has no cursor and --resume is a no-op by contract — the final
+    // file converges either way.
+    let mut args = train_args(&victim);
+    args.push("--resume".into());
+    let status = Command::new(bin)
+        .args(&args)
+        .stdout(Stdio::null())
+        .status()
+        .expect("spawn resume run");
+    assert!(status.success(), "resume run failed (killed_mid_run={killed_mid_run})");
+
+    assert_eq!(
+        std::fs::read(&control).unwrap(),
+        std::fs::read(&victim).unwrap(),
+        "resumed final checkpoint must be byte-identical to the control \
+         (killed_mid_run={killed_mid_run})"
+    );
+    std::fs::remove_file(control).ok();
+    std::fs::remove_file(victim).ok();
+}
+
+#[test]
+fn corrupt_resume_checkpoint_exits_nonzero_with_typed_error() {
+    let bin = env!("CARGO_BIN_EXE_fff");
+    let path = tmp("corrupt-resume.fff");
+    // A real checkpoint with one payload byte flipped: magic sniffs as
+    // v2, so the resume path must hit the CRC wall and exit typed.
+    let mut rng = Rng::seed_from_u64(31);
+    let mut ff = Ff::new(&mut rng, 4, 8, 3);
+    save(&mut ff, &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut args = train_args(&path);
+    args.push("--resume".into());
+    let output = Command::new(bin).args(&args).output().expect("spawn train");
+    assert!(!output.status.success(), "corrupt resume file must be a non-zero exit");
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(stderr.contains("fff train:"), "untyped failure: {stderr}");
+    assert!(stderr.contains("corrupt") || stderr.contains("mismatch"), "cause lost: {stderr}");
+    // The corrupt file is evidence — a failed resume must not clobber it.
+    assert_eq!(std::fs::read(&path).unwrap(), bytes, "failed resume rewrote the checkpoint");
+    std::fs::remove_file(path).ok();
+}
